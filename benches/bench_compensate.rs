@@ -1,0 +1,53 @@
+//! Closed-form solve (Eq. 27) micro-bench: channels/s across layer sizes.
+//! This is the paper's entire "training" step, so its cost IS the
+//! method's cost; the §Perf target is memory-bandwidth-bound single-pass
+//! over the weights.
+//!
+//!     cargo bench --bench bench_compensate
+
+mod common;
+
+use common::{bench, throughput};
+use dfmpc::quant::compensate::{recalibrate_bn, solve_c};
+use dfmpc::quant::ternary::ternarize;
+use dfmpc::tensor::Tensor;
+use dfmpc::util::rng::Rng;
+
+fn main() {
+    println!("== Eq. 27 closed-form solve across layer shapes ==");
+    for (o, i, k) in [(16usize, 16usize, 3usize), (64, 64, 3), (128, 128, 3), (256, 256, 3), (512, 512, 1)] {
+        let mut r = Rng::new(42);
+        let w = Tensor::new(vec![o, i, k, k], r.normal_vec(o * i * k * k));
+        let (w_hat, _, _) = ternarize(&w);
+        let gamma: Vec<f32> = (0..o).map(|_| 0.5 + r.f32()).collect();
+        let beta: Vec<f32> = (0..o).map(|_| r.normal() * 0.2).collect();
+        let mu: Vec<f32> = (0..o).map(|_| r.normal() * 0.2).collect();
+        let var: Vec<f32> = (0..o).map(|_| 0.5 + r.f32()).collect();
+        let (mu_hat, var_hat) = recalibrate_bn(&w, &w_hat, &mu, &var);
+        let res = bench(&format!("solve_c {o}x{i}x{k}x{k}"), 3, 30, || {
+            let _ = solve_c(&w, &w_hat, &gamma, &beta, &mu, &var, &mu_hat, &var_hat, 0.5, 0.0);
+        });
+        let weights = o * i * k * k;
+        println!(
+            "    -> {:.1} Mweights/s, {:.0} channels/s",
+            throughput(weights, res.mean_ms) / 1e6,
+            throughput(o, res.mean_ms)
+        );
+    }
+
+    println!("\n== pipeline stage costs (o=128, i=128, k=3) ==");
+    let mut r = Rng::new(7);
+    let w = Tensor::new(vec![128, 128, 3, 3], r.normal_vec(128 * 128 * 9));
+    bench("ternarize (Eq. 3/4)", 3, 30, || {
+        let _ = ternarize(&w);
+    });
+    let (w_hat, _, _) = ternarize(&w);
+    let mu: Vec<f32> = (0..128).map(|_| r.normal()).collect();
+    let var: Vec<f32> = (0..128).map(|_| 0.5 + r.f32()).collect();
+    bench("recalibrate_bn", 3, 30, || {
+        let _ = recalibrate_bn(&w, &w_hat, &mu, &var);
+    });
+    bench("quantize_uniform 6b (Eq. 6)", 3, 30, || {
+        let _ = dfmpc::quant::uniform::quantize_uniform(&w, 6);
+    });
+}

@@ -1,0 +1,89 @@
+//! Coordinator serving bench: dynamic-batcher latency/throughput across
+//! batching policies and offered load — the L3 component the §Perf pass
+//! tunes (batch window vs latency trade-off).
+//!
+//!     cargo bench --bench bench_coordinator
+
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dfmpc::coordinator::{Batcher, BatcherConfig, LatencyRecorder};
+use dfmpc::data::synth;
+use dfmpc::harness::Harness;
+
+fn main() {
+    let mut h = match Harness::open() {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("SKIP (run `make models artifacts`): {e:#}");
+            return;
+        }
+    };
+    let model = match h.load_model("resnet18_cifar10-sim") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP: {e:#}");
+            return;
+        }
+    };
+    let worker = h.worker().unwrap();
+    let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, 8).unwrap();
+    worker
+        .load("bench", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)
+        .unwrap();
+    let spec = synth::dataset("cifar10-sim").unwrap();
+
+    println!("== dynamic batcher: policy sweep (resnet18, artifact batch {abatch}) ==");
+    for (max_batch, wait_ms, clients, reqs) in [
+        (1usize, 0u64, 4usize, 24usize), // no batching baseline
+        (4, 2, 4, 24),
+        (8, 2, 8, 24),
+        (8, 10, 8, 24),
+    ] {
+        let batcher = Arc::new(Batcher::start(
+            Arc::clone(&worker),
+            "bench".into(),
+            BatcherConfig {
+                max_batch: max_batch.min(abatch),
+                max_wait: Duration::from_millis(wait_ms),
+            },
+        ));
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|ci| {
+                let b = Arc::clone(&batcher);
+                std::thread::spawn(move || {
+                    let mut rec = Vec::new();
+                    let mut batch_sizes = 0usize;
+                    for r in 0..reqs {
+                        let (img, _) =
+                            synth::render_image(spec.eval_seed, (ci * reqs + r) as u64, spec.classes);
+                        let p = b.classify(img).unwrap();
+                        rec.push(p.latency_ms);
+                        batch_sizes += p.batch_size;
+                    }
+                    (rec, batch_sizes)
+                })
+            })
+            .collect();
+        let mut lat = LatencyRecorder::new();
+        let mut total_bs = 0usize;
+        for hd in handles {
+            let (rec, bs) = hd.join().unwrap();
+            for l in rec {
+                lat.record(l);
+            }
+            total_bs += bs;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let n = clients * reqs;
+        println!(
+            "max_batch={max_batch:<2} wait={wait_ms:>2}ms clients={clients}: {:>7.1} req/s | avg batch {:.2} | {}",
+            n as f64 / wall,
+            total_bs as f64 / n as f64,
+            lat.summary()
+        );
+    }
+}

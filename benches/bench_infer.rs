@@ -1,0 +1,64 @@
+//! Inference-path bench: PJRT buffer path (production, cached device
+//! buffers) vs PJRT literal path (§Perf baseline: re-uploading all ~100
+//! parameter literals per call) vs the pure-rust reference engine.
+//! The buffer-vs-literal delta is the §Perf optimization evidence.
+//!
+//!     cargo bench --bench bench_infer
+
+mod common;
+
+use common::{bench, throughput};
+use dfmpc::harness::Harness;
+use dfmpc::runtime::pjrt::{flat_params, PjrtRuntime};
+
+fn main() {
+    let h = match Harness::open() {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("SKIP (run `make models artifacts`): {e:#}");
+            return;
+        }
+    };
+    let model = match h.load_model("resnet18_cifar10-sim") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP: {e:#}");
+            return;
+        }
+    };
+    let runtime = PjrtRuntime::cpu().unwrap();
+
+    for want in [1usize, 8, 100] {
+        let Some((abatch, hlo)) = h.zoo.hlo_for_batch(&model.entry, want) else { continue };
+        if abatch != want {
+            continue;
+        }
+        let m = runtime.load_model(hlo, &model.plan, &model.ckpt, abatch).unwrap();
+        let (x, _) = model.shard.batch(0, abatch);
+        let params = flat_params(&model.plan, &model.ckpt).unwrap();
+        println!("== resnet18 batch {abatch} ==");
+        let rb = bench("pjrt buffer path (cached params)", 3, 15, || {
+            let _ = m.infer(&runtime, &x).unwrap();
+        });
+        println!("    -> {:.1} img/s", throughput(abatch, rb.mean_ms));
+        let rl = bench("pjrt literal path (upload per call)", 3, 15, || {
+            let _ = m.infer_literal_path(&params, &x).unwrap();
+        });
+        println!(
+            "    -> {:.1} img/s ({:.2}x slower than buffer path)",
+            throughput(abatch, rl.mean_ms),
+            rl.mean_ms / rb.mean_ms
+        );
+        if abatch <= 8 {
+            let engine = dfmpc::infer::Engine::new(&model.plan, &model.ckpt);
+            let rr = bench("pure-rust reference engine", 1, 5, || {
+                let _ = engine.forward(&x).unwrap();
+            });
+            println!(
+                "    -> {:.1} img/s ({:.1}x slower than PJRT buffer path)",
+                throughput(abatch, rr.mean_ms),
+                rr.mean_ms / rb.mean_ms
+            );
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Minimal bench harness (criterion is unavailable offline — DESIGN.md §2).
+//! Runs warmups + timed iterations, reports mean / p50 / min, and prints
+//! rows that EXPERIMENTS.md records verbatim.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub min_ms: f64,
+}
+
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        p50_ms: samples[samples.len() / 2],
+        min_ms: samples[0],
+    };
+    println!(
+        "{:<44} iters={:<4} mean={:>10.3}ms p50={:>10.3}ms min={:>10.3}ms",
+        r.name, r.iters, r.mean_ms, r.p50_ms, r.min_ms
+    );
+    r
+}
+
+/// Throughput helper: items/s from a mean-ms-per-call and items-per-call.
+pub fn throughput(items_per_call: usize, mean_ms: f64) -> f64 {
+    items_per_call as f64 / (mean_ms / 1e3)
+}

@@ -1,0 +1,151 @@
+//! End-to-end validation driver (DESIGN.md §6): exercises every layer of
+//! the stack on a real (synthetic) workload —
+//!
+//!   1. load the JAX-trained FP32 checkpoint + binary eval shard,
+//!   2. evaluate FP32 through the AOT HLO artifact on the PJRT runtime,
+//!   3. cross-check the Pallas-kernel artifact (L1 path) against the
+//!      XLA-conv artifact and the pure-rust engine on the same batch,
+//!   4. fan a quantization sweep (DF-MPC + all baselines) over the
+//!      coordinator's scheduler,
+//!   5. evaluate every variant through the PJRT lane,
+//!   6. print the recovery table + throughput (recorded in EXPERIMENTS.md).
+//!
+//!     cargo run --release --example e2e_pipeline
+//!     cargo run --release --example e2e_pipeline -- --limit 500
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use dfmpc::coordinator::eval::{eval_pjrt, eval_reference};
+use dfmpc::coordinator::scheduler::{run_sweep, QuantJob};
+use dfmpc::harness::Harness;
+use dfmpc::quant::{model_size, Method};
+use dfmpc::report::tables::{mb, pct, Table};
+use dfmpc::tensor::ops::argmax_rows;
+use dfmpc::util::threadpool::ThreadPool;
+use dfmpc::util::Stopwatch;
+
+fn main() -> Result<()> {
+    let args = dfmpc::util::args::Args::from_env();
+    let id = args.get_or("model", "resnet18_cifar10-sim").to_string();
+    let limit = args.get("limit").map(|v| v.parse()).transpose()?;
+
+    let mut h = Harness::open()?;
+    let model = Arc::new(h.load_model(&id)?);
+    let worker = h.worker()?;
+    println!(
+        "[1] loaded {} ({} params, fp32 train-time acc {:.2}%)",
+        id,
+        model.plan.param_count(),
+        model.ckpt.meta_f64("fp32_acc").unwrap_or(f64::NAN) * 100.0
+    );
+
+    // [2] FP32 through PJRT
+    let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, 100).context("artifact")?;
+    worker.load("fp32", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)?;
+    let fp = eval_pjrt(&worker, "fp32", &model.shard, abatch, limit)?;
+    println!(
+        "[2] FP32 via PJRT: acc {}% @ {:.1} img/s ({})",
+        pct(fp.accuracy),
+        fp.images_per_s,
+        fp.batch_latency
+    );
+
+    // [3] Pallas-path artifact cross-check (L1 kernels lowered into HLO)
+    if let Some((pbatch, phlo)) = model.entry.pallas_hlo.clone() {
+        worker.load("pallas", phlo.clone(), &model.plan, &model.ckpt, pbatch)?;
+        let (x, labels) = model.shard.batch(0, pbatch);
+        let l_pallas = worker.infer("pallas", x.clone())?;
+        worker.load("xla_small", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)?;
+        let l_xla_full = worker.infer("xla_small", x.clone())?;
+        let engine = dfmpc::infer::Engine::new(&model.plan, &model.ckpt);
+        let l_rust = engine.forward(&x)?;
+        let d_px = l_pallas.max_abs_diff(&l_xla_full);
+        let d_pr = l_pallas.max_abs_diff(&l_rust);
+        println!(
+            "[3] pallas artifact vs xla artifact: max|Δlogit| = {d_px:.5}; vs pure-rust engine: {d_pr:.5}"
+        );
+        anyhow::ensure!(d_px < 1e-2, "pallas path diverges from XLA path");
+        anyhow::ensure!(
+            argmax_rows(&l_pallas) == argmax_rows(&l_xla_full),
+            "pallas path predicts differently"
+        );
+        let _ = labels;
+    } else {
+        println!("[3] no pallas artifact for {id} (resnet18_cifar10-sim has one)");
+    }
+
+    // [4] quantization sweep on the scheduler
+    let methods = [
+        "original:2/6",
+        "dfmpc:2/6",
+        "dfmpc:3/6",
+        "dfmpc:6/6",
+        "uniform:6",
+        "dfq:6",
+        "omse:4",
+        "ocs:4:0.05",
+        "zeroq:6",
+    ];
+    let jobs: Vec<QuantJob> = methods
+        .iter()
+        .map(|s| {
+            Ok(QuantJob { model_id: id.clone(), method: Method::parse(s)? })
+        })
+        .collect::<Result<_>>()?;
+    let pool = ThreadPool::new(2);
+    let lookup = Arc::clone(&model);
+    let sw = Stopwatch::start();
+    let outcomes = run_sweep(&pool, jobs, move |_| {
+        Ok((Arc::clone(&lookup.plan), Arc::clone(&lookup.ckpt)))
+    });
+    println!(
+        "[4] scheduler quantized {} variants in {:.1} ms total",
+        outcomes.len(),
+        sw.millis()
+    );
+
+    // [5] evaluate every variant
+    let mut t = Table::new(
+        &format!("e2e: {id} — accuracy recovery (paper Tables 1/3 shape)"),
+        &["Method", "Top-1 (%)", "Δ vs FP32", "Size (MB)", "quant ms", "img/s"],
+    );
+    t.row(vec![
+        "FP32".into(),
+        pct(fp.accuracy),
+        "--".into(),
+        mb(model_size(&model.plan, &Method::Fp32).mb),
+        "--".into(),
+        format!("{:.1}", fp.images_per_s),
+    ]);
+    for o in &outcomes {
+        let ckpt = match &o.ckpt {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("  {} failed: {e:#}", o.job.method.name());
+                continue;
+            }
+        };
+        worker.load("variant", hlo.to_path_buf(), &model.plan, ckpt, abatch)?;
+        let r = eval_pjrt(&worker, "variant", &model.shard, abatch, limit)?;
+        eprintln!("  {}: {}%", o.job.method.name(), pct(r.accuracy));
+        t.row(vec![
+            o.job.method.name(),
+            pct(r.accuracy),
+            format!("{:+.2}", (r.accuracy - fp.accuracy) * 100.0),
+            mb(o.size.mb),
+            format!("{:.1}", o.quant_ms),
+            format!("{:.1}", r.images_per_s),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // [6] reference-engine spot check (rust conv == XLA conv numerics)
+    let r_ref = eval_reference(&model.plan, &model.ckpt, &model.shard, 50, Some(200))?;
+    println!(
+        "[6] pure-rust engine spot check on 200 images: acc {}% (PJRT {}%)",
+        pct(r_ref.accuracy),
+        pct(fp.accuracy)
+    );
+    Ok(())
+}

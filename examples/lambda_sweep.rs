@@ -1,0 +1,85 @@
+//! Fig. 3 harness: accuracy over the λ1 × λ2 regularizer grid of Eq. (27),
+//! on ResNet56 / cifar10-sim (the paper's ablation setting), executed as a
+//! quantization sweep through the coordinator's scheduler.
+//!
+//!     cargo run --release --example lambda_sweep
+//!     cargo run --release --example lambda_sweep -- --model resnet18_cifar10-sim --limit 500
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use dfmpc::coordinator::scheduler::{lambda_grid, run_sweep, QuantJob};
+use dfmpc::harness::Harness;
+use dfmpc::quant::Method;
+use dfmpc::report::tables::{pct, Table};
+use dfmpc::util::threadpool::ThreadPool;
+
+fn main() -> Result<()> {
+    let args = dfmpc::util::args::Args::from_env();
+    let id = args.get_or("model", "resnet56_cifar10-sim").to_string();
+    let limit = args.get("limit").map(|v| v.parse()).transpose()?;
+
+    let mut h = Harness::open()?;
+    let model = Arc::new(h.load_model(&id)?);
+
+    // the paper's grid: lam1 in 0.1..0.6, lam2 in {0, 0.001, 0.005, 0.01}
+    let lam1 = [0.1f32, 0.2, 0.3, 0.4, 0.5, 0.6];
+    let lam2 = [0.0f32, 0.001, 0.005, 0.01];
+    let methods = lambda_grid(&lam1, &lam2, 2, 6);
+
+    // quantize the whole grid in parallel on the scheduler...
+    let pool = ThreadPool::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    let jobs: Vec<QuantJob> = methods
+        .iter()
+        .map(|m| QuantJob { model_id: id.clone(), method: *m })
+        .collect();
+    let lookup_model = Arc::clone(&model);
+    let outcomes = run_sweep(&pool, jobs, move |_| {
+        Ok((Arc::clone(&lookup_model.plan), Arc::clone(&lookup_model.ckpt)))
+    });
+    println!(
+        "quantized {} grid points, mean quant time {:.1} ms",
+        outcomes.len(),
+        outcomes.iter().map(|o| o.quant_ms).sum::<f64>() / outcomes.len() as f64
+    );
+
+    // ...then evaluate each through the single PJRT lane
+    let worker = h.worker()?;
+    let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, 100).expect("artifact");
+    let hlo = hlo.to_path_buf();
+    let mut t = Table::new(
+        &format!("Fig 3: top-1 (%) over lambda grid, {id}"),
+        &[&"lam1\\lam2".to_string(), &lam2[0].to_string(), &lam2[1].to_string(), &lam2[2].to_string(), &lam2[3].to_string()]
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>(),
+    );
+    let mut best = (0.0f64, 0.0f32, 0.0f32);
+    for (i, &l1) in lam1.iter().enumerate() {
+        let mut cells = vec![format!("{l1:.1}")];
+        for (j, &l2) in lam2.iter().enumerate() {
+            let o = &outcomes[i * lam2.len() + j];
+            let ckpt = o.ckpt.as_ref().expect("quantization failed");
+            worker.load("sweep", hlo.clone(), &model.plan, ckpt, abatch)?;
+            let r = dfmpc::coordinator::eval_pjrt(&worker, "sweep", &model.shard, abatch, limit)?;
+            if r.accuracy > best.0 {
+                best = (r.accuracy, l1, l2);
+            }
+            cells.push(pct(r.accuracy));
+            eprintln!("  lam1={l1} lam2={l2}: {}%", pct(r.accuracy));
+        }
+        t.row(cells);
+    }
+    println!("{}", t.render());
+    println!(
+        "best: lam1={} lam2={} at {}% (paper: lam1=0.5, lam2=0 optimal)",
+        best.1,
+        best.2,
+        pct(best.0)
+    );
+    match Method::parse("dfmpc:2/6:0.5:0.0")? {
+        Method::Dfmpc(_) => {}
+        _ => unreachable!(),
+    }
+    Ok(())
+}

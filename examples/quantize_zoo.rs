@@ -1,0 +1,136 @@
+//! Tables 1-4 harness: regenerates every accuracy table of the paper's
+//! evaluation on the SynthShapes substitution (DESIGN.md §2/§5).
+//!
+//!     cargo run --release --example quantize_zoo             # all tables
+//!     cargo run --release --example quantize_zoo -- --table 3
+//!     cargo run --release --example quantize_zoo -- --limit 500 (faster)
+//!
+//! Absolute numbers differ from the paper (different data/widths); the
+//! *shape* must hold: direct MP2/6 collapses toward chance, DF-MPC
+//! recovers near FP32 and beats the 4-bit baselines at smaller size.
+
+use anyhow::Result;
+use dfmpc::harness::{run_method, Harness, MethodRow};
+use dfmpc::quant::Method;
+use dfmpc::report::tables::{mb, pct, Table};
+
+fn row_of(
+    h: &mut Harness,
+    id: &str,
+    spec: &str,
+    limit: Option<usize>,
+) -> Result<Option<MethodRow>> {
+    let model = match h.load_model(id) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skip {id}: {e:#}");
+            return Ok(None);
+        }
+    };
+    let row = run_method(h, &model, Method::parse(spec)?, "pjrt", 100, limit)?;
+    eprintln!("  {id} {spec}: acc {}%", pct(row.accuracy));
+    Ok(Some(row))
+}
+
+fn table12(h: &mut Harness, dataset: &str, models: &[&str], title: &str, limit: Option<usize>) -> Result<()> {
+    let mut t = Table::new(title, &["Model", "Method", "FP32 (%)", "MP2/6 (%)"]);
+    for arch in models {
+        let id = format!("{arch}_{dataset}");
+        let Some(fp) = row_of(h, &id, "fp32", limit)? else { continue };
+        let Some(orig) = row_of(h, &id, "original:2/6", limit)? else { continue };
+        let Some(ours) = row_of(h, &id, "dfmpc:2/6", limit)? else { continue };
+        t.row(vec![arch.to_string(), "Original".into(), pct(fp.accuracy), pct(orig.accuracy)]);
+        t.row(vec![String::new(), "DF-MPC".into(), pct(fp.accuracy), pct(ours.accuracy)]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn table34(
+    h: &mut Harness,
+    title: &str,
+    rows: &[(&str, &str, &str)], // (arch, method label, method spec)
+    limit: Option<usize>,
+) -> Result<()> {
+    let mut t = Table::new(title, &["Model", "Method", "W-bit", "Size (MB)", "Top-1 (%)"]);
+    let mut last_arch = String::new();
+    for (arch, label, spec) in rows {
+        let id = format!("{arch}_imagenet-sim");
+        let Some(row) = row_of(h, &id, spec, limit)? else { continue };
+        let wbits = match *spec {
+            "fp32" => "32".to_string(),
+            s if s.starts_with("dfmpc:") => s[6..].split(':').next().unwrap_or("").to_string(),
+            s => s.split(':').nth(1).unwrap_or("?").to_string(),
+        };
+        let arch_cell = if last_arch == *arch { String::new() } else { arch.to_string() };
+        last_arch = arch.to_string();
+        t.row(vec![arch_cell, label.to_string(), wbits, mb(row.size_mb), pct(row.accuracy)]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = dfmpc::util::args::Args::from_env();
+    let which = args.usize("table", 0);
+    let limit = args.get("limit").map(|v| v.parse()).transpose()?;
+    let mut h = Harness::open()?;
+
+    if which == 0 || which == 1 {
+        table12(
+            &mut h,
+            "cifar10-sim",
+            &["resnet18", "resnet56", "vgg16"],
+            "Table 1: Top-1 accuracy on cifar10-sim (MP2/6 = layer-wise 2/6-bit mixed precision)",
+            limit,
+        )?;
+    }
+    if which == 0 || which == 2 {
+        table12(
+            &mut h,
+            "cifar100-sim",
+            &["resnet18", "vgg16"],
+            "Table 2: Top-1 accuracy on cifar100-sim",
+            limit,
+        )?;
+    }
+    if which == 0 || which == 3 {
+        table34(
+            &mut h,
+            "Table 3: imagenet-sim with ResNet (vs data-free baselines)",
+            &[
+                ("resnet18", "Full-precision", "fp32"),
+                ("resnet18", "OMSE", "omse:4"),
+                ("resnet18", "OCS", "ocs:4:0.05"),
+                ("resnet18", "DFQ", "dfq:6"),
+                ("resnet18", "DF-MPC", "dfmpc:2/6"),
+                ("resnet50", "Full-precision", "fp32"),
+                ("resnet50", "OCS", "ocs:4:0.05"),
+                ("resnet50", "OMSE", "omse:4"),
+                ("resnet50", "DF-MPC", "dfmpc:2/6"),
+                ("resnet101", "Full-precision", "fp32"),
+                ("resnet101", "OMSE", "omse:4"),
+                ("resnet101", "DF-MPC", "dfmpc:2/6"),
+            ],
+            limit,
+        )?;
+    }
+    if which == 0 || which == 4 {
+        table34(
+            &mut h,
+            "Table 4: imagenet-sim with DenseNet121 / MobileNetV2",
+            &[
+                ("densenet121", "Full-precision", "fp32"),
+                ("densenet121", "OCS", "ocs:4:0.05"),
+                ("densenet121", "OMSE", "omse:4"),
+                ("densenet121", "DF-MPC", "dfmpc:3/6"),
+                ("mobilenetv2", "Full-precision", "fp32"),
+                ("mobilenetv2", "ZeroQ-sim (GDFQ/GZNQ)", "zeroq:6"),
+                ("mobilenetv2", "DFQ", "dfq:8"),
+                ("mobilenetv2", "DF-MPC", "dfmpc:6/6"),
+            ],
+            limit,
+        )?;
+    }
+    Ok(())
+}

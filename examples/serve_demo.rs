@@ -1,0 +1,92 @@
+//! Serving demo: dynamic-batching model server on a quantized model.
+//! Starts the TCP server, fires concurrent clients at it, and reports
+//! latency percentiles + throughput + online accuracy — the coordinator's
+//! serving path end to end (request -> batcher -> PJRT lane -> reply).
+//!
+//!     cargo run --release --example serve_demo
+//!     cargo run --release --example serve_demo -- --clients 4 --requests 100 --method fp32
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use dfmpc::coordinator::{Batcher, BatcherConfig, Client, LatencyRecorder, Server};
+use dfmpc::data::synth;
+use dfmpc::harness::Harness;
+use dfmpc::quant::Method;
+
+fn main() -> Result<()> {
+    let args = dfmpc::util::args::Args::from_env();
+    let id = args.get_or("model", "resnet18_cifar10-sim").to_string();
+    let method = Method::parse(args.get_or("method", "dfmpc:2/6"))?;
+    let n_clients = args.usize("clients", 4);
+    let n_requests = args.usize("requests", 64);
+    let max_batch = args.usize("max-batch", 8);
+
+    let mut h = Harness::open()?;
+    let model = h.load_model(&id)?;
+    let qckpt = method.apply(&model.plan, &model.ckpt)?;
+    let worker = h.worker()?;
+    let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, max_batch).context("artifact")?;
+    worker.load(&id, hlo.to_path_buf(), &model.plan, &qckpt, abatch)?;
+
+    let batcher = Arc::new(Batcher::start(
+        Arc::clone(&worker),
+        id.clone(),
+        BatcherConfig { max_batch: max_batch.min(abatch), max_wait: std::time::Duration::from_millis(2) },
+    ));
+    let mut server = Server::start("127.0.0.1:0", batcher, format!("{id}+{}", method.name()))?;
+    println!("server on {} serving {} ({})", server.addr, id, method.name());
+
+    let spec = synth::dataset(&model.entry.dataset).context("dataset")?;
+    let addr = server.addr;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|ci| {
+            std::thread::spawn(move || -> Result<(usize, usize, Vec<f64>)> {
+                let mut client = Client::connect(&addr)?;
+                let mut correct = 0;
+                let mut lats = Vec::new();
+                for r in 0..n_requests {
+                    let index = (ci * n_requests + r) as u64;
+                    let expected = synth::label(spec.eval_seed, index, spec.classes);
+                    let t = std::time::Instant::now();
+                    let (class, _server_ms) = client.classify_index(spec.name, index)?;
+                    lats.push(t.elapsed().as_secs_f64() * 1e3);
+                    if class == expected {
+                        correct += 1;
+                    }
+                }
+                Ok((correct, n_requests, lats))
+            })
+        })
+        .collect();
+
+    let mut correct = 0;
+    let mut total = 0;
+    let mut rec = LatencyRecorder::new();
+    for h in handles {
+        let (c, t, lats) = h.join().expect("client thread")?;
+        correct += c;
+        total += t;
+        for l in lats {
+            rec.record(l);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {} requests from {} clients in {:.2}s  ({:.1} req/s)",
+        total,
+        n_clients,
+        wall,
+        total as f64 / wall
+    );
+    println!("online accuracy: {:.2}%", 100.0 * correct as f64 / total as f64);
+    println!("client-side latency: {}", rec.summary());
+    println!(
+        "server stats: requests={} errors={}",
+        server.stats.requests.load(std::sync::atomic::Ordering::Relaxed),
+        server.stats.errors.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    server.stop();
+    Ok(())
+}

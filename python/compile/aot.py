@@ -1,0 +1,189 @@
+"""AOT compile path: lower every model's eval graph to HLO *text* and emit
+all build artifacts consumed by the rust coordinator.
+
+HLO text (NOT ``lowered.compiler_ir(...).serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published `xla` crate binds) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs under artifacts/:
+  plans/{arch}_{dataset}.json       plan-IR (shared structure source of truth)
+  hlo/{arch}_{dataset}_b{N}.hlo.txt eval graph, params as leading arguments
+  hlo/{arch}_{dataset}_b{N}_pallas.hlo.txt  same graph through the L1
+                                    Pallas kernels (resnet18 only — proves the
+                                    kernel path composes end-to-end)
+  data/{dataset}_eval.bin           2000-image eval shard (rust loader)
+  golden/*.json                     cross-language golden vectors
+  manifest.json                     index of all of the above
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import archs, checkpoint, data, model, quantize, rng, zoo
+
+EVAL_N = 2000
+BATCHES = [1, 8, 100]
+PALLAS_MODEL = ("resnet18", "cifar10-sim")
+PALLAS_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_model(plan, batch: int, use_pallas: bool = False) -> str:
+    order = model.param_order(plan)
+    specs = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in order]
+    x_spec = jax.ShapeDtypeStruct((batch, *plan["input"]), jnp.float32)
+
+    def fn(flat_params, x):
+        return (model.apply_flat(plan, flat_params, x, use_pallas=use_pallas),)
+
+    lowered = jax.jit(fn).lower(specs, x_spec)
+    return to_hlo_text(lowered)
+
+
+def emit_golden(root: str, have_ckpts: bool) -> None:
+    gdir = os.path.join(root, "golden")
+    os.makedirs(gdir, exist_ok=True)
+
+    # -- RNG stream -------------------------------------------------------
+    cases = []
+    for seed, index in [(0, 0), (1001, 7), (9003, 123456), (2**63, 2**31)]:
+        key = rng.image_key(seed, index)
+        cases.append({"seed": seed, "index": index, "key": str(key),
+                      "u64": [str(rng.slot_u64(key, s)) for s in range(8)],
+                      "f": [rng.slot_f(key, s) for s in range(8)]})
+    json.dump(cases, open(os.path.join(gdir, "rng.json"), "w"), indent=1)
+
+    # -- Dataset pixels ---------------------------------------------------
+    ds_golden = []
+    for name, spec in data.DATASETS.items():
+        img, cls = data.render_image_scalar(spec["eval_seed"], 3, spec["classes"])
+        pts = [[int(c), int(y), int(x), float(img[c, y, x])]
+               for c, y, x in [(0, 0, 0), (1, 16, 16), (2, 31, 31), (0, 5, 27), (2, 20, 9)]]
+        ds_golden.append({"dataset": name, "index": 3, "label": int(cls),
+                          "mean": float(img.mean()), "pixels": pts})
+    json.dump(ds_golden, open(os.path.join(gdir, "dataset.json"), "w"), indent=1)
+
+    # -- Quantization primitives on a fixed pseudo-random tensor ----------
+    r = np.random.RandomState(42)
+    w = (r.randn(8, 4, 3, 3) * 0.5).astype(np.float32)
+    from .kernels import dorefa as kdorefa
+    from .kernels import ternary as kternary
+    w_hat, delta, alpha = kternary.ternarize(jnp.asarray(w))
+    q6 = kdorefa.quantize_uniform(jnp.asarray(w), 6)
+    mu = r.randn(8).astype(np.float32)
+    var = (r.rand(8).astype(np.float32) + 0.5)
+    mu_hat, var_hat = quantize.recalibrate_bn(w, np.asarray(w_hat), mu, var)
+    gamma = (r.rand(8).astype(np.float32) + 0.5)
+    beta = r.randn(8).astype(np.float32)
+    c = quantize.solve_c(w, np.asarray(w_hat), gamma, beta, mu, var, mu_hat, var_hat, 0.5, 0.0)
+    json.dump({
+        "w": w.ravel().tolist(), "shape": list(w.shape),
+        "delta": float(delta), "alpha": float(alpha),
+        "w_hat": np.asarray(w_hat).ravel().tolist(),
+        "q6": np.asarray(q6).ravel().tolist(),
+        "mu": mu.tolist(), "var": var.tolist(),
+        "gamma": gamma.tolist(), "beta": beta.tolist(),
+        "mu_hat": mu_hat.tolist(), "var_hat": var_hat.tolist(),
+        "lam1": 0.5, "lam2": 0.0, "c": np.asarray(c).tolist(),
+    }, open(os.path.join(gdir, "quant.json"), "w"))
+
+    # -- Model logits (needs checkpoints) ---------------------------------
+    if have_ckpts:
+        arch, dataset = "resnet18", "cifar10-sim"
+        path = zoo.ckpt_path(root, arch, dataset)
+        tensors, meta = checkpoint.load(path)
+        plan = archs.build(arch, meta["num_classes"])
+        params = {k: jnp.asarray(v) for k, v in tensors.items()}
+        spec = data.DATASETS[dataset]
+        idx = np.arange(4)
+        x, y = data.render_batch_np(spec["eval_seed"], idx, spec["classes"])
+        logits = np.asarray(model.apply(plan, params, jnp.asarray(x)))
+        qparams, coeffs = quantize.dfmpc(plan, tensors, 2, 6, 0.5, 0.0)
+        qp = {k: jnp.asarray(v) for k, v in qparams.items()}
+        qlogits = np.asarray(model.apply(plan, qp, jnp.asarray(x)))
+        first_pair = plan["pairs"][0]
+        json.dump({
+            "arch": arch, "dataset": dataset,
+            "labels": y.tolist(),
+            "logits": logits.tolist(),
+            "dfmpc_logits": qlogits.tolist(),
+            "first_pair_low": first_pair["low"],
+            "first_pair_c": coeffs[first_pair["low"]].tolist(),
+        }, open(os.path.join(gdir, "logits.json"), "w"))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--skip-hlo", action="store_true")
+    p.add_argument("--only-model", default=None, help="arch_dataset filter")
+    args = p.parse_args()
+    root = args.out
+    for sub in ("plans", "hlo", "data", "golden", "models"):
+        os.makedirs(os.path.join(root, sub), exist_ok=True)
+
+    manifest = {"models": [], "datasets": [], "eval_n": EVAL_N}
+
+    for name, spec in data.DATASETS.items():
+        shard = os.path.join(root, "data", f"{name}_eval.bin")
+        if not os.path.exists(shard):
+            data.write_eval_shard(shard, name, EVAL_N)
+            print(f"wrote {shard}", flush=True)
+        manifest["datasets"].append({
+            "name": name, "classes": spec["classes"], "eval": f"data/{name}_eval.bin",
+            "train_seed": spec["train_seed"], "eval_seed": spec["eval_seed"], "n": EVAL_N})
+
+    for arch, dataset, _steps, _lr in zoo.ZOO:
+        mid = f"{arch}_{dataset}"
+        if args.only_model and args.only_model != mid:
+            continue
+        ncls = data.DATASETS[dataset]["classes"]
+        plan = archs.build(arch, ncls)
+        plan_path = os.path.join(root, "plans", f"{mid}.json")
+        json.dump(plan, open(plan_path, "w"))
+        entry = {"id": mid, "arch": arch, "dataset": dataset,
+                 "plan": f"plans/{mid}.json", "ckpt": f"models/{mid}.dfmc",
+                 "params": [[n, list(s)] for n, s in model.param_order(plan)],
+                 "hlo": {}, "pallas_hlo": None}
+        if not args.skip_hlo:
+            for b in BATCHES:
+                out = os.path.join(root, "hlo", f"{mid}_b{b}.hlo.txt")
+                if not os.path.exists(out):
+                    text = lower_model(plan, b)
+                    open(out, "w").write(text)
+                    print(f"lowered {out} ({len(text)} chars)", flush=True)
+                entry["hlo"][str(b)] = f"hlo/{mid}_b{b}.hlo.txt"
+            if (arch, dataset) == PALLAS_MODEL:
+                out = os.path.join(root, "hlo", f"{mid}_b{PALLAS_BATCH}_pallas.hlo.txt")
+                if not os.path.exists(out):
+                    text = lower_model(plan, PALLAS_BATCH, use_pallas=True)
+                    open(out, "w").write(text)
+                    print(f"lowered {out} ({len(text)} chars)", flush=True)
+                entry["pallas_hlo"] = f"hlo/{mid}_b{PALLAS_BATCH}_pallas.hlo.txt"
+                entry["pallas_batch"] = PALLAS_BATCH
+        manifest["models"].append(entry)
+
+    have_ckpts = os.path.exists(zoo.ckpt_path(root, "resnet18", "cifar10-sim"))
+    emit_golden(root, have_ckpts)
+    json.dump(manifest, open(os.path.join(root, "manifest.json"), "w"), indent=1)
+    print("manifest written; golden vectors:", "full" if have_ckpts else "no-ckpt subset")
+
+
+if __name__ == "__main__":
+    main()

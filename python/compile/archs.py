@@ -1,0 +1,244 @@
+"""Plan-IR generators for every architecture in the paper's evaluation.
+
+A *plan* is a JSON-serializable dict describing the network as a linear
+sequence of ops plus explicit residual/concat links, the mixed-precision
+layer *pairs* (paper Fig. 2), and the conv->BN mapping. It is the single
+source of truth shared with the rust side (rust/src/model/plan.rs parses
+the same JSON), so the quantizer, the pure-rust inference engine and the
+JAX interpreter all agree on structure.
+
+Architectures follow the paper's families at widths/depths sized for
+1-core CPU training (DESIGN.md §2 substitutions):
+  resnet18      basic blocks  [2,2,2,2], widths 16..128   (Fig. 2a)
+  resnet56      CIFAR-style   3 stages x 9 basic blocks   (Fig. 2a)
+  resnet50      bottleneck    [2,2,2,2], expansion 4      (Fig. 2b)
+  resnet101     bottleneck    [2,3,4,2], expansion 4      (Fig. 2b)
+  vgg16         13 convs, widths /4                       (Fig. 2d)
+  densenet121   3 dense blocks x 6 layers, growth 12      (Fig. 2c)
+  mobilenetv2   inverted residuals, widths /4
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+Plan = dict[str, Any]
+
+
+def _conv(name: str, cin: int, cout: int, k: int, stride: int = 1, pad: int | None = None, groups: int = 1) -> dict:
+    if pad is None:
+        pad = k // 2
+    return {"op": "conv", "name": name, "cin": cin, "cout": cout, "k": k,
+            "stride": stride, "pad": pad, "groups": groups}
+
+
+def _bn(name: str, ch: int) -> dict:
+    return {"op": "bn", "name": name, "ch": ch}
+
+
+def _finish(plan: Plan) -> Plan:
+    """Fill bn_of (conv name -> following bn name) and validate pairs."""
+    bn_of: dict[str, str] = {}
+    prev_conv = None
+    for op in plan["ops"]:
+        if op["op"] == "conv":
+            prev_conv = op["name"]
+        elif op["op"] == "bn" and prev_conv is not None:
+            bn_of[prev_conv] = op["name"]
+            prev_conv = None
+        elif op["op"] == "residual" and op.get("down"):
+            bn_of[op["down"]["conv"]["name"]] = op["down"]["bn"]["name"]
+    plan["bn_of"] = bn_of
+    convs = {op["name"]: op for op in plan["ops"] if op["op"] == "conv"}
+    for op in plan["ops"]:
+        if op["op"] == "residual" and op.get("down"):
+            convs[op["down"]["conv"]["name"]] = op["down"]["conv"]
+    for pair in plan["pairs"]:
+        lo, hi = convs[pair["low"]], convs[pair["high"]]
+        off = pair.get("offset", 0)
+        pair["offset"] = off
+        if hi["groups"] == 1:
+            assert off + lo["cout"] <= hi["cin"], (pair, lo["cout"], hi["cin"])
+        else:  # depthwise high conv: one-to-one channels
+            assert lo["cout"] == hi["cout"] and off == 0, pair
+        assert pair["low"] in plan["bn_of"], f"low conv {pair['low']} has no BN"
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# ResNet (basic + bottleneck)
+# ---------------------------------------------------------------------------
+
+
+def resnet(name: str, blocks: list[int], widths: list[int], num_classes: int,
+           bottleneck: bool = False, expansion: int = 4) -> Plan:
+    ops: list[dict] = []
+    pairs: list[dict] = []
+    cin = 3
+    ops += [_conv("stem", cin, widths[0], 3), _bn("stem_bn", widths[0]), {"op": "relu"}]
+    cin = widths[0]
+    for s, (nb, w) in enumerate(zip(blocks, widths)):
+        for b in range(nb):
+            stride = 2 if (s > 0 and b == 0) else 1
+            p = f"s{s}b{b}"
+            cout = w * expansion if bottleneck else w
+            need_down = stride != 1 or cin != cout
+            down = None
+            if need_down:
+                down = {"conv": _conv(f"{p}_ds", cin, cout, 1, stride, 0),
+                        "bn": _bn(f"{p}_dsbn", cout)}
+            ops.append({"op": "save", "id": p})
+            if bottleneck:
+                ops += [_conv(f"{p}c1", cin, w, 1, 1, 0), _bn(f"{p}bn1", w), {"op": "relu"},
+                        _conv(f"{p}c2", w, w, 3, stride), _bn(f"{p}bn2", w), {"op": "relu"},
+                        _conv(f"{p}c3", w, cout, 1, 1, 0), _bn(f"{p}bn3", cout)]
+                # Fig. 2b: 1x1 low-bit, the following 3x3 high-bit compensates.
+                pairs.append({"low": f"{p}c1", "high": f"{p}c2"})
+            else:
+                ops += [_conv(f"{p}c1", cin, w, 3, stride), _bn(f"{p}bn1", w), {"op": "relu"},
+                        _conv(f"{p}c2", w, cout, 3), _bn(f"{p}bn2", cout)]
+                # Fig. 2a: conv1 low-bit, conv2 high-bit compensates.
+                pairs.append({"low": f"{p}c1", "high": f"{p}c2"})
+            ops.append({"op": "residual", "id": p, "down": down})
+            ops.append({"op": "relu"})
+            cin = cout
+    ops += [{"op": "gap"}, _conv_fc("fc", cin, num_classes)]
+    return _finish({"name": name, "input": [3, 32, 32], "num_classes": num_classes,
+                    "ops": ops, "pairs": pairs})
+
+
+def _conv_fc(name: str, cin: int, cout: int) -> dict:
+    return {"op": "fc", "name": name, "cin": cin, "cout": cout}
+
+
+# ---------------------------------------------------------------------------
+# VGG
+# ---------------------------------------------------------------------------
+
+
+def vgg16(num_classes: int) -> Plan:
+    cfg = [32, 32, "M", 64, 64, "M", 128, 128, 128, "M", 128, 128, 128, "M"]
+    ops: list[dict] = []
+    pairs: list[dict] = []
+    cin = 3
+    conv_names: list[str] = []
+    i = 0
+    for v in cfg:
+        if v == "M":
+            ops.append({"op": "maxpool", "k": 2, "stride": 2})
+            continue
+        n = f"c{i}"
+        ops += [_conv(n, cin, v, 3), _bn(f"{n}_bn", v), {"op": "relu"}]
+        conv_names.append(n)
+        cin = v
+        i += 1
+    # Fig. 2d plain chain: alternate low/high over consecutive convs.
+    for j in range(0, len(conv_names) - 1, 2):
+        pairs.append({"low": conv_names[j], "high": conv_names[j + 1]})
+    ops += [{"op": "gap"}, _conv_fc("fc", cin, num_classes)]
+    return _finish({"name": "vgg16", "input": [3, 32, 32], "num_classes": num_classes,
+                    "ops": ops, "pairs": pairs})
+
+
+# ---------------------------------------------------------------------------
+# DenseNet
+# ---------------------------------------------------------------------------
+
+
+def densenet121(num_classes: int, growth: int = 12, block_layers: tuple[int, ...] = (6, 6, 6)) -> Plan:
+    ops: list[dict] = []
+    pairs: list[dict] = []
+    ch = 2 * growth
+    ops += [_conv("stem", 3, ch, 3), _bn("stem_bn", ch), {"op": "relu"}]
+    for bi, nl in enumerate(block_layers):
+        layer_out_offset: dict[int, int] = {}
+        for li in range(nl):
+            n = f"d{bi}l{li}"
+            ops.append({"op": "save", "id": n})
+            ops += [_conv(n, ch, growth, 3), _bn(f"{n}_bn", growth), {"op": "relu"}]
+            ops.append({"op": "concat", "id": n})
+            layer_out_offset[li] = ch  # this layer's output occupies [ch, ch+growth)
+            ch += growth
+            # Fig. 2c: layer li (low) compensated by layer li+1 (high) on the
+            # input-channel slice where li's output lands.
+        for li in range(0, nl - 1, 2):
+            pairs.append({"low": f"d{bi}l{li}", "high": f"d{bi}l{li+1}",
+                          "offset": layer_out_offset[li]})
+        if bi != len(block_layers) - 1:
+            t = f"t{bi}"
+            out = ch // 2
+            ops += [_conv(t, ch, out, 1, 1, 0), _bn(f"{t}_bn", out), {"op": "relu"},
+                    {"op": "avgpool", "k": 2, "stride": 2}]
+            ch = out
+    ops += [{"op": "gap"}, _conv_fc("fc", ch, num_classes)]
+    return _finish({"name": "densenet121", "input": [3, 32, 32], "num_classes": num_classes,
+                    "ops": ops, "pairs": pairs})
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2
+# ---------------------------------------------------------------------------
+
+
+def mobilenetv2(num_classes: int) -> Plan:
+    # (expansion t, out channels, repeats, first stride)
+    settings = [(1, 8, 1, 1), (4, 12, 2, 2), (4, 16, 2, 2), (4, 24, 2, 1), (4, 32, 2, 2)]
+    ops: list[dict] = []
+    pairs: list[dict] = []
+    ch = 16
+    ops += [_conv("stem", 3, ch, 3, 1), _bn("stem_bn", ch), {"op": "relu6"}]
+    bi = 0
+    for t, c, n_rep, s in settings:
+        for r in range(n_rep):
+            stride = s if r == 0 else 1
+            p = f"m{bi}"
+            hidden = ch * t
+            use_res = stride == 1 and ch == c
+            if use_res:
+                ops.append({"op": "save", "id": p})
+            if t != 1:
+                ops += [_conv(f"{p}e", ch, hidden, 1, 1, 0), _bn(f"{p}e_bn", hidden), {"op": "relu6"}]
+            ops += [_conv(f"{p}d", hidden, hidden, 3, stride, 1, groups=hidden),
+                    _bn(f"{p}d_bn", hidden), {"op": "relu6"},
+                    _conv(f"{p}p", hidden, c, 1, 1, 0), _bn(f"{p}p_bn", c)]
+            if t != 1:
+                # expand 1x1 low-bit; depthwise high-bit compensates one-to-one.
+                pairs.append({"low": f"{p}e", "high": f"{p}d"})
+            else:
+                pairs.append({"low": f"{p}d", "high": f"{p}p"})
+            if use_res:
+                ops.append({"op": "residual", "id": p, "down": None})
+            ch = c
+            bi += 1
+    ops += [_conv("head", ch, 64, 1, 1, 0), _bn("head_bn", 64), {"op": "relu6"},
+            {"op": "gap"}, _conv_fc("fc", 64, num_classes)]
+    return _finish({"name": "mobilenetv2", "input": [3, 32, 32], "num_classes": num_classes,
+                    "ops": ops, "pairs": pairs})
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def build(arch: str, num_classes: int) -> Plan:
+    if arch == "resnet18":
+        return resnet("resnet18", [2, 2, 2, 2], [16, 32, 64, 128], num_classes)
+    if arch == "resnet56":
+        return resnet("resnet56", [9, 9, 9], [16, 32, 64], num_classes)
+    if arch == "resnet50":
+        return resnet("resnet50", [2, 2, 2, 2], [8, 16, 32, 64], num_classes,
+                      bottleneck=True)
+    if arch == "resnet101":
+        return resnet("resnet101", [2, 3, 4, 2], [8, 16, 32, 64], num_classes,
+                      bottleneck=True)
+    if arch == "vgg16":
+        return vgg16(num_classes)
+    if arch == "densenet121":
+        return densenet121(num_classes)
+    if arch == "mobilenetv2":
+        return mobilenetv2(num_classes)
+    raise ValueError(f"unknown arch {arch}")
+
+
+ARCHS = ["resnet18", "resnet56", "resnet50", "resnet101", "vgg16", "densenet121", "mobilenetv2"]

@@ -1,0 +1,61 @@
+"""DFMC checkpoint format — shared with rust/src/model/checkpoint.rs.
+
+Layout (little-endian):
+    8  bytes  magic  b"DFMC1\\x00\\x00\\x00"
+    4  bytes  u32 version (1)
+    8  bytes  u64 header length H
+    H  bytes  JSON header: {"meta": {...}, "tensors": [{"name", "shape",
+              "dtype": "f32", "offset", "nbytes"}, ...]}
+    payload   raw f32 tensor data, offsets relative to payload start,
+              16-byte aligned
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"DFMC1\x00\x00\x00"
+ALIGN = 16
+
+
+def save(path: str, tensors: dict[str, np.ndarray], meta: dict) -> None:
+    entries = []
+    offset = 0
+    blobs = []
+    for name in tensors:  # insertion order = param order
+        arr = np.ascontiguousarray(tensors[name], dtype="<f4")
+        nbytes = arr.nbytes
+        entries.append({"name": name, "shape": list(arr.shape), "dtype": "f32",
+                        "offset": offset, "nbytes": nbytes})
+        blobs.append(arr.tobytes())
+        offset += nbytes
+        padding = (-offset) % ALIGN
+        if padding:
+            blobs.append(b"\x00" * padding)
+            offset += padding
+    header = json.dumps({"meta": meta, "tensors": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<Q", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def load(path: str) -> tuple[dict[str, np.ndarray], dict]:
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "bad DFMC magic"
+        (ver,) = struct.unpack("<I", f.read(4))
+        assert ver == 1, f"unsupported version {ver}"
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen))
+        payload = f.read()
+    tensors = {}
+    for e in header["tensors"]:
+        raw = payload[e["offset"]:e["offset"] + e["nbytes"]]
+        tensors[e["name"]] = np.frombuffer(raw, dtype="<f4").reshape(e["shape"]).copy()
+    return tensors, header["meta"]

@@ -1,0 +1,246 @@
+"""SynthShapes: procedural class-conditional image datasets.
+
+The paper evaluates on CIFAR10/CIFAR100/ImageNet, none of which are
+available in this sandbox (repro gate). SynthShapes is the substitution:
+a deterministic renderer producing class-conditional shape/color/texture
+images with background clutter, lighting gradients, occluders and pixel
+noise. Classes are fully determined by (shape, color, texture); positions,
+scales, noise and occluders are nuisance variables — so the task is
+learnable but not trivial, and accuracy collapses/recovers under
+quantization the same way a natural-image CNN does.
+
+The renderer is mirrored *exactly* (same float ops, same RNG slots) in
+``rust/src/data/synth.rs``; golden tests pin cross-language equality.
+
+Datasets:
+    cifar10-sim    10 classes  (10 shapes, color tied to shape)
+    cifar100-sim   100 classes (10 shapes x 10 colors)
+    imagenet-sim   200 classes (10 shapes x 10 colors x 2 textures)
+
+All are 3x32x32 float32 in [0, 1], NCHW.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from . import rng
+
+H = 32
+W = 32
+C = 3
+
+# Slot layout (must match rust/src/data/synth.rs)
+SLOT_TINT = 0  # 0..2  bg tint rgb
+SLOT_CX = 3
+SLOT_CY = 4
+SLOT_R = 5
+SLOT_OCC_POS = 6
+SLOT_OCC_ON = 7
+SLOT_PHASE = 8
+SLOT_CLASS = 15
+SLOT_NOISE = 16  # 16 + (y*W + x)*C + c
+
+PALETTE = [
+    (0.90, 0.10, 0.10),
+    (0.10, 0.90, 0.10),
+    (0.10, 0.20, 0.90),
+    (0.90, 0.90, 0.10),
+    (0.90, 0.10, 0.90),
+    (0.10, 0.90, 0.90),
+    (0.95, 0.55, 0.10),
+    (0.55, 0.10, 0.90),
+    (0.90, 0.90, 0.90),
+    (0.05, 0.05, 0.05),
+]
+
+DATASETS = {
+    "cifar10-sim": {"classes": 10, "train_seed": 1001, "eval_seed": 9001},
+    "cifar100-sim": {"classes": 100, "train_seed": 1002, "eval_seed": 9002},
+    "imagenet-sim": {"classes": 200, "train_seed": 1003, "eval_seed": 9003},
+}
+
+
+def class_factors(cls: int) -> tuple[int, int, int]:
+    """class -> (shape, color, texture); bijective over 10x10x2."""
+    shape = cls % 10
+    color = (cls % 10 + cls // 10) % 10
+    tex = (cls // 100) % 2
+    return shape, color, tex
+
+
+def shape_mask_scalar(shape: int, x: int, y: int, cx: float, cy: float, r: float) -> bool:
+    dx = float(x) - cx
+    dy = float(y) - cy
+    adx, ady = abs(dx), abs(dy)
+    d2 = dx * dx + dy * dy
+    if shape == 0:
+        return d2 < r * r
+    if shape == 1:
+        return max(adx, ady) < 0.8 * r
+    if shape == 2:
+        return adx + ady < 1.2 * r
+    if shape == 3:
+        return (adx < 0.35 * r or ady < 0.35 * r) and max(adx, ady) < r
+    if shape == 4:
+        return d2 < r * r and d2 > (0.55 * r) * (0.55 * r)
+    if shape == 5:
+        return -0.7 * r < dy < 0.7 * r and adx < (dy + 0.7 * r) * 0.6
+    if shape == 6:
+        return max(adx, ady) < r and (y % 4) < 2
+    if shape == 7:
+        return max(adx, ady) < r and (x % 4) < 2
+    if shape == 8:
+        return d2 < r * r and ((x // 4 + y // 4) % 2) == 0
+    # shape 9: hollow square frame
+    return adx < r and ady < r and not (adx < 0.5 * r and ady < 0.5 * r)
+
+
+def tex_fill_scalar(tex: int, x: int, y: int, phase: float) -> float:
+    if tex == 0:
+        return 1.0 - 0.25 * (float(x) / 32.0)
+    band = (x + y + int(phase * 8.0)) % 8
+    return 0.55 + (0.45 if band < 4 else 0.0)
+
+
+def render_image_scalar(seed: int, index: int, num_classes: int) -> tuple[np.ndarray, int]:
+    """Scalar reference renderer (slow; mirrored by rust). Returns (CHW f32, label)."""
+    key = rng.image_key(seed, index)
+    cls = rng.slot_u64(key, SLOT_CLASS) % num_classes
+    shape, color, tex = class_factors(cls)
+    tint = [0.15 + 0.5 * rng.slot_f(key, SLOT_TINT + c) for c in range(C)]
+    cx = 8.0 + 16.0 * rng.slot_f(key, SLOT_CX)
+    cy = 8.0 + 16.0 * rng.slot_f(key, SLOT_CY)
+    r = 5.0 + 7.0 * rng.slot_f(key, SLOT_R)
+    occ_on = rng.slot_f(key, SLOT_OCC_ON) < 0.35
+    occ_x0 = int(rng.slot_f(key, SLOT_OCC_POS) * 29.0)
+    phase = rng.slot_f(key, SLOT_PHASE)
+    col = PALETTE[color]
+
+    img = np.zeros((C, H, W), dtype=np.float32)
+    for y in range(H):
+        for x in range(W):
+            inside = shape_mask_scalar(shape, x, y, cx, cy, r)
+            fill = tex_fill_scalar(tex, x, y, phase) if inside else 0.0
+            occ = occ_on and occ_x0 <= x < occ_x0 + 3
+            for c in range(C):
+                n = rng.slot_f(key, SLOT_NOISE + (y * W + x) * C + c) - 0.5
+                if occ:
+                    v = 0.25 + 0.1 * n
+                elif inside:
+                    v = col[c] * fill + 0.15 * n
+                else:
+                    v = tint[c] * (0.55 + 0.45 * (float(y) / 31.0)) + 0.25 * n
+                img[c, y, x] = np.float32(min(max(v, 0.0), 1.0))
+    return img, int(cls)
+
+
+def labels_np(seed: int, indices: np.ndarray, num_classes: int) -> np.ndarray:
+    keys = rng.image_key_np(seed, indices)
+    cls = rng.slot_u64_np(keys, np.full_like(indices, SLOT_CLASS)) % np.uint64(num_classes)
+    return cls.astype(np.int32)
+
+
+def render_batch_np(seed: int, indices: np.ndarray, num_classes: int) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized renderer. Returns (N,C,H,W) f32 and (N,) i32 labels.
+
+    Produces the same pixels as ``render_image_scalar`` (same slot layout,
+    same float formulas — verified by tests).
+    """
+    n = len(indices)
+    keys = rng.image_key_np(seed, np.asarray(indices))  # (N,)
+    k1 = keys[:, None, None]
+
+    cls = rng.slot_u64_np(keys, np.full(n, SLOT_CLASS)) % np.uint64(num_classes)
+    cls = cls.astype(np.int64)
+    shape = cls % 10
+    color = (cls % 10 + cls // 10) % 10
+    tex = (cls // 100) % 2
+
+    def slotf(s):
+        return rng.slot_f_np(keys, np.full(n, s))
+
+    tint = np.stack([0.15 + 0.5 * slotf(SLOT_TINT + c) for c in range(C)], axis=1)  # (N,3)
+    cx = (8.0 + 16.0 * slotf(SLOT_CX))[:, None, None]
+    cy = (8.0 + 16.0 * slotf(SLOT_CY))[:, None, None]
+    r = (5.0 + 7.0 * slotf(SLOT_R))[:, None, None]
+    occ_on = (slotf(SLOT_OCC_ON) < 0.35)[:, None, None]
+    occ_x0 = (slotf(SLOT_OCC_POS) * 29.0).astype(np.int64)[:, None, None]
+    phase = slotf(SLOT_PHASE)[:, None, None]
+
+    ygrid, xgrid = np.meshgrid(np.arange(H), np.arange(W), indexing="ij")
+    xg = xgrid[None].astype(np.float64)
+    yg = ygrid[None].astype(np.float64)
+    dx = xg - cx
+    dy = yg - cy
+    adx, ady = np.abs(dx), np.abs(dy)
+    d2 = dx * dx + dy * dy
+    mx = np.maximum(adx, ady)
+
+    masks = [
+        d2 < r * r,
+        mx < 0.8 * r,
+        adx + ady < 1.2 * r,
+        ((adx < 0.35 * r) | (ady < 0.35 * r)) & (mx < r),
+        (d2 < r * r) & (d2 > (0.55 * r) ** 2),
+        (dy > -0.7 * r) & (dy < 0.7 * r) & (adx < (dy + 0.7 * r) * 0.6),
+        (mx < r) & ((ygrid[None] % 4) < 2),
+        (mx < r) & ((xgrid[None] % 4) < 2),
+        (d2 < r * r) & (((xgrid[None] // 4 + ygrid[None] // 4) % 2) == 0),
+        (adx < r) & (ady < r) & ~((adx < 0.5 * r) & (ady < 0.5 * r)),
+    ]
+    mask = np.zeros((n, H, W), dtype=bool)
+    for s in range(10):
+        sel = shape == s
+        if sel.any():
+            mask[sel] = masks[s][sel]
+
+    fill0 = 1.0 - 0.25 * (xg / 32.0)  # (1,H,W)
+    band = (xgrid[None] + ygrid[None] + (phase * 8.0).astype(np.int64)) % 8
+    fill1 = 0.55 + np.where(band < 4, 0.45, 0.0)
+    fill = np.where((tex == 1)[:, None, None], fill1, np.broadcast_to(fill0, (n, H, W)))
+
+    occ = occ_on & (xgrid[None] >= occ_x0) & (xgrid[None] < occ_x0 + 3)
+
+    colv = np.asarray(PALETTE)[color]  # (N,3)
+    out = np.empty((n, C, H, W), dtype=np.float32)
+    base_slots = (ygrid[None] * W + xgrid[None]) * C  # (1,H,W)
+    for c in range(C):
+        noise = rng.slot_f_np(k1, SLOT_NOISE + base_slots + c) - 0.5
+        bg = tint[:, c, None, None] * (0.55 + 0.45 * (yg / 31.0)) + 0.25 * noise
+        fg = colv[:, c, None, None] * fill + 0.15 * noise
+        v = np.where(mask, fg, bg)
+        v = np.where(occ, 0.25 + 0.1 * noise, v)
+        out[:, c] = np.clip(v, 0.0, 1.0).astype(np.float32)
+    return out, cls.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Binary eval shard (read by rust/src/data/loader.rs)
+# ---------------------------------------------------------------------------
+
+MAGIC = b"DFDS1\x00\x00\x00"
+
+
+def write_eval_shard(path: str, dataset: str, n: int) -> None:
+    spec = DATASETS[dataset]
+    idx = np.arange(n)
+    x, y = render_batch_np(spec["eval_seed"], idx, spec["classes"])
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<IIIIII", 1, n, C, H, W, spec["classes"]))
+        f.write(y.astype("<i4").tobytes())
+        f.write(x.astype("<f4").tobytes())
+
+
+def read_eval_shard(path: str) -> tuple[np.ndarray, np.ndarray, int]:
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        assert magic == MAGIC, f"bad magic {magic!r}"
+        ver, n, c, h, w, ncls = struct.unpack("<IIIIII", f.read(24))
+        assert ver == 1
+        y = np.frombuffer(f.read(4 * n), dtype="<i4")
+        x = np.frombuffer(f.read(4 * n * c * h * w), dtype="<f4").reshape(n, c, h, w)
+    return x, y, ncls

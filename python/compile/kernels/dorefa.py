@@ -1,0 +1,48 @@
+"""Pallas uniform k-bit quantization kernel — DoReFa-Net, Eq. (6) of the paper.
+
+Elementwise over VMEM blocks; the layer-wise scale max|w| is reduced
+outside the kernel and broadcast via a pinned (1, 1) block. The bitwidth k
+is static (one compiled kernel per bitwidth), so the level count folds into
+immediate constants — on real TPU this is a pure VPU elementwise pipe.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK = 1024
+
+
+def _kernel(w_ref, s_ref, o_ref, *, levels: float):
+    w = w_ref[...]
+    s = s_ref[0, 0]
+    t = w / (2.0 * s) + 0.5
+    q = (2.0 / levels) * jnp.round(levels * t) - 1.0
+    o_ref[...] = (q * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def quantize_uniform(w: jnp.ndarray, k: int) -> jnp.ndarray:
+    """k-bit uniform fake-quantization of w (kept in original scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
+    flat = w.reshape(1, -1).astype(jnp.float32)
+    n = flat.shape[1]
+    pad = (-n) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, levels=float(2**k - 1)),
+        grid=(flat.shape[1] // _BLOCK,),
+        in_specs=[
+            pl.BlockSpec((1, _BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, _BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=True,
+    )(flat, scale.reshape(1, 1).astype(jnp.float32))
+    return out[0, :n].reshape(w.shape)

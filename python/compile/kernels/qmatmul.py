@@ -1,0 +1,66 @@
+"""Blocked Pallas matmul — the inference hot-spot kernel (L1).
+
+Tiled for TPU: (bm, bk) x (bk, bn) blocks resident in VMEM, accumulation
+into the output block (whose index is invariant along the k grid axis, the
+standard Pallas accumulation pattern), MXU-shaped 128x128 default tiles.
+``interpret=True`` is mandatory on this CPU-only image (real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute); the
+BlockSpec structure is what carries over to real hardware.
+
+VMEM footprint per grid step (defaults, f32):
+  a(128x128) + b(128x128) + out(128x128) = 192 KiB << 16 MiB VMEM.
+MXU utilization estimate: 128x128x128 MACs per step fully feed the
+128x128 systolic array for 128 cycles; arithmetic intensity
+= 2*128^3 / (3*128^2*4 B) ≈ 21.3 flop/B.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pad2(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def qmatmul(a: jnp.ndarray, b: jnp.ndarray, bm: int = 128, bn: int = 128, bk: int = 128) -> jnp.ndarray:
+    """C = A @ B via the blocked Pallas kernel (any f32 shapes; pads internally)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    ap = _pad2(a.astype(jnp.float32), bm, bk)
+    bp = _pad2(b.astype(jnp.float32), bk, bn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]

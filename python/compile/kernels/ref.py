@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (pytest ground truth).
+
+These are the mathematical definitions straight from the paper:
+  - ternary_ref:    Eq. (3)/(4)  (Ternary Weight Networks thresholding)
+  - dorefa_ref:     Eq. (6)      (DoReFa uniform k-bit quantization)
+  - compensate_ref: Eq. (27)     (closed-form per-channel coefficient)
+  - matmul_ref:     plain matmul (the inference hot-spot reference)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ternary_stats(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Layer-wise threshold Delta and scaling factor alpha, Eq. (4)."""
+    delta = 0.7 * jnp.mean(jnp.abs(w))
+    mask = jnp.abs(w) > delta
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    alpha = jnp.sum(jnp.where(mask, jnp.abs(w), 0.0)) / denom
+    return delta, alpha
+
+
+def ternary_ref(w: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (3): w -> {-1, 0, +1} with threshold delta."""
+    return jnp.where(w > delta, 1.0, jnp.where(w < -delta, -1.0, 0.0)).astype(w.dtype)
+
+
+def dorefa_ref(w: jnp.ndarray, k: int, scale: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (6), kept in the original weight scale (scale = max|w|).
+
+    q = (2/(2^k-1)) * round((2^k-1) * (w/(2*scale) + 1/2)) - 1, output q*scale.
+    """
+    levels = float(2**k - 1)
+    t = w / (2.0 * scale) + 0.5
+    q = (2.0 / levels) * jnp.round(levels * t) - 1.0
+    return (q * scale).astype(w.dtype)
+
+
+def compensate_ref(
+    xhat: jnp.ndarray,  # (i, d)  gamma_hat * w_hat / sigma_hat, flattened per channel
+    x: jnp.ndarray,  # (i, d)  gamma * w / sigma
+    yhat: jnp.ndarray,  # (i,)   beta_hat - gamma_hat * mu_hat / sigma_hat
+    y: jnp.ndarray,  # (i,)   beta - gamma * mu / sigma
+    lam1: float,
+    lam2: float,
+) -> jnp.ndarray:
+    """Eq. (27). Diagonal per-channel solve; clamped to c >= 0 (paper: c >= 0)."""
+    num = jnp.sum(xhat * x, axis=1) + lam1 * yhat * y
+    den = jnp.sum(xhat * xhat, axis=1) + lam1 * yhat * yhat + lam2
+    c = num / jnp.maximum(den, 1e-12)
+    return jnp.maximum(c, 0.0)
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,45 @@
+"""Pallas ternarization kernel — Eq. (3) of the paper.
+
+Elementwise thresholding over VMEM-resident blocks; the scalar threshold
+Delta (Eq. 4, a layer-wise reduction) is computed outside and broadcast to
+every grid step via a (1, 1) block whose index map pins it to block (0, 0).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_BLOCK = 1024
+
+
+def _kernel(w_ref, d_ref, o_ref):
+    w = w_ref[...]
+    d = d_ref[0, 0]
+    o_ref[...] = jnp.where(w > d, 1.0, jnp.where(w < -d, -1.0, 0.0)).astype(o_ref.dtype)
+
+
+@jax.jit
+def ternarize(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Ternarize a weight tensor of any shape. Returns (w_hat, delta, alpha)."""
+    delta, alpha = ref.ternary_stats(w)
+    flat = w.reshape(1, -1).astype(jnp.float32)
+    n = flat.shape[1]
+    pad = (-n) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(flat.shape[1] // _BLOCK,),
+        in_specs=[
+            pl.BlockSpec((1, _BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, _BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=True,
+    )(flat, delta.reshape(1, 1).astype(jnp.float32))
+    return out[0, :n].reshape(w.shape), delta, alpha

@@ -1,0 +1,185 @@
+"""L2: JAX interpreter for the plan-IR — forward (train/eval) and backward.
+
+``apply(plan, params, x)`` evaluates a plan. In eval mode BN uses the
+stored running statistics (exactly what the rust engine and the AOT HLO
+artifacts do); in train mode BN uses batch statistics and the new running
+stats are returned as an aux dict (updated outside of grad).
+
+``use_pallas=True`` routes every conv through im2col + the blocked Pallas
+``qmatmul`` kernel and the FC layer through ``qmatmul`` directly, so the L1
+kernel lowers into the same HLO as the rest of the graph (the pallas-path
+artifact that rust cross-checks against the XLA-conv artifact).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.qmatmul import qmatmul
+
+Plan = dict[str, Any]
+Params = dict[str, jnp.ndarray]
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+def param_order(plan: Plan) -> list[tuple[str, tuple[int, ...]]]:
+    """Deterministic flat parameter ordering shared with rust + AOT artifacts."""
+    out: list[tuple[str, tuple[int, ...]]] = []
+
+    def add_conv(op):
+        out.append((f"{op['name']}.w", (op["cout"], op["cin"] // op["groups"], op["k"], op["k"])))
+
+    def add_bn(op):
+        for f in ("gamma", "beta", "mu", "var"):
+            out.append((f"{op['name']}.{f}", (op["ch"],)))
+
+    for op in plan["ops"]:
+        if op["op"] == "conv":
+            add_conv(op)
+        elif op["op"] == "bn":
+            add_bn(op)
+        elif op["op"] == "fc":
+            out.append((f"{op['name']}.w", (op["cout"], op["cin"])))
+            out.append((f"{op['name']}.b", (op["cout"],)))
+        elif op["op"] == "residual" and op.get("down"):
+            add_conv(op["down"]["conv"])
+            add_bn(op["down"]["bn"])
+    return out
+
+
+def init_params(plan: Plan, seed: int) -> Params:
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for name, shape in param_order(plan):
+        field = name.split(".")[-1]
+        if field == "w":
+            key, sub = jax.random.split(key)
+            fan_in = int(np.prod(shape[1:]))
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        elif field == "gamma":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif field in ("beta", "b", "mu"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif field == "var":
+            params[name] = jnp.ones(shape, jnp.float32)
+    return params
+
+
+def _conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int, pad: int, groups: int,
+            use_pallas: bool) -> jnp.ndarray:
+    if not use_pallas or groups != 1:
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(pad, pad), (pad, pad)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"), feature_group_count=groups)
+    # im2col + pallas matmul path
+    n, c, h, wdt = x.shape
+    o, ci, kh, kw = w.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wdt + 2 * pad - kw) // stride + 1
+    patches = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patches.append(jax.lax.slice(
+                xp, (0, 0, dy, dx), (n, c, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1),
+                (1, 1, stride, stride)))
+    col = jnp.stack(patches, axis=2).reshape(n, c * kh * kw, oh * ow)
+    col = col.transpose(0, 2, 1).reshape(n * oh * ow, c * kh * kw)
+    wmat = w.reshape(o, ci * kh * kw).T
+    out = qmatmul(col, wmat)
+    return out.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+
+
+def _bn_eval(x, g, b, mu, var):
+    inv = g / jnp.sqrt(var + BN_EPS)
+    return x * inv[None, :, None, None] + (b - mu * inv)[None, :, None, None]
+
+
+def apply(plan: Plan, params: Params, x: jnp.ndarray, train: bool = False,
+          use_pallas: bool = False):
+    """Run the plan. Returns logits (eval) or (logits, batch_stats) (train)."""
+    saved: dict[str, jnp.ndarray] = {}
+    new_stats: dict[str, jnp.ndarray] = {}
+
+    def bn(x, name, g, b, mu_r, var_r):
+        if train:
+            mu = jnp.mean(x, axis=(0, 2, 3))
+            var = jnp.var(x, axis=(0, 2, 3))
+            new_stats[f"{name}.mu"] = mu
+            new_stats[f"{name}.var"] = var
+            return _bn_eval(x, g, b, mu, var)
+        return _bn_eval(x, g, b, mu_r, var_r)
+
+    for op in plan["ops"]:
+        kind = op["op"]
+        if kind == "conv":
+            x = _conv2d(x, params[f"{op['name']}.w"], op["stride"], op["pad"],
+                        op["groups"], use_pallas)
+        elif kind == "bn":
+            n = op["name"]
+            x = bn(x, n, params[f"{n}.gamma"], params[f"{n}.beta"],
+                   params[f"{n}.mu"], params[f"{n}.var"])
+        elif kind == "relu":
+            x = jax.nn.relu(x)
+        elif kind == "relu6":
+            x = jnp.clip(x, 0.0, 6.0)
+        elif kind == "save":
+            saved[op["id"]] = x
+        elif kind == "residual":
+            sc = saved[op["id"]]
+            if op.get("down"):
+                dc, db = op["down"]["conv"], op["down"]["bn"]
+                sc = _conv2d(sc, params[f"{dc['name']}.w"], dc["stride"], dc["pad"], 1, use_pallas)
+                n = db["name"]
+                sc = bn(sc, n, params[f"{n}.gamma"], params[f"{n}.beta"],
+                        params[f"{n}.mu"], params[f"{n}.var"])
+            x = x + sc
+        elif kind == "concat":
+            x = jnp.concatenate([saved[op["id"]], x], axis=1)
+        elif kind == "maxpool":
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 1, op["k"], op["k"]), (1, 1, op["stride"], op["stride"]),
+                                      "VALID")
+        elif kind == "avgpool":
+            s = jax.lax.reduce_window(x, 0.0, jax.lax.add,
+                                      (1, 1, op["k"], op["k"]), (1, 1, op["stride"], op["stride"]),
+                                      "VALID")
+            x = s / float(op["k"] * op["k"])
+        elif kind == "gap":
+            x = jnp.mean(x, axis=(2, 3))
+        elif kind == "fc":
+            w, b = params[f"{op['name']}.w"], params[f"{op['name']}.b"]
+            x = (qmatmul(x, w.T) if use_pallas else x @ w.T) + b
+        else:
+            raise ValueError(f"unknown op {kind}")
+    if train:
+        return x, new_stats
+    return x
+
+
+def loss_fn(plan: Plan, params: Params, x: jnp.ndarray, y: jnp.ndarray):
+    logits, stats = apply(plan, params, x, train=True)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return loss, (logits, stats)
+
+
+def flatten_params(plan: Plan, params: Params) -> list[jnp.ndarray]:
+    return [params[name] for name, _ in param_order(plan)]
+
+
+def unflatten_params(plan: Plan, flat: list[jnp.ndarray]) -> Params:
+    return {name: arr for (name, _), arr in zip(param_order(plan), flat)}
+
+
+def apply_flat(plan: Plan, flat_params: list[jnp.ndarray], x: jnp.ndarray,
+               use_pallas: bool = False) -> jnp.ndarray:
+    """Eval-mode apply with a flat param list (the AOT entry point)."""
+    return apply(plan, unflatten_params(plan, flat_params), x, train=False,
+                 use_pallas=use_pallas)

@@ -1,0 +1,164 @@
+"""DF-MPC in Python/JAX — the paper's Algorithm 1 over a plan-IR model.
+
+This is the build-time mirror of the production rust implementation
+(rust/src/quant/): the two are cross-checked through golden vectors
+emitted by aot.py. All heavy steps run through the L1 Pallas kernels.
+
+Pipeline per mixed-precision pair (low conv L, high conv H, Fig. 2):
+  1. ternarize W_L (Eq. 3/4 kernel) — the stored low-bit weights are the
+     raw {-1, 0, +1} pattern; the scale alpha is absorbed by BN
+     recalibration, exactly as the paper prescribes ("the layer-wise
+     scaling factor can be absorbed into a batch normalization ...
+     we complete the solution by re-calibrating mu-hat and sigma-hat").
+  2. recalibrate BN_L statistics data-free:
+        sigma_hat_j = sigma_j * ||w_hat_j|| / ||w_j||
+        mu_hat_j    = mu_j * sum(w_hat_j) / sum(w_j)
+     (white-input moment matching; our instantiation of the paper's
+     recalibration, DESIGN.md §4).
+  3. uniform-quantize W_H to k bits (Eq. 6 kernel).
+  4. solve c in closed form (Eq. 27 kernel) and scale W_H's input
+     channels [offset, offset+o_L) by c (Eq. 7).
+
+Unpaired convs and the FC head are uniform-quantized at the high
+bitwidth; everything stays fake-quant f32 so the same HLO artifact
+evaluates FP32 and any quantized variant.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import compensate as kcomp
+from .kernels import dorefa as kdorefa
+from .kernels import ternary as kternary
+from .model import BN_EPS
+
+Plan = dict[str, Any]
+
+
+def _convs(plan: Plan) -> dict[str, dict]:
+    out = {}
+    for op in plan["ops"]:
+        if op["op"] == "conv":
+            out[op["name"]] = op
+        elif op["op"] == "residual" and op.get("down"):
+            out[op["down"]["conv"]["name"]] = op["down"]["conv"]
+    return out
+
+
+def recalibrate_bn(w: np.ndarray, w_hat: np.ndarray, mu: np.ndarray,
+                   var: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Data-free BN statistic recalibration for a ternarized layer."""
+    o = w.shape[0]
+    wf = w.reshape(o, -1)
+    wh = w_hat.reshape(o, -1)
+    norm_w = np.sqrt((wf * wf).sum(1))
+    norm_h = np.sqrt((wh * wh).sum(1))
+    s = norm_h / np.maximum(norm_w, 1e-12)
+    sum_w = wf.sum(1)
+    sum_h = wh.sum(1)
+    # mean ratio is ill-conditioned when the FP filter sums near zero;
+    # clamp its magnitude to a few multiples of the norm ratio (mirrors rust)
+    m_raw = np.where(np.abs(sum_w) > 1e-6, sum_h / np.where(np.abs(sum_w) > 1e-6, sum_w, 1.0), s)
+    m = np.clip(m_raw, -4.0 * s, 4.0 * s)
+    mu_hat = mu * m
+    var_hat = var * s * s
+    return mu_hat.astype(np.float32), var_hat.astype(np.float32)
+
+
+def solve_c(w_low: np.ndarray, w_hat: np.ndarray,
+            gamma: np.ndarray, beta: np.ndarray, mu: np.ndarray, var: np.ndarray,
+            mu_hat: np.ndarray, var_hat: np.ndarray,
+            lam1: float, lam2: float) -> np.ndarray:
+    """Closed-form Eq. (27) through the Pallas kernel. Returns c (o_low,)."""
+    o = w_low.shape[0]
+    sigma = np.sqrt(var + BN_EPS)
+    sigma_hat = np.sqrt(var_hat + BN_EPS)
+    xhat = (gamma / sigma_hat)[:, None] * w_hat.reshape(o, -1)
+    x = (gamma / sigma)[:, None] * w_low.reshape(o, -1)
+    yhat = beta - gamma * mu_hat / sigma_hat
+    y = beta - gamma * mu / sigma
+    c = kcomp.compensate(jnp.asarray(xhat), jnp.asarray(x),
+                         jnp.asarray(yhat), jnp.asarray(y), lam1, lam2)
+    return np.asarray(c)
+
+
+def dfmpc(plan: Plan, params: dict[str, np.ndarray], bits_low: int = 2,
+          bits_high: int = 6, lam1: float = 0.5, lam2: float = 0.0
+          ) -> tuple[dict[str, np.ndarray], dict[str, np.ndarray]]:
+    """Run DF-MPC. Returns (quantized params, coefficient vectors per pair)."""
+    q = dict(params)
+    convs = _convs(plan)
+    low_names = {p["low"] for p in plan["pairs"]}
+    high_names = {p["high"] for p in plan["pairs"]}
+    coeffs: dict[str, np.ndarray] = {}
+
+    for pair in plan["pairs"]:
+        lo, hi, off = pair["low"], pair["high"], pair.get("offset", 0)
+        bn = plan["bn_of"][lo]
+        w_l = np.asarray(params[f"{lo}.w"])
+        w_hat, delta, alpha = kternary.ternarize(jnp.asarray(w_l))
+        w_hat = np.asarray(w_hat)
+        if bits_low != 2:  # higher-precision "low" layer (e.g. 3/6, 6/6)
+            w_hat = np.asarray(kdorefa.quantize_uniform(jnp.asarray(w_l), bits_low))
+        gamma = np.asarray(params[f"{bn}.gamma"])
+        beta = np.asarray(params[f"{bn}.beta"])
+        mu = np.asarray(params[f"{bn}.mu"])
+        var = np.asarray(params[f"{bn}.var"])
+        if bits_low == 2:
+            mu_hat, var_hat = recalibrate_bn(w_l, w_hat, mu, var)
+        else:  # uniform low quantization preserves scale; stats unchanged
+            mu_hat, var_hat = mu, var
+        c = solve_c(w_l, w_hat, gamma, beta, mu, var, mu_hat, var_hat, lam1, lam2)
+        coeffs[lo] = c
+
+        q[f"{lo}.w"] = w_hat
+        q[f"{bn}.mu"] = mu_hat
+        q[f"{bn}.var"] = var_hat
+
+        w_hq = np.array(kdorefa.quantize_uniform(jnp.asarray(np.asarray(params[f"{hi}.w"])), bits_high))
+        hi_op = convs[hi]
+        o_l = w_l.shape[0]
+        if hi_op["groups"] == 1:
+            w_hq[:, off:off + o_l, :, :] *= c[None, :, None, None]
+        else:  # depthwise: channel j of the filter corresponds to input ch j
+            w_hq *= c[:, None, None, None]
+        q[f"{hi}.w"] = w_hq
+
+    # Unpaired convs + FC at the high bitwidth.
+    for name, op in convs.items():
+        if name in low_names or name in high_names:
+            continue
+        q[f"{name}.w"] = np.asarray(kdorefa.quantize_uniform(jnp.asarray(np.asarray(params[f"{name}.w"])), bits_high))
+    for op in plan["ops"]:
+        if op["op"] == "fc":
+            q[f"{op['name']}.w"] = np.asarray(
+                kdorefa.quantize_uniform(jnp.asarray(np.asarray(params[f"{op['name']}.w"])), bits_high))
+    return q, coeffs
+
+
+def naive_mixed(plan: Plan, params: dict[str, np.ndarray], bits_low: int = 2,
+                bits_high: int = 6, fold_alpha: bool = False) -> dict[str, np.ndarray]:
+    """'Original' rows of Tables 1/2: direct mixed-precision quantization,
+    no compensation, no BN recalibration. Paper-faithful default: the raw
+    {-1,0,+1} ternary pattern with alpha omitted (collapses to ~random);
+    fold_alpha=True gives the stronger scale-preserving variant."""
+    q = dict(params)
+    convs = _convs(plan)
+    low_names = {p["low"] for p in plan["pairs"]}
+    for name in convs:
+        w = np.asarray(params[f"{name}.w"])
+        if name in low_names and bits_low == 2:
+            w_hat, delta, alpha = kternary.ternarize(jnp.asarray(w))
+            q[f"{name}.w"] = np.asarray(w_hat) * (float(alpha) if fold_alpha else 1.0)
+        else:
+            bits = bits_low if name in low_names else bits_high
+            q[f"{name}.w"] = np.asarray(kdorefa.quantize_uniform(jnp.asarray(w), bits))
+    for op in plan["ops"]:
+        if op["op"] == "fc":
+            q[f"{op['name']}.w"] = np.asarray(
+                kdorefa.quantize_uniform(jnp.asarray(np.asarray(params[f"{op['name']}.w"])), bits_high))
+    return q

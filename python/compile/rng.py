@@ -1,0 +1,72 @@
+"""Counter-based splitmix64 RNG, mirrored bit-for-bit by rust/src/util/rng.rs.
+
+Every random quantity in the SynthShapes datasets is a pure function
+``slot(key, k)`` of an image key and a slot index, so Python (vectorized
+numpy generation for training) and Rust (scalar generation for the eval /
+serving path) produce *identical* streams with no shared state.
+
+Floats are derived as ``(u >> 40) / 2**24`` — exactly representable in f64
+and f32, so cross-language equality is exact, not approximate.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+SLOT_STRIDE = 0xD1B54A32D192ED03
+
+
+def splitmix64(x: int) -> int:
+    """Scalar splitmix64 finalizer (python ints, masked to 64 bits)."""
+    z = (x + GOLDEN) & MASK64
+    z = ((z ^ (z >> 30)) * MIX1) & MASK64
+    z = ((z ^ (z >> 27)) * MIX2) & MASK64
+    return z ^ (z >> 31)
+
+
+def image_key(seed: int, index: int) -> int:
+    """Key for image ``index`` of the dataset stream ``seed``."""
+    return splitmix64((seed & MASK64) ^ splitmix64(index & MASK64))
+
+
+def slot_u64(key: int, slot: int) -> int:
+    """Slot ``slot`` of stream ``key`` as a uint64."""
+    return splitmix64((key ^ ((slot * SLOT_STRIDE) & MASK64)) & MASK64)
+
+
+def slot_f(key: int, slot: int) -> float:
+    """Slot as a float in [0, 1) with 24 bits of mantissa."""
+    return (slot_u64(key, slot) >> 40) / 16777216.0
+
+
+# ---------------------------------------------------------------------------
+# Vectorized variants (numpy uint64 with C wrap-around semantics). These are
+# only used for bulk training-data generation; the scalar path above is the
+# cross-language reference and is what the golden tests pin down.
+# ---------------------------------------------------------------------------
+
+
+def _splitmix64_np(x: np.ndarray) -> np.ndarray:
+    with np.errstate(over="ignore"):
+        z = x + np.uint64(GOLDEN)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(MIX1)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(MIX2)
+        return z ^ (z >> np.uint64(31))
+
+
+def image_key_np(seed: int, indices: np.ndarray) -> np.ndarray:
+    idx = indices.astype(np.uint64)
+    return _splitmix64_np(np.uint64(seed & MASK64) ^ _splitmix64_np(idx))
+
+
+def slot_u64_np(keys: np.ndarray, slots: np.ndarray) -> np.ndarray:
+    with np.errstate(over="ignore"):
+        return _splitmix64_np(keys ^ (slots.astype(np.uint64) * np.uint64(SLOT_STRIDE)))
+
+
+def slot_f_np(keys: np.ndarray, slots: np.ndarray) -> np.ndarray:
+    return (slot_u64_np(keys, slots) >> np.uint64(40)).astype(np.float64) / 16777216.0

@@ -1,0 +1,120 @@
+"""Pre-train FP32 models on SynthShapes (the paper's "pre-trained
+full-precision model" input, substituted per DESIGN.md §2).
+
+SGD with Nesterov momentum + cosine schedule, BN running statistics
+updated with momentum 0.9 outside of grad. Saves DFMC checkpoints with
+eval accuracy recorded in the metadata so the rust side can sanity-check
+its own numbers against training-time numbers.
+
+Usage:
+    python -m compile.train --arch resnet18 --dataset cifar10-sim \
+        --steps 600 --batch 64 --out ../artifacts/models/resnet18_cifar10-sim.dfmc
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import archs, checkpoint, data, model
+
+
+def make_step(plan):
+    @jax.jit
+    def step(params, mom, x, y, lr, wd):
+        (loss, (logits, stats)), grads = jax.value_and_grad(
+            functools.partial(model.loss_fn, plan), has_aux=True)(params, x, y)
+        new_params = {}
+        new_mom = {}
+        for k, p in params.items():
+            field = k.split(".")[-1]
+            if field in ("mu", "var"):  # running stats: not gradient-trained
+                new_params[k] = p
+                new_mom[k] = mom[k]
+                continue
+            g = grads[k] + wd * p
+            m = 0.9 * mom[k] + g
+            new_params[k] = p - lr * (g + 0.9 * m)
+            new_mom[k] = m
+        # BN running stats update
+        for k, v in stats.items():
+            new_params[k] = model.BN_MOMENTUM * params[k] + (1 - model.BN_MOMENTUM) * v
+        acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return new_params, new_mom, loss, acc
+
+    return step
+
+
+def make_eval(plan):
+    @jax.jit
+    def ev(params, x, y):
+        logits = model.apply(plan, params, x, train=False)
+        return jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+    return ev
+
+
+def evaluate(plan, params, dataset: str, n: int = 2000, batch: int = 200) -> float:
+    spec = data.DATASETS[dataset]
+    ev = make_eval(plan)
+    correct = 0.0
+    for start in range(0, n, batch):
+        idx = np.arange(start, min(start + batch, n))
+        x, y = data.render_batch_np(spec["eval_seed"], idx, spec["classes"])
+        correct += float(ev(params, jnp.array(x), jnp.array(y)))
+    return correct / n
+
+
+def train(arch: str, dataset: str, steps: int, batch: int, lr: float,
+          wd: float = 1e-4, seed: int = 0, log_every: int = 50,
+          eval_n: int = 2000) -> tuple[dict, dict, float]:
+    spec = data.DATASETS[dataset]
+    plan = archs.build(arch, spec["classes"])
+    params = model.init_params(plan, seed)
+    mom = {k: jnp.zeros_like(v) for k, v in params.items()}
+    step = make_step(plan)
+    t0 = time.time()
+    for i in range(steps):
+        idx = np.arange(i * batch, (i + 1) * batch)
+        x, y = data.render_batch_np(spec["train_seed"], idx, spec["classes"])
+        cur_lr = lr * 0.5 * (1 + np.cos(np.pi * i / steps))
+        params, mom, loss, acc = step(params, mom, jnp.array(x), jnp.array(y),
+                                      jnp.float32(cur_lr), jnp.float32(wd))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"[{arch}/{dataset}] step {i:4d} loss {float(loss):.4f} "
+                  f"acc {float(acc):.3f} lr {cur_lr:.4f} ({time.time()-t0:.0f}s)",
+                  flush=True)
+    test_acc = evaluate(plan, params, dataset, n=eval_n)
+    print(f"[{arch}/{dataset}] final eval acc {test_acc:.4f}", flush=True)
+    return plan, params, test_acc
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--dataset", required=True, choices=list(data.DATASETS))
+    p.add_argument("--steps", type=int, default=600)
+    p.add_argument("--batch", type=int, default=64)
+    p.add_argument("--lr", type=float, default=0.05)
+    p.add_argument("--wd", type=float, default=1e-4)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--eval-n", type=int, default=2000)
+    p.add_argument("--out", required=True)
+    args = p.parse_args()
+    plan, params, acc = train(args.arch, args.dataset, args.steps, args.batch,
+                              args.lr, args.wd, args.seed, eval_n=args.eval_n)
+    tensors = {name: np.asarray(params[name]) for name, _ in model.param_order(plan)}
+    meta = {"arch": args.arch, "dataset": args.dataset, "fp32_acc": acc,
+            "steps": args.steps, "batch": args.batch,
+            "num_classes": data.DATASETS[args.dataset]["classes"]}
+    checkpoint.save(args.out, tensors, meta)
+    print(f"saved {args.out}")
+
+
+if __name__ == "__main__":
+    main()

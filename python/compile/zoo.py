@@ -1,0 +1,52 @@
+"""Model-zoo manifest: which (arch, dataset) checkpoints exist and how they
+were trained. `python -m compile.zoo` trains every missing checkpoint
+(`make models`). Step budgets are sized for the 1-core CPU sandbox.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+# (arch, dataset, steps, lr) — one row per model used by the paper's tables.
+ZOO = [
+    ("resnet18", "cifar10-sim", 250, 0.08),   # Table 1
+    ("resnet56", "cifar10-sim", 500, 0.05),   # Table 1, Fig 3, Fig 5
+    ("vgg16", "cifar10-sim", 200, 0.08),      # Table 1
+    ("resnet18", "cifar100-sim", 300, 0.08),  # Table 2
+    ("vgg16", "cifar100-sim", 300, 0.08),     # Table 2
+    ("resnet18", "imagenet-sim", 350, 0.08),  # Table 3, Fig 4
+    ("resnet50", "imagenet-sim", 300, 0.08),  # Table 3
+    ("resnet101", "imagenet-sim", 300, 0.08),  # Table 3
+    ("densenet121", "imagenet-sim", 250, 0.08),  # Table 4
+    ("mobilenetv2", "imagenet-sim", 600, 0.05),  # Table 4
+]
+
+
+def ckpt_path(root: str, arch: str, dataset: str) -> str:
+    return os.path.join(root, "models", f"{arch}_{dataset}.dfmc")
+
+
+def main() -> None:
+    from . import checkpoint, data, model, train  # lazy: jax import is slow
+
+    root = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    os.makedirs(os.path.join(root, "models"), exist_ok=True)
+    for arch, dataset, steps, lr in ZOO:
+        path = ckpt_path(root, arch, dataset)
+        if os.path.exists(path):
+            print(f"skip {path} (exists)", flush=True)
+            continue
+        plan, params, acc = train.train(arch, dataset, steps=steps, batch=64,
+                                        lr=lr, eval_n=2000)
+        tensors = {name: __import__("numpy").asarray(params[name])
+                   for name, _ in model.param_order(plan)}
+        meta = {"arch": arch, "dataset": dataset, "fp32_acc": acc,
+                "steps": steps, "batch": 64,
+                "num_classes": data.DATASETS[dataset]["classes"]}
+        checkpoint.save(path, tensors, meta)
+        print(f"saved {path} acc={acc:.4f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

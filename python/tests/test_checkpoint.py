@@ -1,0 +1,39 @@
+"""DFMC checkpoint format round-trip (the python half of the contract the
+rust loader is tested against)."""
+
+import numpy as np
+import pytest
+
+from compile import checkpoint
+
+
+def test_roundtrip(tmp_path):
+    p = tmp_path / "m.dfmc"
+    tensors = {
+        "a.w": np.random.RandomState(0).randn(4, 3, 3, 3).astype(np.float32),
+        "b.gamma": np.ones(7, np.float32) * 1.5,
+        "fc.b": np.zeros(10, np.float32),
+    }
+    meta = {"arch": "tiny", "fp32_acc": 0.87, "num_classes": 10}
+    checkpoint.save(str(p), tensors, meta)
+    back, m2 = checkpoint.load(str(p))
+    assert m2 == meta
+    assert list(back) == list(tensors)  # order preserved
+    for k in tensors:
+        assert np.array_equal(back[k], tensors[k])
+
+
+def test_alignment(tmp_path):
+    p = tmp_path / "m.dfmc"
+    # 3 floats = 12 bytes -> next offset must be 16-aligned
+    checkpoint.save(str(p), {"x": np.ones(3, np.float32), "y": np.ones(5, np.float32)}, {})
+    back, _ = checkpoint.load(str(p))
+    assert back["y"].shape == (5,)
+    assert np.array_equal(back["y"], np.ones(5, np.float32))
+
+
+def test_bad_magic(tmp_path):
+    p = tmp_path / "bad.dfmc"
+    p.write_bytes(b"NOT A CHECKPOINT")
+    with pytest.raises(AssertionError):
+        checkpoint.load(str(p))

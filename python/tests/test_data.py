@@ -1,0 +1,87 @@
+"""SynthShapes dataset: determinism, scalar/vector agreement, class
+balance, shard IO — the contract the rust mirror is golden-tested
+against."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data, rng
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+@given(seed=st.integers(0, 2**31), index=st.integers(0, 2**31))
+def test_scalar_vector_agree(seed, index):
+    img, cls = data.render_image_scalar(seed, index, 100)
+    xb, yb = data.render_batch_np(seed, np.array([index]), 100)
+    assert yb[0] == cls
+    assert np.array_equal(xb[0], img)
+
+
+def test_determinism_and_independence():
+    a1, _ = data.render_batch_np(9001, np.arange(4), 10)
+    a2, _ = data.render_batch_np(9001, np.arange(4), 10)
+    b, _ = data.render_batch_np(9002, np.arange(4), 10)
+    assert np.array_equal(a1, a2)
+    assert not np.array_equal(a1, b)
+
+
+def test_pixel_range_and_shape():
+    x, y = data.render_batch_np(1001, np.arange(32), 200)
+    assert x.shape == (32, 3, 32, 32)
+    assert x.dtype == np.float32
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert (y >= 0).all() and (y < 200).all()
+
+
+def test_class_coverage():
+    y = data.labels_np(9001, np.arange(2000), 10)
+    counts = np.bincount(y, minlength=10)
+    assert (counts > 100).all(), counts  # roughly balanced
+
+
+def test_class_factors_bijective():
+    seen = set()
+    for cls in range(200):
+        f = data.class_factors(cls)
+        assert f not in seen
+        seen.add(f)
+
+
+def test_shard_roundtrip(tmp_path):
+    p = tmp_path / "shard.bin"
+    data.write_eval_shard(str(p), "cifar10-sim", 32)
+    x, y, ncls = data.read_eval_shard(str(p))
+    assert ncls == 10
+    want, wanty = data.render_batch_np(9001, np.arange(32), 10)
+    assert np.array_equal(x, want)
+    assert np.array_equal(y, wanty)
+
+
+def test_rng_float_has_24bit_grid():
+    # floats must be representable as k / 2^24 (cross-language exactness)
+    key = rng.image_key(42, 42)
+    for s in range(100):
+        f = rng.slot_f(key, s)
+        assert f * 16777216.0 == int(f * 16777216.0)
+
+
+@given(seed=st.integers(0, 2**63 - 1), index=st.integers(0, 2**63 - 1))
+def test_rng_keys_in_u64(seed, index):
+    k = rng.image_key(seed, index)
+    assert 0 <= k < 2**64
+    u = rng.slot_u64(k, 5)
+    assert 0 <= u < 2**64
+    assert 0.0 <= rng.slot_f(k, 5) < 1.0
+
+
+def test_vectorized_rng_matches_scalar():
+    keys = rng.image_key_np(1001, np.arange(16))
+    for i in range(16):
+        assert int(keys[i]) == rng.image_key(1001, i)
+    slots = np.full(16, 7)
+    us = rng.slot_u64_np(keys, slots)
+    for i in range(16):
+        assert int(us[i]) == rng.slot_u64(int(keys[i]), 7)

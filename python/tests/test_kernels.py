@@ -1,0 +1,154 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py), with hypothesis
+sweeping shapes and value ranges — the build-time correctness gate for
+everything that lowers into the AOT artifacts."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import compensate, dorefa, qmatmul, ref, ternary
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def rnd(shape, seed=0, scale=1.0):
+    r = np.random.RandomState(seed)
+    return (r.randn(*shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_matches_ref(m, k, n, seed):
+    a = rnd((m, k), seed)
+    b = rnd((k, n), seed + 1)
+    got = qmatmul.qmatmul(jnp.asarray(a), jnp.asarray(b))
+    want = ref.matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_qmatmul_block_boundary_shapes():
+    # exact multiples and off-by-one around the 128 block
+    for m, k, n in [(128, 128, 128), (127, 129, 128), (1, 1, 1), (256, 64, 130)]:
+        a, b = rnd((m, k), m), rnd((k, n), n)
+        got = qmatmul.qmatmul(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-5, atol=1e-4)
+
+
+def test_qmatmul_custom_blocks():
+    a, b = rnd((70, 50), 1), rnd((50, 90), 2)
+    got = qmatmul.qmatmul(jnp.asarray(a), jnp.asarray(b), bm=32, bn=32, bk=16)
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ternary (Eq. 3/4)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    o=st.integers(1, 16),
+    i=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.01, 10.0),
+)
+def test_ternary_matches_ref(o, i, seed, scale):
+    w = rnd((o, i, 3, 3), seed, scale)
+    w_hat, delta, alpha = ternary.ternarize(jnp.asarray(w))
+    want = ref.ternary_ref(jnp.asarray(w), delta)
+    assert np.array_equal(np.asarray(w_hat), np.asarray(want))
+    d_ref, a_ref = ref.ternary_stats(jnp.asarray(w))
+    assert np.isclose(float(delta), float(d_ref))
+    assert np.isclose(float(alpha), float(a_ref))
+
+
+def test_ternary_values_and_threshold():
+    w = rnd((8, 8, 3, 3), 3)
+    w_hat, delta, alpha = ternary.ternarize(jnp.asarray(w))
+    vals = np.unique(np.asarray(w_hat))
+    assert set(vals).issubset({-1.0, 0.0, 1.0})
+    assert float(delta) == pytest.approx(0.7 * np.abs(w).mean(), rel=1e-5)
+    assert float(alpha) > float(delta)
+
+
+# ---------------------------------------------------------------------------
+# dorefa (Eq. 6)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 5000),
+    k=st.sampled_from([2, 3, 4, 6, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dorefa_matches_ref(n, k, seed):
+    w = rnd((n,), seed)
+    got = dorefa.quantize_uniform(jnp.asarray(w), k)
+    want = ref.dorefa_ref(jnp.asarray(w), k, jnp.maximum(jnp.max(jnp.abs(w)), 1e-12))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@given(k=st.sampled_from([2, 3, 4, 6]), seed=st.integers(0, 1000))
+def test_dorefa_error_bound(k, seed):
+    w = rnd((2048,), seed)
+    q = np.asarray(dorefa.quantize_uniform(jnp.asarray(w), k))
+    step = 2.0 * np.abs(w).max() / (2**k - 1)
+    assert np.abs(w - q).max() <= step / 2 + 1e-5
+
+
+def test_dorefa_level_count():
+    w = rnd((10000,), 7)
+    q = np.asarray(dorefa.quantize_uniform(jnp.asarray(w), 3))
+    assert len(np.unique(np.round(q, 5))) <= 8
+
+
+# ---------------------------------------------------------------------------
+# compensate (Eq. 27)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    i=st.integers(1, 32),
+    d=st.integers(1, 300),
+    lam1=st.floats(0.0, 1.0),
+    lam2=st.floats(0.0, 0.01),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compensate_matches_ref(i, d, lam1, lam2, seed):
+    xh = rnd((i, d), seed)
+    x = rnd((i, d), seed + 1)
+    yh = rnd((i,), seed + 2)
+    y = rnd((i,), seed + 3)
+    got = compensate.compensate(jnp.asarray(xh), jnp.asarray(x), jnp.asarray(yh),
+                                jnp.asarray(y), lam1, lam2)
+    want = ref.compensate_ref(jnp.asarray(xh), jnp.asarray(x), jnp.asarray(yh),
+                              jnp.asarray(y), lam1, lam2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_compensate_identity_when_lossless():
+    xh = rnd((8, 64), 9)
+    yh = rnd((8,), 10)
+    c = np.asarray(compensate.compensate(jnp.asarray(xh), jnp.asarray(xh),
+                                         jnp.asarray(yh), jnp.asarray(yh), 0.5, 0.0))
+    np.testing.assert_allclose(c, np.ones(8), rtol=1e-5)
+
+
+def test_compensate_nonnegative():
+    xh = rnd((16, 32), 11)
+    x = -xh  # maximally anti-correlated -> unclamped c would be negative
+    y = rnd((16,), 12)
+    c = np.asarray(compensate.compensate(jnp.asarray(xh), jnp.asarray(x),
+                                         jnp.asarray(y), jnp.asarray(y), 0.0, 0.0))
+    assert (c >= 0).all()
+    np.testing.assert_allclose(c, np.zeros(16), atol=1e-6)

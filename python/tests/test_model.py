@@ -1,0 +1,117 @@
+"""L2 plan-IR interpreter: shapes, parameter ordering, pallas-path
+equivalence, and a smoke training step for every architecture family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import archs, data, model, train
+
+TINY_PLAN = {
+    "name": "tiny", "input": [3, 8, 8], "num_classes": 4,
+    "ops": [
+        {"op": "conv", "name": "c1", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c1_bn", "ch": 4},
+        {"op": "relu"},
+        {"op": "conv", "name": "c2", "cin": 4, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c2_bn", "ch": 8},
+        {"op": "relu"},
+        {"op": "gap"},
+        {"op": "fc", "name": "fc", "cin": 8, "cout": 4},
+    ],
+    "pairs": [{"low": "c1", "high": "c2", "offset": 0}],
+    "bn_of": {"c1": "c1_bn", "c2": "c2_bn"},
+}
+
+
+@pytest.mark.parametrize("arch", archs.ARCHS)
+def test_apply_shapes(arch):
+    plan = archs.build(arch, 10)
+    params = model.init_params(plan, 0)
+    x = jnp.zeros((2, 3, 32, 32))
+    logits = model.apply(plan, params, x)
+    assert logits.shape == (2, 10)
+
+
+@pytest.mark.parametrize("arch", archs.ARCHS)
+def test_param_order_complete(arch):
+    plan = archs.build(arch, 10)
+    params = model.init_params(plan, 0)
+    order = model.param_order(plan)
+    assert len(order) == len(params)
+    for name, shape in order:
+        assert params[name].shape == shape
+
+
+def test_pairs_reference_real_convs():
+    for arch in archs.ARCHS:
+        plan = archs.build(arch, 10)
+        convs = {op["name"] for op in plan["ops"] if op["op"] == "conv"}
+        for p in plan["pairs"]:
+            assert p["low"] in convs and p["high"] in convs
+            assert p["low"] in plan["bn_of"]
+
+
+def test_flatten_roundtrip():
+    plan = archs.build("resnet18", 10)
+    params = model.init_params(plan, 1)
+    flat = model.flatten_params(plan, params)
+    back = model.unflatten_params(plan, flat)
+    for k in params:
+        assert np.array_equal(np.asarray(params[k]), np.asarray(back[k]))
+
+
+def test_pallas_path_matches_xla_path():
+    params = model.init_params(TINY_PLAN, 2)
+    x = jnp.asarray(np.random.RandomState(0).rand(2, 3, 8, 8).astype(np.float32))
+    a = model.apply(TINY_PLAN, params, x, use_pallas=False)
+    b = model.apply(TINY_PLAN, params, x, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_train_mode_returns_batch_stats():
+    params = model.init_params(TINY_PLAN, 3)
+    x = jnp.asarray(np.random.RandomState(1).rand(8, 3, 8, 8).astype(np.float32))
+    logits, stats = model.apply(TINY_PLAN, params, x, train=True)
+    assert logits.shape == (8, 4)
+    assert set(stats) == {"c1_bn.mu", "c1_bn.var", "c2_bn.mu", "c2_bn.var"}
+
+
+def test_training_step_reduces_loss():
+    step = train.make_step(TINY_PLAN)
+    params = model.init_params(TINY_PLAN, 4)
+    mom = {k: jnp.zeros_like(v) for k, v in params.items()}
+    r = np.random.RandomState(2)
+    x = jnp.asarray(r.rand(16, 3, 8, 8).astype(np.float32))
+    y = jnp.asarray((r.rand(16) * 4).astype(np.int32))
+    losses = []
+    for _ in range(12):
+        params, mom, loss, acc = step(params, mom, x, y, jnp.float32(0.05), jnp.float32(0.0))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_residual_downsample_params_present():
+    plan = archs.build("resnet18", 10)
+    names = [n for n, _ in model.param_order(plan)]
+    assert any("_ds.w" in n for n in names)
+    assert any("_dsbn.gamma" in n for n in names)
+
+
+def test_eval_on_real_checkpoint_if_available():
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "artifacts", "models", "resnet18_cifar10-sim.dfmc")
+    if not os.path.exists(path):
+        pytest.skip("zoo not trained yet")
+    from compile import checkpoint
+    tensors, meta = checkpoint.load(path)
+    plan = archs.build(meta["arch"], meta["num_classes"])
+    params = {k: jnp.asarray(v) for k, v in tensors.items()}
+    spec = data.DATASETS[meta["dataset"]]
+    x, y = data.render_batch_np(spec["eval_seed"], np.arange(200), spec["classes"])
+    logits = model.apply(plan, params, jnp.asarray(x))
+    acc = float((np.argmax(np.asarray(logits), 1) == y).mean())
+    # within 10 points of the recorded training-time eval accuracy
+    assert abs(acc - meta["fp32_acc"]) < 0.10, (acc, meta["fp32_acc"])

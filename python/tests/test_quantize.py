@@ -1,0 +1,134 @@
+"""DF-MPC python implementation: Algorithm 1 invariants and the
+properties the paper proves (closed-form optimality, c >= 0, loss
+reduction)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import archs, model, quantize
+from compile.kernels import ref
+
+
+def tiny_params(plan, seed=0):
+    return {k: np.asarray(v) for k, v in model.init_params(plan, seed).items()}
+
+
+@pytest.fixture(scope="module")
+def r18():
+    plan = archs.build("resnet18", 10)
+    return plan, tiny_params(plan)
+
+
+def test_dfmpc_produces_ternary_low_layers(r18):
+    plan, params = r18
+    q, coeffs = quantize.dfmpc(plan, params)
+    for pair in plan["pairs"]:
+        vals = np.unique(q[f"{pair['low']}.w"])
+        assert set(vals).issubset({-1.0, 0.0, 1.0}), pair["low"]
+        assert (coeffs[pair["low"]] >= 0).all()
+
+
+def test_dfmpc_high_layers_are_scaled_grids(r18):
+    plan, params = r18
+    q, coeffs = quantize.dfmpc(plan, params)
+    pair = plan["pairs"][0]
+    w = q[f"{pair['high']}.w"]
+    c = coeffs[pair["low"]]
+    # undo the compensation on the paired slice -> exact 6-bit grid
+    off = pair.get("offset", 0)
+    o_l = params[f"{pair['low']}.w"].shape[0]
+    w_unscaled = w.copy()
+    safe = np.where(c > 1e-9, c, 1.0)
+    w_unscaled[:, off:off + o_l] /= safe[None, :, None, None]
+    w6 = np.asarray(ref.dorefa_ref(jnp.asarray(params[f"{pair['high']}.w"]), 6,
+                                   jnp.max(jnp.abs(params[f"{pair['high']}.w"]))))
+    np.testing.assert_allclose(w_unscaled[:, off:off + o_l][:, c > 1e-9],
+                               w6[:, off:off + o_l][:, c > 1e-9], rtol=1e-4, atol=1e-5)
+
+
+def test_recalibrate_bn_scaling_laws():
+    w = np.full((2, 1, 1, 2), 2.0, np.float32)
+    w_hat = np.ones_like(w)
+    mu = np.array([4.0, -2.0], np.float32)
+    var = np.array([8.0, 2.0], np.float32)
+    mu_hat, var_hat = quantize.recalibrate_bn(w, w_hat, mu, var)
+    np.testing.assert_allclose(mu_hat, mu * 0.5)
+    np.testing.assert_allclose(var_hat, var * 0.25)
+
+
+def test_solve_c_lossless_is_identity():
+    r = np.random.RandomState(5)
+    w = r.randn(6, 4, 3, 3).astype(np.float32)
+    gamma = np.ones(6, np.float32)
+    beta = r.randn(6).astype(np.float32)
+    mu = r.randn(6).astype(np.float32)
+    var = (r.rand(6) + 0.5).astype(np.float32)
+    c = quantize.solve_c(w, w, gamma, beta, mu, var, mu, var, 0.5, 0.0)
+    np.testing.assert_allclose(c, np.ones(6), rtol=1e-4)
+
+
+def test_surrogate_loss_never_increases():
+    """c* from Eq. 27 must dominate c=1 on the data-free surrogate."""
+    r = np.random.RandomState(6)
+    for trial in range(5):
+        w = r.randn(8, 4, 3, 3).astype(np.float32)
+        w_hat, _, _ = __import__("compile.kernels.ternary", fromlist=["ternarize"]).ternarize(jnp.asarray(w))
+        w_hat = np.asarray(w_hat)
+        gamma = (r.rand(8) + 0.5).astype(np.float32)
+        beta = r.randn(8).astype(np.float32) * 0.2
+        mu = r.randn(8).astype(np.float32) * 0.2
+        var = (r.rand(8) + 0.5).astype(np.float32)
+        mu_hat, var_hat = quantize.recalibrate_bn(w, w_hat, mu, var)
+        c = quantize.solve_c(w, w_hat, gamma, beta, mu, var, mu_hat, var_hat, 0.5, 0.0)
+
+        def surrogate(cv):
+            sig = np.sqrt(var + 1e-5)
+            sig_h = np.sqrt(var_hat + 1e-5)
+            o = w.shape[0]
+            gam = (cv[:, None] * (gamma / sig_h)[:, None] * w_hat.reshape(o, -1)
+                   - (gamma / sig)[:, None] * w.reshape(o, -1))
+            yh = beta - gamma * mu_hat / sig_h
+            y = beta - gamma * mu / sig
+            th = cv * yh - y
+            return (gam ** 2).sum() + 0.5 * (th ** 2).sum()
+
+        assert surrogate(c) <= surrogate(np.ones(8)) + 1e-4
+
+
+def test_dfmpc_66_keeps_bn_stats(r18):
+    plan, params = r18
+    q, _ = quantize.dfmpc(plan, params, bits_low=6, bits_high=6)
+    pair = plan["pairs"][0]
+    bn = plan["bn_of"][pair["low"]]
+    np.testing.assert_array_equal(q[f"{bn}.mu"], params[f"{bn}.mu"])
+    np.testing.assert_array_equal(q[f"{bn}.var"], params[f"{bn}.var"])
+
+
+def test_naive_keeps_alpha_scale(r18):
+    plan, params = r18
+    q = quantize.naive_mixed(plan, params, fold_alpha=True)
+    pair = plan["pairs"][0]
+    w = q[f"{pair['low']}.w"]
+    vals = np.unique(np.abs(w[np.abs(w) > 0]))
+    assert len(vals) == 1  # {0, ±alpha}
+    assert vals[0] > 0
+
+
+def test_dfmpc_runs_on_all_archs():
+    for arch in archs.ARCHS:
+        plan = archs.build(arch, 10)
+        params = tiny_params(plan, 1)
+        q, coeffs = quantize.dfmpc(plan, params)
+        assert len(coeffs) == len(plan["pairs"]), arch
+        logits = model.apply(plan, {k: jnp.asarray(v) for k, v in q.items()},
+                             jnp.zeros((1, 3, 32, 32)))
+        assert np.isfinite(np.asarray(logits)).all(), arch
+
+
+def test_naive_default_is_raw_ternary(r18):
+    plan, params = r18
+    q = quantize.naive_mixed(plan, params)
+    pair = plan["pairs"][0]
+    vals = np.unique(q[f"{pair['low']}.w"])
+    assert set(vals).issubset({-1.0, 0.0, 1.0})

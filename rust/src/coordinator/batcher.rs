@@ -1,0 +1,149 @@
+//! Dynamic request batcher — the serving-side coordinator component.
+//!
+//! Single-image classification requests are queued; a batcher thread
+//! drains the queue into batches of up to `max_batch`, waiting at most
+//! `max_wait` for stragglers (the classic dynamic-batching policy of
+//! serving systems), executes them on the PJRT lane, and scatters the
+//! per-image results back to the callers.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::PjrtWorker;
+use crate::tensor::ops::{argmax_rows, softmax_rows};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// One classification answer.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub class: usize,
+    pub confidence: f32,
+    /// total time inside the serving stack
+    pub latency_ms: f64,
+    /// how many requests shared the executed batch
+    pub batch_size: usize,
+}
+
+struct Request {
+    image: Tensor, // CHW
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<Prediction>>,
+}
+
+/// Dynamic batcher driving one model id on the PJRT worker.
+pub struct Batcher {
+    tx: mpsc::Sender<Request>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(worker: Arc<PjrtWorker>, model_id: String, cfg: BatcherConfig) -> Batcher {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let handle = thread::Builder::new()
+            .name("dfmpc-batcher".into())
+            .spawn(move || Self::run(worker, model_id, cfg, rx))
+            .expect("spawn batcher");
+        Batcher { tx, handle: Some(handle) }
+    }
+
+    fn run(worker: Arc<PjrtWorker>, model_id: String, cfg: BatcherConfig, rx: mpsc::Receiver<Request>) {
+        loop {
+            // block for the first request of a batch
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => break, // all senders dropped
+            };
+            let mut batch = vec![first];
+            let deadline = Instant::now() + cfg.max_wait;
+            while batch.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            Self::execute(&worker, &model_id, batch);
+        }
+    }
+
+    fn execute(worker: &PjrtWorker, model_id: &str, batch: Vec<Request>) {
+        let n = batch.len();
+        let chw: Vec<usize> = batch[0].image.shape.clone();
+        let per: usize = chw.iter().product();
+        let mut data = Vec::with_capacity(n * per);
+        for r in &batch {
+            data.extend_from_slice(&r.image.data);
+        }
+        let x = Tensor::new(vec![n, chw[0], chw[1], chw[2]], data);
+        match worker.infer(model_id, x) {
+            Ok(logits) => {
+                let probs = softmax_rows(&logits);
+                let preds = argmax_rows(&logits);
+                for (i, req) in batch.into_iter().enumerate() {
+                    let p = Prediction {
+                        class: preds[i],
+                        confidence: probs.at2(i, preds[i]),
+                        latency_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
+                        batch_size: n,
+                    };
+                    let _ = req.reply.send(Ok(p));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in batch {
+                    let _ = req.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+
+    /// Enqueue one CHW image; blocks until its batch completes.
+    pub fn classify(&self, image: Tensor) -> Result<Prediction> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request { image, enqueued: Instant::now(), reply: rtx })
+            .map_err(|_| anyhow!("batcher stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("batcher dropped request"))?
+    }
+
+    /// Async enqueue returning the reply channel.
+    pub fn classify_async(&self, image: Tensor) -> Result<mpsc::Receiver<Result<Prediction>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request { image, enqueued: Instant::now(), reply: rtx })
+            .map_err(|_| anyhow!("batcher stopped"))?;
+        Ok(rrx)
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // closing tx ends the run loop
+        let (dead_tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

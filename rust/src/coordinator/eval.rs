@@ -1,0 +1,89 @@
+//! Batched dataset evaluation pipeline: streams an eval shard through
+//! either the PJRT runtime (production path) or the pure-rust engine
+//! (reference path) and reports top-1 accuracy + latency.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::EvalShard;
+use crate::infer::Engine;
+use crate::model::{Checkpoint, Plan};
+use crate::runtime::PjrtWorker;
+use crate::tensor::ops::argmax_rows;
+
+use super::metrics::{AccuracyCounter, LatencyRecorder, LatencySummary};
+
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub images: usize,
+    pub wall_s: f64,
+    pub images_per_s: f64,
+    pub batch_latency: LatencySummary,
+}
+
+/// Evaluate a model variant already loaded in the PJRT worker under `id`.
+pub fn eval_pjrt(
+    worker: &PjrtWorker,
+    id: &str,
+    shard: &EvalShard,
+    batch: usize,
+    limit: Option<usize>,
+) -> Result<EvalResult> {
+    let n = limit.unwrap_or(shard.n()).min(shard.n());
+    let mut acc = AccuracyCounter::default();
+    let mut lat = LatencyRecorder::new();
+    let t0 = Instant::now();
+    let mut start = 0;
+    while start < n {
+        let len = batch.min(n - start);
+        let (x, labels) = shard.batch(start, len);
+        let bt = Instant::now();
+        let logits = worker.infer(id, x)?;
+        lat.record_since(bt);
+        acc.update(&argmax_rows(&logits), labels);
+        start += len;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(EvalResult {
+        accuracy: acc.value(),
+        images: n,
+        wall_s: wall,
+        images_per_s: n as f64 / wall,
+        batch_latency: lat.summary(),
+    })
+}
+
+/// Evaluate with the pure-rust reference engine (no PJRT).
+pub fn eval_reference(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    shard: &EvalShard,
+    batch: usize,
+    limit: Option<usize>,
+) -> Result<EvalResult> {
+    let engine = Engine::new(plan, ckpt);
+    let n = limit.unwrap_or(shard.n()).min(shard.n());
+    let mut acc = AccuracyCounter::default();
+    let mut lat = LatencyRecorder::new();
+    let t0 = Instant::now();
+    let mut start = 0;
+    while start < n {
+        let len = batch.min(n - start);
+        let (x, labels) = shard.batch(start, len);
+        let bt = Instant::now();
+        let logits = engine.forward(&x)?;
+        lat.record_since(bt);
+        acc.update(&argmax_rows(&logits), labels);
+        start += len;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(EvalResult {
+        accuracy: acc.value(),
+        images: n,
+        wall_s: wall,
+        images_per_s: n as f64 / wall,
+        batch_latency: lat.summary(),
+    })
+}

@@ -1,0 +1,117 @@
+//! Serving/eval metrics: latency percentiles, throughput, accuracy.
+
+use std::time::Instant;
+
+use crate::util::{mean, percentile};
+
+/// Accumulates request latencies and computes summary statistics.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyRecorder {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn record_since(&mut self, start: Instant) {
+        self.record(start.elapsed().as_secs_f64() * 1e3);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ms.is_empty()
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            n: s.len(),
+            mean_ms: mean(&s),
+            p50_ms: percentile(&s, 50.0),
+            p90_ms: percentile(&s, 90.0),
+            p99_ms: percentile(&s, 99.0),
+            max_ms: s.last().copied().unwrap_or(f64::NAN),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl std::fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.2}ms p50={:.2}ms p90={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.n, self.mean_ms, self.p50_ms, self.p90_ms, self.p99_ms, self.max_ms
+        )
+    }
+}
+
+/// Simple running accuracy counter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AccuracyCounter {
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl AccuracyCounter {
+    pub fn update(&mut self, preds: &[usize], labels: &[usize]) {
+        assert_eq!(preds.len(), labels.len());
+        self.correct += preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+        self.total += labels.len();
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary_percentiles() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        let s = r.summary();
+        assert_eq!(s.n, 100);
+        assert!((s.p50_ms - 50.0).abs() <= 1.0);
+        assert!((s.p99_ms - 99.0).abs() <= 1.0);
+        assert_eq!(s.max_ms, 100.0);
+    }
+
+    #[test]
+    fn accuracy_counter() {
+        let mut a = AccuracyCounter::default();
+        a.update(&[1, 2, 3], &[1, 0, 3]);
+        a.update(&[5], &[5]);
+        assert_eq!(a.correct, 3);
+        assert_eq!(a.total, 4);
+        assert!((a.value() - 0.75).abs() < 1e-12);
+    }
+}

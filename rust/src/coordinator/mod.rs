@@ -1,0 +1,14 @@
+//! L3 coordinator: quantization-sweep scheduling, batched evaluation,
+//! dynamic-batching model serving, and metrics.
+
+pub mod batcher;
+pub mod eval;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig, Prediction};
+pub use eval::{eval_pjrt, eval_reference, EvalResult};
+pub use metrics::{AccuracyCounter, LatencyRecorder, LatencySummary};
+pub use scheduler::{lambda_grid, run_sweep, QuantJob, QuantOutcome};
+pub use server::{Client, Server};

@@ -1,0 +1,86 @@
+//! Quantization-sweep scheduler: fans a grid of (model, method) jobs over
+//! the thread pool. The quantization itself is pure-CPU weight math
+//! (data-free — that's the paper's whole point), so jobs parallelize
+//! trivially; evaluation afterwards goes through the single PJRT lane.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::{Checkpoint, Plan};
+use crate::quant::{self, Method};
+use crate::util::threadpool::ThreadPool;
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct QuantJob {
+    pub model_id: String,
+    pub method: Method,
+}
+
+pub struct QuantOutcome {
+    pub job: QuantJob,
+    pub ckpt: Result<Checkpoint>,
+    pub quant_ms: f64,
+    pub size: quant::SizeReport,
+}
+
+/// Run all jobs; `lookup` resolves a model id to its (plan, checkpoint).
+pub fn run_sweep(
+    pool: &ThreadPool,
+    jobs: Vec<QuantJob>,
+    lookup: impl Fn(&str) -> Result<(Arc<Plan>, Arc<Checkpoint>)> + Send + Sync + 'static,
+) -> Vec<QuantOutcome> {
+    pool.map(jobs, move |job| {
+        let (plan, ckpt) = match lookup(&job.model_id) {
+            Ok(x) => x,
+            Err(e) => {
+                return QuantOutcome {
+                    size: quant::SizeReport { mb: f64::NAN, fp32_mb: f64::NAN, avg_bits: f64::NAN },
+                    job,
+                    ckpt: Err(e),
+                    quant_ms: 0.0,
+                }
+            }
+        };
+        let sw = Stopwatch::start();
+        let out = job.method.apply(&plan, &ckpt);
+        let quant_ms = sw.millis();
+        let size = quant::model_size(&plan, &job.method);
+        QuantOutcome { job, ckpt: out, quant_ms, size }
+    })
+}
+
+/// The λ1 × λ2 ablation grid of the paper's Fig. 3.
+pub fn lambda_grid(lam1: &[f32], lam2: &[f32], bits_low: u32, bits_high: u32) -> Vec<Method> {
+    let mut out = Vec::new();
+    for &l1 in lam1 {
+        for &l2 in lam2 {
+            out.push(Method::Dfmpc(quant::DfmpcConfig {
+                bits_low,
+                bits_high,
+                lam1: l1,
+                lam2: l2,
+            }));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_grid_covers_product() {
+        let g = lambda_grid(&[0.1, 0.5], &[0.0, 0.01], 2, 6);
+        assert_eq!(g.len(), 4);
+        match g[3] {
+            Method::Dfmpc(cfg) => {
+                assert_eq!(cfg.lam1, 0.5);
+                assert_eq!(cfg.lam2, 0.01);
+            }
+            _ => panic!("expected dfmpc"),
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! TCP model server: newline-delimited JSON protocol over plain sockets
+//! (tokio is unavailable offline; a thread-per-connection accept loop over
+//! the dynamic batcher serves the same role).
+//!
+//! Request (one line):
+//!   {"op": "classify", "dataset": "cifar10-sim", "index": 7}
+//!   {"op": "classify", "pixels": [ ...3*32*32 floats... ]}
+//!   {"op": "status"}
+//! Response (one line):
+//!   {"ok": true, "class": 3, "confidence": 0.97, "latency_ms": 1.2,
+//!    "batch_size": 4}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::Batcher;
+use crate::data::synth;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    pub stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve the batcher's model.
+    pub fn start(addr: &str, batcher: Arc<Batcher>, model_name: String) -> Result<Server> {
+        let listener = TcpListener::bind(addr).context("binding server")?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stats = Arc::new(ServerStats {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let (stats2, stop2) = (Arc::clone(&stats), Arc::clone(&stop));
+        let handle = thread::Builder::new()
+            .name("dfmpc-server".into())
+            .spawn(move || {
+                // Connection handlers are detached: joining them on stop()
+                // would deadlock against clients that keep the socket open
+                // (they exit when the peer disconnects or the process ends).
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let b = Arc::clone(&batcher);
+                            let s = Arc::clone(&stats2);
+                            let name = model_name.clone();
+                            thread::spawn(move || {
+                                let _ = handle_conn(stream, b, s, name);
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawning server thread")?;
+        Ok(Server { addr: local, stats, stop, handle: Some(handle) })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServerStats>,
+    model_name: String,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let resp = match handle_request(line.trim(), &batcher, &stats, &model_name) {
+            Ok(j) => j,
+            Err(e) => {
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(format!("{e:#}"))),
+                ])
+            }
+        };
+        stream.write_all(resp.dump().as_bytes())?;
+        stream.write_all(b"\n")?;
+    }
+}
+
+fn handle_request(
+    line: &str,
+    batcher: &Batcher,
+    stats: &ServerStats,
+    model_name: &str,
+) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    stats.requests.fetch_add(1, Ordering::Relaxed);
+    match req.req("op")?.as_str().unwrap_or("") {
+        "status" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("model", Json::str(model_name)),
+            ("requests", Json::num(stats.requests.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::num(stats.errors.load(Ordering::Relaxed) as f64)),
+        ])),
+        "classify" => {
+            let image = if let Some(px) = req.get("pixels").and_then(Json::f32_vec) {
+                anyhow::ensure!(
+                    px.len() == synth::C * synth::H * synth::W,
+                    "expected {} pixels, got {}",
+                    synth::C * synth::H * synth::W,
+                    px.len()
+                );
+                Tensor::new(vec![synth::C, synth::H, synth::W], px)
+            } else {
+                // render from the named dataset stream (demo mode)
+                let ds = req
+                    .get("dataset")
+                    .and_then(Json::as_str)
+                    .unwrap_or("cifar10-sim");
+                let spec = synth::dataset(ds)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dataset '{ds}'"))?;
+                let index = req.get("index").and_then(Json::as_i64).unwrap_or(0) as u64;
+                synth::render_image(spec.eval_seed, index, spec.classes).0
+            };
+            let pred = batcher.classify(image)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("class", Json::num(pred.class as f64)),
+                ("confidence", Json::num(pred.confidence as f64)),
+                ("latency_ms", Json::num(pred.latency_ms)),
+                ("batch_size", Json::num(pred.batch_size as f64)),
+            ]))
+        }
+        other => anyhow::bail!("unknown op '{other}'"),
+    }
+}
+
+/// Minimal blocking client (used by examples/benches/tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting")?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), stream })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.stream.write_all(req.dump().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+
+    pub fn classify_index(&mut self, dataset: &str, index: u64) -> Result<(usize, f64)> {
+        let resp = self.call(&Json::obj(vec![
+            ("op", Json::str("classify")),
+            ("dataset", Json::str(dataset)),
+            ("index", Json::num(index as f64)),
+        ]))?;
+        anyhow::ensure!(
+            resp.get("ok").and_then(Json::as_bool).unwrap_or(false),
+            "server error: {}",
+            resp.get("error").and_then(Json::as_str).unwrap_or("?")
+        );
+        Ok((
+            resp.req("class")?.as_usize().unwrap_or(0),
+            resp.req("latency_ms")?.as_f64().unwrap_or(f64::NAN),
+        ))
+    }
+}

@@ -1,0 +1,66 @@
+//! Binary eval-shard loader (DFDS format written by `python/compile/data.py`).
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+pub const MAGIC: &[u8; 8] = b"DFDS1\x00\x00\x00";
+
+/// An in-memory labelled image set (NCHW).
+#[derive(Clone, Debug)]
+pub struct EvalShard {
+    pub images: Tensor,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+}
+
+impl EvalShard {
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn load(path: &Path) -> Result<EvalShard> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening shard {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad DFDS magic in {}", path.display());
+        }
+        let mut hdr = [0u8; 24];
+        f.read_exact(&mut hdr)?;
+        let word = |i: usize| u32::from_le_bytes(hdr[i * 4..i * 4 + 4].try_into().unwrap()) as usize;
+        let (ver, n, c, h, w, ncls) = (word(0), word(1), word(2), word(3), word(4), word(5));
+        if ver != 1 {
+            bail!("unsupported DFDS version {ver}");
+        }
+        let mut lab = vec![0u8; 4 * n];
+        f.read_exact(&mut lab)?;
+        let labels: Vec<usize> = lab
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize)
+            .collect();
+        let mut raw = vec![0u8; 4 * n * c * h * w];
+        f.read_exact(&mut raw)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(EvalShard { images: Tensor::new(vec![n, c, h, w], data), labels, classes: ncls })
+    }
+
+    /// Contiguous image slice [start, start+len) as an owned NCHW tensor.
+    pub fn batch(&self, start: usize, len: usize) -> (Tensor, &[usize]) {
+        let n = self.n();
+        let len = len.min(n - start);
+        let per: usize = self.images.shape[1..].iter().product();
+        let t = Tensor::new(
+            vec![len, self.images.shape[1], self.images.shape[2], self.images.shape[3]],
+            self.images.data[start * per..(start + len) * per].to_vec(),
+        );
+        (t, &self.labels[start..start + len])
+    }
+}

@@ -1,0 +1,7 @@
+//! Data pipeline: procedural SynthShapes generation (mirrors python) and
+//! binary eval-shard loading.
+
+pub mod loader;
+pub mod synth;
+
+pub use loader::EvalShard;

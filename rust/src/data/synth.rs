@@ -1,0 +1,196 @@
+//! SynthShapes renderer — exact mirror of `python/compile/data.py`
+//! (`render_image_scalar`). The rust serving/eval path can regenerate any
+//! image of any dataset stream without touching python or disk; golden
+//! tests pin pixel equality across languages.
+
+use crate::tensor::Tensor;
+use crate::util::rng;
+
+pub const H: usize = 32;
+pub const W: usize = 32;
+pub const C: usize = 3;
+
+const SLOT_TINT: u64 = 0;
+const SLOT_CX: u64 = 3;
+const SLOT_CY: u64 = 4;
+const SLOT_R: u64 = 5;
+const SLOT_OCC_POS: u64 = 6;
+const SLOT_OCC_ON: u64 = 7;
+const SLOT_PHASE: u64 = 8;
+const SLOT_CLASS: u64 = 15;
+const SLOT_NOISE: u64 = 16;
+
+pub const PALETTE: [[f64; 3]; 10] = [
+    [0.90, 0.10, 0.10],
+    [0.10, 0.90, 0.10],
+    [0.10, 0.20, 0.90],
+    [0.90, 0.90, 0.10],
+    [0.90, 0.10, 0.90],
+    [0.10, 0.90, 0.90],
+    [0.95, 0.55, 0.10],
+    [0.55, 0.10, 0.90],
+    [0.90, 0.90, 0.90],
+    [0.05, 0.05, 0.05],
+];
+
+/// Dataset registry — mirrors `data.DATASETS`.
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub classes: usize,
+    pub train_seed: u64,
+    pub eval_seed: u64,
+}
+
+pub const DATASETS: [DatasetSpec; 3] = [
+    DatasetSpec { name: "cifar10-sim", classes: 10, train_seed: 1001, eval_seed: 9001 },
+    DatasetSpec { name: "cifar100-sim", classes: 100, train_seed: 1002, eval_seed: 9002 },
+    DatasetSpec { name: "imagenet-sim", classes: 200, train_seed: 1003, eval_seed: 9003 },
+];
+
+pub fn dataset(name: &str) -> Option<DatasetSpec> {
+    DATASETS.iter().copied().find(|d| d.name == name)
+}
+
+/// class -> (shape, color, texture)
+pub fn class_factors(cls: usize) -> (usize, usize, usize) {
+    (cls % 10, (cls % 10 + cls / 10) % 10, (cls / 100) % 2)
+}
+
+fn shape_mask(shape: usize, x: usize, y: usize, cx: f64, cy: f64, r: f64) -> bool {
+    let dx = x as f64 - cx;
+    let dy = y as f64 - cy;
+    let (adx, ady) = (dx.abs(), dy.abs());
+    let d2 = dx * dx + dy * dy;
+    match shape {
+        0 => d2 < r * r,
+        1 => adx.max(ady) < 0.8 * r,
+        2 => adx + ady < 1.2 * r,
+        3 => (adx < 0.35 * r || ady < 0.35 * r) && adx.max(ady) < r,
+        4 => d2 < r * r && d2 > (0.55 * r) * (0.55 * r),
+        5 => dy > -0.7 * r && dy < 0.7 * r && adx < (dy + 0.7 * r) * 0.6,
+        6 => adx.max(ady) < r && (y % 4) < 2,
+        7 => adx.max(ady) < r && (x % 4) < 2,
+        8 => d2 < r * r && ((x / 4 + y / 4) % 2) == 0,
+        _ => adx < r && ady < r && !(adx < 0.5 * r && ady < 0.5 * r),
+    }
+}
+
+fn tex_fill(tex: usize, x: usize, y: usize, phase: f64) -> f64 {
+    if tex == 0 {
+        1.0 - 0.25 * (x as f64 / 32.0)
+    } else {
+        let band = (x + y + (phase * 8.0) as usize) % 8;
+        if band < 4 {
+            1.0
+        } else {
+            0.55
+        }
+    }
+}
+
+/// Label of image `index` in stream `seed`.
+pub fn label(seed: u64, index: u64, num_classes: usize) -> usize {
+    let key = rng::image_key(seed, index);
+    (rng::slot_u64(key, SLOT_CLASS) % num_classes as u64) as usize
+}
+
+/// Render image `index` of stream `seed` — CHW f32 in [0,1] plus label.
+pub fn render_image(seed: u64, index: u64, num_classes: usize) -> (Tensor, usize) {
+    let key = rng::image_key(seed, index);
+    let cls = (rng::slot_u64(key, SLOT_CLASS) % num_classes as u64) as usize;
+    let (shape, color, tex) = class_factors(cls);
+    let tint: Vec<f64> = (0..C as u64)
+        .map(|c| 0.15 + 0.5 * rng::slot_f(key, SLOT_TINT + c))
+        .collect();
+    let cx = 8.0 + 16.0 * rng::slot_f(key, SLOT_CX);
+    let cy = 8.0 + 16.0 * rng::slot_f(key, SLOT_CY);
+    let r = 5.0 + 7.0 * rng::slot_f(key, SLOT_R);
+    let occ_on = rng::slot_f(key, SLOT_OCC_ON) < 0.35;
+    let occ_x0 = (rng::slot_f(key, SLOT_OCC_POS) * 29.0) as usize;
+    let phase = rng::slot_f(key, SLOT_PHASE);
+    let col = PALETTE[color];
+
+    let mut img = Tensor::zeros(vec![C, H, W]);
+    for y in 0..H {
+        for x in 0..W {
+            let inside = shape_mask(shape, x, y, cx, cy, r);
+            let fill = if inside { tex_fill(tex, x, y, phase) } else { 0.0 };
+            let occ = occ_on && x >= occ_x0 && x < occ_x0 + 3;
+            for c in 0..C {
+                let n = rng::slot_f(key, SLOT_NOISE + ((y * W + x) * C + c) as u64) - 0.5;
+                let v = if occ {
+                    0.25 + 0.1 * n
+                } else if inside {
+                    col[c] * fill + 0.15 * n
+                } else {
+                    tint[c] * (0.55 + 0.45 * (y as f64 / 31.0)) + 0.25 * n
+                };
+                img.data[(c * H + y) * W + x] = v.clamp(0.0, 1.0) as f32;
+            }
+        }
+    }
+    (img, cls)
+}
+
+/// Render a batch of images into one NCHW tensor (+ labels).
+pub fn render_batch(seed: u64, start: u64, n: usize, num_classes: usize) -> (Tensor, Vec<usize>) {
+    let mut out = Tensor::zeros(vec![n, C, H, W]);
+    let mut labels = Vec::with_capacity(n);
+    let per = C * H * W;
+    for i in 0..n {
+        let (img, cls) = render_image(seed, start + i as u64, num_classes);
+        out.data[i * per..(i + 1) * per].copy_from_slice(&img.data);
+        labels.push(cls);
+    }
+    (out, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let (a, la) = render_image(9001, 3, 10);
+        let (b, lb) = render_image(9001, 3, 10);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let (img, _) = render_image(1001, 42, 100);
+        for v in &img.data {
+            assert!((0.0..=1.0).contains(v));
+        }
+    }
+
+    #[test]
+    fn class_factor_bijection_100() {
+        // classes 0..100 must map to 100 distinct (shape, color) combos
+        let mut seen = std::collections::HashSet::new();
+        for cls in 0..100 {
+            let (s, c, _) = class_factors(cls);
+            assert!(seen.insert((s, c)), "duplicate factors for class {cls}");
+        }
+    }
+
+    #[test]
+    fn labels_cover_classes() {
+        let mut seen = vec![false; 10];
+        for i in 0..200 {
+            seen[label(9001, i, 10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "200 samples should hit all 10 classes");
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let (batch, labels) = render_batch(9002, 5, 3, 100);
+        let (img1, l1) = render_image(9002, 6, 100);
+        let per = C * H * W;
+        assert_eq!(&batch.data[per..2 * per], &img1.data[..]);
+        assert_eq!(labels[1], l1);
+    }
+}

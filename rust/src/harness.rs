@@ -1,0 +1,120 @@
+//! Experiment harness: shared plumbing for the CLI, examples and benches —
+//! load a zoo model, quantize it with a method, evaluate it through the
+//! PJRT lane (or the reference engine), and report paper-style rows.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::eval::{eval_pjrt, eval_reference, EvalResult};
+use crate::data::EvalShard;
+use crate::model::zoo::{artifacts_root, ModelEntry, Zoo};
+use crate::model::{Checkpoint, Plan};
+use crate::quant::{self, Method};
+use crate::runtime::PjrtWorker;
+use crate::util::Stopwatch;
+
+/// A fully materialized model: plan + FP32 checkpoint + eval shard.
+pub struct LoadedModel {
+    pub entry: ModelEntry,
+    pub plan: Arc<Plan>,
+    pub ckpt: Arc<Checkpoint>,
+    pub shard: Arc<EvalShard>,
+}
+
+pub struct Harness {
+    pub zoo: Zoo,
+    pub worker: Option<Arc<PjrtWorker>>,
+}
+
+impl Harness {
+    /// Open the artifacts root ($DFMPC_ARTIFACTS or ./artifacts).
+    pub fn open() -> Result<Harness> {
+        let root = artifacts_root();
+        let zoo = Zoo::load(&root)
+            .with_context(|| format!("loading zoo at {} (run `make models artifacts`)", root.display()))?;
+        Ok(Harness { zoo, worker: None })
+    }
+
+    /// Lazily start the PJRT runtime thread.
+    pub fn worker(&mut self) -> Result<Arc<PjrtWorker>> {
+        if self.worker.is_none() {
+            self.worker = Some(Arc::new(PjrtWorker::spawn()?));
+        }
+        Ok(Arc::clone(self.worker.as_ref().unwrap()))
+    }
+
+    pub fn load_model(&self, id: &str) -> Result<LoadedModel> {
+        let entry = self.zoo.model(id)?.clone();
+        let plan = Arc::new(self.zoo.load_plan(&entry)?);
+        let ckpt = Arc::new(
+            self.zoo
+                .load_checkpoint(&entry)
+                .with_context(|| format!("checkpoint for {id} (run `make models`)"))?,
+        );
+        let ds = self.zoo.dataset(&entry.dataset)?;
+        let shard = Arc::new(EvalShard::load(&ds.eval_path)?);
+        Ok(LoadedModel { entry, plan, ckpt, shard })
+    }
+
+    /// ids of models whose checkpoints exist on disk.
+    pub fn available_models(&self) -> Vec<String> {
+        self.zoo
+            .models
+            .iter()
+            .filter(|m| m.ckpt_path.exists())
+            .map(|m| m.id.clone())
+            .collect()
+    }
+}
+
+/// One method evaluated on one model.
+#[derive(Clone, Debug)]
+pub struct MethodRow {
+    pub method: String,
+    pub accuracy: f64,
+    pub size_mb: f64,
+    pub avg_bits: f64,
+    pub quant_ms: f64,
+    pub eval: EvalResult,
+}
+
+/// Quantize `model` with `method` and evaluate on its shard.
+///
+/// `engine = "pjrt"` loads the artifact batch closest to `batch` on the
+/// runtime thread; `"ref"` uses the pure-rust engine.
+pub fn run_method(
+    h: &mut Harness,
+    model: &LoadedModel,
+    method: Method,
+    engine: &str,
+    batch: usize,
+    limit: Option<usize>,
+) -> Result<MethodRow> {
+    let sw = Stopwatch::start();
+    let qckpt = method.apply(&model.plan, &model.ckpt)?;
+    let quant_ms = sw.millis();
+    let size = quant::model_size(&model.plan, &method);
+    let eval = match engine {
+        "ref" => eval_reference(&model.plan, &qckpt, &model.shard, batch, limit)?,
+        _ => {
+            let worker = h.worker()?;
+            let (abatch, hlo) = h
+                .zoo
+                .hlo_for_batch(&model.entry, batch)
+                .context("no HLO artifact (run `make artifacts`)")?;
+            let vid = format!("{}#{}", model.entry.id, method.name());
+            worker.load(&vid, PathBuf::from(hlo), &model.plan, &qckpt, abatch)?;
+            eval_pjrt(&worker, &vid, &model.shard, abatch, limit)?
+        }
+    };
+    Ok(MethodRow {
+        method: method.name(),
+        accuracy: eval.accuracy,
+        size_mb: size.mb,
+        avg_bits: size.avg_bits,
+        quant_ms,
+        eval,
+    })
+}

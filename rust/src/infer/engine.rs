@@ -1,0 +1,132 @@
+//! Plan-IR interpreter on the pure-rust tensor ops.
+//!
+//! This is the reference/fallback execution path: it cross-checks the PJRT
+//! artifacts numerically, serves property tests, and powers data-dependent
+//! baselines (ZeroQ-sim calibration) without touching python. The
+//! production eval path is `runtime::PjrtEngine`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{Checkpoint, Op, Plan};
+use crate::tensor::ops;
+use crate::tensor::Tensor;
+
+/// Per-BN pre-normalization channel means collected during a forward pass
+/// (used by calibration-based baselines).
+pub type ActStats = BTreeMap<String, Vec<f64>>;
+
+pub struct Engine<'a> {
+    pub plan: &'a Plan,
+    pub ckpt: &'a Checkpoint,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(plan: &'a Plan, ckpt: &'a Checkpoint) -> Engine<'a> {
+        Engine { plan, ckpt }
+    }
+
+    /// Forward pass, NCHW input -> (N, classes) logits.
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.forward_impl(x, None)
+    }
+
+    /// Forward pass that also collects pre-BN channel means.
+    pub fn forward_collect(&self, x: &Tensor, stats: &mut ActStats) -> Result<Tensor> {
+        self.forward_impl(x, Some(stats))
+    }
+
+    fn bn_apply(&self, x: &mut Tensor, name: &str, stats: &mut Option<&mut ActStats>) -> Result<()> {
+        if let Some(stats) = stats.as_deref_mut() {
+            let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+            let hw = h * w;
+            let mut means = vec![0.0f64; c];
+            for ci in 0..c {
+                let mut acc = 0.0f64;
+                for ni in 0..n {
+                    let base = (ni * c + ci) * hw;
+                    acc += x.data[base..base + hw].iter().map(|v| *v as f64).sum::<f64>();
+                }
+                means[ci] = acc / (n * hw) as f64;
+            }
+            stats.insert(name.to_string(), means);
+        }
+        ops::batchnorm(
+            x,
+            &self.ckpt.get(&format!("{name}.gamma"))?.data,
+            &self.ckpt.get(&format!("{name}.beta"))?.data,
+            &self.ckpt.get(&format!("{name}.mu"))?.data,
+            &self.ckpt.get(&format!("{name}.var"))?.data,
+        );
+        Ok(())
+    }
+
+    fn forward_impl(&self, x: &Tensor, mut stats: Option<&mut ActStats>) -> Result<Tensor> {
+        let mut x = x.clone();
+        let mut saved: BTreeMap<&str, Tensor> = BTreeMap::new();
+        for op in &self.plan.ops {
+            match op {
+                Op::Conv(c) => {
+                    let w = self.ckpt.get(&format!("{}.w", c.name))?;
+                    x = ops::conv2d(&x, w, c.stride, c.pad, c.groups);
+                }
+                Op::Bn(b) => self.bn_apply(&mut x, &b.name, &mut stats)?,
+                Op::Relu => ops::relu(&mut x),
+                Op::Relu6 => ops::relu6(&mut x),
+                Op::Save { id } => {
+                    saved.insert(id.as_str(), x.clone());
+                }
+                Op::Residual { id, down } => {
+                    let sc = saved
+                        .get(id.as_str())
+                        .ok_or_else(|| anyhow!("residual save '{id}' missing"))?;
+                    let shortcut = match down {
+                        None => sc.clone(),
+                        Some(d) => {
+                            let w = self.ckpt.get(&format!("{}.w", d.conv.name))?;
+                            let mut s = ops::conv2d(sc, w, d.conv.stride, d.conv.pad, d.conv.groups);
+                            self.bn_apply(&mut s, &d.bn.name, &mut stats)?;
+                            s
+                        }
+                    };
+                    ops::add_inplace(&mut x, &shortcut);
+                }
+                Op::Concat { id } => {
+                    let sc = saved
+                        .get(id.as_str())
+                        .ok_or_else(|| anyhow!("concat save '{id}' missing"))?;
+                    x = ops::concat_channels(sc, &x);
+                }
+                Op::MaxPool { k, stride } => x = ops::maxpool(&x, *k, *stride),
+                Op::AvgPool { k, stride } => x = ops::avgpool(&x, *k, *stride),
+                Op::Gap => x = ops::gap(&x),
+                Op::Fc { name, .. } => {
+                    let w = self.ckpt.get(&format!("{name}.w"))?;
+                    let b = self.ckpt.get(&format!("{name}.b"))?;
+                    x = ops::fc(&x, w, &b.data);
+                }
+            }
+        }
+        Ok(x)
+    }
+
+    /// Top-1 accuracy over a labelled batch.
+    pub fn accuracy(&self, x: &Tensor, labels: &[usize]) -> Result<f64> {
+        let logits = self.forward(x)?;
+        let pred = ops::argmax_rows(&logits);
+        let correct = pred.iter().zip(labels).filter(|(p, l)| p == l).count();
+        Ok(correct as f64 / labels.len() as f64)
+    }
+
+    /// Mean cross-entropy loss over a labelled batch (drives Fig. 5).
+    pub fn loss(&self, x: &Tensor, labels: &[usize]) -> Result<f64> {
+        let logits = self.forward(x)?;
+        let probs = ops::softmax_rows(&logits);
+        let mut acc = 0.0f64;
+        for (r, &l) in labels.iter().enumerate() {
+            acc -= (probs.at2(r, l).max(1e-12) as f64).ln();
+        }
+        Ok(acc / labels.len() as f64)
+    }
+}

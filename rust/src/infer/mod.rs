@@ -1,0 +1,5 @@
+//! Pure-rust reference inference engine over the plan-IR.
+
+pub mod engine;
+
+pub use engine::Engine;

@@ -1,0 +1,31 @@
+//! # dfmpc — Data-Free Quantization via Mixed-Precision Compensation
+//!
+//! Production-shaped reproduction of Chen et al. 2023 ("Data-Free
+//! Quantization via Mixed-Precision Compensation without Fine-Tuning") as
+//! a three-layer rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: the compression-service coordinator — the
+//!   quantization library ([`quant`], the paper's Algorithm 1 plus every
+//!   baseline), a PJRT [`runtime`] executing AOT HLO artifacts, a batched
+//!   evaluation pipeline, a sweep scheduler, a dynamic-batching model
+//!   server ([`coordinator`]), and the substrates they need ([`tensor`],
+//!   [`infer`], [`data`], [`model`], [`util`]).
+//! - **L2**: `python/compile/model.py` — the JAX plan-IR interpreter,
+//!   lowered once to HLO text by `python/compile/aot.py`.
+//! - **L1**: `python/compile/kernels/` — Pallas kernels for the matmul
+//!   hot-spot, ternarization (Eq. 3), uniform quantization (Eq. 6) and the
+//!   closed-form compensation solve (Eq. 27).
+//!
+//! Python never runs on the request path: after `make models artifacts`
+//! the `dfmpc` binary (and examples/benches) are self-contained.
+
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod infer;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

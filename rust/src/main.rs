@@ -1,0 +1,175 @@
+//! `dfmpc` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                               list models/datasets in the manifest
+//!   quantize --model ID --method M --out PATH
+//!   eval     --model ID --method M [--engine pjrt|ref] [--batch N] [--limit N]
+//!   sweep    --model ID --methods M1,M2,... [--engine ...]
+//!   serve    --model ID --method M [--addr HOST:PORT] [--max-batch N] [--max-wait-ms T]
+//!
+//! Method syntax (see quant::Method::parse):
+//!   fp32 | dfmpc:2/6[:lam1[:lam2]] | original:2/6 | uniform:6 | dfq:6 |
+//!   omse:4 | ocs:4:0.05 | zeroq:6
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use dfmpc::coordinator::{Batcher, BatcherConfig, Server};
+use dfmpc::harness::{run_method, Harness};
+use dfmpc::quant::Method;
+use dfmpc::report::tables::{mb, pct, Table};
+use dfmpc::util::args::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(String::as_str) {
+        Some("info") => info(),
+        Some("quantize") => quantize(&args),
+        Some("eval") => eval(&args),
+        Some("sweep") => sweep(&args),
+        Some("serve") => serve(&args),
+        _ => {
+            eprintln!(
+                "usage: dfmpc <info|quantize|eval|sweep|serve> [options]\n\
+                 see rust/src/main.rs header for the full syntax"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let h = Harness::open()?;
+    let mut t = Table::new("models", &["id", "arch", "dataset", "ckpt", "hlo batches"]);
+    for m in &h.zoo.models {
+        t.row(vec![
+            m.id.clone(),
+            m.arch.clone(),
+            m.dataset.clone(),
+            if m.ckpt_path.exists() { "yes".into() } else { "MISSING".into() },
+            m.hlo.iter().map(|(b, _)| b.to_string()).collect::<Vec<_>>().join(","),
+        ]);
+    }
+    println!("{}", t.render());
+    let mut t = Table::new("datasets", &["name", "classes", "eval images"]);
+    for d in &h.zoo.datasets {
+        t.row(vec![d.name.clone(), d.classes.to_string(), d.n.to_string()]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn quantize(args: &Args) -> Result<()> {
+    let h = Harness::open()?;
+    let model = h.load_model(args.get("model").context("--model required")?)?;
+    let method = Method::parse(args.get_or("method", "dfmpc:2/6"))?;
+    let out = args.get("out").context("--out required")?;
+    let q = method.apply(&model.plan, &model.ckpt)?;
+    q.save(std::path::Path::new(out))?;
+    let size = dfmpc::quant::model_size(&model.plan, &method);
+    println!(
+        "quantized {} with {} -> {} ({:.3} MB stored, avg {:.2} bits)",
+        model.entry.id,
+        method.name(),
+        out,
+        size.mb,
+        size.avg_bits
+    );
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let mut h = Harness::open()?;
+    let model = h.load_model(args.get("model").context("--model required")?)?;
+    let method = Method::parse(args.get_or("method", "fp32"))?;
+    let engine = args.get_or("engine", "pjrt").to_string();
+    let batch = args.usize("batch", 100);
+    let limit = args.get("limit").map(|v| v.parse()).transpose()?;
+    let row = run_method(&mut h, &model, method, &engine, batch, limit)?;
+    println!(
+        "{} | {} | acc {} % | size {} MB | quant {:.1} ms | {:.1} img/s | {}",
+        model.entry.id,
+        row.method,
+        pct(row.accuracy),
+        mb(row.size_mb),
+        row.quant_ms,
+        row.eval.images_per_s,
+        row.eval.batch_latency
+    );
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let mut h = Harness::open()?;
+    let model = h.load_model(args.get("model").context("--model required")?)?;
+    let methods: Vec<Method> = args
+        .get_or("methods", "fp32,original:2/6,dfmpc:2/6")
+        .split(',')
+        .map(Method::parse)
+        .collect::<Result<_>>()?;
+    let engine = args.get_or("engine", "pjrt").to_string();
+    let batch = args.usize("batch", 100);
+    let limit = args.get("limit").map(|v| v.parse()).transpose()?;
+    let mut t = Table::new(
+        &format!("sweep: {}", model.entry.id),
+        &["Method", "Top-1 (%)", "Size (MB)", "avg bits", "quant ms", "img/s"],
+    );
+    for m in methods {
+        let row = run_method(&mut h, &model, m, &engine, batch, limit)?;
+        t.row(vec![
+            row.method.clone(),
+            pct(row.accuracy),
+            mb(row.size_mb),
+            format!("{:.2}", row.avg_bits),
+            format!("{:.1}", row.quant_ms),
+            format!("{:.1}", row.eval.images_per_s),
+        ]);
+        println!("done: {}", row.method);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let mut h = Harness::open()?;
+    let model = h.load_model(args.get("model").context("--model required")?)?;
+    let method = Method::parse(args.get_or("method", "dfmpc:2/6"))?;
+    let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
+    let max_batch = args.usize("max-batch", 8);
+    let max_wait_ms = args.usize("max-wait-ms", 2);
+
+    let qckpt = method.apply(&model.plan, &model.ckpt)?;
+    let worker = h.worker()?;
+    let (abatch, hlo) = h
+        .zoo
+        .hlo_for_batch(&model.entry, max_batch)
+        .context("no artifact")?;
+    worker.load(&model.entry.id, hlo.to_path_buf(), &model.plan, &qckpt, abatch)?;
+    let batcher = Arc::new(Batcher::start(
+        Arc::clone(&worker),
+        model.entry.id.clone(),
+        BatcherConfig {
+            max_batch: max_batch.min(abatch),
+            max_wait: std::time::Duration::from_millis(max_wait_ms as u64),
+        },
+    ));
+    let server = Server::start(&addr, batcher, format!("{}+{}", model.entry.id, method.name()))?;
+    println!(
+        "serving {} ({}) on {} — newline-delimited JSON, e.g.\n  {{\"op\": \"classify\", \"dataset\": \"{}\", \"index\": 0}}",
+        model.entry.id,
+        method.name(),
+        server.addr,
+        model.entry.dataset
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(60));
+    }
+}

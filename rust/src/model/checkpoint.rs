@@ -1,0 +1,162 @@
+//! DFMC checkpoint IO — binary format shared with
+//! `python/compile/checkpoint.py` (see that file for the layout).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+pub const MAGIC: &[u8; 8] = b"DFMC1\x00\x00\x00";
+const ALIGN: usize = 16;
+
+/// A named-tensor store plus free-form metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, Tensor>,
+    /// insertion order of tensors as written (= model param order)
+    pub order: Vec<String>,
+    pub meta: Json,
+}
+
+impl Checkpoint {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("checkpoint missing tensor '{name}'"))
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Json::as_str)
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(Json::as_f64)
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad DFMC magic in {}", path.display());
+        }
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let version = u32::from_le_bytes(b4);
+        if version != 1 {
+            bail!("unsupported DFMC version {version}");
+        }
+        let mut b8 = [0u8; 8];
+        f.read_exact(&mut b8)?;
+        let hlen = u64::from_le_bytes(b8) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+
+        let mut ck = Checkpoint {
+            meta: header.get("meta").cloned().unwrap_or(Json::Null),
+            ..Default::default()
+        };
+        for e in header.req("tensors")?.as_arr().context("tensors")? {
+            let name = e.req("name")?.as_str().context("name")?.to_string();
+            let shape = e.req("shape")?.usize_vec().context("shape")?;
+            let offset = e.req("offset")?.as_usize().context("offset")?;
+            let nbytes = e.req("nbytes")?.as_usize().context("nbytes")?;
+            let dtype = e.req("dtype")?.as_str().context("dtype")?;
+            if dtype != "f32" {
+                bail!("unsupported dtype {dtype}");
+            }
+            if offset + nbytes > payload.len() {
+                bail!("tensor '{name}' out of payload bounds");
+            }
+            let raw = &payload[offset..offset + nbytes];
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            ck.order.push(name.clone());
+            ck.tensors.insert(name, Tensor::new(shape, data));
+        }
+        Ok(ck)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut entries = Vec::new();
+        let mut payload: Vec<u8> = Vec::new();
+        for name in &self.order {
+            let t = self.get(name)?;
+            let offset = payload.len();
+            for v in &t.data {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            let nbytes = t.data.len() * 4;
+            entries.push(Json::obj(vec![
+                ("name", Json::str(name.clone())),
+                ("shape", Json::arr_usize(&t.shape)),
+                ("dtype", Json::str("f32")),
+                ("offset", Json::num(offset as f64)),
+                ("nbytes", Json::num(nbytes as f64)),
+            ]));
+            let pad = (ALIGN - payload.len() % ALIGN) % ALIGN;
+            payload.extend(std::iter::repeat(0u8).take(pad));
+        }
+        let header = Json::obj(vec![
+            ("meta", self.meta.clone()),
+            ("tensors", Json::Arr(entries)),
+        ])
+        .dump();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        f.write_all(&payload)?;
+        Ok(())
+    }
+
+    /// Insert (or replace) a tensor, preserving order on replace.
+    pub fn put(&mut self, name: &str, t: Tensor) {
+        if !self.tensors.contains_key(name) {
+            self.order.push(name.to_string());
+        }
+        self.tensors.insert(name.to_string(), t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut ck = Checkpoint::default();
+        ck.put("a.w", Tensor::from_fn(vec![2, 3], |i| i as f32 * 0.5));
+        ck.put("b.gamma", Tensor::full(vec![7], 1.25));
+        ck.meta = Json::obj(vec![("arch", Json::str("tiny")), ("acc", Json::num(0.93))]);
+        let dir = std::env::temp_dir().join("dfmc_test_ckpt.dfmc");
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.order, vec!["a.w", "b.gamma"]);
+        assert_eq!(back.get("a.w").unwrap(), ck.get("a.w").unwrap());
+        assert_eq!(back.meta_str("arch"), Some("tiny"));
+        assert!((back.meta_f64("acc").unwrap() - 0.93).abs() < 1e-12);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("dfmc_bad_magic.dfmc");
+        std::fs::write(&dir, b"NOTDFMC!rest").unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        std::fs::remove_file(dir).ok();
+    }
+}

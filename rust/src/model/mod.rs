@@ -1,0 +1,8 @@
+//! Model descriptions (plan-IR), checkpoint IO, and zoo lookup.
+
+pub mod checkpoint;
+pub mod plan;
+pub mod zoo;
+
+pub use checkpoint::Checkpoint;
+pub use plan::{ConvSpec, Op, Pair, Plan};

@@ -1,0 +1,300 @@
+//! Plan-IR: the architecture description shared with the python build path
+//! (`python/compile/archs.py` emits, this module parses). The quantizer,
+//! the pure-rust engine and the PJRT artifact all agree on this structure.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvSpec {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BnSpec {
+    pub name: String,
+    pub ch: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DownSpec {
+    pub conv: ConvSpec,
+    pub bn: BnSpec,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Conv(ConvSpec),
+    Bn(BnSpec),
+    Relu,
+    Relu6,
+    Save { id: String },
+    Residual { id: String, down: Option<DownSpec> },
+    Concat { id: String },
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    Gap,
+    Fc { name: String, cin: usize, cout: usize },
+}
+
+/// A mixed-precision layer pair (paper Fig. 2): `low` is ternarized, `high`
+/// is k-bit quantized and compensated on input channels
+/// `[offset, offset + cout(low))`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pair {
+    pub low: String,
+    pub high: String,
+    pub offset: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub name: String,
+    pub input: [usize; 3],
+    pub num_classes: usize,
+    pub ops: Vec<Op>,
+    pub pairs: Vec<Pair>,
+    /// conv name -> the BN that consumes its output.
+    pub bn_of: BTreeMap<String, String>,
+}
+
+fn parse_conv(j: &Json) -> Result<ConvSpec> {
+    Ok(ConvSpec {
+        name: j.req("name")?.as_str().context("conv name")?.to_string(),
+        cin: j.req("cin")?.as_usize().context("cin")?,
+        cout: j.req("cout")?.as_usize().context("cout")?,
+        k: j.req("k")?.as_usize().context("k")?,
+        stride: j.req("stride")?.as_usize().context("stride")?,
+        pad: j.req("pad")?.as_usize().context("pad")?,
+        groups: j.req("groups")?.as_usize().context("groups")?,
+    })
+}
+
+fn parse_bn(j: &Json) -> Result<BnSpec> {
+    Ok(BnSpec {
+        name: j.req("name")?.as_str().context("bn name")?.to_string(),
+        ch: j.req("ch")?.as_usize().context("ch")?,
+    })
+}
+
+impl Plan {
+    pub fn parse(src: &str) -> Result<Plan> {
+        let j = Json::parse(src).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Plan> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan {}", path.display()))?;
+        Self::parse(&src)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Plan> {
+        let input_v = j.req("input")?.usize_vec().context("input")?;
+        if input_v.len() != 3 {
+            bail!("plan input must be CHW");
+        }
+        let mut ops = Vec::new();
+        for op in j.req("ops")?.as_arr().context("ops")? {
+            let kind = op.req("op")?.as_str().context("op kind")?;
+            ops.push(match kind {
+                "conv" => Op::Conv(parse_conv(op)?),
+                "bn" => Op::Bn(parse_bn(op)?),
+                "relu" => Op::Relu,
+                "relu6" => Op::Relu6,
+                "save" => Op::Save { id: op.req("id")?.as_str().context("id")?.to_string() },
+                "residual" => {
+                    let down = match op.get("down") {
+                        Some(Json::Null) | None => None,
+                        Some(d) => Some(DownSpec {
+                            conv: parse_conv(d.req("conv")?)?,
+                            bn: parse_bn(d.req("bn")?)?,
+                        }),
+                    };
+                    Op::Residual { id: op.req("id")?.as_str().context("id")?.to_string(), down }
+                }
+                "concat" => Op::Concat { id: op.req("id")?.as_str().context("id")?.to_string() },
+                "maxpool" => Op::MaxPool {
+                    k: op.req("k")?.as_usize().context("k")?,
+                    stride: op.req("stride")?.as_usize().context("stride")?,
+                },
+                "avgpool" => Op::AvgPool {
+                    k: op.req("k")?.as_usize().context("k")?,
+                    stride: op.req("stride")?.as_usize().context("stride")?,
+                },
+                "gap" => Op::Gap,
+                "fc" => Op::Fc {
+                    name: op.req("name")?.as_str().context("name")?.to_string(),
+                    cin: op.req("cin")?.as_usize().context("cin")?,
+                    cout: op.req("cout")?.as_usize().context("cout")?,
+                },
+                other => bail!("unknown op kind '{other}'"),
+            });
+        }
+        let pairs = j
+            .req("pairs")?
+            .as_arr()
+            .context("pairs")?
+            .iter()
+            .map(|p| {
+                Ok(Pair {
+                    low: p.req("low")?.as_str().context("low")?.to_string(),
+                    high: p.req("high")?.as_str().context("high")?.to_string(),
+                    offset: p.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut bn_of = BTreeMap::new();
+        if let Some(m) = j.req("bn_of")?.as_obj() {
+            for (k, v) in m {
+                bn_of.insert(k.clone(), v.as_str().context("bn_of value")?.to_string());
+            }
+        }
+        Ok(Plan {
+            name: j.req("name")?.as_str().context("name")?.to_string(),
+            input: [input_v[0], input_v[1], input_v[2]],
+            num_classes: j.req("num_classes")?.as_usize().context("num_classes")?,
+            ops,
+            pairs,
+            bn_of,
+        })
+    }
+
+    /// All convs in the plan (including residual-downsample convs), by name.
+    pub fn convs(&self) -> BTreeMap<String, ConvSpec> {
+        let mut m = BTreeMap::new();
+        for op in &self.ops {
+            match op {
+                Op::Conv(c) => {
+                    m.insert(c.name.clone(), c.clone());
+                }
+                Op::Residual { down: Some(d), .. } => {
+                    m.insert(d.conv.name.clone(), d.conv.clone());
+                }
+                _ => {}
+            }
+        }
+        m
+    }
+
+    /// Deterministic flat parameter order — mirrors model.param_order().
+    pub fn param_order(&self) -> Vec<(String, Vec<usize>)> {
+        let mut out = Vec::new();
+        let push_conv = |out: &mut Vec<(String, Vec<usize>)>, c: &ConvSpec| {
+            out.push((format!("{}.w", c.name), vec![c.cout, c.cin / c.groups, c.k, c.k]));
+        };
+        let push_bn = |out: &mut Vec<(String, Vec<usize>)>, b: &BnSpec| {
+            for f in ["gamma", "beta", "mu", "var"] {
+                out.push((format!("{}.{}", b.name, f), vec![b.ch]));
+            }
+        };
+        for op in &self.ops {
+            match op {
+                Op::Conv(c) => push_conv(&mut out, c),
+                Op::Bn(b) => push_bn(&mut out, b),
+                Op::Fc { name, cin, cout } => {
+                    out.push((format!("{name}.w"), vec![*cout, *cin]));
+                    out.push((format!("{name}.b"), vec![*cout]));
+                }
+                Op::Residual { down: Some(d), .. } => {
+                    push_conv(&mut out, &d.conv);
+                    push_bn(&mut out, &d.bn);
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Total weight parameter count (for size accounting).
+    pub fn param_count(&self) -> usize {
+        self.param_order().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Structural validation: channel flow must be consistent.
+    pub fn validate(&self) -> Result<()> {
+        for pair in &self.pairs {
+            let convs = self.convs();
+            let lo = convs.get(&pair.low).ok_or_else(|| anyhow!("pair low {} missing", pair.low))?;
+            let hi = convs.get(&pair.high).ok_or_else(|| anyhow!("pair high {} missing", pair.high))?;
+            if hi.groups == 1 {
+                if pair.offset + lo.cout > hi.cin {
+                    bail!("pair {}->{} slice out of range", pair.low, pair.high);
+                }
+            } else if lo.cout != hi.cout || pair.offset != 0 {
+                bail!("depthwise pair {}->{} channel mismatch", pair.low, pair.high);
+            }
+            if !self.bn_of.contains_key(&pair.low) {
+                bail!("low conv {} has no BN", pair.low);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"{
+      "name": "tiny", "input": [3, 8, 8], "num_classes": 4,
+      "ops": [
+        {"op": "conv", "name": "c1", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c1_bn", "ch": 4},
+        {"op": "relu"},
+        {"op": "conv", "name": "c2", "cin": 4, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c2_bn", "ch": 8},
+        {"op": "relu"},
+        {"op": "gap"},
+        {"op": "fc", "name": "fc", "cin": 8, "cout": 4}
+      ],
+      "pairs": [{"low": "c1", "high": "c2", "offset": 0}],
+      "bn_of": {"c1": "c1_bn", "c2": "c2_bn"}
+    }"#;
+
+    #[test]
+    fn parses_tiny_plan() {
+        let p = Plan::parse(TINY).unwrap();
+        assert_eq!(p.name, "tiny");
+        assert_eq!(p.ops.len(), 8);
+        assert_eq!(p.pairs.len(), 1);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn param_order_is_stable() {
+        let p = Plan::parse(TINY).unwrap();
+        let order = p.param_order();
+        let names: Vec<&str> = order.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "c1.w", "c1_bn.gamma", "c1_bn.beta", "c1_bn.mu", "c1_bn.var",
+                "c2.w", "c2_bn.gamma", "c2_bn.beta", "c2_bn.mu", "c2_bn.var",
+                "fc.w", "fc.b"
+            ]
+        );
+        assert_eq!(order[0].1, vec![4, 3, 3, 3]);
+        // c1.w 108 + c1_bn 16 + c2.w 288 + c2_bn 32 + fc.w 32 + fc.b 4
+        assert_eq!(p.param_count(), 108 + 16 + 288 + 32 + 32 + 4);
+    }
+
+    #[test]
+    fn bad_pair_rejected() {
+        let mut src = TINY.replace(r#""offset": 0"#, r#""offset": 3"#);
+        let p = Plan::parse(&src).unwrap();
+        assert!(p.validate().is_err());
+        src = TINY.replace(r#""low": "c1""#, r#""low": "nope""#);
+        let p = Plan::parse(&src).unwrap();
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Model-zoo lookup over the artifacts directory (manifest.json index).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::{Checkpoint, Plan};
+use crate::util::json::Json;
+
+/// One manifest entry: a trained model with its plan and AOT artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub id: String,
+    pub arch: String,
+    pub dataset: String,
+    pub plan_path: PathBuf,
+    pub ckpt_path: PathBuf,
+    /// batch size -> HLO text path
+    pub hlo: Vec<(usize, PathBuf)>,
+    pub pallas_hlo: Option<(usize, PathBuf)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetEntry {
+    pub name: String,
+    pub classes: usize,
+    pub eval_path: PathBuf,
+    pub eval_seed: u64,
+    pub n: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Zoo {
+    pub root: PathBuf,
+    pub models: Vec<ModelEntry>,
+    pub datasets: Vec<DatasetEntry>,
+}
+
+impl Zoo {
+    pub fn load(root: &Path) -> Result<Zoo> {
+        let manifest_path = root.join("manifest.json");
+        let src = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&src).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut models = Vec::new();
+        for m in j.req("models")?.as_arr().context("models")? {
+            let mut hlo = Vec::new();
+            if let Some(map) = m.req("hlo")?.as_obj() {
+                for (b, p) in map {
+                    hlo.push((
+                        b.parse::<usize>().context("hlo batch key")?,
+                        root.join(p.as_str().context("hlo path")?),
+                    ));
+                }
+            }
+            hlo.sort_by_key(|(b, _)| *b);
+            let pallas_hlo = match (m.get("pallas_hlo"), m.get("pallas_batch")) {
+                (Some(Json::Str(p)), Some(b)) => {
+                    Some((b.as_usize().unwrap_or(8), root.join(p)))
+                }
+                _ => None,
+            };
+            models.push(ModelEntry {
+                id: m.req("id")?.as_str().context("id")?.to_string(),
+                arch: m.req("arch")?.as_str().context("arch")?.to_string(),
+                dataset: m.req("dataset")?.as_str().context("dataset")?.to_string(),
+                plan_path: root.join(m.req("plan")?.as_str().context("plan")?),
+                ckpt_path: root.join(m.req("ckpt")?.as_str().context("ckpt")?),
+                hlo,
+                pallas_hlo,
+            });
+        }
+        let mut datasets = Vec::new();
+        for d in j.req("datasets")?.as_arr().context("datasets")? {
+            datasets.push(DatasetEntry {
+                name: d.req("name")?.as_str().context("name")?.to_string(),
+                classes: d.req("classes")?.as_usize().context("classes")?,
+                eval_path: root.join(d.req("eval")?.as_str().context("eval")?),
+                eval_seed: d.req("eval_seed")?.as_f64().context("eval_seed")? as u64,
+                n: d.req("n")?.as_usize().context("n")?,
+            });
+        }
+        Ok(Zoo { root: root.to_path_buf(), models, datasets })
+    }
+
+    pub fn model(&self, id: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.id == id)
+            .with_context(|| format!("model '{id}' not in manifest"))
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetEntry> {
+        self.datasets
+            .iter()
+            .find(|d| d.name == name)
+            .with_context(|| format!("dataset '{name}' not in manifest"))
+    }
+
+    pub fn load_plan(&self, entry: &ModelEntry) -> Result<Plan> {
+        let plan = Plan::load(&entry.plan_path)?;
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    pub fn load_checkpoint(&self, entry: &ModelEntry) -> Result<Checkpoint> {
+        Checkpoint::load(&entry.ckpt_path)
+    }
+
+    /// HLO path for the smallest batch >= `want` (or the largest available).
+    pub fn hlo_for_batch<'a>(&self, entry: &'a ModelEntry, want: usize) -> Option<(usize, &'a Path)> {
+        entry
+            .hlo
+            .iter()
+            .find(|(b, _)| *b >= want)
+            .or_else(|| entry.hlo.last())
+            .map(|(b, p)| (*b, p.as_path()))
+    }
+}
+
+/// Default artifacts root: $DFMPC_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("DFMPC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,322 @@
+//! DF-MPC — the paper's contribution (Algorithm 1, Eq. 27), in rust.
+//!
+//! Mirror of `python/compile/quantize.py::dfmpc` (golden-tested). Per pair
+//! (low conv L -> high conv H, paper Fig. 2):
+//!   1. ternarize W_L (Eq. 3/4); the TWN scale alpha is absorbed by
+//!      recalibrating BN_L's statistics (the paper: "we complete the
+//!      solution by re-calibrating the two statistics mu-hat, sigma-hat").
+//!   2. data-free BN recalibration:
+//!        sigma_hat_j = sigma_j * ||w_hat_j|| / ||w_j||
+//!        mu_hat_j    = mu_j * sum(w_hat_j) / sum(w_j)
+//!   3. uniform-quantize W_H to `bits_high` (Eq. 6).
+//!   4. closed-form c_j (Eq. 27), clamped to c >= 0, and scale H's input
+//!      channels [offset, offset+o_L) by c (Eq. 7).
+//! Unpaired convs and the FC head are quantized at `bits_high`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::model::{Checkpoint, Plan};
+use crate::tensor::ops::BN_EPS;
+use crate::tensor::Tensor;
+
+use super::ternary::ternarize;
+use super::uniform::quantize_uniform;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DfmpcConfig {
+    pub bits_low: u32,
+    pub bits_high: u32,
+    pub lam1: f32,
+    pub lam2: f32,
+}
+
+impl Default for DfmpcConfig {
+    fn default() -> Self {
+        // Fig. 3 ablation optimum: lam1 = 0.5, lam2 = 0.
+        DfmpcConfig { bits_low: 2, bits_high: 6, lam1: 0.5, lam2: 0.0 }
+    }
+}
+
+/// Per-pair diagnostic output (drives Fig. 3/4 reporting).
+#[derive(Clone, Debug)]
+pub struct PairReport {
+    pub low: String,
+    pub high: String,
+    pub c: Vec<f32>,
+    /// data-free surrogate loss ||Gamma||^2 before compensation (c = 1)
+    pub loss_before: f32,
+    /// after the closed-form solve
+    pub loss_after: f32,
+}
+
+/// Data-free BN statistic recalibration for a ternarized layer.
+pub fn recalibrate_bn(
+    w: &Tensor,
+    w_hat: &Tensor,
+    mu: &[f32],
+    var: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let o = w.shape[0];
+    let mut mu_hat = vec![0.0f32; o];
+    let mut var_hat = vec![0.0f32; o];
+    for j in 0..o {
+        let wf = w.out_channel(j);
+        let wh = w_hat.out_channel(j);
+        let norm_w: f32 = wf.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let norm_h: f32 = wh.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let s = norm_h / norm_w.max(1e-12);
+        let sum_w: f32 = wf.iter().sum();
+        let sum_h: f32 = wh.iter().sum();
+        // The mean ratio is ill-conditioned when the FP filter sums near
+        // zero (ternary sums are integers); clamp its magnitude to a few
+        // multiples of the well-conditioned norm ratio.
+        let m_raw = if sum_w.abs() > 1e-6 { sum_h / sum_w } else { s };
+        let m = m_raw.clamp(-4.0 * s, 4.0 * s);
+        mu_hat[j] = mu[j] * m;
+        var_hat[j] = var[j] * s * s;
+    }
+    (mu_hat, var_hat)
+}
+
+/// Closed-form Eq. (27), diagonal per-channel. Returns (c, loss_before, loss_after)
+/// where the losses are the data-free surrogate Eq. (22) at c=1 and at c*.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_c(
+    w_low: &Tensor,
+    w_hat: &Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    mu: &[f32],
+    var: &[f32],
+    mu_hat: &[f32],
+    var_hat: &[f32],
+    lam1: f32,
+    lam2: f32,
+) -> (Vec<f32>, f32, f32) {
+    let o = w_low.shape[0];
+    let mut c = vec![0.0f32; o];
+    let mut loss_before = 0.0f64;
+    let mut loss_after = 0.0f64;
+    for j in 0..o {
+        let sigma = (var[j] + BN_EPS).sqrt();
+        let sigma_hat = (var_hat[j] + BN_EPS).sqrt();
+        let a = gamma[j] / sigma_hat; // scales w_hat
+        let b = gamma[j] / sigma; // scales w
+        let wh = w_hat.out_channel(j);
+        let wf = w_low.out_channel(j);
+        let mut dot_hh = 0.0f64;
+        let mut dot_hx = 0.0f64;
+        let mut dot_xx = 0.0f64;
+        for (h, x) in wh.iter().zip(wf) {
+            let xh = (a * h) as f64;
+            let xf = (b * x) as f64;
+            dot_hh += xh * xh;
+            dot_hx += xh * xf;
+            dot_xx += xf * xf;
+        }
+        let yhat = (beta[j] - gamma[j] * mu_hat[j] / sigma_hat) as f64;
+        let y = (beta[j] - gamma[j] * mu[j] / sigma) as f64;
+        let num = dot_hx + lam1 as f64 * yhat * y;
+        let den = dot_hh + lam1 as f64 * yhat * yhat + lam2 as f64;
+        let cj = (num / den.max(1e-12)).max(0.0);
+        c[j] = cj as f32;
+        // surrogate loss Eq. (22) (Gamma/Theta terms) at c=1 and c=c*.
+        let at = |cv: f64| {
+            let g = dot_hh * cv * cv - 2.0 * cv * dot_hx + dot_xx;
+            let th = (cv * yhat - y) * (cv * yhat - y);
+            g + lam1 as f64 * th + lam2 as f64 * cv * cv
+        };
+        loss_before += at(1.0);
+        loss_after += at(cj);
+    }
+    (c, loss_before as f32, loss_after as f32)
+}
+
+/// Scale high-conv input channels `[offset, offset+c.len())` by `c` (Eq. 7).
+pub fn scale_input_channels(w: &mut Tensor, offset: usize, c: &[f32], depthwise: bool) {
+    if depthwise {
+        // filter shape (ch, 1, k, k): channel j of the filter <-> input ch j
+        assert_eq!(w.shape[0], c.len());
+        for (j, cj) in c.iter().enumerate() {
+            for v in w.out_channel_mut(j) {
+                *v *= cj;
+            }
+        }
+        return;
+    }
+    let (o, i, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert!(offset + c.len() <= i);
+    for t in 0..o {
+        for (j, cj) in c.iter().enumerate() {
+            let base = ((t * i + offset + j) * kh) * kw;
+            for v in &mut w.data[base..base + kh * kw] {
+                *v *= cj;
+            }
+        }
+    }
+}
+
+/// Run DF-MPC over a full model. Returns the quantized checkpoint and the
+/// per-pair reports.
+pub fn dfmpc(plan: &Plan, ckpt: &Checkpoint, cfg: DfmpcConfig) -> Result<(Checkpoint, Vec<PairReport>)> {
+    let mut out = ckpt.clone();
+    let convs = plan.convs();
+    let mut reports = Vec::new();
+    let mut in_pair: BTreeMap<&str, ()> = BTreeMap::new();
+
+    for pair in &plan.pairs {
+        in_pair.insert(pair.low.as_str(), ());
+        in_pair.insert(pair.high.as_str(), ());
+        let bn = plan
+            .bn_of
+            .get(&pair.low)
+            .with_context(|| format!("low conv {} has no BN", pair.low))?;
+        let w_l = ckpt.get(&format!("{}.w", pair.low))?.clone();
+        let gamma = ckpt.get(&format!("{bn}.gamma"))?.data.clone();
+        let beta = ckpt.get(&format!("{bn}.beta"))?.data.clone();
+        let mu = ckpt.get(&format!("{bn}.mu"))?.data.clone();
+        let var = ckpt.get(&format!("{bn}.var"))?.data.clone();
+
+        // 1+2: low-precision weights + BN recalibration
+        let (w_hat, mu_hat, var_hat) = if cfg.bits_low == 2 {
+            let (w_hat, _delta, _alpha) = ternarize(&w_l);
+            let (mu_hat, var_hat) = recalibrate_bn(&w_l, &w_hat, &mu, &var);
+            (w_hat, mu_hat, var_hat)
+        } else {
+            // uniform low quantization preserves scale; stats unchanged
+            (quantize_uniform(&w_l, cfg.bits_low), mu.clone(), var.clone())
+        };
+
+        // 4: closed-form solve (Eq. 27)
+        let (c, loss_before, loss_after) = solve_c(
+            &w_l, &w_hat, &gamma, &beta, &mu, &var, &mu_hat, &var_hat, cfg.lam1, cfg.lam2,
+        );
+
+        out.put(&format!("{}.w", pair.low), w_hat);
+        out.put(&format!("{bn}.mu"), Tensor::new(vec![mu_hat.len()], mu_hat));
+        out.put(&format!("{bn}.var"), Tensor::new(vec![var_hat.len()], var_hat));
+
+        // 3+4: quantize high conv and apply c on the paired slice (Eq. 7)
+        let hi_spec = convs
+            .get(&pair.high)
+            .with_context(|| format!("high conv {} missing", pair.high))?;
+        let w_h = ckpt.get(&format!("{}.w", pair.high))?;
+        let mut w_hq = quantize_uniform(w_h, cfg.bits_high);
+        scale_input_channels(&mut w_hq, pair.offset, &c, hi_spec.groups > 1);
+        out.put(&format!("{}.w", pair.high), w_hq);
+
+        reports.push(PairReport {
+            low: pair.low.clone(),
+            high: pair.high.clone(),
+            c,
+            loss_before,
+            loss_after,
+        });
+    }
+
+    // Unpaired convs + FC head at the high bitwidth.
+    for (name, _spec) in &convs {
+        if in_pair.contains_key(name.as_str()) {
+            continue;
+        }
+        let w = ckpt.get(&format!("{name}.w"))?;
+        out.put(&format!("{name}.w"), quantize_uniform(w, cfg.bits_high));
+    }
+    for op in &plan.ops {
+        if let crate::model::Op::Fc { name, .. } = op {
+            let w = ckpt.get(&format!("{name}.w"))?;
+            out.put(&format!("{name}.w"), quantize_uniform(w, cfg.bits_high));
+        }
+    }
+    Ok((out, reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(r: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, r.normal_vec(n).into_iter().map(|v| v * scale).collect())
+    }
+
+    #[test]
+    fn c_is_one_when_quantization_is_lossless() {
+        // w_hat == w and identical BN stats => c = 1 exactly (lam2 = 0).
+        let mut r = Rng::new(11);
+        let w = rand_tensor(&mut r, vec![6, 4, 3, 3], 0.5);
+        let gamma = vec![1.0; 6];
+        let beta = vec![0.2; 6];
+        let mu = vec![0.1; 6];
+        let var = vec![1.0; 6];
+        let (c, before, after) =
+            solve_c(&w, &w, &gamma, &beta, &mu, &var, &mu, &var, 0.5, 0.0);
+        for cj in &c {
+            assert!((cj - 1.0).abs() < 1e-5, "c = {cj}");
+        }
+        assert!(before < 1e-8 && after < 1e-8);
+    }
+
+    #[test]
+    fn solve_never_increases_surrogate_loss() {
+        let mut r = Rng::new(12);
+        for _ in 0..20 {
+            let w = rand_tensor(&mut r, vec![8, 4, 3, 3], 0.4);
+            let (w_hat, _, _) = ternarize(&w);
+            let gamma: Vec<f32> = (0..8).map(|_| 0.5 + r.f32()).collect();
+            let beta: Vec<f32> = (0..8).map(|_| r.normal() * 0.2).collect();
+            let mu: Vec<f32> = (0..8).map(|_| r.normal() * 0.2).collect();
+            let var: Vec<f32> = (0..8).map(|_| 0.5 + r.f32()).collect();
+            let (mu_hat, var_hat) = recalibrate_bn(&w, &w_hat, &mu, &var);
+            let (_, before, after) = solve_c(
+                &w, &w_hat, &gamma, &beta, &mu, &var, &mu_hat, &var_hat, 0.5, 0.001,
+            );
+            assert!(
+                after <= before + 1e-5,
+                "closed form must not increase loss: {after} > {before}"
+            );
+        }
+    }
+
+    #[test]
+    fn c_nonnegative() {
+        let mut r = Rng::new(13);
+        let w = rand_tensor(&mut r, vec![16, 8, 3, 3], 1.0);
+        let (w_hat, _, _) = ternarize(&w);
+        let stats: Vec<f32> = (0..16).map(|_| r.normal()).collect();
+        let var = vec![1.0; 16];
+        let (mu_hat, var_hat) = recalibrate_bn(&w, &w_hat, &stats, &var);
+        let (c, _, _) = solve_c(
+            &w, &w_hat, &vec![1.0; 16], &stats, &stats, &var, &mu_hat, &var_hat, 0.5, 0.0,
+        );
+        assert!(c.iter().all(|cj| *cj >= 0.0));
+    }
+
+    #[test]
+    fn scale_input_channels_slice() {
+        let mut w = Tensor::full(vec![2, 4, 1, 1], 1.0);
+        scale_input_channels(&mut w, 1, &[2.0, 3.0], false);
+        assert_eq!(w.data, vec![1.0, 2.0, 3.0, 1.0, 1.0, 2.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn scale_depthwise() {
+        let mut w = Tensor::full(vec![3, 1, 2, 2], 1.0);
+        scale_input_channels(&mut w, 0, &[2.0, 3.0, 4.0], true);
+        assert_eq!(w.data[0], 2.0);
+        assert_eq!(w.data[4], 3.0);
+        assert_eq!(w.data[8], 4.0);
+    }
+
+    #[test]
+    fn recalibration_scales_variance_by_norm_ratio() {
+        let w = Tensor::new(vec![1, 1, 1, 2], vec![2.0, 2.0]);
+        let w_hat = Tensor::new(vec![1, 1, 1, 2], vec![1.0, 1.0]);
+        let (mu_hat, var_hat) = recalibrate_bn(&w, &w_hat, &[4.0], &[8.0]);
+        assert!((mu_hat[0] - 2.0).abs() < 1e-6); // sum ratio 2/4
+        assert!((var_hat[0] - 2.0).abs() < 1e-6); // norm ratio (1/2)^2
+    }
+}

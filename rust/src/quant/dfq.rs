@@ -1,0 +1,209 @@
+//! DFQ baseline — Nagel et al. 2019 ("Data-Free Quantization through
+//! Weight Equalization and Bias Correction"), adapted to our conv+BN
+//! plan-IR exactly as the paper compares against it.
+//!
+//! Cross-layer equalization: for each pair (A, B) sharing channels, pick
+//! s_j = sqrt(r_A_j * r_B_j) / r_B_j with r ranges of the per-channel
+//! weights, rescale A's output channel j (and its BN affine output) by
+//! 1/s_j and B's input channel j by s_j. ReLU is positively homogeneous,
+//! so the network function is unchanged while the weight ranges equalize.
+//! Bias correction: absorb the expected quantization-error shift
+//! E[(Wq - W) a] into the following BN beta, with E[a] from the preceding
+//! BN statistics under the Gaussian + ReLU model (fully data-free).
+
+use anyhow::{Context, Result};
+
+use crate::model::{Checkpoint, Plan};
+use crate::tensor::ops::BN_EPS;
+
+
+use super::uniform::quantize_uniform;
+
+/// Gaussian-ReLU mean: E[max(0, Z)], Z ~ N(mu, sigma^2).
+pub fn relu_gaussian_mean(mu: f32, sigma: f32) -> f32 {
+    if sigma < 1e-12 {
+        return mu.max(0.0);
+    }
+    let a = mu / sigma;
+    // phi(a) and Phi(a)
+    let phi = (-0.5 * a * a).exp() / (2.0 * std::f32::consts::PI).sqrt();
+    let cap_phi = 0.5 * (1.0 + erf(a / std::f32::consts::SQRT_2));
+    mu * cap_phi + sigma * phi
+}
+
+/// Abramowitz-Stegun erf approximation (max abs err ~1.5e-7).
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Weight equalization across every mixed-precision pair, then uniform
+/// quantization at `bits`, then BN bias correction. Returns the quantized
+/// checkpoint.
+pub fn dfq(plan: &Plan, ckpt: &Checkpoint, bits: u32) -> Result<Checkpoint> {
+    let mut work = ckpt.clone();
+    let convs = plan.convs();
+
+    // --- 1. cross-layer equalization over the plan's pairs ---------------
+    for pair in &plan.pairs {
+        let hi_spec = convs.get(&pair.high).context("high conv")?;
+        if hi_spec.groups > 1 {
+            continue; // depthwise handled by per-channel ranges already
+        }
+        let bn = match plan.bn_of.get(&pair.low) {
+            Some(b) => b.clone(),
+            None => continue,
+        };
+        let w_a = work.get(&format!("{}.w", pair.low))?.clone();
+        let mut w_b = work.get(&format!("{}.w", pair.high))?.clone();
+        let o_a = w_a.shape[0];
+        let (bo, bi, bk1, bk2) = (w_b.shape[0], w_b.shape[1], w_b.shape[2], w_b.shape[3]);
+        let mut s = vec![1.0f32; o_a];
+        for j in 0..o_a {
+            let r1 = w_a.out_channel(j).iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let mut r2 = 0.0f32;
+            for t in 0..bo {
+                let base = ((t * bi + pair.offset + j) * bk1) * bk2;
+                for v in &w_b.data[base..base + bk1 * bk2] {
+                    r2 = r2.max(v.abs());
+                }
+            }
+            if r1 > 1e-8 && r2 > 1e-8 {
+                s[j] = (r1 * r2).sqrt() / r2;
+            }
+        }
+        // A's output channel j /= s_j ; BN affine output (gamma, beta) /= s_j
+        let mut w_a = w_a;
+        for j in 0..o_a {
+            for v in w_a.out_channel_mut(j) {
+                *v /= s[j];
+            }
+        }
+        // scaling conv output scales BN input stats identically
+        for field in ["mu"] {
+            let mut t = work.get(&format!("{bn}.{field}"))?.clone();
+            for j in 0..o_a {
+                t.data[j] /= s[j];
+            }
+            work.put(&format!("{bn}.{field}"), t);
+        }
+        let mut var_t = work.get(&format!("{bn}.var"))?.clone();
+        for j in 0..o_a {
+            var_t.data[j] /= s[j] * s[j];
+        }
+        work.put(&format!("{bn}.var"), var_t);
+        // BN output must shrink by 1/s_j -> scale gamma & beta
+        for field in ["gamma", "beta"] {
+            let mut t = work.get(&format!("{bn}.{field}"))?.clone();
+            for j in 0..o_a {
+                t.data[j] /= s[j];
+            }
+            work.put(&format!("{bn}.{field}"), t);
+        }
+        // B's input channel j *= s_j (through ReLU: positively homogeneous)
+        for t in 0..bo {
+            for j in 0..o_a {
+                let base = ((t * bi + pair.offset + j) * bk1) * bk2;
+                for v in &mut w_b.data[base..base + bk1 * bk2] {
+                    *v *= s[j];
+                }
+            }
+        }
+        work.put(&format!("{}.w", pair.low), w_a);
+        work.put(&format!("{}.w", pair.high), w_b);
+    }
+
+    // --- 2. quantize everything uniformly at `bits` ----------------------
+    let mut out = work.clone();
+    for name in convs.keys() {
+        let w = work.get(&format!("{name}.w"))?;
+        out.put(&format!("{name}.w"), quantize_uniform(w, bits));
+    }
+    for op in &plan.ops {
+        if let crate::model::Op::Fc { name, .. } = op {
+            let w = work.get(&format!("{name}.w"))?;
+            out.put(&format!("{name}.w"), quantize_uniform(w, bits));
+        }
+    }
+
+    // --- 3. bias correction on the paired high layers ---------------------
+    for pair in &plan.pairs {
+        let hi_spec = convs.get(&pair.high).context("high conv")?;
+        if hi_spec.groups > 1 {
+            continue;
+        }
+        let (low_bn, hi_bn) = match (plan.bn_of.get(&pair.low), plan.bn_of.get(&pair.high)) {
+            (Some(a), Some(b)) => (a.clone(), b.clone()),
+            _ => continue,
+        };
+        // E[a_j] of the low layer's post-BN ReLU output (Gaussian model)
+        let gamma = work.get(&format!("{low_bn}.gamma"))?.data.clone();
+        let beta = work.get(&format!("{low_bn}.beta"))?.data.clone();
+        let _mu = work.get(&format!("{low_bn}.mu"))?.data.clone();
+        let var = work.get(&format!("{low_bn}.var"))?.data.clone();
+        let o_a = gamma.len();
+        let ea: Vec<f32> = (0..o_a)
+            .map(|j| {
+                // post-BN distribution is N(beta, gamma^2) after normalization
+                let sd = gamma[j].abs() * (var[j] / (var[j] + BN_EPS)).sqrt();
+                relu_gaussian_mean(beta[j], sd.max(1e-12))
+            })
+            .collect();
+        let w_fp = work.get(&format!("{}.w", pair.high))?;
+        let w_q = out.get(&format!("{}.w", pair.high))?;
+        let (bo, bi, k1, k2) = (w_fp.shape[0], w_fp.shape[1], w_fp.shape[2], w_fp.shape[3]);
+        // expected feature-map shift per output channel t
+        let mut shift = vec![0.0f32; bo];
+        for t in 0..bo {
+            for j in 0..o_a {
+                let base = ((t * bi + pair.offset + j) * k1) * k2;
+                let derr: f32 = (base..base + k1 * k2)
+                    .map(|p| w_q.data[p] - w_fp.data[p])
+                    .sum();
+                shift[t] += derr * ea[j];
+            }
+        }
+        // absorb -shift into the high layer's BN beta
+        let mut beta_hi = out.get(&format!("{hi_bn}.beta"))?.clone();
+        let gamma_hi = out.get(&format!("{hi_bn}.gamma"))?.data.clone();
+        let var_hi = out.get(&format!("{hi_bn}.var"))?.data.clone();
+        for t in 0..bo.min(beta_hi.data.len()) {
+            // shift enters pre-BN: beta' = beta - gamma/sigma * shift
+            beta_hi.data[t] -= gamma_hi[t] / (var_hi[t] + BN_EPS).sqrt() * shift[t];
+        }
+        work.put(&format!("{hi_bn}.beta"), beta_hi.clone());
+        out.put(&format!("{hi_bn}.beta"), beta_hi);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427008).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.8427008).abs() < 1e-5);
+        assert!((erf(3.0) - 0.9999779).abs() < 1e-5);
+    }
+
+    #[test]
+    fn relu_gaussian_mean_limits() {
+        // large positive mean: E[relu(Z)] ~ mu
+        assert!((relu_gaussian_mean(10.0, 1.0) - 10.0).abs() < 1e-3);
+        // large negative mean: ~ 0
+        assert!(relu_gaussian_mean(-10.0, 1.0) < 1e-3);
+        // zero mean: sigma/sqrt(2*pi)
+        let expect = 1.0 / (2.0 * std::f32::consts::PI).sqrt();
+        assert!((relu_gaussian_mean(0.0, 1.0) - expect).abs() < 1e-4);
+    }
+}

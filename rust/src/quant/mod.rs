@@ -1,0 +1,158 @@
+//! Quantization library: the paper's DF-MPC plus every baseline it
+//! compares against (DESIGN.md §5 maps each to the paper's tables).
+
+pub mod compensate;
+pub mod dfq;
+pub mod naive;
+pub mod ocs;
+pub mod omse;
+pub mod size;
+pub mod ternary;
+pub mod uniform;
+pub mod zeroq_sim;
+
+pub use compensate::{dfmpc, DfmpcConfig, PairReport};
+pub use size::{model_size, SizeReport};
+
+use anyhow::Result;
+
+use crate::model::{Checkpoint, Plan};
+
+/// Every quantization method the harness can run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    Fp32,
+    /// the paper's method
+    Dfmpc(DfmpcConfig),
+    /// direct mixed-precision, no compensation ("Original" rows, raw
+    /// ternary pattern — the paper's collapsing baseline)
+    NaiveMixed { bits_low: u32, bits_high: u32 },
+    /// direct mixed-precision with the TWN alpha folded in (stronger
+    /// baseline; our ablation)
+    NaiveMixedAlpha { bits_low: u32, bits_high: u32 },
+    /// plain k-bit uniform on all layers
+    Uniform { bits: u32 },
+    /// weight equalization + bias correction (Nagel et al.)
+    Dfq { bits: u32 },
+    /// MSE-optimal clipping (Choukroun et al.)
+    Omse { bits: u32 },
+    /// outlier channel splitting (Zhao et al.)
+    Ocs { bits: u32, expand: f32 },
+    /// generative-baseline stand-in (ZeroQ/GDFQ/GZNQ)
+    ZeroqSim { bits: u32, samples: usize, iters: usize },
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Fp32 => "FP32".into(),
+            Method::Dfmpc(c) => format!("DF-MPC {}/{}", c.bits_low, c.bits_high),
+            Method::NaiveMixed { bits_low, bits_high } => {
+                format!("Original {bits_low}/{bits_high}")
+            }
+            Method::NaiveMixedAlpha { bits_low, bits_high } => {
+                format!("Original+a {bits_low}/{bits_high}")
+            }
+            Method::Uniform { bits } => format!("Uniform {bits}b"),
+            Method::Dfq { bits } => format!("DFQ {bits}b"),
+            Method::Omse { bits } => format!("OMSE {bits}b"),
+            Method::Ocs { bits, .. } => format!("OCS {bits}b"),
+            Method::ZeroqSim { bits, .. } => format!("ZeroQ-sim {bits}b"),
+        }
+    }
+
+    /// Parse "dfmpc:2/6", "uniform:4", "dfq:6", "ocs:4:0.05", "fp32",
+    /// "original:2/6", "omse:4", "zeroq:6".
+    pub fn parse(s: &str) -> Result<Method> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let bits_pair = |spec: &str| -> Result<(u32, u32)> {
+            let (a, b) = spec
+                .split_once('/')
+                .ok_or_else(|| anyhow::anyhow!("expected LOW/HIGH bits in '{spec}'"))?;
+            Ok((a.parse()?, b.parse()?))
+        };
+        Ok(match parts[0] {
+            "fp32" => Method::Fp32,
+            "dfmpc" => {
+                let (lo, hi) = if parts.len() > 1 { bits_pair(parts[1])? } else { (2, 6) };
+                let lam1 = parts.get(2).map(|v| v.parse()).transpose()?.unwrap_or(0.5);
+                let lam2 = parts.get(3).map(|v| v.parse()).transpose()?.unwrap_or(0.0);
+                Method::Dfmpc(DfmpcConfig { bits_low: lo, bits_high: hi, lam1, lam2 })
+            }
+            "original" => {
+                let (lo, hi) = if parts.len() > 1 { bits_pair(parts[1])? } else { (2, 6) };
+                Method::NaiveMixed { bits_low: lo, bits_high: hi }
+            }
+            "original-alpha" => {
+                let (lo, hi) = if parts.len() > 1 { bits_pair(parts[1])? } else { (2, 6) };
+                Method::NaiveMixedAlpha { bits_low: lo, bits_high: hi }
+            }
+            "uniform" => Method::Uniform { bits: parts.get(1).unwrap_or(&"6").parse()? },
+            "dfq" => Method::Dfq { bits: parts.get(1).unwrap_or(&"6").parse()? },
+            "omse" => Method::Omse { bits: parts.get(1).unwrap_or(&"4").parse()? },
+            "ocs" => Method::Ocs {
+                bits: parts.get(1).unwrap_or(&"4").parse()?,
+                expand: parts.get(2).map(|v| v.parse()).transpose()?.unwrap_or(0.05),
+            },
+            "zeroq" => Method::ZeroqSim {
+                bits: parts.get(1).unwrap_or(&"6").parse()?,
+                samples: 32,
+                iters: 64,
+            },
+            other => anyhow::bail!("unknown method '{other}'"),
+        })
+    }
+
+    /// Run the method over a model. FP32 returns the checkpoint unchanged.
+    pub fn apply(&self, plan: &Plan, ckpt: &Checkpoint) -> Result<Checkpoint> {
+        Ok(match self {
+            Method::Fp32 => ckpt.clone(),
+            Method::Dfmpc(cfg) => dfmpc(plan, ckpt, *cfg)?.0,
+            Method::NaiveMixed { bits_low, bits_high } => {
+                naive::naive_mixed(plan, ckpt, *bits_low, *bits_high)?
+            }
+            Method::NaiveMixedAlpha { bits_low, bits_high } => {
+                naive::naive_mixed_alpha(plan, ckpt, *bits_low, *bits_high)?
+            }
+            Method::Uniform { bits } => naive::uniform_all(plan, ckpt, *bits)?,
+            Method::Dfq { bits } => dfq::dfq(plan, ckpt, *bits)?,
+            Method::Omse { bits } => omse::omse(plan, ckpt, *bits)?,
+            Method::Ocs { bits, expand } => ocs::ocs(plan, ckpt, *bits, *expand)?.0,
+            Method::ZeroqSim { bits, samples, iters } => {
+                zeroq_sim::zeroq_sim(plan, ckpt, *bits, *samples, *iters)?
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Method::parse("fp32").unwrap(), Method::Fp32);
+        assert_eq!(
+            Method::parse("dfmpc:3/6").unwrap(),
+            Method::Dfmpc(DfmpcConfig { bits_low: 3, bits_high: 6, lam1: 0.5, lam2: 0.0 })
+        );
+        assert_eq!(
+            Method::parse("dfmpc:2/6:0.3:0.01").unwrap(),
+            Method::Dfmpc(DfmpcConfig { bits_low: 2, bits_high: 6, lam1: 0.3, lam2: 0.01 })
+        );
+        assert_eq!(
+            Method::parse("original:2/6").unwrap(),
+            Method::NaiveMixed { bits_low: 2, bits_high: 6 }
+        );
+        assert_eq!(Method::parse("uniform:4").unwrap(), Method::Uniform { bits: 4 });
+        assert_eq!(Method::parse("ocs:4:0.1").unwrap(), Method::Ocs { bits: 4, expand: 0.1 });
+        assert!(Method::parse("nope").is_err());
+        assert!(Method::parse("dfmpc:26").is_err());
+    }
+
+    #[test]
+    fn names_are_informative() {
+        assert_eq!(Method::parse("dfmpc:2/6").unwrap().name(), "DF-MPC 2/6");
+        assert_eq!(Method::parse("dfq:6").unwrap().name(), "DFQ 6b");
+    }
+}

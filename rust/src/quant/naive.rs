@@ -1,0 +1,73 @@
+//! Direct mixed-precision quantization — the "Original" rows of the
+//! paper's Tables 1/2: no compensation, no BN recalibration.
+//!
+//! `naive_mixed` is the paper-faithful baseline: the ternary layer stores
+//! the raw {-1, 0, +1} pattern of Eq. (3) with the TWN scale alpha simply
+//! *omitted* ("quantized ... directly", §5.1 — this is what collapses to
+//! near-random accuracy). `naive_mixed_alpha` is the stronger variant
+//! that folds alpha back into the weights — our extra ablation showing
+//! how much of DF-MPC's recovery is scale absorption vs compensation.
+
+use anyhow::Result;
+
+use crate::model::{Checkpoint, Op, Plan};
+
+use super::ternary::ternarize;
+use super::uniform::quantize_uniform;
+
+fn naive_impl(plan: &Plan, ckpt: &Checkpoint, bits_low: u32, bits_high: u32, fold_alpha: bool) -> Result<Checkpoint> {
+    let mut out = ckpt.clone();
+    let convs = plan.convs();
+    let low: std::collections::BTreeSet<&str> =
+        plan.pairs.iter().map(|p| p.low.as_str()).collect();
+    for name in convs.keys() {
+        let w = ckpt.get(&format!("{name}.w"))?;
+        let q = if low.contains(name.as_str()) && bits_low == 2 {
+            let (t, _delta, alpha) = ternarize(w);
+            if fold_alpha {
+                t.map(|v| v * alpha)
+            } else {
+                t
+            }
+        } else if low.contains(name.as_str()) {
+            quantize_uniform(w, bits_low)
+        } else {
+            quantize_uniform(w, bits_high)
+        };
+        out.put(&format!("{name}.w"), q);
+    }
+    for op in &plan.ops {
+        if let Op::Fc { name, .. } = op {
+            let w = ckpt.get(&format!("{name}.w"))?;
+            out.put(&format!("{name}.w"), quantize_uniform(w, bits_high));
+        }
+    }
+    Ok(out)
+}
+
+/// Paper-faithful "Original" rows: raw ternary pattern, alpha omitted.
+pub fn naive_mixed(plan: &Plan, ckpt: &Checkpoint, bits_low: u32, bits_high: u32) -> Result<Checkpoint> {
+    naive_impl(plan, ckpt, bits_low, bits_high, false)
+}
+
+/// Stronger direct baseline with the TWN alpha folded into the weights.
+pub fn naive_mixed_alpha(plan: &Plan, ckpt: &Checkpoint, bits_low: u32, bits_high: u32) -> Result<Checkpoint> {
+    naive_impl(plan, ckpt, bits_low, bits_high, true)
+}
+
+/// Single-precision uniform quantization of every conv + fc (the "k-bit"
+/// baseline rows, e.g. DFQ-6bit comparisons).
+pub fn uniform_all(plan: &Plan, ckpt: &Checkpoint, bits: u32) -> Result<Checkpoint> {
+    let mut out = ckpt.clone();
+    for name in plan.convs().keys() {
+        let w = ckpt.get(&format!("{name}.w"))?;
+        out.put(&format!("{name}.w"), quantize_uniform(w, bits));
+    }
+    for op in &plan.ops {
+        if let Op::Fc { name, .. } = op {
+            let w = ckpt.get(&format!("{name}.w"))?;
+            out.put(&format!("{name}.w"), quantize_uniform(w, bits));
+        }
+    }
+    Ok(out)
+}

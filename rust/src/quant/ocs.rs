@@ -1,0 +1,112 @@
+//! OCS baseline — Zhao et al. 2019 ("Improving Neural Network Quantization
+//! without Retraining using Outlier Channel Splitting").
+//!
+//! Outlier input channels are split in half (w -> w/2 + w/2), which halves
+//! the values that dominate the layer-wise max and therefore shrinks the
+//! quantization grid for every other weight. We apply the functionally
+//! equivalent folded form: split channels quantize as 2 * Q(w/2) under the
+//! post-split scale, and the channel-duplication cost is charged to the
+//! model size (`expand_ratio`), exactly how the paper reports OCS overhead.
+
+use anyhow::Result;
+
+use crate::model::{Checkpoint, Op, Plan};
+use crate::tensor::Tensor;
+
+use super::uniform::quantize_uniform_scaled;
+
+/// Quantize one filter with OCS: `expand_ratio` (e.g. 0.05) of input
+/// channels with the largest absolute weight are split.
+pub fn quantize_ocs(w: &Tensor, k: u32, expand_ratio: f32) -> Tensor {
+    if w.ndim() < 2 {
+        return quantize_uniform_scaled(w, k, w.abs_max());
+    }
+    let i = w.shape[1];
+    let per: usize = w.shape[2..].iter().product();
+    let o = w.shape[0];
+    // max |w| per input channel
+    let mut ch_max = vec![0.0f32; i];
+    for t in 0..o {
+        for j in 0..i {
+            let base = (t * i + j) * per;
+            for v in &w.data[base..base + per] {
+                ch_max[j] = ch_max[j].max(v.abs());
+            }
+        }
+    }
+    let n_split = ((i as f32 * expand_ratio).ceil() as usize).min(i);
+    let mut order: Vec<usize> = (0..i).collect();
+    order.sort_by(|&a, &b| ch_max[b].partial_cmp(&ch_max[a]).unwrap());
+    let split: std::collections::BTreeSet<usize> = order[..n_split].iter().copied().collect();
+    // post-split scale: halved outlier channels
+    let mut scale = 0.0f32;
+    for j in 0..i {
+        let m = if split.contains(&j) { ch_max[j] / 2.0 } else { ch_max[j] };
+        scale = scale.max(m);
+    }
+    let scale = scale.max(1e-12);
+    let levels = ((1u64 << k) - 1) as f32;
+    let quant = |v: f32| {
+        let t = (v / (2.0 * scale) + 0.5).clamp(0.0, 1.0);
+        ((2.0 / levels) * (levels * t).round() - 1.0) * scale
+    };
+    let mut out = w.clone();
+    for t in 0..o {
+        for j in 0..i {
+            let base = (t * i + j) * per;
+            for v in &mut out.data[base..base + per] {
+                *v = if split.contains(&j) { 2.0 * quant(*v / 2.0) } else { quant(*v) };
+            }
+        }
+    }
+    out
+}
+
+/// Whole-model OCS. Returns the checkpoint and the average channel
+/// expansion (for size accounting).
+pub fn ocs(plan: &Plan, ckpt: &Checkpoint, bits: u32, expand_ratio: f32) -> Result<(Checkpoint, f32)> {
+    let mut out = ckpt.clone();
+    for name in plan.convs().keys() {
+        let w = ckpt.get(&format!("{name}.w"))?;
+        out.put(&format!("{name}.w"), quantize_ocs(w, bits, expand_ratio));
+    }
+    for op in &plan.ops {
+        if let Op::Fc { name, .. } = op {
+            let w = ckpt.get(&format!("{name}.w"))?;
+            out.put(&format!("{name}.w"), quantize_ocs(w, bits, expand_ratio));
+        }
+    }
+    Ok((out, 1.0 + expand_ratio))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::uniform::quantize_uniform;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ocs_beats_plain_uniform_with_outlier_channel() {
+        let mut r = Rng::new(31);
+        let mut w = Tensor::new(vec![8, 8, 3, 3], r.normal_vec(8 * 8 * 9));
+        // channel 2 is an outlier
+        for t in 0..8 {
+            for v in w.out_channel_mut(t)[2 * 9..3 * 9].iter_mut() {
+                *v *= 8.0;
+            }
+        }
+        let e_plain = w.l2_dist(&quantize_uniform(&w, 4));
+        let e_ocs = w.l2_dist(&quantize_ocs(&w, 4, 0.15));
+        assert!(e_ocs < e_plain, "ocs {e_ocs} !< plain {e_plain}");
+    }
+
+    #[test]
+    fn zero_ratio_equals_uniform() {
+        let mut r = Rng::new(32);
+        let w = Tensor::new(vec![4, 4, 3, 3], r.normal_vec(4 * 4 * 9));
+        let a = quantize_ocs(&w, 6, 0.0);
+        let b = quantize_uniform(&w, 6);
+        // identical up to the clamp in the OCS path
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+}

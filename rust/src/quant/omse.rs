@@ -1,0 +1,110 @@
+//! OMSE baseline — Choukroun et al. 2019 ("Low-bit Quantization of Neural
+//! Networks for Efficient Inference"): per-layer MSE-optimal clipping of
+//! the uniform quantizer scale, found by golden-section search over the
+//! clip ratio (no data needed for weight quantization).
+
+use anyhow::Result;
+
+use crate::model::{Checkpoint, Op, Plan};
+use crate::tensor::Tensor;
+
+use super::uniform::quantize_uniform_scaled;
+
+/// MSE between w and its k-bit quantization clipped at `scale`.
+fn quant_mse(w: &Tensor, k: u32, scale: f32) -> f64 {
+    let levels = ((1u64 << k) - 1) as f32;
+    let s = scale.max(1e-12);
+    let mut err = 0.0f64;
+    for &v in &w.data {
+        let t = (v / (2.0 * s) + 0.5).clamp(0.0, 1.0);
+        let q = ((2.0 / levels) * (levels * t).round() - 1.0) * s;
+        let d = (v - q) as f64;
+        err += d * d;
+    }
+    err
+}
+
+/// Golden-section search for the MSE-minimizing clip scale in
+/// [0.2*max|w|, max|w|].
+pub fn optimal_scale(w: &Tensor, k: u32) -> f32 {
+    let hi0 = w.abs_max().max(1e-12);
+    let (mut lo, mut hi) = (0.2 * hi0, hi0);
+    let gr = (5.0f32.sqrt() - 1.0) / 2.0;
+    let mut c = hi - gr * (hi - lo);
+    let mut d = lo + gr * (hi - lo);
+    let mut fc = quant_mse(w, k, c);
+    let mut fd = quant_mse(w, k, d);
+    for _ in 0..40 {
+        if fc < fd {
+            hi = d;
+            d = c;
+            fd = fc;
+            c = hi - gr * (hi - lo);
+            fc = quant_mse(w, k, c);
+        } else {
+            lo = c;
+            c = d;
+            fc = fd;
+            d = lo + gr * (hi - lo);
+            fd = quant_mse(w, k, d);
+        }
+        if (hi - lo) < 1e-4 * hi0 {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Quantize with the MSE-optimal clip (values outside the clip saturate).
+pub fn quantize_omse(w: &Tensor, k: u32) -> Tensor {
+    let s = optimal_scale(w, k);
+    let clipped = w.clone().map(|v| v.clamp(-s, s));
+    quantize_uniform_scaled(&clipped, k, s)
+}
+
+/// Whole-model OMSE at `bits`.
+pub fn omse(plan: &Plan, ckpt: &Checkpoint, bits: u32) -> Result<Checkpoint> {
+    let mut out = ckpt.clone();
+    for name in plan.convs().keys() {
+        let w = ckpt.get(&format!("{name}.w"))?;
+        out.put(&format!("{name}.w"), quantize_omse(w, bits));
+    }
+    for op in &plan.ops {
+        if let Op::Fc { name, .. } = op {
+            let w = ckpt.get(&format!("{name}.w"))?;
+            out.put(&format!("{name}.w"), quantize_omse(w, bits));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::uniform::quantize_uniform;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn omse_beats_max_scale_on_heavy_tails() {
+        // Inject outliers: max-scale quantization wastes grid on them.
+        let mut r = Rng::new(21);
+        let mut data = r.normal_vec(4096);
+        data[0] = 20.0;
+        data[1] = -20.0;
+        let w = Tensor::new(vec![4096], data);
+        for k in [2u32, 4] {
+            let e_max = w.l2_dist(&quantize_uniform(&w, k));
+            let e_omse = w.l2_dist(&quantize_omse(&w, k));
+            assert!(e_omse < e_max, "k={k}: omse {e_omse} !< max {e_max}");
+        }
+    }
+
+    #[test]
+    fn optimal_scale_below_max_for_gaussian() {
+        let mut r = Rng::new(22);
+        let w = Tensor::new(vec![8192], r.normal_vec(8192));
+        let s = optimal_scale(&w, 4);
+        assert!(s < w.abs_max());
+        assert!(s > 0.2 * w.abs_max());
+    }
+}

@@ -1,0 +1,136 @@
+//! Model size accounting — the "Size (MB)" column of Tables 3/4.
+//! Weight storage only (the papers' convention): each conv/fc parameter
+//! stored at its assigned bitwidth plus one f32 scale per tensor (and one
+//! f32 per compensated channel for DF-MPC's c, which the paper folds into
+//! BN at inference time — we charge it anyway, conservatively).
+
+use crate::model::{Op, Plan};
+
+use super::Method;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SizeReport {
+    pub mb: f64,
+    pub fp32_mb: f64,
+    /// parameter-weighted mean bitwidth
+    pub avg_bits: f64,
+}
+
+fn weight_numels(plan: &Plan) -> Vec<(String, usize, bool)> {
+    // (name, numel, is_low_paired)
+    let low: std::collections::BTreeSet<&str> =
+        plan.pairs.iter().map(|p| p.low.as_str()).collect();
+    let mut out = Vec::new();
+    for (name, c) in plan.convs() {
+        let numel = c.cout * (c.cin / c.groups) * c.k * c.k;
+        out.push((name.clone(), numel, low.contains(name.as_str())));
+    }
+    for op in &plan.ops {
+        if let Op::Fc { name, cin, cout } = op {
+            out.push((name.clone(), cin * cout, false));
+        }
+    }
+    out
+}
+
+/// Size of the model quantized with `method`.
+pub fn model_size(plan: &Plan, method: &Method) -> SizeReport {
+    let weights = weight_numels(plan);
+    let total: usize = weights.iter().map(|(_, n, _)| n).sum();
+    let fp32_mb = total as f64 * 4.0 / 1e6;
+    let mut bits_total = 0.0f64;
+    let mut overhead_bits = 0.0f64;
+    for (_name, numel, is_low) in &weights {
+        let (bits, extra) = match method {
+            Method::Fp32 => (32.0, 0.0),
+            Method::Dfmpc(cfg) => {
+                if *is_low {
+                    (cfg.bits_low as f64, 32.0) // per-tensor alpha (in BN)
+                } else {
+                    (cfg.bits_high as f64, 32.0) // per-tensor scale
+                }
+            }
+            Method::NaiveMixed { bits_low, bits_high }
+            | Method::NaiveMixedAlpha { bits_low, bits_high } => {
+                (if *is_low { *bits_low as f64 } else { *bits_high as f64 }, 32.0)
+            }
+            Method::Uniform { bits }
+            | Method::Dfq { bits }
+            | Method::Omse { bits }
+            | Method::ZeroqSim { bits, .. } => (*bits as f64, 32.0),
+            Method::Ocs { bits, expand } => {
+                // channel duplication inflates stored weights
+                ((*bits as f64) * (1.0 + *expand as f64), 32.0)
+            }
+        };
+        bits_total += bits * *numel as f64;
+        overhead_bits += extra;
+    }
+    // DF-MPC stores one c per compensated channel (folded into BN, charged).
+    if let Method::Dfmpc(_) = method {
+        let convs = plan.convs();
+        for pair in &plan.pairs {
+            if let Some(lo) = convs.get(&pair.low) {
+                overhead_bits += 32.0 * lo.cout as f64;
+            }
+        }
+    }
+    let mb = (bits_total + overhead_bits) / 8.0 / 1e6;
+    SizeReport { mb, fp32_mb, avg_bits: bits_total / total as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Plan;
+    use crate::quant::DfmpcConfig;
+
+    fn tiny_plan() -> Plan {
+        Plan::parse(
+            r#"{
+          "name": "tiny", "input": [3, 8, 8], "num_classes": 4,
+          "ops": [
+            {"op": "conv", "name": "c1", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+            {"op": "bn", "name": "c1_bn", "ch": 4},
+            {"op": "relu"},
+            {"op": "conv", "name": "c2", "cin": 4, "cout": 8, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+            {"op": "bn", "name": "c2_bn", "ch": 8},
+            {"op": "relu"},
+            {"op": "gap"},
+            {"op": "fc", "name": "fc", "cin": 8, "cout": 4}
+          ],
+          "pairs": [{"low": "c1", "high": "c2", "offset": 0}],
+          "bn_of": {"c1": "c1_bn", "c2": "c2_bn"}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fp32_size_matches_param_bytes() {
+        let p = tiny_plan();
+        let s = model_size(&p, &Method::Fp32);
+        let numel = 4 * 3 * 9 + 8 * 4 * 9 + 32;
+        assert!((s.mb - numel as f64 * 4.0 / 1e6).abs() < 1e-9);
+        assert_eq!(s.avg_bits, 32.0);
+    }
+
+    #[test]
+    fn mixed_precision_shrinks_and_orders() {
+        let p = tiny_plan();
+        let fp = model_size(&p, &Method::Fp32);
+        let mp26 = model_size(&p, &Method::Dfmpc(DfmpcConfig::default()));
+        let u4 = model_size(&p, &Method::Uniform { bits: 4 });
+        assert!(mp26.mb < fp.mb);
+        assert!(mp26.avg_bits < 6.0 && mp26.avg_bits > 2.0);
+        assert!(u4.avg_bits == 4.0);
+    }
+
+    #[test]
+    fn ocs_charges_expansion() {
+        let p = tiny_plan();
+        let plain = model_size(&p, &Method::Uniform { bits: 4 });
+        let ocs = model_size(&p, &Method::Ocs { bits: 4, expand: 0.05 });
+        assert!(ocs.mb > plain.mb);
+    }
+}

@@ -1,0 +1,78 @@
+//! Ternary weight quantization — Eq. (3)/(4) of the paper (TWN).
+//! Bit-exact mirror of `python/compile/kernels/ternary.py` + `ref.py`.
+
+use crate::tensor::Tensor;
+
+/// Layer-wise threshold and scaling factor, Eq. (4):
+///   Delta = 0.7 * E|W|,  alpha = E(|W_j| : |W_j| > Delta)
+pub fn ternary_stats(w: &Tensor) -> (f32, f32) {
+    let delta = 0.7 * w.abs_mean();
+    let mut sum = 0.0f32;
+    let mut count = 0usize;
+    for v in &w.data {
+        if v.abs() > delta {
+            sum += v.abs();
+            count += 1;
+        }
+    }
+    let alpha = if count == 0 { 0.0 } else { sum / count as f32 };
+    (delta, alpha)
+}
+
+/// Eq. (3): threshold to {-1, 0, +1}.
+pub fn ternarize(w: &Tensor) -> (Tensor, f32, f32) {
+    let (delta, alpha) = ternary_stats(w);
+    let out = w.clone().map(|v| {
+        if v > delta {
+            1.0
+        } else if v < -delta {
+            -1.0
+        } else {
+            0.0
+        }
+    });
+    (out, delta, alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn values_are_ternary() {
+        let mut r = Rng::new(1);
+        let w = Tensor::new(vec![8, 4, 3, 3], r.normal_vec(8 * 4 * 9));
+        let (t, delta, alpha) = ternarize(&w);
+        assert!(delta > 0.0 && alpha > delta);
+        for v in &t.data {
+            assert!(*v == -1.0 || *v == 0.0 || *v == 1.0);
+        }
+    }
+
+    #[test]
+    fn threshold_boundary() {
+        // |w| == delta exactly maps to 0 (strict inequality, like python)
+        let w = Tensor::new(vec![4], vec![1.0, -1.0, 0.5, -0.5]);
+        let (t, delta, _) = ternarize(&w);
+        assert!((delta - 0.7 * 0.75).abs() < 1e-6);
+        assert_eq!(t.data, vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn alpha_is_mean_of_survivors() {
+        let w = Tensor::new(vec![4], vec![2.0, -2.0, 0.1, 0.1]);
+        let (_, delta, alpha) = ternarize(&w);
+        assert!(delta < 2.0 && delta > 0.1);
+        assert_eq!(alpha, 2.0);
+    }
+
+    #[test]
+    fn all_zero_weights() {
+        let w = Tensor::zeros(vec![4]);
+        let (t, delta, alpha) = ternarize(&w);
+        assert_eq!(delta, 0.0);
+        assert_eq!(alpha, 0.0);
+        assert_eq!(t.data, vec![0.0; 4]);
+    }
+}

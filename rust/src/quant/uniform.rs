@@ -1,0 +1,86 @@
+//! Uniform k-bit weight quantization — DoReFa-Net, Eq. (6) of the paper.
+//! Mirror of `python/compile/kernels/dorefa.py`; kept in original scale
+//! (fake-quant) so the same inference graph evaluates any variant.
+
+use crate::tensor::Tensor;
+
+/// Eq. (6) with layer-wise scale s = max|w| (optionally overridden, which
+/// is how OMSE/OCS plug in their clipping):
+///   q = (2/(2^k-1)) * round((2^k-1) * (w/(2s) + 1/2)) - 1, output q*s.
+pub fn quantize_uniform_scaled(w: &Tensor, k: u32, scale: f32) -> Tensor {
+    let levels = ((1u64 << k) - 1) as f32;
+    let s = scale.max(1e-12);
+    w.clone().map(|v| {
+        let t = v / (2.0 * s) + 0.5;
+        let q = (2.0 / levels) * (levels * t).round() - 1.0;
+        q * s
+    })
+}
+
+/// Eq. (6) with the layer-wise max|w| scale (the paper's form).
+pub fn quantize_uniform(w: &Tensor, k: u32) -> Tensor {
+    quantize_uniform_scaled(w, k, w.abs_max())
+}
+
+/// Quantization grid step for a given bitwidth and scale.
+pub fn grid_step(k: u32, scale: f32) -> f32 {
+    2.0 * scale / ((1u64 << k) - 1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn endpoints_are_exact() {
+        let w = Tensor::new(vec![3], vec![1.0, -1.0, 0.0]);
+        let q = quantize_uniform(&w, 6);
+        assert!((q.data[0] - 1.0).abs() < 1e-6);
+        assert!((q.data[1] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut r = Rng::new(2);
+        let w = Tensor::new(vec![1000], r.normal_vec(1000));
+        let s = w.abs_max();
+        for k in [2u32, 4, 6, 8] {
+            let q = quantize_uniform(&w, k);
+            let step = grid_step(k, s);
+            let max_err = w.max_abs_diff(&q);
+            assert!(max_err <= step / 2.0 + 1e-6, "k={k} err {max_err} step {step}");
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut r = Rng::new(3);
+        let w = Tensor::new(vec![256], r.normal_vec(256));
+        let q1 = quantize_uniform(&w, 6);
+        // Re-quantizing at the same scale is a fixed point.
+        let q2 = quantize_uniform_scaled(&q1, 6, w.abs_max());
+        assert!(q1.max_abs_diff(&q2) < 1e-6);
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let mut r = Rng::new(4);
+        let w = Tensor::new(vec![4096], r.normal_vec(4096));
+        let e2 = w.l2_dist(&quantize_uniform(&w, 2));
+        let e4 = w.l2_dist(&quantize_uniform(&w, 4));
+        let e6 = w.l2_dist(&quantize_uniform(&w, 6));
+        assert!(e2 > e4 && e4 > e6);
+    }
+
+    #[test]
+    fn level_count_respected() {
+        let mut r = Rng::new(5);
+        let w = Tensor::new(vec![10_000], r.normal_vec(10_000));
+        let q = quantize_uniform(&w, 3);
+        let mut distinct: Vec<i64> = q.data.iter().map(|v| (v * 1e4).round() as i64).collect();
+        distinct.sort();
+        distinct.dedup();
+        assert!(distinct.len() <= 8, "3-bit must have <= 8 levels, got {}", distinct.len());
+    }
+}

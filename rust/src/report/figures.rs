@@ -1,0 +1,163 @@
+//! Figure-data generation: weight histograms (paper Fig. 4) and
+//! filter-normalized 2-D loss surfaces (paper Fig. 5, Li et al. 2018).
+
+use anyhow::Result;
+
+use crate::data::EvalShard;
+use crate::infer::Engine;
+use crate::model::{Checkpoint, Plan};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Histogram of a weight tensor over `bins` uniform bins in [-range, range].
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub range: f32,
+    pub counts: Vec<usize>,
+    pub mean: f32,
+    pub std: f32,
+}
+
+pub fn weight_histogram(w: &Tensor, bins: usize) -> Histogram {
+    let range = w.abs_max().max(1e-12);
+    let mut counts = vec![0usize; bins];
+    for &v in &w.data {
+        let t = ((v + range) / (2.0 * range)).clamp(0.0, 1.0);
+        let b = ((t * bins as f32) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    let mean = w.data.iter().sum::<f32>() / w.data.len() as f32;
+    let var = w.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / w.data.len() as f32;
+    Histogram { range, counts, mean, std: var.sqrt() }
+}
+
+/// Render a histogram as an ASCII bar chart (for figure output in logs).
+pub fn ascii_hist(h: &Histogram, width: usize) -> String {
+    let max = *h.counts.iter().max().unwrap_or(&1) as f64;
+    let mut out = String::new();
+    let bins = h.counts.len();
+    for (i, &c) in h.counts.iter().enumerate() {
+        let lo = -h.range + 2.0 * h.range * i as f32 / bins as f32;
+        let bar = ((c as f64 / max) * width as f64).round() as usize;
+        out.push_str(&format!("{:>8.4} | {}\n", lo, "#".repeat(bar)));
+    }
+    out.push_str(&format!("mean={:+.5} std={:.5}\n", h.mean, h.std));
+    out
+}
+
+/// Filter-normalized random direction (Li et al. 2018): per output channel,
+/// the perturbation is scaled to the channel's weight norm so the surface
+/// is comparable across layers.
+pub fn filter_normalized_direction(ckpt: &Checkpoint, names: &[String], rng: &mut Rng) -> Checkpoint {
+    let mut dir = Checkpoint::default();
+    for name in names {
+        let w = ckpt.get(name).expect("weight");
+        let mut d = Tensor::new(w.shape.clone(), rng.normal_vec(w.len()));
+        if w.ndim() >= 2 {
+            let o = w.shape[0];
+            for j in 0..o {
+                let wn: f32 = w.out_channel(j).iter().map(|v| v * v).sum::<f32>().sqrt();
+                let dn: f32 = d.out_channel(j).iter().map(|v| v * v).sum::<f32>().sqrt();
+                let s = if dn > 1e-12 { wn / dn } else { 0.0 };
+                for v in d.out_channel_mut(j) {
+                    *v *= s;
+                }
+            }
+        }
+        dir.put(name, d);
+    }
+    dir
+}
+
+/// 2-D loss surface around `ckpt` along two filter-normalized directions:
+/// grid[(i, j)] = loss(ckpt + a_i * d1 + b_j * d2).
+pub struct LossSurface {
+    pub alphas: Vec<f32>,
+    pub betas: Vec<f32>,
+    pub loss: Vec<Vec<f64>>, // [alpha][beta]
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn loss_surface(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    shard: &EvalShard,
+    n_images: usize,
+    grid: usize,
+    span: f32,
+    seed: u64,
+) -> Result<LossSurface> {
+    let weight_names: Vec<String> = plan
+        .convs()
+        .keys()
+        .map(|n| format!("{n}.w"))
+        .collect();
+    let mut rng = Rng::new(seed);
+    let d1 = filter_normalized_direction(ckpt, &weight_names, &mut rng);
+    let d2 = filter_normalized_direction(ckpt, &weight_names, &mut rng);
+    let (x, labels) = shard.batch(0, n_images.min(shard.n()));
+    let steps: Vec<f32> = (0..grid)
+        .map(|i| -span + 2.0 * span * i as f32 / (grid - 1).max(1) as f32)
+        .collect();
+    let mut surface = vec![vec![0.0f64; grid]; grid];
+    for (ia, &a) in steps.iter().enumerate() {
+        for (ib, &b) in steps.iter().enumerate() {
+            let mut perturbed = ckpt.clone();
+            for name in &weight_names {
+                let w0 = ckpt.get(name)?;
+                let w1 = d1.get(name)?;
+                let w2 = d2.get(name)?;
+                let mut w = w0.clone();
+                for i in 0..w.len() {
+                    w.data[i] += a * w1.data[i] + b * w2.data[i];
+                }
+                perturbed.put(name, w);
+            }
+            let engine = Engine::new(plan, &perturbed);
+            surface[ia][ib] = engine.loss(&x, labels)?;
+        }
+    }
+    Ok(LossSurface { alphas: steps.clone(), betas: steps, loss: surface })
+}
+
+/// Sharpness proxy: mean loss increase over the grid relative to center.
+pub fn sharpness(s: &LossSurface) -> f64 {
+    let g = s.alphas.len();
+    let center = s.loss[g / 2][g / 2];
+    let mut acc = 0.0;
+    let mut n = 0;
+    for row in &s.loss {
+        for &v in row {
+            acc += (v - center).max(0.0);
+            n += 1;
+        }
+    }
+    acc / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_everything() {
+        let w = Tensor::new(vec![6], vec![-1.0, -0.5, 0.0, 0.2, 0.5, 1.0]);
+        let h = weight_histogram(&w, 4);
+        assert_eq!(h.counts.iter().sum::<usize>(), 6);
+        assert!((h.mean - 0.0333).abs() < 1e-3);
+    }
+
+    #[test]
+    fn direction_is_filter_normalized() {
+        let mut ckpt = Checkpoint::default();
+        ckpt.put("c.w", Tensor::full(vec![2, 1, 2, 2], 3.0));
+        let mut rng = Rng::new(5);
+        let d = filter_normalized_direction(&ckpt, &["c.w".to_string()], &mut rng);
+        let dt = d.get("c.w").unwrap();
+        for j in 0..2 {
+            let dn: f32 = dt.out_channel(j).iter().map(|v| v * v).sum::<f32>().sqrt();
+            let wn = 3.0f32 * 2.0; // ||[3,3,3,3]|| = 6
+            assert!((dn - wn).abs() < 1e-4, "dn {dn}");
+        }
+    }
+}

@@ -1,0 +1,4 @@
+//! Paper-table/figure formatting and figure-data generation.
+
+pub mod figures;
+pub mod tables;

@@ -1,0 +1,8 @@
+//! PJRT runtime: artifact loading, compilation, execution, and the
+//! dedicated runtime thread the coordinator talks to.
+
+pub mod pjrt;
+pub mod worker;
+
+pub use pjrt::{flat_params, literal_to_tensor, tensor_to_literal, PjrtModel, PjrtRuntime};
+pub use worker::PjrtWorker;

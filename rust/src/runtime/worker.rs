@@ -1,0 +1,160 @@
+//! Cross-thread façade over the PJRT runtime.
+//!
+//! PJRT handles in the `xla` crate are not Send, so a dedicated runtime
+//! thread owns the client, the compiled executables and the device-resident
+//! parameter buffers; the rest of the coordinator talks to it over
+//! channels with plain (Send) tensors. This mirrors the single-execution-
+//! lane design of GPU serving stacks: one lane per device.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::{Checkpoint, Plan};
+use crate::tensor::Tensor;
+
+use super::pjrt::{PjrtModel, PjrtRuntime};
+
+enum Cmd {
+    Load {
+        id: String,
+        hlo: PathBuf,
+        plan: Box<Plan>,
+        ckpt: Box<Checkpoint>,
+        batch: usize,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    SetParams {
+        id: String,
+        plan: Box<Plan>,
+        ckpt: Box<Checkpoint>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Infer {
+        id: String,
+        x: Tensor,
+        reply: mpsc::Sender<Result<Tensor>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the runtime thread. Clone-able sender side.
+pub struct PjrtWorker {
+    tx: mpsc::Sender<Cmd>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl PjrtWorker {
+    /// Spawn the runtime thread (builds its own PJRT CPU client).
+    pub fn spawn() -> Result<PjrtWorker> {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = thread::Builder::new()
+            .name("dfmpc-pjrt".into())
+            .spawn(move || {
+                let runtime = match PjrtRuntime::cpu() {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut models: BTreeMap<String, (PjrtModel, Box<Plan>)> = BTreeMap::new();
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Load { id, hlo, plan, ckpt, batch, reply } => {
+                            let r = runtime
+                                .load_model(&hlo, &plan, &ckpt, batch)
+                                .map(|m| {
+                                    models.insert(id, (m, plan));
+                                });
+                            let _ = reply.send(r);
+                        }
+                        Cmd::SetParams { id, plan, ckpt, reply } => {
+                            let r = match models.get_mut(&id) {
+                                Some((m, _)) => m.set_params(&runtime, &plan, &ckpt),
+                                None => Err(anyhow!("model '{id}' not loaded")),
+                            };
+                            let _ = reply.send(r);
+                        }
+                        Cmd::Infer { id, x, reply } => {
+                            let r = match models.get(&id) {
+                                Some((m, _)) => m.infer(&runtime, &x),
+                                None => Err(anyhow!("model '{id}' not loaded")),
+                            };
+                            let _ = reply.send(r);
+                        }
+                        Cmd::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawning pjrt thread")?;
+        ready_rx
+            .recv()
+            .context("runtime thread died during init")??;
+        Ok(PjrtWorker { tx, handle: Some(handle) })
+    }
+
+    /// Compile an artifact and upload `ckpt` params under `id`.
+    pub fn load(&self, id: &str, hlo: PathBuf, plan: &Plan, ckpt: &Checkpoint, batch: usize) -> Result<()> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Load {
+                id: id.to_string(),
+                hlo,
+                plan: Box::new(plan.clone()),
+                ckpt: Box::new(ckpt.clone()),
+                batch,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rrx.recv().context("runtime thread dropped reply")?
+    }
+
+    /// Swap the parameters of a loaded model (e.g. to a quantized set).
+    pub fn set_params(&self, id: &str, plan: &Plan, ckpt: &Checkpoint) -> Result<()> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::SetParams {
+                id: id.to_string(),
+                plan: Box::new(plan.clone()),
+                ckpt: Box::new(ckpt.clone()),
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rrx.recv().context("runtime thread dropped reply")?
+    }
+
+    /// Synchronous batched inference.
+    pub fn infer(&self, id: &str, x: Tensor) -> Result<Tensor> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Infer { id: id.to_string(), x, reply: rtx })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rrx.recv().context("runtime thread dropped reply")?
+    }
+
+    /// Fire an async inference; the reply arrives on the returned receiver.
+    pub fn infer_async(&self, id: &str, x: Tensor) -> Result<mpsc::Receiver<Result<Tensor>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Infer { id: id.to_string(), x, reply: rtx })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        Ok(rrx)
+    }
+}
+
+impl Drop for PjrtWorker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

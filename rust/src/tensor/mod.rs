@@ -1,0 +1,170 @@
+//! Minimal dense f32 tensor used by the pure-rust reference engine, the
+//! quantizer and the data pipeline. Row-major (C order), like numpy.
+
+pub mod ops;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} != data len {}", shape, data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn from_fn(shape: Vec<usize>, mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Dimension i (panics if out of range).
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// 4-D accessor (NCHW / OIHW).
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        let (s1, s2, s3) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((a * s1 + b) * s2 + c) * s3 + d]
+    }
+
+    #[inline]
+    pub fn at4_mut(&mut self, a: usize, b: usize, c: usize, d: usize) -> &mut f32 {
+        let (s1, s2, s3) = (self.shape[1], self.shape[2], self.shape[3]);
+        &mut self.data[((a * s1 + b) * s2 + c) * s3 + d]
+    }
+
+    /// 2-D accessor.
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// Contiguous row slice of a 2-D tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let w = self.shape[1];
+        &self.data[r * w..(r + 1) * w]
+    }
+
+    /// Flatten the trailing dims of an OIHW filter: (o, i*k*k).
+    pub fn flat2d(&self) -> (usize, usize) {
+        let o = self.shape[0];
+        (o, self.data.len() / o)
+    }
+
+    /// Channel slice of an OIHW filter: all values of output channel `o`.
+    pub fn out_channel(&self, o: usize) -> &[f32] {
+        let per = self.data.len() / self.shape[0];
+        &self.data[o * per..(o + 1) * per]
+    }
+
+    pub fn out_channel_mut(&mut self, o: usize) -> &mut [f32] {
+        let per = self.data.len() / self.shape[0];
+        &mut self.data[o * per..(o + 1) * per]
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn abs_mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|v| v.abs()).sum::<f32>() / self.data.len() as f32
+    }
+
+    /// L2 distance to another tensor (for numeric cross-checks).
+    pub fn l2_dist(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_row_major() {
+        let t = Tensor::from_fn(vec![2, 3, 4, 5], |i| i as f32);
+        assert_eq!(t.at4(0, 0, 0, 0), 0.0);
+        assert_eq!(t.at4(0, 0, 0, 4), 4.0);
+        assert_eq!(t.at4(0, 0, 1, 0), 5.0);
+        assert_eq!(t.at4(1, 2, 3, 4), 119.0);
+    }
+
+    #[test]
+    fn out_channel_slices() {
+        let t = Tensor::from_fn(vec![4, 2, 3, 3], |i| i as f32);
+        assert_eq!(t.out_channel(1)[0], 18.0);
+        assert_eq!(t.out_channel(1).len(), 18);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn distances() {
+        let a = Tensor::new(vec![3], vec![0.0, 3.0, 0.0]);
+        let b = Tensor::new(vec![3], vec![4.0, 3.0, 0.0]);
+        assert_eq!(a.l2_dist(&b), 4.0);
+        assert_eq!(a.max_abs_diff(&b), 4.0);
+    }
+}

@@ -1,0 +1,424 @@
+//! Neural-net ops for the pure-rust reference engine.
+//!
+//! These are correctness oracles and fallback execution — the production
+//! inference path is the PJRT runtime executing AOT HLO. Conv2d uses
+//! im2col + a blocked matmul so the engine stays usable for whole-dataset
+//! evaluation (see benches/bench_infer.rs for the comparison).
+
+use super::Tensor;
+
+pub const BN_EPS: f32 = 1e-5;
+
+/// C = A(m,k) @ B(k,n), blocked over k for cache locality.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dim mismatch");
+    let mut out = vec![0.0f32; m * n];
+    // i-k-j loop order: innermost loop is contiguous over both B and C rows.
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// im2col for NCHW input: returns (n*oh*ow, c*kh*kw) plus (oh, ow).
+pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, usize, usize) {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let cols = c * k * k;
+    let mut out = vec![0.0f32; n * oh * ow * cols];
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((ni * oh + oy) * ow + ox) * cols;
+                for ci in 0..c {
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            out[row + (ci * k + ky) * k + kx] =
+                                x.at4(ni, ci, iy as usize, ix as usize);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::new(vec![n * oh * ow, cols], out), oh, ow)
+}
+
+/// 2-D convolution, NCHW x OIHW -> NCHW. `groups` supports depthwise.
+pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize, groups: usize) -> Tensor {
+    let (n, c, _h, _wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (o, ci, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(kh, kw, "square kernels only");
+    assert_eq!(c / groups, ci, "input channels {c}/{groups} != filter {ci}");
+    assert_eq!(o % groups, 0);
+    if groups == 1 {
+        let (col, oh, ow) = im2col(x, kh, stride, pad);
+        // (n*oh*ow, c*k*k) @ (c*k*k, o)
+        let wt = transpose2d(&Tensor::new(vec![o, ci * kh * kw], w.data.clone()));
+        let y = matmul(&col, &wt); // (n*oh*ow, o)
+        return nhwc_rows_to_nchw(&y, n, oh, ow, o);
+    }
+    // Grouped/depthwise: direct loops (channel counts are small).
+    let h = x.shape[2];
+    let wd = x.shape[3];
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let opg = o / groups; // out channels per group
+    let mut out = Tensor::zeros(vec![n, o, oh, ow]);
+    for ni in 0..n {
+        for oc in 0..o {
+            let g = oc / opg;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ic in 0..ci {
+                        let xc = g * ci + ic;
+                        for ky in 0..kh {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                acc += x.at4(ni, xc, iy as usize, ix as usize)
+                                    * w.at4(oc, ic, ky, kx);
+                            }
+                        }
+                    }
+                    *out.at4_mut(ni, oc, oy, ox) = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn transpose2d(a: &Tensor) -> Tensor {
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = a.data[i * n + j];
+        }
+    }
+    Tensor::new(vec![n, m], out)
+}
+
+/// Rows laid out as (n, oh, ow, o) -> NCHW tensor.
+fn nhwc_rows_to_nchw(y: &Tensor, n: usize, oh: usize, ow: usize, o: usize) -> Tensor {
+    let mut out = Tensor::zeros(vec![n, o, oh, ow]);
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((ni * oh + oy) * ow + ox) * o;
+                for oc in 0..o {
+                    *out.at4_mut(ni, oc, oy, ox) = y.data[row + oc];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inference-mode batch norm with running statistics.
+pub fn batchnorm(x: &mut Tensor, gamma: &[f32], beta: &[f32], mu: &[f32], var: &[f32]) {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(gamma.len(), c);
+    let hw = h * w;
+    for ci in 0..c {
+        let inv = gamma[ci] / (var[ci] + BN_EPS).sqrt();
+        let shift = beta[ci] - mu[ci] * inv;
+        for ni in 0..n {
+            let base = (ni * c + ci) * hw;
+            for p in &mut x.data[base..base + hw] {
+                *p = *p * inv + shift;
+            }
+        }
+    }
+}
+
+pub fn relu(x: &mut Tensor) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+pub fn relu6(x: &mut Tensor) {
+    for v in &mut x.data {
+        *v = v.clamp(0.0, 6.0);
+    }
+}
+
+pub fn maxpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(vec![n, c, oh, ow]);
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            m = m.max(x.at4(ni, ci, oy * stride + ky, ox * stride + kx));
+                        }
+                    }
+                    *out.at4_mut(ni, ci, oy, ox) = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn avgpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(vec![n, c, oh, ow]);
+    let inv = 1.0 / (k * k) as f32;
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut s = 0.0;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            s += x.at4(ni, ci, oy * stride + ky, ox * stride + kx);
+                        }
+                    }
+                    *out.at4_mut(ni, ci, oy, ox) = s * inv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool: NCHW -> (N, C).
+pub fn gap(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let hw = (h * w) as f32;
+    let mut out = Tensor::zeros(vec![n, c]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * h * w;
+            out.data[ni * c + ci] = x.data[base..base + h * w].iter().sum::<f32>() / hw;
+        }
+    }
+    out
+}
+
+/// Fully connected: (N, I) @ W(O, I)^T + b.
+pub fn fc(x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
+    let (n, i) = (x.shape[0], x.shape[1]);
+    let (o, i2) = (w.shape[0], w.shape[1]);
+    assert_eq!(i, i2);
+    assert_eq!(b.len(), o);
+    let mut out = Tensor::zeros(vec![n, o]);
+    for ni in 0..n {
+        let xr = x.row(ni);
+        for oi in 0..o {
+            let wr = w.row(oi);
+            let mut acc = b[oi];
+            for k in 0..i {
+                acc += xr[k] * wr[k];
+            }
+            out.data[ni * o + oi] = acc;
+        }
+    }
+    out
+}
+
+/// Channel concat of two NCHW tensors.
+pub fn concat_channels(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, ca, h, w) = (a.shape[0], a.shape[1], a.shape[2], a.shape[3]);
+    let cb = b.shape[1];
+    assert_eq!(b.shape[0], n);
+    assert_eq!(b.shape[2], h);
+    assert_eq!(b.shape[3], w);
+    let mut out = Tensor::zeros(vec![n, ca + cb, h, w]);
+    let hw = h * w;
+    for ni in 0..n {
+        let dst = (ni * (ca + cb)) * hw;
+        out.data[dst..dst + ca * hw]
+            .copy_from_slice(&a.data[ni * ca * hw..(ni + 1) * ca * hw]);
+        out.data[dst + ca * hw..dst + (ca + cb) * hw]
+            .copy_from_slice(&b.data[ni * cb * hw..(ni + 1) * cb * hw]);
+    }
+    out
+}
+
+pub fn add_inplace(x: &mut Tensor, y: &Tensor) {
+    assert_eq!(x.shape, y.shape);
+    for (a, b) in x.data.iter_mut().zip(&y.data) {
+        *a += b;
+    }
+}
+
+/// Row-wise argmax of a (N, C) tensor.
+pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
+    (0..x.shape[0])
+        .map(|r| {
+            let row = x.row(r);
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// Row-wise softmax (numerically stable).
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    let (n, c) = (x.shape[0], x.shape[1]);
+    let mut out = x.clone();
+    for r in 0..n {
+        let row = &mut out.data[r * c..(r + 1) * c];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(matmul(&a, &b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 identity conv preserves input.
+        let x = Tensor::from_fn(vec![1, 2, 3, 3], |i| i as f32);
+        let w = Tensor::new(vec![2, 2, 1, 1], vec![1.0, 0.0, 0.0, 1.0]);
+        let y = conv2d(&x, &w, 1, 0, 1);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_known_sum() {
+        // all-ones 3x3 kernel over all-ones input, pad 1: center pixel = 9.
+        let x = Tensor::full(vec![1, 1, 3, 3], 1.0);
+        let w = Tensor::full(vec![1, 1, 3, 3], 1.0);
+        let y = conv2d(&x, &w, 1, 1, 1);
+        assert_eq!(y.at4(0, 0, 1, 1), 9.0);
+        assert_eq!(y.at4(0, 0, 0, 0), 4.0);
+    }
+
+    #[test]
+    fn conv_stride_shape() {
+        let x = Tensor::zeros(vec![2, 3, 32, 32]);
+        let w = Tensor::zeros(vec![8, 3, 3, 3]);
+        let y = conv2d(&x, &w, 2, 1, 1);
+        assert_eq!(y.shape, vec![2, 8, 16, 16]);
+    }
+
+    #[test]
+    fn depthwise_matches_manual() {
+        let x = Tensor::from_fn(vec![1, 2, 4, 4], |i| (i % 7) as f32);
+        let w = Tensor::from_fn(vec![2, 1, 3, 3], |i| ((i % 3) as f32) - 1.0);
+        let y = conv2d(&x, &w, 1, 1, 2);
+        assert_eq!(y.shape, vec![1, 2, 4, 4]);
+        // channel 1 depends only on input channel 1
+        let mut x2 = x.clone();
+        for v in &mut x2.data[0..16] {
+            *v = 99.0; // trash channel 0
+        }
+        let y2 = conv2d(&x2, &w, 1, 1, 2);
+        for p in 0..16 {
+            assert_eq!(y.data[16 + p], y2.data[16 + p]);
+        }
+    }
+
+    #[test]
+    fn bn_normalizes() {
+        let mut x = Tensor::full(vec![1, 1, 2, 2], 10.0);
+        batchnorm(&mut x, &[1.0], &[0.0], &[10.0], &[1.0 - BN_EPS]);
+        for v in &x.data {
+            assert!(v.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pools() {
+        let x = Tensor::from_fn(vec![1, 1, 4, 4], |i| i as f32);
+        let m = maxpool(&x, 2, 2);
+        assert_eq!(m.data, vec![5.0, 7.0, 13.0, 15.0]);
+        let a = avgpool(&x, 2, 2);
+        assert_eq!(a.data, vec![2.5, 4.5, 10.5, 12.5]);
+    }
+
+    #[test]
+    fn gap_and_fc() {
+        let x = Tensor::from_fn(vec![1, 2, 2, 2], |i| i as f32);
+        let g = gap(&x);
+        assert_eq!(g.data, vec![1.5, 5.5]);
+        let w = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let y = fc(&g, &w, &[1.0, -1.0]);
+        assert_eq!(y.data, vec![2.5, 4.5]);
+    }
+
+    #[test]
+    fn concat_layout() {
+        let a = Tensor::full(vec![2, 1, 2, 2], 1.0);
+        let b = Tensor::full(vec![2, 2, 2, 2], 2.0);
+        let c = concat_channels(&a, &b);
+        assert_eq!(c.shape, vec![2, 3, 2, 2]);
+        assert_eq!(c.at4(1, 0, 0, 0), 1.0);
+        assert_eq!(c.at4(1, 2, 1, 1), 2.0);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let s = softmax_rows(&x);
+        for r in 0..2 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        assert_eq!(argmax_rows(&s), vec![2, 2]);
+    }
+}

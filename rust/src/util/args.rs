@@ -1,0 +1,95 @@
+//! Tiny CLI argument parser (clap is unavailable offline; DESIGN.md §2).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(raw: impl Iterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let raw: Vec<String> = raw.collect();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.options.insert(body.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // NB: a bare `--flag` followed by a non-dash token consumes it as a
+        // value (documented behaviour) — flags go last or use `=`.
+        let a = parse("eval extra --model resnet18 --batch=32 --verbose");
+        assert_eq!(a.positional, vec!["eval", "extra"]);
+        assert_eq!(a.get("model"), Some("resnet18"));
+        assert_eq!(a.usize("batch", 0), 32);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.f64("lr", 0.5), 0.5);
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse("--offset=-3");
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+}

@@ -1,0 +1,150 @@
+//! Counter-based splitmix64 RNG — bit-for-bit mirror of
+//! `python/compile/rng.py` (pinned by `artifacts/golden/rng.json`).
+//!
+//! All SynthShapes randomness is a pure function of `(key, slot)`, so the
+//! rust eval/serving path regenerates exactly the pixels the python
+//! training path saw, with no shared state and no serialization of noise.
+
+pub const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+pub const MIX1: u64 = 0xBF58_476D_1CE4_E5B9;
+pub const MIX2: u64 = 0x94D0_49BB_1331_11EB;
+pub const SLOT_STRIDE: u64 = 0xD1B5_4A32_D192_ED03;
+
+/// splitmix64 finalizer.
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(GOLDEN);
+    z = (z ^ (z >> 30)).wrapping_mul(MIX1);
+    z = (z ^ (z >> 27)).wrapping_mul(MIX2);
+    z ^ (z >> 31)
+}
+
+/// Key for image `index` of dataset stream `seed`.
+#[inline]
+pub fn image_key(seed: u64, index: u64) -> u64 {
+    splitmix64(seed ^ splitmix64(index))
+}
+
+/// Slot `slot` of stream `key` as a u64.
+#[inline]
+pub fn slot_u64(key: u64, slot: u64) -> u64 {
+    splitmix64(key ^ slot.wrapping_mul(SLOT_STRIDE))
+}
+
+/// Slot as an f64 in [0, 1) with 24 mantissa bits (exact across languages).
+#[inline]
+pub fn slot_f(key: u64, slot: u64) -> f64 {
+    (slot_u64(key, slot) >> 40) as f64 / 16_777_216.0
+}
+
+/// Small stateful convenience RNG for non-mirrored uses (sampling, property
+/// tests, benchmarks). Deterministic from its seed.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: splitmix64(seed) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GOLDEN);
+        splitmix64(self.state)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Modulo bias is irrelevant for our n << 2^64 uses.
+        self.next_u64() % n.max(1)
+    }
+
+    /// Standard normal via Box-Muller (f32).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.f64();
+            if u1 <= 1e-12 {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_value() {
+        // splitmix64(0) reference value (public test vector).
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn slot_f_in_unit_interval() {
+        let key = image_key(1001, 7);
+        for s in 0..1000 {
+            let f = slot_f(key, s);
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn slots_are_decorrelated() {
+        let key = image_key(0, 0);
+        let mean: f64 = (0..10_000).map(|s| slot_f(key, s)).sum::<f64>() / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn rng_normal_moments() {
+        let mut r = Rng::new(7);
+        let xs = r.normal_vec(20_000);
+        let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

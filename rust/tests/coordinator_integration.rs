@@ -1,0 +1,145 @@
+//! Coordinator integration: dynamic batcher + TCP server + scheduler over
+//! the real PJRT runtime and trained artifacts. Requires `make models
+//! artifacts`.
+
+use std::sync::Arc;
+
+use dfmpc::coordinator::{lambda_grid, run_sweep, Batcher, BatcherConfig, Client, QuantJob, Server};
+use dfmpc::data::synth;
+use dfmpc::harness::Harness;
+use dfmpc::quant::Method;
+use dfmpc::util::json::Json;
+use dfmpc::util::threadpool::ThreadPool;
+
+fn setup() -> Option<(Harness, dfmpc::harness::LoadedModel)> {
+    let h = match Harness::open() {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("SKIP: {e:#}");
+            return None;
+        }
+    };
+    match h.load_model("resnet18_cifar10-sim") {
+        Ok(m) => Some((h, m)),
+        Err(e) => {
+            eprintln!("SKIP: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn batcher_coalesces_concurrent_requests() {
+    let Some((mut h, model)) = setup() else { return };
+    let worker = h.worker().unwrap();
+    let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, 8).unwrap();
+    worker
+        .load("b", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)
+        .unwrap();
+    let batcher = Arc::new(Batcher::start(
+        worker,
+        "b".into(),
+        BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(20) },
+    ));
+    let spec = synth::dataset("cifar10-sim").unwrap();
+    // fire 8 concurrent requests; with a 20ms window they should coalesce
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let b = Arc::clone(&batcher);
+            std::thread::spawn(move || {
+                let (img, label) = synth::render_image(spec.eval_seed, i, spec.classes);
+                let pred = b.classify(img).unwrap();
+                (pred, label)
+            })
+        })
+        .collect();
+    let mut batched = 0;
+    let mut correct = 0;
+    for htask in handles {
+        let (pred, label) = htask.join().unwrap();
+        if pred.batch_size > 1 {
+            batched += 1;
+        }
+        if pred.class == label {
+            correct += 1;
+        }
+        assert!(pred.confidence > 0.0 && pred.confidence <= 1.0);
+    }
+    assert!(batched >= 4, "expected most requests to share a batch, got {batched}/8");
+    assert!(correct >= 6, "online accuracy too low: {correct}/8");
+}
+
+#[test]
+fn server_roundtrip_and_errors() {
+    let Some((mut h, model)) = setup() else { return };
+    let worker = h.worker().unwrap();
+    let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, 8).unwrap();
+    worker
+        .load("srv", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)
+        .unwrap();
+    let batcher = Arc::new(Batcher::start(worker, "srv".into(), BatcherConfig::default()));
+    let mut server = Server::start("127.0.0.1:0", batcher, "test-model".into()).unwrap();
+
+    let mut client = Client::connect(&server.addr).unwrap();
+    // status
+    let st = client
+        .call(&Json::obj(vec![("op", Json::str("status"))]))
+        .unwrap();
+    assert_eq!(st.get("model").and_then(Json::as_str), Some("test-model"));
+    // classify by dataset index
+    let (class, latency) = client.classify_index("cifar10-sim", 0).unwrap();
+    let spec = synth::dataset("cifar10-sim").unwrap();
+    assert!(class < spec.classes);
+    assert!(latency >= 0.0);
+    // malformed request -> structured error, connection stays usable
+    let err = client.call(&Json::obj(vec![("op", Json::str("nope"))])).unwrap();
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+    let bad = client.call(&Json::obj(vec![
+        ("op", Json::str("classify")),
+        ("pixels", Json::arr_f32(&[1.0, 2.0])),
+    ]));
+    assert!(bad.unwrap().get("ok").and_then(Json::as_bool) == Some(false));
+    // still alive after errors
+    let (class2, _) = client.classify_index("cifar10-sim", 1).unwrap();
+    assert!(class2 < spec.classes);
+    server.stop();
+}
+
+#[test]
+fn scheduler_runs_lambda_grid() {
+    let Some((_h, model)) = setup() else { return };
+    let model = Arc::new(model);
+    let pool = ThreadPool::new(2);
+    let methods = lambda_grid(&[0.1, 0.5], &[0.0, 0.01], 2, 6);
+    let jobs: Vec<QuantJob> = methods
+        .iter()
+        .map(|m| QuantJob { model_id: "resnet18_cifar10-sim".into(), method: *m })
+        .collect();
+    let lookup = Arc::clone(&model);
+    let outcomes = run_sweep(&pool, jobs, move |_| {
+        Ok((Arc::clone(&lookup.plan), Arc::clone(&lookup.ckpt)))
+    });
+    assert_eq!(outcomes.len(), 4);
+    for o in &outcomes {
+        let ckpt = o.ckpt.as_ref().expect("quantization failed");
+        assert!(o.quant_ms >= 0.0);
+        assert!(o.size.mb < o.size.fp32_mb);
+        // grid points differ: different lambda -> different compensated weights
+        assert!(ckpt.tensors.len() == model.ckpt.tensors.len());
+    }
+    let a = outcomes[0].ckpt.as_ref().unwrap();
+    let b = outcomes[3].ckpt.as_ref().unwrap();
+    let pair = &model.plan.pairs[0];
+    let wa = a.get(&format!("{}.w", pair.high)).unwrap();
+    let wb = b.get(&format!("{}.w", pair.high)).unwrap();
+    assert!(wa.max_abs_diff(wb) > 0.0, "lambda had no effect");
+}
+
+#[test]
+fn scheduler_reports_lookup_errors() {
+    let pool = ThreadPool::new(1);
+    let jobs = vec![QuantJob { model_id: "missing".into(), method: Method::Fp32 }];
+    let outcomes = run_sweep(&pool, jobs, |_| anyhow::bail!("no such model"));
+    assert_eq!(outcomes.len(), 1);
+    assert!(outcomes[0].ckpt.is_err());
+}

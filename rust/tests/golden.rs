@@ -1,0 +1,208 @@
+//! Cross-language golden tests: python (the build path that authored the
+//! artifacts) and rust (the serving path) must agree exactly on the RNG
+//! stream, the dataset pixels, and every quantization primitive — and
+//! numerically on model logits. Vectors are written by `aot.py
+//! emit_golden`; run `make artifacts` first.
+
+use std::path::PathBuf;
+
+use dfmpc::data::synth;
+use dfmpc::infer::Engine;
+use dfmpc::model::zoo::artifacts_root;
+use dfmpc::model::{Checkpoint, Plan};
+use dfmpc::quant::compensate::{recalibrate_bn, solve_c};
+use dfmpc::quant::ternary::ternarize;
+use dfmpc::quant::uniform::quantize_uniform;
+use dfmpc::quant::{dfmpc as run_dfmpc, DfmpcConfig};
+use dfmpc::tensor::Tensor;
+use dfmpc::util::json::Json;
+use dfmpc::util::rng;
+
+fn golden(name: &str) -> Option<Json> {
+    let path = artifacts_root().join("golden").join(name);
+    if !path.exists() {
+        eprintln!("SKIP: {} missing (run `make artifacts`)", path.display());
+        return None;
+    }
+    Some(Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap())
+}
+
+#[test]
+fn rng_stream_is_identical() {
+    let Some(cases) = golden("rng.json") else { return };
+    for case in cases.as_arr().unwrap() {
+        let seed = case.req("seed").unwrap().as_f64().unwrap() as u64;
+        let index = case.req("index").unwrap().as_f64().unwrap() as u64;
+        // seed/index may exceed f64 precision in json; python stores big ones
+        // exactly because they're powers of two — still exact in f64.
+        let key: u64 = case.req("key").unwrap().as_str().unwrap().parse().unwrap();
+        assert_eq!(rng::image_key(seed, index), key, "key for seed={seed} index={index}");
+        for (s, u) in case.req("u64").unwrap().as_arr().unwrap().iter().enumerate() {
+            let want: u64 = u.as_str().unwrap().parse().unwrap();
+            assert_eq!(rng::slot_u64(key, s as u64), want, "slot {s}");
+        }
+        for (s, f) in case.req("f").unwrap().as_arr().unwrap().iter().enumerate() {
+            assert_eq!(rng::slot_f(key, s as u64), f.as_f64().unwrap(), "slot_f {s}");
+        }
+    }
+}
+
+#[test]
+fn dataset_pixels_are_identical() {
+    let Some(cases) = golden("dataset.json") else { return };
+    for case in cases.as_arr().unwrap() {
+        let name = case.req("dataset").unwrap().as_str().unwrap();
+        let spec = synth::dataset(name).unwrap();
+        let index = case.req("index").unwrap().as_usize().unwrap() as u64;
+        let (img, label) = synth::render_image(spec.eval_seed, index, spec.classes);
+        assert_eq!(label, case.req("label").unwrap().as_usize().unwrap(), "{name} label");
+        for px in case.req("pixels").unwrap().as_arr().unwrap() {
+            let p = px.as_arr().unwrap();
+            let (c, y, x) = (
+                p[0].as_usize().unwrap(),
+                p[1].as_usize().unwrap(),
+                p[2].as_usize().unwrap(),
+            );
+            let want = p[3].as_f64().unwrap() as f32;
+            let got = img.data[(c * synth::H + y) * synth::W + x];
+            assert_eq!(got, want, "{name} pixel ({c},{y},{x})");
+        }
+        let mean: f64 = img.data.iter().map(|v| *v as f64).sum::<f64>() / img.data.len() as f64;
+        let want_mean = case.req("mean").unwrap().as_f64().unwrap();
+        assert!((mean - want_mean).abs() < 1e-6, "{name} mean {mean} != {want_mean}");
+    }
+}
+
+#[test]
+fn quant_primitives_are_identical() {
+    let Some(g) = golden("quant.json") else { return };
+    let shape = g.req("shape").unwrap().usize_vec().unwrap();
+    let w = Tensor::new(shape, g.req("w").unwrap().f32_vec().unwrap());
+
+    // ternary Eq. 3/4
+    let (w_hat, delta, alpha) = ternarize(&w);
+    assert!((delta - g.req("delta").unwrap().as_f64().unwrap() as f32).abs() < 1e-6);
+    assert!((alpha - g.req("alpha").unwrap().as_f64().unwrap() as f32).abs() < 1e-6);
+    assert_eq!(w_hat.data, g.req("w_hat").unwrap().f32_vec().unwrap());
+
+    // dorefa Eq. 6 at 6 bits
+    let q6 = quantize_uniform(&w, 6);
+    let want_q6 = g.req("q6").unwrap().f32_vec().unwrap();
+    for (a, b) in q6.data.iter().zip(&want_q6) {
+        assert!((a - b).abs() < 1e-6, "dorefa {a} != {b}");
+    }
+
+    // BN recalibration
+    let mu = g.req("mu").unwrap().f32_vec().unwrap();
+    let var = g.req("var").unwrap().f32_vec().unwrap();
+    let (mu_hat, var_hat) = recalibrate_bn(&w, &w_hat, &mu, &var);
+    let want_mu_hat = g.req("mu_hat").unwrap().f32_vec().unwrap();
+    let want_var_hat = g.req("var_hat").unwrap().f32_vec().unwrap();
+    for i in 0..mu.len() {
+        assert!((mu_hat[i] - want_mu_hat[i]).abs() < 1e-5, "mu_hat[{i}]");
+        assert!((var_hat[i] - want_var_hat[i]).abs() < 1e-5, "var_hat[{i}]");
+    }
+
+    // closed-form c, Eq. 27
+    let gamma = g.req("gamma").unwrap().f32_vec().unwrap();
+    let beta = g.req("beta").unwrap().f32_vec().unwrap();
+    let lam1 = g.req("lam1").unwrap().as_f64().unwrap() as f32;
+    let lam2 = g.req("lam2").unwrap().as_f64().unwrap() as f32;
+    let (c, _, _) = solve_c(&w, &w_hat, &gamma, &beta, &mu, &var, &mu_hat, &var_hat, lam1, lam2);
+    let want_c = g.req("c").unwrap().f32_vec().unwrap();
+    for i in 0..c.len() {
+        assert!((c[i] - want_c[i]).abs() < 1e-4, "c[{i}] {} != {}", c[i], want_c[i]);
+    }
+}
+
+#[test]
+fn model_logits_match_jax() {
+    let Some(g) = golden("logits.json") else { return };
+    let root = artifacts_root();
+    let arch = g.req("arch").unwrap().as_str().unwrap();
+    let dataset = g.req("dataset").unwrap().as_str().unwrap();
+    let plan = Plan::load(&root.join(format!("plans/{arch}_{dataset}.json"))).unwrap();
+    let ckpt = Checkpoint::load(&root.join(format!("models/{arch}_{dataset}.dfmc"))).unwrap();
+    let spec = synth::dataset(dataset).unwrap();
+    let (x, labels) = synth::render_batch(spec.eval_seed, 0, 4, spec.classes);
+    let want_labels: Vec<usize> = g.req("labels").unwrap().usize_vec().unwrap();
+    assert_eq!(labels, want_labels);
+
+    // FP32 logits: pure-rust conv vs jax conv, tolerance on accumulation order
+    let engine = Engine::new(&plan, &ckpt);
+    let logits = engine.forward(&x).unwrap();
+    let want: Vec<Vec<f32>> = g
+        .req("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.f32_vec().unwrap())
+        .collect();
+    for r in 0..4 {
+        for c in 0..want[r].len() {
+            let a = logits.at2(r, c);
+            let b = want[r][c];
+            assert!(
+                (a - b).abs() < 2e-2 + 1e-3 * b.abs(),
+                "fp32 logit[{r}][{c}] rust {a} vs jax {b}"
+            );
+        }
+    }
+
+    // DF-MPC quantized logits + first pair's coefficient vector
+    let (qckpt, reports) = run_dfmpc(&plan, &ckpt, DfmpcConfig::default()).unwrap();
+    let first_low = g.req("first_pair_low").unwrap().as_str().unwrap();
+    let rep = reports.iter().find(|r| r.low == first_low).unwrap();
+    let want_c = g.req("first_pair_c").unwrap().f32_vec().unwrap();
+    for i in 0..want_c.len() {
+        assert!(
+            (rep.c[i] - want_c[i]).abs() < 1e-3,
+            "pair c[{i}] rust {} vs python {}",
+            rep.c[i],
+            want_c[i]
+        );
+    }
+    let qengine = Engine::new(&plan, &qckpt);
+    let qlogits = qengine.forward(&x).unwrap();
+    let want_q: Vec<Vec<f32>> = g
+        .req("dfmpc_logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.f32_vec().unwrap())
+        .collect();
+    for r in 0..4 {
+        for c in 0..want_q[r].len() {
+            let a = qlogits.at2(r, c);
+            let b = want_q[r][c];
+            assert!(
+                (a - b).abs() < 5e-2 + 1e-2 * b.abs(),
+                "dfmpc logit[{r}][{c}] rust {a} vs python {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn eval_shard_matches_renderer() {
+    let root: PathBuf = artifacts_root();
+    let shard_path = root.join("data/cifar10-sim_eval.bin");
+    if !shard_path.exists() {
+        eprintln!("SKIP: shard missing");
+        return;
+    }
+    let shard = dfmpc::data::EvalShard::load(&shard_path).unwrap();
+    let spec = synth::dataset("cifar10-sim").unwrap();
+    // spot-check 5 images: file content == on-the-fly rust rendering
+    for idx in [0usize, 1, 99, 500, 1999] {
+        if idx >= shard.n() {
+            continue;
+        }
+        let (img, label) = synth::render_image(spec.eval_seed, idx as u64, spec.classes);
+        assert_eq!(shard.labels[idx], label, "label {idx}");
+        let (batch, _) = shard.batch(idx, 1);
+        assert_eq!(batch.data, img.data, "pixels {idx}");
+    }
+}

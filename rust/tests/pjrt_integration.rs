@@ -1,0 +1,143 @@
+//! Integration over the PJRT runtime: compile real AOT artifacts, execute
+//! them with the trained weights, and cross-check numerics against the
+//! pure-rust engine and the recorded training-time accuracy.
+//! Requires `make models artifacts`.
+
+use dfmpc::coordinator::eval::eval_pjrt;
+use dfmpc::harness::Harness;
+use dfmpc::quant::{dfmpc, DfmpcConfig, Method};
+use dfmpc::runtime::PjrtWorker;
+use dfmpc::tensor::ops::argmax_rows;
+
+fn harness_or_skip() -> Option<Harness> {
+    match Harness::open() {
+        Ok(h) => Some(h),
+        Err(e) => {
+            eprintln!("SKIP: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_reference_engine() {
+    let Some(h) = harness_or_skip() else { return };
+    let Ok(model) = h.load_model("resnet18_cifar10-sim") else {
+        eprintln!("SKIP: resnet18 checkpoint missing");
+        return;
+    };
+    let worker = PjrtWorker::spawn().unwrap();
+    let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, 8).unwrap();
+    worker
+        .load("m", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)
+        .unwrap();
+    let (x, _) = model.shard.batch(0, abatch.min(8));
+    let pjrt_logits = worker.infer("m", x.clone()).unwrap();
+    let engine = dfmpc::infer::Engine::new(&model.plan, &model.ckpt);
+    let rust_logits = engine.forward(&x).unwrap();
+    assert_eq!(pjrt_logits.shape, rust_logits.shape);
+    let d = pjrt_logits.max_abs_diff(&rust_logits);
+    assert!(d < 2e-2, "PJRT vs rust engine max |Δlogit| = {d}");
+    assert_eq!(argmax_rows(&pjrt_logits), argmax_rows(&rust_logits));
+}
+
+#[test]
+fn pjrt_accuracy_matches_training_metadata() {
+    let Some(mut h) = harness_or_skip() else { return };
+    let Ok(model) = h.load_model("resnet18_cifar10-sim") else { return };
+    let worker = h.worker().unwrap();
+    let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, 100).unwrap();
+    worker
+        .load("acc", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)
+        .unwrap();
+    let r = eval_pjrt(&worker, "acc", &model.shard, abatch, Some(500)).unwrap();
+    let meta_acc = model.ckpt.meta_f64("fp32_acc").unwrap();
+    assert!(
+        (r.accuracy - meta_acc).abs() < 0.08,
+        "PJRT acc {} vs training-time {}",
+        r.accuracy,
+        meta_acc
+    );
+}
+
+#[test]
+fn quantized_params_swap_in_place() {
+    let Some(h) = harness_or_skip() else { return };
+    let Ok(model) = h.load_model("resnet18_cifar10-sim") else { return };
+    let worker = PjrtWorker::spawn().unwrap();
+    let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, 8).unwrap();
+    worker
+        .load("swap", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)
+        .unwrap();
+    let (x, _) = model.shard.batch(0, abatch);
+    let fp = worker.infer("swap", x.clone()).unwrap();
+    // swap in DF-MPC weights without recompiling
+    let (qckpt, _) = dfmpc(&model.plan, &model.ckpt, DfmpcConfig::default()).unwrap();
+    worker.set_params("swap", &model.plan, &qckpt).unwrap();
+    let q = worker.infer("swap", x.clone()).unwrap();
+    assert!(fp.max_abs_diff(&q) > 1e-4, "param swap had no effect");
+    // swap back
+    worker.set_params("swap", &model.plan, &model.ckpt).unwrap();
+    let fp2 = worker.infer("swap", x).unwrap();
+    assert!(fp.max_abs_diff(&fp2) < 1e-5, "restoring params changed output");
+}
+
+#[test]
+fn pallas_artifact_matches_xla_artifact() {
+    let Some(h) = harness_or_skip() else { return };
+    let Ok(model) = h.load_model("resnet18_cifar10-sim") else { return };
+    let Some((pbatch, phlo)) = model.entry.pallas_hlo.clone() else {
+        eprintln!("SKIP: no pallas artifact");
+        return;
+    };
+    let worker = PjrtWorker::spawn().unwrap();
+    worker
+        .load("pallas", phlo, &model.plan, &model.ckpt, pbatch)
+        .unwrap();
+    let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, pbatch).unwrap();
+    worker
+        .load("xla", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)
+        .unwrap();
+    let (x, _) = model.shard.batch(16, pbatch);
+    let a = worker.infer("pallas", x.clone()).unwrap();
+    let b = worker.infer("xla", x).unwrap();
+    let d = a.max_abs_diff(&b);
+    assert!(d < 1e-2, "pallas vs xla artifact max |Δ| = {d}");
+    assert_eq!(argmax_rows(&a), argmax_rows(&b));
+}
+
+#[test]
+fn smaller_batches_are_padded() {
+    let Some(h) = harness_or_skip() else { return };
+    let Ok(model) = h.load_model("resnet18_cifar10-sim") else { return };
+    let worker = PjrtWorker::spawn().unwrap();
+    let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, 8).unwrap();
+    worker
+        .load("pad", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)
+        .unwrap();
+    let (x8, _) = model.shard.batch(0, abatch);
+    let full = worker.infer("pad", x8).unwrap();
+    let (x3, _) = model.shard.batch(0, 3);
+    let part = worker.infer("pad", x3).unwrap();
+    assert_eq!(part.shape, vec![3, full.shape[1]]);
+    for r in 0..3 {
+        for c in 0..full.shape[1] {
+            assert!((part.at2(r, c) - full.at2(r, c)).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn method_sweep_preserves_or_degrades_gracefully() {
+    // every method must produce finite logits on the real model
+    let Some(h) = harness_or_skip() else { return };
+    let Ok(model) = h.load_model("resnet18_cifar10-sim") else { return };
+    for spec in ["dfmpc:2/6", "original:2/6", "uniform:6", "dfq:6", "omse:4", "ocs:4:0.05"] {
+        let m = Method::parse(spec).unwrap();
+        let q = m.apply(&model.plan, &model.ckpt).unwrap();
+        let engine = dfmpc::infer::Engine::new(&model.plan, &q);
+        let (x, _) = model.shard.batch(0, 4);
+        let logits = engine.forward(&x).unwrap();
+        assert!(logits.data.iter().all(|v| v.is_finite()), "{spec} produced non-finite logits");
+    }
+}

@@ -1,0 +1,295 @@
+//! Property-based tests (hand-rolled: proptest is unavailable offline —
+//! DESIGN.md §2). Each property runs over many seeded random cases; on
+//! failure the seed is in the assertion message for reproduction.
+
+use dfmpc::model::{Checkpoint, Plan};
+use dfmpc::quant::compensate::{recalibrate_bn, solve_c};
+use dfmpc::quant::omse::quantize_omse;
+use dfmpc::quant::ternary::ternarize;
+use dfmpc::quant::uniform::{grid_step, quantize_uniform, quantize_uniform_scaled};
+use dfmpc::tensor::{ops, Tensor};
+use dfmpc::util::json::Json;
+use dfmpc::util::rng::Rng;
+
+const CASES: u64 = 30;
+
+fn rand_tensor(r: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, r.normal_vec(n).into_iter().map(|v| v * scale).collect())
+}
+
+// ---------------------------------------------------------------------------
+// quantization invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ternary_partition_is_exhaustive() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(seed);
+        let scale = 0.1 + r.f32();
+        let w = rand_tensor(&mut r, vec![8, 4, 3, 3], scale);
+        let (t, delta, _) = ternarize(&w);
+        for (v, q) in w.data.iter().zip(&t.data) {
+            let want = if *v > delta {
+                1.0
+            } else if *v < -delta {
+                -1.0
+            } else {
+                0.0
+            };
+            assert_eq!(*q, want, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_uniform_quantization_is_projection() {
+    // Q(Q(w)) == Q(w) under the same scale (idempotence / projection)
+    for seed in 0..CASES {
+        let mut r = Rng::new(100 + seed);
+        let w = rand_tensor(&mut r, vec![512], 1.0);
+        let s = w.abs_max();
+        for k in [2u32, 4, 6] {
+            let q1 = quantize_uniform_scaled(&w, k, s);
+            let q2 = quantize_uniform_scaled(&q1, k, s);
+            assert!(q1.max_abs_diff(&q2) < 1e-6, "seed {seed} k {k}");
+        }
+    }
+}
+
+#[test]
+fn prop_uniform_error_bound_and_monotonicity() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(200 + seed);
+        let w = rand_tensor(&mut r, vec![1024], 0.5);
+        let mut last = f32::INFINITY;
+        for k in [2u32, 3, 4, 5, 6, 8] {
+            let q = quantize_uniform(&w, k);
+            let err = w.l2_dist(&q);
+            assert!(
+                w.max_abs_diff(&q) <= grid_step(k, w.abs_max()) / 2.0 + 1e-5,
+                "seed {seed} k {k}"
+            );
+            assert!(err <= last + 1e-4, "seed {seed}: error not monotone in bits");
+            last = err;
+        }
+    }
+}
+
+#[test]
+fn prop_omse_never_worse_than_max_scale() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(300 + seed);
+        let mut w = rand_tensor(&mut r, vec![2048], 1.0);
+        // heavy tail with probability ~1/2
+        if seed % 2 == 0 {
+            let n = w.len();
+            w.data[0] = 15.0;
+            w.data[n - 1] = -12.0;
+        }
+        for k in [2u32, 4] {
+            let e_omse = w.l2_dist(&quantize_omse(&w, k));
+            let e_max = w.l2_dist(&quantize_uniform(&w, k));
+            assert!(e_omse <= e_max * 1.01 + 1e-4, "seed {seed} k {k}: {e_omse} > {e_max}");
+        }
+    }
+}
+
+#[test]
+fn prop_closed_form_c_is_argmin() {
+    // c* must beat random perturbations of itself on the surrogate loss.
+    for seed in 0..CASES {
+        let mut r = Rng::new(400 + seed);
+        let o = 4 + (seed as usize % 8);
+        let w = rand_tensor(&mut r, vec![o, 4, 3, 3], 0.5);
+        let (w_hat, _, _) = ternarize(&w);
+        let gamma: Vec<f32> = (0..o).map(|_| 0.5 + r.f32()).collect();
+        let beta: Vec<f32> = (0..o).map(|_| 0.3 * r.normal()).collect();
+        let mu: Vec<f32> = (0..o).map(|_| 0.3 * r.normal()).collect();
+        let var: Vec<f32> = (0..o).map(|_| 0.5 + r.f32()).collect();
+        let (mu_hat, var_hat) = recalibrate_bn(&w, &w_hat, &mu, &var);
+        let lam1 = r.f32();
+        let lam2 = 0.01 * r.f32();
+        let (c, _, loss_star) = solve_c(&w, &w_hat, &gamma, &beta, &mu, &var, &mu_hat, &var_hat, lam1, lam2);
+
+        let eval = |cv: &[f32]| -> f32 {
+            // recompute surrogate by re-running solve internals via solve_c's
+            // before/after trick: use c=cv by scaling w_hat accordingly is
+            // not direct; instead compute explicitly.
+            let mut total = 0.0f64;
+            for j in 0..o {
+                let sig = (var[j] + ops::BN_EPS).sqrt();
+                let sig_h = (var_hat[j] + ops::BN_EPS).sqrt();
+                let a = gamma[j] / sig_h;
+                let b = gamma[j] / sig;
+                let wh = w_hat.out_channel(j);
+                let wf = w.out_channel(j);
+                let mut g = 0.0f64;
+                for (h, x) in wh.iter().zip(wf) {
+                    let d = cv[j] as f64 * (a * h) as f64 - (b * x) as f64;
+                    g += d * d;
+                }
+                let yh = (beta[j] - gamma[j] * mu_hat[j] / sig_h) as f64;
+                let y = (beta[j] - gamma[j] * mu[j] / sig) as f64;
+                let th = cv[j] as f64 * yh - y;
+                total += g + lam1 as f64 * th * th + lam2 as f64 * (cv[j] as f64).powi(2);
+            }
+            total as f32
+        };
+        let base = eval(&c);
+        assert!((base - loss_star).abs() < 1e-3 * (1.0 + base.abs()), "seed {seed} loss mismatch");
+        for _ in 0..5 {
+            let perturbed: Vec<f32> = c.iter().map(|cj| (cj + 0.1 * r.normal()).max(0.0)).collect();
+            assert!(
+                eval(&perturbed) >= base - 1e-4,
+                "seed {seed}: perturbation beat the closed form"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tensor op cross-checks
+// ---------------------------------------------------------------------------
+
+/// Direct (naive quadruple-loop) convolution oracle.
+fn conv_naive(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
+    let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (o, _ci, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let mut out = Tensor::zeros(vec![n, o, oh, ow]);
+    for ni in 0..n {
+        for oc in 0..o {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ic in 0..c {
+                        for ky in 0..kh {
+                            for kx in 0..kw {
+                                let iy = (oy * stride + ky) as isize - pad as isize;
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                                    continue;
+                                }
+                                acc += x.at4(ni, ic, iy as usize, ix as usize)
+                                    * w.at4(oc, ic, ky, kx);
+                            }
+                        }
+                    }
+                    *out.at4_mut(ni, oc, oy, ox) = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_im2col_conv_matches_naive() {
+    for seed in 0..20 {
+        let mut r = Rng::new(500 + seed);
+        let (n, c, h) = (1 + seed as usize % 2, 1 + seed as usize % 3, 5 + seed as usize % 6);
+        let o = 1 + seed as usize % 4;
+        let k = [1, 3, 5][seed as usize % 3];
+        let stride = 1 + seed as usize % 2;
+        let pad = k / 2;
+        if h + 2 * pad < k {
+            continue;
+        }
+        let x = rand_tensor(&mut r, vec![n, c, h, h], 1.0);
+        let w = rand_tensor(&mut r, vec![o, c, k, k], 1.0);
+        let fast = ops::conv2d(&x, &w, stride, pad, 1);
+        let slow = conv_naive(&x, &w, stride, pad);
+        assert_eq!(fast.shape, slow.shape, "seed {seed}");
+        assert!(fast.max_abs_diff(&slow) < 1e-4, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    fn random_json(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.f64() < 0.5),
+            2 => Json::Num((r.normal() as f64 * 1e3).round() / 8.0),
+            3 => Json::Str(format!("s{}-\"quoted\"\n{}", r.below(100), r.below(100))),
+            4 => Json::Arr((0..r.below(5)).map(|_| random_json(r, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..r.below(5))
+                    .map(|i| (format!("k{i}"), random_json(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..50 {
+        let mut r = Rng::new(600 + seed);
+        let v = random_json(&mut r, 3);
+        let s = v.dump();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("seed {seed}: {e} in {s}"));
+        assert_eq!(back, v, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_fuzz() {
+    for seed in 0..10 {
+        let mut r = Rng::new(700 + seed);
+        let mut ck = Checkpoint::default();
+        let n_tensors = 1 + r.below(6) as usize;
+        for i in 0..n_tensors {
+            let shape: Vec<usize> = (0..1 + r.below(3)).map(|_| 1 + r.below(7) as usize).collect();
+            ck.put(&format!("t{i}.w"), rand_tensor(&mut r, shape, 1.0));
+        }
+        ck.meta = Json::obj(vec![("seed", Json::num(seed as f64))]);
+        let path = std::env::temp_dir().join(format!("dfmc_prop_{seed}.dfmc"));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.order, ck.order, "seed {seed}");
+        for name in &ck.order {
+            assert_eq!(back.get(name).unwrap(), ck.get(name).unwrap(), "seed {seed} {name}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+}
+
+#[test]
+fn prop_plan_quantization_keeps_shapes() {
+    // On a generated random plan, every method preserves tensor shapes.
+    let plan_src = r#"{
+      "name": "p", "input": [3, 16, 16], "num_classes": 5,
+      "ops": [
+        {"op": "conv", "name": "a", "cin": 3, "cout": 6, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "a_bn", "ch": 6},
+        {"op": "relu"},
+        {"op": "conv", "name": "b", "cin": 6, "cout": 10, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "b_bn", "ch": 10},
+        {"op": "relu"},
+        {"op": "gap"},
+        {"op": "fc", "name": "fc", "cin": 10, "cout": 5}
+      ],
+      "pairs": [{"low": "a", "high": "b", "offset": 0}],
+      "bn_of": {"a": "a_bn", "b": "b_bn"}
+    }"#;
+    let plan = Plan::parse(plan_src).unwrap();
+    for seed in 0..10 {
+        let mut r = Rng::new(800 + seed);
+        let mut ck = Checkpoint::default();
+        for (name, shape) in plan.param_order() {
+            let field = name.split('.').next_back().unwrap();
+            let t = match field {
+                "gamma" | "var" => Tensor::full(shape, 1.0),
+                "beta" | "mu" | "b" => Tensor::zeros(shape),
+                _ => rand_tensor(&mut r, shape, 0.3),
+            };
+            ck.put(&name, t);
+        }
+        for spec in ["dfmpc:2/6", "dfmpc:3/6", "original:2/6", "uniform:4", "dfq:6", "omse:4", "ocs:4:0.1"] {
+            let m = dfmpc::quant::Method::parse(spec).unwrap();
+            let q = m.apply(&plan, &ck).unwrap();
+            for (name, shape) in plan.param_order() {
+                assert_eq!(q.get(&name).unwrap().shape, shape, "seed {seed} {spec} {name}");
+            }
+        }
+    }
+}
