@@ -1,32 +1,124 @@
-//! Inference-path bench: PJRT buffer path (production, cached device
-//! buffers) vs PJRT literal path (§Perf baseline: re-uploading all ~100
-//! parameter literals per call) vs the pure-rust reference engine.
-//! The buffer-vs-literal delta is the §Perf optimization evidence.
+//! Inference-path bench.
+//!
+//! Part 1 (always runs, no artifacts needed): the pure-rust reference
+//! engine, serial vs pooled, on a synthetic batch-32 ResNet-style forward
+//! — the §Perf evidence for the row-parallel conv/GEMM path — plus a
+//! parity assertion that the threaded logits are bit-identical.
+//!
+//! Part 2 (requires `make models artifacts` + the `xla` feature): PJRT
+//! buffer path (production, cached device buffers) vs PJRT literal path
+//! (re-uploading all ~100 parameter literals per call) vs the reference
+//! engine. The buffer-vs-literal delta is the original §Perf evidence.
 //!
 //!     cargo bench --bench bench_infer
 
 mod common;
 
+use std::sync::Arc;
+
 use common::{bench, throughput};
 use dfmpc::harness::Harness;
+use dfmpc::infer::Engine;
+use dfmpc::model::{Checkpoint, Plan};
 use dfmpc::runtime::pjrt::{flat_params, PjrtRuntime};
+use dfmpc::runtime::PJRT_AVAILABLE;
+use dfmpc::tensor::Tensor;
+use dfmpc::util::rng::Rng;
+use dfmpc::util::threadpool::ThreadPool;
 
-fn main() {
+/// ResNet-style CIFAR stem + two residual stages (one with a strided
+/// downsample shortcut) — the shape of the zoo's resnet18_cifar10-sim,
+/// scaled so a bench iteration stays sub-second.
+const RESNET_STYLE: &str = r#"{
+  "name": "resnet-style-bench", "input": [3, 32, 32], "num_classes": 10,
+  "ops": [
+    {"op": "conv", "name": "stem", "cin": 3, "cout": 16, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "stem_bn", "ch": 16},
+    {"op": "relu"},
+    {"op": "save", "id": "r0"},
+    {"op": "conv", "name": "s1a", "cin": 16, "cout": 16, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "s1a_bn", "ch": 16},
+    {"op": "relu"},
+    {"op": "conv", "name": "s1b", "cin": 16, "cout": 16, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "s1b_bn", "ch": 16},
+    {"op": "residual", "id": "r0"},
+    {"op": "relu"},
+    {"op": "save", "id": "r1"},
+    {"op": "conv", "name": "s2a", "cin": 16, "cout": 32, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "s2a_bn", "ch": 32},
+    {"op": "relu"},
+    {"op": "conv", "name": "s2b", "cin": 32, "cout": 32, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "s2b_bn", "ch": 32},
+    {"op": "residual", "id": "r1",
+     "down": {"conv": {"name": "s2d", "cin": 16, "cout": 32, "k": 1, "stride": 2, "pad": 0, "groups": 1},
+              "bn": {"name": "s2d_bn", "ch": 32}}},
+    {"op": "relu"},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc", "cin": 32, "cout": 10}
+  ],
+  "pairs": [],
+  "bn_of": {}
+}"#;
+
+fn reference_engine_scaling() {
+    let plan = Plan::parse(RESNET_STYLE).unwrap();
+    let ckpt = Checkpoint::random_init(&plan, &mut Rng::new(42));
+    let batch = 32;
+    let mut r = Rng::new(7);
+    let x = Tensor::new(vec![batch, 3, 32, 32], r.normal_vec(batch * 3 * 32 * 32));
+
+    println!("== reference engine, ResNet-style forward, batch {batch} ==");
+    let serial = Engine::new(&plan, &ckpt);
+    let rs = bench("reference engine, serial", 1, 5, || {
+        let _ = serial.forward(&x).unwrap();
+    });
+    println!("    -> {:.1} img/s", throughput(batch, rs.mean_ms));
+
+    let threads = ThreadPool::default_threads();
+    let pool = Arc::new(ThreadPool::new(threads));
+    let par = Engine::with_pool(&plan, &ckpt, pool);
+    let rp = bench(&format!("reference engine, {threads} threads"), 1, 5, || {
+        let _ = par.forward(&x).unwrap();
+    });
+    println!(
+        "    -> {:.1} img/s ({:.2}x over serial on {threads} threads)",
+        throughput(batch, rp.mean_ms),
+        rs.mean_ms / rp.mean_ms
+    );
+
+    // parity: the threaded engine is bit-identical to the serial oracle
+    let a = serial.forward(&x).unwrap();
+    let b = par.forward(&x).unwrap();
+    assert_eq!(a.data, b.data, "threaded engine diverged from serial oracle");
+    println!("    parity: {} logits bit-identical across thread counts", a.data.len());
+}
+
+fn pjrt_comparison() {
+    if !PJRT_AVAILABLE {
+        eprintln!("SKIP pjrt comparison: built without the `xla` feature");
+        return;
+    }
     let h = match Harness::open() {
         Ok(h) => h,
         Err(e) => {
-            eprintln!("SKIP (run `make models artifacts`): {e:#}");
+            eprintln!("SKIP pjrt comparison (run `make models artifacts`): {e:#}");
             return;
         }
     };
     let model = match h.load_model("resnet18_cifar10-sim") {
         Ok(m) => m,
         Err(e) => {
-            eprintln!("SKIP: {e:#}");
+            eprintln!("SKIP pjrt comparison: {e:#}");
             return;
         }
     };
-    let runtime = PjrtRuntime::cpu().unwrap();
+    let runtime = match PjrtRuntime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("SKIP pjrt comparison: {e:#}");
+            return;
+        }
+    };
 
     for want in [1usize, 8, 100] {
         let Some((abatch, hlo)) = h.zoo.hlo_for_batch(&model.entry, want) else { continue };
@@ -50,8 +142,8 @@ fn main() {
             rl.mean_ms / rb.mean_ms
         );
         if abatch <= 8 {
-            let engine = dfmpc::infer::Engine::new(&model.plan, &model.ckpt);
-            let rr = bench("pure-rust reference engine", 1, 5, || {
+            let engine = Engine::with_pool(&model.plan, &model.ckpt, h.pool());
+            let rr = bench("pure-rust reference engine (pooled)", 1, 5, || {
                 let _ = engine.forward(&x).unwrap();
             });
             println!(
@@ -61,4 +153,9 @@ fn main() {
             );
         }
     }
+}
+
+fn main() {
+    reference_engine_scaling();
+    pjrt_comparison();
 }

@@ -2,6 +2,9 @@
 //! Runs warmups + timed iterations, reports mean / p50 / min, and prints
 //! rows that EXPERIMENTS.md records verbatim.
 
+// Each bench target compiles this module separately and uses a subset.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 pub struct BenchResult {

@@ -140,8 +140,9 @@ fn main() -> Result<()> {
     }
     println!("{}", t.render());
 
-    // [6] reference-engine spot check (rust conv == XLA conv numerics)
-    let r_ref = eval_reference(&model.plan, &model.ckpt, &model.shard, 50, Some(200))?;
+    // [6] reference-engine spot check (rust conv == XLA conv numerics),
+    // fanned out over the harness's shared pool
+    let r_ref = eval_reference(&model.plan, &model.ckpt, &model.shard, 50, Some(200), Some(h.pool()))?;
     println!(
         "[6] pure-rust engine spot check on 200 images: acc {}% (PJRT {}%)",
         pct(r_ref.accuracy),

@@ -3,8 +3,12 @@
 //! Single-image classification requests are queued; a batcher thread
 //! drains the queue into batches of up to `max_batch`, waiting at most
 //! `max_wait` for stragglers (the classic dynamic-batching policy of
-//! serving systems), executes them on the PJRT lane, and scatters the
+//! serving systems), executes them on an inference lane, and scatters the
 //! per-image results back to the callers.
+//!
+//! The lane is any [`InferBackend`]: the PJRT worker (production) or the
+//! pool-parallel reference engine (`infer::RefLane`) — the latter is what
+//! lets the server run without AOT artifacts or the `xla` feature.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -13,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::PjrtWorker;
+use crate::infer::InferBackend;
 use crate::tensor::ops::{argmax_rows, softmax_rows};
 use crate::tensor::Tensor;
 
@@ -46,23 +50,28 @@ struct Request {
     reply: mpsc::Sender<Result<Prediction>>,
 }
 
-/// Dynamic batcher driving one model id on the PJRT worker.
+/// Dynamic batcher driving one model id on an inference backend.
 pub struct Batcher {
     tx: mpsc::Sender<Request>,
     handle: Option<thread::JoinHandle<()>>,
 }
 
 impl Batcher {
-    pub fn start(worker: Arc<PjrtWorker>, model_id: String, cfg: BatcherConfig) -> Batcher {
+    pub fn start(backend: Arc<dyn InferBackend>, model_id: String, cfg: BatcherConfig) -> Batcher {
         let (tx, rx) = mpsc::channel::<Request>();
         let handle = thread::Builder::new()
             .name("dfmpc-batcher".into())
-            .spawn(move || Self::run(worker, model_id, cfg, rx))
+            .spawn(move || Self::run(backend, model_id, cfg, rx))
             .expect("spawn batcher");
         Batcher { tx, handle: Some(handle) }
     }
 
-    fn run(worker: Arc<PjrtWorker>, model_id: String, cfg: BatcherConfig, rx: mpsc::Receiver<Request>) {
+    fn run(
+        backend: Arc<dyn InferBackend>,
+        model_id: String,
+        cfg: BatcherConfig,
+        rx: mpsc::Receiver<Request>,
+    ) {
         loop {
             // block for the first request of a batch
             let first = match rx.recv() {
@@ -82,11 +91,11 @@ impl Batcher {
                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
                 }
             }
-            Self::execute(&worker, &model_id, batch);
+            Self::execute(backend.as_ref(), &model_id, batch);
         }
     }
 
-    fn execute(worker: &PjrtWorker, model_id: &str, batch: Vec<Request>) {
+    fn execute(backend: &dyn InferBackend, model_id: &str, batch: Vec<Request>) {
         let n = batch.len();
         let chw: Vec<usize> = batch[0].image.shape.clone();
         let per: usize = chw.iter().product();
@@ -95,7 +104,7 @@ impl Batcher {
             data.extend_from_slice(&r.image.data);
         }
         let x = Tensor::new(vec![n, chw[0], chw[1], chw[2]], data);
-        match worker.infer(model_id, x) {
+        match backend.infer_batch(model_id, x) {
             Ok(logits) => {
                 let probs = softmax_rows(&logits);
                 let preds = argmax_rows(&logits);

@@ -1,7 +1,10 @@
 //! Batched dataset evaluation pipeline: streams an eval shard through
 //! either the PJRT runtime (production path) or the pure-rust engine
-//! (reference path) and reports top-1 accuracy + latency.
+//! (reference path) and reports top-1 accuracy + latency. The reference
+//! path accepts the coordinator's shared thread pool so whole-dataset
+//! eval and quantizer sweeps exploit all cores (bit-exact with serial).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -11,6 +14,7 @@ use crate::infer::Engine;
 use crate::model::{Checkpoint, Plan};
 use crate::runtime::PjrtWorker;
 use crate::tensor::ops::argmax_rows;
+use crate::util::threadpool::ThreadPool;
 
 use super::metrics::{AccuracyCounter, LatencyRecorder, LatencySummary};
 
@@ -55,15 +59,18 @@ pub fn eval_pjrt(
     })
 }
 
-/// Evaluate with the pure-rust reference engine (no PJRT).
+/// Evaluate with the pure-rust reference engine (no PJRT). When `pool` is
+/// `Some`, each batch's conv/GEMM/fc row-blocks fan out over it; the
+/// logits are bit-identical to the serial path either way.
 pub fn eval_reference(
     plan: &Plan,
     ckpt: &Checkpoint,
     shard: &EvalShard,
     batch: usize,
     limit: Option<usize>,
+    pool: Option<Arc<ThreadPool>>,
 ) -> Result<EvalResult> {
-    let engine = Engine::new(plan, ckpt);
+    let engine = Engine::with_exec(plan, ckpt, pool);
     let n = limit.unwrap_or(shard.n()).min(shard.n());
     let mut acc = AccuracyCounter::default();
     let mut lat = LatencyRecorder::new();

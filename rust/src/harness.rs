@@ -1,9 +1,13 @@
 //! Experiment harness: shared plumbing for the CLI, examples and benches —
 //! load a zoo model, quantize it with a method, evaluate it through the
 //! PJRT lane (or the reference engine), and report paper-style rows.
+//!
+//! The harness owns the process-wide [`ThreadPool`] (sized from
+//! `DFMPC_THREADS` or the machine's parallelism); the reference engine,
+//! the eval pipeline, and sweep scheduling all share it.
 
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{Context, Result};
 
@@ -13,6 +17,7 @@ use crate::model::zoo::{artifacts_root, ModelEntry, Zoo};
 use crate::model::{Checkpoint, Plan};
 use crate::quant::{self, Method};
 use crate::runtime::PjrtWorker;
+use crate::util::threadpool::ThreadPool;
 use crate::util::Stopwatch;
 
 /// A fully materialized model: plan + FP32 checkpoint + eval shard.
@@ -26,6 +31,10 @@ pub struct LoadedModel {
 pub struct Harness {
     pub zoo: Zoo,
     pub worker: Option<Arc<PjrtWorker>>,
+    /// Shared compute pool for the reference engine and sweeps; spawned
+    /// lazily so pool-free subcommands (quantize, pjrt-only eval) never
+    /// pay for idle worker threads.
+    pool: OnceLock<Arc<ThreadPool>>,
 }
 
 impl Harness {
@@ -34,7 +43,7 @@ impl Harness {
         let root = artifacts_root();
         let zoo = Zoo::load(&root)
             .with_context(|| format!("loading zoo at {} (run `make models artifacts`)", root.display()))?;
-        Ok(Harness { zoo, worker: None })
+        Ok(Harness { zoo, worker: None, pool: OnceLock::new() })
     }
 
     /// Lazily start the PJRT runtime thread.
@@ -43,6 +52,15 @@ impl Harness {
             self.worker = Some(Arc::new(PjrtWorker::spawn()?));
         }
         Ok(Arc::clone(self.worker.as_ref().unwrap()))
+    }
+
+    /// The shared compute pool (spawned on first use; `DFMPC_THREADS` or
+    /// the machine's parallelism sets its size).
+    pub fn pool(&self) -> Arc<ThreadPool> {
+        Arc::clone(
+            self.pool
+                .get_or_init(|| Arc::new(ThreadPool::new(ThreadPool::default_threads()))),
+        )
     }
 
     pub fn load_model(&self, id: &str) -> Result<LoadedModel> {
@@ -83,7 +101,8 @@ pub struct MethodRow {
 /// Quantize `model` with `method` and evaluate on its shard.
 ///
 /// `engine = "pjrt"` loads the artifact batch closest to `batch` on the
-/// runtime thread; `"ref"` uses the pure-rust engine.
+/// runtime thread; `"ref"` uses the pure-rust engine fanned out over the
+/// harness's shared pool.
 pub fn run_method(
     h: &mut Harness,
     model: &LoadedModel,
@@ -97,7 +116,7 @@ pub fn run_method(
     let quant_ms = sw.millis();
     let size = quant::model_size(&model.plan, &method);
     let eval = match engine {
-        "ref" => eval_reference(&model.plan, &qckpt, &model.shard, batch, limit)?,
+        "ref" => eval_reference(&model.plan, &qckpt, &model.shard, batch, limit, Some(h.pool()))?,
         _ => {
             let worker = h.worker()?;
             let (abatch, hlo) = h

@@ -4,14 +4,31 @@
 //! artifacts numerically, serves property tests, and powers data-dependent
 //! baselines (ZeroQ-sim calibration) without touching python. The
 //! production eval path is `runtime::PjrtEngine`.
+//!
+//! Two execution modes, bit-identical by construction (the parallel path
+//! runs the same kernels on disjoint row blocks — see `tensor::ops`):
+//! - [`Engine::new`]: serial, the numerical oracle. ZeroQ-sim calibration
+//!   still uses this path — its forwards usually run inside the sweep
+//!   scheduler's pool workers, where nested fan-out falls back to serial
+//!   anyway.
+//! - [`Engine::with_pool`]: conv/GEMM/fc row-parallel over the shared
+//!   [`ThreadPool`], the path whole-dataset eval, the reference serving
+//!   lane, and the benches use to exploit all cores.
+//!
+//! Per-forward allocations are recycled through the context's scratch
+//! arena, and each conv's GEMM-packed filter panel is cached per layer, so
+//! steady-state forwards stop allocating per op.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
 use crate::model::{Checkpoint, Op, Plan};
-use crate::tensor::ops;
+use crate::tensor::ops::{self, ExecCtx};
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 /// Per-BN pre-normalization channel means collected during a forward pass
 /// (used by calibration-based baselines).
@@ -20,11 +37,92 @@ pub type ActStats = BTreeMap<String, Vec<f64>>;
 pub struct Engine<'a> {
     pub plan: &'a Plan,
     pub ckpt: &'a Checkpoint,
+    /// pool + scratch arena; RefCell because forward takes &self.
+    exec: RefCell<ExecCtx>,
+    /// per-layer GEMM-packed filter panels (the checkpoint is immutable
+    /// for the engine's lifetime, so entries never invalidate).
+    packed: RefCell<BTreeMap<String, Vec<f32>>>,
+}
+
+/// Dense conv through the per-layer packed-panel cache; grouped convs use
+/// the direct-loop path (no packing).
+#[allow(clippy::too_many_arguments)]
+fn conv_cached(
+    ctx: &mut ExecCtx,
+    packed: &mut BTreeMap<String, Vec<f32>>,
+    name: &str,
+    w: &Tensor,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    x: &Tensor,
+) -> Tensor {
+    if groups == 1 {
+        let wt = packed
+            .entry(name.to_string())
+            .or_insert_with(|| ops::pack_filter(w));
+        ops::conv2d_packed(ctx, x, wt, w.shape[0], w.shape[2], stride, pad)
+    } else {
+        ops::conv2d_with(ctx, x, w, stride, pad, groups)
+    }
+}
+
+/// The engine's reusable warm state — execution context (pool + scratch
+/// arena) and the per-layer packed filter panels. Detachable so owners
+/// like [`RefLane`] can carry it across short-lived `Engine` borrows
+/// instead of re-packing filters and re-allocating scratch per batch.
+pub struct EngineState {
+    exec: ExecCtx,
+    packed: BTreeMap<String, Vec<f32>>,
+}
+
+impl EngineState {
+    pub fn new(pool: Option<Arc<ThreadPool>>) -> EngineState {
+        EngineState { exec: ExecCtx::from_pool(pool), packed: BTreeMap::new() }
+    }
+}
+
+impl Default for EngineState {
+    fn default() -> EngineState {
+        EngineState::new(None)
+    }
 }
 
 impl<'a> Engine<'a> {
+    /// Serial engine (the numerical oracle).
     pub fn new(plan: &'a Plan, ckpt: &'a Checkpoint) -> Engine<'a> {
-        Engine { plan, ckpt }
+        Self::with_exec(plan, ckpt, None)
+    }
+
+    /// Engine whose hot ops fan out over `pool` (bit-exact with serial).
+    pub fn with_pool(plan: &'a Plan, ckpt: &'a Checkpoint, pool: Arc<ThreadPool>) -> Engine<'a> {
+        Self::with_exec(plan, ckpt, Some(pool))
+    }
+
+    /// Pooled when `pool` is `Some`, serial otherwise.
+    pub fn with_exec(
+        plan: &'a Plan,
+        ckpt: &'a Checkpoint,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Engine<'a> {
+        Self::from_state(plan, ckpt, EngineState::new(pool))
+    }
+
+    /// Engine resuming previously warmed state. The packed-filter cache is
+    /// keyed by conv name, so the state must come from forwards over the
+    /// same checkpoint.
+    pub fn from_state(plan: &'a Plan, ckpt: &'a Checkpoint, state: EngineState) -> Engine<'a> {
+        Engine {
+            plan,
+            ckpt,
+            exec: RefCell::new(state.exec),
+            packed: RefCell::new(state.packed),
+        }
+    }
+
+    /// Detach the warm state for reuse by a later engine.
+    pub fn into_state(self) -> EngineState {
+        EngineState { exec: self.exec.into_inner(), packed: self.packed.into_inner() }
     }
 
     /// Forward pass, NCHW input -> (N, classes) logits.
@@ -63,13 +161,17 @@ impl<'a> Engine<'a> {
     }
 
     fn forward_impl(&self, x: &Tensor, mut stats: Option<&mut ActStats>) -> Result<Tensor> {
+        let mut exec = self.exec.borrow_mut();
+        let ctx = &mut *exec;
+        let mut packed = self.packed.borrow_mut();
         let mut x = x.clone();
         let mut saved: BTreeMap<&str, Tensor> = BTreeMap::new();
         for op in &self.plan.ops {
             match op {
                 Op::Conv(c) => {
                     let w = self.ckpt.get(&format!("{}.w", c.name))?;
-                    x = ops::conv2d(&x, w, c.stride, c.pad, c.groups);
+                    let y = conv_cached(ctx, &mut packed, &c.name, w, c.stride, c.pad, c.groups, &x);
+                    ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
                 Op::Bn(b) => self.bn_apply(&mut x, &b.name, &mut stats)?,
                 Op::Relu => ops::relu(&mut x),
@@ -85,26 +187,47 @@ impl<'a> Engine<'a> {
                         None => sc.clone(),
                         Some(d) => {
                             let w = self.ckpt.get(&format!("{}.w", d.conv.name))?;
-                            let mut s = ops::conv2d(sc, w, d.conv.stride, d.conv.pad, d.conv.groups);
+                            let mut s = conv_cached(
+                                ctx,
+                                &mut packed,
+                                &d.conv.name,
+                                w,
+                                d.conv.stride,
+                                d.conv.pad,
+                                d.conv.groups,
+                                sc,
+                            );
                             self.bn_apply(&mut s, &d.bn.name, &mut stats)?;
                             s
                         }
                     };
                     ops::add_inplace(&mut x, &shortcut);
+                    ctx.recycle(shortcut.data);
                 }
                 Op::Concat { id } => {
                     let sc = saved
                         .get(id.as_str())
                         .ok_or_else(|| anyhow!("concat save '{id}' missing"))?;
-                    x = ops::concat_channels(sc, &x);
+                    let y = ops::concat_channels(sc, &x);
+                    ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
-                Op::MaxPool { k, stride } => x = ops::maxpool(&x, *k, *stride),
-                Op::AvgPool { k, stride } => x = ops::avgpool(&x, *k, *stride),
-                Op::Gap => x = ops::gap(&x),
+                Op::MaxPool { k, stride } => {
+                    let y = ops::maxpool(&x, *k, *stride);
+                    ctx.recycle(std::mem::replace(&mut x, y).data);
+                }
+                Op::AvgPool { k, stride } => {
+                    let y = ops::avgpool(&x, *k, *stride);
+                    ctx.recycle(std::mem::replace(&mut x, y).data);
+                }
+                Op::Gap => {
+                    let y = ops::gap(&x);
+                    ctx.recycle(std::mem::replace(&mut x, y).data);
+                }
                 Op::Fc { name, .. } => {
                     let w = self.ckpt.get(&format!("{name}.w"))?;
                     let b = self.ckpt.get(&format!("{name}.b"))?;
-                    x = ops::fc(&x, w, &b.data);
+                    let y = ops::fc_with(ctx, &x, w, &b.data);
+                    ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
             }
         }
@@ -128,5 +251,34 @@ impl<'a> Engine<'a> {
             acc -= (probs.at2(r, l).max(1e-12) as f64).ln();
         }
         Ok(acc / labels.len() as f64)
+    }
+}
+
+/// Owning, shareable reference-engine lane: the pure-rust counterpart of
+/// `runtime::PjrtWorker` behind [`super::InferBackend`]. This is what lets
+/// the dynamic batcher and the TCP server run without PJRT artifacts,
+/// fanning each batch's convs over the shared pool. The warm
+/// [`EngineState`] (packed filter panels + scratch arena) persists across
+/// batches behind a mutex, so steady-state serving neither re-packs
+/// weights nor re-allocates per op.
+pub struct RefLane {
+    plan: Arc<Plan>,
+    ckpt: Arc<Checkpoint>,
+    state: Mutex<EngineState>,
+}
+
+impl RefLane {
+    pub fn new(plan: Arc<Plan>, ckpt: Arc<Checkpoint>, pool: Option<Arc<ThreadPool>>) -> RefLane {
+        RefLane { plan, ckpt, state: Mutex::new(EngineState::new(pool)) }
+    }
+}
+
+impl super::InferBackend for RefLane {
+    fn infer_batch(&self, _id: &str, x: Tensor) -> Result<Tensor> {
+        let mut guard = self.state.lock().unwrap();
+        let engine = Engine::from_state(&self.plan, &self.ckpt, std::mem::take(&mut *guard));
+        let out = engine.forward(&x);
+        *guard = engine.into_state();
+        out
     }
 }

@@ -2,4 +2,16 @@
 
 pub mod engine;
 
-pub use engine::Engine;
+pub use engine::{Engine, RefLane};
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// A batched-inference lane the coordinator can drive: the PJRT worker
+/// (`runtime::PjrtWorker`, production) or the in-process reference engine
+/// ([`RefLane`], fallback / artifact-free serving). `id` names a loaded
+/// model on lanes that multiplex several; single-model lanes ignore it.
+pub trait InferBackend: Send + Sync {
+    fn infer_batch(&self, id: &str, x: Tensor) -> Result<Tensor>;
+}

@@ -6,9 +6,11 @@
 //!
 //! - **L3 (this crate)**: the compression-service coordinator — the
 //!   quantization library ([`quant`], the paper's Algorithm 1 plus every
-//!   baseline), a PJRT [`runtime`] executing AOT HLO artifacts, a batched
-//!   evaluation pipeline, a sweep scheduler, a dynamic-batching model
-//!   server ([`coordinator`]), and the substrates they need ([`tensor`],
+//!   baseline), a PJRT [`runtime`] executing AOT HLO artifacts (gated
+//!   behind the `xla` feature; offline builds get a stub and serve
+//!   through the pool-parallel reference engine), a batched evaluation
+//!   pipeline, a sweep scheduler, a dynamic-batching model server
+//!   ([`coordinator`]), and the substrates they need ([`tensor`],
 //!   [`infer`], [`data`], [`model`], [`util`]).
 //! - **L2**: `python/compile/model.py` — the JAX plan-IR interpreter,
 //!   lowered once to HLO text by `python/compile/aot.py`.

@@ -5,7 +5,11 @@
 //!   quantize --model ID --method M --out PATH
 //!   eval     --model ID --method M [--engine pjrt|ref] [--batch N] [--limit N]
 //!   sweep    --model ID --methods M1,M2,... [--engine ...]
-//!   serve    --model ID --method M [--addr HOST:PORT] [--max-batch N] [--max-wait-ms T]
+//!   serve    --model ID --method M [--engine pjrt|ref] [--addr HOST:PORT]
+//!            [--max-batch N] [--max-wait-ms T]
+//!
+//! `--engine ref` drives the pool-parallel pure-rust engine instead of the
+//! PJRT lane — the only serving path in builds without the `xla` feature.
 //!
 //! Method syntax (see quant::Method::parse):
 //!   fp32 | dfmpc:2/6[:lam1[:lam2]] | original:2/6 | uniform:6 | dfq:6 |
@@ -17,6 +21,7 @@ use anyhow::{Context, Result};
 
 use dfmpc::coordinator::{Batcher, BatcherConfig, Server};
 use dfmpc::harness::{run_method, Harness};
+use dfmpc::infer::{InferBackend, RefLane};
 use dfmpc::quant::Method;
 use dfmpc::report::tables::{mb, pct, Table};
 use dfmpc::util::args::Args;
@@ -142,22 +147,30 @@ fn serve(args: &Args) -> Result<()> {
     let mut h = Harness::open()?;
     let model = h.load_model(args.get("model").context("--model required")?)?;
     let method = Method::parse(args.get_or("method", "dfmpc:2/6"))?;
+    let engine = args.get_or("engine", "pjrt").to_string();
     let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
     let max_batch = args.usize("max-batch", 8);
     let max_wait_ms = args.usize("max-wait-ms", 2);
 
     let qckpt = method.apply(&model.plan, &model.ckpt)?;
-    let worker = h.worker()?;
-    let (abatch, hlo) = h
-        .zoo
-        .hlo_for_batch(&model.entry, max_batch)
-        .context("no artifact")?;
-    worker.load(&model.entry.id, hlo.to_path_buf(), &model.plan, &qckpt, abatch)?;
+    let (backend, lane_batch): (Arc<dyn InferBackend>, usize) = if engine == "ref" {
+        // reference lane: no artifacts needed; convs fan out over the pool
+        let lane = RefLane::new(Arc::clone(&model.plan), Arc::new(qckpt), Some(h.pool()));
+        (Arc::new(lane), max_batch)
+    } else {
+        let worker = h.worker()?;
+        let (abatch, hlo) = h
+            .zoo
+            .hlo_for_batch(&model.entry, max_batch)
+            .context("no artifact")?;
+        worker.load(&model.entry.id, hlo.to_path_buf(), &model.plan, &qckpt, abatch)?;
+        (worker, abatch)
+    };
     let batcher = Arc::new(Batcher::start(
-        Arc::clone(&worker),
+        backend,
         model.entry.id.clone(),
         BatcherConfig {
-            max_batch: max_batch.min(abatch),
+            max_batch: max_batch.min(lane_batch),
             max_wait: std::time::Duration::from_millis(max_wait_ms as u64),
         },
     ));

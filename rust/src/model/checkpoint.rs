@@ -9,6 +9,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 pub const MAGIC: &[u8; 8] = b"DFMC1\x00\x00\x00";
 const ALIGN: usize = 16;
@@ -129,6 +130,27 @@ impl Checkpoint {
             self.order.push(name.to_string());
         }
         self.tensors.insert(name.to_string(), t);
+    }
+
+    /// BN-sane random initialization over a plan's parameter order:
+    /// positive gamma/var, small beta/mu/bias, small-scale weights. Used
+    /// by the engine-parity tests and the artifact-free benches — one
+    /// canonical init so their numerics cannot drift apart.
+    pub fn random_init(plan: &crate::model::Plan, rng: &mut Rng) -> Checkpoint {
+        let mut ck = Checkpoint::default();
+        for (name, shape) in plan.param_order() {
+            let field = name.split('.').next_back().unwrap_or("");
+            let n: usize = shape.iter().product();
+            let t = match field {
+                "gamma" | "var" => Tensor::new(shape, (0..n).map(|_| 0.5 + rng.f32()).collect()),
+                "beta" | "mu" | "b" => {
+                    Tensor::new(shape, (0..n).map(|_| 0.1 * rng.normal()).collect())
+                }
+                _ => Tensor::new(shape, (0..n).map(|_| 0.2 * rng.normal()).collect()),
+            };
+            ck.put(&name, t);
+        }
+        ck
     }
 }
 

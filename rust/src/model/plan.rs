@@ -230,8 +230,31 @@ impl Plan {
                 if pair.offset + lo.cout > hi.cin {
                     bail!("pair {}->{} slice out of range", pair.low, pair.high);
                 }
-            } else if lo.cout != hi.cout || pair.offset != 0 {
-                bail!("depthwise pair {}->{} channel mismatch", pair.low, pair.high);
+            } else {
+                // Grouped high convs are only supported when truly
+                // depthwise with channel multiplier 1 (groups == cin and
+                // cout == cin): that is the only case where filter channel
+                // j <-> input channel j, which is what
+                // compensate::scale_input_channels assumes. Anything else
+                // (grouped-but-not-depthwise, or a depthwise channel
+                // multiplier m > 1 where filter oc reads input oc/m) would
+                // be silently mis-compensated, so reject it outright.
+                if hi.cin != hi.groups || hi.cout != hi.cin {
+                    bail!(
+                        "pair {}->{}: grouped high conv must be depthwise with multiplier 1 \
+                         (groups {} / cin {} / cout {})",
+                        pair.low,
+                        pair.high,
+                        hi.groups,
+                        hi.cin,
+                        hi.cout
+                    );
+                }
+                // The compensated slice [offset, offset+cout(low)) must fit
+                // (offset > 0 is legal — scale_input_channels honors it).
+                if pair.offset + lo.cout > hi.cout {
+                    bail!("depthwise pair {}->{} slice out of range", pair.low, pair.high);
+                }
             }
             if !self.bn_of.contains_key(&pair.low) {
                 bail!("low conv {} has no BN", pair.low);
@@ -286,6 +309,56 @@ mod tests {
         assert_eq!(order[0].1, vec![4, 3, 3, 3]);
         // c1.w 108 + c1_bn 16 + c2.w 288 + c2_bn 32 + fc.w 32 + fc.b 4
         assert_eq!(p.param_count(), 108 + 16 + 288 + 32 + 32 + 4);
+    }
+
+    const GROUPED: &str = r#"{
+      "name": "grouped", "input": [3, 8, 8], "num_classes": 4,
+      "ops": [
+        {"op": "conv", "name": "c1", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c1_bn", "ch": 4},
+        {"op": "relu"},
+        {"op": "conv", "name": "dw", "cin": 8, "cout": 8, "k": 3, "stride": 1, "pad": 1, "groups": 8},
+        {"op": "bn", "name": "dw_bn", "ch": 8},
+        {"op": "relu"},
+        {"op": "gap"},
+        {"op": "fc", "name": "fc", "cin": 8, "cout": 4}
+      ],
+      "pairs": [{"low": "c1", "high": "dw", "offset": 2}],
+      "bn_of": {"c1": "c1_bn", "dw": "dw_bn"}
+    }"#;
+
+    #[test]
+    fn depthwise_pair_offset_in_range_accepted() {
+        // offset 2 + cout(low) 4 <= 8 depthwise channels: valid
+        let p = Plan::parse(GROUPED).unwrap();
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn depthwise_pair_offset_out_of_range_rejected() {
+        let src = GROUPED.replace(r#""offset": 2"#, r#""offset": 6"#);
+        let p = Plan::parse(&src).unwrap();
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn grouped_but_not_depthwise_pair_rejected() {
+        // groups=2 with cin=8 is grouped, not depthwise: the channel-j <->
+        // input-j compensation mapping does not hold, so validate must bail.
+        let src = GROUPED.replace(r#""pad": 1, "groups": 8"#, r#""pad": 1, "groups": 2"#);
+        let p = Plan::parse(&src).unwrap();
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn depthwise_channel_multiplier_pair_rejected() {
+        // groups == cin but cout = 2*cin (channel multiplier 2): filter
+        // out-channel oc reads input oc/2, so channel-j compensation is
+        // wrong and validate must bail even though the slice fits cout.
+        let src = GROUPED.replace(r#""cin": 8, "cout": 8, "k": 3, "stride": 1, "pad": 1, "groups": 8"#,
+                                  r#""cin": 8, "cout": 16, "k": 3, "stride": 1, "pad": 1, "groups": 8"#);
+        let p = Plan::parse(&src).unwrap();
+        assert!(p.validate().is_err());
     }
 
     #[test]

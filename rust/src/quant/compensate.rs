@@ -137,10 +137,18 @@ pub fn solve_c(
 /// Scale high-conv input channels `[offset, offset+c.len())` by `c` (Eq. 7).
 pub fn scale_input_channels(w: &mut Tensor, offset: usize, c: &[f32], depthwise: bool) {
     if depthwise {
-        // filter shape (ch, 1, k, k): channel j of the filter <-> input ch j
-        assert_eq!(w.shape[0], c.len());
+        // filter shape (ch, 1, k, k): filter channel j <-> input channel j,
+        // so the paired slice starts at `offset` exactly like the dense
+        // case (a grouped conv whose pair begins at offset > 0 must not
+        // scale channels [0, c.len()) — that silently mis-scales it).
+        assert!(
+            offset + c.len() <= w.shape[0],
+            "depthwise slice [{offset}, {}) out of range for {} channels",
+            offset + c.len(),
+            w.shape[0]
+        );
         for (j, cj) in c.iter().enumerate() {
-            for v in w.out_channel_mut(j) {
+            for v in w.out_channel_mut(offset + j) {
                 *v *= cj;
             }
         }
@@ -309,6 +317,25 @@ mod tests {
         assert_eq!(w.data[0], 2.0);
         assert_eq!(w.data[4], 3.0);
         assert_eq!(w.data[8], 4.0);
+    }
+
+    #[test]
+    fn scale_depthwise_honors_offset() {
+        // Regression: a grouped pair whose slice starts at offset > 0 must
+        // scale filter channels [offset, offset+c.len()), not [0, c.len()).
+        let mut w = Tensor::full(vec![4, 1, 2, 2], 1.0);
+        scale_input_channels(&mut w, 1, &[2.0, 3.0], true);
+        assert_eq!(w.data[0], 1.0); // channel 0 untouched
+        assert_eq!(w.data[4], 2.0); // channel 1 scaled by c[0]
+        assert_eq!(w.data[8], 3.0); // channel 2 scaled by c[1]
+        assert_eq!(w.data[12], 1.0); // channel 3 untouched
+    }
+
+    #[test]
+    #[should_panic]
+    fn scale_depthwise_rejects_out_of_range_slice() {
+        let mut w = Tensor::full(vec![3, 1, 2, 2], 1.0);
+        scale_input_channels(&mut w, 2, &[2.0, 3.0], true);
     }
 
     #[test]

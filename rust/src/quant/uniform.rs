@@ -6,12 +6,15 @@ use crate::tensor::Tensor;
 
 /// Eq. (6) with layer-wise scale s = max|w| (optionally overridden, which
 /// is how OMSE/OCS plug in their clipping):
-///   q = (2/(2^k-1)) * round((2^k-1) * (w/(2s) + 1/2)) - 1, output q*s.
+///   q = (2/(2^k-1)) * round((2^k-1) * clamp(w/(2s) + 1/2, 0, 1)) - 1,
+/// output q*s. The clamp saturates values beyond the clipping scale: with
+/// an override s < max|w|, an unclamped t leaves [0, 1] and the output
+/// would escape the 2^k-level grid beyond ±s.
 pub fn quantize_uniform_scaled(w: &Tensor, k: u32, scale: f32) -> Tensor {
     let levels = ((1u64 << k) - 1) as f32;
     let s = scale.max(1e-12);
     w.clone().map(|v| {
-        let t = v / (2.0 * s) + 0.5;
+        let t = (v / (2.0 * s) + 0.5).clamp(0.0, 1.0);
         let q = (2.0 / levels) * (levels * t).round() - 1.0;
         q * s
     })
@@ -51,6 +54,25 @@ mod tests {
             let max_err = w.max_abs_diff(&q);
             assert!(max_err <= step / 2.0 + 1e-6, "k={k} err {max_err} step {step}");
         }
+    }
+
+    #[test]
+    fn override_scale_saturates_to_grid() {
+        // Regression: OMSE/OCS pass clipping scales below max|w|; outputs
+        // must saturate at ±s and stay on the 2^k-level grid.
+        let w = Tensor::new(vec![5], vec![-3.0, -1.0, 0.0, 1.0, 3.0]);
+        let s = 1.0;
+        let k = 3;
+        let q = quantize_uniform_scaled(&w, k, s);
+        let step = grid_step(k, s);
+        for qv in &q.data {
+            assert!(qv.abs() <= s + 1e-6, "escaped the clip: {qv}");
+            let m = (qv + s) / step;
+            assert!((m - m.round()).abs() < 1e-5, "off-grid value {qv}");
+        }
+        // outliers saturate at the grid endpoints
+        assert!((q.data[0] + 1.0).abs() < 1e-6);
+        assert!((q.data[4] - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -1,8 +1,12 @@
 //! PJRT runtime: artifact loading, compilation, execution, and the
-//! dedicated runtime thread the coordinator talks to.
+//! dedicated runtime thread the coordinator talks to. The XLA-backed
+//! implementation is gated behind the `xla` feature; offline builds get an
+//! API-identical stub (see `pjrt.rs`).
 
 pub mod pjrt;
 pub mod worker;
 
-pub use pjrt::{flat_params, literal_to_tensor, tensor_to_literal, PjrtModel, PjrtRuntime};
+pub use pjrt::{flat_params, PjrtModel, PjrtRuntime, PJRT_AVAILABLE};
+#[cfg(feature = "xla")]
+pub use pjrt::{literal_to_tensor, tensor_to_literal};
 pub use worker::PjrtWorker;

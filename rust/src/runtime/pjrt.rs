@@ -1,6 +1,14 @@
 //! PJRT runtime: load AOT HLO text artifacts, compile once, execute from
 //! the rust hot path. Adapted from /opt/xla-example/load_hlo.
 //!
+//! The real implementation drives XLA through the `xla` crate (xla-rs) and
+//! is gated behind the `xla` cargo feature, which cannot be built in the
+//! offline sandbox. Without the feature, an API-identical stub is compiled
+//! whose entry points fail with a clear "PJRT runtime unavailable" error —
+//! every dependent (worker thread, batcher, harness, benches) compiles and
+//! runs unchanged, and the pure-rust reference lane (`infer::RefLane`)
+//! carries inference instead.
+//!
 //! The interchange format is HLO *text* (not serialized HloModuleProto):
 //! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see aot.py).
@@ -9,26 +17,13 @@
 //! the flat model parameters in `Plan::param_order`, the last argument is
 //! the input batch; the result is a 1-tuple of logits.
 
-use std::path::Path;
-
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::model::{Checkpoint, Plan};
 use crate::tensor::Tensor;
 
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(&t.data)
-        .reshape(&dims)
-        .context("reshaping literal")
-}
-
-pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
-    let shape = l.array_shape().context("literal array shape")?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = l.to_vec::<f32>().context("literal to f32 vec")?;
-    Ok(Tensor::new(dims, data))
-}
+/// Whether this build carries the real PJRT runtime (`xla` feature).
+pub const PJRT_AVAILABLE: bool = cfg!(feature = "xla");
 
 /// Flatten a checkpoint into param-order tensors for an artifact.
 pub fn flat_params(plan: &Plan, ckpt: &Checkpoint) -> Result<Vec<Tensor>> {
@@ -44,144 +39,240 @@ pub fn flat_params(plan: &Plan, ckpt: &Checkpoint) -> Result<Vec<Tensor>> {
         .collect()
 }
 
-/// One compiled executable plus device-resident parameter buffers.
-///
-/// NOT Send/Sync (PJRT handles are thread-affine in the `xla` crate) — own
-/// it from a single runtime thread; `runtime::worker` provides the
-/// cross-thread façade.
-pub struct PjrtModel {
-    exe: xla::PjRtLoadedExecutable,
-    /// parameters cached as device buffers (uploaded once, §Perf).
-    param_bufs: Vec<xla::PjRtBuffer>,
-    /// host literals backing `param_bufs`. `buffer_from_host_literal` is
-    /// ASYNCHRONOUS in xla_extension 0.5.1 — the copy reads the literal on
-    /// an XLA pool thread after the call returns, so dropping the literal
-    /// early is a use-after-free (segfault in ShapeUtil::ByteSizeOf).
-    /// Keeping them alive for the model lifetime makes the upload safe.
-    _param_lits: Vec<xla::Literal>,
-    pub batch: usize,
-    pub input_chw: [usize; 3],
-}
+#[cfg(feature = "xla")]
+mod real {
+    use std::path::Path;
 
-pub struct PjrtRuntime {
-    pub client: xla::PjRtClient,
-}
+    use anyhow::{bail, Context, Result};
 
-impl PjrtRuntime {
-    pub fn cpu() -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtRuntime { client })
+    use crate::model::{Checkpoint, Plan};
+    use crate::tensor::Tensor;
+
+    use super::flat_params;
+
+    pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&t.data)
+            .reshape(&dims)
+            .context("reshaping literal")
     }
 
-    /// Compile an HLO text artifact.
-    pub fn compile(&self, hlo_path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", hlo_path.display()))
+    pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+        let shape = l.array_shape().context("literal array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = l.to_vec::<f32>().context("literal to f32 vec")?;
+        Ok(Tensor::new(dims, data))
     }
 
-    /// Compile + upload parameters. `batch` is the artifact's batch size.
-    pub fn load_model(
-        &self,
-        hlo_path: &Path,
-        plan: &Plan,
-        ckpt: &Checkpoint,
-        batch: usize,
-    ) -> Result<PjrtModel> {
-        let exe = self.compile(hlo_path)?;
-        let params = flat_params(plan, ckpt)?;
-        let devices = self.client.devices();
-        let device = devices.first().context("no PJRT device")?;
-        let mut param_bufs = Vec::with_capacity(params.len());
-        let mut param_lits = Vec::with_capacity(params.len());
-        for t in &params {
-            let lit = tensor_to_literal(t)?;
-            param_bufs.push(
-                self.client
-                    .buffer_from_host_literal(Some(device), &lit)
-                    .context("uploading param buffer")?,
-            );
-            param_lits.push(lit); // must outlive the async copy
+    /// One compiled executable plus device-resident parameter buffers.
+    ///
+    /// NOT Send/Sync (PJRT handles are thread-affine in the `xla` crate) —
+    /// own it from a single runtime thread; `runtime::worker` provides the
+    /// cross-thread façade.
+    pub struct PjrtModel {
+        exe: xla::PjRtLoadedExecutable,
+        /// parameters cached as device buffers (uploaded once, §Perf).
+        param_bufs: Vec<xla::PjRtBuffer>,
+        /// host literals backing `param_bufs`. `buffer_from_host_literal`
+        /// is ASYNCHRONOUS in xla_extension 0.5.1 — the copy reads the
+        /// literal on an XLA pool thread after the call returns, so
+        /// dropping the literal early is a use-after-free (segfault in
+        /// ShapeUtil::ByteSizeOf). Keeping them alive for the model
+        /// lifetime makes the upload safe.
+        _param_lits: Vec<xla::Literal>,
+        pub batch: usize,
+        pub input_chw: [usize; 3],
+    }
+
+    pub struct PjrtRuntime {
+        pub client: xla::PjRtClient,
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<PjrtRuntime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(PjrtRuntime { client })
         }
-        Ok(PjrtModel { exe, param_bufs, _param_lits: param_lits, batch, input_chw: plan.input })
-    }
-}
 
-impl PjrtModel {
-    /// Replace the cached parameter buffers (e.g. swap in a quantized set).
-    pub fn set_params(&mut self, runtime: &PjrtRuntime, plan: &Plan, ckpt: &Checkpoint) -> Result<()> {
-        let params = flat_params(plan, ckpt)?;
-        let devices = runtime.client.devices();
-        let device = devices.first().context("no PJRT device")?;
-        // old literals must outlive any in-flight copies of the previous
-        // buffers; swap them out only after the new set is fully staged.
-        let mut new_bufs = Vec::with_capacity(params.len());
-        let mut new_lits = Vec::with_capacity(params.len());
-        for t in &params {
-            let lit = tensor_to_literal(t)?;
-            new_bufs.push(runtime.client.buffer_from_host_literal(Some(device), &lit)?);
-            new_lits.push(lit);
-        }
-        self.param_bufs = new_bufs;
-        self._param_lits = new_lits;
-        Ok(())
-    }
-
-    /// Run one batch (NCHW, N == artifact batch; pads smaller batches).
-    /// Returns (N, classes) logits trimmed to the actual input rows.
-    pub fn infer(&self, runtime: &PjrtRuntime, x: &Tensor) -> Result<Tensor> {
-        let n = x.shape[0];
-        if n > self.batch {
-            bail!("batch {n} exceeds artifact batch {}", self.batch);
-        }
-        let padded = if n == self.batch {
-            x.clone()
-        } else {
-            let per: usize = x.shape[1..].iter().product();
-            let mut data = x.data.clone();
-            data.resize(self.batch * per, 0.0);
-            Tensor::new(
-                vec![self.batch, x.shape[1], x.shape[2], x.shape[3]],
-                data,
+        /// Compile an HLO text artifact.
+        pub fn compile(&self, hlo_path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("non-utf8 path")?,
             )
-        };
-        let x_lit = tensor_to_literal(&padded)?;
-        let devices = runtime.client.devices();
-        let device = devices.first().context("no PJRT device")?;
-        let x_buf = runtime
-            .client
-            .buffer_from_host_literal(Some(device), &x_lit)?;
-        let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
-        args.push(&x_buf);
-        let result = self.exe.execute_b(&args).context("executing model")?;
-        let lit = result[0][0].to_literal_sync()?.to_tuple1()?;
-        let logits = literal_to_tensor(&lit)?;
-        let classes = logits.shape[1];
-        Ok(Tensor::new(
-            vec![n, classes],
-            logits.data[..n * classes].to_vec(),
-        ))
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", hlo_path.display()))
+        }
+
+        /// Compile + upload parameters. `batch` is the artifact's batch size.
+        pub fn load_model(
+            &self,
+            hlo_path: &Path,
+            plan: &Plan,
+            ckpt: &Checkpoint,
+            batch: usize,
+        ) -> Result<PjrtModel> {
+            let exe = self.compile(hlo_path)?;
+            let params = flat_params(plan, ckpt)?;
+            let devices = self.client.devices();
+            let device = devices.first().context("no PJRT device")?;
+            let mut param_bufs = Vec::with_capacity(params.len());
+            let mut param_lits = Vec::with_capacity(params.len());
+            for t in &params {
+                let lit = tensor_to_literal(t)?;
+                param_bufs.push(
+                    self.client
+                        .buffer_from_host_literal(Some(device), &lit)
+                        .context("uploading param buffer")?,
+                );
+                param_lits.push(lit); // must outlive the async copy
+            }
+            Ok(PjrtModel {
+                exe,
+                param_bufs,
+                _param_lits: param_lits,
+                batch,
+                input_chw: plan.input,
+            })
+        }
     }
 
-    /// Literal-per-call path (no cached buffers) — kept as the §Perf
-    /// baseline; see benches/bench_infer.rs for the comparison.
-    pub fn infer_literal_path(
-        &self,
-        params: &[Tensor],
-        x: &Tensor,
-    ) -> Result<Tensor> {
-        let mut lits = Vec::with_capacity(params.len() + 1);
-        for t in params {
-            lits.push(tensor_to_literal(t)?);
+    impl PjrtModel {
+        /// Replace the cached parameter buffers (e.g. swap in a quantized set).
+        pub fn set_params(
+            &mut self,
+            runtime: &PjrtRuntime,
+            plan: &Plan,
+            ckpt: &Checkpoint,
+        ) -> Result<()> {
+            let params = flat_params(plan, ckpt)?;
+            let devices = runtime.client.devices();
+            let device = devices.first().context("no PJRT device")?;
+            // old literals must outlive any in-flight copies of the previous
+            // buffers; swap them out only after the new set is fully staged.
+            let mut new_bufs = Vec::with_capacity(params.len());
+            let mut new_lits = Vec::with_capacity(params.len());
+            for t in &params {
+                let lit = tensor_to_literal(t)?;
+                new_bufs.push(runtime.client.buffer_from_host_literal(Some(device), &lit)?);
+                new_lits.push(lit);
+            }
+            self.param_bufs = new_bufs;
+            self._param_lits = new_lits;
+            Ok(())
         }
-        lits.push(tensor_to_literal(x)?);
-        let result = self.exe.execute(&lits).context("executing model")?;
-        let lit = result[0][0].to_literal_sync()?.to_tuple1()?;
-        literal_to_tensor(&lit)
+
+        /// Run one batch (NCHW, N == artifact batch; pads smaller batches).
+        /// Returns (N, classes) logits trimmed to the actual input rows.
+        pub fn infer(&self, runtime: &PjrtRuntime, x: &Tensor) -> Result<Tensor> {
+            let n = x.shape[0];
+            if n > self.batch {
+                bail!("batch {n} exceeds artifact batch {}", self.batch);
+            }
+            let padded = if n == self.batch {
+                x.clone()
+            } else {
+                let per: usize = x.shape[1..].iter().product();
+                let mut data = x.data.clone();
+                data.resize(self.batch * per, 0.0);
+                Tensor::new(
+                    vec![self.batch, x.shape[1], x.shape[2], x.shape[3]],
+                    data,
+                )
+            };
+            let x_lit = tensor_to_literal(&padded)?;
+            let devices = runtime.client.devices();
+            let device = devices.first().context("no PJRT device")?;
+            let x_buf = runtime
+                .client
+                .buffer_from_host_literal(Some(device), &x_lit)?;
+            let mut args: Vec<&xla::PjRtBuffer> = self.param_bufs.iter().collect();
+            args.push(&x_buf);
+            let result = self.exe.execute_b(&args).context("executing model")?;
+            let lit = result[0][0].to_literal_sync()?.to_tuple1()?;
+            let logits = literal_to_tensor(&lit)?;
+            let classes = logits.shape[1];
+            Ok(Tensor::new(
+                vec![n, classes],
+                logits.data[..n * classes].to_vec(),
+            ))
+        }
+
+        /// Literal-per-call path (no cached buffers) — kept as the §Perf
+        /// baseline; see benches/bench_infer.rs for the comparison.
+        pub fn infer_literal_path(&self, params: &[Tensor], x: &Tensor) -> Result<Tensor> {
+            let mut lits = Vec::with_capacity(params.len() + 1);
+            for t in params {
+                lits.push(tensor_to_literal(t)?);
+            }
+            lits.push(tensor_to_literal(x)?);
+            let result = self.exe.execute(&lits).context("executing model")?;
+            let lit = result[0][0].to_literal_sync()?.to_tuple1()?;
+            literal_to_tensor(&lit)
+        }
     }
 }
+
+#[cfg(feature = "xla")]
+pub use real::{literal_to_tensor, tensor_to_literal, PjrtModel, PjrtRuntime};
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use crate::model::{Checkpoint, Plan};
+    use crate::tensor::Tensor;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the `xla` feature \
+         (use the pure-rust reference engine instead: --engine ref)";
+
+    /// API-identical stand-in for the XLA-backed runtime in offline builds.
+    pub struct PjrtRuntime {}
+
+    pub struct PjrtModel {
+        pub batch: usize,
+        pub input_chw: [usize; 3],
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<PjrtRuntime> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn load_model(
+            &self,
+            _hlo_path: &Path,
+            _plan: &Plan,
+            _ckpt: &Checkpoint,
+            _batch: usize,
+        ) -> Result<PjrtModel> {
+            bail!(UNAVAILABLE)
+        }
+    }
+
+    impl PjrtModel {
+        pub fn set_params(
+            &mut self,
+            _runtime: &PjrtRuntime,
+            _plan: &Plan,
+            _ckpt: &Checkpoint,
+        ) -> Result<()> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn infer(&self, _runtime: &PjrtRuntime, _x: &Tensor) -> Result<Tensor> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn infer_literal_path(&self, _params: &[Tensor], _x: &Tensor) -> Result<Tensor> {
+            bail!(UNAVAILABLE)
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{PjrtModel, PjrtRuntime};

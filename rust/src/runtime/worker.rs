@@ -150,6 +150,12 @@ impl PjrtWorker {
     }
 }
 
+impl crate::infer::InferBackend for PjrtWorker {
+    fn infer_batch(&self, id: &str, x: Tensor) -> Result<Tensor> {
+        self.infer(id, x)
+    }
+}
+
 impl Drop for PjrtWorker {
     fn drop(&mut self) {
         let _ = self.tx.send(Cmd::Shutdown);

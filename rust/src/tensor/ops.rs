@@ -2,14 +2,204 @@
 //!
 //! These are correctness oracles and fallback execution — the production
 //! inference path is the PJRT runtime executing AOT HLO. Conv2d uses
-//! im2col + a blocked matmul so the engine stays usable for whole-dataset
-//! evaluation (see benches/bench_infer.rs for the comparison).
+//! im2col + a tiled GEMM over a pre-packed (transposed) weight panel, and
+//! the hot ops (im2col, GEMM, grouped conv, fc) can be row-partitioned
+//! across the shared [`ThreadPool`] via [`ExecCtx`].
+//!
+//! Parity contract: every parallel path runs the *same* kernel as the
+//! serial path on a disjoint row range, and every kernel accumulates in
+//! the same k-order per output element — so serial and N-thread execution
+//! produce bit-identical results (property-tested in
+//! `tests/engine_parallel.rs`). The engine is the numerical oracle for the
+//! PJRT lane; do not introduce order-changing optimizations here.
+
+use std::sync::Arc;
 
 use super::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 pub const BN_EPS: f32 = 1e-5;
 
-/// C = A(m,k) @ B(k,n), blocked over k for cache locality.
+/// GEMM k-panel height: one panel of the packed weights (`KC * n` floats)
+/// is swept over all row-block rows before moving on, keeping it resident
+/// in L2. Accumulation order per output element is unchanged by the
+/// tiling (k still increases monotonically), so results stay bit-exact.
+const GEMM_KC: usize = 256;
+
+// ---------------------------------------------------------------------------
+// scratch arena + execution context
+// ---------------------------------------------------------------------------
+
+/// Recycled `f32` buffer arena: the engine's per-op temporaries (im2col
+/// matrix, GEMM output, replaced activations) cycle through here so a
+/// steady-state `Engine::forward` stops allocating per op.
+#[derive(Default)]
+pub struct Scratch {
+    free: Vec<Vec<f32>>,
+}
+
+/// Bound on retained buffers; beyond it only capacity upgrades are kept.
+const SCRATCH_MAX_BUFS: usize = 8;
+
+impl Scratch {
+    /// A zeroed buffer of exactly `len` elements (best-fit reuse).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut pick: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() >= len {
+                match pick {
+                    Some(p) if self.free[p].capacity() <= b.capacity() => {}
+                    _ => pick = Some(i),
+                }
+            }
+        }
+        let mut buf = match pick {
+            Some(i) => self.free.swap_remove(i),
+            None => Vec::with_capacity(len),
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the arena.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        if self.free.len() < SCRATCH_MAX_BUFS {
+            self.free.push(buf);
+            return;
+        }
+        let mut smallest = 0;
+        for i in 1..self.free.len() {
+            if self.free[i].capacity() < self.free[smallest].capacity() {
+                smallest = i;
+            }
+        }
+        if self.free[smallest].capacity() < buf.capacity() {
+            self.free[smallest] = buf;
+        }
+    }
+}
+
+/// Execution context for the tensor ops: an optional shared thread pool
+/// for row-parallel kernels plus the scratch arena. `serial()` is the
+/// bit-exact oracle configuration; `with_pool` fans row blocks out over
+/// the pool without changing any numeric result.
+pub struct ExecCtx {
+    pool: Option<Arc<ThreadPool>>,
+    threads: usize,
+    pub scratch: Scratch,
+}
+
+impl ExecCtx {
+    /// Single-threaded context (the oracle path).
+    pub fn serial() -> ExecCtx {
+        ExecCtx { pool: None, threads: 1, scratch: Scratch::default() }
+    }
+
+    /// Context fanning work out over `pool`.
+    pub fn with_pool(pool: Arc<ThreadPool>) -> ExecCtx {
+        let threads = pool.threads();
+        ExecCtx { pool: Some(pool), threads, scratch: Scratch::default() }
+    }
+
+    /// Pooled when `Some`, serial when `None`.
+    pub fn from_pool(pool: Option<Arc<ThreadPool>>) -> ExecCtx {
+        match pool {
+            Some(p) => ExecCtx::with_pool(p),
+            None => ExecCtx::serial(),
+        }
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.pool.is_some() && self.threads > 1
+    }
+
+    /// Hand a dead buffer back to the arena.
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        self.scratch.put(buf);
+    }
+
+    /// Run `f(r0, r1, chunk)` over contiguous row blocks of `out`
+    /// (`rows * width` elements). Serial fallback when there is no pool,
+    /// the problem is too small, or we are already on a pool worker
+    /// (fan-out from a worker would deadlock once every worker blocks on
+    /// sub-jobs that only workers can run).
+    fn run_rows(
+        &self,
+        rows: usize,
+        width: usize,
+        out: &mut [f32],
+        min_rows: usize,
+        f: impl Fn(usize, usize, &mut [f32]) + Sync,
+    ) {
+        debug_assert_eq!(out.len(), rows * width);
+        let min_rows = min_rows.max(1);
+        let blocks = match &self.pool {
+            Some(_)
+                if self.threads > 1
+                    && width > 0
+                    && rows >= 2 * min_rows
+                    && !ThreadPool::is_pool_worker() =>
+            {
+                self.threads.min(rows / min_rows).max(1)
+            }
+            _ => 1,
+        };
+        if blocks <= 1 {
+            f(0, rows, out);
+            return;
+        }
+        let per = (rows + blocks - 1) / blocks;
+        let pool = self.pool.as_ref().expect("pool present when blocks > 1");
+        let fref = &f;
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(blocks);
+        for (bi, chunk) in out.chunks_mut(per * width).enumerate() {
+            let r0 = bi * per;
+            let r1 = r0 + chunk.len() / width;
+            jobs.push(Box::new(move || fref(r0, r1, chunk)));
+        }
+        pool.scoped(jobs);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM + im2col kernels (shared by serial and parallel paths)
+// ---------------------------------------------------------------------------
+
+/// C rows `[r0, r1)` of `C = A(m,k) @ B(k,n)` accumulated into `out`,
+/// which the caller must hand over zeroed (`Scratch::take` and
+/// `vec![0.0; ..]` both guarantee that — zeroing here as well would
+/// memset the hot path's largest buffers twice). Sparsity-aware
+/// (post-ReLU activations are ~half zeros) with k-panel tiling;
+/// per-element accumulation order is plain increasing k.
+fn gemm_rows(a: &[f32], b: &[f32], k: usize, n: usize, r0: usize, r1: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    debug_assert!(out.iter().all(|&v| v == 0.0), "gemm output must be pre-zeroed");
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + GEMM_KC).min(k);
+        let bpanel = &b[k0 * n..k1 * n];
+        for i in r0..r1 {
+            let arow = &a[i * k + k0..i * k + k1];
+            let crow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bpanel[kk * n..(kk + 1) * n];
+                for (c, &bv) in crow.iter_mut().zip(brow) {
+                    *c += av * bv;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// C = A(m,k) @ B(k,n), serial (the oracle path).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.ndim(), 2);
     assert_eq!(b.ndim(), 2);
@@ -17,21 +207,66 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul inner dim mismatch");
     let mut out = vec![0.0f32; m * n];
-    // i-k-j loop order: innermost loop is contiguous over both B and C rows.
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = b.row(kk);
-            for j in 0..n {
-                crow[j] += av * brow[j];
+    gemm_rows(&a.data, &b.data, k, n, 0, m, &mut out);
+    Tensor::new(vec![m, n], out)
+}
+
+/// C = A(m,k) @ B(k,n), row blocks across the context's pool. Bit-exact
+/// with [`matmul`] (same kernel per row).
+pub fn matmul_with(ctx: &mut ExecCtx, a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dim mismatch");
+    let mut out = ctx.scratch.take(m * n);
+    ctx.run_rows(m, n, &mut out, 16, |r0, r1, chunk| {
+        gemm_rows(&a.data, &b.data, k, n, r0, r1, chunk);
+    });
+    Tensor::new(vec![m, n], out)
+}
+
+/// Rows `[r0, r1)` of the im2col matrix (flattened `(ni, oy, ox)` order)
+/// into `out`, which the caller must hand over zeroed (padding positions
+/// are never written; `Scratch::take`/`vec![0.0; ..]` provide the zeros).
+#[allow(clippy::too_many_arguments)]
+fn im2col_rows(
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    let c = x.shape[1];
+    let h = x.shape[2];
+    let w = x.shape[3];
+    let cols = c * k * k;
+    debug_assert_eq!(out.len(), (r1 - r0) * cols);
+    for r in r0..r1 {
+        let orow = &mut out[(r - r0) * cols..(r - r0 + 1) * cols];
+        let ox = r % ow;
+        let oy = (r / ow) % oh;
+        let ni = r / (ow * oh);
+        for ci in 0..c {
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    orow[(ci * k + ky) * k + kx] = x.at4(ni, ci, iy as usize, ix as usize);
+                }
             }
         }
     }
-    Tensor::new(vec![m, n], out)
 }
 
 /// im2col for NCHW input: returns (n*oh*ow, c*kh*kw) plus (oh, ow).
@@ -40,110 +275,169 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, usize
     let oh = (h + 2 * pad - k) / stride + 1;
     let ow = (w + 2 * pad - k) / stride + 1;
     let cols = c * k * k;
-    let mut out = vec![0.0f32; n * oh * ow * cols];
-    for ni in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((ni * oh + oy) * ow + ox) * cols;
-                for ci in 0..c {
-                    for ky in 0..k {
-                        let iy = (oy * stride + ky) as isize - pad as isize;
-                        if iy < 0 || iy >= h as isize {
+    let rows = n * oh * ow;
+    let mut out = vec![0.0f32; rows * cols];
+    im2col_rows(x, k, stride, pad, oh, ow, 0, rows, &mut out);
+    (Tensor::new(vec![rows, cols], out), oh, ow)
+}
+
+/// Pack an OIHW filter into the GEMM-ready transposed panel
+/// `(ci*kh*kw, o)`, row-major — the layout the inner GEMM loop streams
+/// with unit stride. The engine caches these per conv layer.
+pub fn pack_filter(w: &Tensor) -> Vec<f32> {
+    let (o, cols) = w.flat2d();
+    let mut out = vec![0.0f32; o * cols];
+    pack_filter_into(w, &mut out);
+    out
+}
+
+fn pack_filter_into(w: &Tensor, out: &mut [f32]) {
+    let (o, cols) = w.flat2d();
+    debug_assert_eq!(out.len(), o * cols);
+    for i in 0..o {
+        let wrow = &w.data[i * cols..(i + 1) * cols];
+        for (j, &v) in wrow.iter().enumerate() {
+            out[j * o + i] = v;
+        }
+    }
+}
+
+/// One (image, output-channel) plane of a grouped/depthwise conv; the
+/// direct-loop kernel shared by the serial and plane-parallel paths.
+#[allow(clippy::too_many_arguments)]
+fn conv_plane(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    pad: usize,
+    opg: usize,
+    ni: usize,
+    oc: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    let h = x.shape[2];
+    let wd = x.shape[3];
+    let ci = w.shape[1];
+    let (kh, kw) = (w.shape[2], w.shape[3]);
+    let g = oc / opg;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut acc = 0.0f32;
+            for ic in 0..ci {
+                let xc = g * ci + ic;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= wd as isize {
                             continue;
                         }
-                        for kx in 0..k {
-                            let ix = (ox * stride + kx) as isize - pad as isize;
-                            if ix < 0 || ix >= w as isize {
-                                continue;
-                            }
-                            out[row + (ci * k + ky) * k + kx] =
-                                x.at4(ni, ci, iy as usize, ix as usize);
-                        }
+                        acc += x.at4(ni, xc, iy as usize, ix as usize) * w.at4(oc, ic, ky, kx);
                     }
                 }
             }
+            out[oy * ow + ox] = acc;
         }
     }
-    (Tensor::new(vec![n * oh * ow, cols], out), oh, ow)
 }
 
-/// 2-D convolution, NCHW x OIHW -> NCHW. `groups` supports depthwise.
-pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize, groups: usize) -> Tensor {
+/// im2col + GEMM conv over an already-packed filter panel (`groups == 1`).
+pub fn conv2d_packed(
+    ctx: &mut ExecCtx,
+    x: &Tensor,
+    wt: &[f32],
+    o: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (wd + 2 * pad - k) / stride + 1;
+    let rows = n * oh * ow;
+    let cols = c * k * k;
+    debug_assert_eq!(wt.len(), cols * o);
+    let mut col = ctx.scratch.take(rows * cols);
+    ctx.run_rows(rows, cols, &mut col, 128, |r0, r1, chunk| {
+        im2col_rows(x, k, stride, pad, oh, ow, r0, r1, chunk);
+    });
+    let mut y = ctx.scratch.take(rows * o);
+    ctx.run_rows(rows, o, &mut y, 32, |r0, r1, chunk| {
+        gemm_rows(&col, wt, cols, o, r0, r1, chunk);
+    });
+    let mut out_data = ctx.scratch.take(n * o * oh * ow);
+    nhwc_rows_into_nchw(&y, n, oh, ow, o, &mut out_data);
+    ctx.scratch.put(col);
+    ctx.scratch.put(y);
+    Tensor::new(vec![n, o, oh, ow], out_data)
+}
+
+/// 2-D convolution with an execution context, NCHW x OIHW -> NCHW.
+/// `groups` supports depthwise. Bit-exact across thread counts.
+pub fn conv2d_with(
+    ctx: &mut ExecCtx,
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> Tensor {
     let (n, c, _h, _wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (o, ci, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
     assert_eq!(kh, kw, "square kernels only");
     assert_eq!(c / groups, ci, "input channels {c}/{groups} != filter {ci}");
     assert_eq!(o % groups, 0);
     if groups == 1 {
-        let (col, oh, ow) = im2col(x, kh, stride, pad);
-        // (n*oh*ow, c*k*k) @ (c*k*k, o)
-        let wt = transpose2d(&Tensor::new(vec![o, ci * kh * kw], w.data.clone()));
-        let y = matmul(&col, &wt); // (n*oh*ow, o)
-        return nhwc_rows_to_nchw(&y, n, oh, ow, o);
+        let mut wt = ctx.scratch.take(o * ci * kh * kw);
+        pack_filter_into(w, &mut wt);
+        let out = conv2d_packed(ctx, x, &wt, o, kh, stride, pad);
+        ctx.scratch.put(wt);
+        return out;
     }
-    // Grouped/depthwise: direct loops (channel counts are small).
+    // Grouped/depthwise: direct loops, parallel over (image, channel)
+    // planes — each plane is an independent contiguous output slice.
     let h = x.shape[2];
     let wd = x.shape[3];
     let oh = (h + 2 * pad - kh) / stride + 1;
     let ow = (wd + 2 * pad - kw) / stride + 1;
     let opg = o / groups; // out channels per group
+    let planes = n * o;
     let mut out = Tensor::zeros(vec![n, o, oh, ow]);
-    for ni in 0..n {
-        for oc in 0..o {
-            let g = oc / opg;
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut acc = 0.0f32;
-                    for ic in 0..ci {
-                        let xc = g * ci + ic;
-                        for ky in 0..kh {
-                            let iy = (oy * stride + ky) as isize - pad as isize;
-                            if iy < 0 || iy >= h as isize {
-                                continue;
-                            }
-                            for kx in 0..kw {
-                                let ix = (ox * stride + kx) as isize - pad as isize;
-                                if ix < 0 || ix >= wd as isize {
-                                    continue;
-                                }
-                                acc += x.at4(ni, xc, iy as usize, ix as usize)
-                                    * w.at4(oc, ic, ky, kx);
-                            }
-                        }
-                    }
-                    *out.at4_mut(ni, oc, oy, ox) = acc;
-                }
-            }
+    ctx.run_rows(planes, oh * ow, &mut out.data, 1, |p0, p1, chunk| {
+        for p in p0..p1 {
+            let ni = p / o;
+            let oc = p % o;
+            let dst = &mut chunk[(p - p0) * oh * ow..(p - p0 + 1) * oh * ow];
+            conv_plane(x, w, stride, pad, opg, ni, oc, oh, ow, dst);
         }
-    }
+    });
     out
 }
 
-fn transpose2d(a: &Tensor) -> Tensor {
-    let (m, n) = (a.shape[0], a.shape[1]);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            out[j * m + i] = a.data[i * n + j];
-        }
-    }
-    Tensor::new(vec![n, m], out)
+/// 2-D convolution, NCHW x OIHW -> NCHW, serial (the oracle path).
+pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize, groups: usize) -> Tensor {
+    conv2d_with(&mut ExecCtx::serial(), x, w, stride, pad, groups)
 }
 
-/// Rows laid out as (n, oh, ow, o) -> NCHW tensor.
-fn nhwc_rows_to_nchw(y: &Tensor, n: usize, oh: usize, ow: usize, o: usize) -> Tensor {
-    let mut out = Tensor::zeros(vec![n, o, oh, ow]);
+/// Rows laid out as (n, oh, ow, o) -> NCHW layout in `out`.
+fn nhwc_rows_into_nchw(y: &[f32], n: usize, oh: usize, ow: usize, o: usize, out: &mut [f32]) {
+    debug_assert_eq!(y.len(), n * oh * ow * o);
+    debug_assert_eq!(out.len(), y.len());
     for ni in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
                 let row = ((ni * oh + oy) * ow + ox) * o;
                 for oc in 0..o {
-                    *out.at4_mut(ni, oc, oy, ox) = y.data[row + oc];
+                    out[((ni * o + oc) * oh + oy) * ow + ox] = y[row + oc];
                 }
             }
         }
     }
-    out
 }
 
 /// Inference-mode batch norm with running statistics.
@@ -238,25 +532,34 @@ pub fn gap(x: &Tensor) -> Tensor {
     out
 }
 
-/// Fully connected: (N, I) @ W(O, I)^T + b.
-pub fn fc(x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
+/// Fully connected with an execution context: (N, I) @ W(O, I)^T + b,
+/// parallel over batch rows. Bit-exact across thread counts.
+pub fn fc_with(ctx: &mut ExecCtx, x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
     let (n, i) = (x.shape[0], x.shape[1]);
     let (o, i2) = (w.shape[0], w.shape[1]);
     assert_eq!(i, i2);
     assert_eq!(b.len(), o);
     let mut out = Tensor::zeros(vec![n, o]);
-    for ni in 0..n {
-        let xr = x.row(ni);
-        for oi in 0..o {
-            let wr = w.row(oi);
-            let mut acc = b[oi];
-            for k in 0..i {
-                acc += xr[k] * wr[k];
+    ctx.run_rows(n, o, &mut out.data, 1, |r0, r1, chunk| {
+        for ni in r0..r1 {
+            let xr = x.row(ni);
+            let orow = &mut chunk[(ni - r0) * o..(ni - r0 + 1) * o];
+            for (oi, ov) in orow.iter_mut().enumerate() {
+                let wr = w.row(oi);
+                let mut acc = b[oi];
+                for (xv, wv) in xr.iter().zip(wr) {
+                    acc += xv * wv;
+                }
+                *ov = acc;
             }
-            out.data[ni * o + oi] = acc;
         }
-    }
+    });
     out
+}
+
+/// Fully connected: (N, I) @ W(O, I)^T + b, serial (the oracle path).
+pub fn fc(x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
+    fc_with(&mut ExecCtx::serial(), x, w, b)
 }
 
 /// Channel concat of two NCHW tensors.
@@ -321,6 +624,7 @@ pub fn softmax_rows(x: &Tensor) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn matmul_small() {
@@ -420,5 +724,100 @@ mod tests {
             assert!((sum - 1.0).abs() < 1e-6);
         }
         assert_eq!(argmax_rows(&s), vec![2, 2]);
+    }
+
+    // -- parallel / scratch paths -------------------------------------------
+
+    fn rand_tensor(r: &mut Rng, shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, r.normal_vec(n))
+    }
+
+    #[test]
+    fn matmul_parallel_is_bit_exact() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut r = Rng::new(91);
+        for &(m, k, n) in &[(1usize, 7usize, 5usize), (33, 64, 17), (128, 300, 48)] {
+            let a = rand_tensor(&mut r, vec![m, k]);
+            let b = rand_tensor(&mut r, vec![k, n]);
+            let serial = matmul(&a, &b);
+            let mut ctx = ExecCtx::with_pool(Arc::clone(&pool));
+            let par = matmul_with(&mut ctx, &a, &b);
+            assert_eq!(serial.shape, par.shape);
+            assert_eq!(serial.data, par.data, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn conv2d_parallel_is_bit_exact() {
+        let pool = Arc::new(ThreadPool::new(3));
+        let mut r = Rng::new(92);
+        let x = rand_tensor(&mut r, vec![4, 6, 11, 11]);
+        let w = rand_tensor(&mut r, vec![9, 6, 3, 3]);
+        let serial = conv2d(&x, &w, 2, 1, 1);
+        let mut ctx = ExecCtx::with_pool(Arc::clone(&pool));
+        let par = conv2d_with(&mut ctx, &x, &w, 2, 1, 1);
+        assert_eq!(serial.data, par.data);
+        // depthwise path
+        let xd = rand_tensor(&mut r, vec![2, 8, 9, 9]);
+        let wd = rand_tensor(&mut r, vec![8, 1, 3, 3]);
+        let sd = conv2d(&xd, &wd, 1, 1, 8);
+        let pd = conv2d_with(&mut ctx, &xd, &wd, 1, 1, 8);
+        assert_eq!(sd.data, pd.data);
+    }
+
+    #[test]
+    fn conv2d_packed_matches_unpacked() {
+        let mut r = Rng::new(93);
+        let x = rand_tensor(&mut r, vec![2, 3, 8, 8]);
+        let w = rand_tensor(&mut r, vec![5, 3, 3, 3]);
+        let wt = pack_filter(&w);
+        let mut ctx = ExecCtx::serial();
+        let a = conv2d_packed(&mut ctx, &x, &wt, 5, 3, 1, 1);
+        let b = conv2d(&x, &w, 1, 1, 1);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn fc_parallel_is_bit_exact() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut r = Rng::new(94);
+        let x = rand_tensor(&mut r, vec![13, 40]);
+        let w = rand_tensor(&mut r, vec![10, 40]);
+        let b: Vec<f32> = r.normal_vec(10);
+        let serial = fc(&x, &w, &b);
+        let mut ctx = ExecCtx::with_pool(pool);
+        let par = fc_with(&mut ctx, &x, &w, &b);
+        assert_eq!(serial.data, par.data);
+    }
+
+    #[test]
+    fn scratch_recycles_buffers() {
+        let mut s = Scratch::default();
+        let buf = s.take(100);
+        assert_eq!(buf.len(), 100);
+        assert!(buf.iter().all(|&v| v == 0.0));
+        let cap = buf.capacity();
+        let mut buf = buf;
+        buf[0] = 7.0;
+        s.put(buf);
+        let again = s.take(50);
+        // best-fit reuse, re-zeroed
+        assert!(again.capacity() >= cap.min(50));
+        assert!(again.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn run_rows_serial_inside_pool_worker() {
+        // fan-out from a pool worker must fall back to serial, not deadlock
+        let pool = Arc::new(ThreadPool::new(1));
+        let inner = Arc::clone(&pool);
+        let out = pool.map(vec![()], move |_| {
+            let mut ctx = ExecCtx::with_pool(Arc::clone(&inner));
+            let a = Tensor::full(vec![64, 8], 1.0);
+            let b = Tensor::full(vec![8, 8], 2.0);
+            matmul_with(&mut ctx, &a, &b).data[0]
+        });
+        assert_eq!(out, vec![16.0]);
     }
 }

@@ -1,11 +1,23 @@
 //! Fixed-size thread pool with a shared FIFO queue (tokio/rayon are
 //! unavailable offline; this is the coordinator's execution substrate).
+//!
+//! Two execution modes:
+//! - [`ThreadPool::execute`]/[`ThreadPool::map`]: `'static` jobs, the
+//!   coordinator's sweep/serving workloads.
+//! - [`ThreadPool::scoped`]: borrowed jobs with a completion barrier, the
+//!   substrate for the row-parallel tensor kernels (`tensor::ops`). The
+//!   caller blocks until every job has run, which is what makes handing
+//!   stack borrows to pool workers sound.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Prefix of the pool's worker thread names; `scoped` callers running on a
+/// worker must not re-enter the pool (see `is_pool_worker`).
+pub const WORKER_NAME_PREFIX: &str = "dfmpc-worker-";
 
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
@@ -21,11 +33,22 @@ impl ThreadPool {
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 thread::Builder::new()
-                    .name(format!("dfmpc-worker-{i}"))
+                    .name(format!("{WORKER_NAME_PREFIX}{i}"))
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            // Contain job panics so a bad job can neither
+                            // shrink the shared pool nor strand queued jobs
+                            // whose completion signals `scoped` waits on.
+                            // Sound to assert: panicking jobs report back
+                            // through dropped channel senders (`map`,
+                            // `scoped`), so callers observe the failure
+                            // instead of any broken invariant.
+                            Ok(job) => {
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                            }
                             Err(_) => break,
                         }
                     })
@@ -35,12 +58,41 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), workers }
     }
 
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+    /// Worker count this pool was built with.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Default worker count: `DFMPC_THREADS` if set, else the machine's
+    /// available parallelism.
+    pub fn default_threads() -> usize {
+        std::env::var("DFMPC_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    /// True when the calling thread IS one of this crate's pool workers.
+    /// Scoped fan-out from inside a worker would deadlock once every
+    /// worker blocks on sub-jobs that only workers can run, so callers use
+    /// this to fall back to serial execution.
+    pub fn is_pool_worker() -> bool {
+        thread::current()
+            .name()
+            .is_some_and(|n| n.starts_with(WORKER_NAME_PREFIX))
+    }
+
+    fn execute_job(&self, job: Job) {
         self.tx
             .as_ref()
             .expect("pool shut down")
-            .send(Box::new(f))
+            .send(job)
             .expect("worker channel closed");
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.execute_job(Box::new(f));
     }
 
     /// Run `f` over every item, collecting results in input order.
@@ -68,6 +120,54 @@ impl ThreadPool {
             out[i] = Some(r);
         }
         out.into_iter().map(|r| r.unwrap()).collect()
+    }
+
+    /// Execute all jobs on the pool and block until every one has run.
+    /// Jobs may borrow from the caller's stack: the barrier guarantees the
+    /// borrows outlive every job. A panicking job is contained by its
+    /// worker (see the worker loop) and re-raised here on the caller once
+    /// every sibling job has finished or unwound — like
+    /// `std::thread::scope`, no job can still hold a borrow when this
+    /// frame unwinds.
+    pub fn scoped<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        let (tx, rx) = mpsc::channel::<()>();
+        for job in jobs {
+            let tx = tx.clone();
+            let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                job();
+                let _ = tx.send(());
+            });
+            // SAFETY: the barrier below blocks this frame until every job
+            // has either signalled completion or dropped its sender by
+            // unwinding (workers contain the panic), so every `'env`
+            // borrow captured by `wrapped` strictly outlives its
+            // execution. Only the lifetime is transmuted; the layout of
+            // the two boxed-trait-object types is identical.
+            let wrapped: Job = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'env>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(wrapped)
+            };
+            self.execute_job(wrapped);
+        }
+        drop(tx);
+        let mut completed = 0;
+        while completed < n {
+            match rx.recv() {
+                Ok(()) => completed += 1,
+                Err(_) => {
+                    // Every remaining sender was dropped by an unwinding
+                    // job; all jobs are done touching caller state, so
+                    // re-raising on the caller is safe.
+                    panic!("threadpool: a scoped job panicked");
+                }
+            }
+        }
     }
 }
 
@@ -111,5 +211,76 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_jobs_borrow_caller_stack() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 1000];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (bi, chunk) in data.chunks_mut(100).enumerate() {
+                jobs.push(Box::new(move || {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = (bi * 100 + i) as u64;
+                    }
+                }));
+            }
+            pool.scoped(jobs);
+        }
+        assert_eq!(data, (0..1000).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn scoped_empty_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.scoped(Vec::new());
+    }
+
+    #[test]
+    fn scoped_runs_sequentially_consistent_under_load() {
+        let pool = ThreadPool::new(3);
+        for round in 0..20 {
+            let mut acc = vec![0u32; 64];
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for chunk in acc.chunks_mut(8) {
+                jobs.push(Box::new(move || {
+                    for v in chunk.iter_mut() {
+                        *v += round + 1;
+                    }
+                }));
+            }
+            pool.scoped(jobs);
+            assert!(acc.iter().all(|&v| v == round + 1));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped job panicked")]
+    fn scoped_propagates_job_panic() {
+        let pool = ThreadPool::new(2);
+        let data = vec![1u8; 8];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| assert!(data[0] == 2, "boom")),
+            Box::new(|| {}),
+        ];
+        pool.scoped(jobs);
+    }
+
+    #[test]
+    fn pool_survives_job_panic() {
+        // a panicking job must not shrink the pool or wedge the queue
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("contained"));
+        let out = pool.map(vec![1, 2, 3], |x| x * 2);
+        assert_eq!(out, vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn worker_thread_detection() {
+        assert!(!ThreadPool::is_pool_worker());
+        let pool = ThreadPool::new(1);
+        let out = pool.map(vec![()], |_| ThreadPool::is_pool_worker());
+        assert_eq!(out, vec![true]);
     }
 }

@@ -1,0 +1,233 @@
+//! Parallel-engine parity + artifact-free serving integration.
+//!
+//! The pooled engine must be BIT-IDENTICAL to the serial oracle: the
+//! parallel paths run the same kernels on disjoint row blocks, so any
+//! divergence is a bug in the partitioning, the scratch arena, or the
+//! packed-filter cache. Property-tested over randomly generated plans
+//! (residual blocks with downsample, depthwise convs, pools, relu6) with
+//! 1 vs N threads, plus a `forward_collect` stats-equality check.
+//!
+//! The second half drives the coordinator serving stack (RefLane ->
+//! Batcher -> TCP Server) entirely on the reference engine — no AOT
+//! artifacts, no `xla` feature — which is the request path exercised in
+//! offline builds.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use dfmpc::coordinator::{Batcher, BatcherConfig, Client, Server};
+use dfmpc::infer::engine::ActStats;
+use dfmpc::infer::{Engine, InferBackend, RefLane};
+use dfmpc::model::plan::{BnSpec, ConvSpec, DownSpec};
+use dfmpc::model::{Checkpoint, Op, Plan};
+use dfmpc::tensor::Tensor;
+use dfmpc::util::json::Json;
+use dfmpc::util::rng::Rng;
+use dfmpc::util::threadpool::ThreadPool;
+
+fn conv(name: &str, cin: usize, cout: usize, k: usize, stride: usize, pad: usize, groups: usize) -> ConvSpec {
+    ConvSpec { name: name.into(), cin, cout, k, stride, pad, groups }
+}
+
+fn bn(name: &str, ch: usize) -> BnSpec {
+    BnSpec { name: name.into(), ch }
+}
+
+/// Randomly assembled zoo-style plan: stem + residual block (+ optional
+/// downsample block with shortcut conv, depthwise conv, pool) + head.
+fn random_plan(r: &mut Rng) -> (Plan, usize) {
+    let c0 = 1 + r.below(3) as usize; // input channels
+    let s = 8 + 2 * r.below(4) as usize; // spatial 8..14
+    let ch = 4 + r.below(9) as usize; // stem width 4..12
+    let classes = 2 + r.below(6) as usize;
+
+    let mut ops = vec![
+        Op::Conv(conv("stem", c0, ch, 3, 1, 1, 1)),
+        Op::Bn(bn("stem_bn", ch)),
+        Op::Relu,
+        // plain residual block
+        Op::Save { id: "r0".into() },
+        Op::Conv(conv("b1a", ch, ch, 3, 1, 1, 1)),
+        Op::Bn(bn("b1a_bn", ch)),
+        Op::Relu,
+        Op::Conv(conv("b1b", ch, ch, 3, 1, 1, 1)),
+        Op::Bn(bn("b1b_bn", ch)),
+        Op::Residual { id: "r0".into(), down: None },
+        Op::Relu,
+    ];
+    let mut cur = ch;
+    if r.below(2) == 0 {
+        // downsample block with a 1x1 strided shortcut conv
+        let ch2 = cur * 2;
+        ops.extend([
+            Op::Save { id: "r1".into() },
+            Op::Conv(conv("b2a", cur, ch2, 3, 2, 1, 1)),
+            Op::Bn(bn("b2a_bn", ch2)),
+            Op::Relu,
+            Op::Conv(conv("b2b", ch2, ch2, 3, 1, 1, 1)),
+            Op::Bn(bn("b2b_bn", ch2)),
+            Op::Residual {
+                id: "r1".into(),
+                down: Some(DownSpec {
+                    conv: conv("b2d", cur, ch2, 1, 2, 0, 1),
+                    bn: bn("b2d_bn", ch2),
+                }),
+            },
+            Op::Relu,
+        ]);
+        cur = ch2;
+    }
+    if r.below(2) == 0 {
+        // depthwise conv (grouped path)
+        ops.extend([
+            Op::Conv(conv("dw", cur, cur, 3, 1, 1, cur)),
+            Op::Bn(bn("dw_bn", cur)),
+            Op::Relu6,
+        ]);
+    }
+    if r.below(2) == 0 {
+        ops.push(Op::MaxPool { k: 2, stride: 2 });
+    }
+    ops.push(Op::Gap);
+    ops.push(Op::Fc { name: "fc".into(), cin: cur, cout: classes });
+
+    let plan = Plan {
+        name: "rand".into(),
+        input: [c0, s, s],
+        num_classes: classes,
+        ops,
+        pairs: Vec::new(),
+        bn_of: BTreeMap::new(),
+    };
+    (plan, classes)
+}
+
+#[test]
+fn prop_forward_bit_identical_across_thread_counts() {
+    let pool1 = Arc::new(ThreadPool::new(1));
+    let pool_n = Arc::new(ThreadPool::new(4));
+    for seed in 0..12u64 {
+        let mut r = Rng::new(1000 + seed);
+        let (plan, _) = random_plan(&mut r);
+        let ckpt = Checkpoint::random_init(&plan, &mut r);
+        let n = 1 + r.below(4) as usize;
+        let [c, h, w] = plan.input;
+        let x = Tensor::new(vec![n, c, h, w], r.normal_vec(n * c * h * w));
+
+        let serial = Engine::new(&plan, &ckpt).forward(&x).unwrap();
+        let e1 = Engine::with_pool(&plan, &ckpt, Arc::clone(&pool1));
+        let en = Engine::with_pool(&plan, &ckpt, Arc::clone(&pool_n));
+        let one = e1.forward(&x).unwrap();
+        let many = en.forward(&x).unwrap();
+        assert_eq!(serial.shape, many.shape, "seed {seed}");
+        assert_eq!(serial.data, one.data, "seed {seed}: 1-thread diverged");
+        assert_eq!(serial.data, many.data, "seed {seed}: N-thread diverged");
+        // repeated forwards through the warm scratch arena + packed cache
+        let again = en.forward(&x).unwrap();
+        assert_eq!(serial.data, again.data, "seed {seed}: warm rerun diverged");
+        assert!(serial.data.iter().all(|v| v.is_finite()), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_forward_collect_stats_identical() {
+    let pool = Arc::new(ThreadPool::new(4));
+    for seed in 0..6u64 {
+        let mut r = Rng::new(2000 + seed);
+        let (plan, _) = random_plan(&mut r);
+        let ckpt = Checkpoint::random_init(&plan, &mut r);
+        let [c, h, w] = plan.input;
+        let x = Tensor::new(vec![2, c, h, w], r.normal_vec(2 * c * h * w));
+
+        let mut stats_serial = ActStats::new();
+        let logits_serial = Engine::new(&plan, &ckpt)
+            .forward_collect(&x, &mut stats_serial)
+            .unwrap();
+        let mut stats_par = ActStats::new();
+        let logits_par = Engine::with_pool(&plan, &ckpt, Arc::clone(&pool))
+            .forward_collect(&x, &mut stats_par)
+            .unwrap();
+        assert_eq!(logits_serial.data, logits_par.data, "seed {seed}");
+        assert_eq!(stats_serial, stats_par, "seed {seed}: BN stats diverged");
+        assert!(!stats_serial.is_empty(), "seed {seed}: no stats collected");
+    }
+}
+
+/// Fixed 3x32x32 plan matching the SynthShapes renderer, so the serving
+/// stack can classify real dataset streams without artifacts.
+const SERVE_PLAN: &str = r#"{
+  "name": "tiny32", "input": [3, 32, 32], "num_classes": 10,
+  "ops": [
+    {"op": "conv", "name": "c1", "cin": 3, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c1_bn", "ch": 8},
+    {"op": "relu"},
+    {"op": "conv", "name": "c2", "cin": 8, "cout": 16, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c2_bn", "ch": 16},
+    {"op": "relu"},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc", "cin": 16, "cout": 10}
+  ],
+  "pairs": [{"low": "c1", "high": "c2", "offset": 0}],
+  "bn_of": {"c1": "c1_bn", "c2": "c2_bn"}
+}"#;
+
+fn serve_fixture() -> (Arc<Plan>, Arc<Checkpoint>) {
+    let plan = Plan::parse(SERVE_PLAN).unwrap();
+    plan.validate().unwrap();
+    let mut r = Rng::new(77);
+    let ckpt = Checkpoint::random_init(&plan, &mut r);
+    (Arc::new(plan), Arc::new(ckpt))
+}
+
+#[test]
+fn batcher_on_reference_lane_is_deterministic() {
+    let (plan, ckpt) = serve_fixture();
+    let pool = Arc::new(ThreadPool::new(2));
+    let lane = RefLane::new(Arc::clone(&plan), Arc::clone(&ckpt), Some(pool));
+    let batcher = Arc::new(Batcher::start(
+        Arc::new(lane),
+        "tiny32".into(),
+        BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(5) },
+    ));
+    let img = dfmpc::data::synth::render_image(9001, 0, 10).0;
+    // the same image through different batch compositions must classify
+    // identically (per-row kernels are batch-size independent)
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let b = Arc::clone(&batcher);
+            let img = img.clone();
+            std::thread::spawn(move || b.classify(img).unwrap())
+        })
+        .collect();
+    let preds: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for p in &preds {
+        assert_eq!(p.class, preds[0].class);
+        assert_eq!(p.confidence, preds[0].confidence);
+        assert!(p.batch_size >= 1 && p.batch_size <= 4);
+        assert!(p.confidence > 0.0 && p.confidence <= 1.0);
+    }
+}
+
+#[test]
+fn server_roundtrip_on_reference_lane() {
+    let (plan, ckpt) = serve_fixture();
+    let pool = Arc::new(ThreadPool::new(2));
+    let lane: Arc<dyn InferBackend> = Arc::new(RefLane::new(plan, ckpt, Some(pool)));
+    let batcher = Arc::new(Batcher::start(lane, "tiny32".into(), BatcherConfig::default()));
+    let mut server = Server::start("127.0.0.1:0", batcher, "tiny32+ref".into()).unwrap();
+
+    let mut client = Client::connect(&server.addr).unwrap();
+    let st = client
+        .call(&Json::obj(vec![("op", Json::str("status"))]))
+        .unwrap();
+    assert_eq!(st.get("model").and_then(Json::as_str), Some("tiny32+ref"));
+    let (class, latency) = client.classify_index("cifar10-sim", 0).unwrap();
+    assert!(class < 10);
+    assert!(latency >= 0.0);
+    // malformed op -> structured error, connection stays usable
+    let err = client.call(&Json::obj(vec![("op", Json::str("nope"))])).unwrap();
+    assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+    let (class2, _) = client.classify_index("cifar10-sim", 1).unwrap();
+    assert!(class2 < 10);
+    server.stop();
+}

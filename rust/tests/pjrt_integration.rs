@@ -19,8 +19,21 @@ fn harness_or_skip() -> Option<Harness> {
     }
 }
 
+/// PJRT-driving tests must self-skip (not fail) in default builds where
+/// the runtime is the stub — artifacts being present is not enough.
+fn pjrt_or_skip() -> bool {
+    if !dfmpc::runtime::PJRT_AVAILABLE {
+        eprintln!("SKIP: built without the `xla` feature");
+        return false;
+    }
+    true
+}
+
 #[test]
 fn pjrt_matches_reference_engine() {
+    if !pjrt_or_skip() {
+        return;
+    }
     let Some(h) = harness_or_skip() else { return };
     let Ok(model) = h.load_model("resnet18_cifar10-sim") else {
         eprintln!("SKIP: resnet18 checkpoint missing");
@@ -43,6 +56,9 @@ fn pjrt_matches_reference_engine() {
 
 #[test]
 fn pjrt_accuracy_matches_training_metadata() {
+    if !pjrt_or_skip() {
+        return;
+    }
     let Some(mut h) = harness_or_skip() else { return };
     let Ok(model) = h.load_model("resnet18_cifar10-sim") else { return };
     let worker = h.worker().unwrap();
@@ -62,6 +78,9 @@ fn pjrt_accuracy_matches_training_metadata() {
 
 #[test]
 fn quantized_params_swap_in_place() {
+    if !pjrt_or_skip() {
+        return;
+    }
     let Some(h) = harness_or_skip() else { return };
     let Ok(model) = h.load_model("resnet18_cifar10-sim") else { return };
     let worker = PjrtWorker::spawn().unwrap();
@@ -84,6 +103,9 @@ fn quantized_params_swap_in_place() {
 
 #[test]
 fn pallas_artifact_matches_xla_artifact() {
+    if !pjrt_or_skip() {
+        return;
+    }
     let Some(h) = harness_or_skip() else { return };
     let Ok(model) = h.load_model("resnet18_cifar10-sim") else { return };
     let Some((pbatch, phlo)) = model.entry.pallas_hlo.clone() else {
@@ -108,6 +130,9 @@ fn pallas_artifact_matches_xla_artifact() {
 
 #[test]
 fn smaller_batches_are_padded() {
+    if !pjrt_or_skip() {
+        return;
+    }
     let Some(h) = harness_or_skip() else { return };
     let Ok(model) = h.load_model("resnet18_cifar10-sim") else { return };
     let worker = PjrtWorker::spawn().unwrap();

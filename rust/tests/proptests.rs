@@ -207,6 +207,48 @@ fn prop_im2col_conv_matches_naive() {
 }
 
 #[test]
+fn prop_parallel_kernels_bit_exact() {
+    // Row-parallel GEMM/conv must equal the serial oracle BITWISE for any
+    // shape/thread split (the engine parity guarantee, at the op level).
+    use std::sync::Arc;
+
+    use dfmpc::tensor::ops::{conv2d, conv2d_with, matmul, matmul_with, ExecCtx};
+    use dfmpc::util::threadpool::ThreadPool;
+
+    let pools = [Arc::new(ThreadPool::new(1)), Arc::new(ThreadPool::new(5))];
+    for seed in 0..CASES {
+        let mut r = Rng::new(900 + seed);
+        let (m, k, n) = (
+            1 + r.below(96) as usize,
+            1 + r.below(64) as usize,
+            1 + r.below(48) as usize,
+        );
+        let a = rand_tensor(&mut r, vec![m, k], 1.0);
+        let b = rand_tensor(&mut r, vec![k, n], 1.0);
+        let want = matmul(&a, &b);
+        for pool in &pools {
+            let mut ctx = ExecCtx::with_pool(Arc::clone(pool));
+            let got = matmul_with(&mut ctx, &a, &b);
+            assert_eq!(want.data, got.data, "seed {seed} m={m} k={k} n={n}");
+        }
+
+        let (nb, c, h) = (1 + r.below(3) as usize, 1 + r.below(4) as usize, 5 + r.below(8) as usize);
+        let o = 1 + r.below(6) as usize;
+        let ksz = [1usize, 3, 5][r.below(3) as usize];
+        let stride = 1 + r.below(2) as usize;
+        let pad = ksz / 2;
+        let x = rand_tensor(&mut r, vec![nb, c, h, h], 1.0);
+        let w = rand_tensor(&mut r, vec![o, c, ksz, ksz], 1.0);
+        let want = conv2d(&x, &w, stride, pad, 1);
+        for pool in &pools {
+            let mut ctx = ExecCtx::with_pool(Arc::clone(pool));
+            let got = conv2d_with(&mut ctx, &x, &w, stride, pad, 1);
+            assert_eq!(want.data, got.data, "seed {seed} conv");
+        }
+    }
+}
+
+#[test]
 fn prop_json_roundtrip_fuzz() {
     fn random_json(r: &mut Rng, depth: usize) -> Json {
         match if depth == 0 { r.below(4) } else { r.below(6) } {
