@@ -9,9 +9,10 @@ mod common;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use dfmpc::coordinator::{Batcher, BatcherConfig, LatencyRecorder};
+use dfmpc::coordinator::{LanePool, LanePoolConfig, LatencyRecorder};
 use dfmpc::data::synth;
 use dfmpc::harness::Harness;
+use dfmpc::infer::InferBackend;
 
 fn main() {
     let mut h = match Harness::open() {
@@ -42,12 +43,13 @@ fn main() {
         (8, 2, 8, 24),
         (8, 10, 8, 24),
     ] {
-        let batcher = Arc::new(Batcher::start(
-            Arc::clone(&worker),
+        let batcher = Arc::new(LanePool::start(
+            vec![Arc::clone(&worker) as Arc<dyn InferBackend>],
             "bench".into(),
-            BatcherConfig {
+            LanePoolConfig {
                 max_batch: max_batch.min(abatch),
                 max_wait: Duration::from_millis(wait_ms),
+                ..LanePoolConfig::default()
             },
         ));
         let t0 = Instant::now();

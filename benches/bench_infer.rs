@@ -5,7 +5,12 @@
 //! — the §Perf evidence for the row-parallel conv/GEMM path — plus a
 //! parity assertion that the threaded logits are bit-identical.
 //!
-//! Part 2 (requires `make models artifacts` + the `xla` feature): PJRT
+//! Part 2 (always runs): closed-loop many-client serving over the
+//! coordinator's [`LanePool`] with 1 vs N serial reference lanes — the
+//! §Perf evidence that the multi-lane dispatcher scales batch throughput
+//! across cores (asserted on hosts with ≥4 cores).
+//!
+//! Part 3 (requires `make models artifacts` + the `xla` feature): PJRT
 //! buffer path (production, cached device buffers) vs PJRT literal path
 //! (re-uploading all ~100 parameter literals per call) vs the reference
 //! engine. The buffer-vs-literal delta is the original §Perf evidence.
@@ -15,10 +20,12 @@
 mod common;
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use common::{bench, throughput};
+use dfmpc::coordinator::{LanePool, LanePoolConfig};
 use dfmpc::harness::Harness;
-use dfmpc::infer::Engine;
+use dfmpc::infer::{Engine, InferBackend, RefLane};
 use dfmpc::model::{Checkpoint, Plan};
 use dfmpc::runtime::pjrt::{flat_params, PjrtRuntime};
 use dfmpc::runtime::PJRT_AVAILABLE;
@@ -93,6 +100,83 @@ fn reference_engine_scaling() {
     println!("    parity: {} logits bit-identical across thread counts", a.data.len());
 }
 
+/// Closed-loop many-client serving benchmark over the lane pool: the
+/// §Perf evidence that the multi-lane dispatcher scales batch throughput
+/// from 1 lane to N on a multi-core host. Each lane runs the *serial*
+/// reference engine so lanes (not intra-op threads) are the unit of
+/// parallelism being measured.
+fn lane_pool_scaling() {
+    let plan = Arc::new(Plan::parse(RESNET_STYLE).unwrap());
+    let ckpt = Arc::new(Checkpoint::random_init(&plan, &mut Rng::new(42)));
+    let cores = ThreadPool::default_threads();
+    let n_lanes = cores.clamp(2, 4);
+    let clients = 2 * n_lanes;
+    let reqs = 16;
+    let img = dfmpc::data::synth::render_image(9001, 0, 10).0;
+
+    println!("== lane pool: closed-loop serving, {clients} clients x {reqs} reqs ==");
+    let mut one_lane_rps = 0.0f64;
+    for lanes_n in [1usize, n_lanes] {
+        let lanes: Vec<Arc<dyn InferBackend>> = (0..lanes_n)
+            .map(|_| {
+                Arc::new(RefLane::new(Arc::clone(&plan), Arc::clone(&ckpt), None))
+                    as Arc<dyn InferBackend>
+            })
+            .collect();
+        let pool = Arc::new(LanePool::start(
+            lanes,
+            "bench".into(),
+            LanePoolConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 256,
+                input_shape: Some(vec![3, 32, 32]),
+            },
+        ));
+        // warm the packed-filter caches so lane count is the only variable
+        for _ in 0..lanes_n {
+            let _ = pool.classify(img.clone()).unwrap();
+        }
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let p = Arc::clone(&pool);
+                let img = img.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..reqs {
+                        let _ = p.classify(img.clone()).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = (clients * reqs) as f64 / wall;
+        let snap = pool.snapshot();
+        let busiest = snap.lanes.iter().map(|l| l.requests).max().unwrap_or(0);
+        println!(
+            "    lanes={lanes_n}: {rps:>7.1} req/s | per-lane reqs max {busiest} | rejected {}",
+            snap.rejected_overload
+        );
+        pool.stop();
+        if lanes_n == 1 {
+            one_lane_rps = rps;
+        } else {
+            println!("    -> {:.2}x over 1 lane on {cores} cores", rps / one_lane_rps);
+            // §Perf acceptance: multi-lane must beat one lane on a
+            // multi-core host (skip the assert on tiny CI boxes)
+            if cores >= 4 {
+                assert!(
+                    rps > one_lane_rps * 1.15,
+                    "multi-lane throughput did not scale: {rps:.1} vs {one_lane_rps:.1} req/s"
+                );
+            }
+        }
+    }
+}
+
 fn pjrt_comparison() {
     if !PJRT_AVAILABLE {
         eprintln!("SKIP pjrt comparison: built without the `xla` feature");
@@ -157,5 +241,6 @@ fn pjrt_comparison() {
 
 fn main() {
     reference_engine_scaling();
+    lane_pool_scaling();
     pjrt_comparison();
 }

@@ -1,7 +1,7 @@
-//! Serving demo: dynamic-batching model server on a quantized model.
+//! Serving demo: lane-pool model server on a quantized model.
 //! Starts the TCP server, fires concurrent clients at it, and reports
 //! latency percentiles + throughput + online accuracy — the coordinator's
-//! serving path end to end (request -> batcher -> PJRT lane -> reply).
+//! serving path end to end (request -> lane pool -> PJRT lane -> reply).
 //!
 //!     cargo run --release --example serve_demo
 //!     cargo run --release --example serve_demo -- --clients 4 --requests 100 --method fp32
@@ -9,9 +9,10 @@
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
-use dfmpc::coordinator::{Batcher, BatcherConfig, Client, LatencyRecorder, Server};
+use dfmpc::coordinator::{Client, LanePool, LanePoolConfig, LatencyRecorder, Server, ServerConfig};
 use dfmpc::data::synth;
 use dfmpc::harness::Harness;
+use dfmpc::infer::InferBackend;
 use dfmpc::quant::Method;
 
 fn main() -> Result<()> {
@@ -29,12 +30,22 @@ fn main() -> Result<()> {
     let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, max_batch).context("artifact")?;
     worker.load(&id, hlo.to_path_buf(), &model.plan, &qckpt, abatch)?;
 
-    let batcher = Arc::new(Batcher::start(
-        Arc::clone(&worker),
+    let pool = Arc::new(LanePool::start(
+        vec![Arc::clone(&worker) as Arc<dyn InferBackend>],
         id.clone(),
-        BatcherConfig { max_batch: max_batch.min(abatch), max_wait: std::time::Duration::from_millis(2) },
+        LanePoolConfig {
+            max_batch: max_batch.min(abatch),
+            max_wait: std::time::Duration::from_millis(2),
+            queue_depth: args.usize("queue-depth", 128),
+            input_shape: None,
+        },
     ));
-    let mut server = Server::start("127.0.0.1:0", batcher, format!("{id}+{}", method.name()))?;
+    let mut server = Server::start(
+        "127.0.0.1:0",
+        Arc::clone(&pool),
+        format!("{id}+{}", method.name()),
+        ServerConfig { max_conns: args.usize("max-conns", 256) },
+    )?;
     println!("server on {} serving {} ({})", server.addr, id, method.name());
 
     let spec = synth::dataset(&model.entry.dataset).context("dataset")?;
@@ -87,6 +98,12 @@ fn main() -> Result<()> {
         server.stats.requests.load(std::sync::atomic::Ordering::Relaxed),
         server.stats.errors.load(std::sync::atomic::Ordering::Relaxed)
     );
+    let snap = pool.snapshot();
+    println!(
+        "pool stats: admitted={} completed={} rejected_overload={} peak_queue_depth={}",
+        snap.admitted, snap.completed, snap.rejected_overload, snap.peak_depth
+    );
     server.stop();
+    pool.stop();
     Ok(())
 }

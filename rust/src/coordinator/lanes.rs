@@ -1,0 +1,411 @@
+//! Multi-lane serving dispatcher — the request path of the coordinator.
+//!
+//! Replaces the single-threaded `Batcher` with a [`LanePool`]: N
+//! independent [`InferBackend`] lanes (reference-engine lanes in default
+//! builds, one PJRT worker per device when the `xla` feature lands) pull
+//! batches from one *bounded* admission queue.
+//!
+//! Design points, in the order they matter for serving:
+//!
+//! - **Bounded admission with backpressure.** `classify`/`classify_async`
+//!   reject with a structured [`ServeError::Overloaded`] once the queue
+//!   holds `queue_depth` requests — overload degrades into fast, explicit
+//!   rejection instead of unbounded memory growth.
+//! - **Work stealing by pull.** Every lane worker drains the shared queue
+//!   itself (first request blocking, then a `max_wait` batching window up
+//!   to `max_batch`). A slow batch occupies only its own lane; the other
+//!   lanes keep pulling, so there is no head-of-line blocking across
+//!   lanes.
+//! - **Per-request shape safety.** Admission validates each image against
+//!   the configured input shape (3-D CHW always), and batch building only
+//!   groups identically-shaped requests — a mismatched request can fail
+//!   only itself, never corrupt a batch it shares a queue with.
+//! - **Graceful drain.** [`LanePool::stop`] stops admission, lets every
+//!   lane drain the remaining queue, and joins the workers — no request
+//!   that was admitted is dropped.
+//!
+//! Counters (admissions, rejections, per-lane batches, queue high-water
+//! mark) live in [`PoolCounters`] and surface through the server's
+//! `status` op.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::infer::InferBackend;
+use crate::tensor::ops::{argmax_rows, softmax_rows};
+use crate::tensor::Tensor;
+
+use super::metrics::{PoolCounters, PoolSnapshot};
+
+/// Admission + batching policy for a [`LanePool`].
+#[derive(Clone, Debug)]
+pub struct LanePoolConfig {
+    /// largest batch a lane executes at once
+    pub max_batch: usize,
+    /// how long a lane waits for stragglers after the first request
+    pub max_wait: Duration,
+    /// bounded admission queue: requests beyond this depth are rejected
+    /// with [`ServeError::Overloaded`]
+    pub queue_depth: usize,
+    /// expected CHW input shape; `None` only validates that requests are
+    /// 3-D (batch building still groups by exact shape either way)
+    pub input_shape: Option<Vec<usize>>,
+}
+
+impl Default for LanePoolConfig {
+    fn default() -> Self {
+        LanePoolConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 128,
+            input_shape: None,
+        }
+    }
+}
+
+/// Structured serving error — machine-readable ([`ServeError::kind`]) so
+/// the TCP server can hand clients a typed rejection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// the admission queue is full; retry later
+    Overloaded { depth: usize, limit: usize },
+    /// the request image does not match the pool's expected input shape
+    ShapeMismatch { expected: Vec<usize>, got: Vec<usize> },
+    /// the pool has been stopped (or the batch worker died)
+    Stopped,
+    /// the inference backend failed the request's batch
+    Backend(String),
+}
+
+impl ServeError {
+    /// Stable machine-readable tag (the `error_kind` field on the wire).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::ShapeMismatch { .. } => "shape_mismatch",
+            ServeError::Stopped => "stopped",
+            ServeError::Backend(_) => "backend",
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded { depth, limit } => {
+                write!(f, "admission queue full ({depth}/{limit}); retry later")
+            }
+            ServeError::ShapeMismatch { expected, got } if expected.is_empty() => {
+                write!(f, "expected a 3-D CHW image, got shape {got:?}")
+            }
+            ServeError::ShapeMismatch { expected, got } => {
+                write!(f, "expected input shape {expected:?}, got {got:?}")
+            }
+            ServeError::Stopped => write!(f, "serving pool stopped"),
+            ServeError::Backend(msg) => write!(f, "inference backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One classification answer.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub class: usize,
+    pub confidence: f32,
+    /// total time inside the serving stack
+    pub latency_ms: f64,
+    /// how many requests shared the executed batch
+    pub batch_size: usize,
+    /// which lane executed the batch
+    pub lane: usize,
+}
+
+struct Request {
+    image: Tensor, // CHW
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<Prediction, ServeError>>,
+}
+
+struct QueueState {
+    q: VecDeque<Request>,
+    stopped: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+    counters: PoolCounters,
+}
+
+/// N-lane dispatcher: a bounded admission queue drained by one batcher
+/// worker per inference lane.
+pub struct LanePool {
+    shared: Arc<Shared>,
+    cfg: LanePoolConfig,
+    lane_count: usize,
+    workers: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl LanePool {
+    /// Start one batcher worker per lane. `model_id` names the loaded
+    /// model on multiplexing lanes (PJRT); single-model lanes ignore it.
+    pub fn start(
+        lanes: Vec<Arc<dyn InferBackend>>,
+        model_id: String,
+        cfg: LanePoolConfig,
+    ) -> LanePool {
+        assert!(!lanes.is_empty(), "lane pool needs at least one lane");
+        if let Some(shape) = &cfg.input_shape {
+            assert_eq!(shape.len(), 3, "input_shape must be CHW");
+        }
+        let cfg = LanePoolConfig { queue_depth: cfg.queue_depth.max(1), ..cfg };
+        let lane_count = lanes.len();
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { q: VecDeque::new(), stopped: false }),
+            cv: Condvar::new(),
+            counters: PoolCounters::new(lane_count),
+        });
+        let workers = lanes
+            .into_iter()
+            .enumerate()
+            .map(|(li, lane)| {
+                let shared = Arc::clone(&shared);
+                let model_id = model_id.clone();
+                let cfg = cfg.clone();
+                thread::Builder::new()
+                    .name(format!("dfmpc-lane-{li}"))
+                    .spawn(move || lane_worker(li, lane, model_id, cfg, shared))
+                    .expect("spawn lane worker")
+            })
+            .collect();
+        LanePool { shared, cfg, lane_count, workers: Mutex::new(workers) }
+    }
+
+    /// Enqueue one CHW image; blocks until its batch completes (or the
+    /// request is rejected at admission).
+    pub fn classify(&self, image: Tensor) -> Result<Prediction, ServeError> {
+        let rx = self.classify_async(image)?;
+        rx.recv().map_err(|_| ServeError::Stopped)?
+    }
+
+    /// Async enqueue returning the reply channel. Admission (queue bound
+    /// + shape validation) happens here, synchronously, so rejections are
+    /// immediate regardless of queue length.
+    pub fn classify_async(
+        &self,
+        image: Tensor,
+    ) -> Result<mpsc::Receiver<Result<Prediction, ServeError>>, ServeError> {
+        match &self.cfg.input_shape {
+            Some(expected) if image.shape != *expected => {
+                self.shared.counters.rejected_shape.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::ShapeMismatch {
+                    expected: expected.clone(),
+                    got: image.shape.clone(),
+                });
+            }
+            None if image.shape.len() != 3 => {
+                self.shared.counters.rejected_shape.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::ShapeMismatch {
+                    expected: Vec::new(),
+                    got: image.shape.clone(),
+                });
+            }
+            _ => {}
+        }
+        let (rtx, rrx) = mpsc::channel();
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            if st.stopped {
+                return Err(ServeError::Stopped);
+            }
+            if st.q.len() >= self.cfg.queue_depth {
+                self.shared.counters.rejected_overload.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::Overloaded {
+                    depth: st.q.len(),
+                    limit: self.cfg.queue_depth,
+                });
+            }
+            st.q.push_back(Request { image, enqueued: Instant::now(), reply: rtx });
+            self.shared.counters.note_depth(st.q.len());
+            // inside the critical section: a lane must never complete a
+            // request before it counts as admitted, or snapshots would
+            // transiently show completed + failed > admitted
+            self.shared.counters.admitted.fetch_add(1, Ordering::Relaxed);
+        }
+        self.shared.cv.notify_one();
+        Ok(rrx)
+    }
+
+    /// Number of inference lanes.
+    pub fn lane_count(&self) -> usize {
+        self.lane_count
+    }
+
+    /// Requests currently waiting in the admission queue.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().q.len()
+    }
+
+    /// The admission bound.
+    pub fn queue_limit(&self) -> usize {
+        self.cfg.queue_depth
+    }
+
+    /// Live counters (shared with the lane workers).
+    pub fn counters(&self) -> &PoolCounters {
+        &self.shared.counters
+    }
+
+    /// Plain-value counter snapshot including the current queue depth.
+    pub fn snapshot(&self) -> PoolSnapshot {
+        self.shared.counters.snapshot(self.queue_depth())
+    }
+
+    /// Stop admission, drain the queue through the lanes, and join every
+    /// worker. Idempotent; also runs on drop.
+    pub fn stop(&self) {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.stopped = true;
+        }
+        self.shared.cv.notify_all();
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LanePool {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One lane's batcher loop: block for a first request, widen the batch
+/// over `max_wait` with identically-shaped requests, execute, scatter.
+fn lane_worker(
+    li: usize,
+    lane: Arc<dyn InferBackend>,
+    model_id: String,
+    cfg: LanePoolConfig,
+    shared: Arc<Shared>,
+) {
+    loop {
+        // block for the first request of a batch; on stop, keep draining
+        // until the queue is empty, then exit
+        let first = {
+            let mut st = shared.queue.lock().unwrap();
+            loop {
+                if let Some(r) = st.q.pop_front() {
+                    break r;
+                }
+                if st.stopped {
+                    return;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        let shape = first.image.shape.clone();
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            let mut st = shared.queue.lock().unwrap();
+            // take queued requests with the batch's exact shape; leave the
+            // rest for another pull (their own homogeneous batch)
+            let mut i = 0;
+            let mut took = false;
+            while batch.len() < cfg.max_batch && i < st.q.len() {
+                if st.q[i].image.shape == shape {
+                    batch.push(st.q.remove(i).expect("index in bounds"));
+                    took = true;
+                } else {
+                    i += 1;
+                }
+            }
+            if batch.len() >= cfg.max_batch || st.stopped || now >= deadline {
+                break;
+            }
+            if !took {
+                let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
+                drop(guard);
+            }
+        }
+        shared.counters.lane(li).batches.fetch_add(1, Ordering::Relaxed);
+        shared.counters.lane(li).requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        execute(lane.as_ref(), &model_id, li, batch, &shared.counters);
+    }
+}
+
+/// Execute one homogeneous batch and scatter per-image results. All
+/// images share `batch[0]`'s shape by construction (batch building groups
+/// by exact shape), so the concat below cannot mix strides. A panicking
+/// backend is contained: its requests get a structured
+/// [`ServeError::Backend`] reply, count as `failed`, and the lane keeps
+/// serving — so `admitted == completed + failed` stays auditable.
+fn execute(
+    backend: &dyn InferBackend,
+    model_id: &str,
+    li: usize,
+    batch: Vec<Request>,
+    counters: &PoolCounters,
+) {
+    let n = batch.len();
+    let chw: Vec<usize> = batch[0].image.shape.clone();
+    debug_assert!(batch.iter().all(|r| r.image.shape == chw));
+    let per: usize = chw.iter().product();
+    let mut data = Vec::with_capacity(n * per);
+    for r in &batch {
+        data.extend_from_slice(&r.image.data);
+    }
+    let x = Tensor::new(vec![n, chw[0], chw[1], chw[2]], data);
+    // The whole inference pipeline — backend call, logits validation,
+    // softmax/argmax (which panics on NaN logits) — runs inside the
+    // catch, so nothing a backend returns can kill the lane. The scatter
+    // below only does guaranteed-in-bounds indexing and channel sends.
+    let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let logits = backend.infer_batch(model_id, x).map_err(|e| format!("{e:#}"))?;
+        if logits.shape.len() != 2 || logits.shape[0] != n || logits.shape[1] == 0 {
+            return Err(format!("backend returned bad logits shape {:?}", logits.shape));
+        }
+        let probs = softmax_rows(&logits);
+        let preds = argmax_rows(&logits);
+        Ok((probs, preds))
+    }));
+    match computed {
+        Ok(Ok((probs, preds))) => {
+            counters.completed.fetch_add(n as u64, Ordering::Relaxed);
+            for (i, req) in batch.into_iter().enumerate() {
+                let p = Prediction {
+                    class: preds[i],
+                    confidence: probs.at2(i, preds[i]),
+                    latency_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
+                    batch_size: n,
+                    lane: li,
+                };
+                let _ = req.reply.send(Ok(p));
+            }
+        }
+        Ok(Err(msg)) => fail_batch(counters, batch, msg),
+        Err(_) => {
+            eprintln!("lane {li}: inference pipeline panicked; lane continues");
+            fail_batch(counters, batch, "inference pipeline panicked".to_string());
+        }
+    }
+}
+
+/// Reply to every request of a failed batch with a structured backend
+/// error and account for it (`failed` counter).
+fn fail_batch(counters: &PoolCounters, batch: Vec<Request>, msg: String) {
+    counters.failed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    for req in batch {
+        let _ = req.reply.send(Err(ServeError::Backend(msg.clone())));
+    }
+}

@@ -1,8 +1,108 @@
-//! Serving/eval metrics: latency percentiles, throughput, accuracy.
+//! Serving/eval metrics: latency percentiles, throughput, accuracy, and
+//! the lane-pool admission/queue counters surfaced by the `status` op.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
 
 use crate::util::{mean, percentile};
+
+/// Per-lane serving counters (one inference lane of the pool).
+#[derive(Debug, Default)]
+pub struct LaneCounters {
+    /// batches executed on this lane
+    pub batches: AtomicU64,
+    /// requests answered by this lane (sum of its batch sizes)
+    pub requests: AtomicU64,
+}
+
+/// Shared counters for a [`crate::coordinator::LanePool`]: admission
+/// outcomes, queue-depth high-water mark, and per-lane activity. All
+/// fields are atomics so the admission path and every lane worker can
+/// update them lock-free.
+#[derive(Debug)]
+pub struct PoolCounters {
+    /// requests admitted into the queue
+    pub admitted: AtomicU64,
+    /// requests answered successfully
+    pub completed: AtomicU64,
+    /// requests rejected at admission because the queue was full
+    pub rejected_overload: AtomicU64,
+    /// requests rejected at admission for a bad input shape
+    pub rejected_shape: AtomicU64,
+    /// requests whose batch failed in the backend
+    pub failed: AtomicU64,
+    /// queue-depth high-water mark since start
+    pub peak_depth: AtomicUsize,
+    lanes: Vec<LaneCounters>,
+}
+
+impl PoolCounters {
+    pub fn new(lanes: usize) -> PoolCounters {
+        PoolCounters {
+            admitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected_overload: AtomicU64::new(0),
+            rejected_shape: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            peak_depth: AtomicUsize::new(0),
+            lanes: (0..lanes).map(|_| LaneCounters::default()).collect(),
+        }
+    }
+
+    pub fn lane(&self, i: usize) -> &LaneCounters {
+        &self.lanes[i]
+    }
+
+    pub fn lanes(&self) -> &[LaneCounters] {
+        &self.lanes
+    }
+
+    /// Record an observed queue depth (keeps the high-water mark).
+    pub fn note_depth(&self, depth: usize) {
+        self.peak_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Plain-value copy for reporting (`status` op, logs).
+    pub fn snapshot(&self, queue_depth: usize) -> PoolSnapshot {
+        PoolSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected_overload: self.rejected_overload.load(Ordering::Relaxed),
+            rejected_shape: self.rejected_shape.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            peak_depth: self.peak_depth.load(Ordering::Relaxed),
+            queue_depth,
+            lanes: self
+                .lanes
+                .iter()
+                .map(|l| LaneSnapshot {
+                    batches: l.batches.load(Ordering::Relaxed),
+                    requests: l.requests.load(Ordering::Relaxed),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of one lane's counters.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneSnapshot {
+    pub batches: u64,
+    pub requests: u64,
+}
+
+/// Point-in-time copy of the pool counters plus the current queue depth.
+#[derive(Clone, Debug)]
+pub struct PoolSnapshot {
+    pub admitted: u64,
+    pub completed: u64,
+    pub rejected_overload: u64,
+    pub rejected_shape: u64,
+    pub failed: u64,
+    pub peak_depth: usize,
+    pub queue_depth: usize,
+    pub lanes: Vec<LaneSnapshot>,
+}
 
 /// Accumulates request latencies and computes summary statistics.
 #[derive(Clone, Debug, Default)]
@@ -103,6 +203,26 @@ mod tests {
         assert!((s.p50_ms - 50.0).abs() <= 1.0);
         assert!((s.p99_ms - 99.0).abs() <= 1.0);
         assert_eq!(s.max_ms, 100.0);
+    }
+
+    #[test]
+    fn pool_counters_snapshot() {
+        let c = PoolCounters::new(2);
+        c.admitted.fetch_add(5, Ordering::Relaxed);
+        c.rejected_overload.fetch_add(2, Ordering::Relaxed);
+        c.note_depth(3);
+        c.note_depth(1);
+        c.lane(1).batches.fetch_add(4, Ordering::Relaxed);
+        c.lane(1).requests.fetch_add(9, Ordering::Relaxed);
+        let s = c.snapshot(1);
+        assert_eq!(s.admitted, 5);
+        assert_eq!(s.rejected_overload, 2);
+        assert_eq!(s.peak_depth, 3);
+        assert_eq!(s.queue_depth, 1);
+        assert_eq!(s.lanes.len(), 2);
+        assert_eq!(s.lanes[0].batches, 0);
+        assert_eq!(s.lanes[1].batches, 4);
+        assert_eq!(s.lanes[1].requests, 9);
     }
 
     #[test]

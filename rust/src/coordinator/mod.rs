@@ -1,14 +1,17 @@
 //! L3 coordinator: quantization-sweep scheduling, batched evaluation,
-//! dynamic-batching model serving, and metrics.
+//! multi-lane model serving (lane pool + bounded admission + TCP server),
+//! and metrics.
 
-pub mod batcher;
 pub mod eval;
+pub mod lanes;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig, Prediction};
 pub use eval::{eval_pjrt, eval_reference, EvalResult};
-pub use metrics::{AccuracyCounter, LatencyRecorder, LatencySummary};
+pub use lanes::{LanePool, LanePoolConfig, Prediction, ServeError};
+pub use metrics::{
+    AccuracyCounter, LaneSnapshot, LatencyRecorder, LatencySummary, PoolCounters, PoolSnapshot,
+};
 pub use scheduler::{lambda_grid, run_sweep, QuantJob, QuantOutcome};
-pub use server::{Client, Server};
+pub use server::{Client, Server, ServerConfig};

@@ -1,6 +1,6 @@
 //! TCP model server: newline-delimited JSON protocol over plain sockets
 //! (tokio is unavailable offline; a thread-per-connection accept loop over
-//! the dynamic batcher serves the same role).
+//! the lane pool serves the same role).
 //!
 //! Request (one line):
 //!   {"op": "classify", "dataset": "cifar10-sim", "index": 7}
@@ -8,24 +8,51 @@
 //!   {"op": "status"}
 //! Response (one line):
 //!   {"ok": true, "class": 3, "confidence": 0.97, "latency_ms": 1.2,
-//!    "batch_size": 4}
+//!    "batch_size": 4, "lane": 1}
+//! Errors are structured: {"ok": false, "error": "...", "error_kind":
+//! "overloaded" | "conn_limit" | "shape_mismatch" | "bad_request" | ...}.
+//!
+//! Connections beyond `max_conns` are rejected with a one-line
+//! `conn_limit` error before close. Handler threads are tracked (not
+//! detached): they poll the server's stop flag through a read timeout, so
+//! [`Server::stop`] drains and joins every handler in bounded time even
+//! when clients keep their sockets open.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::lanes::LanePool;
 use crate::data::synth;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
+/// How often blocked handler threads wake to poll the stop flag.
+const CONN_POLL: Duration = Duration::from_millis(100);
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// concurrent connections beyond this are rejected with `conn_limit`
+    pub max_conns: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_conns: 256 }
+    }
+}
+
+#[derive(Default)]
 pub struct ServerStats {
     pub requests: AtomicU64,
     pub errors: AtomicU64,
+    pub active_conns: AtomicUsize,
+    pub rejected_conns: AtomicU64,
 }
 
 pub struct Server {
@@ -33,50 +60,77 @@ pub struct Server {
     pub stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
     handle: Option<thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0") and serve the batcher's model.
-    pub fn start(addr: &str, batcher: Arc<Batcher>, model_name: String) -> Result<Server> {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve the lane pool's model.
+    pub fn start(
+        addr: &str,
+        pool: Arc<LanePool>,
+        model_name: String,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr).context("binding server")?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stats = Arc::new(ServerStats {
-            requests: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-        });
+        let stats = Arc::new(ServerStats::default());
         let stop = Arc::new(AtomicBool::new(false));
-        let (stats2, stop2) = (Arc::clone(&stats), Arc::clone(&stop));
+        let conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let max_conns = cfg.max_conns.max(1);
+        let (stats2, stop2, conns2) = (Arc::clone(&stats), Arc::clone(&stop), Arc::clone(&conns));
         let handle = thread::Builder::new()
             .name("dfmpc-server".into())
             .spawn(move || {
-                // Connection handlers are detached: joining them on stop()
-                // would deadlock against clients that keep the socket open
-                // (they exit when the peer disconnects or the process ends).
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let b = Arc::clone(&batcher);
-                            let s = Arc::clone(&stats2);
+                            // reap finished handlers so the registry stays
+                            // bounded by the number of LIVE connections
+                            conns2.lock().unwrap().retain(|h| !h.is_finished());
+                            if stats2.active_conns.load(Ordering::Relaxed) >= max_conns {
+                                stats2.rejected_conns.fetch_add(1, Ordering::Relaxed);
+                                reject_conn(stream, max_conns);
+                                continue;
+                            }
+                            let pool = Arc::clone(&pool);
+                            let st = Arc::clone(&stats2);
+                            let stop = Arc::clone(&stop2);
                             let name = model_name.clone();
-                            thread::spawn(move || {
-                                let _ = handle_conn(stream, b, s, name);
-                            });
+                            st.active_conns.fetch_add(1, Ordering::Relaxed);
+                            let spawned = thread::Builder::new().name("dfmpc-conn".into()).spawn(
+                                move || {
+                                    let _ = handle_conn(stream, &pool, &st, &name, &stop);
+                                    st.active_conns.fetch_sub(1, Ordering::Relaxed);
+                                },
+                            );
+                            match spawned {
+                                Ok(h) => conns2.lock().unwrap().push(h),
+                                Err(_) => {
+                                    stats2.active_conns.fetch_sub(1, Ordering::Relaxed);
+                                }
+                            }
                         }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            thread::sleep(std::time::Duration::from_millis(2));
+                        Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(2));
                         }
                         Err(_) => break,
                     }
                 }
             })
             .context("spawning server thread")?;
-        Ok(Server { addr: local, stats, stop, handle: Some(handle) })
+        Ok(Server { addr: local, stats, stop, handle: Some(handle), conns })
     }
 
+    /// Stop accepting, then drain: handler threads observe the stop flag
+    /// within [`CONN_POLL`] and are joined — no detached threads survive.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -88,82 +142,165 @@ impl Drop for Server {
     }
 }
 
+/// One-line structured rejection for connections over the limit.
+fn reject_conn(stream: TcpStream, max_conns: usize) {
+    let mut stream = stream;
+    // accepted sockets may inherit the listener's non-blocking flag on
+    // some platforms; the rejection must not be silently dropped, and a
+    // non-reading client must not block the accept loop either
+    stream.set_nonblocking(false).ok();
+    stream.set_write_timeout(Some(CONN_POLL)).ok();
+    let msg = Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(format!("connection limit ({max_conns}) reached; retry later"))),
+        ("error_kind", Json::str("conn_limit")),
+    ]);
+    let mut out = msg.dump();
+    out.push('\n');
+    let _ = stream.write_all(out.as_bytes());
+    // stream drops -> close
+}
+
 fn handle_conn(
     stream: TcpStream,
-    batcher: Arc<Batcher>,
-    stats: Arc<ServerStats>,
-    model_name: String,
+    pool: &LanePool,
+    stats: &ServerStats,
+    model_name: &str,
+    stop: &AtomicBool,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
+    stream.set_nonblocking(false).ok();
+    // the read timeout is what lets this thread notice `stop` while a
+    // client holds the connection open without sending anything; the
+    // write timeout bounds handlers against clients that never read, so
+    // `Server::stop` can always join this thread
+    stream.set_read_timeout(Some(CONN_POLL)).ok();
+    stream.set_write_timeout(Some(CONN_POLL)).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
-    let mut line = String::new();
+    // byte buffer, NOT String + read_line: on a timeout mid-request,
+    // read_until keeps the partial bytes for the next poll, whereas
+    // read_line would discard bytes that end mid-UTF-8-sequence
+    let mut buf: Vec<u8> = Vec::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
         }
-        let resp = match handle_request(line.trim(), &batcher, &stats, &model_name) {
-            Ok(j) => j,
-            Err(e) => {
-                stats.errors.fetch_add(1, Ordering::Relaxed);
-                Json::obj(vec![
-                    ("ok", Json::Bool(false)),
-                    ("error", Json::str(format!("{e:#}"))),
-                ])
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {
+                let line = String::from_utf8_lossy(&buf);
+                let resp = handle_request(line.trim(), pool, stats, model_name);
+                let mut out = resp.dump();
+                out.push('\n');
+                match stream.write_all(out.as_bytes()) {
+                    Ok(()) => {}
+                    // a client that stopped reading gets dropped, not
+                    // waited on (its response stream is corrupt anyway
+                    // after a partial write)
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock
+                            || e.kind() == ErrorKind::TimedOut =>
+                    {
+                        return Ok(())
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+                buf.clear();
             }
-        };
-        stream.write_all(resp.dump().as_bytes())?;
-        stream.write_all(b"\n")?;
+            // timeout poll: partial bytes stay in `buf`; retry
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+            Err(e) => return Err(e.into()),
+        }
     }
 }
 
-fn handle_request(
-    line: &str,
-    batcher: &Batcher,
-    stats: &ServerStats,
-    model_name: &str,
-) -> Result<Json> {
-    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+fn error_json(stats: &ServerStats, kind: &str, msg: &str) -> Json {
+    stats.errors.fetch_add(1, Ordering::Relaxed);
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+        ("error_kind", Json::str(kind)),
+    ])
+}
+
+fn handle_request(line: &str, pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
     stats.requests.fetch_add(1, Ordering::Relaxed);
-    match req.req("op")?.as_str().unwrap_or("") {
-        "status" => Ok(Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("model", Json::str(model_name)),
-            ("requests", Json::num(stats.requests.load(Ordering::Relaxed) as f64)),
-            ("errors", Json::num(stats.errors.load(Ordering::Relaxed) as f64)),
-        ])),
-        "classify" => {
-            let image = if let Some(px) = req.get("pixels").and_then(Json::f32_vec) {
-                anyhow::ensure!(
-                    px.len() == synth::C * synth::H * synth::W,
-                    "expected {} pixels, got {}",
-                    synth::C * synth::H * synth::W,
-                    px.len()
-                );
-                Tensor::new(vec![synth::C, synth::H, synth::W], px)
-            } else {
-                // render from the named dataset stream (demo mode)
-                let ds = req
-                    .get("dataset")
-                    .and_then(Json::as_str)
-                    .unwrap_or("cifar10-sim");
-                let spec = synth::dataset(ds)
-                    .ok_or_else(|| anyhow::anyhow!("unknown dataset '{ds}'"))?;
-                let index = req.get("index").and_then(Json::as_i64).unwrap_or(0) as u64;
-                synth::render_image(spec.eval_seed, index, spec.classes).0
+    let req = match Json::parse(line) {
+        Ok(r) => r,
+        Err(e) => return error_json(stats, "bad_request", &format!("bad json: {e}")),
+    };
+    match req.get("op").and_then(Json::as_str) {
+        Some("status") => status_json(pool, stats, model_name),
+        Some("classify") => {
+            let image = match request_image(&req) {
+                Ok(t) => t,
+                Err(e) => return error_json(stats, "bad_request", &format!("{e:#}")),
             };
-            let pred = batcher.classify(image)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("class", Json::num(pred.class as f64)),
-                ("confidence", Json::num(pred.confidence as f64)),
-                ("latency_ms", Json::num(pred.latency_ms)),
-                ("batch_size", Json::num(pred.batch_size as f64)),
-            ]))
+            match pool.classify(image) {
+                Ok(p) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("class", Json::num(p.class as f64)),
+                    ("confidence", Json::num(p.confidence as f64)),
+                    ("latency_ms", Json::num(p.latency_ms)),
+                    ("batch_size", Json::num(p.batch_size as f64)),
+                    ("lane", Json::num(p.lane as f64)),
+                ]),
+                Err(e) => error_json(stats, e.kind(), &e.to_string()),
+            }
         }
-        other => anyhow::bail!("unknown op '{other}'"),
+        Some(other) => error_json(stats, "bad_request", &format!("unknown op '{other}'")),
+        None => error_json(stats, "bad_request", "missing op"),
     }
+}
+
+/// Decode the request image: inline pixels or a named dataset index.
+fn request_image(req: &Json) -> Result<Tensor> {
+    if let Some(px) = req.get("pixels").and_then(Json::f32_vec) {
+        anyhow::ensure!(
+            px.len() == synth::C * synth::H * synth::W,
+            "expected {} pixels, got {}",
+            synth::C * synth::H * synth::W,
+            px.len()
+        );
+        return Ok(Tensor::new(vec![synth::C, synth::H, synth::W], px));
+    }
+    // render from the named dataset stream (demo mode)
+    let ds = req.get("dataset").and_then(Json::as_str).unwrap_or("cifar10-sim");
+    let spec = synth::dataset(ds).ok_or_else(|| anyhow::anyhow!("unknown dataset '{ds}'"))?;
+    let index = req.get("index").and_then(Json::as_i64).unwrap_or(0) as u64;
+    Ok(synth::render_image(spec.eval_seed, index, spec.classes).0)
+}
+
+/// `status` op: server counters plus the lane pool's admission/queue
+/// state — the serving stack's observability surface.
+fn status_json(pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
+    let snap = pool.snapshot();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("model", Json::str(model_name)),
+        ("requests", Json::num(stats.requests.load(Ordering::Relaxed) as f64)),
+        ("errors", Json::num(stats.errors.load(Ordering::Relaxed) as f64)),
+        ("active_conns", Json::num(stats.active_conns.load(Ordering::Relaxed) as f64)),
+        ("rejected_conns", Json::num(stats.rejected_conns.load(Ordering::Relaxed) as f64)),
+        ("lanes", Json::num(pool.lane_count() as f64)),
+        ("queue_depth", Json::num(snap.queue_depth as f64)),
+        ("queue_limit", Json::num(pool.queue_limit() as f64)),
+        ("peak_queue_depth", Json::num(snap.peak_depth as f64)),
+        ("admitted", Json::num(snap.admitted as f64)),
+        ("completed", Json::num(snap.completed as f64)),
+        ("rejected_overload", Json::num(snap.rejected_overload as f64)),
+        ("rejected_shape", Json::num(snap.rejected_shape as f64)),
+        ("failed", Json::num(snap.failed as f64)),
+        (
+            "lane_batches",
+            Json::Arr(snap.lanes.iter().map(|l| Json::num(l.batches as f64)).collect()),
+        ),
+        (
+            "lane_requests",
+            Json::Arr(snap.lanes.iter().map(|l| Json::num(l.requests as f64)).collect()),
+        ),
+    ])
 }
 
 /// Minimal blocking client (used by examples/benches/tests).
@@ -179,12 +316,19 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream.try_clone()?), stream })
     }
 
+    /// Read one response line without sending anything first (the server
+    /// pushes unsolicited lines, e.g. the `conn_limit` rejection).
+    pub fn read_response(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.trim().is_empty(), "connection closed");
+        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+
     pub fn call(&mut self, req: &Json) -> Result<Json> {
         self.stream.write_all(req.dump().as_bytes())?;
         self.stream.write_all(b"\n")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+        self.read_response()
     }
 
     pub fn classify_index(&mut self, dataset: &str, index: u64) -> Result<(usize, f64)> {

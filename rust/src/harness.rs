@@ -13,6 +13,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::eval::{eval_pjrt, eval_reference, EvalResult};
 use crate::data::EvalShard;
+use crate::infer::{InferBackend, RefLane};
 use crate::model::zoo::{artifacts_root, ModelEntry, Zoo};
 use crate::model::{Checkpoint, Plan};
 use crate::quant::{self, Method};
@@ -61,6 +62,25 @@ impl Harness {
             self.pool
                 .get_or_init(|| Arc::new(ThreadPool::new(ThreadPool::default_threads()))),
         )
+    }
+
+    /// Build `n` reference-engine serving lanes for a (possibly
+    /// quantized) checkpoint. One lane fans batches over the whole shared
+    /// pool; several lanes split the machine's threads between them (see
+    /// [`RefLane::lanes`]) so the lane pool scales across cores.
+    pub fn ref_lanes(
+        &self,
+        plan: &Arc<Plan>,
+        ckpt: &Arc<Checkpoint>,
+        n: usize,
+    ) -> Vec<Arc<dyn InferBackend>> {
+        if n <= 1 {
+            return RefLane::lanes(plan, ckpt, n, Some(self.pool()));
+        }
+        // multi-lane: the lanes build private pool slices, so don't
+        // materialize the shared pool just to read its size — pass it
+        // only if some earlier phase already spawned it
+        RefLane::lanes(plan, ckpt, n, self.pool.get().cloned())
     }
 
     pub fn load_model(&self, id: &str) -> Result<LoadedModel> {

@@ -135,7 +135,13 @@ impl<'a> Engine<'a> {
         self.forward_impl(x, Some(stats))
     }
 
-    fn bn_apply(&self, x: &mut Tensor, name: &str, stats: &mut Option<&mut ActStats>) -> Result<()> {
+    fn bn_apply(
+        &self,
+        ctx: &mut ExecCtx,
+        x: &mut Tensor,
+        name: &str,
+        stats: &mut Option<&mut ActStats>,
+    ) -> Result<()> {
         if let Some(stats) = stats.as_deref_mut() {
             let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
             let hw = h * w;
@@ -150,7 +156,8 @@ impl<'a> Engine<'a> {
             }
             stats.insert(name.to_string(), means);
         }
-        ops::batchnorm(
+        ops::batchnorm_with(
+            ctx,
             x,
             &self.ckpt.get(&format!("{name}.gamma"))?.data,
             &self.ckpt.get(&format!("{name}.beta"))?.data,
@@ -173,9 +180,9 @@ impl<'a> Engine<'a> {
                     let y = conv_cached(ctx, &mut packed, &c.name, w, c.stride, c.pad, c.groups, &x);
                     ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
-                Op::Bn(b) => self.bn_apply(&mut x, &b.name, &mut stats)?,
-                Op::Relu => ops::relu(&mut x),
-                Op::Relu6 => ops::relu6(&mut x),
+                Op::Bn(b) => self.bn_apply(ctx, &mut x, &b.name, &mut stats)?,
+                Op::Relu => ops::relu_with(ctx, &mut x),
+                Op::Relu6 => ops::relu6_with(ctx, &mut x),
                 Op::Save { id } => {
                     saved.insert(id.as_str(), x.clone());
                 }
@@ -197,7 +204,7 @@ impl<'a> Engine<'a> {
                                 d.conv.groups,
                                 sc,
                             );
-                            self.bn_apply(&mut s, &d.bn.name, &mut stats)?;
+                            self.bn_apply(ctx, &mut s, &d.bn.name, &mut stats)?;
                             s
                         }
                     };
@@ -212,11 +219,11 @@ impl<'a> Engine<'a> {
                     ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
                 Op::MaxPool { k, stride } => {
-                    let y = ops::maxpool(&x, *k, *stride);
+                    let y = ops::maxpool_with(ctx, &x, *k, *stride);
                     ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
                 Op::AvgPool { k, stride } => {
-                    let y = ops::avgpool(&x, *k, *stride);
+                    let y = ops::avgpool_with(ctx, &x, *k, *stride);
                     ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
                 Op::Gap => {
@@ -256,7 +263,7 @@ impl<'a> Engine<'a> {
 
 /// Owning, shareable reference-engine lane: the pure-rust counterpart of
 /// `runtime::PjrtWorker` behind [`super::InferBackend`]. This is what lets
-/// the dynamic batcher and the TCP server run without PJRT artifacts,
+/// the lane pool and the TCP server run without PJRT artifacts,
 /// fanning each batch's convs over the shared pool. The warm
 /// [`EngineState`] (packed filter panels + scratch arena) persists across
 /// batches behind a mutex, so steady-state serving neither re-packs
@@ -270,6 +277,38 @@ pub struct RefLane {
 impl RefLane {
     pub fn new(plan: Arc<Plan>, ckpt: Arc<Checkpoint>, pool: Option<Arc<ThreadPool>>) -> RefLane {
         RefLane { plan, ckpt, state: Mutex::new(EngineState::new(pool)) }
+    }
+
+    /// Build `n` independent reference lanes over one model for the
+    /// coordinator's lane pool. With one lane, `pool` is used directly
+    /// (the lane fans each batch over all cores). With several, the
+    /// machine's threads are *split* across the lanes — each lane gets
+    /// its own private pool slice (or runs serial when the split leaves a
+    /// single thread) — so concurrent batches scale side by side instead
+    /// of contending for the same workers.
+    pub fn lanes(
+        plan: &Arc<Plan>,
+        ckpt: &Arc<Checkpoint>,
+        n: usize,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Vec<Arc<dyn super::InferBackend>> {
+        let n = n.max(1);
+        if n == 1 {
+            let lane = RefLane::new(Arc::clone(plan), Arc::clone(ckpt), pool);
+            return vec![Arc::new(lane) as Arc<dyn super::InferBackend>];
+        }
+        let total = pool
+            .as_ref()
+            .map(|p| p.threads())
+            .unwrap_or_else(ThreadPool::default_threads);
+        let per = (total / n).max(1);
+        (0..n)
+            .map(|_| {
+                let lane_pool = if per > 1 { Some(Arc::new(ThreadPool::new(per))) } else { None };
+                let lane = RefLane::new(Arc::clone(plan), Arc::clone(ckpt), lane_pool);
+                Arc::new(lane) as Arc<dyn super::InferBackend>
+            })
+            .collect()
     }
 }
 

@@ -8,10 +8,12 @@ use anyhow::Result;
 
 use crate::tensor::Tensor;
 
-/// A batched-inference lane the coordinator can drive: the PJRT worker
-/// (`runtime::PjrtWorker`, production) or the in-process reference engine
-/// ([`RefLane`], fallback / artifact-free serving). `id` names a loaded
-/// model on lanes that multiplex several; single-model lanes ignore it.
+/// A batched-inference lane the coordinator's `LanePool` can drive: the
+/// PJRT worker (`runtime::PjrtWorker`, production — one per device) or
+/// the in-process reference engine ([`RefLane`], fallback /
+/// artifact-free serving; see [`RefLane::lanes`] for building a pool of
+/// them). `id` names a loaded model on lanes that multiplex several;
+/// single-model lanes ignore it.
 pub trait InferBackend: Send + Sync {
     fn infer_batch(&self, id: &str, x: Tensor) -> Result<Tensor>;
 }

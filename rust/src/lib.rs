@@ -9,8 +9,9 @@
 //!   baseline), a PJRT [`runtime`] executing AOT HLO artifacts (gated
 //!   behind the `xla` feature; offline builds get a stub and serve
 //!   through the pool-parallel reference engine), a batched evaluation
-//!   pipeline, a sweep scheduler, a dynamic-batching model server
-//!   ([`coordinator`]), and the substrates they need ([`tensor`],
+//!   pipeline, a sweep scheduler, a multi-lane model server (lane pool
+//!   with bounded admission + connection-limited TCP front end,
+//!   [`coordinator`]), and the substrates they need ([`tensor`],
 //!   [`infer`], [`data`], [`model`], [`util`]).
 //! - **L2**: `python/compile/model.py` — the JAX plan-IR interpreter,
 //!   lowered once to HLO text by `python/compile/aot.py`.

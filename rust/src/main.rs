@@ -6,7 +6,8 @@
 //!   eval     --model ID --method M [--engine pjrt|ref] [--batch N] [--limit N]
 //!   sweep    --model ID --methods M1,M2,... [--engine ...]
 //!   serve    --model ID --method M [--engine pjrt|ref] [--addr HOST:PORT]
-//!            [--max-batch N] [--max-wait-ms T]
+//!            [--max-batch N] [--max-wait-ms T] [--lanes N]
+//!            [--queue-depth N] [--max-conns N]
 //!
 //! `--engine ref` drives the pool-parallel pure-rust engine instead of the
 //! PJRT lane — the only serving path in builds without the `xla` feature.
@@ -19,11 +20,12 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use dfmpc::coordinator::{Batcher, BatcherConfig, Server};
+use dfmpc::coordinator::{LanePool, LanePoolConfig, Server, ServerConfig};
 use dfmpc::harness::{run_method, Harness};
-use dfmpc::infer::{InferBackend, RefLane};
+use dfmpc::infer::InferBackend;
 use dfmpc::quant::Method;
 use dfmpc::report::tables::{mb, pct, Table};
+use dfmpc::runtime::PjrtWorker;
 use dfmpc::util::args::Args;
 
 fn main() {
@@ -144,45 +146,76 @@ fn sweep(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let mut h = Harness::open()?;
+    let h = Harness::open()?;
     let model = h.load_model(args.get("model").context("--model required")?)?;
     let method = Method::parse(args.get_or("method", "dfmpc:2/6"))?;
     let engine = args.get_or("engine", "pjrt").to_string();
     let addr = args.get_or("addr", "127.0.0.1:7070").to_string();
     let max_batch = args.usize("max-batch", 8);
     let max_wait_ms = args.usize("max-wait-ms", 2);
+    let n_lanes = args.usize("lanes", 1);
+    let queue_depth = args.usize("queue-depth", 128);
+    let max_conns = args.usize("max-conns", 256);
 
-    let qckpt = method.apply(&model.plan, &model.ckpt)?;
-    let (backend, lane_batch): (Arc<dyn InferBackend>, usize) = if engine == "ref" {
-        // reference lane: no artifacts needed; convs fan out over the pool
-        let lane = RefLane::new(Arc::clone(&model.plan), Arc::new(qckpt), Some(h.pool()));
-        (Arc::new(lane), max_batch)
+    let qckpt = Arc::new(method.apply(&model.plan, &model.ckpt)?);
+    let (lanes, lane_batch): (Vec<Arc<dyn InferBackend>>, usize) = if engine == "ref" {
+        // reference lanes: no artifacts needed; one lane fans convs over
+        // the whole pool, several split the machine's threads between them
+        (h.ref_lanes(&model.plan, &qckpt, n_lanes), max_batch)
     } else {
-        let worker = h.worker()?;
         let (abatch, hlo) = h
             .zoo
             .hlo_for_batch(&model.entry, max_batch)
             .context("no artifact")?;
-        worker.load(&model.entry.id, hlo.to_path_buf(), &model.plan, &qckpt, abatch)?;
-        (worker, abatch)
+        let workers = PjrtWorker::spawn_lanes(n_lanes)?;
+        for w in &workers {
+            w.load(&model.entry.id, hlo.to_path_buf(), &model.plan, &qckpt, abatch)?;
+        }
+        (workers.into_iter().map(|w| w as Arc<dyn InferBackend>).collect(), abatch)
     };
-    let batcher = Arc::new(Batcher::start(
-        backend,
+    let [c, ih, iw] = model.plan.input;
+    let pool = Arc::new(LanePool::start(
+        lanes,
         model.entry.id.clone(),
-        BatcherConfig {
+        LanePoolConfig {
             max_batch: max_batch.min(lane_batch),
             max_wait: std::time::Duration::from_millis(max_wait_ms as u64),
+            queue_depth,
+            input_shape: Some(vec![c, ih, iw]),
         },
     ));
-    let server = Server::start(&addr, batcher, format!("{}+{}", model.entry.id, method.name()))?;
+    let mut server = Server::start(
+        &addr,
+        Arc::clone(&pool),
+        format!("{}+{}", model.entry.id, method.name()),
+        ServerConfig { max_conns },
+    )?;
     println!(
-        "serving {} ({}) on {} — newline-delimited JSON, e.g.\n  {{\"op\": \"classify\", \"dataset\": \"{}\", \"index\": 0}}",
+        "serving {} ({}) on {} — {} lane(s), queue depth {}, max {} conns\n\
+         newline-delimited JSON, e.g.\n  {{\"op\": \"classify\", \"dataset\": \"{}\", \"index\": 0}}\n\
+         Ctrl-C drains in-flight requests and exits",
         model.entry.id,
         method.name(),
         server.addr,
+        pool.lane_count(),
+        pool.queue_limit(),
+        max_conns,
         model.entry.dataset
     );
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(60));
+    dfmpc::util::signal::install_sigint_handler();
+    while !dfmpc::util::signal::sigint_received() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
     }
+    eprintln!("SIGINT: draining lanes and shutting down");
+    server.stop(); // joins every connection handler
+    pool.stop(); // drains the admission queue through the lanes
+    let snap = pool.snapshot();
+    eprintln!(
+        "served {} request(s) across {} lane(s); rejected {} overloaded / {} bad-shape",
+        snap.completed,
+        pool.lane_count(),
+        snap.rejected_overload,
+        snap.rejected_shape
+    );
+    Ok(())
 }

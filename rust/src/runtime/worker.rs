@@ -8,7 +8,7 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::thread;
 
 use anyhow::{anyhow, Context, Result};
@@ -115,6 +115,15 @@ impl PjrtWorker {
             })
             .map_err(|_| anyhow!("runtime thread gone"))?;
         rrx.recv().context("runtime thread dropped reply")?
+    }
+
+    /// Spawn `n` independent PJRT lanes for the coordinator's lane pool —
+    /// one runtime thread (client + executables + device buffers) each,
+    /// the one-lane-per-device shape of multi-accelerator serving. On a
+    /// single CPU device the lanes time-share but still overlap host-side
+    /// work (batch assembly, literal transfers).
+    pub fn spawn_lanes(n: usize) -> Result<Vec<Arc<PjrtWorker>>> {
+        (0..n.max(1)).map(|_| PjrtWorker::spawn().map(Arc::new)).collect()
     }
 
     /// Swap the parameters of a loaded model (e.g. to a quantized set).

@@ -3,8 +3,9 @@
 //! These are correctness oracles and fallback execution — the production
 //! inference path is the PJRT runtime executing AOT HLO. Conv2d uses
 //! im2col + a tiled GEMM over a pre-packed (transposed) weight panel, and
-//! the hot ops (im2col, GEMM, grouped conv, fc) can be row-partitioned
-//! across the shared [`ThreadPool`] via [`ExecCtx`].
+//! the hot ops (im2col, GEMM, grouped conv, fc, batchnorm, relu/relu6,
+//! pools) can be row-partitioned across the shared [`ThreadPool`] via
+//! [`ExecCtx`].
 //!
 //! Parity contract: every parallel path runs the *same* kernel as the
 //! serial path on a disjoint row range, and every kernel accumulates in
@@ -440,82 +441,186 @@ fn nhwc_rows_into_nchw(y: &[f32], n: usize, oh: usize, ow: usize, o: usize, out:
     }
 }
 
-/// Inference-mode batch norm with running statistics.
-pub fn batchnorm(x: &mut Tensor, gamma: &[f32], beta: &[f32], mu: &[f32], var: &[f32]) {
-    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    assert_eq!(gamma.len(), c);
-    let hw = h * w;
-    for ci in 0..c {
+/// One contiguous run of (image, channel) BN planes `[p0, p1)` — the
+/// kernel shared by the serial and plane-parallel batchnorm paths. Each
+/// plane's `inv`/`shift` depend only on its channel, so partitioning by
+/// plane cannot change any per-element result.
+fn batchnorm_planes(
+    chunk: &mut [f32],
+    p0: usize,
+    p1: usize,
+    c: usize,
+    hw: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    mu: &[f32],
+    var: &[f32],
+) {
+    debug_assert_eq!(chunk.len(), (p1 - p0) * hw);
+    for p in p0..p1 {
+        let ci = p % c;
         let inv = gamma[ci] / (var[ci] + BN_EPS).sqrt();
         let shift = beta[ci] - mu[ci] * inv;
-        for ni in 0..n {
-            let base = (ni * c + ci) * hw;
-            for p in &mut x.data[base..base + hw] {
-                *p = *p * inv + shift;
-            }
+        for v in &mut chunk[(p - p0) * hw..(p - p0 + 1) * hw] {
+            *v = *v * inv + shift;
         }
     }
 }
 
-pub fn relu(x: &mut Tensor) {
-    for v in &mut x.data {
+/// Inference-mode batch norm with an execution context, parallel over
+/// disjoint (image, channel) planes. Bit-exact across thread counts.
+pub fn batchnorm_with(
+    ctx: &mut ExecCtx,
+    x: &mut Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    mu: &[f32],
+    var: &[f32],
+) {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(gamma.len(), c);
+    let hw = h * w;
+    ctx.run_rows(n * c, hw, &mut x.data, 4, |p0, p1, chunk| {
+        batchnorm_planes(chunk, p0, p1, c, hw, gamma, beta, mu, var);
+    });
+}
+
+/// Inference-mode batch norm with running statistics, serial (the oracle
+/// path).
+pub fn batchnorm(x: &mut Tensor, gamma: &[f32], beta: &[f32], mu: &[f32], var: &[f32]) {
+    batchnorm_with(&mut ExecCtx::serial(), x, gamma, beta, mu, var)
+}
+
+fn relu_chunk(chunk: &mut [f32]) {
+    for v in chunk {
         if *v < 0.0 {
             *v = 0.0;
         }
     }
 }
 
-pub fn relu6(x: &mut Tensor) {
-    for v in &mut x.data {
+fn relu6_chunk(chunk: &mut [f32]) {
+    for v in chunk {
         *v = v.clamp(0.0, 6.0);
     }
 }
 
-pub fn maxpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+/// Minimum elements per thread block for the elementwise activations —
+/// below this, fan-out overhead beats the memory-bound loop.
+const ELEMWISE_MIN_BLOCK: usize = 16 * 1024;
+
+/// ReLU with an execution context, parallel over disjoint element blocks.
+pub fn relu_with(ctx: &mut ExecCtx, x: &mut Tensor) {
+    let len = x.data.len();
+    ctx.run_rows(len, 1, &mut x.data, ELEMWISE_MIN_BLOCK, |_, _, chunk| relu_chunk(chunk));
+}
+
+pub fn relu(x: &mut Tensor) {
+    relu_chunk(&mut x.data);
+}
+
+/// ReLU6 with an execution context, parallel over disjoint element blocks.
+pub fn relu6_with(ctx: &mut ExecCtx, x: &mut Tensor) {
+    let len = x.data.len();
+    ctx.run_rows(len, 1, &mut x.data, ELEMWISE_MIN_BLOCK, |_, _, chunk| relu6_chunk(chunk));
+}
+
+pub fn relu6(x: &mut Tensor) {
+    relu6_chunk(&mut x.data);
+}
+
+/// One (image, channel) output plane of a max pool — the kernel shared by
+/// the serial and plane-parallel paths.
+#[allow(clippy::too_many_arguments)]
+fn maxpool_plane(
+    x: &Tensor,
+    ni: usize,
+    ci: usize,
+    k: usize,
+    stride: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut m = f32::NEG_INFINITY;
+            for ky in 0..k {
+                for kx in 0..k {
+                    m = m.max(x.at4(ni, ci, oy * stride + ky, ox * stride + kx));
+                }
+            }
+            out[oy * ow + ox] = m;
+        }
+    }
+}
+
+/// Max pool with an execution context, parallel over disjoint
+/// (image, channel) planes. Bit-exact across thread counts.
+pub fn maxpool_with(ctx: &mut ExecCtx, x: &Tensor, k: usize, stride: usize) -> Tensor {
     let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let oh = (h - k) / stride + 1;
     let ow = (w - k) / stride + 1;
     let mut out = Tensor::zeros(vec![n, c, oh, ow]);
-    for ni in 0..n {
-        for ci in 0..c {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut m = f32::NEG_INFINITY;
-                    for ky in 0..k {
-                        for kx in 0..k {
-                            m = m.max(x.at4(ni, ci, oy * stride + ky, ox * stride + kx));
-                        }
-                    }
-                    *out.at4_mut(ni, ci, oy, ox) = m;
+    let hw = oh * ow;
+    ctx.run_rows(n * c, hw, &mut out.data, 2, |p0, p1, chunk| {
+        for p in p0..p1 {
+            let dst = &mut chunk[(p - p0) * hw..(p - p0 + 1) * hw];
+            maxpool_plane(x, p / c, p % c, k, stride, oh, ow, dst);
+        }
+    });
+    out
+}
+
+pub fn maxpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    maxpool_with(&mut ExecCtx::serial(), x, k, stride)
+}
+
+/// One (image, channel) output plane of an average pool.
+#[allow(clippy::too_many_arguments)]
+fn avgpool_plane(
+    x: &Tensor,
+    ni: usize,
+    ci: usize,
+    k: usize,
+    stride: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    let inv = 1.0 / (k * k) as f32;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let mut s = 0.0;
+            for ky in 0..k {
+                for kx in 0..k {
+                    s += x.at4(ni, ci, oy * stride + ky, ox * stride + kx);
                 }
             }
+            out[oy * ow + ox] = s * inv;
         }
     }
+}
+
+/// Average pool with an execution context, parallel over disjoint
+/// (image, channel) planes. Bit-exact across thread counts.
+pub fn avgpool_with(ctx: &mut ExecCtx, x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(vec![n, c, oh, ow]);
+    let hw = oh * ow;
+    ctx.run_rows(n * c, hw, &mut out.data, 2, |p0, p1, chunk| {
+        for p in p0..p1 {
+            let dst = &mut chunk[(p - p0) * hw..(p - p0 + 1) * hw];
+            avgpool_plane(x, p / c, p % c, k, stride, oh, ow, dst);
+        }
+    });
     out
 }
 
 pub fn avgpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
-    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let oh = (h - k) / stride + 1;
-    let ow = (w - k) / stride + 1;
-    let mut out = Tensor::zeros(vec![n, c, oh, ow]);
-    let inv = 1.0 / (k * k) as f32;
-    for ni in 0..n {
-        for ci in 0..c {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut s = 0.0;
-                    for ky in 0..k {
-                        for kx in 0..k {
-                            s += x.at4(ni, ci, oy * stride + ky, ox * stride + kx);
-                        }
-                    }
-                    *out.at4_mut(ni, ci, oy, ox) = s * inv;
-                }
-            }
-        }
-    }
-    out
+    avgpool_with(&mut ExecCtx::serial(), x, k, stride)
 }
 
 /// Global average pool: NCHW -> (N, C).
@@ -789,6 +894,40 @@ mod tests {
         let mut ctx = ExecCtx::with_pool(pool);
         let par = fc_with(&mut ctx, &x, &w, &b);
         assert_eq!(serial.data, par.data);
+    }
+
+    #[test]
+    fn elementwise_parallel_is_bit_exact() {
+        let pool = Arc::new(ThreadPool::new(3));
+        let mut r = Rng::new(95);
+        let x = rand_tensor(&mut r, vec![2, 5, 9, 9]);
+        let c = x.shape[1];
+        let gamma: Vec<f32> = (0..c).map(|_| 0.5 + r.f32()).collect();
+        let beta: Vec<f32> = (0..c).map(|_| r.normal()).collect();
+        let mu: Vec<f32> = (0..c).map(|_| 0.2 * r.normal()).collect();
+        let var: Vec<f32> = (0..c).map(|_| 0.3 + r.f32()).collect();
+
+        let mut want = x.clone();
+        batchnorm(&mut want, &gamma, &beta, &mu, &var);
+        let mut ctx = ExecCtx::with_pool(Arc::clone(&pool));
+        let mut got = x.clone();
+        batchnorm_with(&mut ctx, &mut got, &gamma, &beta, &mu, &var);
+        assert_eq!(want.data, got.data);
+
+        let mut want_r = want.clone();
+        relu(&mut want_r);
+        let mut got_r = got.clone();
+        relu_with(&mut ctx, &mut got_r);
+        assert_eq!(want_r.data, got_r.data);
+
+        let mut want_r6 = want.clone();
+        relu6(&mut want_r6);
+        let mut got_r6 = got;
+        relu6_with(&mut ctx, &mut got_r6);
+        assert_eq!(want_r6.data, got_r6.data);
+
+        assert_eq!(maxpool(&x, 2, 2).data, maxpool_with(&mut ctx, &x, 2, 2).data);
+        assert_eq!(avgpool(&x, 3, 2).data, avgpool_with(&mut ctx, &x, 3, 2).data);
     }
 
     #[test]

@@ -1,10 +1,11 @@
-//! Hand-rolled substrates: JSON, CLI args, RNG, thread pool, timing.
-//! (serde/clap/rand/tokio/criterion are unavailable in the offline sandbox —
-//! DESIGN.md §2 documents each substitution.)
+//! Hand-rolled substrates: JSON, CLI args, RNG, thread pool, signals,
+//! timing. (serde/clap/rand/tokio/criterion are unavailable in the
+//! offline sandbox — DESIGN.md §2 documents each substitution.)
 
 pub mod args;
 pub mod json;
 pub mod rng;
+pub mod signal;
 pub mod threadpool;
 
 use std::time::Instant;

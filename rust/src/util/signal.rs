@@ -1,0 +1,66 @@
+//! Minimal SIGINT hook (signal-handling crates are unavailable offline).
+//!
+//! `serve` installs a handler that flips one process-global flag; the
+//! serve loop polls it and runs the graceful drain (stop the TCP server,
+//! drain the lane pool) instead of dying mid-batch. The handler body is a
+//! single atomic store — the only async-signal-safe thing worth doing.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SIGINT_FLAG: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod imp {
+    /// libc is always linked on unix targets; declare the one symbol we
+    /// need instead of pulling in the `libc` crate.
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    const SIGINT: i32 = 2;
+
+    extern "C" fn on_sigint(_signum: i32) {
+        super::SIGINT_FLAG.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_sigint);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    /// No-op off unix: serve runs until killed (documented fallback).
+    pub fn install() {}
+}
+
+/// Install the SIGINT handler (idempotent; safe to call repeatedly).
+pub fn install_sigint_handler() {
+    imp::install();
+}
+
+/// True once SIGINT has been received since the handler was installed.
+pub fn sigint_received() -> bool {
+    SIGINT_FLAG.load(Ordering::SeqCst)
+}
+
+/// Raise the flag programmatically (tests, or an in-process shutdown op).
+pub fn request_shutdown() {
+    SIGINT_FLAG.store(true, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_roundtrip() {
+        // can't safely raise a real SIGINT under the test harness; the
+        // programmatic path exercises the same flag the handler sets
+        install_sigint_handler();
+        request_shutdown();
+        assert!(sigint_received());
+    }
+}

@@ -1,12 +1,15 @@
-//! Coordinator integration: dynamic batcher + TCP server + scheduler over
-//! the real PJRT runtime and trained artifacts. Requires `make models
-//! artifacts`.
+//! Coordinator integration: lane-pool batcher + TCP server + scheduler
+//! over the real PJRT runtime and trained artifacts. Requires `make
+//! models artifacts`.
 
 use std::sync::Arc;
 
-use dfmpc::coordinator::{lambda_grid, run_sweep, Batcher, BatcherConfig, Client, QuantJob, Server};
+use dfmpc::coordinator::{
+    lambda_grid, run_sweep, Client, LanePool, LanePoolConfig, QuantJob, Server, ServerConfig,
+};
 use dfmpc::data::synth;
 use dfmpc::harness::Harness;
+use dfmpc::infer::InferBackend;
 use dfmpc::quant::Method;
 use dfmpc::util::json::Json;
 use dfmpc::util::threadpool::ThreadPool;
@@ -49,10 +52,14 @@ fn batcher_coalesces_concurrent_requests() {
     worker
         .load("b", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)
         .unwrap();
-    let batcher = Arc::new(Batcher::start(
-        worker,
+    let batcher = Arc::new(LanePool::start(
+        vec![worker as Arc<dyn InferBackend>],
         "b".into(),
-        BatcherConfig { max_batch: 8, max_wait: std::time::Duration::from_millis(20) },
+        LanePoolConfig {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(20),
+            ..LanePoolConfig::default()
+        },
     ));
     let spec = synth::dataset("cifar10-sim").unwrap();
     // fire 8 concurrent requests; with a 20ms window they should coalesce
@@ -93,8 +100,13 @@ fn server_roundtrip_and_errors() {
     worker
         .load("srv", hlo.to_path_buf(), &model.plan, &model.ckpt, abatch)
         .unwrap();
-    let batcher = Arc::new(Batcher::start(worker, "srv".into(), BatcherConfig::default()));
-    let mut server = Server::start("127.0.0.1:0", batcher, "test-model".into()).unwrap();
+    let pool = Arc::new(LanePool::start(
+        vec![worker as Arc<dyn InferBackend>],
+        "srv".into(),
+        LanePoolConfig::default(),
+    ));
+    let mut server =
+        Server::start("127.0.0.1:0", pool, "test-model".into(), ServerConfig::default()).unwrap();
 
     let mut client = Client::connect(&server.addr).unwrap();
     // status

@@ -8,14 +8,15 @@
 //! 1 vs N threads, plus a `forward_collect` stats-equality check.
 //!
 //! The second half drives the coordinator serving stack (RefLane ->
-//! Batcher -> TCP Server) entirely on the reference engine — no AOT
+//! LanePool -> TCP Server) entirely on the reference engine — no AOT
 //! artifacts, no `xla` feature — which is the request path exercised in
 //! offline builds.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Duration;
 
-use dfmpc::coordinator::{Batcher, BatcherConfig, Client, Server};
+use dfmpc::coordinator::{Client, LanePool, LanePoolConfig, Server, ServerConfig};
 use dfmpc::infer::engine::ActStats;
 use dfmpc::infer::{Engine, InferBackend, RefLane};
 use dfmpc::model::plan::{BnSpec, ConvSpec, DownSpec};
@@ -180,21 +181,26 @@ fn serve_fixture() -> (Arc<Plan>, Arc<Checkpoint>) {
 }
 
 #[test]
-fn batcher_on_reference_lane_is_deterministic() {
+fn lane_pool_on_reference_lane_is_deterministic() {
     let (plan, ckpt) = serve_fixture();
     let pool = Arc::new(ThreadPool::new(2));
     let lane = RefLane::new(Arc::clone(&plan), Arc::clone(&ckpt), Some(pool));
-    let batcher = Arc::new(Batcher::start(
-        Arc::new(lane),
+    let lanes: Vec<Arc<dyn InferBackend>> = vec![Arc::new(lane)];
+    let lp = Arc::new(LanePool::start(
+        lanes,
         "tiny32".into(),
-        BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(5) },
+        LanePoolConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            ..LanePoolConfig::default()
+        },
     ));
     let img = dfmpc::data::synth::render_image(9001, 0, 10).0;
     // the same image through different batch compositions must classify
     // identically (per-row kernels are batch-size independent)
     let handles: Vec<_> = (0..8)
         .map(|_| {
-            let b = Arc::clone(&batcher);
+            let b = Arc::clone(&lp);
             let img = img.clone();
             std::thread::spawn(move || b.classify(img).unwrap())
         })
@@ -205,7 +211,55 @@ fn batcher_on_reference_lane_is_deterministic() {
         assert_eq!(p.confidence, preds[0].confidence);
         assert!(p.batch_size >= 1 && p.batch_size <= 4);
         assert!(p.confidence > 0.0 && p.confidence <= 1.0);
+        assert_eq!(p.lane, 0);
     }
+    let snap = lp.snapshot();
+    assert_eq!(snap.completed, 8);
+    assert_eq!(snap.admitted, 8);
+    assert_eq!(snap.rejected_overload, 0);
+}
+
+#[test]
+fn multi_lane_pool_matches_single_lane_bitwise() {
+    // the same request must classify identically no matter which lane
+    // (serial or pooled) executes it — lanes are bit-identical replicas
+    let (plan, ckpt) = serve_fixture();
+    let lanes = RefLane::lanes(&plan, &ckpt, 3, Some(Arc::new(ThreadPool::new(3))));
+    assert_eq!(lanes.len(), 3);
+    let lp = Arc::new(LanePool::start(
+        lanes,
+        "tiny32".into(),
+        LanePoolConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            ..LanePoolConfig::default()
+        },
+    ));
+    let img = dfmpc::data::synth::render_image(9001, 3, 10).0;
+    let oracle = {
+        let engine = Engine::new(&plan, &ckpt);
+        let mut x = dfmpc::tensor::Tensor::zeros(vec![1, 3, 32, 32]);
+        x.data.copy_from_slice(&img.data);
+        let logits = engine.forward(&x).unwrap();
+        dfmpc::tensor::ops::argmax_rows(&logits)[0]
+    };
+    let handles: Vec<_> = (0..12)
+        .map(|_| {
+            let b = Arc::clone(&lp);
+            let img = img.clone();
+            std::thread::spawn(move || b.classify(img).unwrap())
+        })
+        .collect();
+    let preds: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for p in &preds {
+        assert_eq!(p.class, oracle);
+        assert_eq!(p.confidence, preds[0].confidence);
+        assert!(p.lane < 3);
+    }
+    lp.stop();
+    let snap = lp.snapshot();
+    assert_eq!(snap.completed, 12);
+    assert_eq!(snap.lanes.iter().map(|l| l.requests).sum::<u64>(), 12);
 }
 
 #[test]
@@ -213,21 +267,32 @@ fn server_roundtrip_on_reference_lane() {
     let (plan, ckpt) = serve_fixture();
     let pool = Arc::new(ThreadPool::new(2));
     let lane: Arc<dyn InferBackend> = Arc::new(RefLane::new(plan, ckpt, Some(pool)));
-    let batcher = Arc::new(Batcher::start(lane, "tiny32".into(), BatcherConfig::default()));
-    let mut server = Server::start("127.0.0.1:0", batcher, "tiny32+ref".into()).unwrap();
+    let lp = Arc::new(LanePool::start(
+        vec![lane],
+        "tiny32".into(),
+        LanePoolConfig { input_shape: Some(vec![3, 32, 32]), ..LanePoolConfig::default() },
+    ));
+    let mut server =
+        Server::start("127.0.0.1:0", lp, "tiny32+ref".into(), ServerConfig::default()).unwrap();
 
     let mut client = Client::connect(&server.addr).unwrap();
     let st = client
         .call(&Json::obj(vec![("op", Json::str("status"))]))
         .unwrap();
     assert_eq!(st.get("model").and_then(Json::as_str), Some("tiny32+ref"));
+    assert_eq!(st.get("lanes").and_then(Json::as_usize), Some(1));
+    assert!(st.get("queue_limit").and_then(Json::as_usize).unwrap_or(0) > 0);
     let (class, latency) = client.classify_index("cifar10-sim", 0).unwrap();
     assert!(class < 10);
     assert!(latency >= 0.0);
     // malformed op -> structured error, connection stays usable
     let err = client.call(&Json::obj(vec![("op", Json::str("nope"))])).unwrap();
     assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(err.get("error_kind").and_then(Json::as_str), Some("bad_request"));
     let (class2, _) = client.classify_index("cifar10-sim", 1).unwrap();
     assert!(class2 < 10);
+    // the status op reflects the served traffic
+    let st = client.call(&Json::obj(vec![("op", Json::str("status"))])).unwrap();
+    assert!(st.get("completed").and_then(Json::as_usize).unwrap_or(0) >= 2);
     server.stop();
 }

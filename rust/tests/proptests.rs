@@ -249,6 +249,63 @@ fn prop_parallel_kernels_bit_exact() {
 }
 
 #[test]
+fn prop_elementwise_parallel_bit_exact() {
+    // batchnorm / relu / relu6 / pools partitioned over disjoint planes
+    // must equal the serial oracle BITWISE for any shape/thread split —
+    // the same parity contract as the GEMM/conv kernels.
+    use std::sync::Arc;
+
+    use dfmpc::tensor::ops::{
+        avgpool, avgpool_with, batchnorm, batchnorm_with, maxpool, maxpool_with, relu, relu6,
+        relu6_with, relu_with, ExecCtx,
+    };
+    use dfmpc::util::threadpool::ThreadPool;
+
+    let pools = [Arc::new(ThreadPool::new(1)), Arc::new(ThreadPool::new(5))];
+    for seed in 0..CASES {
+        let mut r = Rng::new(1100 + seed);
+        let (n, c, h) = (
+            1 + r.below(3) as usize,
+            1 + r.below(7) as usize,
+            3 + r.below(10) as usize,
+        );
+        let x = rand_tensor(&mut r, vec![n, c, h, h], 1.0);
+        let gamma: Vec<f32> = (0..c).map(|_| 0.5 + r.f32()).collect();
+        let beta: Vec<f32> = (0..c).map(|_| 0.3 * r.normal()).collect();
+        let mu: Vec<f32> = (0..c).map(|_| 0.3 * r.normal()).collect();
+        let var: Vec<f32> = (0..c).map(|_| 0.5 + r.f32()).collect();
+        let k = 1 + (r.below(2) as usize).min(h - 1);
+        let stride = 1 + r.below(2) as usize;
+
+        let mut want_bn = x.clone();
+        batchnorm(&mut want_bn, &gamma, &beta, &mu, &var);
+        let mut want_relu = want_bn.clone();
+        relu(&mut want_relu);
+        let mut want_relu6 = want_bn.clone();
+        relu6(&mut want_relu6);
+        let want_max = maxpool(&x, k, stride);
+        let want_avg = avgpool(&x, k, stride);
+
+        for pool in &pools {
+            let mut ctx = ExecCtx::with_pool(Arc::clone(pool));
+            let mut got = x.clone();
+            batchnorm_with(&mut ctx, &mut got, &gamma, &beta, &mu, &var);
+            assert_eq!(want_bn.data, got.data, "seed {seed} batchnorm");
+            let mut got_r = got.clone();
+            relu_with(&mut ctx, &mut got_r);
+            assert_eq!(want_relu.data, got_r.data, "seed {seed} relu");
+            let mut got_r6 = got;
+            relu6_with(&mut ctx, &mut got_r6);
+            assert_eq!(want_relu6.data, got_r6.data, "seed {seed} relu6");
+            let got_max = maxpool_with(&mut ctx, &x, k, stride);
+            assert_eq!(want_max.data, got_max.data, "seed {seed} maxpool k={k} s={stride}");
+            let got_avg = avgpool_with(&mut ctx, &x, k, stride);
+            assert_eq!(want_avg.data, got_avg.data, "seed {seed} avgpool k={k} s={stride}");
+        }
+    }
+}
+
+#[test]
 fn prop_json_roundtrip_fuzz() {
     fn random_json(r: &mut Rng, depth: usize) -> Json {
         match if depth == 0 { r.below(4) } else { r.below(6) } {

@@ -1,0 +1,360 @@
+//! Overload behavior of the multi-lane serving stack, artifact-free and
+//! wall-clock-bounded (runs in tier-1 CI):
+//!
+//! - flooding past `queue_depth` returns structured `overloaded`
+//!   rejections *immediately* while every admitted request still gets a
+//!   correct reply;
+//! - connections past `max_conns` get a one-line `conn_limit` error;
+//! - bad input shapes fail only the offending request, and mixed-shape
+//!   traffic never corrupts a shared batch;
+//! - shutdown drains the queue without deadlocking.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use dfmpc::coordinator::{Client, LanePool, LanePoolConfig, ServeError, Server, ServerConfig};
+use dfmpc::infer::{Engine, InferBackend, RefLane};
+use dfmpc::model::{Checkpoint, Plan};
+use dfmpc::tensor::Tensor;
+use dfmpc::util::json::Json;
+use dfmpc::util::rng::Rng;
+
+/// Fixed 3x32x32 plan matching the SynthShapes renderer.
+const SERVE_PLAN: &str = r#"{
+  "name": "tiny32", "input": [3, 32, 32], "num_classes": 10,
+  "ops": [
+    {"op": "conv", "name": "c1", "cin": 3, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c1_bn", "ch": 8},
+    {"op": "relu"},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc", "cin": 8, "cout": 10}
+  ],
+  "pairs": [],
+  "bn_of": {}
+}"#;
+
+fn fixture() -> (Arc<Plan>, Arc<Checkpoint>) {
+    let plan = Plan::parse(SERVE_PLAN).unwrap();
+    plan.validate().unwrap();
+    let mut r = Rng::new(123);
+    let ckpt = Checkpoint::random_init(&plan, &mut r);
+    (Arc::new(plan), Arc::new(ckpt))
+}
+
+/// Backend wrapper that sleeps before delegating — makes the admission
+/// queue fill deterministically without large models.
+struct SlowLane {
+    inner: RefLane,
+    delay: Duration,
+}
+
+impl InferBackend for SlowLane {
+    fn infer_batch(&self, id: &str, x: Tensor) -> Result<Tensor> {
+        std::thread::sleep(self.delay);
+        self.inner.infer_batch(id, x)
+    }
+}
+
+fn slow_lane(plan: &Arc<Plan>, ckpt: &Arc<Checkpoint>, delay_ms: u64) -> Arc<dyn InferBackend> {
+    Arc::new(SlowLane {
+        inner: RefLane::new(Arc::clone(plan), Arc::clone(ckpt), None),
+        delay: Duration::from_millis(delay_ms),
+    })
+}
+
+#[test]
+fn overload_rejects_structured_and_serves_admitted() {
+    let (plan, ckpt) = fixture();
+    let pool = LanePool::start(
+        vec![slow_lane(&plan, &ckpt, 30)],
+        "tiny32".into(),
+        LanePoolConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(0),
+            queue_depth: 4,
+            input_shape: Some(vec![3, 32, 32]),
+        },
+    );
+    let img = dfmpc::data::synth::render_image(9001, 0, 10).0;
+    let oracle = {
+        let engine = Engine::new(&plan, &ckpt);
+        let mut x = Tensor::zeros(vec![1, 3, 32, 32]);
+        x.data.copy_from_slice(&img.data);
+        dfmpc::tensor::ops::argmax_rows(&engine.forward(&x).unwrap())[0]
+    };
+
+    // flood far past the queue bound from one thread: rejections must be
+    // immediate (no blocking on the 30ms-per-batch lane)
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..32 {
+        match pool.classify_async(img.clone()) {
+            Ok(rx) => accepted.push(rx),
+            Err(ServeError::Overloaded { limit, .. }) => {
+                assert_eq!(limit, 4);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected rejection: {e}"),
+        }
+    }
+    let flood_elapsed = t0.elapsed();
+    assert!(
+        flood_elapsed < Duration::from_secs(1),
+        "admission must not block on the slow lane: {flood_elapsed:?}"
+    );
+    assert!(rejected > 0, "expected overload rejections past queue depth 4");
+    assert!(!accepted.is_empty(), "some requests must be admitted");
+
+    // every admitted request gets a correct reply
+    for rx in accepted {
+        let pred = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("admitted request must be answered")
+            .expect("admitted request must succeed");
+        assert_eq!(pred.class, oracle);
+    }
+    let snap = pool.snapshot();
+    assert_eq!(snap.rejected_overload as usize, rejected);
+    assert_eq!(snap.admitted, snap.completed);
+    pool.stop(); // must not deadlock
+}
+
+#[test]
+fn shape_mismatch_fails_only_the_offending_request() {
+    let (plan, ckpt) = fixture();
+    let pool = LanePool::start(
+        vec![slow_lane(&plan, &ckpt, 5)],
+        "tiny32".into(),
+        LanePoolConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+            queue_depth: 64,
+            input_shape: Some(vec![3, 32, 32]),
+        },
+    );
+    let good = dfmpc::data::synth::render_image(9001, 1, 10).0;
+    let bad = Tensor::zeros(vec![3, 16, 16]);
+
+    let ok_rx = pool.classify_async(good.clone()).expect("good shape admitted");
+    match pool.classify_async(bad) {
+        Err(ServeError::ShapeMismatch { expected, got }) => {
+            assert_eq!(expected, vec![3, 32, 32]);
+            assert_eq!(got, vec![3, 16, 16]);
+        }
+        other => panic!("expected shape rejection, got {other:?}"),
+    }
+    // the good request is unaffected by its bad neighbour
+    let pred = ok_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("reply")
+        .expect("good request succeeds");
+    assert!(pred.class < 10);
+    assert_eq!(pool.snapshot().rejected_shape, 1);
+}
+
+/// Shape-agnostic backend: logits = [row_sum, -row_sum]. Lets one pool
+/// carry images of different (all valid) shapes, exercising the
+/// homogeneous-batch grouping that protects the concat in `execute`.
+struct EchoLane;
+
+impl InferBackend for EchoLane {
+    fn infer_batch(&self, _id: &str, x: Tensor) -> Result<Tensor> {
+        let n = x.shape[0];
+        let per: usize = x.shape[1..].iter().product();
+        let mut out = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            let s: f32 = x.data[i * per..(i + 1) * per].iter().sum();
+            out.push(s);
+            out.push(-s);
+        }
+        Ok(Tensor::new(vec![n, 2], out))
+    }
+}
+
+#[test]
+fn mixed_shape_traffic_batches_homogeneously() {
+    // no configured input_shape: both shapes are admissible, but the
+    // batch builder must never concatenate them into one batch (the old
+    // single-batcher corrupted or panicked here)
+    let pool = Arc::new(LanePool::start(
+        vec![Arc::new(EchoLane) as Arc<dyn InferBackend>],
+        "echo".into(),
+        LanePoolConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+            queue_depth: 128,
+            input_shape: None,
+        },
+    ));
+    let handles: Vec<_> = (0..24)
+        .map(|i| {
+            let p = Arc::clone(&pool);
+            std::thread::spawn(move || {
+                // alternate shapes; positive fill -> class 0, negative -> 1
+                let (shape, fill) = if i % 2 == 0 {
+                    (vec![1usize, 4, 4], 1.0f32)
+                } else {
+                    (vec![2usize, 3, 3], -1.0f32)
+                };
+                let n: usize = shape.iter().product();
+                let img = Tensor::new(shape, vec![fill; n]);
+                let want = if fill > 0.0 { 0 } else { 1 };
+                let pred = p.classify(img).unwrap();
+                assert_eq!(pred.class, want, "request {i} misclassified: batch corrupted");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = pool.snapshot();
+    assert_eq!(snap.completed, 24);
+    assert_eq!(snap.failed, 0);
+}
+
+#[test]
+fn server_enforces_conn_limit_with_structured_error() {
+    let (plan, ckpt) = fixture();
+    let pool = Arc::new(LanePool::start(
+        vec![slow_lane(&plan, &ckpt, 0)],
+        "tiny32".into(),
+        LanePoolConfig { input_shape: Some(vec![3, 32, 32]), ..LanePoolConfig::default() },
+    ));
+    let mut server = Server::start(
+        "127.0.0.1:0",
+        Arc::clone(&pool),
+        "tiny32".into(),
+        ServerConfig { max_conns: 2 },
+    )
+    .unwrap();
+
+    let mut c1 = Client::connect(&server.addr).unwrap();
+    let mut c2 = Client::connect(&server.addr).unwrap();
+    // make sure both connections are registered before over-connecting
+    c1.call(&Json::obj(vec![("op", Json::str("status"))])).unwrap();
+    c2.call(&Json::obj(vec![("op", Json::str("status"))])).unwrap();
+
+    // third connection: rejected with a one-line structured error
+    let mut c3 = Client::connect(&server.addr).unwrap();
+    let rej = c3.read_response().unwrap();
+    assert_eq!(rej.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(rej.get("error_kind").and_then(Json::as_str), Some("conn_limit"));
+
+    // the first two connections still serve
+    let (class, _) = c1.classify_index("cifar10-sim", 0).unwrap();
+    assert!(class < 10);
+
+    // freeing a slot re-admits new connections (bounded retry: the
+    // handler notices the close within its poll interval)
+    drop(c2);
+    let mut readmitted = false;
+    for _ in 0..50 {
+        std::thread::sleep(Duration::from_millis(50));
+        let mut c4 = match Client::connect(&server.addr) {
+            Ok(c) => c,
+            Err(_) => continue,
+        };
+        if probe_status(&mut c4) == Some(true) {
+            readmitted = true;
+            break;
+        }
+    }
+    assert!(readmitted, "closing a connection must free a slot");
+    server.stop(); // joins tracked handlers; must not deadlock
+}
+
+/// Send `status` on a fresh connection; `Some(ok)` on a real response,
+/// `None` when the server rejected the connection (`conn_limit`) or the
+/// socket broke mid-probe.
+fn probe_status(client: &mut Client) -> Option<bool> {
+    let resp = client.call(&Json::obj(vec![("op", Json::str("status"))])).ok()?;
+    match resp.get("error_kind").and_then(Json::as_str) {
+        Some("conn_limit") => None,
+        _ => resp.get("ok").and_then(Json::as_bool),
+    }
+}
+
+#[test]
+fn flooded_server_stays_correct_and_shuts_down() {
+    let (plan, ckpt) = fixture();
+    let pool = Arc::new(LanePool::start(
+        vec![slow_lane(&plan, &ckpt, 10), slow_lane(&plan, &ckpt, 10)],
+        "tiny32".into(),
+        LanePoolConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            // total in-flight capacity (2 lanes x 2 + queue 4 = 8) is far
+            // below the 24 concurrent clients, so backpressure must fire
+            queue_depth: 4,
+            input_shape: Some(vec![3, 32, 32]),
+        },
+    ));
+    let mut server = Server::start(
+        "127.0.0.1:0",
+        Arc::clone(&pool),
+        "tiny32".into(),
+        ServerConfig { max_conns: 64 },
+    )
+    .unwrap();
+    let oracle = {
+        let engine = Engine::new(&plan, &ckpt);
+        let img = dfmpc::data::synth::render_image(9001, 0, 10).0;
+        let mut x = Tensor::zeros(vec![1, 3, 32, 32]);
+        x.data.copy_from_slice(&img.data);
+        dfmpc::tensor::ops::argmax_rows(&engine.forward(&x).unwrap())[0]
+    };
+
+    let addr = server.addr;
+    let handles: Vec<_> = (0..24)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let mut served = 0usize;
+                let mut overloaded = 0usize;
+                for _ in 0..4 {
+                    let resp = client
+                        .call(&Json::obj(vec![
+                            ("op", Json::str("classify")),
+                            ("dataset", Json::str("cifar10-sim")),
+                            ("index", Json::num(0.0)),
+                        ]))
+                        .unwrap();
+                    if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                        assert_eq!(resp.get("class").and_then(Json::as_usize), Some(oracle));
+                        served += 1;
+                    } else {
+                        // every rejection must be the structured overload
+                        assert_eq!(
+                            resp.get("error_kind").and_then(Json::as_str),
+                            Some("overloaded"),
+                            "unexpected error: {resp:?}"
+                        );
+                        overloaded += 1;
+                    }
+                }
+                (served, overloaded)
+            })
+        })
+        .collect();
+    let mut served = 0;
+    let mut overloaded = 0;
+    for h in handles {
+        let (s, o) = h.join().unwrap();
+        served += s;
+        overloaded += o;
+    }
+    assert!(served > 0, "some requests must be served under flood");
+    // 24 concurrent closed-loop clients against 8 total in-flight slots
+    // over slow lanes: backpressure must have kicked in
+    assert!(overloaded > 0, "expected overload rejections under flood");
+
+    let t0 = Instant::now();
+    server.stop();
+    pool.stop();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "shutdown must drain in bounded time"
+    );
+}
