@@ -8,7 +8,11 @@
 //! Part 2 (always runs): closed-loop many-client serving over the
 //! coordinator's [`LanePool`] with 1 vs N serial reference lanes — the
 //! §Perf evidence that the multi-lane dispatcher scales batch throughput
-//! across cores (asserted on hosts with ≥4 cores).
+//! across cores (asserted on hosts with ≥4 cores) — then the same N-lane
+//! load against a registry-served variant ([`RegistryLane`] +
+//! [`ModelRegistry`]), asserting the registry path (shared packed panels,
+//! per-batch variant dispatch) costs nothing vs the fixed single-model
+//! path.
 //!
 //! Part 3 (requires `make models artifacts` + the `xla` feature): PJRT
 //! buffer path (production, cached device buffers) vs PJRT literal path
@@ -25,8 +29,8 @@ use std::time::{Duration, Instant};
 use common::{bench, throughput};
 use dfmpc::coordinator::{LanePool, LanePoolConfig};
 use dfmpc::harness::Harness;
-use dfmpc::infer::{Engine, InferBackend, RefLane};
-use dfmpc::model::{Checkpoint, Plan};
+use dfmpc::infer::{Engine, InferBackend, RefLane, RegistryLane};
+use dfmpc::model::{Checkpoint, ModelRegistry, Plan};
 use dfmpc::runtime::pjrt::{flat_params, PjrtRuntime};
 use dfmpc::runtime::PJRT_AVAILABLE;
 use dfmpc::tensor::Tensor;
@@ -115,32 +119,23 @@ fn lane_pool_scaling() {
     let img = dfmpc::data::synth::render_image(9001, 0, 10).0;
 
     println!("== lane pool: closed-loop serving, {clients} clients x {reqs} reqs ==");
-    let mut one_lane_rps = 0.0f64;
-    for lanes_n in [1usize, n_lanes] {
-        let lanes: Vec<Arc<dyn InferBackend>> = (0..lanes_n)
-            .map(|_| {
-                Arc::new(RefLane::new(Arc::clone(&plan), Arc::clone(&ckpt), None))
-                    as Arc<dyn InferBackend>
-            })
-            .collect();
-        let pool = Arc::new(LanePool::start(
-            lanes,
-            "bench".into(),
-            LanePoolConfig {
-                max_batch: 8,
-                max_wait: Duration::from_millis(1),
-                queue_depth: 256,
-                input_shape: Some(vec![3, 32, 32]),
-            },
-        ));
-        // warm the packed-filter caches so lane count is the only variable
+
+    let cfg = LanePoolConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 256,
+        input_shape: Some(vec![3, 32, 32]),
+    };
+    // closed-loop load against one pool; returns req/s
+    let drive = |pool: &Arc<LanePool>, lanes_n: usize| -> f64 {
+        // warm every lane (packs/prepares outside the timed window)
         for _ in 0..lanes_n {
             let _ = pool.classify(img.clone()).unwrap();
         }
         let t0 = Instant::now();
         let handles: Vec<_> = (0..clients)
             .map(|_| {
-                let p = Arc::clone(&pool);
+                let p = Arc::clone(pool);
                 let img = img.clone();
                 std::thread::spawn(move || {
                     for _ in 0..reqs {
@@ -152,8 +147,20 @@ fn lane_pool_scaling() {
         for h in handles {
             h.join().unwrap();
         }
-        let wall = t0.elapsed().as_secs_f64();
-        let rps = (clients * reqs) as f64 / wall;
+        (clients * reqs) as f64 / t0.elapsed().as_secs_f64()
+    };
+
+    let mut one_lane_rps = 0.0f64;
+    let mut direct_rps = 0.0f64;
+    for lanes_n in [1usize, n_lanes] {
+        let lanes: Vec<Arc<dyn InferBackend>> = (0..lanes_n)
+            .map(|_| {
+                Arc::new(RefLane::new(Arc::clone(&plan), Arc::clone(&ckpt), None))
+                    as Arc<dyn InferBackend>
+            })
+            .collect();
+        let pool = Arc::new(LanePool::start(lanes, "bench".into(), cfg.clone()));
+        let rps = drive(&pool, lanes_n);
         let snap = pool.snapshot();
         let busiest = snap.lanes.iter().map(|l| l.requests).max().unwrap_or(0);
         println!(
@@ -164,6 +171,7 @@ fn lane_pool_scaling() {
         if lanes_n == 1 {
             one_lane_rps = rps;
         } else {
+            direct_rps = rps;
             println!("    -> {:.2}x over 1 lane on {cores} cores", rps / one_lane_rps);
             // §Perf acceptance: multi-lane must beat one lane on a
             // multi-core host (skip the assert on tiny CI boxes)
@@ -174,6 +182,36 @@ fn lane_pool_scaling() {
                 );
             }
         }
+    }
+
+    // same N-lane load, but served through the model registry: per-batch
+    // variant dispatch + panels packed once and shared across lanes. The
+    // serving math is identical, so throughput must be no worse than the
+    // fixed single-model path (tolerance absorbs bench noise).
+    let registry = Arc::new(ModelRegistry::new(usize::MAX, None));
+    registry.register_base("bench", Arc::clone(&plan), Arc::clone(&ckpt));
+    // serial registry lanes, mirroring the direct RefLane::new lanes above
+    // (lane count stays the only variable)
+    let lanes: Vec<Arc<dyn InferBackend>> = (0..n_lanes)
+        .map(|_| Arc::new(RegistryLane::new(Arc::clone(&registry), None)) as Arc<dyn InferBackend>)
+        .collect();
+    let pool = Arc::new(LanePool::start_with_registry(
+        lanes,
+        Arc::clone(&registry),
+        "bench@fp32".into(),
+        cfg,
+    ));
+    let reg_rps = drive(&pool, n_lanes);
+    println!(
+        "    lanes={n_lanes} (registry-served fp32): {reg_rps:>7.1} req/s ({:.2}x of direct)",
+        reg_rps / direct_rps
+    );
+    pool.stop();
+    if cores >= 4 {
+        assert!(
+            reg_rps > direct_rps * 0.85,
+            "registry-served throughput regressed: {reg_rps:.1} vs direct {direct_rps:.1} req/s"
+        );
     }
 }
 

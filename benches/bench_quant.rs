@@ -42,7 +42,7 @@ fn main() {
     for (spec, warm, iters) in specs {
         let m = Method::parse(spec).unwrap();
         let r = bench(spec, warm, iters, || {
-            let _ = m.apply(&model.plan, &model.ckpt).unwrap();
+            let _ = m.apply(&model.plan, &model.ckpt, None).unwrap();
         });
         if spec == "dfmpc:2/6" {
             dfmpc_ms = r.mean_ms;
@@ -51,6 +51,17 @@ fn main() {
             zeroq_ms = r.mean_ms;
         }
     }
+    // pool-parallel quantization (the registry's lazy-prepare path)
+    let pool = h.pool();
+    let m = Method::parse("dfmpc:2/6").unwrap();
+    let rp = bench("dfmpc:2/6 (pooled)", 5, 20, || {
+        let _ = m.apply(&model.plan, &model.ckpt, Some(&pool)).unwrap();
+    });
+    println!(
+        "    -> pooled prepare {:.1} ms ({:.2}x over serial)",
+        rp.mean_ms,
+        dfmpc_ms / rp.mean_ms
+    );
     println!(
         "\npaper §5.2 shape: generative/closed-form cost ratio = {:.1}x (paper: 12s/2s = 6x on much bigger hardware)",
         zeroq_ms / dfmpc_ms
@@ -61,7 +72,7 @@ fn main() {
         if let Ok(m) = h.load_model(&id) {
             let method = Method::parse("dfmpc:2/6").unwrap();
             bench(&format!("dfmpc:2/6 {id}"), 2, 8, || {
-                let _ = method.apply(&m.plan, &m.ckpt).unwrap();
+                let _ = method.apply(&m.plan, &m.ckpt, None).unwrap();
             });
         }
     }

@@ -25,7 +25,7 @@ fn main() -> Result<()> {
 
     let mut h = Harness::open()?;
     let model = h.load_model(&id)?;
-    let qckpt = method.apply(&model.plan, &model.ckpt)?;
+    let qckpt = method.apply(&model.plan, &model.ckpt, Some(&h.pool()))?;
     let worker = h.worker()?;
     let (abatch, hlo) = h.zoo.hlo_for_batch(&model.entry, max_batch).context("artifact")?;
     worker.load(&id, hlo.to_path_buf(), &model.plan, &qckpt, abatch)?;

@@ -10,8 +10,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::data::EvalShard;
+use crate::infer::engine::EngineState;
 use crate::infer::Engine;
-use crate::model::{Checkpoint, Plan};
+use crate::model::{Checkpoint, Plan, PreparedModel};
 use crate::runtime::PjrtWorker;
 use crate::tensor::ops::argmax_rows;
 use crate::util::threadpool::ThreadPool;
@@ -71,6 +72,33 @@ pub fn eval_reference(
     pool: Option<Arc<ThreadPool>>,
 ) -> Result<EvalResult> {
     let engine = Engine::with_exec(plan, ckpt, pool);
+    eval_engine(&engine, shard, batch, limit)
+}
+
+/// Evaluate a registry-prepared variant with the reference engine,
+/// reusing its shared packed filter panels (no re-pack).
+pub fn eval_prepared(
+    prepared: &PreparedModel,
+    shard: &EvalShard,
+    batch: usize,
+    limit: Option<usize>,
+    pool: Option<Arc<ThreadPool>>,
+) -> Result<EvalResult> {
+    let engine = Engine::from_shared(
+        &prepared.plan,
+        &prepared.ckpt,
+        Arc::clone(&prepared.panels),
+        EngineState::new(pool),
+    );
+    eval_engine(&engine, shard, batch, limit)
+}
+
+fn eval_engine(
+    engine: &Engine<'_>,
+    shard: &EvalShard,
+    batch: usize,
+    limit: Option<usize>,
+) -> Result<EvalResult> {
     let n = limit.unwrap_or(shard.n()).min(shard.n());
     let mut acc = AccuracyCounter::default();
     let mut lat = LatencyRecorder::new();

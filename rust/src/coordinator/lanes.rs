@@ -20,6 +20,16 @@
 //!   the configured input shape (3-D CHW always), and batch building only
 //!   groups identically-shaped requests — a mismatched request can fail
 //!   only itself, never corrupt a batch it shares a queue with.
+//! - **Multi-variant dispatch.** Every request carries a model-variant key
+//!   (`"<model>@<method-id>"`, defaulting to the pool's configured
+//!   variant). Batches group by (variant, shape), and the key is handed to
+//!   the backend as the batch's model id — registry lanes
+//!   ([`crate::infer::RegistryLane`]) resolve it through the
+//!   [`ModelRegistry`] (preparing quantized variants lazily on first
+//!   request), PJRT workers use it to pick a loaded executable.
+//!   When the pool is started with a registry
+//!   ([`LanePool::start_with_registry`]), bogus keys are rejected at
+//!   admission with a structured [`ServeError::BadVariant`].
 //! - **Graceful drain.** [`LanePool::stop`] stops admission, lets every
 //!   lane drain the remaining queue, and joins the workers — no request
 //!   that was admitted is dropped.
@@ -36,6 +46,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::infer::InferBackend;
+use crate::model::ModelRegistry;
 use crate::tensor::ops::{argmax_rows, softmax_rows};
 use crate::tensor::Tensor;
 
@@ -75,6 +86,8 @@ pub enum ServeError {
     Overloaded { depth: usize, limit: usize },
     /// the request image does not match the pool's expected input shape
     ShapeMismatch { expected: Vec<usize>, got: Vec<usize> },
+    /// the requested model-variant key is unknown or malformed
+    BadVariant { key: String, reason: String },
     /// the pool has been stopped (or the batch worker died)
     Stopped,
     /// the inference backend failed the request's batch
@@ -87,6 +100,7 @@ impl ServeError {
         match self {
             ServeError::Overloaded { .. } => "overloaded",
             ServeError::ShapeMismatch { .. } => "shape_mismatch",
+            ServeError::BadVariant { .. } => "bad_variant",
             ServeError::Stopped => "stopped",
             ServeError::Backend(_) => "backend",
         }
@@ -104,6 +118,9 @@ impl fmt::Display for ServeError {
             }
             ServeError::ShapeMismatch { expected, got } => {
                 write!(f, "expected input shape {expected:?}, got {got:?}")
+            }
+            ServeError::BadVariant { key, reason } => {
+                write!(f, "bad model variant '{key}': {reason}")
             }
             ServeError::Stopped => write!(f, "serving pool stopped"),
             ServeError::Backend(msg) => write!(f, "inference backend error: {msg}"),
@@ -124,10 +141,14 @@ pub struct Prediction {
     pub batch_size: usize,
     /// which lane executed the batch
     pub lane: usize,
+    /// the model-variant key that served this request
+    pub variant: String,
 }
 
 struct Request {
     image: Tensor, // CHW
+    /// model-variant key; batches group by (variant, shape)
+    variant: String,
     enqueued: Instant,
     reply: mpsc::Sender<Result<Prediction, ServeError>>,
 }
@@ -149,17 +170,53 @@ pub struct LanePool {
     shared: Arc<Shared>,
     cfg: LanePoolConfig,
     lane_count: usize,
+    /// variant key used when a request does not name one
+    default_variant: String,
+    /// present when the lanes serve through a model registry; used for
+    /// admission-time variant validation and the `status` op
+    registry: Option<Arc<ModelRegistry>>,
     workers: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
 impl LanePool {
-    /// Start one batcher worker per lane. `model_id` names the loaded
-    /// model on multiplexing lanes (PJRT); single-model lanes ignore it.
+    /// Start one batcher worker per lane. `default_variant` is the model
+    /// id handed to the backend for requests that don't name one
+    /// (multiplexing lanes — PJRT workers, registry lanes — dispatch on
+    /// it; fixed single-model lanes ignore it).
     pub fn start(
         lanes: Vec<Arc<dyn InferBackend>>,
-        model_id: String,
+        default_variant: String,
         cfg: LanePoolConfig,
     ) -> LanePool {
+        Self::start_inner(lanes, default_variant, cfg, None)
+    }
+
+    /// Start a pool whose lanes resolve variant keys through `registry`
+    /// (see [`crate::infer::RegistryLane`]). Unknown/malformed keys are
+    /// rejected at admission with [`ServeError::BadVariant`], and the
+    /// registry's residency/prepare counters ride along for `status`.
+    pub fn start_with_registry(
+        lanes: Vec<Arc<dyn InferBackend>>,
+        registry: Arc<ModelRegistry>,
+        default_variant: String,
+        cfg: LanePoolConfig,
+    ) -> LanePool {
+        Self::start_inner(lanes, default_variant, cfg, Some(registry))
+    }
+
+    fn start_inner(
+        lanes: Vec<Arc<dyn InferBackend>>,
+        default_variant: String,
+        cfg: LanePoolConfig,
+        registry: Option<Arc<ModelRegistry>>,
+    ) -> LanePool {
+        // canonicalize the default once so the admission hot path can
+        // skip per-request canonicalization for default-variant traffic
+        // (a bad default is left as-is and surfaces per request)
+        let default_variant = match &registry {
+            Some(r) => r.canonical_key(&default_variant).unwrap_or(default_variant),
+            None => default_variant,
+        };
         assert!(!lanes.is_empty(), "lane pool needs at least one lane");
         if let Some(shape) = &cfg.input_shape {
             assert_eq!(shape.len(), 3, "input_shape must be CHW");
@@ -176,31 +233,78 @@ impl LanePool {
             .enumerate()
             .map(|(li, lane)| {
                 let shared = Arc::clone(&shared);
-                let model_id = model_id.clone();
                 let cfg = cfg.clone();
                 thread::Builder::new()
                     .name(format!("dfmpc-lane-{li}"))
-                    .spawn(move || lane_worker(li, lane, model_id, cfg, shared))
+                    .spawn(move || lane_worker(li, lane, cfg, shared))
                     .expect("spawn lane worker")
             })
             .collect();
-        LanePool { shared, cfg, lane_count, workers: Mutex::new(workers) }
+        LanePool {
+            shared,
+            cfg,
+            lane_count,
+            default_variant,
+            registry,
+            workers: Mutex::new(workers),
+        }
     }
 
-    /// Enqueue one CHW image; blocks until its batch completes (or the
-    /// request is rejected at admission).
+    /// Enqueue one CHW image for the default variant; blocks until its
+    /// batch completes (or the request is rejected at admission).
     pub fn classify(&self, image: Tensor) -> Result<Prediction, ServeError> {
-        let rx = self.classify_async(image)?;
+        self.classify_variant(None, image)
+    }
+
+    /// Enqueue one CHW image for `variant` (`None` = the pool default);
+    /// blocks until its batch completes.
+    pub fn classify_variant(
+        &self,
+        variant: Option<&str>,
+        image: Tensor,
+    ) -> Result<Prediction, ServeError> {
+        let rx = self.classify_async_variant(variant, image)?;
         rx.recv().map_err(|_| ServeError::Stopped)?
     }
 
-    /// Async enqueue returning the reply channel. Admission (queue bound
-    /// + shape validation) happens here, synchronously, so rejections are
-    /// immediate regardless of queue length.
+    /// Async enqueue for the default variant.
     pub fn classify_async(
         &self,
         image: Tensor,
     ) -> Result<mpsc::Receiver<Result<Prediction, ServeError>>, ServeError> {
+        self.classify_async_variant(None, image)
+    }
+
+    /// Async enqueue returning the reply channel. Admission (queue bound,
+    /// shape validation, variant-key validation when a registry is
+    /// attached) happens here, synchronously, so rejections are immediate
+    /// regardless of queue length.
+    pub fn classify_async_variant(
+        &self,
+        variant: Option<&str>,
+        image: Tensor,
+    ) -> Result<mpsc::Receiver<Result<Prediction, ServeError>>, ServeError> {
+        let variant = variant.unwrap_or(&self.default_variant).to_string();
+        // canonicalize through the registry so alias spellings of one
+        // method ("dfmpc:2/6" vs "dfmpc:2/6:0.5:0") share a batch, a
+        // prepared variant, and one residency entry. The default variant
+        // was canonicalized at pool start, so the common no-"model"-field
+        // request skips the parse + registry lock entirely.
+        let variant = match &self.registry {
+            Some(registry) if variant != self.default_variant => {
+                match registry.canonical_key(&variant) {
+                    Ok(canonical) => canonical,
+                    Err(e) => {
+                        self.shared.counters.rejected_variant.fetch_add(1, Ordering::Relaxed);
+                        return Err(ServeError::BadVariant {
+                            key: variant,
+                            reason: format!("{e:#}"),
+                        });
+                    }
+                }
+            }
+            _ => variant,
+        };
         match &self.cfg.input_shape {
             Some(expected) if image.shape != *expected => {
                 self.shared.counters.rejected_shape.fetch_add(1, Ordering::Relaxed);
@@ -231,7 +335,7 @@ impl LanePool {
                     limit: self.cfg.queue_depth,
                 });
             }
-            st.q.push_back(Request { image, enqueued: Instant::now(), reply: rtx });
+            st.q.push_back(Request { image, variant, enqueued: Instant::now(), reply: rtx });
             self.shared.counters.note_depth(st.q.len());
             // inside the critical section: a lane must never complete a
             // request before it counts as admitted, or snapshots would
@@ -245,6 +349,16 @@ impl LanePool {
     /// Number of inference lanes.
     pub fn lane_count(&self) -> usize {
         self.lane_count
+    }
+
+    /// The variant key used for requests that don't name one.
+    pub fn default_variant(&self) -> &str {
+        &self.default_variant
+    }
+
+    /// The model registry behind the lanes, when one is attached.
+    pub fn registry(&self) -> Option<&Arc<ModelRegistry>> {
+        self.registry.as_ref()
     }
 
     /// Requests currently waiting in the admission queue.
@@ -289,14 +403,9 @@ impl Drop for LanePool {
 }
 
 /// One lane's batcher loop: block for a first request, widen the batch
-/// over `max_wait` with identically-shaped requests, execute, scatter.
-fn lane_worker(
-    li: usize,
-    lane: Arc<dyn InferBackend>,
-    model_id: String,
-    cfg: LanePoolConfig,
-    shared: Arc<Shared>,
-) {
+/// over `max_wait` with requests for the same (variant, shape), execute,
+/// scatter.
+fn lane_worker(li: usize, lane: Arc<dyn InferBackend>, cfg: LanePoolConfig, shared: Arc<Shared>) {
     loop {
         // block for the first request of a batch; on stop, keep draining
         // until the queue is empty, then exit
@@ -313,17 +422,18 @@ fn lane_worker(
             }
         };
         let shape = first.image.shape.clone();
+        let variant = first.variant.clone();
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.max_wait;
         while batch.len() < cfg.max_batch {
             let now = Instant::now();
             let mut st = shared.queue.lock().unwrap();
-            // take queued requests with the batch's exact shape; leave the
-            // rest for another pull (their own homogeneous batch)
+            // take queued requests with the batch's exact (variant, shape);
+            // leave the rest for another pull (their own homogeneous batch)
             let mut i = 0;
             let mut took = false;
             while batch.len() < cfg.max_batch && i < st.q.len() {
-                if st.q[i].image.shape == shape {
+                if st.q[i].image.shape == shape && st.q[i].variant == variant {
                     batch.push(st.q.remove(i).expect("index in bounds"));
                     took = true;
                 } else {
@@ -340,26 +450,22 @@ fn lane_worker(
         }
         shared.counters.lane(li).batches.fetch_add(1, Ordering::Relaxed);
         shared.counters.lane(li).requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        execute(lane.as_ref(), &model_id, li, batch, &shared.counters);
+        execute(lane.as_ref(), li, batch, &shared.counters);
     }
 }
 
 /// Execute one homogeneous batch and scatter per-image results. All
-/// images share `batch[0]`'s shape by construction (batch building groups
-/// by exact shape), so the concat below cannot mix strides. A panicking
-/// backend is contained: its requests get a structured
-/// [`ServeError::Backend`] reply, count as `failed`, and the lane keeps
-/// serving — so `admitted == completed + failed` stays auditable.
-fn execute(
-    backend: &dyn InferBackend,
-    model_id: &str,
-    li: usize,
-    batch: Vec<Request>,
-    counters: &PoolCounters,
-) {
+/// images share `batch[0]`'s (variant, shape) by construction (batch
+/// building groups by both), so the concat below cannot mix strides and
+/// the whole batch targets one model variant. A panicking backend is
+/// contained: its requests get a structured [`ServeError::Backend`]
+/// reply, count as `failed`, and the lane keeps serving — so
+/// `admitted == completed + failed` stays auditable.
+fn execute(backend: &dyn InferBackend, li: usize, batch: Vec<Request>, counters: &PoolCounters) {
     let n = batch.len();
     let chw: Vec<usize> = batch[0].image.shape.clone();
-    debug_assert!(batch.iter().all(|r| r.image.shape == chw));
+    let variant = batch[0].variant.clone();
+    debug_assert!(batch.iter().all(|r| r.image.shape == chw && r.variant == variant));
     let per: usize = chw.iter().product();
     let mut data = Vec::with_capacity(n * per);
     for r in &batch {
@@ -371,7 +477,7 @@ fn execute(
     // catch, so nothing a backend returns can kill the lane. The scatter
     // below only does guaranteed-in-bounds indexing and channel sends.
     let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        let logits = backend.infer_batch(model_id, x).map_err(|e| format!("{e:#}"))?;
+        let logits = backend.infer_batch(&variant, x).map_err(|e| format!("{e:#}"))?;
         if logits.shape.len() != 2 || logits.shape[0] != n || logits.shape[1] == 0 {
             return Err(format!("backend returned bad logits shape {:?}", logits.shape));
         }
@@ -389,6 +495,7 @@ fn execute(
                     latency_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
                     batch_size: n,
                     lane: li,
+                    variant: variant.clone(),
                 };
                 let _ = req.reply.send(Ok(p));
             }

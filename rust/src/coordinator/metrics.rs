@@ -1,5 +1,6 @@
-//! Serving/eval metrics: latency percentiles, throughput, accuracy, and
-//! the lane-pool admission/queue counters surfaced by the `status` op.
+//! Serving/eval metrics: latency percentiles, throughput, accuracy, the
+//! lane-pool admission/queue counters, and the model-registry
+//! residency/prepare counters — everything surfaced by the `status` op.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
@@ -29,6 +30,8 @@ pub struct PoolCounters {
     pub rejected_overload: AtomicU64,
     /// requests rejected at admission for a bad input shape
     pub rejected_shape: AtomicU64,
+    /// requests rejected at admission for an unknown/invalid variant key
+    pub rejected_variant: AtomicU64,
     /// requests whose batch failed in the backend
     pub failed: AtomicU64,
     /// queue-depth high-water mark since start
@@ -43,6 +46,7 @@ impl PoolCounters {
             completed: AtomicU64::new(0),
             rejected_overload: AtomicU64::new(0),
             rejected_shape: AtomicU64::new(0),
+            rejected_variant: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             peak_depth: AtomicUsize::new(0),
             lanes: (0..lanes).map(|_| LaneCounters::default()).collect(),
@@ -69,6 +73,7 @@ impl PoolCounters {
             completed: self.completed.load(Ordering::Relaxed),
             rejected_overload: self.rejected_overload.load(Ordering::Relaxed),
             rejected_shape: self.rejected_shape.load(Ordering::Relaxed),
+            rejected_variant: self.rejected_variant.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             peak_depth: self.peak_depth.load(Ordering::Relaxed),
             queue_depth,
@@ -98,11 +103,19 @@ pub struct PoolSnapshot {
     pub completed: u64,
     pub rejected_overload: u64,
     pub rejected_shape: u64,
+    pub rejected_variant: u64,
     pub failed: u64,
     pub peak_depth: usize,
     pub queue_depth: usize,
     pub lanes: Vec<LaneSnapshot>,
 }
+
+/// The model-registry residency/prepare counters ride along with the
+/// pool counters in the `status` op; they are defined beside
+/// [`crate::model::registry::ModelRegistry`] (the model layer must not
+/// depend on the coordinator) and re-exported here as part of the
+/// coordinator's metrics surface.
+pub use crate::model::registry::{RegistryCounters, RegistrySnapshot, VariantSnapshot};
 
 /// Accumulates request latencies and computes summary statistics.
 #[derive(Clone, Debug, Default)]

@@ -1,6 +1,6 @@
 //! L3 coordinator: quantization-sweep scheduling, batched evaluation,
-//! multi-lane model serving (lane pool + bounded admission + TCP server),
-//! and metrics.
+//! multi-lane multi-variant model serving (registry + lane pool + bounded
+//! admission + TCP server), and metrics.
 
 pub mod eval;
 pub mod lanes;
@@ -8,10 +8,11 @@ pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
-pub use eval::{eval_pjrt, eval_reference, EvalResult};
+pub use eval::{eval_pjrt, eval_prepared, eval_reference, EvalResult};
 pub use lanes::{LanePool, LanePoolConfig, Prediction, ServeError};
 pub use metrics::{
     AccuracyCounter, LaneSnapshot, LatencyRecorder, LatencySummary, PoolCounters, PoolSnapshot,
+    RegistryCounters, RegistrySnapshot, VariantSnapshot,
 };
 pub use scheduler::{lambda_grid, run_sweep, QuantJob, QuantOutcome};
 pub use server::{Client, Server, ServerConfig};

@@ -44,7 +44,10 @@ pub fn run_sweep(
             }
         };
         let sw = Stopwatch::start();
-        let out = job.method.apply(&plan, &ckpt);
+        // jobs already run on pool workers — nested per-layer fan-out
+        // would deadlock, so each job quantizes serially (Method::apply
+        // falls back to serial on workers regardless)
+        let out = job.method.apply(&plan, &ckpt, None);
         let quant_ms = sw.millis();
         let size = quant::model_size(&plan, &job.method);
         QuantOutcome { job, ckpt: out, quant_ms, size }

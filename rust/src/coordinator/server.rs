@@ -5,12 +5,20 @@
 //! Request (one line):
 //!   {"op": "classify", "dataset": "cifar10-sim", "index": 7}
 //!   {"op": "classify", "pixels": [ ...3*32*32 floats... ]}
+//!   {"op": "classify", "model": "resnet20@dfmpc:2/6", "index": 7}
 //!   {"op": "status"}
 //! Response (one line):
 //!   {"ok": true, "class": 3, "confidence": 0.97, "latency_ms": 1.2,
-//!    "batch_size": 4, "lane": 1}
+//!    "batch_size": 4, "lane": 1, "model": "resnet20@dfmpc:2/6:0.5:0"}
 //! Errors are structured: {"ok": false, "error": "...", "error_kind":
-//! "overloaded" | "conn_limit" | "shape_mismatch" | "bad_request" | ...}.
+//! "overloaded" | "conn_limit" | "shape_mismatch" | "bad_variant" |
+//! "bad_request" | ...}.
+//!
+//! The optional `model` field selects a registry variant key
+//! (`"<model>@<method>"`); omitted, the pool's default variant serves the
+//! request. On a registry-backed pool the variant is quantized lazily on
+//! its first request (DF-MPC is a closed-form weight sweep — cheap enough
+//! to run at load time) and `status` reports per-variant residency.
 //!
 //! Connections beyond `max_conns` are rejected with a one-line
 //! `conn_limit` error before close. Handler threads are tracked (not
@@ -237,7 +245,20 @@ fn handle_request(line: &str, pool: &LanePool, stats: &ServerStats, model_name: 
                 Ok(t) => t,
                 Err(e) => return error_json(stats, "bad_request", &format!("{e:#}")),
             };
-            match pool.classify(image) {
+            let variant = match req.get("model") {
+                None => None,
+                Some(Json::Str(s)) => Some(s.as_str()),
+                // a non-string key must not silently fall back to the
+                // default variant — the client asked for SOMETHING else
+                Some(_) => {
+                    return error_json(
+                        stats,
+                        "bad_request",
+                        "'model' must be a string variant key (\"<model>@<method>\")",
+                    )
+                }
+            };
+            match pool.classify_variant(variant, image) {
                 Ok(p) => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("class", Json::num(p.class as f64)),
@@ -245,6 +266,7 @@ fn handle_request(line: &str, pool: &LanePool, stats: &ServerStats, model_name: 
                     ("latency_ms", Json::num(p.latency_ms)),
                     ("batch_size", Json::num(p.batch_size as f64)),
                     ("lane", Json::num(p.lane as f64)),
+                    ("model", Json::str(p.variant)),
                 ]),
                 Err(e) => error_json(stats, e.kind(), &e.to_string()),
             }
@@ -273,12 +295,14 @@ fn request_image(req: &Json) -> Result<Tensor> {
 }
 
 /// `status` op: server counters plus the lane pool's admission/queue
-/// state — the serving stack's observability surface.
+/// state and (on registry-backed pools) per-variant model residency — the
+/// serving stack's observability surface.
 fn status_json(pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
     let snap = pool.snapshot();
-    Json::obj(vec![
+    let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("model", Json::str(model_name)),
+        ("default_variant", Json::str(pool.default_variant())),
         ("requests", Json::num(stats.requests.load(Ordering::Relaxed) as f64)),
         ("errors", Json::num(stats.errors.load(Ordering::Relaxed) as f64)),
         ("active_conns", Json::num(stats.active_conns.load(Ordering::Relaxed) as f64)),
@@ -291,6 +315,7 @@ fn status_json(pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
         ("completed", Json::num(snap.completed as f64)),
         ("rejected_overload", Json::num(snap.rejected_overload as f64)),
         ("rejected_shape", Json::num(snap.rejected_shape as f64)),
+        ("rejected_variant", Json::num(snap.rejected_variant as f64)),
         ("failed", Json::num(snap.failed as f64)),
         (
             "lane_batches",
@@ -300,7 +325,43 @@ fn status_json(pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
             "lane_requests",
             Json::Arr(snap.lanes.iter().map(|l| Json::num(l.requests as f64)).collect()),
         ),
-    ])
+    ];
+    if let Some(registry) = pool.registry() {
+        let reg = registry.snapshot();
+        fields.extend([
+            ("variants_loaded", Json::num(reg.variants.len() as f64)),
+            ("model_bytes_resident", Json::num(reg.bytes_resident as f64)),
+            (
+                "model_budget_bytes",
+                if reg.budget_bytes == usize::MAX {
+                    Json::Null
+                } else {
+                    Json::num(reg.budget_bytes as f64)
+                },
+            ),
+            ("model_prepares", Json::num(reg.prepared as f64)),
+            ("model_hits", Json::num(reg.hits as f64)),
+            ("model_evictions", Json::num(reg.evicted as f64)),
+            ("model_prepare_ms_total", Json::num(reg.prepare_ms_total)),
+            ("model_last_prepare_ms", Json::num(reg.last_prepare_ms)),
+            (
+                "variants",
+                Json::Arr(
+                    reg.variants
+                        .iter()
+                        .map(|v| {
+                            Json::obj(vec![
+                                ("key", Json::str(v.key.clone())),
+                                ("bytes", Json::num(v.bytes as f64)),
+                                ("prepare_ms", Json::num(v.prepare_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+    }
+    Json::obj(fields)
 }
 
 /// Minimal blocking client (used by examples/benches/tests).

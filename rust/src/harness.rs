@@ -3,23 +3,25 @@
 //! PJRT lane (or the reference engine), and report paper-style rows.
 //!
 //! The harness owns the process-wide [`ThreadPool`] (sized from
-//! `DFMPC_THREADS` or the machine's parallelism); the reference engine,
-//! the eval pipeline, and sweep scheduling all share it.
+//! `DFMPC_THREADS` or the machine's parallelism) and a process-wide
+//! [`ModelRegistry`] over it; the reference engine, the eval pipeline,
+//! sweep scheduling, and variant preparation all share them. Quantized
+//! variants prepared once (CLI `eval`, `serve` preload, sweeps) are cached
+//! in the registry and reused — including their GEMM-packed filter panels.
 
 use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::eval::{eval_pjrt, eval_reference, EvalResult};
+use crate::coordinator::eval::{eval_pjrt, eval_prepared, EvalResult};
 use crate::data::EvalShard;
 use crate::infer::{InferBackend, RefLane};
 use crate::model::zoo::{artifacts_root, ModelEntry, Zoo};
-use crate::model::{Checkpoint, Plan};
+use crate::model::{Checkpoint, ModelRegistry, Plan, PreparedModel};
 use crate::quant::{self, Method};
 use crate::runtime::PjrtWorker;
 use crate::util::threadpool::ThreadPool;
-use crate::util::Stopwatch;
 
 /// A fully materialized model: plan + FP32 checkpoint + eval shard.
 pub struct LoadedModel {
@@ -36,6 +38,10 @@ pub struct Harness {
     /// lazily so pool-free subcommands (quantize, pjrt-only eval) never
     /// pay for idle worker threads.
     pool: OnceLock<Arc<ThreadPool>>,
+    /// Process-wide variant registry (budget from `DFMPC_MODEL_BUDGET_MB`;
+    /// `serve` builds its own via `--model-budget-mb`). Spawned lazily
+    /// with the shared pool.
+    registry: OnceLock<Arc<ModelRegistry>>,
 }
 
 impl Harness {
@@ -44,7 +50,7 @@ impl Harness {
         let root = artifacts_root();
         let zoo = Zoo::load(&root)
             .with_context(|| format!("loading zoo at {} (run `make models artifacts`)", root.display()))?;
-        Ok(Harness { zoo, worker: None, pool: OnceLock::new() })
+        Ok(Harness { zoo, worker: None, pool: OnceLock::new(), registry: OnceLock::new() })
     }
 
     /// Lazily start the PJRT runtime thread.
@@ -64,10 +70,50 @@ impl Harness {
         )
     }
 
+    /// The harness's process-wide model registry, backed by the shared
+    /// pool. The byte budget comes from `DFMPC_MODEL_BUDGET_MB` (default
+    /// 2048 MB) so long sweeps recycle cold variants instead of retaining
+    /// every quantized checkpoint for the life of the process. Serving
+    /// builds its own via [`Harness::new_registry`] so `--model-budget-mb`
+    /// applies.
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(self.registry.get_or_init(|| {
+            let budget_mb = std::env::var("DFMPC_MODEL_BUDGET_MB")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or(2048);
+            let budget = budget_mb.saturating_mul(1_000_000);
+            Arc::new(ModelRegistry::new(budget, Some(self.pool())))
+        }))
+    }
+
+    /// A fresh registry with an explicit byte budget over the shared pool.
+    pub fn new_registry(&self, budget_bytes: usize) -> Arc<ModelRegistry> {
+        Arc::new(ModelRegistry::new(budget_bytes, Some(self.pool())))
+    }
+
+    /// Register `model` as a base (insert-or-replace, harmless to repeat)
+    /// and resolve — lazily preparing — the `method` variant through the
+    /// harness registry. `prepared.prepare_ms` reports the quantize+pack
+    /// latency of the first request; later calls hit the cache and return
+    /// that first-prepare latency. The prepare always builds the
+    /// reference-engine panels too — the PJRT eval path only consumes the
+    /// checkpoint, accepting a small pack cost for one shared prepare
+    /// path.
+    pub fn prepare(&self, model: &LoadedModel, method: Method) -> Result<Arc<PreparedModel>> {
+        let registry = self.registry();
+        let key = variant_key(&model.entry.id, &method);
+        let (plan, ckpt) = (Arc::clone(&model.plan), Arc::clone(&model.ckpt));
+        registry.register_base(&model.entry.id, plan, ckpt);
+        registry.get_or_prepare(&key)
+    }
+
     /// Build `n` reference-engine serving lanes for a (possibly
     /// quantized) checkpoint. One lane fans batches over the whole shared
     /// pool; several lanes split the machine's threads between them (see
-    /// [`RefLane::lanes`]) so the lane pool scales across cores.
+    /// [`RefLane::lanes`]) so the lane pool scales across cores. The
+    /// packed filter panels are built once and shared by all lanes.
     pub fn ref_lanes(
         &self,
         plan: &Arc<Plan>,
@@ -107,6 +153,12 @@ impl Harness {
     }
 }
 
+/// The registry key for a (model, method) variant:
+/// `"<model>@<method-id>"` (see [`Method::id`]).
+pub fn variant_key(model_id: &str, method: &Method) -> String {
+    format!("{model_id}@{}", method.id())
+}
+
 /// One method evaluated on one model.
 #[derive(Clone, Debug)]
 pub struct MethodRow {
@@ -118,11 +170,12 @@ pub struct MethodRow {
     pub eval: EvalResult,
 }
 
-/// Quantize `model` with `method` and evaluate on its shard.
+/// Quantize `model` with `method` (through the harness registry — cached,
+/// pool-parallel, panels shared) and evaluate on its shard.
 ///
 /// `engine = "pjrt"` loads the artifact batch closest to `batch` on the
 /// runtime thread; `"ref"` uses the pure-rust engine fanned out over the
-/// harness's shared pool.
+/// harness's shared pool, reusing the prepared variant's packed panels.
 pub fn run_method(
     h: &mut Harness,
     model: &LoadedModel,
@@ -131,21 +184,18 @@ pub fn run_method(
     batch: usize,
     limit: Option<usize>,
 ) -> Result<MethodRow> {
-    let sw = Stopwatch::start();
-    let qckpt = method.apply(&model.plan, &model.ckpt)?;
-    let quant_ms = sw.millis();
+    let prepared = h.prepare(model, method)?;
     let size = quant::model_size(&model.plan, &method);
     let eval = match engine {
-        "ref" => eval_reference(&model.plan, &qckpt, &model.shard, batch, limit, Some(h.pool()))?,
+        "ref" => eval_prepared(&prepared, &model.shard, batch, limit, Some(h.pool()))?,
         _ => {
             let worker = h.worker()?;
             let (abatch, hlo) = h
                 .zoo
                 .hlo_for_batch(&model.entry, batch)
                 .context("no HLO artifact (run `make artifacts`)")?;
-            let vid = format!("{}#{}", model.entry.id, method.name());
-            worker.load(&vid, PathBuf::from(hlo), &model.plan, &qckpt, abatch)?;
-            eval_pjrt(&worker, &vid, &model.shard, abatch, limit)?
+            worker.load(&prepared.key, PathBuf::from(hlo), &model.plan, &prepared.ckpt, abatch)?;
+            eval_pjrt(&worker, &prepared.key, &model.shard, abatch, limit)?
         }
     };
     Ok(MethodRow {
@@ -153,7 +203,7 @@ pub fn run_method(
         accuracy: eval.accuracy,
         size_mb: size.mb,
         avg_bits: size.avg_bits,
-        quant_ms,
+        quant_ms: prepared.prepare_ms,
         eval,
     })
 }

@@ -7,17 +7,17 @@
 //!
 //! Two execution modes, bit-identical by construction (the parallel path
 //! runs the same kernels on disjoint row blocks — see `tensor::ops`):
-//! - [`Engine::new`]: serial, the numerical oracle. ZeroQ-sim calibration
-//!   still uses this path — its forwards usually run inside the sweep
-//!   scheduler's pool workers, where nested fan-out falls back to serial
-//!   anyway.
+//! - [`Engine::new`]: serial, the numerical oracle.
 //! - [`Engine::with_pool`]: conv/GEMM/fc row-parallel over the shared
 //!   [`ThreadPool`], the path whole-dataset eval, the reference serving
-//!   lane, and the benches use to exploit all cores.
+//!   lanes, and the benches use to exploit all cores.
 //!
-//! Per-forward allocations are recycled through the context's scratch
-//! arena, and each conv's GEMM-packed filter panel is cached per layer, so
-//! steady-state forwards stop allocating per op.
+//! The GEMM-packed filter panels ([`PackedPanels`]) are built **once** per
+//! (plan, checkpoint) — at engine construction, or ahead of time by the
+//! model registry ([`crate::model::PreparedModel`]) — and shared read-only
+//! by every engine/lane over that checkpoint; no per-lane packed cache
+//! exists. Per-forward temporaries recycle through the context's scratch
+//! arena, so steady-state forwards stop allocating per op.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -25,7 +25,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::model::{Checkpoint, Op, Plan};
+use crate::model::registry::{pack_panels, PackedPanels};
+use crate::model::{Checkpoint, ModelRegistry, Op, Plan, PreparedModel};
 use crate::tensor::ops::{self, ExecCtx};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
@@ -39,46 +40,23 @@ pub struct Engine<'a> {
     pub ckpt: &'a Checkpoint,
     /// pool + scratch arena; RefCell because forward takes &self.
     exec: RefCell<ExecCtx>,
-    /// per-layer GEMM-packed filter panels (the checkpoint is immutable
-    /// for the engine's lifetime, so entries never invalidate).
-    packed: RefCell<BTreeMap<String, Vec<f32>>>,
+    /// shared, immutable GEMM-packed filter panels for this checkpoint.
+    panels: Arc<PackedPanels>,
 }
 
-/// Dense conv through the per-layer packed-panel cache; grouped convs use
-/// the direct-loop path (no packing).
-#[allow(clippy::too_many_arguments)]
-fn conv_cached(
-    ctx: &mut ExecCtx,
-    packed: &mut BTreeMap<String, Vec<f32>>,
-    name: &str,
-    w: &Tensor,
-    stride: usize,
-    pad: usize,
-    groups: usize,
-    x: &Tensor,
-) -> Tensor {
-    if groups == 1 {
-        let wt = packed
-            .entry(name.to_string())
-            .or_insert_with(|| ops::pack_filter(w));
-        ops::conv2d_packed(ctx, x, wt, w.shape[0], w.shape[2], stride, pad)
-    } else {
-        ops::conv2d_with(ctx, x, w, stride, pad, groups)
-    }
-}
-
-/// The engine's reusable warm state — execution context (pool + scratch
-/// arena) and the per-layer packed filter panels. Detachable so owners
-/// like [`RefLane`] can carry it across short-lived `Engine` borrows
-/// instead of re-packing filters and re-allocating scratch per batch.
+/// The engine's reusable warm state — the execution context (pool +
+/// scratch arena). Detachable so owners like [`RefLane`] can carry it
+/// across short-lived `Engine` borrows instead of re-allocating scratch
+/// per batch. (The packed filter panels are no longer part of the warm
+/// state: they are immutable per checkpoint and shared via
+/// [`PackedPanels`].)
 pub struct EngineState {
     exec: ExecCtx,
-    packed: BTreeMap<String, Vec<f32>>,
 }
 
 impl EngineState {
     pub fn new(pool: Option<Arc<ThreadPool>>) -> EngineState {
-        EngineState { exec: ExecCtx::from_pool(pool), packed: BTreeMap::new() }
+        EngineState { exec: ExecCtx::from_pool(pool) }
     }
 }
 
@@ -88,8 +66,31 @@ impl Default for EngineState {
     }
 }
 
+/// Dense conv through the shared packed-panel map; grouped convs (and the
+/// fallback when a panel is absent) use `conv2d_with`, which packs
+/// transiently — numerically identical, just without the cached layout.
+#[allow(clippy::too_many_arguments)]
+fn conv_exec(
+    ctx: &mut ExecCtx,
+    panels: &PackedPanels,
+    name: &str,
+    w: &Tensor,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    x: &Tensor,
+) -> Tensor {
+    if groups == 1 {
+        if let Some(wt) = panels.get(name) {
+            return ops::conv2d_packed(ctx, x, wt, w.shape[0], w.shape[2], stride, pad);
+        }
+    }
+    ops::conv2d_with(ctx, x, w, stride, pad, groups)
+}
+
 impl<'a> Engine<'a> {
-    /// Serial engine (the numerical oracle).
+    /// Serial engine (the numerical oracle). Packs the filter panels at
+    /// construction.
     pub fn new(plan: &'a Plan, ckpt: &'a Checkpoint) -> Engine<'a> {
         Self::with_exec(plan, ckpt, None)
     }
@@ -99,30 +100,32 @@ impl<'a> Engine<'a> {
         Self::with_exec(plan, ckpt, Some(pool))
     }
 
-    /// Pooled when `pool` is `Some`, serial otherwise.
+    /// Pooled when `pool` is `Some`, serial otherwise. Packs the filter
+    /// panels at construction (fanned over the pool when present).
     pub fn with_exec(
         plan: &'a Plan,
         ckpt: &'a Checkpoint,
         pool: Option<Arc<ThreadPool>>,
     ) -> Engine<'a> {
-        Self::from_state(plan, ckpt, EngineState::new(pool))
+        let panels = Arc::new(pack_panels(plan, ckpt, pool.as_ref()));
+        Self::from_shared(plan, ckpt, panels, EngineState::new(pool))
     }
 
-    /// Engine resuming previously warmed state. The packed-filter cache is
-    /// keyed by conv name, so the state must come from forwards over the
-    /// same checkpoint.
-    pub fn from_state(plan: &'a Plan, ckpt: &'a Checkpoint, state: EngineState) -> Engine<'a> {
-        Engine {
-            plan,
-            ckpt,
-            exec: RefCell::new(state.exec),
-            packed: RefCell::new(state.packed),
-        }
+    /// Engine over pre-built shared panels + warmed state. The panels must
+    /// come from the same checkpoint (they are keyed by conv name); the
+    /// registry's [`PreparedModel`] guarantees that pairing.
+    pub fn from_shared(
+        plan: &'a Plan,
+        ckpt: &'a Checkpoint,
+        panels: Arc<PackedPanels>,
+        state: EngineState,
+    ) -> Engine<'a> {
+        Engine { plan, ckpt, exec: RefCell::new(state.exec), panels }
     }
 
     /// Detach the warm state for reuse by a later engine.
     pub fn into_state(self) -> EngineState {
-        EngineState { exec: self.exec.into_inner(), packed: self.packed.into_inner() }
+        EngineState { exec: self.exec.into_inner() }
     }
 
     /// Forward pass, NCHW input -> (N, classes) logits.
@@ -170,14 +173,14 @@ impl<'a> Engine<'a> {
     fn forward_impl(&self, x: &Tensor, mut stats: Option<&mut ActStats>) -> Result<Tensor> {
         let mut exec = self.exec.borrow_mut();
         let ctx = &mut *exec;
-        let mut packed = self.packed.borrow_mut();
+        let panels = &*self.panels;
         let mut x = x.clone();
         let mut saved: BTreeMap<&str, Tensor> = BTreeMap::new();
         for op in &self.plan.ops {
             match op {
                 Op::Conv(c) => {
                     let w = self.ckpt.get(&format!("{}.w", c.name))?;
-                    let y = conv_cached(ctx, &mut packed, &c.name, w, c.stride, c.pad, c.groups, &x);
+                    let y = conv_exec(ctx, panels, &c.name, w, c.stride, c.pad, c.groups, &x);
                     ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
                 Op::Bn(b) => self.bn_apply(ctx, &mut x, &b.name, &mut stats)?,
@@ -194,9 +197,9 @@ impl<'a> Engine<'a> {
                         None => sc.clone(),
                         Some(d) => {
                             let w = self.ckpt.get(&format!("{}.w", d.conv.name))?;
-                            let mut s = conv_cached(
+                            let mut s = conv_exec(
                                 ctx,
-                                &mut packed,
+                                panels,
                                 &d.conv.name,
                                 w,
                                 d.conv.stride,
@@ -252,7 +255,10 @@ impl<'a> Engine<'a> {
     /// Mean cross-entropy loss over a labelled batch (drives Fig. 5).
     pub fn loss(&self, x: &Tensor, labels: &[usize]) -> Result<f64> {
         let logits = self.forward(x)?;
-        let probs = ops::softmax_rows(&logits);
+        let probs = {
+            let mut exec = self.exec.borrow_mut();
+            ops::softmax_rows_with(&mut exec, &logits)
+        };
         let mut acc = 0.0f64;
         for (r, &l) in labels.iter().enumerate() {
             acc -= (probs.at2(r, l).max(1e-12) as f64).ln();
@@ -261,52 +267,77 @@ impl<'a> Engine<'a> {
     }
 }
 
-/// Owning, shareable reference-engine lane: the pure-rust counterpart of
-/// `runtime::PjrtWorker` behind [`super::InferBackend`]. This is what lets
-/// the lane pool and the TCP server run without PJRT artifacts,
-/// fanning each batch's convs over the shared pool. The warm
-/// [`EngineState`] (packed filter panels + scratch arena) persists across
-/// batches behind a mutex, so steady-state serving neither re-packs
-/// weights nor re-allocates per op.
+/// Split a machine's threads across `n` lanes: with one lane the shared
+/// pool is used directly (the lane fans each batch over all cores); with
+/// several, each lane gets a private pool slice (or runs serial when the
+/// split leaves a single thread) so concurrent batches scale side by side
+/// instead of contending for the same workers.
+fn lane_pools(n: usize, pool: Option<Arc<ThreadPool>>) -> Vec<Option<Arc<ThreadPool>>> {
+    let n = n.max(1);
+    if n == 1 {
+        return vec![pool];
+    }
+    let total = pool
+        .as_ref()
+        .map(|p| p.threads())
+        .unwrap_or_else(ThreadPool::default_threads);
+    let per = (total / n).max(1);
+    (0..n)
+        .map(|_| if per > 1 { Some(Arc::new(ThreadPool::new(per))) } else { None })
+        .collect()
+}
+
+/// Owning, shareable reference-engine lane over ONE fixed model: the
+/// pure-rust counterpart of `runtime::PjrtWorker` behind
+/// [`super::InferBackend`]. The packed filter panels are built once at
+/// construction (or shared from a registry [`PreparedModel`]) and the warm
+/// [`EngineState`] (scratch arena) persists across batches behind a mutex,
+/// so steady-state serving neither re-packs weights nor re-allocates per
+/// op. For serving many variants from one process, use [`RegistryLane`].
 pub struct RefLane {
     plan: Arc<Plan>,
     ckpt: Arc<Checkpoint>,
+    panels: Arc<PackedPanels>,
     state: Mutex<EngineState>,
 }
 
 impl RefLane {
     pub fn new(plan: Arc<Plan>, ckpt: Arc<Checkpoint>, pool: Option<Arc<ThreadPool>>) -> RefLane {
-        RefLane { plan, ckpt, state: Mutex::new(EngineState::new(pool)) }
+        let panels = Arc::new(pack_panels(&plan, &ckpt, pool.as_ref()));
+        RefLane { plan, ckpt, panels, state: Mutex::new(EngineState::new(pool)) }
+    }
+
+    /// Lane over a registry-prepared variant, sharing its packed panels
+    /// (no per-lane re-pack).
+    pub fn from_prepared(m: &Arc<PreparedModel>, pool: Option<Arc<ThreadPool>>) -> RefLane {
+        RefLane {
+            plan: Arc::clone(&m.plan),
+            ckpt: Arc::clone(&m.ckpt),
+            panels: Arc::clone(&m.panels),
+            state: Mutex::new(EngineState::new(pool)),
+        }
     }
 
     /// Build `n` independent reference lanes over one model for the
-    /// coordinator's lane pool. With one lane, `pool` is used directly
-    /// (the lane fans each batch over all cores). With several, the
-    /// machine's threads are *split* across the lanes — each lane gets
-    /// its own private pool slice (or runs serial when the split leaves a
-    /// single thread) — so concurrent batches scale side by side instead
-    /// of contending for the same workers.
+    /// coordinator's lane pool, splitting the machine's threads across
+    /// them (see [`lane_pools`]). The filter panels are packed once and
+    /// shared read-only by every lane.
     pub fn lanes(
         plan: &Arc<Plan>,
         ckpt: &Arc<Checkpoint>,
         n: usize,
         pool: Option<Arc<ThreadPool>>,
     ) -> Vec<Arc<dyn super::InferBackend>> {
-        let n = n.max(1);
-        if n == 1 {
-            let lane = RefLane::new(Arc::clone(plan), Arc::clone(ckpt), pool);
-            return vec![Arc::new(lane) as Arc<dyn super::InferBackend>];
-        }
-        let total = pool
-            .as_ref()
-            .map(|p| p.threads())
-            .unwrap_or_else(ThreadPool::default_threads);
-        let per = (total / n).max(1);
-        (0..n)
-            .map(|_| {
-                let lane_pool = if per > 1 { Some(Arc::new(ThreadPool::new(per))) } else { None };
-                let lane = RefLane::new(Arc::clone(plan), Arc::clone(ckpt), lane_pool);
-                Arc::new(lane) as Arc<dyn super::InferBackend>
+        let panels = Arc::new(pack_panels(plan, ckpt, pool.as_ref()));
+        lane_pools(n, pool)
+            .into_iter()
+            .map(|lane_pool| {
+                Arc::new(RefLane {
+                    plan: Arc::clone(plan),
+                    ckpt: Arc::clone(ckpt),
+                    panels: Arc::clone(&panels),
+                    state: Mutex::new(EngineState::new(lane_pool)),
+                }) as Arc<dyn super::InferBackend>
             })
             .collect()
     }
@@ -315,7 +346,62 @@ impl RefLane {
 impl super::InferBackend for RefLane {
     fn infer_batch(&self, _id: &str, x: Tensor) -> Result<Tensor> {
         let mut guard = self.state.lock().unwrap();
-        let engine = Engine::from_state(&self.plan, &self.ckpt, std::mem::take(&mut *guard));
+        let engine = Engine::from_shared(
+            &self.plan,
+            &self.ckpt,
+            Arc::clone(&self.panels),
+            std::mem::take(&mut *guard),
+        );
+        let out = engine.forward(&x);
+        *guard = engine.into_state();
+        out
+    }
+}
+
+/// Multi-variant reference lane: resolves the batch's model id through the
+/// [`ModelRegistry`] (preparing the variant lazily on its first request)
+/// and executes on the prepared plan/checkpoint with the registry's
+/// shared packed panels. This is what lets one server process serve
+/// `resnet20@fp32` and `resnet20@dfmpc:2/6:0.5:0` side by side.
+pub struct RegistryLane {
+    registry: Arc<ModelRegistry>,
+    state: Mutex<EngineState>,
+}
+
+impl RegistryLane {
+    pub fn new(registry: Arc<ModelRegistry>, pool: Option<Arc<ThreadPool>>) -> RegistryLane {
+        RegistryLane { registry, state: Mutex::new(EngineState::new(pool)) }
+    }
+
+    /// Build `n` registry lanes, splitting the machine's threads across
+    /// them exactly like [`RefLane::lanes`].
+    pub fn lanes(
+        registry: &Arc<ModelRegistry>,
+        n: usize,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Vec<Arc<dyn super::InferBackend>> {
+        lane_pools(n, pool)
+            .into_iter()
+            .map(|lane_pool| {
+                Arc::new(RegistryLane::new(Arc::clone(registry), lane_pool))
+                    as Arc<dyn super::InferBackend>
+            })
+            .collect()
+    }
+}
+
+impl super::InferBackend for RegistryLane {
+    fn infer_batch(&self, id: &str, x: Tensor) -> Result<Tensor> {
+        // resolve (and lazily prepare) before touching the warm state:
+        // prepare fans out over the registry's pool, not this lane's.
+        let m = self.registry.get_or_prepare(id)?;
+        let mut guard = self.state.lock().unwrap();
+        let engine = Engine::from_shared(
+            &m.plan,
+            &m.ckpt,
+            Arc::clone(&m.panels),
+            std::mem::take(&mut *guard),
+        );
         let out = engine.forward(&x);
         *guard = engine.into_state();
         out

@@ -2,7 +2,7 @@
 
 pub mod engine;
 
-pub use engine::{Engine, RefLane};
+pub use engine::{Engine, RefLane, RegistryLane};
 
 use anyhow::Result;
 

@@ -8,9 +8,16 @@
 //!   serve    --model ID --method M [--engine pjrt|ref] [--addr HOST:PORT]
 //!            [--max-batch N] [--max-wait-ms T] [--lanes N]
 //!            [--queue-depth N] [--max-conns N]
+//!            [--preload K1,K2,...] [--model-budget-mb N]
 //!
 //! `--engine ref` drives the pool-parallel pure-rust engine instead of the
 //! PJRT lane — the only serving path in builds without the `xla` feature.
+//! The reference path serves a *model registry*: any request may name a
+//! variant key `"<model>@<method>"` (e.g. `resnet20@dfmpc:2/6`) and the
+//! server quantizes that variant lazily on its first request — DF-MPC is
+//! closed-form over the weights, cheap enough to run at load time.
+//! `--preload` prepares extra variants eagerly; `--model-budget-mb`
+//! bounds resident variant bytes with LRU eviction.
 //!
 //! Method syntax (see quant::Method::parse):
 //!   fp32 | dfmpc:2/6[:lam1[:lam2]] | original:2/6 | uniform:6 | dfq:6 |
@@ -21,8 +28,8 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use dfmpc::coordinator::{LanePool, LanePoolConfig, Server, ServerConfig};
-use dfmpc::harness::{run_method, Harness};
-use dfmpc::infer::InferBackend;
+use dfmpc::harness::{run_method, variant_key, Harness};
+use dfmpc::infer::{InferBackend, RegistryLane};
 use dfmpc::quant::Method;
 use dfmpc::report::tables::{mb, pct, Table};
 use dfmpc::runtime::PjrtWorker;
@@ -79,7 +86,7 @@ fn quantize(args: &Args) -> Result<()> {
     let model = h.load_model(args.get("model").context("--model required")?)?;
     let method = Method::parse(args.get_or("method", "dfmpc:2/6"))?;
     let out = args.get("out").context("--out required")?;
-    let q = method.apply(&model.plan, &model.ckpt)?;
+    let q = method.apply(&model.plan, &model.ckpt, Some(&h.pool()))?;
     q.save(std::path::Path::new(out))?;
     let size = dfmpc::quant::model_size(&model.plan, &method);
     println!(
@@ -145,6 +152,18 @@ fn sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Expand a `--preload` entry into a full variant key: entries without an
+/// `@` are method specs for the default model.
+fn preload_key(entry: &str, default_model: &str) -> Result<String> {
+    let key = if entry.contains('@') {
+        entry.to_string()
+    } else {
+        let method = Method::parse(entry)?;
+        variant_key(default_model, &method)
+    };
+    Ok(key)
+}
+
 fn serve(args: &Args) -> Result<()> {
     let h = Harness::open()?;
     let model = h.load_model(args.get("model").context("--model required")?)?;
@@ -156,52 +175,105 @@ fn serve(args: &Args) -> Result<()> {
     let n_lanes = args.usize("lanes", 1);
     let queue_depth = args.usize("queue-depth", 128);
     let max_conns = args.usize("max-conns", 256);
+    let budget_mb = args.usize("model-budget-mb", 1024);
 
-    let qckpt = Arc::new(method.apply(&model.plan, &model.ckpt)?);
-    let (lanes, lane_batch): (Vec<Arc<dyn InferBackend>>, usize) = if engine == "ref" {
-        // reference lanes: no artifacts needed; one lane fans convs over
-        // the whole pool, several split the machine's threads between them
-        (h.ref_lanes(&model.plan, &qckpt, n_lanes), max_batch)
+    // the registry over the FP32 base: every served variant — the default
+    // and any the wire protocol or --preload names — prepares from it
+    let registry = h.new_registry(budget_mb.saturating_mul(1_000_000).max(1));
+    registry.register_base(&model.entry.id, Arc::clone(&model.plan), Arc::clone(&model.ckpt));
+    let default_key = variant_key(&model.entry.id, &method);
+    let mut preload = vec![default_key.clone()];
+    if let Some(list) = args.get("preload") {
+        for entry in list.split(',').filter(|s| !s.is_empty()) {
+            preload.push(preload_key(entry, &model.entry.id)?);
+        }
+    }
+    // prepare eagerly; from here on `preload` holds the canonical keys
+    // (the spelling variants are actually registered and served under)
+    let preload: Vec<String> = preload
+        .iter()
+        .map(|key| -> Result<String> {
+            let m = registry.get_or_prepare(key)?;
+            let resident_mb = m.bytes as f64 / 1e6;
+            println!("prepared {} in {:.1} ms ({resident_mb:.2} MB resident)", m.key, m.prepare_ms);
+            Ok(m.key.clone())
+        })
+        .collect::<Result<_>>()?;
+
+    let [c, ih, iw] = model.plan.input;
+    let lane_cfg = |lane_batch: usize| LanePoolConfig {
+        max_batch: max_batch.min(lane_batch),
+        max_wait: std::time::Duration::from_millis(max_wait_ms as u64),
+        queue_depth,
+        input_shape: Some(vec![c, ih, iw]),
+    };
+    let pool = if engine == "ref" {
+        // registry lanes: no artifacts needed; one lane fans convs over
+        // the whole pool, several split the machine's threads between
+        // them. Each batch dispatches on its variant key, so one process
+        // serves fp32 and quantized variants side by side.
+        let lanes = RegistryLane::lanes(&registry, n_lanes, Some(h.pool()));
+        Arc::new(LanePool::start_with_registry(
+            lanes,
+            Arc::clone(&registry),
+            default_key.clone(),
+            lane_cfg(max_batch),
+        ))
     } else {
+        // PJRT lanes execute AOT artifacts: variants must be loaded ahead
+        // of time, so exactly the preloaded set (under canonical keys) is
+        // what this process serves. The pool deliberately does NOT attach
+        // the registry: lazy admission-time validation would admit any
+        // well-formed key that the workers never loaded, turning what
+        // should be a rejection into a backend failure.
         let (abatch, hlo) = h
             .zoo
             .hlo_for_batch(&model.entry, max_batch)
             .context("no artifact")?;
         let workers = PjrtWorker::spawn_lanes(n_lanes)?;
-        for w in &workers {
-            w.load(&model.entry.id, hlo.to_path_buf(), &model.plan, &qckpt, abatch)?;
+        for key in &preload {
+            let prepared = registry.get_or_prepare(key)?;
+            for w in &workers {
+                w.load(&prepared.key, hlo.to_path_buf(), &model.plan, &prepared.ckpt, abatch)?;
+            }
         }
-        (workers.into_iter().map(|w| w as Arc<dyn InferBackend>).collect(), abatch)
+        let lanes: Vec<Arc<dyn InferBackend>> =
+            workers.into_iter().map(|w| w as Arc<dyn InferBackend>).collect();
+        Arc::new(LanePool::start(lanes, default_key.clone(), lane_cfg(abatch)))
     };
-    let [c, ih, iw] = model.plan.input;
-    let pool = Arc::new(LanePool::start(
-        lanes,
-        model.entry.id.clone(),
-        LanePoolConfig {
-            max_batch: max_batch.min(lane_batch),
-            max_wait: std::time::Duration::from_millis(max_wait_ms as u64),
-            queue_depth,
-            input_shape: Some(vec![c, ih, iw]),
-        },
-    ));
     let mut server = Server::start(
         &addr,
         Arc::clone(&pool),
         format!("{}+{}", model.entry.id, method.name()),
         ServerConfig { max_conns },
     )?;
+    // ref lanes canonicalize any alias spelling at admission; PJRT lanes
+    // serve exactly the preloaded executables, so the example must be a
+    // key that is actually loaded
+    let example_key = if engine == "ref" {
+        format!("{}@dfmpc:2/6", model.entry.id)
+    } else {
+        default_key.clone()
+    };
     println!(
-        "serving {} ({}) on {} — {} lane(s), queue depth {}, max {} conns\n\
-         newline-delimited JSON, e.g.\n  {{\"op\": \"classify\", \"dataset\": \"{}\", \"index\": 0}}\n\
+        "serving {default_key} (default) on {} — {} lane(s), queue depth {}, max {} conns\n\
+         {} variant(s) resident, budget {} MB; request a variant with\n  \
+         {{\"op\": \"classify\", \"model\": \"{example_key}\", \"dataset\": \"{}\", \"index\": 0}}\n\
          Ctrl-C drains in-flight requests and exits",
-        model.entry.id,
-        method.name(),
         server.addr,
         pool.lane_count(),
         pool.queue_limit(),
         max_conns,
+        registry.resident_count(),
+        budget_mb,
         model.entry.dataset
     );
+    if engine != "ref" {
+        println!(
+            "note: PJRT lanes serve only the preloaded variant keys (exact spelling): {}",
+            preload.join(", ")
+        );
+    }
     dfmpc::util::signal::install_sigint_handler();
     while !dfmpc::util::signal::sigint_received() {
         std::thread::sleep(std::time::Duration::from_millis(100));
@@ -210,12 +282,20 @@ fn serve(args: &Args) -> Result<()> {
     server.stop(); // joins every connection handler
     pool.stop(); // drains the admission queue through the lanes
     let snap = pool.snapshot();
+    let reg = registry.snapshot();
     eprintln!(
-        "served {} request(s) across {} lane(s); rejected {} overloaded / {} bad-shape",
+        "served {} request(s) across {} lane(s); rejected {} overloaded / {} bad-shape / {} bad-variant\n\
+         {} variant(s) resident ({:.2} MB), {} prepared ({:.1} ms total), {} evicted",
         snap.completed,
         pool.lane_count(),
         snap.rejected_overload,
-        snap.rejected_shape
+        snap.rejected_shape,
+        snap.rejected_variant,
+        reg.variants.len(),
+        reg.bytes_resident as f64 / 1e6,
+        reg.prepared,
+        reg.prepare_ms_total,
+        reg.evicted
     );
     Ok(())
 }

@@ -1,8 +1,11 @@
-//! Model descriptions (plan-IR), checkpoint IO, and zoo lookup.
+//! Model descriptions (plan-IR), checkpoint IO, zoo lookup, and the
+//! multi-variant model registry that the serving stack loads from.
 
 pub mod checkpoint;
 pub mod plan;
+pub mod registry;
 pub mod zoo;
 
 pub use checkpoint::Checkpoint;
 pub use plan::{ConvSpec, Op, Pair, Plan};
+pub use registry::{pack_panels, ModelRegistry, PackedPanels, PreparedModel};

@@ -1,0 +1,551 @@
+//! Model registry: many quantized variants of one (or several) FP32 base
+//! checkpoints served from one process.
+//!
+//! DF-MPC's value prop (the paper's §5.2 cost table) is that a
+//! low-precision variant is derived from the FP32 checkpoint alone —
+//! closed-form, no data, no fine-tuning — which makes quantization cheap
+//! enough to run *at load time inside the server*. The registry is that
+//! load path:
+//!
+//! - A **variant key** `"<model>@<method-id>"` (e.g.
+//!   `resnet20@dfmpc:2/6:0.5:0`, see [`crate::quant::Method::id`]) names
+//!   one immutable [`PreparedModel`]: the plan, the (possibly quantized)
+//!   checkpoint, and the GEMM-packed filter panels built **once** and
+//!   shared read-only by every serving lane — no lane re-packs weights.
+//! - Variants are prepared **lazily on first request** by running
+//!   [`Method::apply`] against the registered FP32 base, fanned over the
+//!   shared [`ThreadPool`]. Concurrent first requests are deduplicated:
+//!   one caller prepares, the rest block on a condvar and share the
+//!   result.
+//! - Residency is bounded by a **byte-budget LRU**: when the estimated
+//!   resident bytes (checkpoints + panels) exceed the budget, the coldest
+//!   variants are evicted; a later request simply re-prepares them.
+//!
+//! Counters ([`RegistryCounters`]) and the per-variant residency list
+//! surface through the server's `status` op.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::Method;
+use crate::tensor::ops::pack_filter;
+use crate::util::threadpool::ThreadPool;
+use crate::util::Stopwatch;
+
+use super::{Checkpoint, Plan};
+
+/// Counters for a [`ModelRegistry`]: how variants were resolved (cache
+/// hit vs prepared on demand), how many were evicted by the byte budget,
+/// and prepare latency. All atomics — the serving lanes bump them while
+/// preparing variants lazily on first request. Re-exported through
+/// `coordinator::metrics` for the `status` op.
+#[derive(Debug, Default)]
+pub struct RegistryCounters {
+    /// variant lookups answered from the resident cache
+    pub hits: AtomicU64,
+    /// variants prepared (lazy quantization + panel packing) — a
+    /// deduplicated concurrent first request counts once
+    pub prepared: AtomicU64,
+    /// variants evicted by the byte-budget LRU
+    pub evicted: AtomicU64,
+    /// total time spent preparing variants, microseconds
+    pub prepare_us_total: AtomicU64,
+    /// duration of the most recent prepare, microseconds
+    pub last_prepare_us: AtomicU64,
+}
+
+impl RegistryCounters {
+    /// Record one completed prepare.
+    pub fn note_prepare(&self, ms: f64) {
+        let us = (ms * 1e3).max(0.0) as u64;
+        self.prepared.fetch_add(1, Ordering::Relaxed);
+        self.prepare_us_total.fetch_add(us, Ordering::Relaxed);
+        self.last_prepare_us.store(us, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time copy of one resident variant's registry entry.
+#[derive(Clone, Debug)]
+pub struct VariantSnapshot {
+    /// variant key, `"<model>@<method-id>"`
+    pub key: String,
+    /// resident byte estimate (checkpoint + packed panels)
+    pub bytes: usize,
+    /// how long this variant took to prepare, milliseconds
+    pub prepare_ms: f64,
+}
+
+/// Point-in-time copy of the registry counters + per-variant residency.
+#[derive(Clone, Debug)]
+pub struct RegistrySnapshot {
+    pub hits: u64,
+    pub prepared: u64,
+    pub evicted: u64,
+    pub prepare_ms_total: f64,
+    pub last_prepare_ms: f64,
+    /// resident variants, coldest first (LRU order)
+    pub variants: Vec<VariantSnapshot>,
+    pub bytes_resident: usize,
+    pub budget_bytes: usize,
+}
+
+/// Per-conv GEMM-packed filter panels, keyed by conv name. Built once per
+/// variant and shared read-only across every lane (see
+/// [`crate::infer::Engine`]).
+pub type PackedPanels = BTreeMap<String, Vec<f32>>;
+
+/// Pack every dense (`groups == 1`) conv filter of `plan` into its
+/// GEMM-ready transposed panel, fanning the per-layer packs over `pool`.
+/// Convs whose weight tensor is absent from `ckpt` are skipped — the
+/// engine falls back to transient packing (and `forward` will surface the
+/// missing tensor as an error if it is actually needed).
+pub fn pack_panels(plan: &Plan, ckpt: &Checkpoint, pool: Option<&Arc<ThreadPool>>) -> PackedPanels {
+    let jobs: Vec<(String, &crate::tensor::Tensor)> = plan
+        .convs()
+        .iter()
+        .filter(|(_, spec)| spec.groups == 1)
+        .filter_map(|(name, _)| {
+            ckpt.tensors.get(&format!("{name}.w")).map(|w| (name.clone(), w))
+        })
+        .collect();
+    crate::quant::par_map(pool, jobs, |(name, w)| (name, pack_filter(w)))
+        .into_iter()
+        .collect()
+}
+
+/// One immutable, fully prepared model variant: everything a serving lane
+/// needs to execute batches, shareable read-only across lanes.
+pub struct PreparedModel {
+    /// variant key, `"<model>@<method-id>"`
+    pub key: String,
+    /// the registered base model id
+    pub model_id: String,
+    /// the quantization method this variant was prepared with
+    pub method: Method,
+    pub plan: Arc<Plan>,
+    /// quantized checkpoint (the base FP32 `Arc` itself for `fp32`)
+    pub ckpt: Arc<Checkpoint>,
+    /// GEMM-packed filter panels, built once for all lanes
+    pub panels: Arc<PackedPanels>,
+    /// resident byte estimate (checkpoint + panels; the shared FP32 base
+    /// checkpoint is charged to the base registration, not the variant)
+    pub bytes: usize,
+    /// how long the prepare (quantize + pack) took, milliseconds
+    pub prepare_ms: f64,
+}
+
+fn ckpt_bytes(c: &Checkpoint) -> usize {
+    c.tensors.values().map(|t| t.data.len() * 4).sum()
+}
+
+fn panels_bytes(p: &PackedPanels) -> usize {
+    p.values().map(|v| v.len() * 4).sum()
+}
+
+enum Slot {
+    /// another caller is preparing this variant; wait on the condvar
+    Preparing,
+    Ready(Arc<PreparedModel>),
+}
+
+/// RAII release of a `Slot::Preparing` claim: unless defused (the
+/// successful-prepare path), dropping removes the slot and wakes waiters,
+/// so neither an `Err` return nor an unwinding panic inside prepare can
+/// leave later requests blocked on the condvar forever.
+struct PrepareClaim<'a> {
+    registry: &'a ModelRegistry,
+    key: &'a str,
+    armed: bool,
+}
+
+impl Drop for PrepareClaim<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        // tolerate a poisoned lock: this drop may run during an unwind,
+        // and a second panic here would abort the process
+        if let Ok(mut inner) = self.registry.inner.lock() {
+            inner.slots.remove(self.key);
+        }
+        self.registry.cv.notify_all();
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    slots: BTreeMap<String, Slot>,
+    /// Ready keys, coldest first (front = next eviction candidate)
+    lru: Vec<String>,
+    bytes: usize,
+}
+
+impl Inner {
+    fn touch(&mut self, key: &str) {
+        if let Some(pos) = self.lru.iter().position(|k| k == key) {
+            let k = self.lru.remove(pos);
+            self.lru.push(k);
+        }
+    }
+}
+
+/// Maps variant keys to prepared models over a set of registered FP32
+/// bases. See the module docs for the design.
+pub struct ModelRegistry {
+    bases: Mutex<BTreeMap<String, (Arc<Plan>, Arc<Checkpoint>)>>,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    budget_bytes: usize,
+    pool: Option<Arc<ThreadPool>>,
+    counters: RegistryCounters,
+}
+
+impl ModelRegistry {
+    /// `budget_bytes` bounds the estimated resident variant bytes
+    /// (checkpoints + packed panels); `usize::MAX` disables eviction.
+    /// `pool` is used for lazy quantization and panel packing.
+    pub fn new(budget_bytes: usize, pool: Option<Arc<ThreadPool>>) -> ModelRegistry {
+        ModelRegistry {
+            bases: Mutex::new(BTreeMap::new()),
+            inner: Mutex::new(Inner::default()),
+            cv: Condvar::new(),
+            budget_bytes: budget_bytes.max(1),
+            pool,
+            counters: RegistryCounters::default(),
+        }
+    }
+
+    /// Register (or replace) an FP32 base model. Variants of `model_id`
+    /// are prepared from this plan + checkpoint.
+    pub fn register_base(&self, model_id: &str, plan: Arc<Plan>, ckpt: Arc<Checkpoint>) {
+        self.bases.lock().unwrap().insert(model_id.to_string(), (plan, ckpt));
+    }
+
+    /// ids of the registered base models.
+    pub fn base_ids(&self) -> Vec<String> {
+        self.bases.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Split a variant key into `(model_id, method)`, checking that the
+    /// method parses and the base model is registered. Cheap — used at
+    /// request admission so bogus keys reject immediately.
+    pub fn validate_key(&self, key: &str) -> Result<(String, Method)> {
+        let (model_id, method_spec) = key
+            .split_once('@')
+            .with_context(|| format!("variant key '{key}' is not '<model>@<method>'"))?;
+        let method = Method::parse(method_spec)
+            .with_context(|| format!("variant key '{key}': bad method spec"))?;
+        if !self.bases.lock().unwrap().contains_key(model_id) {
+            bail!("variant key '{key}': model '{model_id}' is not registered");
+        }
+        Ok((model_id.to_string(), method))
+    }
+
+    /// Canonical form of a variant key: `"<model>@<Method::id()>"`.
+    /// Aliased spellings of one method (`dfmpc:2/6` vs the canonical
+    /// `dfmpc:2/6:0.5:0`) collapse to one key, so the registry holds a
+    /// single resident copy per semantic variant.
+    pub fn canonical_key(&self, key: &str) -> Result<String> {
+        let (model_id, method) = self.validate_key(key)?;
+        Ok(format!("{model_id}@{}", method.id()))
+    }
+
+    /// Fast-path lookup of an already-resident canonical key (no parse,
+    /// no bases lock). `None` on miss — including alias spellings, which
+    /// only the slow path canonicalizes.
+    fn get_resident(&self, key: &str) -> Option<Arc<PreparedModel>> {
+        let mut inner = self.inner.lock().unwrap();
+        let hit = match inner.slots.get(key) {
+            Some(Slot::Ready(m)) => Some(Arc::clone(m)),
+            _ => None,
+        };
+        if let Some(m) = hit {
+            inner.touch(key);
+            self.counters.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return Some(m);
+        }
+        None
+    }
+
+    /// Resolve a variant key (any alias spelling), preparing the variant
+    /// on first request. Concurrent first requests prepare exactly once
+    /// (the rest wait and share the result). May evict cold variants to
+    /// fit the byte budget.
+    pub fn get_or_prepare(&self, key: &str) -> Result<Arc<PreparedModel>> {
+        // steady state: lanes hand in canonical keys of resident variants
+        if let Some(m) = self.get_resident(key) {
+            return Ok(m);
+        }
+        let (model_id, method) = self.validate_key(key)?;
+        let canonical = format!("{model_id}@{}", method.id());
+        let key = canonical.as_str();
+        // claim or wait
+        {
+            let mut inner = self.inner.lock().unwrap();
+            loop {
+                let ready: Option<Option<Arc<PreparedModel>>> = match inner.slots.get(key) {
+                    Some(Slot::Ready(m)) => Some(Some(Arc::clone(m))),
+                    Some(Slot::Preparing) => Some(None),
+                    None => None,
+                };
+                match ready {
+                    Some(Some(m)) => {
+                        inner.touch(key);
+                        self.counters.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        return Ok(m);
+                    }
+                    // another caller is preparing this key: wait and re-check
+                    Some(None) => {
+                        inner = self.cv.wait(inner).unwrap();
+                    }
+                    None => {
+                        inner.slots.insert(key.to_string(), Slot::Preparing);
+                        break;
+                    }
+                }
+            }
+        }
+        // Prepare outside the lock (long: quantize + pack). The claim
+        // guard releases the Preparing slot on ANY exit that doesn't
+        // defuse it — error return or unwinding panic — so a failed
+        // prepare can never wedge later requests in cv.wait.
+        let mut claim = PrepareClaim { registry: self, key, armed: true };
+        let prepared = self.prepare(key, &model_id, method);
+        match prepared {
+            Ok(m) => {
+                let m = Arc::new(m);
+                let mut inner = self.inner.lock().unwrap();
+                claim.armed = false;
+                inner.slots.insert(key.to_string(), Slot::Ready(Arc::clone(&m)));
+                inner.lru.push(key.to_string());
+                inner.bytes += m.bytes;
+                self.counters.note_prepare(m.prepare_ms);
+                self.evict_locked(&mut inner, key);
+                self.cv.notify_all();
+                Ok(m)
+            }
+            // claim drops armed -> slot released + waiters woken
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Evict coldest Ready variants (never `keep`) until the budget fits.
+    fn evict_locked(&self, inner: &mut Inner, keep: &str) {
+        while inner.bytes > self.budget_bytes {
+            let Some(pos) = inner.lru.iter().position(|k| k != keep) else { break };
+            let victim = inner.lru.remove(pos);
+            if let Some(Slot::Ready(m)) = inner.slots.remove(&victim) {
+                inner.bytes = inner.bytes.saturating_sub(m.bytes);
+            }
+            self.counters.evicted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+
+    fn prepare(&self, key: &str, model_id: &str, method: Method) -> Result<PreparedModel> {
+        let (plan, base_ckpt) = self
+            .bases
+            .lock()
+            .unwrap()
+            .get(model_id)
+            .map(|(p, c)| (Arc::clone(p), Arc::clone(c)))
+            .with_context(|| format!("model '{model_id}' is not registered"))?;
+        let sw = Stopwatch::start();
+        let ckpt = match method {
+            // fp32 shares the base checkpoint — no copy, no extra bytes
+            Method::Fp32 => Arc::clone(&base_ckpt),
+            _ => Arc::new(
+                method
+                    .apply(&plan, &base_ckpt, self.pool.as_ref())
+                    .with_context(|| format!("preparing variant '{key}'"))?,
+            ),
+        };
+        let panels = Arc::new(pack_panels(&plan, &ckpt, self.pool.as_ref()));
+        let prepare_ms = sw.millis();
+        let shared_base = Arc::ptr_eq(&ckpt, &base_ckpt);
+        let bytes =
+            panels_bytes(&panels) + if shared_base { 0 } else { ckpt_bytes(&ckpt) };
+        Ok(PreparedModel {
+            key: key.to_string(),
+            model_id: model_id.to_string(),
+            method,
+            plan,
+            ckpt,
+            panels,
+            bytes,
+            prepare_ms,
+        })
+    }
+
+    /// Number of resident (Ready) variants.
+    pub fn resident_count(&self) -> usize {
+        self.inner.lock().unwrap().lru.len()
+    }
+
+    /// Estimated resident variant bytes.
+    pub fn bytes_resident(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// The configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Live counters.
+    pub fn counters(&self) -> &RegistryCounters {
+        &self.counters
+    }
+
+    /// Plain-value snapshot for the `status` op: counters plus the
+    /// resident variants in LRU order (coldest first).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        use std::sync::atomic::Ordering::Relaxed;
+        let inner = self.inner.lock().unwrap();
+        let variants = inner
+            .lru
+            .iter()
+            .filter_map(|k| match inner.slots.get(k) {
+                Some(Slot::Ready(m)) => Some(VariantSnapshot {
+                    key: k.clone(),
+                    bytes: m.bytes,
+                    prepare_ms: m.prepare_ms,
+                }),
+                _ => None,
+            })
+            .collect();
+        RegistrySnapshot {
+            hits: self.counters.hits.load(Relaxed),
+            prepared: self.counters.prepared.load(Relaxed),
+            evicted: self.counters.evicted.load(Relaxed),
+            prepare_ms_total: self.counters.prepare_us_total.load(Relaxed) as f64 / 1e3,
+            last_prepare_ms: self.counters.last_prepare_us.load(Relaxed) as f64 / 1e3,
+            variants,
+            bytes_resident: inner.bytes,
+            budget_bytes: self.budget_bytes,
+        }
+    }
+}
+
+impl std::fmt::Debug for ModelRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let snap = self.snapshot();
+        f.debug_struct("ModelRegistry")
+            .field("variants", &snap.variants.len())
+            .field("bytes_resident", &snap.bytes_resident)
+            .field("budget_bytes", &snap.budget_bytes)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const TINY: &str = r#"{
+      "name": "tiny", "input": [3, 8, 8], "num_classes": 4,
+      "ops": [
+        {"op": "conv", "name": "c1", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c1_bn", "ch": 4},
+        {"op": "relu"},
+        {"op": "conv", "name": "c2", "cin": 4, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c2_bn", "ch": 8},
+        {"op": "relu"},
+        {"op": "gap"},
+        {"op": "fc", "name": "fc", "cin": 8, "cout": 4}
+      ],
+      "pairs": [{"low": "c1", "high": "c2", "offset": 0}],
+      "bn_of": {"c1": "c1_bn", "c2": "c2_bn"}
+    }"#;
+
+    fn fixture() -> (Arc<Plan>, Arc<Checkpoint>) {
+        let plan = Plan::parse(TINY).unwrap();
+        let ckpt = Checkpoint::random_init(&plan, &mut Rng::new(5));
+        (Arc::new(plan), Arc::new(ckpt))
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_bad_method() {
+        let reg = ModelRegistry::new(usize::MAX, None);
+        let (plan, ckpt) = fixture();
+        reg.register_base("tiny", plan, ckpt);
+        assert!(reg.get_or_prepare("tiny@fp32").is_ok());
+        assert!(reg.get_or_prepare("nope@fp32").is_err());
+        assert!(reg.get_or_prepare("tiny@bogus:9").is_err());
+        assert!(reg.get_or_prepare("no-at-sign").is_err());
+    }
+
+    #[test]
+    fn fp32_variant_shares_base_checkpoint() {
+        let reg = ModelRegistry::new(usize::MAX, None);
+        let (plan, ckpt) = fixture();
+        reg.register_base("tiny", plan, Arc::clone(&ckpt));
+        let m = reg.get_or_prepare("tiny@fp32").unwrap();
+        assert!(Arc::ptr_eq(&m.ckpt, &ckpt));
+        // only the panels are charged for a shared-checkpoint variant
+        assert_eq!(m.bytes, panels_bytes(&m.panels));
+        assert!(!m.panels.is_empty());
+    }
+
+    #[test]
+    fn second_lookup_hits_cache() {
+        let reg = ModelRegistry::new(usize::MAX, None);
+        let (plan, ckpt) = fixture();
+        reg.register_base("tiny", plan, ckpt);
+        let key = format!("tiny@{}", Method::parse("dfmpc:2/6").unwrap().id());
+        let a = reg.get_or_prepare(&key).unwrap();
+        let b = reg.get_or_prepare(&key).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let snap = reg.snapshot();
+        assert_eq!(snap.prepared, 1);
+        assert_eq!(snap.hits, 1);
+        assert_eq!(snap.variants.len(), 1);
+        assert_eq!(snap.bytes_resident, a.bytes);
+    }
+
+    #[test]
+    fn aliased_key_spellings_share_one_variant() {
+        // "dfmpc:2/6" and its canonical id "dfmpc:2/6:0.5:0" are the same
+        // method; the registry must not prepare (or keep resident) twice.
+        let reg = ModelRegistry::new(usize::MAX, None);
+        let (plan, ckpt) = fixture();
+        reg.register_base("tiny", plan, ckpt);
+        let a = reg.get_or_prepare("tiny@dfmpc:2/6").unwrap();
+        let b = reg.get_or_prepare("tiny@dfmpc:2/6:0.5:0").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "alias spelling re-prepared the variant");
+        assert_eq!(a.key, "tiny@dfmpc:2/6:0.5:0");
+        let snap = reg.snapshot();
+        assert_eq!(snap.prepared, 1);
+        assert_eq!(snap.variants.len(), 1);
+        assert_eq!(
+            reg.canonical_key("tiny@dfmpc:2/6").unwrap(),
+            "tiny@dfmpc:2/6:0.5:0"
+        );
+    }
+
+    #[test]
+    fn lru_evicts_coldest_within_budget() {
+        let (plan, ckpt) = fixture();
+        // measure one variant's footprint with an unbounded registry
+        let probe = ModelRegistry::new(usize::MAX, None);
+        probe.register_base("tiny", Arc::clone(&plan), Arc::clone(&ckpt));
+        let one = probe.get_or_prepare("tiny@uniform:4").unwrap().bytes;
+
+        // budget fits one quantized variant but not two
+        let reg = ModelRegistry::new(one + one / 2, None);
+        reg.register_base("tiny", plan, ckpt);
+        reg.get_or_prepare("tiny@uniform:4").unwrap();
+        reg.get_or_prepare("tiny@uniform:6").unwrap();
+        let snap = reg.snapshot();
+        assert_eq!(snap.evicted, 1, "coldest variant must be evicted");
+        assert_eq!(snap.variants.len(), 1);
+        assert_eq!(snap.variants[0].key, "tiny@uniform:6");
+        assert!(snap.bytes_resident <= reg.budget_bytes());
+        // the evicted variant re-prepares transparently
+        reg.get_or_prepare("tiny@uniform:4").unwrap();
+        assert_eq!(reg.snapshot().prepared, 3);
+    }
+}

@@ -14,12 +14,14 @@
 //! Unpaired convs and the FC head are quantized at `bits_high`.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::model::{Checkpoint, Plan};
+use crate::model::{Checkpoint, ConvSpec, Pair, Plan};
 use crate::tensor::ops::BN_EPS;
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 use super::ternary::ternarize;
 use super::uniform::quantize_uniform;
@@ -166,77 +168,127 @@ pub fn scale_input_channels(w: &mut Tensor, offset: usize, c: &[f32], depthwise:
     }
 }
 
-/// Run DF-MPC over a full model. Returns the quantized checkpoint and the
-/// per-pair reports.
-pub fn dfmpc(plan: &Plan, ckpt: &Checkpoint, cfg: DfmpcConfig) -> Result<(Checkpoint, Vec<PairReport>)> {
-    let mut out = ckpt.clone();
-    let convs = plan.convs();
-    let mut reports = Vec::new();
-    let mut in_pair: BTreeMap<&str, ()> = BTreeMap::new();
+/// Everything one pair contributes to the quantized checkpoint — computed
+/// read-only from the FP32 checkpoint, applied serially in pair order.
+struct PairOut {
+    bn: String,
+    w_hat: Tensor,
+    mu_hat: Vec<f32>,
+    var_hat: Vec<f32>,
+    w_hq: Tensor,
+    report: PairReport,
+}
 
-    for pair in &plan.pairs {
-        in_pair.insert(pair.low.as_str(), ());
-        in_pair.insert(pair.high.as_str(), ());
-        let bn = plan
-            .bn_of
-            .get(&pair.low)
-            .with_context(|| format!("low conv {} has no BN", pair.low))?;
-        let w_l = ckpt.get(&format!("{}.w", pair.low))?.clone();
-        let gamma = ckpt.get(&format!("{bn}.gamma"))?.data.clone();
-        let beta = ckpt.get(&format!("{bn}.beta"))?.data.clone();
-        let mu = ckpt.get(&format!("{bn}.mu"))?.data.clone();
-        let var = ckpt.get(&format!("{bn}.var"))?.data.clone();
+/// One pair's full solve (Eq. 3/4 ternarization, BN recalibration, Eq. 6
+/// high quantization, Eq. 27 closed form + Eq. 7 scaling). Reads only the
+/// original checkpoint, so pairs can run concurrently.
+fn solve_pair(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    cfg: DfmpcConfig,
+    convs: &BTreeMap<String, ConvSpec>,
+    pair: &Pair,
+) -> Result<PairOut> {
+    let bn = plan
+        .bn_of
+        .get(&pair.low)
+        .with_context(|| format!("low conv {} has no BN", pair.low))?
+        .clone();
+    let w_l = ckpt.get(&format!("{}.w", pair.low))?.clone();
+    let gamma = ckpt.get(&format!("{bn}.gamma"))?.data.clone();
+    let beta = ckpt.get(&format!("{bn}.beta"))?.data.clone();
+    let mu = ckpt.get(&format!("{bn}.mu"))?.data.clone();
+    let var = ckpt.get(&format!("{bn}.var"))?.data.clone();
 
-        // 1+2: low-precision weights + BN recalibration
-        let (w_hat, mu_hat, var_hat) = if cfg.bits_low == 2 {
-            let (w_hat, _delta, _alpha) = ternarize(&w_l);
-            let (mu_hat, var_hat) = recalibrate_bn(&w_l, &w_hat, &mu, &var);
-            (w_hat, mu_hat, var_hat)
-        } else {
-            // uniform low quantization preserves scale; stats unchanged
-            (quantize_uniform(&w_l, cfg.bits_low), mu.clone(), var.clone())
-        };
+    // 1+2: low-precision weights + BN recalibration
+    let (w_hat, mu_hat, var_hat) = if cfg.bits_low == 2 {
+        let (w_hat, _delta, _alpha) = ternarize(&w_l);
+        let (mu_hat, var_hat) = recalibrate_bn(&w_l, &w_hat, &mu, &var);
+        (w_hat, mu_hat, var_hat)
+    } else {
+        // uniform low quantization preserves scale; stats unchanged
+        (quantize_uniform(&w_l, cfg.bits_low), mu.clone(), var.clone())
+    };
 
-        // 4: closed-form solve (Eq. 27)
-        let (c, loss_before, loss_after) = solve_c(
-            &w_l, &w_hat, &gamma, &beta, &mu, &var, &mu_hat, &var_hat, cfg.lam1, cfg.lam2,
-        );
+    // 4: closed-form solve (Eq. 27)
+    let (c, loss_before, loss_after) = solve_c(
+        &w_l, &w_hat, &gamma, &beta, &mu, &var, &mu_hat, &var_hat, cfg.lam1, cfg.lam2,
+    );
 
-        out.put(&format!("{}.w", pair.low), w_hat);
-        out.put(&format!("{bn}.mu"), Tensor::new(vec![mu_hat.len()], mu_hat));
-        out.put(&format!("{bn}.var"), Tensor::new(vec![var_hat.len()], var_hat));
+    // 3+4: quantize high conv and apply c on the paired slice (Eq. 7)
+    let hi_spec = convs
+        .get(&pair.high)
+        .with_context(|| format!("high conv {} missing", pair.high))?;
+    let w_h = ckpt.get(&format!("{}.w", pair.high))?;
+    let mut w_hq = quantize_uniform(w_h, cfg.bits_high);
+    scale_input_channels(&mut w_hq, pair.offset, &c, hi_spec.groups > 1);
 
-        // 3+4: quantize high conv and apply c on the paired slice (Eq. 7)
-        let hi_spec = convs
-            .get(&pair.high)
-            .with_context(|| format!("high conv {} missing", pair.high))?;
-        let w_h = ckpt.get(&format!("{}.w", pair.high))?;
-        let mut w_hq = quantize_uniform(w_h, cfg.bits_high);
-        scale_input_channels(&mut w_hq, pair.offset, &c, hi_spec.groups > 1);
-        out.put(&format!("{}.w", pair.high), w_hq);
-
-        reports.push(PairReport {
+    Ok(PairOut {
+        bn,
+        w_hat,
+        mu_hat,
+        var_hat,
+        w_hq,
+        report: PairReport {
             low: pair.low.clone(),
             high: pair.high.clone(),
             c,
             loss_before,
             loss_after,
-        });
+        },
+    })
+}
+
+/// Run DF-MPC over a full model. Returns the quantized checkpoint and the
+/// per-pair reports. With `pool`, the per-pair closed-form solves and the
+/// per-layer tail quantization fan out over it; every pair reads only the
+/// FP32 checkpoint and results are applied in pair order, so the output is
+/// bit-identical with the serial path.
+pub fn dfmpc(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    cfg: DfmpcConfig,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<(Checkpoint, Vec<PairReport>)> {
+    let mut out = ckpt.clone();
+    let convs = plan.convs();
+    let mut in_pair: BTreeMap<&str, ()> = BTreeMap::new();
+    for pair in &plan.pairs {
+        in_pair.insert(pair.low.as_str(), ());
+        in_pair.insert(pair.high.as_str(), ());
     }
 
-    // Unpaired convs + FC head at the high bitwidth.
-    for (name, _spec) in &convs {
-        if in_pair.contains_key(name.as_str()) {
-            continue;
-        }
-        let w = ckpt.get(&format!("{name}.w"))?;
-        out.put(&format!("{name}.w"), quantize_uniform(w, cfg.bits_high));
+    let solved = super::par_map(pool, plan.pairs.iter().collect(), |pair| {
+        solve_pair(plan, ckpt, cfg, &convs, pair)
+    });
+    let mut reports = Vec::with_capacity(solved.len());
+    for (pair, res) in plan.pairs.iter().zip(solved) {
+        let po = res?;
+        out.put(&format!("{}.w", pair.low), po.w_hat);
+        out.put(&format!("{}.mu", po.bn), Tensor::new(vec![po.mu_hat.len()], po.mu_hat));
+        out.put(&format!("{}.var", po.bn), Tensor::new(vec![po.var_hat.len()], po.var_hat));
+        out.put(&format!("{}.w", pair.high), po.w_hq);
+        reports.push(po.report);
     }
+
+    // Unpaired convs + FC head at the high bitwidth (per-layer fan-out).
+    let mut tail: Vec<String> = convs
+        .keys()
+        .filter(|name| !in_pair.contains_key(name.as_str()))
+        .cloned()
+        .collect();
     for op in &plan.ops {
         if let crate::model::Op::Fc { name, .. } = op {
-            let w = ckpt.get(&format!("{name}.w"))?;
-            out.put(&format!("{name}.w"), quantize_uniform(w, cfg.bits_high));
+            tail.push(name.clone());
         }
+    }
+    let quantized = super::par_map(pool, tail, |name| -> Result<(String, Tensor)> {
+        let w = ckpt.get(&format!("{name}.w"))?;
+        Ok((name, quantize_uniform(w, cfg.bits_high)))
+    });
+    for res in quantized {
+        let (name, q) = res?;
+        out.put(&format!("{name}.w"), q);
     }
     Ok((out, reports))
 }

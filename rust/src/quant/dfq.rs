@@ -11,11 +11,14 @@
 //! E[(Wq - W) a] into the following BN beta, with E[a] from the preceding
 //! BN statistics under the Gaussian + ReLU model (fully data-free).
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
 use crate::model::{Checkpoint, Plan};
 use crate::tensor::ops::BN_EPS;
-
+use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 use super::uniform::quantize_uniform;
 
@@ -45,9 +48,14 @@ pub fn erf(x: f32) -> f32 {
 }
 
 /// Weight equalization across every mixed-precision pair, then uniform
-/// quantization at `bits`, then BN bias correction. Returns the quantized
-/// checkpoint.
-pub fn dfq(plan: &Plan, ckpt: &Checkpoint, bits: u32) -> Result<Checkpoint> {
+/// quantization at `bits` (per-layer, fanned over `pool`), then BN bias
+/// correction. Returns the quantized checkpoint.
+pub fn dfq(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    bits: u32,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<Checkpoint> {
     let mut work = ckpt.clone();
     let convs = plan.convs();
 
@@ -122,15 +130,20 @@ pub fn dfq(plan: &Plan, ckpt: &Checkpoint, bits: u32) -> Result<Checkpoint> {
 
     // --- 2. quantize everything uniformly at `bits` ----------------------
     let mut out = work.clone();
-    for name in convs.keys() {
-        let w = work.get(&format!("{name}.w"))?;
-        out.put(&format!("{name}.w"), quantize_uniform(w, bits));
-    }
+    let mut jobs: Vec<String> = convs.keys().cloned().collect();
     for op in &plan.ops {
         if let crate::model::Op::Fc { name, .. } = op {
-            let w = work.get(&format!("{name}.w"))?;
-            out.put(&format!("{name}.w"), quantize_uniform(w, bits));
+            jobs.push(name.clone());
         }
+    }
+    let work_ref = &work;
+    let quantized = super::par_map(pool, jobs, |name| -> Result<(String, Tensor)> {
+        let w = work_ref.get(&format!("{name}.w"))?;
+        Ok((name, quantize_uniform(w, bits)))
+    });
+    for res in quantized {
+        let (name, q) = res?;
+        out.put(&format!("{name}.w"), q);
     }
 
     // --- 3. bias correction on the paired high layers ---------------------

@@ -1,5 +1,13 @@
 //! Quantization library: the paper's DF-MPC plus every baseline it
 //! compares against (DESIGN.md §5 maps each to the paper's tables).
+//!
+//! Every method is pure weight math over the checkpoint (data-free —
+//! that's the paper's point), so the per-layer work fans out trivially:
+//! [`Method::apply`] takes an optional [`ThreadPool`] and the heavy
+//! methods (DF-MPC's per-pair closed-form solves, the per-layer
+//! `quantize_uniform` sweeps, ZeroQ-sim's calibration forwards)
+//! parallelize over it. Results are bit-identical with the serial path —
+//! each layer's computation is unchanged, only the schedule differs.
 
 pub mod compensate;
 pub mod dfq;
@@ -14,9 +22,30 @@ pub mod zeroq_sim;
 pub use compensate::{dfmpc, DfmpcConfig, PairReport};
 pub use size::{model_size, SizeReport};
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::model::{Checkpoint, Plan};
+use crate::util::threadpool::ThreadPool;
+
+/// Map `f` over `items` in input order, fanning out over `pool` when one
+/// is available and we are not already on a pool worker (nested scoped
+/// fan-out from a worker would deadlock). The per-item computation is
+/// identical either way, so results are bit-identical with serial.
+pub(crate) fn par_map<T, R, F>(pool: Option<&Arc<ThreadPool>>, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    match pool {
+        Some(p) if items.len() > 1 && p.threads() > 1 && !ThreadPool::is_pool_worker() => {
+            p.scoped_map(items, f)
+        }
+        _ => items.into_iter().map(f).collect(),
+    }
+}
 
 /// Every quantization method the harness can run.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -43,6 +72,8 @@ pub enum Method {
 }
 
 impl Method {
+    /// Human-facing display name (paper-table style; NOT parseable — use
+    /// [`Method::id`] for a canonical roundtrippable spec).
     pub fn name(&self) -> String {
         match self {
             Method::Fp32 => "FP32".into(),
@@ -61,8 +92,34 @@ impl Method {
         }
     }
 
+    /// Canonical spec string: `Method::parse(m.id()) == m` for every
+    /// method (property-tested). This is the method half of a registry
+    /// variant key (`"<model>@<method-id>"`). Floats print with rust's
+    /// shortest-roundtrip formatting, so the f32s survive exactly.
+    pub fn id(&self) -> String {
+        match self {
+            Method::Fp32 => "fp32".into(),
+            Method::Dfmpc(c) => {
+                format!("dfmpc:{}/{}:{}:{}", c.bits_low, c.bits_high, c.lam1, c.lam2)
+            }
+            Method::NaiveMixed { bits_low, bits_high } => {
+                format!("original:{bits_low}/{bits_high}")
+            }
+            Method::NaiveMixedAlpha { bits_low, bits_high } => {
+                format!("original-alpha:{bits_low}/{bits_high}")
+            }
+            Method::Uniform { bits } => format!("uniform:{bits}"),
+            Method::Dfq { bits } => format!("dfq:{bits}"),
+            Method::Omse { bits } => format!("omse:{bits}"),
+            Method::Ocs { bits, expand } => format!("ocs:{bits}:{expand}"),
+            Method::ZeroqSim { bits, samples, iters } => {
+                format!("zeroq:{bits}:{samples}:{iters}")
+            }
+        }
+    }
+
     /// Parse "dfmpc:2/6", "uniform:4", "dfq:6", "ocs:4:0.05", "fp32",
-    /// "original:2/6", "omse:4", "zeroq:6".
+    /// "original:2/6", "omse:4", "zeroq:6[:samples[:iters]]".
     pub fn parse(s: &str) -> Result<Method> {
         let parts: Vec<&str> = s.split(':').collect();
         let bits_pair = |spec: &str| -> Result<(u32, u32)> {
@@ -96,30 +153,38 @@ impl Method {
             },
             "zeroq" => Method::ZeroqSim {
                 bits: parts.get(1).unwrap_or(&"6").parse()?,
-                samples: 32,
-                iters: 64,
+                samples: parts.get(2).map(|v| v.parse()).transpose()?.unwrap_or(32),
+                iters: parts.get(3).map(|v| v.parse()).transpose()?.unwrap_or(64),
             },
             other => anyhow::bail!("unknown method '{other}'"),
         })
     }
 
     /// Run the method over a model. FP32 returns the checkpoint unchanged.
-    pub fn apply(&self, plan: &Plan, ckpt: &Checkpoint) -> Result<Checkpoint> {
+    /// With `pool`, the per-layer work (DF-MPC pair solves, uniform
+    /// quantization sweeps, ZeroQ-sim calibration forwards) fans out over
+    /// it — bit-identical with the serial path.
+    pub fn apply(
+        &self,
+        plan: &Plan,
+        ckpt: &Checkpoint,
+        pool: Option<&Arc<ThreadPool>>,
+    ) -> Result<Checkpoint> {
         Ok(match self {
             Method::Fp32 => ckpt.clone(),
-            Method::Dfmpc(cfg) => dfmpc(plan, ckpt, *cfg)?.0,
+            Method::Dfmpc(cfg) => dfmpc(plan, ckpt, *cfg, pool)?.0,
             Method::NaiveMixed { bits_low, bits_high } => {
-                naive::naive_mixed(plan, ckpt, *bits_low, *bits_high)?
+                naive::naive_mixed(plan, ckpt, *bits_low, *bits_high, pool)?
             }
             Method::NaiveMixedAlpha { bits_low, bits_high } => {
-                naive::naive_mixed_alpha(plan, ckpt, *bits_low, *bits_high)?
+                naive::naive_mixed_alpha(plan, ckpt, *bits_low, *bits_high, pool)?
             }
-            Method::Uniform { bits } => naive::uniform_all(plan, ckpt, *bits)?,
-            Method::Dfq { bits } => dfq::dfq(plan, ckpt, *bits)?,
-            Method::Omse { bits } => omse::omse(plan, ckpt, *bits)?,
-            Method::Ocs { bits, expand } => ocs::ocs(plan, ckpt, *bits, *expand)?.0,
+            Method::Uniform { bits } => naive::uniform_all(plan, ckpt, *bits, pool)?,
+            Method::Dfq { bits } => dfq::dfq(plan, ckpt, *bits, pool)?,
+            Method::Omse { bits } => omse::omse(plan, ckpt, *bits, pool)?,
+            Method::Ocs { bits, expand } => ocs::ocs(plan, ckpt, *bits, *expand, pool)?.0,
             Method::ZeroqSim { bits, samples, iters } => {
-                zeroq_sim::zeroq_sim(plan, ckpt, *bits, *samples, *iters)?
+                zeroq_sim::zeroq_sim(plan, ckpt, *bits, *samples, *iters, pool)?
             }
         })
     }
@@ -146,6 +211,10 @@ mod tests {
         );
         assert_eq!(Method::parse("uniform:4").unwrap(), Method::Uniform { bits: 4 });
         assert_eq!(Method::parse("ocs:4:0.1").unwrap(), Method::Ocs { bits: 4, expand: 0.1 });
+        assert_eq!(
+            Method::parse("zeroq:6:16:8").unwrap(),
+            Method::ZeroqSim { bits: 6, samples: 16, iters: 8 }
+        );
         assert!(Method::parse("nope").is_err());
         assert!(Method::parse("dfmpc:26").is_err());
     }
@@ -154,5 +223,27 @@ mod tests {
     fn names_are_informative() {
         assert_eq!(Method::parse("dfmpc:2/6").unwrap().name(), "DF-MPC 2/6");
         assert_eq!(Method::parse("dfq:6").unwrap().name(), "DFQ 6b");
+    }
+
+    #[test]
+    fn id_is_parse_roundtrippable() {
+        for spec in [
+            "fp32",
+            "dfmpc:2/6",
+            "dfmpc:2/6:0.3:0.01",
+            "original:2/6",
+            "original-alpha:3/8",
+            "uniform:4",
+            "dfq:6",
+            "omse:4",
+            "ocs:4:0.05",
+            "zeroq:6",
+            "zeroq:6:16:8",
+        ] {
+            let m = Method::parse(spec).unwrap();
+            let id = m.id();
+            let back = Method::parse(&id).unwrap();
+            assert_eq!(back, m, "id '{id}' of '{spec}' did not roundtrip");
+        }
     }
 }

@@ -7,67 +7,115 @@
 //! near-random accuracy). `naive_mixed_alpha` is the stronger variant
 //! that folds alpha back into the weights — our extra ablation showing
 //! how much of DF-MPC's recovery is scale absorption vs compensation.
+//!
+//! All variants fan the per-layer quantization over an optional pool
+//! (bit-identical with serial — each layer's math is unchanged).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::model::{Checkpoint, Op, Plan};
+use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 use super::ternary::ternarize;
 use super::uniform::quantize_uniform;
 
-fn naive_impl(plan: &Plan, ckpt: &Checkpoint, bits_low: u32, bits_high: u32, fold_alpha: bool) -> Result<Checkpoint> {
+/// Quantize the layers named in `jobs` concurrently and apply the results
+/// in input order. `f` reads only the FP32 checkpoint.
+fn quantize_layers(
+    out: &mut Checkpoint,
+    pool: Option<&Arc<ThreadPool>>,
+    jobs: Vec<String>,
+    f: impl Fn(&str) -> Result<Tensor> + Sync,
+) -> Result<()> {
+    let quantized = super::par_map(pool, jobs, |name| f(&name).map(|q| (name, q)));
+    for res in quantized {
+        let (name, q) = res?;
+        out.put(&format!("{name}.w"), q);
+    }
+    Ok(())
+}
+
+fn fc_names(plan: &Plan) -> Vec<String> {
+    plan.ops
+        .iter()
+        .filter_map(|op| match op {
+            Op::Fc { name, .. } => Some(name.clone()),
+            _ => None,
+        })
+        .collect()
+}
+
+fn naive_impl(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    bits_low: u32,
+    bits_high: u32,
+    fold_alpha: bool,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<Checkpoint> {
     let mut out = ckpt.clone();
     let convs = plan.convs();
     let low: std::collections::BTreeSet<&str> =
         plan.pairs.iter().map(|p| p.low.as_str()).collect();
-    for name in convs.keys() {
+    quantize_layers(&mut out, pool, convs.keys().cloned().collect(), |name| {
         let w = ckpt.get(&format!("{name}.w"))?;
-        let q = if low.contains(name.as_str()) && bits_low == 2 {
+        Ok(if low.contains(name) && bits_low == 2 {
             let (t, _delta, alpha) = ternarize(w);
             if fold_alpha {
                 t.map(|v| v * alpha)
             } else {
                 t
             }
-        } else if low.contains(name.as_str()) {
+        } else if low.contains(name) {
             quantize_uniform(w, bits_low)
         } else {
             quantize_uniform(w, bits_high)
-        };
-        out.put(&format!("{name}.w"), q);
-    }
-    for op in &plan.ops {
-        if let Op::Fc { name, .. } = op {
-            let w = ckpt.get(&format!("{name}.w"))?;
-            out.put(&format!("{name}.w"), quantize_uniform(w, bits_high));
-        }
-    }
+        })
+    })?;
+    quantize_layers(&mut out, pool, fc_names(plan), |name| {
+        Ok(quantize_uniform(ckpt.get(&format!("{name}.w"))?, bits_high))
+    })?;
     Ok(out)
 }
 
 /// Paper-faithful "Original" rows: raw ternary pattern, alpha omitted.
-pub fn naive_mixed(plan: &Plan, ckpt: &Checkpoint, bits_low: u32, bits_high: u32) -> Result<Checkpoint> {
-    naive_impl(plan, ckpt, bits_low, bits_high, false)
+pub fn naive_mixed(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    bits_low: u32,
+    bits_high: u32,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<Checkpoint> {
+    naive_impl(plan, ckpt, bits_low, bits_high, false, pool)
 }
 
 /// Stronger direct baseline with the TWN alpha folded into the weights.
-pub fn naive_mixed_alpha(plan: &Plan, ckpt: &Checkpoint, bits_low: u32, bits_high: u32) -> Result<Checkpoint> {
-    naive_impl(plan, ckpt, bits_low, bits_high, true)
+pub fn naive_mixed_alpha(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    bits_low: u32,
+    bits_high: u32,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<Checkpoint> {
+    naive_impl(plan, ckpt, bits_low, bits_high, true, pool)
 }
 
 /// Single-precision uniform quantization of every conv + fc (the "k-bit"
 /// baseline rows, e.g. DFQ-6bit comparisons).
-pub fn uniform_all(plan: &Plan, ckpt: &Checkpoint, bits: u32) -> Result<Checkpoint> {
+pub fn uniform_all(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    bits: u32,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<Checkpoint> {
     let mut out = ckpt.clone();
-    for name in plan.convs().keys() {
-        let w = ckpt.get(&format!("{name}.w"))?;
-        out.put(&format!("{name}.w"), quantize_uniform(w, bits));
-    }
-    for op in &plan.ops {
-        if let Op::Fc { name, .. } = op {
-            let w = ckpt.get(&format!("{name}.w"))?;
-            out.put(&format!("{name}.w"), quantize_uniform(w, bits));
-        }
-    }
+    let mut jobs: Vec<String> = plan.convs().keys().cloned().collect();
+    jobs.extend(fc_names(plan));
+    quantize_layers(&mut out, pool, jobs, |name| {
+        Ok(quantize_uniform(ckpt.get(&format!("{name}.w"))?, bits))
+    })?;
     Ok(out)
 }

@@ -8,10 +8,13 @@
 //! post-split scale, and the channel-duplication cost is charged to the
 //! model size (`expand_ratio`), exactly how the paper reports OCS overhead.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::model::{Checkpoint, Op, Plan};
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 use super::uniform::quantize_uniform_scaled;
 
@@ -63,18 +66,29 @@ pub fn quantize_ocs(w: &Tensor, k: u32, expand_ratio: f32) -> Tensor {
 }
 
 /// Whole-model OCS. Returns the checkpoint and the average channel
-/// expansion (for size accounting).
-pub fn ocs(plan: &Plan, ckpt: &Checkpoint, bits: u32, expand_ratio: f32) -> Result<(Checkpoint, f32)> {
+/// expansion (for size accounting). Per-layer splits are independent and
+/// fan out over `pool` (bit-identical with serial).
+pub fn ocs(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    bits: u32,
+    expand_ratio: f32,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<(Checkpoint, f32)> {
     let mut out = ckpt.clone();
-    for name in plan.convs().keys() {
-        let w = ckpt.get(&format!("{name}.w"))?;
-        out.put(&format!("{name}.w"), quantize_ocs(w, bits, expand_ratio));
-    }
+    let mut jobs: Vec<String> = plan.convs().keys().cloned().collect();
     for op in &plan.ops {
         if let Op::Fc { name, .. } = op {
-            let w = ckpt.get(&format!("{name}.w"))?;
-            out.put(&format!("{name}.w"), quantize_ocs(w, bits, expand_ratio));
+            jobs.push(name.clone());
         }
+    }
+    let quantized = super::par_map(pool, jobs, |name| -> Result<(String, Tensor)> {
+        let w = ckpt.get(&format!("{name}.w"))?;
+        Ok((name, quantize_ocs(w, bits, expand_ratio)))
+    });
+    for res in quantized {
+        let (name, q) = res?;
+        out.put(&format!("{name}.w"), q);
     }
     Ok((out, 1.0 + expand_ratio))
 }

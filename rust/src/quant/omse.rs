@@ -3,10 +3,13 @@
 //! the uniform quantizer scale, found by golden-section search over the
 //! clip ratio (no data needed for weight quantization).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::model::{Checkpoint, Op, Plan};
 use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
 
 use super::uniform::quantize_uniform_scaled;
 
@@ -62,18 +65,28 @@ pub fn quantize_omse(w: &Tensor, k: u32) -> Tensor {
     quantize_uniform_scaled(&clipped, k, s)
 }
 
-/// Whole-model OMSE at `bits`.
-pub fn omse(plan: &Plan, ckpt: &Checkpoint, bits: u32) -> Result<Checkpoint> {
+/// Whole-model OMSE at `bits`. The per-layer golden-section searches are
+/// independent, so they fan out over `pool` (bit-identical with serial).
+pub fn omse(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    bits: u32,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<Checkpoint> {
     let mut out = ckpt.clone();
-    for name in plan.convs().keys() {
-        let w = ckpt.get(&format!("{name}.w"))?;
-        out.put(&format!("{name}.w"), quantize_omse(w, bits));
-    }
+    let mut jobs: Vec<String> = plan.convs().keys().cloned().collect();
     for op in &plan.ops {
         if let Op::Fc { name, .. } = op {
-            let w = ckpt.get(&format!("{name}.w"))?;
-            out.put(&format!("{name}.w"), quantize_omse(w, bits));
+            jobs.push(name.clone());
         }
+    }
+    let quantized = super::par_map(pool, jobs, |name| -> Result<(String, Tensor)> {
+        let w = ckpt.get(&format!("{name}.w"))?;
+        Ok((name, quantize_omse(w, bits)))
+    });
+    for res in quantized {
+        let (name, q) = res?;
+        out.put(&format!("{name}.w"), q);
     }
     Ok(out)
 }

@@ -8,6 +8,14 @@
 //! (ZeroQ: 12 s on 8xV100) while DF-MPC is one closed-form sweep over the
 //! weights (2 s on one GTX 1080 Ti / CPU). `iters` scales the synthesis
 //! loop; the quality improves with iterations, the cost linearly so.
+//!
+//! The calibration forwards run on the reference engine; with a `pool`
+//! they fan conv/GEMM row blocks over it (bit-identical with serial, so
+//! the synthesized data — and the resulting checkpoint — do not depend on
+//! the thread count). Inside a pool worker (the sweep scheduler's jobs)
+//! the engine's fan-out falls back to serial automatically.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -16,20 +24,28 @@ use crate::model::{Checkpoint, Op, Plan};
 use crate::tensor::ops::BN_EPS;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 
 use super::naive::uniform_all;
 
 /// Synthesize `n` images whose layer statistics approach the FP model's BN
 /// running statistics, by iterative scale/shift refinement against the
 /// observed moment mismatch (a gradient-free distillation loop).
-pub fn synthesize(plan: &Plan, ckpt: &Checkpoint, n: usize, iters: usize, seed: u64) -> Result<Tensor> {
+pub fn synthesize(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    n: usize,
+    iters: usize,
+    seed: u64,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<Tensor> {
     let mut rng = Rng::new(seed);
     let [c, h, w] = plan.input;
     let mut imgs = Tensor::new(
         vec![n, c, h, w],
         rng.normal_vec(n * c * h * w).into_iter().map(|v| 0.5 + 0.25 * v).collect(),
     );
-    let engine = Engine::new(plan, ckpt);
+    let engine = Engine::with_exec(plan, ckpt, pool.cloned());
     // target: stored running means of the first BN
     let first_bn = plan.ops.iter().find_map(|op| match op {
         Op::Bn(b) => Some(b.name.clone()),
@@ -76,14 +92,15 @@ pub fn zeroq_sim(
     bits: u32,
     samples: usize,
     iters: usize,
+    pool: Option<&Arc<ThreadPool>>,
 ) -> Result<Checkpoint> {
-    let calib = synthesize(plan, ckpt, samples, iters, 0xD15C0)?;
-    let mut quant = uniform_all(plan, ckpt, bits)?;
+    let calib = synthesize(plan, ckpt, samples, iters, 0xD15C0, pool)?;
+    let mut quant = uniform_all(plan, ckpt, bits, pool)?;
     // empirical correction: match per-BN pre-normalization means
     let mut fp_stats = ActStats::new();
-    Engine::new(plan, ckpt).forward_collect(&calib, &mut fp_stats)?;
+    Engine::with_exec(plan, ckpt, pool.cloned()).forward_collect(&calib, &mut fp_stats)?;
     let mut q_stats = ActStats::new();
-    Engine::new(plan, &quant).forward_collect(&calib, &mut q_stats)?;
+    Engine::with_exec(plan, &quant, pool.cloned()).forward_collect(&calib, &mut q_stats)?;
     let bn_names: Vec<String> = plan
         .ops
         .iter()

@@ -4,8 +4,8 @@
 //! inference path is the PJRT runtime executing AOT HLO. Conv2d uses
 //! im2col + a tiled GEMM over a pre-packed (transposed) weight panel, and
 //! the hot ops (im2col, GEMM, grouped conv, fc, batchnorm, relu/relu6,
-//! pools) can be row-partitioned across the shared [`ThreadPool`] via
-//! [`ExecCtx`].
+//! pools, softmax) can be row-partitioned across the shared
+//! [`ThreadPool`] via [`ExecCtx`].
 //!
 //! Parity contract: every parallel path runs the *same* kernel as the
 //! serial path on a disjoint row range, and every kernel accumulates in
@@ -707,23 +707,44 @@ pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
         .collect()
 }
 
-/// Row-wise softmax (numerically stable).
-pub fn softmax_rows(x: &Tensor) -> Tensor {
-    let (n, c) = (x.shape[0], x.shape[1]);
-    let mut out = x.clone();
-    for r in 0..n {
-        let row = &mut out.data[r * c..(r + 1) * c];
-        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+/// Softmax over rows `[r0, r1)` of `x` (shape (n, c)) into `out` — the
+/// kernel shared by the serial and row-parallel paths. Each row is
+/// independent and the per-row op order (max, exp+accumulate, divide) is
+/// identical in both, so partitioning cannot change any result.
+fn softmax_rows_kernel(xdata: &[f32], c: usize, r0: usize, r1: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), (r1 - r0) * c);
+    for r in r0..r1 {
+        let src = &xdata[r * c..(r + 1) * c];
+        let dst = &mut out[(r - r0) * c..(r - r0 + 1) * c];
+        let m = src.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
         let mut sum = 0.0;
-        for v in row.iter_mut() {
-            *v = (*v - m).exp();
-            sum += *v;
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = (s - m).exp();
+            sum += *d;
         }
-        for v in row.iter_mut() {
-            *v /= sum;
+        for d in dst.iter_mut() {
+            *d /= sum;
         }
     }
-    out
+}
+
+/// Row-wise softmax (numerically stable), serial (the oracle path).
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    let (n, c) = (x.shape[0], x.shape[1]);
+    let mut out = vec![0.0f32; n * c];
+    softmax_rows_kernel(&x.data, c, 0, n, &mut out);
+    Tensor::new(vec![n, c], out)
+}
+
+/// Row-wise softmax with an execution context, parallel over disjoint row
+/// blocks. Bit-exact across thread counts (same kernel per row).
+pub fn softmax_rows_with(ctx: &mut ExecCtx, x: &Tensor) -> Tensor {
+    let (n, c) = (x.shape[0], x.shape[1]);
+    let mut out = ctx.scratch.take(n * c);
+    ctx.run_rows(n, c, &mut out, 32, |r0, r1, chunk| {
+        softmax_rows_kernel(&x.data, c, r0, r1, chunk);
+    });
+    Tensor::new(vec![n, c], out)
 }
 
 #[cfg(test)]
@@ -928,6 +949,20 @@ mod tests {
 
         assert_eq!(maxpool(&x, 2, 2).data, maxpool_with(&mut ctx, &x, 2, 2).data);
         assert_eq!(avgpool(&x, 3, 2).data, avgpool_with(&mut ctx, &x, 3, 2).data);
+    }
+
+    #[test]
+    fn softmax_parallel_is_bit_exact() {
+        let pool = Arc::new(ThreadPool::new(3));
+        let mut r = Rng::new(96);
+        for &(n, c) in &[(1usize, 3usize), (7, 10), (200, 16)] {
+            let x = rand_tensor(&mut r, vec![n, c]);
+            let serial = softmax_rows(&x);
+            let mut ctx = ExecCtx::with_pool(Arc::clone(&pool));
+            let par = softmax_rows_with(&mut ctx, &x);
+            assert_eq!(serial.shape, par.shape);
+            assert_eq!(serial.data, par.data, "n={n} c={c}");
+        }
     }
 
     #[test]

@@ -122,6 +122,35 @@ impl ThreadPool {
         out.into_iter().map(|r| r.unwrap()).collect()
     }
 
+    /// [`ThreadPool::scoped`] over a work list, collecting results in
+    /// input order. Items and the mapper may borrow from the caller's
+    /// stack; the scoped barrier guarantees the borrows outlive every
+    /// job. Callers on a pool worker must not use this (see
+    /// [`ThreadPool::is_pool_worker`]) — fall back to a serial map.
+    pub fn scoped_map<'env, T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'env,
+        R: Send + 'env,
+        F: Fn(T) -> R + Sync + 'env,
+    {
+        let n = items.len();
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        {
+            let fref = &f;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .iter_mut()
+                .zip(items)
+                .map(|(slot, item)| {
+                    Box::new(move || {
+                        *slot = Some(fref(item));
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            self.scoped(jobs);
+        }
+        out.into_iter().map(|r| r.expect("scoped job completed")).collect()
+    }
+
     /// Execute all jobs on the pool and block until every one has run.
     /// Jobs may borrow from the caller's stack: the barrier guarantees the
     /// borrows outlive every job. A panicking job is contained by its
@@ -229,6 +258,14 @@ mod tests {
             pool.scoped(jobs);
         }
         assert_eq!(data, (0..1000).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn scoped_map_borrows_and_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let base = vec![10u64, 20, 30, 40, 50];
+        let out = pool.scoped_map((0..5).collect::<Vec<usize>>(), |i| base[i] + i as u64);
+        assert_eq!(out, vec![10, 21, 32, 43, 54]);
     }
 
     #[test]

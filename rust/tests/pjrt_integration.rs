@@ -91,7 +91,7 @@ fn quantized_params_swap_in_place() {
     let (x, _) = model.shard.batch(0, abatch);
     let fp = worker.infer("swap", x.clone()).unwrap();
     // swap in DF-MPC weights without recompiling
-    let (qckpt, _) = dfmpc(&model.plan, &model.ckpt, DfmpcConfig::default()).unwrap();
+    let (qckpt, _) = dfmpc(&model.plan, &model.ckpt, DfmpcConfig::default(), None).unwrap();
     worker.set_params("swap", &model.plan, &qckpt).unwrap();
     let q = worker.infer("swap", x.clone()).unwrap();
     assert!(fp.max_abs_diff(&q) > 1e-4, "param swap had no effect");
@@ -159,7 +159,7 @@ fn method_sweep_preserves_or_degrades_gracefully() {
     let Ok(model) = h.load_model("resnet18_cifar10-sim") else { return };
     for spec in ["dfmpc:2/6", "original:2/6", "uniform:6", "dfq:6", "omse:4", "ocs:4:0.05"] {
         let m = Method::parse(spec).unwrap();
-        let q = m.apply(&model.plan, &model.ckpt).unwrap();
+        let q = m.apply(&model.plan, &model.ckpt, None).unwrap();
         let engine = dfmpc::infer::Engine::new(&model.plan, &q);
         let (x, _) = model.shard.batch(0, 4);
         let logits = engine.forward(&x).unwrap();

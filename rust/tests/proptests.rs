@@ -306,6 +306,116 @@ fn prop_elementwise_parallel_bit_exact() {
 }
 
 #[test]
+fn prop_method_id_parse_roundtrip() {
+    // Method::id must be a canonical spec: parse(id(m)) == m for random
+    // methods across every arm (the registry keys variants by it).
+    use dfmpc::quant::{DfmpcConfig, Method};
+    for seed in 0..CASES {
+        let mut r = Rng::new(1300 + seed);
+        let bits_low = 2 + r.below(3) as u32;
+        let bits_high = 4 + r.below(5) as u32;
+        let methods = [
+            Method::Fp32,
+            Method::Dfmpc(DfmpcConfig {
+                bits_low,
+                bits_high,
+                lam1: r.f32(),
+                lam2: 0.1 * r.f32(),
+            }),
+            Method::NaiveMixed { bits_low, bits_high },
+            Method::NaiveMixedAlpha { bits_low, bits_high },
+            Method::Uniform { bits: bits_high },
+            Method::Dfq { bits: bits_high },
+            Method::Omse { bits: bits_low },
+            Method::Ocs { bits: bits_high, expand: 0.01 + 0.2 * r.f32() },
+            Method::ZeroqSim {
+                bits: bits_high,
+                samples: 1 + r.below(64) as usize,
+                iters: 1 + r.below(128) as usize,
+            },
+        ];
+        for m in methods {
+            let id = m.id();
+            let back = Method::parse(&id)
+                .unwrap_or_else(|e| panic!("seed {seed}: id '{id}' failed to parse: {e}"));
+            assert_eq!(back, m, "seed {seed}: id '{id}' did not roundtrip");
+        }
+    }
+}
+
+#[test]
+fn prop_softmax_parallel_bit_exact() {
+    // row-parallel softmax must equal the serial oracle BITWISE for any
+    // shape/thread split — same parity contract as the other kernels.
+    use std::sync::Arc;
+
+    use dfmpc::tensor::ops::{softmax_rows, softmax_rows_with, ExecCtx};
+    use dfmpc::util::threadpool::ThreadPool;
+
+    let pools = [Arc::new(ThreadPool::new(1)), Arc::new(ThreadPool::new(5))];
+    for seed in 0..CASES {
+        let mut r = Rng::new(1400 + seed);
+        let n = 1 + r.below(200) as usize;
+        let c = 1 + r.below(32) as usize;
+        let x = rand_tensor(&mut r, vec![n, c], 4.0);
+        let want = softmax_rows(&x);
+        for pool in &pools {
+            let mut ctx = ExecCtx::with_pool(Arc::clone(pool));
+            let got = softmax_rows_with(&mut ctx, &x);
+            assert_eq!(want.data, got.data, "seed {seed} n={n} c={c}");
+            // warm rerun through the recycled scratch buffer
+            let again = softmax_rows_with(&mut ctx, &x);
+            assert_eq!(want.data, again.data, "seed {seed} warm rerun");
+        }
+    }
+}
+
+#[test]
+fn prop_pooled_quantization_bit_identical_to_serial() {
+    // Method::apply with a pool fans per-pair/per-layer work out but must
+    // produce the SAME checkpoint bitwise (the registry relies on this:
+    // a lazily-prepared variant is the offline artifact).
+    use std::sync::Arc;
+
+    use dfmpc::util::threadpool::ThreadPool;
+
+    let plan_src = r#"{
+      "name": "p2", "input": [3, 16, 16], "num_classes": 5,
+      "ops": [
+        {"op": "conv", "name": "a", "cin": 3, "cout": 6, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "a_bn", "ch": 6},
+        {"op": "relu"},
+        {"op": "conv", "name": "b", "cin": 6, "cout": 10, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "b_bn", "ch": 10},
+        {"op": "relu"},
+        {"op": "conv", "name": "c", "cin": 10, "cout": 12, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c_bn", "ch": 12},
+        {"op": "relu"},
+        {"op": "gap"},
+        {"op": "fc", "name": "fc", "cin": 12, "cout": 5}
+      ],
+      "pairs": [{"low": "a", "high": "b", "offset": 0}, {"low": "b", "high": "c", "offset": 0}],
+      "bn_of": {"a": "a_bn", "b": "b_bn", "c": "c_bn"}
+    }"#;
+    let plan = Plan::parse(plan_src).unwrap();
+    let pool = Arc::new(ThreadPool::new(4));
+    for seed in 0..8 {
+        let mut r = Rng::new(1500 + seed);
+        let ck = Checkpoint::random_init(&plan, &mut r);
+        for spec in ["dfmpc:2/6", "dfmpc:3/6", "original:2/6", "uniform:4", "dfq:6", "omse:4", "ocs:4:0.1"] {
+            let m = dfmpc::quant::Method::parse(spec).unwrap();
+            let serial = m.apply(&plan, &ck, None).unwrap();
+            let pooled = m.apply(&plan, &ck, Some(&pool)).unwrap();
+            for (name, _) in plan.param_order() {
+                let a = serial.get(&name).unwrap();
+                let b = pooled.get(&name).unwrap();
+                assert_eq!(a.data, b.data, "seed {seed} {spec} {name}: pooled apply diverged");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_json_roundtrip_fuzz() {
     fn random_json(r: &mut Rng, depth: usize) -> Json {
         match if depth == 0 { r.below(4) } else { r.below(6) } {
@@ -385,7 +495,7 @@ fn prop_plan_quantization_keeps_shapes() {
         }
         for spec in ["dfmpc:2/6", "dfmpc:3/6", "original:2/6", "uniform:4", "dfq:6", "omse:4", "ocs:4:0.1"] {
             let m = dfmpc::quant::Method::parse(spec).unwrap();
-            let q = m.apply(&plan, &ck).unwrap();
+            let q = m.apply(&plan, &ck, None).unwrap();
             for (name, shape) in plan.param_order() {
                 assert_eq!(q.get(&name).unwrap().shape, shape, "seed {seed} {spec} {name}");
             }

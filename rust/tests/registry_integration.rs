@@ -1,0 +1,301 @@
+//! Registry-backed serving, artifact-free and wall-clock-bounded (runs in
+//! tier-1 CI):
+//!
+//! - a variant served through `ModelRegistry` + `RegistryLane` returns
+//!   logits **bit-identical** to offline `Method::apply` + `Engine`;
+//! - one server process serves two variants of the same base model
+//!   concurrently (fp32 + DF-MPC), the quantized variant prepared lazily
+//!   on its first request, with per-variant residency in `status`;
+//! - concurrent first requests for one variant deduplicate to a single
+//!   prepare;
+//! - the byte-budget LRU evicts cold variants and a later request
+//!   re-prepares them transparently;
+//! - unknown variant keys are rejected at admission with a structured
+//!   `bad_variant` error.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dfmpc::coordinator::{Client, LanePool, LanePoolConfig, ServeError, Server, ServerConfig};
+use dfmpc::infer::{Engine, InferBackend, RegistryLane};
+use dfmpc::model::{Checkpoint, ModelRegistry, Plan};
+use dfmpc::quant::Method;
+use dfmpc::tensor::ops::argmax_rows;
+use dfmpc::tensor::Tensor;
+use dfmpc::util::json::Json;
+use dfmpc::util::rng::Rng;
+
+/// Fixed 3x32x32 plan matching the SynthShapes renderer, with a
+/// mixed-precision pair so DF-MPC actually rewrites weights.
+const SERVE_PLAN: &str = r#"{
+  "name": "tiny32", "input": [3, 32, 32], "num_classes": 10,
+  "ops": [
+    {"op": "conv", "name": "c1", "cin": 3, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c1_bn", "ch": 8},
+    {"op": "relu"},
+    {"op": "conv", "name": "c2", "cin": 8, "cout": 16, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c2_bn", "ch": 16},
+    {"op": "relu"},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc", "cin": 16, "cout": 10}
+  ],
+  "pairs": [{"low": "c1", "high": "c2", "offset": 0}],
+  "bn_of": {"c1": "c1_bn", "c2": "c2_bn"}
+}"#;
+
+fn fixture() -> (Arc<Plan>, Arc<Checkpoint>) {
+    let plan = Plan::parse(SERVE_PLAN).unwrap();
+    plan.validate().unwrap();
+    let mut r = Rng::new(321);
+    let ckpt = Checkpoint::random_init(&plan, &mut r);
+    (Arc::new(plan), Arc::new(ckpt))
+}
+
+fn registry_over(plan: &Arc<Plan>, ckpt: &Arc<Checkpoint>, budget: usize) -> Arc<ModelRegistry> {
+    let reg = Arc::new(ModelRegistry::new(budget, None));
+    reg.register_base("tiny32", Arc::clone(plan), Arc::clone(ckpt));
+    reg
+}
+
+fn batch_of(img: &Tensor, n: usize) -> Tensor {
+    let per = img.data.len();
+    let mut data = Vec::with_capacity(n * per);
+    for _ in 0..n {
+        data.extend_from_slice(&img.data);
+    }
+    Tensor::new(vec![n, img.shape[0], img.shape[1], img.shape[2]], data)
+}
+
+#[test]
+fn registry_served_logits_bit_identical_to_offline_apply() {
+    let (plan, ckpt) = fixture();
+    let registry = registry_over(&plan, &ckpt, usize::MAX);
+    let lane = RegistryLane::new(Arc::clone(&registry), None);
+    let img = dfmpc::data::synth::render_image(9001, 5, 10).0;
+    let x = batch_of(&img, 3);
+
+    for spec in ["fp32", "dfmpc:2/6", "uniform:4"] {
+        let method = Method::parse(spec).unwrap();
+        let key = format!("tiny32@{}", method.id());
+        // offline: quantize + serial reference engine (the oracle)
+        let qckpt = method.apply(&plan, &ckpt, None).unwrap();
+        let want = Engine::new(&plan, &qckpt).forward(&x).unwrap();
+        // served: lazy prepare through the registry lane
+        let got = lane.infer_batch(&key, x.clone()).unwrap();
+        assert_eq!(want.shape, got.shape, "{spec}");
+        assert_eq!(want.data, got.data, "{spec}: registry-served logits diverged");
+    }
+    let snap = registry.snapshot();
+    assert_eq!(snap.prepared, 3);
+    assert_eq!(snap.variants.len(), 3);
+}
+
+#[test]
+fn one_process_serves_two_variants_concurrently() {
+    let (plan, ckpt) = fixture();
+    let registry = registry_over(&plan, &ckpt, usize::MAX);
+    let fp32_key = "tiny32@fp32".to_string();
+    let dfmpc_key = format!("tiny32@{}", Method::parse("dfmpc:2/6").unwrap().id());
+
+    let lanes = RegistryLane::lanes(&registry, 2, None);
+    let pool = Arc::new(LanePool::start_with_registry(
+        lanes,
+        Arc::clone(&registry),
+        fp32_key.clone(),
+        LanePoolConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 128,
+            input_shape: Some(vec![3, 32, 32]),
+        },
+    ));
+    let mut server = Server::start(
+        "127.0.0.1:0",
+        Arc::clone(&pool),
+        "tiny32".into(),
+        ServerConfig::default(),
+    )
+    .unwrap();
+
+    // per-variant oracles (serial offline path)
+    let img = dfmpc::data::synth::render_image(9001, 0, 10).0;
+    let x = batch_of(&img, 1);
+    let oracle_fp32 = argmax_rows(&Engine::new(&plan, &ckpt).forward(&x).unwrap())[0];
+    let q = Method::parse("dfmpc:2/6").unwrap().apply(&plan, &ckpt, None).unwrap();
+    let oracle_dfmpc = argmax_rows(&Engine::new(&plan, &q).forward(&x).unwrap())[0];
+
+    // interleaved concurrent traffic for both variants; the DF-MPC
+    // variant is prepared lazily by its first request
+    let addr = server.addr;
+    let handles: Vec<_> = (0..12)
+        .map(|i| {
+            let dfmpc_key = dfmpc_key.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let mut req = vec![
+                    ("op", Json::str("classify")),
+                    ("dataset", Json::str("cifar10-sim")),
+                    ("index", Json::num(0.0)),
+                ];
+                if i % 2 == 1 {
+                    req.push(("model", Json::str(dfmpc_key.clone())));
+                }
+                let resp = client.call(&Json::obj(req)).unwrap();
+                assert_eq!(
+                    resp.get("ok").and_then(Json::as_bool),
+                    Some(true),
+                    "request {i} failed: {resp:?}"
+                );
+                (
+                    i % 2 == 1,
+                    resp.get("class").and_then(Json::as_usize).unwrap(),
+                    resp.get("model").and_then(Json::as_str).unwrap().to_string(),
+                )
+            })
+        })
+        .collect();
+    for h in handles {
+        let (is_dfmpc, class, served_by) = h.join().unwrap();
+        if is_dfmpc {
+            assert_eq!(class, oracle_dfmpc, "dfmpc variant misclassified");
+            assert_eq!(served_by, dfmpc_key);
+        } else {
+            assert_eq!(class, oracle_fp32, "fp32 variant misclassified");
+            assert_eq!(served_by, fp32_key);
+        }
+    }
+
+    // status reports per-variant residency and the lazy prepare
+    let mut client = Client::connect(&server.addr).unwrap();
+    let st = client.call(&Json::obj(vec![("op", Json::str("status"))])).unwrap();
+    assert_eq!(st.get("variants_loaded").and_then(Json::as_usize), Some(2));
+    assert_eq!(st.get("default_variant").and_then(Json::as_str), Some(fp32_key.as_str()));
+    assert!(st.get("model_bytes_resident").and_then(Json::as_usize).unwrap_or(0) > 0);
+    assert!(st.get("model_prepares").and_then(Json::as_usize).unwrap_or(0) >= 2);
+    let keys: Vec<String> = st
+        .get("variants")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.req("key").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert!(keys.contains(&fp32_key), "fp32 variant missing from status: {keys:?}");
+    assert!(keys.contains(&dfmpc_key), "dfmpc variant missing from status: {keys:?}");
+
+    // unknown variant: structured rejection at admission
+    let rej = client
+        .call(&Json::obj(vec![
+            ("op", Json::str("classify")),
+            ("model", Json::str("nope@fp32")),
+            ("dataset", Json::str("cifar10-sim")),
+            ("index", Json::num(0.0)),
+        ]))
+        .unwrap();
+    assert_eq!(rej.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(rej.get("error_kind").and_then(Json::as_str), Some("bad_variant"));
+
+    server.stop();
+    pool.stop();
+}
+
+#[test]
+fn concurrent_first_requests_prepare_once() {
+    let (plan, ckpt) = fixture();
+    let registry = registry_over(&plan, &ckpt, usize::MAX);
+    let key = format!("tiny32@{}", Method::parse("dfmpc:2/6").unwrap().id());
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let reg = Arc::clone(&registry);
+            let key = key.clone();
+            std::thread::spawn(move || {
+                let m = reg.get_or_prepare(&key).unwrap();
+                assert_eq!(m.key, key);
+                Arc::as_ptr(&m) as usize
+            })
+        })
+        .collect();
+    let ptrs: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // every caller shares the one prepared instance
+    assert!(ptrs.iter().all(|p| *p == ptrs[0]));
+    let snap = registry.snapshot();
+    assert_eq!(snap.prepared, 1, "concurrent first requests must dedup to one prepare");
+    assert_eq!(snap.hits, 7);
+    assert_eq!(snap.variants.len(), 1);
+}
+
+#[test]
+fn budget_evicts_cold_variant_and_reprepares_on_demand() {
+    let (plan, ckpt) = fixture();
+    // measure one quantized variant's footprint first
+    let probe = registry_over(&plan, &ckpt, usize::MAX);
+    let a_key = "tiny32@uniform:4".to_string();
+    let b_key = "tiny32@uniform:6".to_string();
+    let one = probe.get_or_prepare(&a_key).unwrap().bytes;
+
+    let registry = registry_over(&plan, &ckpt, one + one / 2);
+    let lane = RegistryLane::new(Arc::clone(&registry), None);
+    let img = dfmpc::data::synth::render_image(9001, 2, 10).0;
+    let x = batch_of(&img, 1);
+
+    let a1 = lane.infer_batch(&a_key, x.clone()).unwrap();
+    let _ = lane.infer_batch(&b_key, x.clone()).unwrap();
+    let snap = registry.snapshot();
+    assert_eq!(snap.evicted, 1, "budget must evict the cold variant");
+    assert_eq!(snap.variants.len(), 1);
+    assert_eq!(snap.variants[0].key, b_key);
+    assert!(snap.bytes_resident <= registry.budget_bytes());
+
+    // the evicted variant re-prepares lazily and still serves bit-identical
+    let a2 = lane.infer_batch(&a_key, x).unwrap();
+    assert_eq!(a1.data, a2.data, "re-prepared variant diverged");
+    assert_eq!(registry.snapshot().prepared, 3);
+}
+
+#[test]
+fn bad_variant_rejected_at_admission() {
+    let (plan, ckpt) = fixture();
+    let registry = registry_over(&plan, &ckpt, usize::MAX);
+    let lanes = RegistryLane::lanes(&registry, 1, None);
+    let pool = LanePool::start_with_registry(
+        lanes,
+        Arc::clone(&registry),
+        "tiny32@fp32".into(),
+        LanePoolConfig { input_shape: Some(vec![3, 32, 32]), ..LanePoolConfig::default() },
+    );
+    let img = dfmpc::data::synth::render_image(9001, 1, 10).0;
+    // unknown base model
+    match pool.classify_variant(Some("nope@fp32"), img.clone()) {
+        Err(ServeError::BadVariant { key, .. }) => assert_eq!(key, "nope@fp32"),
+        other => panic!("expected bad_variant, got {other:?}"),
+    }
+    // malformed method spec
+    assert!(matches!(
+        pool.classify_variant(Some("tiny32@bogus:9"), img.clone()),
+        Err(ServeError::BadVariant { .. })
+    ));
+    // missing separator
+    assert!(matches!(
+        pool.classify_variant(Some("tiny32"), img.clone()),
+        Err(ServeError::BadVariant { .. })
+    ));
+    assert_eq!(pool.snapshot().rejected_variant, 3);
+    // the default variant still serves
+    let pred = pool.classify(img.clone()).unwrap();
+    assert!(pred.class < 10);
+    assert_eq!(pred.variant, "tiny32@fp32");
+    // alias spellings canonicalize at admission: both serve the same
+    // resident variant (one prepare) under the canonical key
+    let a = pool.classify_variant(Some("tiny32@dfmpc:2/6"), img.clone()).unwrap();
+    let b = pool.classify_variant(Some("tiny32@dfmpc:2/6:0.5:0"), img).unwrap();
+    assert_eq!(a.variant, "tiny32@dfmpc:2/6:0.5:0");
+    assert_eq!(b.variant, a.variant);
+    assert_eq!(a.class, b.class);
+    let reg = registry.snapshot();
+    let dfmpc_prepares = reg
+        .variants
+        .iter()
+        .filter(|v| v.key.starts_with("tiny32@dfmpc"))
+        .count();
+    assert_eq!(dfmpc_prepares, 1, "alias spellings must share one resident variant");
+    pool.stop();
+}
