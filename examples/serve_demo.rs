@@ -44,7 +44,7 @@ fn main() -> Result<()> {
         "127.0.0.1:0",
         Arc::clone(&pool),
         format!("{id}+{}", method.name()),
-        ServerConfig { max_conns: args.usize("max-conns", 256) },
+        ServerConfig { max_conns: args.usize("max-conns", 256), ..ServerConfig::default() },
     )?;
     println!("server on {} serving {} ({})", server.addr, id, method.name());
 

@@ -21,17 +21,21 @@
 //! to run at load time) and `status` reports per-variant residency.
 //!
 //! Connections beyond `max_conns` are rejected with a one-line
-//! `conn_limit` error before close. Handler threads are tracked (not
-//! detached): they poll the server's stop flag through a read timeout, so
-//! [`Server::stop`] drains and joins every handler in bounded time even
-//! when clients keep their sockets open.
+//! `conn_limit` error before close. Request lines are capped at
+//! `max_request_bytes` (default 8 MB): a client that streams bytes
+//! without ever sending `\n` gets a one-line `bad_request` rejection and
+//! its connection dropped instead of growing the line buffer without
+//! bound. Handler threads are tracked (not detached): they poll the
+//! server's stop flag through a read timeout, so [`Server::stop`] drains
+//! and joins every handler in bounded time even when clients keep their
+//! sockets open.
 
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -47,11 +51,15 @@ const CONN_POLL: Duration = Duration::from_millis(100);
 pub struct ServerConfig {
     /// concurrent connections beyond this are rejected with `conn_limit`
     pub max_conns: usize,
+    /// longest accepted request line in bytes (newline included); a line
+    /// that grows past this gets a `bad_request` rejection and the
+    /// connection dropped, bounding per-connection memory
+    pub max_request_bytes: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_conns: 256 }
+        ServerConfig { max_conns: 256, max_request_bytes: 8 << 20 }
     }
 }
 
@@ -61,6 +69,8 @@ pub struct ServerStats {
     pub errors: AtomicU64,
     pub active_conns: AtomicUsize,
     pub rejected_conns: AtomicU64,
+    /// request lines dropped for exceeding `max_request_bytes`
+    pub oversized_reqs: AtomicU64,
 }
 
 pub struct Server {
@@ -86,6 +96,7 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let max_conns = cfg.max_conns.max(1);
+        let max_request = cfg.max_request_bytes.max(1);
         let (stats2, stop2, conns2) = (Arc::clone(&stats), Arc::clone(&stop), Arc::clone(&conns));
         let handle = thread::Builder::new()
             .name("dfmpc-server".into())
@@ -108,7 +119,8 @@ impl Server {
                             st.active_conns.fetch_add(1, Ordering::Relaxed);
                             let spawned = thread::Builder::new().name("dfmpc-conn".into()).spawn(
                                 move || {
-                                    let _ = handle_conn(stream, &pool, &st, &name, &stop);
+                                    let _ =
+                                        handle_conn(stream, &pool, &st, &name, &stop, max_request);
                                     st.active_conns.fetch_sub(1, Ordering::Relaxed);
                                 },
                             );
@@ -175,6 +187,7 @@ fn handle_conn(
     stats: &ServerStats,
     model_name: &str,
     stop: &AtomicBool,
+    max_request: usize,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_nonblocking(false).ok();
@@ -194,9 +207,22 @@ fn handle_conn(
         if stop.load(Ordering::Relaxed) {
             return Ok(());
         }
-        match reader.read_until(b'\n', &mut buf) {
-            Ok(0) => return Ok(()), // client closed
+        // The cap must bound every read, not just completed lines: bare
+        // `read_until` returns only on newline/EOF/timeout, so a fast
+        // newline-less flood would grow `buf` at line rate without ever
+        // surfacing here (and starve the stop-flag poll). `take` caps
+        // each call one byte past the limit, which the length check
+        // below detects as oversized.
+        let limit = (max_request - buf.len()).saturating_add(1) as u64;
+        match reader.by_ref().take(limit).read_until(b'\n', &mut buf) {
+            Ok(0) if buf.is_empty() => return Ok(()), // client closed
+            // newline found, inner EOF (partial final line — answer it,
+            // the next iteration sees the close), or limit exhausted
+            // (caught as oversized below)
             Ok(_) => {
+                if buf.len() > max_request {
+                    return reject_oversized(&mut reader, &mut stream, stats, stop, max_request);
+                }
                 let line = String::from_utf8_lossy(&buf);
                 let resp = handle_request(line.trim(), pool, stats, model_name);
                 let mut out = resp.dump();
@@ -216,11 +242,55 @@ fn handle_conn(
                 }
                 buf.clear();
             }
-            // timeout poll: partial bytes stay in `buf`; retry
-            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+            // timeout poll: partial bytes stay in `buf` for the next
+            // iteration (the take cap above bounds how many)
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if buf.len() > max_request {
+                    return reject_oversized(&mut reader, &mut stream, stats, stop, max_request);
+                }
+            }
             Err(e) => return Err(e.into()),
         }
     }
+}
+
+/// A request line grew past the cap: count it, send one structured
+/// `bad_request` line, and drop the connection (returning unwinds the
+/// handler, closing the socket). The partial line is unrecoverable — the
+/// client would need to resync on `\n` anyway — so dropping is the only
+/// safe continuation. Before responding, drain what the client already
+/// sent — bounded by a byte budget, a wall-clock deadline, and the stop
+/// flag, never at an attacker's line rate forever — so a
+/// well-behaved-but-oversized client gets an orderly close that delivers
+/// the error instead of an RST discarding it along with the unread
+/// bytes, while `Server::stop` still joins this handler in bounded time.
+fn reject_oversized(
+    reader: &mut BufReader<TcpStream>,
+    stream: &mut TcpStream,
+    stats: &ServerStats,
+    stop: &AtomicBool,
+    max_request: usize,
+) -> Result<()> {
+    stats.oversized_reqs.fetch_add(1, Ordering::Relaxed);
+    let mut discard = [0u8; 8192];
+    let mut budget = max_request.saturating_mul(4);
+    let deadline = Instant::now() + CONN_POLL * 10;
+    while budget > 0 && !stop.load(Ordering::Relaxed) && Instant::now() < deadline {
+        match reader.read(&mut discard) {
+            Ok(0) => break, // client closed its side
+            Ok(n) => budget = budget.saturating_sub(n),
+            Err(_) => break, // timeout (client idle) or broken socket
+        }
+    }
+    let resp = error_json(
+        stats,
+        "bad_request",
+        &format!("request line exceeds {max_request} bytes; connection dropped"),
+    );
+    let mut out = resp.dump();
+    out.push('\n');
+    let _ = stream.write_all(out.as_bytes());
+    Ok(())
 }
 
 fn error_json(stats: &ServerStats, kind: &str, msg: &str) -> Json {
@@ -307,6 +377,7 @@ fn status_json(pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
         ("errors", Json::num(stats.errors.load(Ordering::Relaxed) as f64)),
         ("active_conns", Json::num(stats.active_conns.load(Ordering::Relaxed) as f64)),
         ("rejected_conns", Json::num(stats.rejected_conns.load(Ordering::Relaxed) as f64)),
+        ("oversized_reqs", Json::num(stats.oversized_reqs.load(Ordering::Relaxed) as f64)),
         ("lanes", Json::num(pool.lane_count() as f64)),
         ("queue_depth", Json::num(snap.queue_depth as f64)),
         ("queue_limit", Json::num(pool.queue_limit() as f64)),

@@ -105,7 +105,7 @@ impl Harness {
         let registry = self.registry();
         let key = variant_key(&model.entry.id, &method);
         let (plan, ckpt) = (Arc::clone(&model.plan), Arc::clone(&model.ckpt));
-        registry.register_base(&model.entry.id, plan, ckpt);
+        registry.register_base(&model.entry.id, plan, ckpt)?;
         registry.get_or_prepare(&key)
     }
 

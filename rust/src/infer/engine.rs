@@ -82,7 +82,8 @@ fn conv_exec(
 ) -> Tensor {
     if groups == 1 {
         if let Some(wt) = panels.get(name) {
-            return ops::conv2d_packed(ctx, x, wt, w.shape[0], w.shape[2], stride, pad);
+            debug_assert_eq!(wt.n(), w.shape[0], "panel '{name}' packed for a different filter");
+            return ops::conv2d_packed(ctx, x, wt, w.shape[2], stride, pad);
         }
     }
     ops::conv2d_with(ctx, x, w, stride, pad, groups)

@@ -180,7 +180,7 @@ fn serve(args: &Args) -> Result<()> {
     // the registry over the FP32 base: every served variant — the default
     // and any the wire protocol or --preload names — prepares from it
     let registry = h.new_registry(budget_mb.saturating_mul(1_000_000).max(1));
-    registry.register_base(&model.entry.id, Arc::clone(&model.plan), Arc::clone(&model.ckpt));
+    registry.register_base(&model.entry.id, Arc::clone(&model.plan), Arc::clone(&model.ckpt))?;
     let default_key = variant_key(&model.entry.id, &method);
     let mut preload = vec![default_key.clone()];
     if let Some(list) = args.get("preload") {
@@ -245,7 +245,7 @@ fn serve(args: &Args) -> Result<()> {
         &addr,
         Arc::clone(&pool),
         format!("{}+{}", model.entry.id, method.name()),
-        ServerConfig { max_conns },
+        ServerConfig { max_conns, ..ServerConfig::default() },
     )?;
     // ref lanes canonicalize any alias spelling at admission; PJRT lanes
     // serve exactly the preloaded executables, so the example must be a

@@ -38,6 +38,34 @@ impl Checkpoint {
         self.meta.get(key).and_then(Json::as_f64)
     }
 
+    /// Reject non-finite parameters with an error naming the offending
+    /// tensor. The serving kernels assume finite weights — the GEMM
+    /// microkernel dropped the retired scalar kernel's `a == 0` skip,
+    /// which used to silently mask `0 * inf -> NaN` products — so
+    /// garbage checkpoints are refused at the boundary: file load
+    /// ([`Checkpoint::load`]) and registry base/prepare validation.
+    pub fn validate_finite(&self) -> Result<()> {
+        for (name, t) in &self.tensors {
+            let mut bad = 0usize;
+            let mut first: Option<(usize, f32)> = None;
+            for (i, &v) in t.data.iter().enumerate() {
+                if !v.is_finite() {
+                    bad += 1;
+                    if first.is_none() {
+                        first = Some((i, v));
+                    }
+                }
+            }
+            if let Some((idx, val)) = first {
+                bail!(
+                    "checkpoint tensor '{name}' has {bad} non-finite value(s) \
+                     (first at flat index {idx}: {val})"
+                );
+            }
+        }
+        Ok(())
+    }
+
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening checkpoint {}", path.display()))?;
@@ -86,6 +114,8 @@ impl Checkpoint {
             ck.order.push(name.clone());
             ck.tensors.insert(name, Tensor::new(shape, data));
         }
+        ck.validate_finite()
+            .with_context(|| format!("loading checkpoint {}", path.display()))?;
         Ok(ck)
     }
 
@@ -172,6 +202,28 @@ mod tests {
         assert_eq!(back.meta_str("arch"), Some("tiny"));
         assert!((back.meta_f64("acc").unwrap() - 0.93).abs() < 1e-12);
         std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn validate_finite_names_the_offending_tensor() {
+        let mut ck = Checkpoint::default();
+        ck.put("a.w", Tensor::full(vec![4], 1.0));
+        assert!(ck.validate_finite().is_ok());
+        ck.put("b.w", Tensor::new(vec![3], vec![0.5, f32::NAN, f32::INFINITY]));
+        let err = ck.validate_finite().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("'b.w'") && msg.contains("2 non-finite"), "{msg}");
+    }
+
+    #[test]
+    fn load_rejects_non_finite_tensors() {
+        let mut ck = Checkpoint::default();
+        ck.put("w", Tensor::new(vec![2], vec![1.0, f32::INFINITY]));
+        let path = std::env::temp_dir().join("dfmc_nonfinite.dfmc");
+        ck.save(&path).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

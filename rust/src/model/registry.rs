@@ -31,7 +31,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::quant::Method;
-use crate::tensor::ops::pack_filter;
+use crate::tensor::ops::{pack_filter, PackedB};
 use crate::util::threadpool::ThreadPool;
 use crate::util::Stopwatch;
 
@@ -92,10 +92,11 @@ pub struct RegistrySnapshot {
     pub budget_bytes: usize,
 }
 
-/// Per-conv GEMM-packed filter panels, keyed by conv name. Built once per
-/// variant and shared read-only across every lane (see
-/// [`crate::infer::Engine`]).
-pub type PackedPanels = BTreeMap<String, Vec<f32>>;
+/// Per-conv GEMM-packed filter panels ([`PackedB`] — `GEMM_NR`-wide
+/// column panels of `W^T`, the microkernel's native layout), keyed by
+/// conv name. Built once per variant and shared read-only across every
+/// lane (see [`crate::infer::Engine`]).
+pub type PackedPanels = BTreeMap<String, PackedB>;
 
 /// Pack every dense (`groups == 1`) conv filter of `plan` into its
 /// GEMM-ready transposed panel, fanning the per-layer packs over `pool`.
@@ -142,7 +143,7 @@ fn ckpt_bytes(c: &Checkpoint) -> usize {
 }
 
 fn panels_bytes(p: &PackedPanels) -> usize {
-    p.values().map(|v| v.len() * 4).sum()
+    p.values().map(|v| v.floats() * 4).sum()
 }
 
 enum Slot {
@@ -192,6 +193,21 @@ impl Inner {
     }
 }
 
+/// lru <-> slots invariant (debug builds): every lru key resolves to a
+/// `Ready` slot and every `Ready` slot's key is tracked in the lru.
+fn debug_assert_lru_slots(inner: &Inner) {
+    if cfg!(debug_assertions) {
+        for k in &inner.lru {
+            debug_assert!(
+                matches!(inner.slots.get(k), Some(Slot::Ready(_))),
+                "lru key '{k}' has no Ready slot"
+            );
+        }
+        let ready = inner.slots.values().filter(|s| matches!(s, Slot::Ready(_))).count();
+        debug_assert_eq!(ready, inner.lru.len(), "Ready slot missing from the lru");
+    }
+}
+
 /// Maps variant keys to prepared models over a set of registered FP32
 /// bases. See the module docs for the design.
 pub struct ModelRegistry {
@@ -219,9 +235,19 @@ impl ModelRegistry {
     }
 
     /// Register (or replace) an FP32 base model. Variants of `model_id`
-    /// are prepared from this plan + checkpoint.
-    pub fn register_base(&self, model_id: &str, plan: Arc<Plan>, ckpt: Arc<Checkpoint>) {
+    /// are prepared from this plan + checkpoint. Non-finite weights are
+    /// rejected here, at the boundary — the serving kernels assume
+    /// finite inputs (see [`Checkpoint::validate_finite`]).
+    pub fn register_base(
+        &self,
+        model_id: &str,
+        plan: Arc<Plan>,
+        ckpt: Arc<Checkpoint>,
+    ) -> Result<()> {
+        ckpt.validate_finite()
+            .with_context(|| format!("registering base model '{model_id}'"))?;
         self.bases.lock().unwrap().insert(model_id.to_string(), (plan, ckpt));
+        Ok(())
     }
 
     /// ids of the registered base models.
@@ -333,14 +359,28 @@ impl ModelRegistry {
     }
 
     /// Evict coldest Ready variants (never `keep`) until the budget fits.
+    /// Only the removal of an actual `Ready` slot counts as an eviction —
+    /// an lru entry with no (or a non-Ready) slot is an invariant breach,
+    /// repaired without inflating the counter.
     fn evict_locked(&self, inner: &mut Inner, keep: &str) {
+        debug_assert_lru_slots(inner);
         while inner.bytes > self.budget_bytes {
             let Some(pos) = inner.lru.iter().position(|k| k != keep) else { break };
             let victim = inner.lru.remove(pos);
-            if let Some(Slot::Ready(m)) = inner.slots.remove(&victim) {
-                inner.bytes = inner.bytes.saturating_sub(m.bytes);
+            match inner.slots.remove(&victim) {
+                Some(Slot::Ready(m)) => {
+                    inner.bytes = inner.bytes.saturating_sub(m.bytes);
+                    self.counters.evicted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                // lru/slots breach — debug builds already panicked in
+                // debug_assert_lru_slots above; in release, repair
+                // without counting a phantom eviction (a Preparing
+                // claim belongs to its preparer)
+                Some(other) => {
+                    inner.slots.insert(victim, other);
+                }
+                None => {}
             }
-            self.counters.evicted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
     }
 
@@ -362,6 +402,15 @@ impl ModelRegistry {
                     .with_context(|| format!("preparing variant '{key}'"))?,
             ),
         };
+        // quantization of a finite base must stay finite (a scale over- or
+        // underflow would poison every batch served from these panels);
+        // reject before the variant becomes resident. The shared-base
+        // (fp32) case skips the scan: register_base already validated
+        // that exact checkpoint.
+        if !Arc::ptr_eq(&ckpt, &base_ckpt) {
+            ckpt.validate_finite()
+                .with_context(|| format!("variant '{key}': non-finite weights after quantize"))?;
+        }
         let panels = Arc::new(pack_panels(&plan, &ckpt, self.pool.as_ref()));
         let prepare_ms = sw.millis();
         let shared_base = Arc::ptr_eq(&ckpt, &base_ckpt);
@@ -471,7 +520,7 @@ mod tests {
     fn rejects_unknown_model_and_bad_method() {
         let reg = ModelRegistry::new(usize::MAX, None);
         let (plan, ckpt) = fixture();
-        reg.register_base("tiny", plan, ckpt);
+        reg.register_base("tiny", plan, ckpt).unwrap();
         assert!(reg.get_or_prepare("tiny@fp32").is_ok());
         assert!(reg.get_or_prepare("nope@fp32").is_err());
         assert!(reg.get_or_prepare("tiny@bogus:9").is_err());
@@ -482,7 +531,7 @@ mod tests {
     fn fp32_variant_shares_base_checkpoint() {
         let reg = ModelRegistry::new(usize::MAX, None);
         let (plan, ckpt) = fixture();
-        reg.register_base("tiny", plan, Arc::clone(&ckpt));
+        reg.register_base("tiny", plan, Arc::clone(&ckpt)).unwrap();
         let m = reg.get_or_prepare("tiny@fp32").unwrap();
         assert!(Arc::ptr_eq(&m.ckpt, &ckpt));
         // only the panels are charged for a shared-checkpoint variant
@@ -494,7 +543,7 @@ mod tests {
     fn second_lookup_hits_cache() {
         let reg = ModelRegistry::new(usize::MAX, None);
         let (plan, ckpt) = fixture();
-        reg.register_base("tiny", plan, ckpt);
+        reg.register_base("tiny", plan, ckpt).unwrap();
         let key = format!("tiny@{}", Method::parse("dfmpc:2/6").unwrap().id());
         let a = reg.get_or_prepare(&key).unwrap();
         let b = reg.get_or_prepare(&key).unwrap();
@@ -512,7 +561,7 @@ mod tests {
         // method; the registry must not prepare (or keep resident) twice.
         let reg = ModelRegistry::new(usize::MAX, None);
         let (plan, ckpt) = fixture();
-        reg.register_base("tiny", plan, ckpt);
+        reg.register_base("tiny", plan, ckpt).unwrap();
         let a = reg.get_or_prepare("tiny@dfmpc:2/6").unwrap();
         let b = reg.get_or_prepare("tiny@dfmpc:2/6:0.5:0").unwrap();
         assert!(Arc::ptr_eq(&a, &b), "alias spelling re-prepared the variant");
@@ -531,12 +580,12 @@ mod tests {
         let (plan, ckpt) = fixture();
         // measure one variant's footprint with an unbounded registry
         let probe = ModelRegistry::new(usize::MAX, None);
-        probe.register_base("tiny", Arc::clone(&plan), Arc::clone(&ckpt));
+        probe.register_base("tiny", Arc::clone(&plan), Arc::clone(&ckpt)).unwrap();
         let one = probe.get_or_prepare("tiny@uniform:4").unwrap().bytes;
 
         // budget fits one quantized variant but not two
         let reg = ModelRegistry::new(one + one / 2, None);
-        reg.register_base("tiny", plan, ckpt);
+        reg.register_base("tiny", plan, ckpt).unwrap();
         reg.get_or_prepare("tiny@uniform:4").unwrap();
         reg.get_or_prepare("tiny@uniform:6").unwrap();
         let snap = reg.snapshot();

@@ -38,7 +38,14 @@ pub fn model_size(plan: &Plan, method: &Method) -> SizeReport {
     let weights = weight_numels(plan);
     let total: usize = weights.iter().map(|(_, n, _)| n).sum();
     let fp32_mb = total as f64 * 4.0 / 1e6;
+    // `bits_total` counts the assigned bitwidth over the ORIGINAL numel
+    // (the avg_bits numerator); `stored_bits` is what actually hits disk
+    // (the mb numerator). They only differ for OCS, whose duplicated
+    // channels inflate storage without changing any weight's bitwidth —
+    // charging the expansion to avg_bits used to misreport 4-bit OCS as
+    // 4.2-bit.
     let mut bits_total = 0.0f64;
+    let mut stored_bits = 0.0f64;
     let mut overhead_bits = 0.0f64;
     for (_name, numel, is_low) in &weights {
         let (bits, extra) = match method {
@@ -57,13 +64,16 @@ pub fn model_size(plan: &Plan, method: &Method) -> SizeReport {
             Method::Uniform { bits }
             | Method::Dfq { bits }
             | Method::Omse { bits }
+            | Method::Ocs { bits, .. }
             | Method::ZeroqSim { bits, .. } => (*bits as f64, 32.0),
-            Method::Ocs { bits, expand } => {
-                // channel duplication inflates stored weights
-                ((*bits as f64) * (1.0 + *expand as f64), 32.0)
-            }
+        };
+        // channel duplication inflates stored weights, not their bitwidth
+        let expand = match method {
+            Method::Ocs { expand, .. } => *expand as f64,
+            _ => 0.0,
         };
         bits_total += bits * *numel as f64;
+        stored_bits += bits * (1.0 + expand) * *numel as f64;
         overhead_bits += extra;
     }
     // DF-MPC stores one c per compensated channel (folded into BN, charged).
@@ -75,7 +85,7 @@ pub fn model_size(plan: &Plan, method: &Method) -> SizeReport {
             }
         }
     }
-    let mb = (bits_total + overhead_bits) / 8.0 / 1e6;
+    let mb = (stored_bits + overhead_bits) / 8.0 / 1e6;
     SizeReport { mb, fp32_mb, avg_bits: bits_total / total as f64 }
 }
 
@@ -132,5 +142,25 @@ mod tests {
         let plain = model_size(&p, &Method::Uniform { bits: 4 });
         let ocs = model_size(&p, &Method::Ocs { bits: 4, expand: 0.05 });
         assert!(ocs.mb > plain.mb);
+    }
+
+    #[test]
+    fn ocs_expansion_does_not_inflate_avg_bits() {
+        // regression: avg_bits used to be bits*(1+expand) (= 4.2 for
+        // 4-bit OCS at 5% expansion) because the numerator counted
+        // duplicated channels while the denominator stayed the original
+        // numel. Storage charges the expansion; the bitwidth does not.
+        let p = tiny_plan();
+        let plain = model_size(&p, &Method::Uniform { bits: 4 });
+        let ocs = model_size(&p, &Method::Ocs { bits: 4, expand: 0.05 });
+        assert_eq!(ocs.avg_bits, 4.0, "avg_bits must stay at the nominal bitwidth");
+        assert_eq!(ocs.avg_bits, plain.avg_bits);
+        // mb still charges the duplicated channels, proportionally
+        let weight_mb = |r: &SizeReport, overhead_mb: f64| r.mb - overhead_mb;
+        // 3 tensors x one 32-bit scale each = 12 bytes of overhead
+        let overhead = 12.0 / 1e6;
+        let ratio = weight_mb(&ocs, overhead) / weight_mb(&plain, overhead);
+        // 1e-6 tolerance absorbs the f32->f64 widening of `expand`
+        assert!((ratio - 1.05).abs() < 1e-6, "expansion must charge mb by 1+expand: {ratio}");
     }
 }

@@ -2,17 +2,21 @@
 //!
 //! These are correctness oracles and fallback execution — the production
 //! inference path is the PJRT runtime executing AOT HLO. Conv2d uses
-//! im2col + a tiled GEMM over a pre-packed (transposed) weight panel, and
-//! the hot ops (im2col, GEMM, grouped conv, fc, batchnorm, relu/relu6,
-//! pools, softmax) can be row-partitioned across the shared
+//! im2col + a register-blocked GEMM microkernel over [`PackedB`] weight
+//! panels, and the hot ops (im2col, GEMM, grouped conv, fc, batchnorm,
+//! relu/relu6, pools, softmax) can be row-partitioned across the shared
 //! [`ThreadPool`] via [`ExecCtx`].
 //!
 //! Parity contract: every parallel path runs the *same* kernel as the
 //! serial path on a disjoint row range, and every kernel accumulates in
 //! the same k-order per output element — so serial and N-thread execution
 //! produce bit-identical results (property-tested in
-//! `tests/engine_parallel.rs`). The engine is the numerical oracle for the
-//! PJRT lane; do not introduce order-changing optimizations here.
+//! `tests/engine_parallel.rs`). The GEMM microkernel vectorizes across
+//! *output columns only*, never across k, so it is also bit-identical to
+//! the retired scalar kernel ([`gemm_rows_reference`], kept as the parity
+//! oracle for `tests/proptests.rs` and the before/after bench). The
+//! engine is the numerical oracle for the PJRT lane; do not introduce
+//! order-changing optimizations here.
 
 use std::sync::Arc;
 
@@ -21,11 +25,36 @@ use crate::util::threadpool::ThreadPool;
 
 pub const BN_EPS: f32 = 1e-5;
 
-/// GEMM k-panel height: one panel of the packed weights (`KC * n` floats)
-/// is swept over all row-block rows before moving on, keeping it resident
-/// in L2. Accumulation order per output element is unchanged by the
-/// tiling (k still increases monotonically), so results stay bit-exact.
+/// GEMM k-panel height: one k-slice of the packed weights (`KC * n`
+/// floats) is swept over all row-block rows before moving on, keeping it
+/// resident in L2. Accumulation order per output element is unchanged by
+/// the tiling (k still increases monotonically), so results stay
+/// bit-exact.
 const GEMM_KC: usize = 256;
+
+/// Microkernel register-block height: output rows carried in accumulator
+/// registers per microkernel invocation. Row tails shorter than `MR` run
+/// the same kernel with zero-padded A lanes (the padded rows are never
+/// stored), so there is exactly one accumulation path.
+pub const GEMM_MR: usize = 4;
+
+/// Microkernel register-block width — the SIMD-width unit the kernel
+/// vectorizes over. `B` is packed into `NR`-wide column panels so the
+/// inner loop streams exactly one aligned `NR` row per k step; 8 f32 =
+/// one AVX2 / two SSE2 / two NEON vectors, so the `MR x NR` accumulator
+/// block (8 vector registers on a 128-bit baseline) stays resident in
+/// registers with room for the B row and broadcasts — no spills in the
+/// hot loop even at the default (SSE2-level) target.
+/// The kernel NEVER vectorizes across k: each output element's
+/// k-accumulation stays a single monotone serial chain, which is what
+/// keeps the microkernel bit-identical to the scalar oracle.
+pub const GEMM_NR: usize = 8;
+
+/// Floats needed for the [`PackedB`] panel layout of a `k x n` matrix:
+/// `ceil(n / NR)` panels of `k * NR` floats (tail panel zero-padded).
+pub fn packed_b_len(k: usize, n: usize) -> usize {
+    n.div_ceil(GEMM_NR) * GEMM_NR * k
+}
 
 // ---------------------------------------------------------------------------
 // scratch arena + execution context
@@ -170,13 +199,151 @@ impl ExecCtx {
 // GEMM + im2col kernels (shared by serial and parallel paths)
 // ---------------------------------------------------------------------------
 
+/// The GEMM `B` operand repacked into [`GEMM_NR`]-wide column panels:
+/// panel `p` holds columns `[p*NR, (p+1)*NR)` of the logical `k x n`
+/// matrix as `k` consecutive rows of `NR` floats (the tail panel is
+/// zero-padded past `n`), so the microkernel streams B with unit stride
+/// at exactly SIMD width. Conv filters are packed once per variant by
+/// the model registry and shared read-only across every serving lane.
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    /// inner (reduction) dimension
+    k: usize,
+    /// logical output columns (excluding panel padding)
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack a row-major `k x n` matrix.
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedB {
+        let mut data = vec![0.0f32; packed_b_len(k, n)];
+        pack_b_into(b, k, n, &mut data);
+        PackedB { k, n, data }
+    }
+
+    /// Inner (reduction) dimension.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Logical output columns.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Resident floats, panel padding included (size accounting).
+    pub fn floats(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Pack a row-major `k x n` matrix into the [`PackedB`] panel layout.
+/// Every slot of `out` is written (padding included).
+fn pack_b_into(b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), packed_b_len(k, n));
+    let panels = n.div_ceil(GEMM_NR);
+    for p in 0..panels {
+        let j0 = p * GEMM_NR;
+        let nr = (n - j0).min(GEMM_NR);
+        let dst = &mut out[p * k * GEMM_NR..(p + 1) * k * GEMM_NR];
+        for kk in 0..k {
+            let drow = &mut dst[kk * GEMM_NR..(kk + 1) * GEMM_NR];
+            drow[..nr].copy_from_slice(&b[kk * n + j0..kk * n + j0 + nr]);
+            drow[nr..].fill(0.0);
+        }
+    }
+}
+
 /// C rows `[r0, r1)` of `C = A(m,k) @ B(k,n)` accumulated into `out`,
 /// which the caller must hand over zeroed (`Scratch::take` and
 /// `vec![0.0; ..]` both guarantee that — zeroing here as well would
-/// memset the hot path's largest buffers twice). Sparsity-aware
-/// (post-ReLU activations are ~half zeros) with k-panel tiling;
-/// per-element accumulation order is plain increasing k.
-fn gemm_rows(a: &[f32], b: &[f32], k: usize, n: usize, r0: usize, r1: usize, out: &mut [f32]) {
+/// memset the hot path's largest buffers twice). `bp` is the [`PackedB`]
+/// panel data for B.
+///
+/// Register-blocked `MR x NR` microkernel: an A micropanel (`MR` rows,
+/// interleaved per k step, zero-padded row tails) is packed into a fixed
+/// 4 KB stack block per (row block, k panel), and `MR x NR` accumulators
+/// live in registers for a whole `KC` sweep. Vectorization is across the
+/// `NR` output columns only; per output element the k-accumulation is
+/// one monotone serial chain, with partial sums spilled to `out` exactly
+/// (f32 memory round-trips are lossless) between k panels — i.e. the
+/// same FP operation sequence as [`gemm_rows_reference`], minus that
+/// kernel's `a == 0` skip (which is why checkpoints are validated finite
+/// at load/prepare time: `0 * inf` no longer gets silently dropped).
+fn gemm_rows(a: &[f32], bp: &[f32], k: usize, n: usize, r0: usize, r1: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), (r1 - r0) * n);
+    debug_assert_eq!(bp.len(), packed_b_len(k, n));
+    debug_assert!(out.iter().all(|&v| v == 0.0), "gemm output must be pre-zeroed");
+    let panels = n.div_ceil(GEMM_NR);
+    let mut apanel = [0.0f32; GEMM_MR * GEMM_KC];
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = (k - k0).min(GEMM_KC);
+        let mut i0 = r0;
+        while i0 < r1 {
+            let mr = (r1 - i0).min(GEMM_MR);
+            for kk in 0..kc {
+                for ii in 0..mr {
+                    apanel[kk * GEMM_MR + ii] = a[(i0 + ii) * k + k0 + kk];
+                }
+                for ii in mr..GEMM_MR {
+                    apanel[kk * GEMM_MR + ii] = 0.0;
+                }
+            }
+            for p in 0..panels {
+                let j0 = p * GEMM_NR;
+                let nr = (n - j0).min(GEMM_NR);
+                let pbase = p * k * GEMM_NR;
+                let bpanel = &bp[pbase + k0 * GEMM_NR..pbase + (k0 + kc) * GEMM_NR];
+                // load the current partial sums; padded lanes (row tails,
+                // column tails) start at 0 and are never stored back
+                let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+                for ii in 0..mr {
+                    let row0 = (i0 - r0 + ii) * n + j0;
+                    acc[ii][..nr].copy_from_slice(&out[row0..row0 + nr]);
+                }
+                for kk in 0..kc {
+                    let arow: &[f32; GEMM_MR] =
+                        apanel[kk * GEMM_MR..(kk + 1) * GEMM_MR].try_into().unwrap();
+                    let brow: &[f32; GEMM_NR] =
+                        bpanel[kk * GEMM_NR..(kk + 1) * GEMM_NR].try_into().unwrap();
+                    for ii in 0..GEMM_MR {
+                        let av = arow[ii];
+                        let dst = &mut acc[ii];
+                        for jj in 0..GEMM_NR {
+                            dst[jj] += av * brow[jj];
+                        }
+                    }
+                }
+                for ii in 0..mr {
+                    let row0 = (i0 - r0 + ii) * n + j0;
+                    out[row0..row0 + nr].copy_from_slice(&acc[ii][..nr]);
+                }
+            }
+            i0 += mr;
+        }
+        k0 += kc;
+    }
+}
+
+/// The retired pre-microkernel scalar GEMM: row-major B, k-panel tiling,
+/// axpy inner loop with an `a == 0` skip. Kept ONLY as the parity oracle
+/// for the microkernel proptests (`tests/proptests.rs`) and the
+/// before/after kernel bench (`benches/bench_infer.rs`); nothing on the
+/// engine path calls it. Note the zero-skip silently drops `0 * inf`
+/// products — non-finite weights quantize differently here, which is why
+/// checkpoints are validated finite before they reach either kernel.
+pub fn gemm_rows_reference(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(out.len(), (r1 - r0) * n);
     debug_assert!(out.iter().all(|&v| v == 0.0), "gemm output must be pre-zeroed");
     let mut k0 = 0;
@@ -200,30 +367,36 @@ fn gemm_rows(a: &[f32], b: &[f32], k: usize, n: usize, r0: usize, r1: usize, out
     }
 }
 
-/// C = A(m,k) @ B(k,n), serial (the oracle path).
+/// C = A(m,k) @ B(k,n), serial (the oracle path). Packs B transiently.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.ndim(), 2);
     assert_eq!(b.ndim(), 2);
     let (m, k) = (a.shape[0], a.shape[1]);
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul inner dim mismatch");
+    let mut bp = vec![0.0f32; packed_b_len(k, n)];
+    pack_b_into(&b.data, k, n, &mut bp);
     let mut out = vec![0.0f32; m * n];
-    gemm_rows(&a.data, &b.data, k, n, 0, m, &mut out);
+    gemm_rows(&a.data, &bp, k, n, 0, m, &mut out);
     Tensor::new(vec![m, n], out)
 }
 
 /// C = A(m,k) @ B(k,n), row blocks across the context's pool. Bit-exact
-/// with [`matmul`] (same kernel per row).
+/// with [`matmul`] (same kernel per row). B packs through the scratch
+/// arena, so steady-state callers don't allocate for the panels.
 pub fn matmul_with(ctx: &mut ExecCtx, a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.ndim(), 2);
     assert_eq!(b.ndim(), 2);
     let (m, k) = (a.shape[0], a.shape[1]);
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul inner dim mismatch");
+    let mut bp = ctx.scratch.take(packed_b_len(k, n));
+    pack_b_into(&b.data, k, n, &mut bp);
     let mut out = ctx.scratch.take(m * n);
     ctx.run_rows(m, n, &mut out, 16, |r0, r1, chunk| {
-        gemm_rows(&a.data, &b.data, k, n, r0, r1, chunk);
+        gemm_rows(&a.data, &bp, k, n, r0, r1, chunk);
     });
+    ctx.scratch.put(bp);
     Tensor::new(vec![m, n], out)
 }
 
@@ -282,23 +455,33 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, usize
     (Tensor::new(vec![rows, cols], out), oh, ow)
 }
 
-/// Pack an OIHW filter into the GEMM-ready transposed panel
-/// `(ci*kh*kw, o)`, row-major — the layout the inner GEMM loop streams
-/// with unit stride. The engine caches these per conv layer.
-pub fn pack_filter(w: &Tensor) -> Vec<f32> {
+/// Pack an OIHW filter into the GEMM-ready [`PackedB`] panels of its
+/// transpose `B = W^T` (`k = ci*kh*kw`, `n = o`) without materializing
+/// the transpose. The model registry builds these once per conv layer
+/// and shares them read-only across lanes.
+pub fn pack_filter(w: &Tensor) -> PackedB {
     let (o, cols) = w.flat2d();
-    let mut out = vec![0.0f32; o * cols];
-    pack_filter_into(w, &mut out);
-    out
+    let mut data = vec![0.0f32; packed_b_len(cols, o)];
+    pack_filter_into(w, &mut data);
+    PackedB { k: cols, n: o, data }
 }
 
+/// [`pack_filter`] into a caller-provided buffer (the transient-pack path
+/// recycles it through the scratch arena). Every slot is written.
 fn pack_filter_into(w: &Tensor, out: &mut [f32]) {
     let (o, cols) = w.flat2d();
-    debug_assert_eq!(out.len(), o * cols);
-    for i in 0..o {
-        let wrow = &w.data[i * cols..(i + 1) * cols];
-        for (j, &v) in wrow.iter().enumerate() {
-            out[j * o + i] = v;
+    debug_assert_eq!(out.len(), packed_b_len(cols, o));
+    let panels = o.div_ceil(GEMM_NR);
+    for p in 0..panels {
+        let j0 = p * GEMM_NR;
+        let nr = (o - j0).min(GEMM_NR);
+        let dst = &mut out[p * cols * GEMM_NR..(p + 1) * cols * GEMM_NR];
+        dst.fill(0.0);
+        for jj in 0..nr {
+            let wrow = &w.data[(j0 + jj) * cols..(j0 + jj + 1) * cols];
+            for (kk, &v) in wrow.iter().enumerate() {
+                dst[kk * GEMM_NR + jj] = v;
+            }
         }
     }
 }
@@ -347,12 +530,13 @@ fn conv_plane(
     }
 }
 
-/// im2col + GEMM conv over an already-packed filter panel (`groups == 1`).
+/// im2col + GEMM conv over already-packed filter panels (`groups == 1`).
+/// `wt` is `B = W^T` in panel layout (`wt.n()` = output channels,
+/// `wt.k()` must equal `c * k * k`).
 pub fn conv2d_packed(
     ctx: &mut ExecCtx,
     x: &Tensor,
-    wt: &[f32],
-    o: usize,
+    wt: &PackedB,
     k: usize,
     stride: usize,
     pad: usize,
@@ -362,14 +546,15 @@ pub fn conv2d_packed(
     let ow = (wd + 2 * pad - k) / stride + 1;
     let rows = n * oh * ow;
     let cols = c * k * k;
-    debug_assert_eq!(wt.len(), cols * o);
+    let o = wt.n;
+    assert_eq!(wt.k, cols, "packed filter inner dim {} != im2col cols {cols}", wt.k);
     let mut col = ctx.scratch.take(rows * cols);
     ctx.run_rows(rows, cols, &mut col, 128, |r0, r1, chunk| {
         im2col_rows(x, k, stride, pad, oh, ow, r0, r1, chunk);
     });
     let mut y = ctx.scratch.take(rows * o);
     ctx.run_rows(rows, o, &mut y, 32, |r0, r1, chunk| {
-        gemm_rows(&col, wt, cols, o, r0, r1, chunk);
+        gemm_rows(&col, &wt.data, cols, o, r0, r1, chunk);
     });
     let mut out_data = ctx.scratch.take(n * o * oh * ow);
     nhwc_rows_into_nchw(&y, n, oh, ow, o, &mut out_data);
@@ -394,10 +579,14 @@ pub fn conv2d_with(
     assert_eq!(c / groups, ci, "input channels {c}/{groups} != filter {ci}");
     assert_eq!(o % groups, 0);
     if groups == 1 {
-        let mut wt = ctx.scratch.take(o * ci * kh * kw);
-        pack_filter_into(w, &mut wt);
-        let out = conv2d_packed(ctx, x, &wt, o, kh, stride, pad);
-        ctx.scratch.put(wt);
+        // transient panel pack through the scratch arena (the engine's
+        // steady state uses registry-shared panels instead)
+        let cols = ci * kh * kw;
+        let mut data = ctx.scratch.take(packed_b_len(cols, o));
+        pack_filter_into(w, &mut data);
+        let wt = PackedB { k: cols, n: o, data };
+        let out = conv2d_packed(ctx, x, &wt, kh, stride, pad);
+        ctx.scratch.put(wt.data);
         return out;
     }
     // Grouped/depthwise: direct loops, parallel over (image, channel)
@@ -898,10 +1087,58 @@ mod tests {
         let x = rand_tensor(&mut r, vec![2, 3, 8, 8]);
         let w = rand_tensor(&mut r, vec![5, 3, 3, 3]);
         let wt = pack_filter(&w);
+        assert_eq!(wt.n(), 5);
+        assert_eq!(wt.k(), 27);
         let mut ctx = ExecCtx::serial();
-        let a = conv2d_packed(&mut ctx, &x, &wt, 5, 3, 1, 1);
+        let a = conv2d_packed(&mut ctx, &x, &wt, 3, 1, 1);
         let b = conv2d(&x, &w, 1, 1, 1);
         assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn microkernel_matches_retired_scalar_kernel() {
+        // The rewritten GEMM must equal the retired scalar kernel
+        // bit-for-bit (PartialEq) on finite inputs, including zero-heavy
+        // A rows (the post-ReLU regime the old zero-skip served), row
+        // tails below MR, column tails off the NR grid, and k crossing
+        // the KC panel boundary.
+        let mut r = Rng::new(97);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 300, 1),
+            (3, 257, 17),
+            (5, 256, 15),
+            (GEMM_MR, GEMM_KC + 3, GEMM_NR),
+            (7, 64, 33),
+            (2, 513, 16),
+        ] {
+            let mut a = rand_tensor(&mut r, vec![m, k]);
+            // sprinkle exact zeros so the reference kernel's skip branch
+            // actually fires
+            for v in a.data.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            let b = rand_tensor(&mut r, vec![k, n]);
+            let got = matmul(&a, &b);
+            let mut want = vec![0.0f32; m * n];
+            gemm_rows_reference(&a.data, &b.data, k, n, 0, m, &mut want);
+            assert_eq!(got.data, want, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn packed_b_pads_tail_panel_with_zeros() {
+        let k = 3;
+        let n = GEMM_NR + 5; // one full panel + a 5-wide tail
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32 + 1.0).collect();
+        let pb = PackedB::pack(&b, k, n);
+        assert_eq!(pb.floats(), packed_b_len(k, n));
+        // tail panel, first k-row: 5 real columns then zero padding
+        let tail = &pb.data[k * GEMM_NR..k * GEMM_NR + GEMM_NR];
+        assert_eq!(&tail[..5], &b[GEMM_NR..GEMM_NR + 5]);
+        assert!(tail[5..].iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -249,6 +249,63 @@ fn prop_parallel_kernels_bit_exact() {
 }
 
 #[test]
+fn prop_gemm_microkernel_bit_identical_to_retired_scalar() {
+    // The register-blocked microkernel (PackedB column panels, MR x NR
+    // register tiles, no zero-skip) must reproduce the retired scalar
+    // kernel bit-for-bit (PartialEq per element) on finite inputs for ANY
+    // shape and thread split: per output element both kernels run the
+    // same monotone increasing-k accumulation chain. Shapes deliberately
+    // cover n = 1, NR non-multiples, row tails below MR, and k crossing
+    // the 256-wide KC panel boundary; A carries ~half exact zeros so the
+    // retired kernel's skip branch actually fires.
+    use std::sync::Arc;
+
+    use dfmpc::tensor::ops::{gemm_rows_reference, matmul, matmul_with, ExecCtx, GEMM_MR, GEMM_NR};
+    use dfmpc::util::threadpool::ThreadPool;
+
+    let pools = [Arc::new(ThreadPool::new(1)), Arc::new(ThreadPool::new(5))];
+    let edge_shapes = [
+        (1usize, 1usize, 1usize),
+        (1, 300, 1),
+        (GEMM_MR, 256, GEMM_NR),
+        (GEMM_MR + 1, 257, GEMM_NR - 1),
+        (3, 255, GEMM_NR + 1),
+        (2, 513, 2 * GEMM_NR + 5),
+        (37, 129, 31),
+    ];
+    for case in 0..CASES as usize + edge_shapes.len() {
+        let mut r = Rng::new(1600 + case as u64);
+        let (m, k, n) = if case < edge_shapes.len() {
+            edge_shapes[case]
+        } else {
+            (1 + r.below(96) as usize, 1 + r.below(600) as usize, 1 + r.below(48) as usize)
+        };
+        let mut a = rand_tensor(&mut r, vec![m, k], 1.0);
+        for v in a.data.iter_mut() {
+            // post-ReLU-like sparsity: the regime the old skip served
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let b = rand_tensor(&mut r, vec![k, n], 1.0);
+
+        let mut want = vec![0.0f32; m * n];
+        gemm_rows_reference(&a.data, &b.data, k, n, 0, m, &mut want);
+
+        let serial = matmul(&a, &b);
+        assert_eq!(serial.data, want, "case {case} m={m} k={k} n={n}: serial microkernel");
+        for pool in &pools {
+            let mut ctx = ExecCtx::with_pool(Arc::clone(pool));
+            let got = matmul_with(&mut ctx, &a, &b);
+            assert_eq!(got.data, want, "case {case} m={m} k={k} n={n}: pooled microkernel");
+            // warm rerun through the recycled scratch buffers
+            let again = matmul_with(&mut ctx, &a, &b);
+            assert_eq!(again.data, want, "case {case}: warm rerun diverged");
+        }
+    }
+}
+
+#[test]
 fn prop_elementwise_parallel_bit_exact() {
     // batchnorm / relu / relu6 / pools partitioned over disjoint planes
     // must equal the serial oracle BITWISE for any shape/thread split —

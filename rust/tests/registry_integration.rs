@@ -53,8 +53,24 @@ fn fixture() -> (Arc<Plan>, Arc<Checkpoint>) {
 
 fn registry_over(plan: &Arc<Plan>, ckpt: &Arc<Checkpoint>, budget: usize) -> Arc<ModelRegistry> {
     let reg = Arc::new(ModelRegistry::new(budget, None));
-    reg.register_base("tiny32", Arc::clone(plan), Arc::clone(ckpt));
+    reg.register_base("tiny32", Arc::clone(plan), Arc::clone(ckpt)).unwrap();
     reg
+}
+
+#[test]
+fn non_finite_base_checkpoint_is_rejected_at_registration() {
+    // The GEMM microkernel (unlike the retired scalar kernel's zero-skip)
+    // would propagate 0 * inf = NaN, so garbage weights must never become
+    // servable: registration is the boundary that rejects them.
+    let (plan, ckpt) = fixture();
+    let mut bad = (*ckpt).clone();
+    bad.tensors.get_mut("c1.w").unwrap().data[3] = f32::NEG_INFINITY;
+    let reg = ModelRegistry::new(usize::MAX, None);
+    let err = reg.register_base("tiny32", Arc::clone(&plan), Arc::new(bad)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("non-finite") && msg.contains("c1.w"), "{msg}");
+    // nothing was registered: variant keys for the model stay invalid
+    assert!(reg.get_or_prepare("tiny32@fp32").is_err());
 }
 
 fn batch_of(img: &Tensor, n: usize) -> Tensor {

@@ -5,6 +5,9 @@
 //!   rejections *immediately* while every admitted request still gets a
 //!   correct reply;
 //! - connections past `max_conns` get a one-line `conn_limit` error;
+//! - a request line flooding past `max_request_bytes` without a newline
+//!   gets a one-line `bad_request` rejection and the connection dropped
+//!   (bounded per-connection memory), counted in `ServerStats`;
 //! - bad input shapes fail only the offending request, and mixed-shape
 //!   traffic never corrupts a shared batch;
 //! - shutdown drains the queue without deadlocking.
@@ -226,7 +229,7 @@ fn server_enforces_conn_limit_with_structured_error() {
         "127.0.0.1:0",
         Arc::clone(&pool),
         "tiny32".into(),
-        ServerConfig { max_conns: 2 },
+        ServerConfig { max_conns: 2, ..ServerConfig::default() },
     )
     .unwrap();
 
@@ -265,6 +268,60 @@ fn server_enforces_conn_limit_with_structured_error() {
     server.stop(); // joins tracked handlers; must not deadlock
 }
 
+#[test]
+fn oversized_request_line_is_rejected_and_conn_dropped() {
+    use std::io::{BufRead, BufReader, Read, Write};
+
+    let (plan, ckpt) = fixture();
+    let pool = Arc::new(LanePool::start(
+        vec![slow_lane(&plan, &ckpt, 0)],
+        "tiny32".into(),
+        LanePoolConfig { input_shape: Some(vec![3, 32, 32]), ..LanePoolConfig::default() },
+    ));
+    let cap = 16 * 1024;
+    let mut server = Server::start(
+        "127.0.0.1:0",
+        Arc::clone(&pool),
+        "tiny32".into(),
+        ServerConfig { max_conns: 8, max_request_bytes: cap },
+    )
+    .unwrap();
+
+    // stream 3x the cap without ever sending '\n' — pre-fix this grew the
+    // handler's line buffer without bound (ignore a write error: the
+    // server may already have cut the connection mid-flood)
+    let mut stream = std::net::TcpStream::connect(server.addr).unwrap();
+    let _ = stream.write_all(&vec![b'x'; 3 * cap]);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(resp.get("error_kind").and_then(Json::as_str), Some("bad_request"));
+    assert!(
+        resp.get("error").and_then(Json::as_str).unwrap_or("").contains("request line"),
+        "unexpected error payload: {resp:?}"
+    );
+
+    // the connection is dropped (the partial line cannot be resynced):
+    // EOF, no further responses
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "no further responses expected after the drop");
+    assert_eq!(server.stats.oversized_reqs.load(std::sync::atomic::Ordering::Relaxed), 1);
+
+    // fresh connections still serve, and status surfaces the counter
+    let mut c = Client::connect(&server.addr).unwrap();
+    let st = c.call(&Json::obj(vec![("op", Json::str("status"))])).unwrap();
+    assert_eq!(st.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(st.get("oversized_reqs").and_then(Json::as_usize), Some(1));
+    let (class, _) = c.classify_index("cifar10-sim", 0).unwrap();
+    assert!(class < 10);
+
+    server.stop();
+    pool.stop();
+}
+
 /// Send `status` on a fresh connection; `Some(ok)` on a real response,
 /// `None` when the server rejected the connection (`conn_limit`) or the
 /// socket broke mid-probe.
@@ -295,7 +352,7 @@ fn flooded_server_stays_correct_and_shuts_down() {
         "127.0.0.1:0",
         Arc::clone(&pool),
         "tiny32".into(),
-        ServerConfig { max_conns: 64 },
+        ServerConfig { max_conns: 64, ..ServerConfig::default() },
     )
     .unwrap();
     let oracle = {
