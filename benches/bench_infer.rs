@@ -361,9 +361,45 @@ fn pjrt_comparison() {
     }
 }
 
+/// §Storage evidence: quantized variants are now resident as bit-packed
+/// stores (+ their dequantized GEMM panels), not fake-quant fp32
+/// checkpoints — so a fixed `--model-budget-mb` holds strictly more
+/// low-bit variants. Prints the per-variant residency and the
+/// variants-per-budget ratio, and asserts the packed accounting undercuts
+/// the retired fp32-resident accounting.
+fn packed_capacity() {
+    use dfmpc::quant::Method;
+
+    let plan = Arc::new(Plan::parse(RESNET_STYLE).unwrap());
+    let ckpt = Arc::new(Checkpoint::random_init(&plan, &mut Rng::new(42)));
+    println!("== packed variant residency (uniform:4 on the ResNet-style model) ==");
+    let registry = ModelRegistry::new(usize::MAX, None);
+    registry.register_base("bench", Arc::clone(&plan), Arc::clone(&ckpt)).unwrap();
+    let m = registry.get_or_prepare("bench@uniform:4").unwrap();
+    let offline = Method::parse("uniform:4").unwrap().apply(&plan, &ckpt, None).unwrap();
+    let full_ckpt_bytes: usize = offline.tensors.values().map(|t| t.data.len() * 4).sum();
+    let panel_bytes: usize = m.panels.values().map(|p| p.floats() * 4).sum();
+    let legacy = full_ckpt_bytes + panel_bytes;
+    let packed_bytes = m.packed.as_ref().map_or(0, |p| p.stored_bytes());
+    println!(
+        "    resident: {} B (packed store {} B + runtime residual + panels {} B)",
+        m.bytes, packed_bytes, panel_bytes
+    );
+    println!(
+        "    retired fp32-resident accounting: {legacy} B -> {:.2}x more variants per budget",
+        legacy as f64 / m.bytes as f64
+    );
+    assert!(
+        m.bytes < legacy,
+        "packed residency {} must undercut the fp32-resident {legacy} B",
+        m.bytes
+    );
+}
+
 fn main() {
     reference_engine_scaling();
     gemm_microkernel_ab();
     lane_pool_scaling();
+    packed_capacity();
     pjrt_comparison();
 }

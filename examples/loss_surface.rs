@@ -41,8 +41,8 @@ fn main() -> Result<()> {
         "loss surfaces for {id}: {grid}x{grid} grid, span ±{span}, {images} images (CSV rows below)"
     );
 
-    let before = naive::naive_mixed(&model.plan, &model.ckpt, 2, 6, Some(&h.pool()))?;
-    let (after, _) = dfmpc(&model.plan, &model.ckpt, DfmpcConfig::default(), Some(&h.pool()))?;
+    let (before, _) = naive::naive_mixed(&model.plan, &model.ckpt, 2, 6, Some(&h.pool()))?;
+    let (after, _, _) = dfmpc(&model.plan, &model.ckpt, DfmpcConfig::default(), Some(&h.pool()))?;
 
     let s_fp = loss_surface(&model.plan, &model.ckpt, &model.shard, images, grid, span, 77)?;
     let s_before = loss_surface(&model.plan, &before, &model.shard, images, grid, span, 77)?;

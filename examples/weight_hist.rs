@@ -18,8 +18,9 @@ fn main() -> Result<()> {
     let h = Harness::open()?;
     let model = h.load_model(&id)?;
 
-    let before = naive::naive_mixed(&model.plan, &model.ckpt, 2, 6, Some(&h.pool()))?;
-    let (after, reports) = dfmpc(&model.plan, &model.ckpt, DfmpcConfig::default(), Some(&h.pool()))?;
+    let (before, _) = naive::naive_mixed(&model.plan, &model.ckpt, 2, 6, Some(&h.pool()))?;
+    let (after, reports, _) =
+        dfmpc(&model.plan, &model.ckpt, DfmpcConfig::default(), Some(&h.pool()))?;
 
     for pair in model.plan.pairs.iter().take(n_layers) {
         let name = format!("{}.w", pair.high);

@@ -424,6 +424,7 @@ fn status_json(pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
                             Json::obj(vec![
                                 ("key", Json::str(v.key.clone())),
                                 ("bytes", Json::num(v.bytes as f64)),
+                                ("packed_bytes", Json::num(v.packed_bytes as f64)),
                                 ("prepare_ms", Json::num(v.prepare_ms)),
                             ])
                         })

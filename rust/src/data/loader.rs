@@ -1,4 +1,10 @@
 //! Binary eval-shard loader (DFDS format written by `python/compile/data.py`).
+//!
+//! The file is untrusted input: the header's image-count/extent words are
+//! validated with overflow-checked arithmetic and against the actual file
+//! size *before* any allocation, so a corrupt or hostile shard cannot
+//! demand a multi-GB buffer or overflow the `4·n·c·h·w` product. Every
+//! failure names the shard path.
 
 use std::io::Read;
 use std::path::Path;
@@ -25,26 +31,64 @@ impl EvalShard {
     pub fn load(path: &Path) -> Result<EvalShard> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening shard {}", path.display()))?;
+        let file_len = f
+            .metadata()
+            .with_context(|| format!("stat shard {}", path.display()))?
+            .len();
         let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
+        f.read_exact(&mut magic)
+            .with_context(|| format!("shard {}: truncated magic", path.display()))?;
         if &magic != MAGIC {
             bail!("bad DFDS magic in {}", path.display());
         }
         let mut hdr = [0u8; 24];
-        f.read_exact(&mut hdr)?;
+        f.read_exact(&mut hdr)
+            .with_context(|| format!("shard {}: truncated header", path.display()))?;
         let word = |i: usize| u32::from_le_bytes(hdr[i * 4..i * 4 + 4].try_into().unwrap()) as usize;
         let (ver, n, c, h, w, ncls) = (word(0), word(1), word(2), word(3), word(4), word(5));
         if ver != 1 {
-            bail!("unsupported DFDS version {ver}");
+            bail!("unsupported DFDS version {ver} in {}", path.display());
+        }
+        // Validate the untrusted extents BEFORE allocating: the products
+        // must not overflow and the implied byte count must match the
+        // file that is actually on disk.
+        let numel = n
+            .checked_mul(c)
+            .and_then(|v| v.checked_mul(h))
+            .and_then(|v| v.checked_mul(w))
+            .with_context(|| {
+                format!("shard {}: header extent {n}x{c}x{h}x{w} overflows", path.display())
+            })?;
+        let expected = numel
+            .checked_mul(4)
+            .and_then(|img| n.checked_mul(4).map(|lab| (img, lab)))
+            .and_then(|(img, lab)| img.checked_add(lab))
+            .and_then(|body| body.checked_add(8 + 24))
+            .with_context(|| format!("shard {}: header byte count overflows", path.display()))?;
+        if expected as u64 != file_len {
+            bail!(
+                "shard {}: header claims {expected} bytes ({n}x{c}x{h}x{w}, {ncls} classes) \
+                 but the file has {file_len}",
+                path.display()
+            );
         }
         let mut lab = vec![0u8; 4 * n];
-        f.read_exact(&mut lab)?;
-        let labels: Vec<usize> = lab
-            .chunks_exact(4)
-            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize)
-            .collect();
-        let mut raw = vec![0u8; 4 * n * c * h * w];
-        f.read_exact(&mut raw)?;
+        f.read_exact(&mut lab)
+            .with_context(|| format!("shard {}: truncated label block", path.display()))?;
+        let mut labels = Vec::with_capacity(n);
+        for (i, b) in lab.chunks_exact(4).enumerate() {
+            let raw = i32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            if raw < 0 || raw as usize >= ncls {
+                bail!(
+                    "shard {}: label[{i}] = {raw} outside [0, {ncls}) classes",
+                    path.display()
+                );
+            }
+            labels.push(raw as usize);
+        }
+        let mut raw = vec![0u8; 4 * numel];
+        f.read_exact(&mut raw)
+            .with_context(|| format!("shard {}: truncated image block", path.display()))?;
         let data: Vec<f32> = raw
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
@@ -52,9 +96,12 @@ impl EvalShard {
         Ok(EvalShard { images: Tensor::new(vec![n, c, h, w], data), labels, classes: ncls })
     }
 
-    /// Contiguous image slice [start, start+len) as an owned NCHW tensor.
+    /// Contiguous image slice `[start, start+len)` clamped to the shard:
+    /// an out-of-range `start` yields an empty batch instead of the old
+    /// `len.min(n - start)` index underflow panic.
     pub fn batch(&self, start: usize, len: usize) -> (Tensor, &[usize]) {
         let n = self.n();
+        let start = start.min(n);
         let len = len.min(n - start);
         let per: usize = self.images.shape[1..].iter().product();
         let t = Tensor::new(

@@ -185,7 +185,12 @@ pub fn run_method(
     limit: Option<usize>,
 ) -> Result<MethodRow> {
     let prepared = h.prepare(model, method)?;
-    let size = quant::model_size(&model.plan, &method);
+    // measure the size off the actual packed store when one exists (the
+    // analytic formula is the fallback for fp32, which isn't packed)
+    let size = match prepared.packed.as_deref() {
+        Some(packed) => quant::packed_model_size(&model.plan, &method, packed),
+        None => quant::model_size(&model.plan, &method),
+    };
     let eval = match engine {
         "ref" => eval_prepared(&prepared, &model.shard, batch, limit, Some(h.pool()))?,
         _ => {
@@ -194,7 +199,10 @@ pub fn run_method(
                 .zoo
                 .hlo_for_batch(&model.entry, batch)
                 .context("no HLO artifact (run `make artifacts`)")?;
-            worker.load(&prepared.key, PathBuf::from(hlo), &model.plan, &prepared.ckpt, abatch)?;
+            // the PJRT upload needs every tensor: dequantize the packed
+            // store transiently (fp32 variants share the base Arc)
+            let full = prepared.full_checkpoint();
+            worker.load(&prepared.key, PathBuf::from(hlo), &model.plan, &full, abatch)?;
             eval_pjrt(&worker, &prepared.key, &model.shard, abatch, limit)?
         }
     };

@@ -26,7 +26,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, Result};
 
 use crate::model::registry::{pack_panels, PackedPanels};
-use crate::model::{Checkpoint, ModelRegistry, Op, Plan, PreparedModel};
+use crate::model::{Checkpoint, ConvSpec, ModelRegistry, Op, Plan, PreparedModel};
 use crate::tensor::ops::{self, ExecCtx};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
@@ -69,24 +69,31 @@ impl Default for EngineState {
 /// Dense conv through the shared packed-panel map; grouped convs (and the
 /// fallback when a panel is absent) use `conv2d_with`, which packs
 /// transiently — numerically identical, just without the cached layout.
-#[allow(clippy::too_many_arguments)]
+///
+/// The panel path reads the kernel geometry from the plan's [`ConvSpec`],
+/// not the checkpoint: a registry-prepared packed variant keeps dense-conv
+/// weights *only* in the panels (their dequantized form), so the fp32
+/// tensor may legitimately be absent from the runtime checkpoint.
 fn conv_exec(
     ctx: &mut ExecCtx,
     panels: &PackedPanels,
-    name: &str,
-    w: &Tensor,
-    stride: usize,
-    pad: usize,
-    groups: usize,
+    ckpt: &Checkpoint,
+    spec: &ConvSpec,
     x: &Tensor,
-) -> Tensor {
-    if groups == 1 {
-        if let Some(wt) = panels.get(name) {
-            debug_assert_eq!(wt.n(), w.shape[0], "panel '{name}' packed for a different filter");
-            return ops::conv2d_packed(ctx, x, wt, w.shape[2], stride, pad);
+) -> Result<Tensor> {
+    if spec.groups == 1 {
+        if let Some(wt) = panels.get(&spec.name) {
+            debug_assert_eq!(
+                wt.n(),
+                spec.cout,
+                "panel '{}' packed for a different filter",
+                spec.name
+            );
+            return Ok(ops::conv2d_packed(ctx, x, wt, spec.k, spec.stride, spec.pad));
         }
     }
-    ops::conv2d_with(ctx, x, w, stride, pad, groups)
+    let w = ckpt.get(&format!("{}.w", spec.name))?;
+    Ok(ops::conv2d_with(ctx, x, w, spec.stride, spec.pad, spec.groups))
 }
 
 impl<'a> Engine<'a> {
@@ -180,8 +187,7 @@ impl<'a> Engine<'a> {
         for op in &self.plan.ops {
             match op {
                 Op::Conv(c) => {
-                    let w = self.ckpt.get(&format!("{}.w", c.name))?;
-                    let y = conv_exec(ctx, panels, &c.name, w, c.stride, c.pad, c.groups, &x);
+                    let y = conv_exec(ctx, panels, self.ckpt, c, &x)?;
                     ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
                 Op::Bn(b) => self.bn_apply(ctx, &mut x, &b.name, &mut stats)?,
@@ -197,17 +203,7 @@ impl<'a> Engine<'a> {
                     let shortcut = match down {
                         None => sc.clone(),
                         Some(d) => {
-                            let w = self.ckpt.get(&format!("{}.w", d.conv.name))?;
-                            let mut s = conv_exec(
-                                ctx,
-                                panels,
-                                &d.conv.name,
-                                w,
-                                d.conv.stride,
-                                d.conv.pad,
-                                d.conv.groups,
-                                sc,
-                            );
+                            let mut s = conv_exec(ctx, panels, self.ckpt, &d.conv, sc)?;
                             self.bn_apply(ctx, &mut s, &d.bn.name, &mut stats)?;
                             s
                         }

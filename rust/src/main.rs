@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   info                               list models/datasets in the manifest
-//!   quantize --model ID --method M --out PATH
+//!   quantize --model ID --method M --out PATH [--format f32|packed]
 //!   eval     --model ID --method M [--engine pjrt|ref] [--batch N] [--limit N]
 //!   sweep    --model ID --methods M1,M2,... [--engine ...]
 //!   serve    --model ID --method M [--engine pjrt|ref] [--addr HOST:PORT]
@@ -86,11 +86,25 @@ fn quantize(args: &Args) -> Result<()> {
     let model = h.load_model(args.get("model").context("--model required")?)?;
     let method = Method::parse(args.get_or("method", "dfmpc:2/6"))?;
     let out = args.get("out").context("--out required")?;
-    let q = method.apply(&model.plan, &model.ckpt, Some(&h.pool()))?;
-    q.save(std::path::Path::new(out))?;
-    let size = dfmpc::quant::model_size(&model.plan, &method);
+    let q = method.apply_quantized(&model.plan, &model.ckpt, Some(&h.pool()))?;
+    // --format packed writes the bit-packed DFMQ store (what "quantized"
+    // actually occupies); the default stays the fake-quant f32 DFMC
+    // checkpoint, which the zoo / python path can load directly.
+    let format = args.get_or("format", "f32");
+    let size = match format {
+        "packed" => {
+            let packed = dfmpc::model::PackedCheckpoint::pack(&q.ckpt, &q.grids);
+            packed.save(std::path::Path::new(out))?;
+            dfmpc::quant::packed_model_size(&model.plan, &method, &packed)
+        }
+        "f32" => {
+            q.ckpt.save(std::path::Path::new(out))?;
+            dfmpc::quant::model_size(&model.plan, &method)
+        }
+        other => anyhow::bail!("unknown --format '{other}' (expected 'packed' or 'f32')"),
+    };
     println!(
-        "quantized {} with {} -> {} ({:.3} MB stored, avg {:.2} bits)",
+        "quantized {} with {} -> {} ({:.3} MB stored as {format}, avg {:.2} bits)",
         model.entry.id,
         method.name(),
         out,
@@ -233,8 +247,11 @@ fn serve(args: &Args) -> Result<()> {
         let workers = PjrtWorker::spawn_lanes(n_lanes)?;
         for key in &preload {
             let prepared = registry.get_or_prepare(key)?;
+            // the device upload needs every tensor: dequantize the packed
+            // store transiently (fp32 shares the base checkpoint Arc)
+            let full = prepared.full_checkpoint();
             for w in &workers {
-                w.load(&prepared.key, hlo.to_path_buf(), &model.plan, &prepared.ckpt, abatch)?;
+                w.load(&prepared.key, hlo.to_path_buf(), &model.plan, &full, abatch)?;
             }
         }
         let lanes: Vec<Arc<dyn InferBackend>> =

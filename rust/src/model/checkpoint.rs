@@ -1,5 +1,18 @@
-//! DFMC checkpoint IO — binary format shared with
-//! `python/compile/checkpoint.py` (see that file for the layout).
+//! Checkpoint IO.
+//!
+//! Two binary formats, both `magic | version(u32) | header-len(u64) |
+//! JSON header | payload`:
+//! - **DFMC** ([`Checkpoint`]): plain f32 tensors, shared with
+//!   `python/compile/checkpoint.py` (see that file for the layout).
+//! - **DFMQ** ([`PackedCheckpoint`]): bit-packed low-bit variants
+//!   ([`QTensor`] per tensor — grid indices + scales — with fp32
+//!   fallback), what a quantized model actually occupies on disk and in
+//!   the registry's byte budget.
+//!
+//! Both loaders treat the file as untrusted: header lengths are checked
+//! against the real file size before allocating, tensor extents use
+//! overflow-checked arithmetic, and every payload slice is bounds-checked
+//! with an error naming the offending tensor and path.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -7,12 +20,82 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::tensor::qtensor::{checked_numel, ChanScale, GridMap, QTensor};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 pub const MAGIC: &[u8; 8] = b"DFMC1\x00\x00\x00";
+pub const PACKED_MAGIC: &[u8; 8] = b"DFMQ1\x00\x00\x00";
 const ALIGN: usize = 16;
+
+/// Read and validate the shared `magic | version | header | payload`
+/// envelope, rejecting header lengths that exceed the actual file size
+/// *before* allocating for them.
+fn read_envelope(path: &Path, magic_want: &[u8; 8], kind: &str) -> Result<(Json, Vec<u8>)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {kind} {}", path.display()))?;
+    let file_len = f
+        .metadata()
+        .with_context(|| format!("stat {kind} {}", path.display()))?
+        .len();
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)
+        .with_context(|| format!("{kind} {}: truncated magic", path.display()))?;
+    if &magic != magic_want {
+        bail!("bad {kind} magic in {}", path.display());
+    }
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)
+        .with_context(|| format!("{kind} {}: truncated version", path.display()))?;
+    let version = u32::from_le_bytes(b4);
+    if version != 1 {
+        bail!("unsupported {kind} version {version} in {}", path.display());
+    }
+    let mut b8 = [0u8; 8];
+    f.read_exact(&mut b8)
+        .with_context(|| format!("{kind} {}: truncated header length", path.display()))?;
+    let hlen = u64::from_le_bytes(b8);
+    if 20u64.checked_add(hlen).map_or(true, |end| end > file_len) {
+        bail!(
+            "{kind} {}: header claims {hlen} bytes but the file has {file_len}",
+            path.display()
+        );
+    }
+    let mut hbuf = vec![0u8; hlen as usize];
+    f.read_exact(&mut hbuf)
+        .with_context(|| format!("{kind} {}: truncated header", path.display()))?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)
+        .map_err(|e| anyhow::anyhow!("{kind} {} header: {e}", path.display()))?;
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)
+        .with_context(|| format!("{kind} {}: reading payload", path.display()))?;
+    Ok((header, payload))
+}
+
+/// Bounds-checked payload slice for one tensor entry.
+fn payload_slice<'a>(
+    payload: &'a [u8],
+    offset: usize,
+    nbytes: usize,
+    name: &str,
+    path: &Path,
+) -> Result<&'a [u8]> {
+    match offset.checked_add(nbytes) {
+        Some(end) if end <= payload.len() => Ok(&payload[offset..end]),
+        _ => bail!(
+            "tensor '{name}' [{offset}, {offset}+{nbytes}) out of payload bounds ({} bytes) in {}",
+            payload.len(),
+            path.display()
+        ),
+    }
+}
+
+fn le_f32s(raw: &[u8]) -> Vec<f32> {
+    raw.chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
+}
 
 /// A named-tensor store plus free-form metadata.
 #[derive(Clone, Debug, Default)]
@@ -67,29 +150,7 @@ impl Checkpoint {
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::fs::File::open(path)
-            .with_context(|| format!("opening checkpoint {}", path.display()))?;
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("bad DFMC magic in {}", path.display());
-        }
-        let mut b4 = [0u8; 4];
-        f.read_exact(&mut b4)?;
-        let version = u32::from_le_bytes(b4);
-        if version != 1 {
-            bail!("unsupported DFMC version {version}");
-        }
-        let mut b8 = [0u8; 8];
-        f.read_exact(&mut b8)?;
-        let hlen = u64::from_le_bytes(b8) as usize;
-        let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf)?;
-        let header = Json::parse(std::str::from_utf8(&hbuf)?)
-            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
-        let mut payload = Vec::new();
-        f.read_to_end(&mut payload)?;
-
+        let (header, payload) = read_envelope(path, MAGIC, "checkpoint")?;
         let mut ck = Checkpoint {
             meta: header.get("meta").cloned().unwrap_or(Json::Null),
             ..Default::default()
@@ -103,16 +164,14 @@ impl Checkpoint {
             if dtype != "f32" {
                 bail!("unsupported dtype {dtype}");
             }
-            if offset + nbytes > payload.len() {
-                bail!("tensor '{name}' out of payload bounds");
+            let numel = checked_numel(&shape)
+                .with_context(|| format!("tensor '{name}': shape {shape:?} overflows"))?;
+            if numel.checked_mul(4) != Some(nbytes) {
+                bail!("tensor '{name}': nbytes {nbytes} != 4 * numel {numel}");
             }
-            let raw = &payload[offset..offset + nbytes];
-            let data: Vec<f32> = raw
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                .collect();
+            let raw = payload_slice(&payload, offset, nbytes, &name, path)?;
             ck.order.push(name.clone());
-            ck.tensors.insert(name, Tensor::new(shape, data));
+            ck.tensors.insert(name, Tensor::new(shape, le_f32s(raw)));
         }
         ck.validate_finite()
             .with_context(|| format!("loading checkpoint {}", path.display()))?;
@@ -184,6 +243,201 @@ impl Checkpoint {
     }
 }
 
+/// A checkpoint in packed low-bit storage: one [`QTensor`] per tensor.
+/// This is what a quantized variant actually occupies — on disk (DFMQ
+/// format) and resident in the registry's byte budget — instead of the
+/// fake-quant fp32 [`Checkpoint`]. [`PackedCheckpoint::dequantize`]
+/// reconstructs that fp32 checkpoint bit-identically (pack-time verified,
+/// see [`QTensor::pack`]).
+#[derive(Clone, Debug, Default)]
+pub struct PackedCheckpoint {
+    pub tensors: BTreeMap<String, QTensor>,
+    /// insertion order of tensors as written (= model param order)
+    pub order: Vec<String>,
+    pub meta: Json,
+}
+
+impl PackedCheckpoint {
+    /// Pack a fake-quant checkpoint using the grid metadata its quantizer
+    /// emitted. Tensors without metadata (BN statistics, biases) and any
+    /// tensor with an off-grid element store as fp32.
+    pub fn pack(ckpt: &Checkpoint, grids: &GridMap) -> PackedCheckpoint {
+        let mut tensors = BTreeMap::new();
+        for name in &ckpt.order {
+            let Some(t) = ckpt.tensors.get(name) else { continue };
+            let q = match grids.get(name) {
+                Some(meta) => QTensor::pack(t, meta),
+                None => QTensor::Fp32(t.clone()),
+            };
+            tensors.insert(name.clone(), q);
+        }
+        PackedCheckpoint { tensors, order: ckpt.order.clone(), meta: ckpt.meta.clone() }
+    }
+
+    /// Reconstruct the fake-quant fp32 checkpoint, bit-identical to what
+    /// [`PackedCheckpoint::pack`] consumed.
+    pub fn dequantize(&self) -> Checkpoint {
+        let mut ck = Checkpoint { meta: self.meta.clone(), ..Default::default() };
+        for name in &self.order {
+            if let Some(q) = self.tensors.get(name) {
+                ck.put(name, q.dequantize());
+            }
+        }
+        ck
+    }
+
+    pub fn get(&self, name: &str) -> Result<&QTensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("packed checkpoint missing tensor '{name}'"))
+    }
+
+    /// Actual stored byte footprint (payloads + per-tensor scales and
+    /// channel factors) — what the registry's LRU budget charges.
+    pub fn stored_bytes(&self) -> usize {
+        self.tensors.values().map(QTensor::stored_bytes).sum()
+    }
+
+    /// How many tensors are on an integer grid (vs the fp32 fallback).
+    pub fn packed_count(&self) -> usize {
+        self.tensors.values().filter(|q| q.is_packed()).count()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut entries = Vec::new();
+        let mut payload: Vec<u8> = Vec::new();
+        for name in &self.order {
+            let q = self.get(name)?;
+            let offset = payload.len();
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("name", Json::str(name.clone())),
+                ("shape", Json::arr_usize(q.shape())),
+                ("offset", Json::num(offset as f64)),
+            ];
+            match q {
+                QTensor::Fp32(t) => {
+                    for v in &t.data {
+                        payload.extend_from_slice(&v.to_le_bytes());
+                    }
+                    fields.push(("enc", Json::str("f32")));
+                    fields.push(("nbytes", Json::num((t.data.len() * 4) as f64)));
+                }
+                QTensor::Ternary { alpha, codes, .. } => {
+                    payload.extend_from_slice(codes);
+                    fields.push(("enc", Json::str("tern")));
+                    fields.push(("nbytes", Json::num(codes.len() as f64)));
+                    fields.push(("alpha", Json::num(*alpha as f64)));
+                }
+                QTensor::Grid { bits, scale, idx, chan, .. } => {
+                    payload.extend_from_slice(idx);
+                    fields.push(("enc", Json::str("grid")));
+                    fields.push(("nbytes", Json::num(idx.len() as f64)));
+                    fields.push(("bits", Json::num(*bits as f64)));
+                    fields.push(("scale", Json::num(*scale as f64)));
+                    if let Some(c) = chan {
+                        let foffset = payload.len();
+                        for f in &c.factors {
+                            payload.extend_from_slice(&f.to_le_bytes());
+                        }
+                        fields.push(("chan_axis", Json::num(c.axis as f64)));
+                        fields.push(("chan_offset", Json::num(c.offset as f64)));
+                        fields.push(("chan_foffset", Json::num(foffset as f64)));
+                        fields.push(("chan_flen", Json::num(c.factors.len() as f64)));
+                    }
+                }
+            }
+            let pad = (ALIGN - payload.len() % ALIGN) % ALIGN;
+            payload.extend(std::iter::repeat(0u8).take(pad));
+            entries.push(Json::obj(fields));
+        }
+        let header = Json::obj(vec![
+            ("meta", self.meta.clone()),
+            ("tensors", Json::Arr(entries)),
+        ])
+        .dump();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(PACKED_MAGIC)?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        f.write_all(&payload)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<PackedCheckpoint> {
+        let (header, payload) = read_envelope(path, PACKED_MAGIC, "packed checkpoint")?;
+        let mut out = PackedCheckpoint {
+            meta: header.get("meta").cloned().unwrap_or(Json::Null),
+            ..Default::default()
+        };
+        for e in header.req("tensors")?.as_arr().context("tensors")? {
+            let name = e.req("name")?.as_str().context("name")?.to_string();
+            let shape = e.req("shape")?.usize_vec().context("shape")?;
+            let offset = e.req("offset")?.as_usize().context("offset")?;
+            let nbytes = e.req("nbytes")?.as_usize().context("nbytes")?;
+            let enc = e.req("enc")?.as_str().context("enc")?;
+            let numel = checked_numel(&shape)
+                .with_context(|| format!("tensor '{name}': shape {shape:?} overflows"))?;
+            let raw = payload_slice(&payload, offset, nbytes, &name, path)?;
+            let q = match enc {
+                "f32" => {
+                    if numel.checked_mul(4) != Some(nbytes) {
+                        bail!("tensor '{name}': nbytes {nbytes} != 4 * numel {numel}");
+                    }
+                    let data = le_f32s(raw);
+                    // grid/ternary tensors dequantize finite by
+                    // construction (finite scale/alpha/factors, bounded
+                    // indices); the fp32 fallback needs the same
+                    // non-finite rejection the DFMC loader applies
+                    if let Some(bad) = data.iter().find(|v| !v.is_finite()) {
+                        bail!(
+                            "tensor '{name}' in {}: non-finite value {bad}",
+                            path.display()
+                        );
+                    }
+                    QTensor::Fp32(Tensor::new(shape, data))
+                }
+                "tern" => {
+                    let alpha = e.req("alpha")?.as_f64().context("alpha")? as f32;
+                    QTensor::Ternary { shape, alpha, codes: raw.to_vec() }
+                }
+                "grid" => {
+                    let bits = e
+                        .req("bits")?
+                        .as_u64()
+                        .and_then(|b| u32::try_from(b).ok())
+                        .with_context(|| format!("tensor '{name}': bad grid bitwidth"))?;
+                    let scale = e.req("scale")?.as_f64().context("scale")? as f32;
+                    let chan = match e.get("chan_axis") {
+                        None => None,
+                        Some(axis) => {
+                            let axis = axis.as_usize().context("chan_axis")?;
+                            let coff = e.req("chan_offset")?.as_usize().context("chan_offset")?;
+                            let foffset =
+                                e.req("chan_foffset")?.as_usize().context("chan_foffset")?;
+                            let flen = e.req("chan_flen")?.as_usize().context("chan_flen")?;
+                            let fbytes = flen.checked_mul(4).with_context(|| {
+                                format!("tensor '{name}': channel factor count overflows")
+                            })?;
+                            let fraw = payload_slice(&payload, foffset, fbytes, &name, path)?;
+                            Some(ChanScale { axis, offset: coff, factors: le_f32s(fraw) })
+                        }
+                    };
+                    QTensor::Grid { shape, bits, scale, idx: raw.to_vec(), chan }
+                }
+                other => bail!("tensor '{name}': unsupported encoding '{other}'"),
+            };
+            q.validate().map_err(|why| {
+                anyhow::anyhow!("tensor '{name}' in {}: {why}", path.display())
+            })?;
+            out.order.push(name.clone());
+            out.tensors.insert(name, q);
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,5 +486,86 @@ mod tests {
         std::fs::write(&dir, b"NOTDFMC!rest").unwrap();
         assert!(Checkpoint::load(&dir).is_err());
         std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn rejects_header_longer_than_file() {
+        // a hostile header length must be refused before allocation
+        let path = std::env::temp_dir().join("dfmc_huge_header.dfmc");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("header claims"), "{err:#}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn packed_roundtrip_via_disk() {
+        use crate::tensor::qtensor::GridMeta;
+        let mut ck = Checkpoint::default();
+        ck.put("a.w", Tensor::new(vec![2, 2], vec![1.0, -1.0, 0.0, 1.0]));
+        ck.put("b.gamma", Tensor::full(vec![3], 1.25));
+        ck.meta = Json::obj(vec![("arch", Json::str("tiny"))]);
+        let mut grids = GridMap::new();
+        grids.insert("a.w".into(), GridMeta::Ternary { alpha: 1.0 });
+        let packed = PackedCheckpoint::pack(&ck, &grids);
+        assert_eq!(packed.packed_count(), 1);
+        assert!(packed.stored_bytes() < 4 * 4 + 3 * 4);
+
+        let path = std::env::temp_dir().join("dfmq_roundtrip.dfmq");
+        packed.save(&path).unwrap();
+        let back = PackedCheckpoint::load(&path).unwrap();
+        assert_eq!(back.order, packed.order);
+        for name in &packed.order {
+            assert_eq!(back.tensors[name], packed.tensors[name], "{name}");
+        }
+        let deq = back.dequantize();
+        assert_eq!(deq.get("a.w").unwrap(), ck.get("a.w").unwrap());
+        assert_eq!(deq.get("b.gamma").unwrap(), ck.get("b.gamma").unwrap());
+        assert_eq!(deq.meta_str("arch"), Some("tiny"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn packed_load_rejects_non_finite_fp32_payload() {
+        // the DFMQ loader must reject NaN/inf in fp32-fallback tensors
+        // exactly like the DFMC loader does
+        let mut ck = Checkpoint::default();
+        ck.put("w", Tensor::new(vec![2], vec![1.0, 2.0]));
+        let packed = PackedCheckpoint::pack(&ck, &GridMap::new());
+        let path = std::env::temp_dir().join("dfmq_nonfinite.dfmq");
+        packed.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // overwrite the second f32 of the payload (file tail) with inf
+        let off = bytes.len() - 12; // 16-byte-aligned payload, 2nd float
+        bytes[off..off + 4].copy_from_slice(&f32::INFINITY.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = PackedCheckpoint::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("non-finite") && msg.contains("'w'"), "{msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn packed_load_rejects_truncation_and_bad_bounds() {
+        let mut ck = Checkpoint::default();
+        ck.put("w", Tensor::new(vec![8], (0..8).map(|i| i as f32).collect()));
+        let packed = PackedCheckpoint::pack(&ck, &GridMap::new());
+        let path = std::env::temp_dir().join("dfmq_truncated.dfmq");
+        packed.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // cut the payload short: the bounds check must name the tensor
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        let err = PackedCheckpoint::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("'w'") && msg.contains("out of payload bounds"), "{msg}");
+        // cut inside the header: truncation error names the path
+        std::fs::write(&path, &full[..12]).unwrap();
+        let err = PackedCheckpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        std::fs::remove_file(path).ok();
     }
 }

@@ -6,6 +6,6 @@ pub mod plan;
 pub mod registry;
 pub mod zoo;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, PackedCheckpoint};
 pub use plan::{ConvSpec, Op, Pair, Plan};
 pub use registry::{pack_panels, ModelRegistry, PackedPanels, PreparedModel};

@@ -149,7 +149,13 @@ impl Plan {
                 Ok(Pair {
                     low: p.req("low")?.as_str().context("low")?.to_string(),
                     high: p.req("high")?.as_str().context("high")?.to_string(),
-                    offset: p.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                    // default only when ABSENT: a present-but-malformed
+                    // offset must error, not silently compensate the
+                    // wrong channel slice (Eq. 7)
+                    offset: match p.get("offset") {
+                        None => 0,
+                        Some(v) => v.as_usize().context("pair offset")?,
+                    },
                 })
             })
             .collect::<Result<Vec<_>>>()?;

@@ -35,7 +35,7 @@ use crate::tensor::ops::{pack_filter, PackedB};
 use crate::util::threadpool::ThreadPool;
 use crate::util::Stopwatch;
 
-use super::{Checkpoint, Plan};
+use super::{Checkpoint, PackedCheckpoint, Plan};
 
 /// Counters for a [`ModelRegistry`]: how variants were resolved (cache
 /// hit vs prepared on demand), how many were evicted by the byte budget,
@@ -72,8 +72,11 @@ impl RegistryCounters {
 pub struct VariantSnapshot {
     /// variant key, `"<model>@<method-id>"`
     pub key: String,
-    /// resident byte estimate (checkpoint + packed panels)
+    /// resident bytes (packed store + runtime residual + GEMM panels)
     pub bytes: usize,
+    /// bytes of the bit-packed low-bit store (0 for fp32 variants, which
+    /// share the base checkpoint instead)
+    pub packed_bytes: usize,
     /// how long this variant took to prepare, milliseconds
     pub prepare_ms: f64,
 }
@@ -119,6 +122,15 @@ pub fn pack_panels(plan: &Plan, ckpt: &Checkpoint, pool: Option<&Arc<ThreadPool>
 
 /// One immutable, fully prepared model variant: everything a serving lane
 /// needs to execute batches, shareable read-only across lanes.
+///
+/// Quantized variants keep their weights **bit-packed**
+/// ([`PackedCheckpoint`]): the dense-conv weights exist in f32 only
+/// inside the GEMM panels (their dequantized execution form, built at
+/// prepare), and the runtime checkpoint retains just what the engine
+/// reads per forward — BN statistics, biases, fc and grouped-conv
+/// weights. `bytes` therefore charges what is actually resident, which is
+/// how a fixed `--model-budget-mb` now holds several times more low-bit
+/// variants than when every variant was a fake-quant fp32 checkpoint.
 pub struct PreparedModel {
     /// variant key, `"<model>@<method-id>"`
     pub key: String,
@@ -127,15 +139,35 @@ pub struct PreparedModel {
     /// the quantization method this variant was prepared with
     pub method: Method,
     pub plan: Arc<Plan>,
-    /// quantized checkpoint (the base FP32 `Arc` itself for `fp32`)
+    /// runtime checkpoint for the engines: for packed variants the
+    /// dense-conv weights with panels are dropped (the panels ARE their
+    /// dequantized form); fp32 shares the base checkpoint `Arc`
     pub ckpt: Arc<Checkpoint>,
+    /// the authoritative bit-packed store (`None` for fp32 — the base
+    /// checkpoint is already the storage form)
+    pub packed: Option<Arc<PackedCheckpoint>>,
     /// GEMM-packed filter panels, built once for all lanes
     pub panels: Arc<PackedPanels>,
-    /// resident byte estimate (checkpoint + panels; the shared FP32 base
-    /// checkpoint is charged to the base registration, not the variant)
+    /// resident bytes: packed store + runtime residual checkpoint +
+    /// panels (the shared FP32 base checkpoint is charged to the base
+    /// registration, not the variant)
     pub bytes: usize,
     /// how long the prepare (quantize + pack) took, milliseconds
     pub prepare_ms: f64,
+}
+
+impl PreparedModel {
+    /// The complete fp32 checkpoint (every tensor) for consumers that
+    /// need the whole model — the PJRT upload path, offline export.
+    /// Packed variants dequantize transiently (bit-identical to the
+    /// fake-quant checkpoint the quantizer produced); fp32 variants
+    /// return the shared base `Arc`.
+    pub fn full_checkpoint(&self) -> Arc<Checkpoint> {
+        match &self.packed {
+            Some(p) => Arc::new(p.dequantize()),
+            None => Arc::clone(&self.ckpt),
+        }
+    }
 }
 
 fn ckpt_bytes(c: &Checkpoint) -> usize {
@@ -144,6 +176,30 @@ fn ckpt_bytes(c: &Checkpoint) -> usize {
 
 fn panels_bytes(p: &PackedPanels) -> usize {
     p.values().map(|v| v.floats() * 4).sum()
+}
+
+/// The runtime residual of a packed variant: every tensor except the
+/// dense-conv weights whose dequantized form lives in the GEMM panels.
+/// Built by copying only the kept (small) tensors — cloning the whole
+/// checkpoint first would transiently duplicate the dominant conv
+/// weights during an already allocation-heavy prepare.
+fn strip_paneled_weights(plan: &Plan, full: &Checkpoint, panels: &PackedPanels) -> Checkpoint {
+    let skip: std::collections::BTreeSet<String> = plan
+        .convs()
+        .into_iter()
+        .filter(|(name, spec)| spec.groups == 1 && panels.contains_key(name))
+        .map(|(name, _)| format!("{name}.w"))
+        .collect();
+    let mut out = Checkpoint { meta: full.meta.clone(), ..Default::default() };
+    for name in &full.order {
+        if skip.contains(name) {
+            continue;
+        }
+        if let Some(t) = full.tensors.get(name) {
+            out.put(name, t.clone());
+        }
+    }
+    out
 }
 
 enum Slot {
@@ -393,35 +449,47 @@ impl ModelRegistry {
             .map(|(p, c)| (Arc::clone(p), Arc::clone(c)))
             .with_context(|| format!("model '{model_id}' is not registered"))?;
         let sw = Stopwatch::start();
-        let ckpt = match method {
+        let (full, packed) = match method {
             // fp32 shares the base checkpoint — no copy, no extra bytes
-            Method::Fp32 => Arc::clone(&base_ckpt),
-            _ => Arc::new(
-                method
-                    .apply(&plan, &base_ckpt, self.pool.as_ref())
-                    .with_context(|| format!("preparing variant '{key}'"))?,
-            ),
+            Method::Fp32 => (Arc::clone(&base_ckpt), None),
+            _ => {
+                let q = method
+                    .apply_quantized(&plan, &base_ckpt, self.pool.as_ref())
+                    .with_context(|| format!("preparing variant '{key}'"))?;
+                // quantization of a finite base must stay finite (a scale
+                // over- or underflow would poison every batch served from
+                // these panels); reject before the variant becomes
+                // resident. The shared-base (fp32) case skips the scan:
+                // register_base already validated that exact checkpoint.
+                q.ckpt.validate_finite().with_context(|| {
+                    format!("variant '{key}': non-finite weights after quantize")
+                })?;
+                let packed = PackedCheckpoint::pack(&q.ckpt, &q.grids);
+                (Arc::new(q.ckpt), Some(Arc::new(packed)))
+            }
         };
-        // quantization of a finite base must stay finite (a scale over- or
-        // underflow would poison every batch served from these panels);
-        // reject before the variant becomes resident. The shared-base
-        // (fp32) case skips the scan: register_base already validated
-        // that exact checkpoint.
-        if !Arc::ptr_eq(&ckpt, &base_ckpt) {
-            ckpt.validate_finite()
-                .with_context(|| format!("variant '{key}': non-finite weights after quantize"))?;
-        }
-        let panels = Arc::new(pack_panels(&plan, &ckpt, self.pool.as_ref()));
+        let panels = Arc::new(pack_panels(&plan, &full, self.pool.as_ref()));
+        // Packed variants drop the fp32 dense-conv weights from the
+        // runtime checkpoint: the panels are their (bit-identical)
+        // dequantized execution form, and the packed store remains the
+        // authoritative copy. What's left is what the engine reads per
+        // forward: BN statistics, biases, fc and grouped-conv weights.
+        let ckpt = match &packed {
+            Some(_) => Arc::new(strip_paneled_weights(&plan, &full, &panels)),
+            None => full,
+        };
         let prepare_ms = sw.millis();
         let shared_base = Arc::ptr_eq(&ckpt, &base_ckpt);
-        let bytes =
-            panels_bytes(&panels) + if shared_base { 0 } else { ckpt_bytes(&ckpt) };
+        let bytes = panels_bytes(&panels)
+            + if shared_base { 0 } else { ckpt_bytes(&ckpt) }
+            + packed.as_ref().map_or(0, |p| p.stored_bytes());
         Ok(PreparedModel {
             key: key.to_string(),
             model_id: model_id.to_string(),
             method,
             plan,
             ckpt,
+            packed,
             panels,
             bytes,
             prepare_ms,
@@ -460,6 +528,7 @@ impl ModelRegistry {
                 Some(Slot::Ready(m)) => Some(VariantSnapshot {
                     key: k.clone(),
                     bytes: m.bytes,
+                    packed_bytes: m.packed.as_ref().map_or(0, |p| p.stored_bytes()),
                     prepare_ms: m.prepare_ms,
                 }),
                 _ => None,
@@ -573,6 +642,35 @@ mod tests {
             reg.canonical_key("tiny@dfmpc:2/6").unwrap(),
             "tiny@dfmpc:2/6:0.5:0"
         );
+    }
+
+    #[test]
+    fn quantized_variants_keep_weights_packed() {
+        let reg = ModelRegistry::new(usize::MAX, None);
+        let (plan, ckpt) = fixture();
+        reg.register_base("tiny", Arc::clone(&plan), Arc::clone(&ckpt)).unwrap();
+        let m = reg.get_or_prepare("tiny@uniform:4").unwrap();
+        let packed = m.packed.as_ref().expect("quantized variant must keep a packed store");
+        assert!(packed.packed_count() > 0, "no tensor actually bit-packed");
+        // dense-conv weights live only in the panels now; the runtime
+        // residual keeps what the engine reads per forward
+        assert!(m.ckpt.tensors.get("c1.w").is_none());
+        assert!(m.ckpt.tensors.get("c2.w").is_none());
+        assert!(m.ckpt.tensors.get("fc.w").is_some());
+        assert!(m.ckpt.tensors.get("c1_bn.gamma").is_some());
+        // the packed store reconstructs the fake-quant checkpoint
+        // bit-identically
+        let offline = Method::parse("uniform:4").unwrap().apply(&plan, &ckpt, None).unwrap();
+        let full = m.full_checkpoint();
+        assert_eq!(full.order, offline.order);
+        for (name, t) in &offline.tensors {
+            assert_eq!(full.get(name).unwrap(), t, "{name} diverged through packing");
+        }
+        // resident accounting beats the retired fp32-resident scheme
+        let legacy = ckpt_bytes(&offline) + panels_bytes(&m.panels);
+        assert!(m.bytes < legacy, "packed residency {} !< legacy {legacy}", m.bytes);
+        let snap = reg.snapshot();
+        assert_eq!(snap.variants[0].packed_bytes, packed.stored_bytes());
     }
 
     #[test]

@@ -44,6 +44,7 @@ impl Zoo {
         let j = Json::parse(&src).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
         let mut models = Vec::new();
         for m in j.req("models")?.as_arr().context("models")? {
+            let id = m.req("id")?.as_str().context("id")?.to_string();
             let mut hlo = Vec::new();
             if let Some(map) = m.req("hlo")?.as_obj() {
                 for (b, p) in map {
@@ -54,14 +55,20 @@ impl Zoo {
                 }
             }
             hlo.sort_by_key(|(b, _)| *b);
+            // a malformed pallas_batch is a manifest bug: surface it
+            // instead of silently serving the wrong batch size (this
+            // used to be `unwrap_or(8)`)
             let pallas_hlo = match (m.get("pallas_hlo"), m.get("pallas_batch")) {
                 (Some(Json::Str(p)), Some(b)) => {
-                    Some((b.as_usize().unwrap_or(8), root.join(p)))
+                    let batch = b.as_usize().with_context(|| {
+                        format!("model '{id}': pallas_batch must be a non-negative integer")
+                    })?;
+                    Some((batch, root.join(p)))
                 }
                 _ => None,
             };
             models.push(ModelEntry {
-                id: m.req("id")?.as_str().context("id")?.to_string(),
+                id,
                 arch: m.req("arch")?.as_str().context("arch")?.to_string(),
                 dataset: m.req("dataset")?.as_str().context("dataset")?.to_string(),
                 plan_path: root.join(m.req("plan")?.as_str().context("plan")?),
@@ -76,7 +83,9 @@ impl Zoo {
                 name: d.req("name")?.as_str().context("name")?.to_string(),
                 classes: d.req("classes")?.as_usize().context("classes")?,
                 eval_path: root.join(d.req("eval")?.as_str().context("eval")?),
-                eval_seed: d.req("eval_seed")?.as_f64().context("eval_seed")? as u64,
+                // strict u64 view: `as_f64 as u64` silently saturated
+                // negatives to 0 and truncated fractional seeds
+                eval_seed: d.req("eval_seed")?.as_u64().context("eval_seed")?,
                 n: d.req("n")?.as_usize().context("n")?,
             });
         }

@@ -20,11 +20,12 @@ use anyhow::{Context, Result};
 
 use crate::model::{Checkpoint, ConvSpec, Pair, Plan};
 use crate::tensor::ops::BN_EPS;
+use crate::tensor::qtensor::{ChanScale, GridMap, GridMeta};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
 
 use super::ternary::ternarize;
-use super::uniform::quantize_uniform;
+use super::uniform::quantize_uniform_scaled;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DfmpcConfig {
@@ -176,6 +177,11 @@ struct PairOut {
     mu_hat: Vec<f32>,
     var_hat: Vec<f32>,
     w_hq: Tensor,
+    /// storage grid of the low conv (ternary trits / k-bit indices)
+    low_meta: GridMeta,
+    /// storage grid of the high conv: k-bit indices + the Eq.-7 channel
+    /// factors `c` on the paired input slice
+    high_meta: GridMeta,
     report: PairReport,
 }
 
@@ -201,13 +207,20 @@ fn solve_pair(
     let var = ckpt.get(&format!("{bn}.var"))?.data.clone();
 
     // 1+2: low-precision weights + BN recalibration
-    let (w_hat, mu_hat, var_hat) = if cfg.bits_low == 2 {
+    let (w_hat, mu_hat, var_hat, low_meta) = if cfg.bits_low == 2 {
         let (w_hat, _delta, _alpha) = ternarize(&w_l);
         let (mu_hat, var_hat) = recalibrate_bn(&w_l, &w_hat, &mu, &var);
-        (w_hat, mu_hat, var_hat)
+        // the raw {-1,0,+1} pattern is stored; alpha lives in the BN
+        (w_hat, mu_hat, var_hat, GridMeta::Ternary { alpha: 1.0 })
     } else {
         // uniform low quantization preserves scale; stats unchanged
-        (quantize_uniform(&w_l, cfg.bits_low), mu.clone(), var.clone())
+        let s_l = w_l.abs_max();
+        (
+            quantize_uniform_scaled(&w_l, cfg.bits_low, s_l),
+            mu.clone(),
+            var.clone(),
+            GridMeta::Uniform { bits: cfg.bits_low, scale: s_l, chan: None },
+        )
     };
 
     // 4: closed-form solve (Eq. 27)
@@ -220,8 +233,21 @@ fn solve_pair(
         .get(&pair.high)
         .with_context(|| format!("high conv {} missing", pair.high))?;
     let w_h = ckpt.get(&format!("{}.w", pair.high))?;
-    let mut w_hq = quantize_uniform(w_h, cfg.bits_high);
-    scale_input_channels(&mut w_hq, pair.offset, &c, hi_spec.groups > 1);
+    let s_h = w_h.abs_max();
+    let mut w_hq = quantize_uniform_scaled(w_h, cfg.bits_high, s_h);
+    let depthwise = hi_spec.groups > 1;
+    scale_input_channels(&mut w_hq, pair.offset, &c, depthwise);
+    // depthwise filters pair on their filter-channel axis (dim 0), dense
+    // on the input-channel axis (dim 1) — mirroring scale_input_channels
+    let high_meta = GridMeta::Uniform {
+        bits: cfg.bits_high,
+        scale: s_h,
+        chan: Some(ChanScale {
+            axis: if depthwise { 0 } else { 1 },
+            offset: pair.offset,
+            factors: c.clone(),
+        }),
+    };
 
     Ok(PairOut {
         bn,
@@ -229,6 +255,8 @@ fn solve_pair(
         mu_hat,
         var_hat,
         w_hq,
+        low_meta,
+        high_meta,
         report: PairReport {
             low: pair.low.clone(),
             high: pair.high.clone(),
@@ -239,18 +267,21 @@ fn solve_pair(
     })
 }
 
-/// Run DF-MPC over a full model. Returns the quantized checkpoint and the
-/// per-pair reports. With `pool`, the per-pair closed-form solves and the
-/// per-layer tail quantization fan out over it; every pair reads only the
-/// FP32 checkpoint and results are applied in pair order, so the output is
-/// bit-identical with the serial path.
+/// Run DF-MPC over a full model. Returns the quantized checkpoint, the
+/// per-pair reports, and the storage [`GridMap`] (every quantized weight's
+/// grid — ternary trits, k-bit indices, and the Eq.-7 channel factors on
+/// paired high convs). With `pool`, the per-pair closed-form solves and
+/// the per-layer tail quantization fan out over it; every pair reads only
+/// the FP32 checkpoint and results are applied in pair order, so the
+/// output is bit-identical with the serial path.
 pub fn dfmpc(
     plan: &Plan,
     ckpt: &Checkpoint,
     cfg: DfmpcConfig,
     pool: Option<&Arc<ThreadPool>>,
-) -> Result<(Checkpoint, Vec<PairReport>)> {
+) -> Result<(Checkpoint, Vec<PairReport>, GridMap)> {
     let mut out = ckpt.clone();
+    let mut grids = GridMap::new();
     let convs = plan.convs();
     let mut in_pair: BTreeMap<&str, ()> = BTreeMap::new();
     for pair in &plan.pairs {
@@ -268,6 +299,8 @@ pub fn dfmpc(
         out.put(&format!("{}.mu", po.bn), Tensor::new(vec![po.mu_hat.len()], po.mu_hat));
         out.put(&format!("{}.var", po.bn), Tensor::new(vec![po.var_hat.len()], po.var_hat));
         out.put(&format!("{}.w", pair.high), po.w_hq);
+        grids.insert(format!("{}.w", pair.low), po.low_meta);
+        grids.insert(format!("{}.w", pair.high), po.high_meta);
         reports.push(po.report);
     }
 
@@ -282,15 +315,18 @@ pub fn dfmpc(
             tail.push(name.clone());
         }
     }
-    let quantized = super::par_map(pool, tail, |name| -> Result<(String, Tensor)> {
+    let quantized = super::par_map(pool, tail, |name| -> Result<(String, Tensor, GridMeta)> {
         let w = ckpt.get(&format!("{name}.w"))?;
-        Ok((name, quantize_uniform(w, cfg.bits_high)))
+        let s = w.abs_max();
+        let meta = GridMeta::Uniform { bits: cfg.bits_high, scale: s, chan: None };
+        Ok((name, quantize_uniform_scaled(w, cfg.bits_high, s), meta))
     });
     for res in quantized {
-        let (name, q) = res?;
+        let (name, q, meta) = res?;
+        grids.insert(format!("{name}.w"), meta);
         out.put(&format!("{name}.w"), q);
     }
-    Ok((out, reports))
+    Ok((out, reports, grids))
 }
 
 #[cfg(test)]

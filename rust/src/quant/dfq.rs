@@ -17,10 +17,11 @@ use anyhow::{Context, Result};
 
 use crate::model::{Checkpoint, Plan};
 use crate::tensor::ops::BN_EPS;
+use crate::tensor::qtensor::{GridMap, GridMeta};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
 
-use super::uniform::quantize_uniform;
+use super::uniform::quantize_uniform_scaled;
 
 /// Gaussian-ReLU mean: E[max(0, Z)], Z ~ N(mu, sigma^2).
 pub fn relu_gaussian_mean(mu: f32, sigma: f32) -> f32 {
@@ -49,13 +50,14 @@ pub fn erf(x: f32) -> f32 {
 
 /// Weight equalization across every mixed-precision pair, then uniform
 /// quantization at `bits` (per-layer, fanned over `pool`), then BN bias
-/// correction. Returns the quantized checkpoint.
+/// correction. Returns the quantized checkpoint and its storage grids
+/// (the equalized layers' post-equalization max scales).
 pub fn dfq(
     plan: &Plan,
     ckpt: &Checkpoint,
     bits: u32,
     pool: Option<&Arc<ThreadPool>>,
-) -> Result<Checkpoint> {
+) -> Result<(Checkpoint, GridMap)> {
     let mut work = ckpt.clone();
     let convs = plan.convs();
 
@@ -130,6 +132,7 @@ pub fn dfq(
 
     // --- 2. quantize everything uniformly at `bits` ----------------------
     let mut out = work.clone();
+    let mut grids = GridMap::new();
     let mut jobs: Vec<String> = convs.keys().cloned().collect();
     for op in &plan.ops {
         if let crate::model::Op::Fc { name, .. } = op {
@@ -137,12 +140,17 @@ pub fn dfq(
         }
     }
     let work_ref = &work;
-    let quantized = super::par_map(pool, jobs, |name| -> Result<(String, Tensor)> {
+    let quantized = super::par_map(pool, jobs, |name| -> Result<(String, Tensor, f32)> {
         let w = work_ref.get(&format!("{name}.w"))?;
-        Ok((name, quantize_uniform(w, bits)))
+        let s = w.abs_max();
+        Ok((name, quantize_uniform_scaled(w, bits, s), s))
     });
     for res in quantized {
-        let (name, q) = res?;
+        let (name, q, s) = res?;
+        grids.insert(
+            format!("{name}.w"),
+            GridMeta::Uniform { bits, scale: s, chan: None },
+        );
         out.put(&format!("{name}.w"), q);
     }
 
@@ -194,7 +202,7 @@ pub fn dfq(
         work.put(&format!("{hi_bn}.beta"), beta_hi.clone());
         out.put(&format!("{hi_bn}.beta"), beta_hi);
     }
-    Ok(out)
+    Ok((out, grids))
 }
 
 #[cfg(test)]

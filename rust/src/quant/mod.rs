@@ -20,14 +20,25 @@ pub mod uniform;
 pub mod zeroq_sim;
 
 pub use compensate::{dfmpc, DfmpcConfig, PairReport};
-pub use size::{model_size, SizeReport};
+pub use size::{model_size, packed_model_size, SizeReport};
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::model::{Checkpoint, Plan};
+pub use crate::tensor::qtensor::{ChanScale, GridMap, GridMeta};
 use crate::util::threadpool::ThreadPool;
+
+/// A quantized model: the fake-quant fp32 checkpoint (what the engines
+/// execute) plus the per-weight [`GridMap`] that lets storage bit-pack it
+/// ([`crate::model::PackedCheckpoint::pack`]). Every method emits the
+/// grid its weights actually live on; dequantizing the packed form
+/// reproduces `ckpt` bit-identically (pack-time verified).
+pub struct Quantized {
+    pub ckpt: Checkpoint,
+    pub grids: GridMap,
+}
 
 /// Map `f` over `items` in input order, fanning out over `pool` when one
 /// is available and we are not already on a pool worker (nested scoped
@@ -170,9 +181,25 @@ impl Method {
         ckpt: &Checkpoint,
         pool: Option<&Arc<ThreadPool>>,
     ) -> Result<Checkpoint> {
-        Ok(match self {
-            Method::Fp32 => ckpt.clone(),
-            Method::Dfmpc(cfg) => dfmpc(plan, ckpt, *cfg, pool)?.0,
+        Ok(self.apply_quantized(plan, ckpt, pool)?.ckpt)
+    }
+
+    /// [`Method::apply`] plus the storage [`GridMap`]: each method emits
+    /// the integer grid every quantized weight lives on, so the result can
+    /// be bit-packed ([`crate::model::PackedCheckpoint`]) instead of kept
+    /// as fake-quant fp32. FP32 emits an empty map.
+    pub fn apply_quantized(
+        &self,
+        plan: &Plan,
+        ckpt: &Checkpoint,
+        pool: Option<&Arc<ThreadPool>>,
+    ) -> Result<Quantized> {
+        let (ckpt, grids) = match self {
+            Method::Fp32 => (ckpt.clone(), GridMap::new()),
+            Method::Dfmpc(cfg) => {
+                let (c, _reports, g) = dfmpc(plan, ckpt, *cfg, pool)?;
+                (c, g)
+            }
             Method::NaiveMixed { bits_low, bits_high } => {
                 naive::naive_mixed(plan, ckpt, *bits_low, *bits_high, pool)?
             }
@@ -182,11 +209,15 @@ impl Method {
             Method::Uniform { bits } => naive::uniform_all(plan, ckpt, *bits, pool)?,
             Method::Dfq { bits } => dfq::dfq(plan, ckpt, *bits, pool)?,
             Method::Omse { bits } => omse::omse(plan, ckpt, *bits, pool)?,
-            Method::Ocs { bits, expand } => ocs::ocs(plan, ckpt, *bits, *expand, pool)?.0,
+            Method::Ocs { bits, expand } => {
+                let (c, _expand, g) = ocs::ocs(plan, ckpt, *bits, *expand, pool)?;
+                (c, g)
+            }
             Method::ZeroqSim { bits, samples, iters } => {
                 zeroq_sim::zeroq_sim(plan, ckpt, *bits, *samples, *iters, pool)?
             }
-        })
+        };
+        Ok(Quantized { ckpt, grids })
     }
 }
 

@@ -9,31 +9,37 @@
 //! how much of DF-MPC's recovery is scale absorption vs compensation.
 //!
 //! All variants fan the per-layer quantization over an optional pool
-//! (bit-identical with serial — each layer's math is unchanged).
+//! (bit-identical with serial — each layer's math is unchanged), and
+//! return the [`GridMap`] describing each quantized weight's grid so
+//! storage can bit-pack it ([`crate::model::PackedCheckpoint`]).
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::model::{Checkpoint, Op, Plan};
+use crate::tensor::qtensor::{GridMap, GridMeta};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
 
 use super::ternary::ternarize;
-use super::uniform::quantize_uniform;
+use super::uniform::quantize_uniform_scaled;
 
 /// Quantize the layers named in `jobs` concurrently and apply the results
-/// in input order. `f` reads only the FP32 checkpoint.
+/// (weights + grid metadata) in input order. `f` reads only the FP32
+/// checkpoint.
 fn quantize_layers(
     out: &mut Checkpoint,
+    grids: &mut GridMap,
     pool: Option<&Arc<ThreadPool>>,
     jobs: Vec<String>,
-    f: impl Fn(&str) -> Result<Tensor> + Sync,
+    f: impl Fn(&str) -> Result<(Tensor, GridMeta)> + Sync,
 ) -> Result<()> {
     let quantized = super::par_map(pool, jobs, |name| f(&name).map(|q| (name, q)));
     for res in quantized {
-        let (name, q) = res?;
+        let (name, (q, meta)) = res?;
         out.put(&format!("{name}.w"), q);
+        grids.insert(format!("{name}.w"), meta);
     }
     Ok(())
 }
@@ -48,6 +54,15 @@ fn fc_names(plan: &Plan) -> Vec<String> {
         .collect()
 }
 
+/// k-bit uniform quantization at the layer max scale, plus its grid.
+fn uniform_with_grid(w: &Tensor, bits: u32) -> (Tensor, GridMeta) {
+    let scale = w.abs_max();
+    (
+        quantize_uniform_scaled(w, bits, scale),
+        GridMeta::Uniform { bits, scale, chan: None },
+    )
+}
+
 fn naive_impl(
     plan: &Plan,
     ckpt: &Checkpoint,
@@ -55,30 +70,31 @@ fn naive_impl(
     bits_high: u32,
     fold_alpha: bool,
     pool: Option<&Arc<ThreadPool>>,
-) -> Result<Checkpoint> {
+) -> Result<(Checkpoint, GridMap)> {
     let mut out = ckpt.clone();
+    let mut grids = GridMap::new();
     let convs = plan.convs();
     let low: std::collections::BTreeSet<&str> =
         plan.pairs.iter().map(|p| p.low.as_str()).collect();
-    quantize_layers(&mut out, pool, convs.keys().cloned().collect(), |name| {
+    quantize_layers(&mut out, &mut grids, pool, convs.keys().cloned().collect(), |name| {
         let w = ckpt.get(&format!("{name}.w"))?;
         Ok(if low.contains(name) && bits_low == 2 {
             let (t, _delta, alpha) = ternarize(w);
             if fold_alpha {
-                t.map(|v| v * alpha)
+                (t.map(|v| v * alpha), GridMeta::Ternary { alpha })
             } else {
-                t
+                (t, GridMeta::Ternary { alpha: 1.0 })
             }
         } else if low.contains(name) {
-            quantize_uniform(w, bits_low)
+            uniform_with_grid(w, bits_low)
         } else {
-            quantize_uniform(w, bits_high)
+            uniform_with_grid(w, bits_high)
         })
     })?;
-    quantize_layers(&mut out, pool, fc_names(plan), |name| {
-        Ok(quantize_uniform(ckpt.get(&format!("{name}.w"))?, bits_high))
+    quantize_layers(&mut out, &mut grids, pool, fc_names(plan), |name| {
+        Ok(uniform_with_grid(ckpt.get(&format!("{name}.w"))?, bits_high))
     })?;
-    Ok(out)
+    Ok((out, grids))
 }
 
 /// Paper-faithful "Original" rows: raw ternary pattern, alpha omitted.
@@ -88,7 +104,7 @@ pub fn naive_mixed(
     bits_low: u32,
     bits_high: u32,
     pool: Option<&Arc<ThreadPool>>,
-) -> Result<Checkpoint> {
+) -> Result<(Checkpoint, GridMap)> {
     naive_impl(plan, ckpt, bits_low, bits_high, false, pool)
 }
 
@@ -99,7 +115,7 @@ pub fn naive_mixed_alpha(
     bits_low: u32,
     bits_high: u32,
     pool: Option<&Arc<ThreadPool>>,
-) -> Result<Checkpoint> {
+) -> Result<(Checkpoint, GridMap)> {
     naive_impl(plan, ckpt, bits_low, bits_high, true, pool)
 }
 
@@ -110,12 +126,13 @@ pub fn uniform_all(
     ckpt: &Checkpoint,
     bits: u32,
     pool: Option<&Arc<ThreadPool>>,
-) -> Result<Checkpoint> {
+) -> Result<(Checkpoint, GridMap)> {
     let mut out = ckpt.clone();
+    let mut grids = GridMap::new();
     let mut jobs: Vec<String> = plan.convs().keys().cloned().collect();
     jobs.extend(fc_names(plan));
-    quantize_layers(&mut out, pool, jobs, |name| {
-        Ok(quantize_uniform(ckpt.get(&format!("{name}.w"))?, bits))
+    quantize_layers(&mut out, &mut grids, pool, jobs, |name| {
+        Ok(uniform_with_grid(ckpt.get(&format!("{name}.w"))?, bits))
     })?;
-    Ok(out)
+    Ok((out, grids))
 }

@@ -13,6 +13,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::model::{Checkpoint, Op, Plan};
+use crate::tensor::qtensor::{ChanScale, GridMap, GridMeta};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
 
@@ -21,8 +22,19 @@ use super::uniform::quantize_uniform_scaled;
 /// Quantize one filter with OCS: `expand_ratio` (e.g. 0.05) of input
 /// channels with the largest absolute weight are split.
 pub fn quantize_ocs(w: &Tensor, k: u32, expand_ratio: f32) -> Tensor {
+    quantize_ocs_grid(w, k, expand_ratio).0
+}
+
+/// [`quantize_ocs`] plus the storage grid: split channels carry a 2.0
+/// factor (the folded `2·Q(w/2)` form), so the packed representation is
+/// k-bit indices + the post-split scale + a per-input-channel multiplier.
+pub fn quantize_ocs_grid(w: &Tensor, k: u32, expand_ratio: f32) -> (Tensor, GridMeta) {
     if w.ndim() < 2 {
-        return quantize_uniform_scaled(w, k, w.abs_max());
+        let s = w.abs_max();
+        return (
+            quantize_uniform_scaled(w, k, s),
+            GridMeta::Uniform { bits: k, scale: s, chan: None },
+        );
     }
     let i = w.shape[1];
     let per: usize = w.shape[2..].iter().product();
@@ -62,35 +74,44 @@ pub fn quantize_ocs(w: &Tensor, k: u32, expand_ratio: f32) -> Tensor {
             }
         }
     }
-    out
+    let chan = if n_split > 0 {
+        let factors = (0..i).map(|j| if split.contains(&j) { 2.0 } else { 1.0 }).collect();
+        Some(ChanScale { axis: 1, offset: 0, factors })
+    } else {
+        None
+    };
+    (out, GridMeta::Uniform { bits: k, scale, chan })
 }
 
-/// Whole-model OCS. Returns the checkpoint and the average channel
-/// expansion (for size accounting). Per-layer splits are independent and
-/// fan out over `pool` (bit-identical with serial).
+/// Whole-model OCS. Returns the checkpoint, the average channel expansion
+/// (for size accounting), and the storage grids. Per-layer splits are
+/// independent and fan out over `pool` (bit-identical with serial).
 pub fn ocs(
     plan: &Plan,
     ckpt: &Checkpoint,
     bits: u32,
     expand_ratio: f32,
     pool: Option<&Arc<ThreadPool>>,
-) -> Result<(Checkpoint, f32)> {
+) -> Result<(Checkpoint, f32, GridMap)> {
     let mut out = ckpt.clone();
+    let mut grids = GridMap::new();
     let mut jobs: Vec<String> = plan.convs().keys().cloned().collect();
     for op in &plan.ops {
         if let Op::Fc { name, .. } = op {
             jobs.push(name.clone());
         }
     }
-    let quantized = super::par_map(pool, jobs, |name| -> Result<(String, Tensor)> {
+    let quantized = super::par_map(pool, jobs, |name| -> Result<(String, Tensor, GridMeta)> {
         let w = ckpt.get(&format!("{name}.w"))?;
-        Ok((name, quantize_ocs(w, bits, expand_ratio)))
+        let (q, meta) = quantize_ocs_grid(w, bits, expand_ratio);
+        Ok((name, q, meta))
     });
     for res in quantized {
-        let (name, q) = res?;
+        let (name, q, meta) = res?;
+        grids.insert(format!("{name}.w"), meta);
         out.put(&format!("{name}.w"), q);
     }
-    Ok((out, 1.0 + expand_ratio))
+    Ok((out, 1.0 + expand_ratio, grids))
 }
 
 #[cfg(test)]

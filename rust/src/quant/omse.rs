@@ -8,6 +8,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::model::{Checkpoint, Op, Plan};
+use crate::tensor::qtensor::{GridMap, GridMeta};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
 
@@ -58,11 +59,18 @@ pub fn optimal_scale(w: &Tensor, k: u32) -> f32 {
     0.5 * (lo + hi)
 }
 
-/// Quantize with the MSE-optimal clip (values outside the clip saturate).
-pub fn quantize_omse(w: &Tensor, k: u32) -> Tensor {
+/// Quantize with the MSE-optimal clip (values outside the clip saturate),
+/// returning the clip scale too — the output lives on the `(k, scale)`
+/// DoReFa grid, which is what storage packs.
+pub fn quantize_omse_scaled(w: &Tensor, k: u32) -> (Tensor, f32) {
     let s = optimal_scale(w, k);
     let clipped = w.clone().map(|v| v.clamp(-s, s));
-    quantize_uniform_scaled(&clipped, k, s)
+    (quantize_uniform_scaled(&clipped, k, s), s)
+}
+
+/// Quantize with the MSE-optimal clip (values outside the clip saturate).
+pub fn quantize_omse(w: &Tensor, k: u32) -> Tensor {
+    quantize_omse_scaled(w, k).0
 }
 
 /// Whole-model OMSE at `bits`. The per-layer golden-section searches are
@@ -72,23 +80,29 @@ pub fn omse(
     ckpt: &Checkpoint,
     bits: u32,
     pool: Option<&Arc<ThreadPool>>,
-) -> Result<Checkpoint> {
+) -> Result<(Checkpoint, GridMap)> {
     let mut out = ckpt.clone();
+    let mut grids = GridMap::new();
     let mut jobs: Vec<String> = plan.convs().keys().cloned().collect();
     for op in &plan.ops {
         if let Op::Fc { name, .. } = op {
             jobs.push(name.clone());
         }
     }
-    let quantized = super::par_map(pool, jobs, |name| -> Result<(String, Tensor)> {
+    let quantized = super::par_map(pool, jobs, |name| -> Result<(String, Tensor, f32)> {
         let w = ckpt.get(&format!("{name}.w"))?;
-        Ok((name, quantize_omse(w, bits)))
+        let (q, s) = quantize_omse_scaled(w, bits);
+        Ok((name, q, s))
     });
     for res in quantized {
-        let (name, q) = res?;
+        let (name, q, s) = res?;
+        grids.insert(
+            format!("{name}.w"),
+            GridMeta::Uniform { bits, scale: s, chan: None },
+        );
         out.put(&format!("{name}.w"), q);
     }
-    Ok(out)
+    Ok((out, grids))
 }
 
 #[cfg(test)]

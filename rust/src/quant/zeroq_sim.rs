@@ -22,6 +22,7 @@ use anyhow::Result;
 use crate::infer::engine::{ActStats, Engine};
 use crate::model::{Checkpoint, Op, Plan};
 use crate::tensor::ops::BN_EPS;
+use crate::tensor::qtensor::GridMap;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
@@ -85,7 +86,9 @@ pub fn synthesize(
 }
 
 /// Full ZeroQ-sim pipeline: synthesize -> uniform quantize -> empirical
-/// bias correction on every BN using the synthetic calibration set.
+/// bias correction on every BN using the synthetic calibration set. The
+/// correction only shifts BN betas, so the weight grids are the uniform
+/// ones.
 pub fn zeroq_sim(
     plan: &Plan,
     ckpt: &Checkpoint,
@@ -93,9 +96,9 @@ pub fn zeroq_sim(
     samples: usize,
     iters: usize,
     pool: Option<&Arc<ThreadPool>>,
-) -> Result<Checkpoint> {
+) -> Result<(Checkpoint, GridMap)> {
     let calib = synthesize(plan, ckpt, samples, iters, 0xD15C0, pool)?;
-    let mut quant = uniform_all(plan, ckpt, bits, pool)?;
+    let (mut quant, grids) = uniform_all(plan, ckpt, bits, pool)?;
     // empirical correction: match per-BN pre-normalization means
     let mut fp_stats = ActStats::new();
     Engine::with_exec(plan, ckpt, pool.cloned()).forward_collect(&calib, &mut fp_stats)?;
@@ -120,5 +123,5 @@ pub fn zeroq_sim(
         }
         quant.put(&format!("{name}.beta"), beta);
     }
-    Ok(quant)
+    Ok((quant, grids))
 }

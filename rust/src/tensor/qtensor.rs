@@ -1,0 +1,446 @@
+//! Packed low-bit weight storage.
+//!
+//! Every quantizer in `quant/*` emits *fake-quant* f32 tensors: values
+//! that live on a small integer grid but are stored at 32 bits each. A
+//! [`QTensor`] stores the grid **indices** instead — 2-bit ternary trits
+//! plus a per-tensor `alpha`, or k-bit DoReFa indices plus a per-tensor
+//! scale and an optional per-channel multiplier vector (DF-MPC's Eq. 7
+//! compensation, OCS's folded channel split) — and dequantizes by
+//! recomputing the *identical* floating-point expression the quantizer
+//! used: `((2/levels)·m − 1)·s`, then `· c_j` for scaled channels.
+//!
+//! Bit-exactness is enforced at pack time, not assumed: every element is
+//! round-tripped through the dequantization expression and compared by
+//! `f32::to_bits`; a tensor with any off-grid element falls back to
+//! [`QTensor::Fp32`] storage. Round-tripped weights are therefore
+//! bit-identical f32 by construction, so an engine serving from packed
+//! storage produces bit-identical logits (proven end to end in
+//! `rust/tests/packed_storage.rs` and `rust/tests/registry_integration.rs`).
+
+use std::collections::BTreeMap;
+
+use super::Tensor;
+
+/// How a quantizer's fake-quant output maps onto its integer grid — the
+/// metadata each `quant/*` method emits alongside the quantized
+/// checkpoint so storage can pack it (see [`QTensor::pack`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum GridMeta {
+    /// TWN Eq. (3)/(4): values `{-1, 0, +1} · alpha`. The raw-pattern
+    /// baselines (alpha omitted from the weights) use `alpha = 1.0`.
+    Ternary { alpha: f32 },
+    /// DoReFa Eq. (6) k-bit grid: `((2/(2^bits − 1))·m − 1) · scale`,
+    /// optionally multiplied by a per-channel factor ([`ChanScale`]).
+    Uniform { bits: u32, scale: f32, chan: Option<ChanScale> },
+}
+
+/// Per-channel multiplier vector applied after the grid expression:
+/// channels `[offset, offset + factors.len())` along `axis` (0 = filter
+/// channel for depthwise convs, 1 = input channel for dense convs and fc)
+/// are multiplied by their factor; other channels are untouched. This is
+/// DF-MPC's Eq.-7 compensation on a paired high conv, and OCS's folded
+/// `2 · Q(w/2)` on split channels.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChanScale {
+    pub axis: usize,
+    pub offset: usize,
+    pub factors: Vec<f32>,
+}
+
+/// Tensor name (e.g. `"c1.w"`) → grid metadata for one quantized model.
+pub type GridMap = BTreeMap<String, GridMeta>;
+
+/// Maximum grid bitwidth the packed layout supports.
+pub const MAX_GRID_BITS: u32 = 16;
+
+/// Pack `vals` (each `< 2^bits`) into an LSB-first bitstream.
+pub fn pack_bits(vals: &[u32], bits: u32) -> Vec<u8> {
+    assert!((1..=MAX_GRID_BITS).contains(&bits), "unsupported bitwidth {bits}");
+    let total = vals.len() * bits as usize;
+    let mut out = vec![0u8; (total + 7) / 8];
+    let mut pos = 0usize;
+    for &v in vals {
+        debug_assert!(v < (1u32 << bits), "value {v} exceeds {bits} bits");
+        for b in 0..bits as usize {
+            if (v >> b) & 1 == 1 {
+                out[(pos + b) / 8] |= 1 << ((pos + b) % 8);
+            }
+        }
+        pos += bits as usize;
+    }
+    out
+}
+
+/// Inverse of [`pack_bits`]: `None` if `bytes` is not exactly the packed
+/// length for `n` values (the untrusted-input loader relies on this).
+pub fn unpack_bits(bytes: &[u8], bits: u32, n: usize) -> Option<Vec<u32>> {
+    if !(1..=MAX_GRID_BITS).contains(&bits) {
+        return None;
+    }
+    let total = n.checked_mul(bits as usize)?;
+    if bytes.len() != (total + 7) / 8 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 0usize;
+    for _ in 0..n {
+        let mut v = 0u32;
+        for b in 0..bits as usize {
+            if (bytes[(pos + b) / 8] >> ((pos + b) % 8)) & 1 == 1 {
+                v |= 1 << b;
+            }
+        }
+        out.push(v);
+        pos += bits as usize;
+    }
+    Some(out)
+}
+
+/// The exact dequantization expression for a grid index — shared by pack
+/// verification and [`QTensor::dequantize`] so they cannot drift. This is
+/// the same float op sequence as `quant::uniform::quantize_uniform_scaled`
+/// (`q = (2/levels)·round(levels·t) − 1`, output `q·s`) followed by the
+/// in-place channel multiply of `quant::compensate::scale_input_channels`.
+#[inline]
+fn grid_value(bits: u32, scale: f32, m: u32, factor: Option<f32>) -> f32 {
+    let levels = ((1u64 << bits) - 1) as f32;
+    let s = scale.max(1e-12);
+    let q = (2.0 / levels) * m as f32 - 1.0;
+    let v = q * s;
+    match factor {
+        Some(f) => v * f,
+        None => v,
+    }
+}
+
+/// The exact ternary dequantization: `trit · alpha` with the trit stored
+/// as code `{0, 1, 2} → {-1.0, 0.0, +1.0}`.
+#[inline]
+fn ternary_value(code: u32, alpha: f32) -> f32 {
+    (code as i32 - 1) as f32 * alpha
+}
+
+/// Per-element channel factor under a [`ChanScale`]: `None` for elements
+/// outside the scaled slice (those were never multiplied).
+#[inline]
+fn chan_factor(chan: &ChanScale, shape: &[usize], i: usize) -> Option<f32> {
+    let ch = match chan.axis {
+        0 => {
+            let stride: usize = shape[1..].iter().product();
+            i / stride.max(1)
+        }
+        _ => {
+            if shape.len() < 2 {
+                return None;
+            }
+            let stride: usize = shape[2..].iter().product();
+            (i / stride.max(1)) % shape[1]
+        }
+    };
+    if ch >= chan.offset && ch < chan.offset + chan.factors.len() {
+        Some(chan.factors[ch - chan.offset])
+    } else {
+        None
+    }
+}
+
+/// A weight tensor in packed storage: grid indices + the handful of f32
+/// parameters needed to dequantize bit-exactly, or a plain f32 fallback
+/// for anything off-grid.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QTensor {
+    /// off-grid fallback: stored at full precision
+    Fp32(Tensor),
+    /// 2-bit trit codes (`{0,1,2}` = `{-1,0,+1}`) + per-tensor alpha
+    Ternary { shape: Vec<usize>, alpha: f32, codes: Vec<u8> },
+    /// k-bit grid indices + per-tensor scale + optional channel factors
+    Grid { shape: Vec<usize>, bits: u32, scale: f32, idx: Vec<u8>, chan: Option<ChanScale> },
+}
+
+impl QTensor {
+    /// Pack `t` onto `meta`'s grid. Every element is verified to
+    /// dequantize back bit-identically (`f32::to_bits` equality); if any
+    /// element is off-grid the whole tensor falls back to [`QTensor::Fp32`].
+    pub fn pack(t: &Tensor, meta: &GridMeta) -> QTensor {
+        match meta {
+            GridMeta::Ternary { alpha } => Self::pack_ternary(t, *alpha),
+            GridMeta::Uniform { bits, scale, chan } => {
+                Self::pack_grid(t, *bits, *scale, chan.clone())
+            }
+        }
+        .unwrap_or_else(|| QTensor::Fp32(t.clone()))
+    }
+
+    fn pack_ternary(t: &Tensor, alpha: f32) -> Option<QTensor> {
+        if !alpha.is_finite() {
+            return None;
+        }
+        let mut codes = Vec::with_capacity(t.data.len());
+        for &v in &t.data {
+            let code = (0u32..3)
+                .find(|&c| ternary_value(c, alpha).to_bits() == v.to_bits())?;
+            codes.push(code);
+        }
+        Some(QTensor::Ternary {
+            shape: t.shape.clone(),
+            alpha,
+            codes: pack_bits(&codes, 2),
+        })
+    }
+
+    fn pack_grid(t: &Tensor, bits: u32, scale: f32, chan: Option<ChanScale>) -> Option<QTensor> {
+        if !(1..=MAX_GRID_BITS).contains(&bits) || !scale.is_finite() {
+            return None;
+        }
+        if let Some(c) = &chan {
+            if c.axis > 1 || c.factors.iter().any(|f| !f.is_finite()) {
+                return None;
+            }
+        }
+        let levels_max = (1u64 << bits) - 1;
+        let levels = levels_max as f32;
+        let s = scale.max(1e-12);
+        let mut vals = Vec::with_capacity(t.data.len());
+        for (i, &v) in t.data.iter().enumerate() {
+            let factor = chan.as_ref().and_then(|c| chan_factor(c, &t.shape, i));
+            // invert v = grid_value(m) to a candidate index, then verify
+            let base = match factor {
+                Some(f) if f != 0.0 => v / f,
+                Some(_) => f32::NAN, // zero factor: probe the endpoints
+                None => v,
+            };
+            let guess = (base / s + 1.0) * 0.5 * levels;
+            let try_m = |m: i64| -> Option<u32> {
+                if m < 0 || m > levels_max as i64 {
+                    return None;
+                }
+                let m = m as u32;
+                (grid_value(bits, scale, m, factor).to_bits() == v.to_bits()).then_some(m)
+            };
+            let candidates: [i64; 3] = if guess.is_finite() {
+                let g = guess.round() as i64;
+                [g, g - 1, g + 1]
+            } else {
+                [0, levels_max as i64, 0]
+            };
+            let m = candidates.iter().copied().find_map(try_m)?;
+            vals.push(m);
+        }
+        Some(QTensor::Grid {
+            shape: t.shape.clone(),
+            bits,
+            scale,
+            idx: pack_bits(&vals, bits),
+            chan,
+        })
+    }
+
+    /// Reconstruct the fake-quant f32 tensor — bit-identical to what was
+    /// packed (guaranteed by pack-time verification).
+    pub fn dequantize(&self) -> Tensor {
+        match self {
+            QTensor::Fp32(t) => t.clone(),
+            QTensor::Ternary { shape, alpha, codes } => {
+                let n: usize = shape.iter().product();
+                let vals = unpack_bits(codes, 2, n).expect("ternary payload length");
+                let data = vals.iter().map(|&c| ternary_value(c, *alpha)).collect();
+                Tensor::new(shape.clone(), data)
+            }
+            QTensor::Grid { shape, bits, scale, idx, chan } => {
+                let n: usize = shape.iter().product();
+                let vals = unpack_bits(idx, *bits, n).expect("grid payload length");
+                let data = vals
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &m)| {
+                        let factor = chan.as_ref().and_then(|c| chan_factor(c, shape, i));
+                        grid_value(*bits, *scale, m, factor)
+                    })
+                    .collect();
+                Tensor::new(shape.clone(), data)
+            }
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            QTensor::Fp32(t) => &t.shape,
+            QTensor::Ternary { shape, .. } | QTensor::Grid { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// `true` when stored on an integer grid (not the fp32 fallback).
+    pub fn is_packed(&self) -> bool {
+        !matches!(self, QTensor::Fp32(_))
+    }
+
+    /// Actual resident/stored byte footprint: the index payload plus the
+    /// per-tensor scale (alpha) and any channel-factor vector.
+    pub fn stored_bytes(&self) -> usize {
+        match self {
+            QTensor::Fp32(t) => t.data.len() * 4,
+            QTensor::Ternary { codes, .. } => codes.len() + 4,
+            QTensor::Grid { idx, chan, .. } => {
+                idx.len() + 4 + chan.as_ref().map_or(0, |c| 4 * c.factors.len())
+            }
+        }
+    }
+
+    /// Structural validity for untrusted inputs: payload lengths match
+    /// the shape, bitwidths are in range, trit codes are `<= 2`, channel
+    /// slices fit the scaled axis, and all f32 parameters are finite.
+    /// Returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            QTensor::Fp32(_) => Ok(()),
+            QTensor::Ternary { shape, alpha, codes } => {
+                let n: usize = checked_numel(shape).ok_or("shape numel overflows")?;
+                if !alpha.is_finite() {
+                    return Err(format!("non-finite alpha {alpha}"));
+                }
+                let vals =
+                    unpack_bits(codes, 2, n).ok_or("trit payload length mismatch")?;
+                if vals.iter().any(|&c| c > 2) {
+                    return Err("invalid trit code > 2".into());
+                }
+                Ok(())
+            }
+            QTensor::Grid { shape, bits, scale, idx, chan } => {
+                let n: usize = checked_numel(shape).ok_or("shape numel overflows")?;
+                if !(1..=MAX_GRID_BITS).contains(bits) {
+                    return Err(format!("unsupported grid bitwidth {bits}"));
+                }
+                if !scale.is_finite() {
+                    return Err(format!("non-finite scale {scale}"));
+                }
+                if unpack_bits(idx, *bits, n).is_none() {
+                    return Err("grid payload length mismatch".into());
+                }
+                if let Some(c) = chan {
+                    if c.axis > 1 {
+                        return Err(format!("channel-scale axis {} > 1", c.axis));
+                    }
+                    let dim = *shape.get(c.axis).unwrap_or(&0);
+                    match c.offset.checked_add(c.factors.len()) {
+                        Some(end) if end <= dim => {}
+                        _ => {
+                            return Err(format!(
+                                "channel slice [{}, {}+{}) exceeds axis dim {dim}",
+                                c.offset,
+                                c.offset,
+                                c.factors.len()
+                            ))
+                        }
+                    }
+                    if c.factors.iter().any(|f| !f.is_finite()) {
+                        return Err("non-finite channel factor".into());
+                    }
+                }
+                // |q| <= 1 on the grid, so dequantized magnitudes are
+                // bounded by s_eff * max|factor|; reject combinations
+                // that would overflow to inf
+                let s_eff = scale.max(1e-12) as f64;
+                let fmax = chan
+                    .as_ref()
+                    .map_or(1.0f32, |c| c.factors.iter().fold(1.0f32, |m, f| m.max(f.abs())))
+                    as f64;
+                if s_eff * fmax > f32::MAX as f64 {
+                    return Err("scale * channel factor would overflow f32".into());
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Overflow-checked product of a shape's dims (untrusted-header guard).
+pub fn checked_numel(shape: &[usize]) -> Option<usize> {
+    shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitstream_roundtrips_all_widths() {
+        for bits in 1..=MAX_GRID_BITS {
+            let max = (1u64 << bits) - 1;
+            let vals: Vec<u32> = (0..97u64).map(|i| (i * 37 % (max + 1)) as u32).collect();
+            let bytes = pack_bits(&vals, bits);
+            assert_eq!(bytes.len(), (vals.len() * bits as usize + 7) / 8);
+            assert_eq!(unpack_bits(&bytes, bits, vals.len()).unwrap(), vals);
+        }
+    }
+
+    #[test]
+    fn unpack_rejects_wrong_length() {
+        let bytes = pack_bits(&[1, 2, 3], 4);
+        assert!(unpack_bits(&bytes, 4, 5).is_none());
+        assert!(unpack_bits(&bytes, 4, 3).is_some());
+    }
+
+    #[test]
+    fn ternary_pack_is_bit_exact() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, -1.0, 0.0, 0.0, 1.0, -1.0]);
+        let q = QTensor::pack(&t, &GridMeta::Ternary { alpha: 1.0 });
+        assert!(q.is_packed());
+        assert_eq!(q.dequantize(), t);
+        // alpha-folded values
+        let a = 0.7319f32;
+        let t2 = t.clone().map(|v| v * a);
+        let q2 = QTensor::pack(&t2, &GridMeta::Ternary { alpha: a });
+        assert!(q2.is_packed());
+        for (x, y) in q2.dequantize().data.iter().zip(&t2.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn off_grid_falls_back_to_fp32() {
+        let t = Tensor::new(vec![3], vec![0.1, 0.2, 0.3]);
+        let q = QTensor::pack(&t, &GridMeta::Ternary { alpha: 1.0 });
+        assert!(!q.is_packed());
+        assert_eq!(q.dequantize(), t);
+        let g = QTensor::pack(&t, &GridMeta::Uniform { bits: 4, scale: 0.3, chan: None });
+        assert!(!g.is_packed());
+        assert_eq!(g.dequantize(), t);
+    }
+
+    #[test]
+    fn stored_bytes_reflect_bitwidth() {
+        let t = Tensor::new(vec![16], vec![1.0; 16]);
+        let q = QTensor::pack(&t, &GridMeta::Ternary { alpha: 1.0 });
+        // 16 trits at 2 bits = 4 bytes, + 4 for alpha
+        assert_eq!(q.stored_bytes(), 8);
+        assert_eq!(QTensor::Fp32(t).stored_bytes(), 64);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let good = QTensor::Ternary { shape: vec![4], alpha: 1.0, codes: vec![0b10_10_10_10] };
+        assert!(good.validate().is_ok());
+        let bad_code = QTensor::Ternary { shape: vec![4], alpha: 1.0, codes: vec![0b11_10_10_10] };
+        assert!(bad_code.validate().is_err());
+        let bad_len = QTensor::Grid {
+            shape: vec![100],
+            bits: 4,
+            scale: 1.0,
+            idx: vec![0u8; 3],
+            chan: None,
+        };
+        assert!(bad_len.validate().is_err());
+        let bad_chan = QTensor::Grid {
+            shape: vec![4, 2, 1, 1],
+            bits: 4,
+            scale: 1.0,
+            idx: vec![0u8; 4],
+            chan: Some(ChanScale { axis: 1, offset: 1, factors: vec![1.0, 2.0] }),
+        };
+        assert!(bad_chan.validate().is_err());
+    }
+}

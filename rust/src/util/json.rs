@@ -71,12 +71,30 @@ impl Json {
         }
     }
 
+    /// An f64 can name one specific integer only within ±2^53; beyond
+    /// that (and for NaN/inf/fractions) integer views return `None`
+    /// instead of silently saturating or truncating.
+    const MAX_EXACT_INT: f64 = 9_007_199_254_740_992.0; // 2^53
+
+    /// Strict integer view: `None` for non-numbers, non-finite values,
+    /// fractions, and magnitudes beyond f64's exact-integer window —
+    /// `{"classes": -3}` must error at the call site, not load as 0.
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|f| f as i64)
+        let n = self.as_f64()?;
+        if !n.is_finite() || n.fract() != 0.0 || n.abs() > Self::MAX_EXACT_INT {
+            return None;
+        }
+        Some(n as i64)
     }
 
+    /// Strict non-negative integer view (see [`Json::as_i64`]).
+    pub fn as_u64(&self) -> Option<u64> {
+        u64::try_from(self.as_i64()?).ok()
+    }
+
+    /// Strict non-negative integer view (see [`Json::as_i64`]).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        usize::try_from(self.as_i64()?).ok()
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -123,9 +141,10 @@ impl Json {
             .map(|a| a.iter().filter_map(|v| v.as_f64().map(|f| f as f32)).collect())
     }
 
+    /// Strict: `None` if ANY element is not a valid usize — silently
+    /// dropping a negative shape dim would corrupt downstream extents.
     pub fn usize_vec(&self) -> Option<Vec<usize>> {
-        self.as_arr()
-            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        self.as_arr()?.iter().map(Json::as_usize).collect()
     }
 
     // ----- constructors ----------------------------------------------------
@@ -433,5 +452,34 @@ mod tests {
         let v = Json::parse("1234567890123").unwrap();
         assert_eq!(v.as_i64(), Some(1234567890123));
         assert_eq!(v.dump(), "1234567890123");
+    }
+
+    #[test]
+    fn integer_views_reject_lossy_values() {
+        // regression: these used to saturate/truncate through `as` casts —
+        // "classes": -3 loaded as 0, 2.5 loaded as 2
+        assert_eq!(Json::Num(-3.0).as_usize(), None);
+        assert_eq!(Json::Num(-3.0).as_u64(), None);
+        assert_eq!(Json::Num(2.5).as_usize(), None);
+        assert_eq!(Json::Num(2.5).as_i64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_i64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_i64(), None);
+        assert_eq!(Json::Str("3".into()).as_i64(), None);
+        // in-range integers still pass
+        assert_eq!(Json::Num(-3.0).as_i64(), Some(-3));
+        assert_eq!(Json::Num(42.0).as_usize(), Some(42));
+        assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+    }
+
+    #[test]
+    fn usize_vec_is_all_or_nothing() {
+        let good = Json::parse("[1, 2, 3]").unwrap();
+        assert_eq!(good.usize_vec(), Some(vec![1, 2, 3]));
+        // one bad element poisons the whole vector instead of vanishing
+        let bad = Json::parse("[1, -2, 3]").unwrap();
+        assert_eq!(bad.usize_vec(), None);
+        let frac = Json::parse("[1, 2.5]").unwrap();
+        assert_eq!(frac.usize_vec(), None);
     }
 }

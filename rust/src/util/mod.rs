@@ -29,7 +29,11 @@ impl Stopwatch {
     }
 }
 
-/// Percentile of a pre-sorted slice (nearest-rank).
+/// Percentile of a pre-sorted slice by rounded linear indexing: the
+/// element at index `round(p/100 · (len−1))`. (NOT the textbook
+/// nearest-rank `ceil(p/100 · len)` definition this doc-comment used to
+/// claim — e.g. p50 of [1, 2, 3, 4] returns the element at index 2,
+/// where nearest-rank would return index 1.)
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;

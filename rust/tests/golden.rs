@@ -151,7 +151,7 @@ fn model_logits_match_jax() {
     }
 
     // DF-MPC quantized logits + first pair's coefficient vector
-    let (qckpt, reports) = run_dfmpc(&plan, &ckpt, DfmpcConfig::default(), None).unwrap();
+    let (qckpt, reports, _grids) = run_dfmpc(&plan, &ckpt, DfmpcConfig::default(), None).unwrap();
     let first_low = g.req("first_pair_low").unwrap().as_str().unwrap();
     let rep = reports.iter().find(|r| r.low == first_low).unwrap();
     let want_c = g.req("first_pair_c").unwrap().f32_vec().unwrap();

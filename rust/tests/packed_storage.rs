@@ -1,0 +1,451 @@
+//! Packed low-bit storage proofs + untrusted-input regressions (tier-1;
+//! the roundtrip proptests additionally run `--release` as a named CI
+//! step, because the bit-exactness claim must hold under release codegen).
+//!
+//! - `prop_*_roundtrip`: QTensor pack → dequantize is bit-identical f32
+//!   for every grid the quantizers emit — k ∈ {1, 2, 6, 8} DoReFa,
+//!   ternary (raw and alpha-folded), OCS split channels, DF-MPC's
+//!   Eq.-7-scaled channels — and falls back to fp32 (still bit-exact)
+//!   for anything off-grid.
+//! - `prop_every_method_packs_bit_exact`: `Method::apply_quantized` +
+//!   `PackedCheckpoint::pack` reproduces the fake-quant checkpoint
+//!   tensor-for-tensor, bitwise, for every method.
+//! - loader/manifest regressions: corrupt or truncated DFDS shards and
+//!   malformed zoo manifests error (naming the path) instead of
+//!   panicking, allocating unbounded memory, or silently defaulting.
+
+use std::path::{Path, PathBuf};
+
+use dfmpc::data::EvalShard;
+use dfmpc::model::zoo::Zoo;
+use dfmpc::model::{Checkpoint, PackedCheckpoint, Plan};
+use dfmpc::quant::compensate::scale_input_channels;
+use dfmpc::quant::ocs::quantize_ocs_grid;
+use dfmpc::quant::uniform::quantize_uniform_scaled;
+use dfmpc::quant::{ChanScale, GridMeta, Method};
+use dfmpc::tensor::qtensor::QTensor;
+use dfmpc::tensor::Tensor;
+use dfmpc::util::rng::Rng;
+
+const CASES: u64 = 25;
+
+fn rand_tensor(r: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, r.normal_vec(n).into_iter().map(|v| v * scale).collect())
+}
+
+fn assert_bit_identical(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} diverged ({x} vs {y})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QTensor roundtrip proptests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_grid_roundtrip_bit_exact() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(1000 + seed);
+        let spread = 0.1 + r.f32();
+        let w = rand_tensor(&mut r, vec![6, 4, 3, 3], spread);
+        for k in [1u32, 2, 6, 8] {
+            let scale = w.abs_max();
+            let q = quantize_uniform_scaled(&w, k, scale);
+            let meta = GridMeta::Uniform { bits: k, scale, chan: None };
+            let packed = QTensor::pack(&q, &meta);
+            assert!(packed.is_packed(), "seed {seed} k {k}: fell back to fp32");
+            assert!(
+                packed.stored_bytes() < q.data.len() * 4 / 2,
+                "seed {seed} k {k}: not actually smaller"
+            );
+            assert_bit_identical(&packed.dequantize(), &q, &format!("seed {seed} k {k}"));
+        }
+    }
+}
+
+#[test]
+fn prop_ternary_roundtrip_bit_exact() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(2000 + seed);
+        let w = rand_tensor(&mut r, vec![8, 4, 3, 3], 0.5);
+        let (t, _delta, alpha) = dfmpc::quant::ternary::ternarize(&w);
+        // raw pattern (alpha omitted from the weights, like DF-MPC low)
+        let raw = QTensor::pack(&t, &GridMeta::Ternary { alpha: 1.0 });
+        assert!(raw.is_packed(), "seed {seed}: raw pattern fell back");
+        assert_bit_identical(&raw.dequantize(), &t, &format!("seed {seed} raw"));
+        // alpha folded into the weights (the Original+a baseline)
+        let folded = t.clone().map(|v| v * alpha);
+        let fq = QTensor::pack(&folded, &GridMeta::Ternary { alpha });
+        assert!(fq.is_packed(), "seed {seed}: folded pattern fell back");
+        assert_bit_identical(&fq.dequantize(), &folded, &format!("seed {seed} folded"));
+    }
+}
+
+#[test]
+fn prop_ocs_split_roundtrip_bit_exact() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(3000 + seed);
+        let mut w = rand_tensor(&mut r, vec![8, 8, 3, 3], 0.4);
+        // make channel 2 an outlier so the split actually engages
+        for t in 0..8 {
+            for v in w.out_channel_mut(t)[2 * 9..3 * 9].iter_mut() {
+                *v *= 6.0;
+            }
+        }
+        let (q, meta) = quantize_ocs_grid(&w, 4, 0.15);
+        assert!(
+            matches!(&meta, GridMeta::Uniform { chan: Some(_), .. }),
+            "seed {seed}: no split channels"
+        );
+        let packed = QTensor::pack(&q, &meta);
+        assert!(packed.is_packed(), "seed {seed}: OCS output fell back to fp32");
+        assert_bit_identical(&packed.dequantize(), &q, &format!("seed {seed} ocs"));
+    }
+}
+
+#[test]
+fn prop_eq7_scaled_channels_roundtrip_bit_exact() {
+    // DF-MPC's high conv: k-bit grid, then input channels [offset, ...)
+    // multiplied in place by c — including hostile c values (0, tiny).
+    for seed in 0..CASES {
+        let mut r = Rng::new(4000 + seed);
+        let w = rand_tensor(&mut r, vec![6, 8, 3, 3], 0.4);
+        let scale = w.abs_max();
+        let mut q = quantize_uniform_scaled(&w, 6, scale);
+        let offset = (seed % 3) as usize;
+        let c: Vec<f32> = (0..4u64)
+            .map(|i| match (seed + i) % 4 {
+                0 => 0.0,
+                1 => 1e-20,
+                _ => r.f32() * 2.0,
+            })
+            .collect();
+        scale_input_channels(&mut q, offset, &c, false);
+        let meta = GridMeta::Uniform {
+            bits: 6,
+            scale,
+            chan: Some(ChanScale { axis: 1, offset, factors: c }),
+        };
+        // pack may legitimately fall back on pathological factors; the
+        // invariant is that dequantize NEVER diverges from the input
+        let packed = QTensor::pack(&q, &meta);
+        assert_bit_identical(&packed.dequantize(), &q, &format!("seed {seed} eq7"));
+    }
+}
+
+#[test]
+fn depthwise_axis0_channels_roundtrip() {
+    // depthwise pairs scale filter channels (dim 0), not input channels
+    let mut r = Rng::new(77);
+    let w = rand_tensor(&mut r, vec![4, 1, 3, 3], 0.4);
+    let scale = w.abs_max();
+    let mut q = quantize_uniform_scaled(&w, 6, scale);
+    let c = vec![0.5, 2.0];
+    scale_input_channels(&mut q, 1, &c, true);
+    let meta = GridMeta::Uniform {
+        bits: 6,
+        scale,
+        chan: Some(ChanScale { axis: 0, offset: 1, factors: c }),
+    };
+    let packed = QTensor::pack(&q, &meta);
+    assert!(packed.is_packed(), "depthwise pattern fell back to fp32");
+    assert_bit_identical(&packed.dequantize(), &q, "depthwise");
+}
+
+#[test]
+fn prop_off_grid_falls_back_fp32_but_stays_exact() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(5000 + seed);
+        let w = rand_tensor(&mut r, vec![64], 1.0);
+        for meta in [
+            GridMeta::Ternary { alpha: 1.0 },
+            GridMeta::Uniform { bits: 4, scale: w.abs_max(), chan: None },
+            GridMeta::Uniform { bits: 2, scale: 0.0, chan: None },
+        ] {
+            let packed = QTensor::pack(&w, &meta);
+            assert!(!packed.is_packed(), "seed {seed}: raw noise cannot be on-grid");
+            assert_bit_identical(&packed.dequantize(), &w, &format!("seed {seed} fallback"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// whole-model: every Method packs bit-exactly
+// ---------------------------------------------------------------------------
+
+const TINY: &str = r#"{
+  "name": "tiny", "input": [3, 16, 16], "num_classes": 6,
+  "ops": [
+    {"op": "conv", "name": "c1", "cin": 3, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c1_bn", "ch": 8},
+    {"op": "relu"},
+    {"op": "conv", "name": "c2", "cin": 8, "cout": 12, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c2_bn", "ch": 12},
+    {"op": "relu"},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc", "cin": 12, "cout": 6}
+  ],
+  "pairs": [{"low": "c1", "high": "c2", "offset": 0}],
+  "bn_of": {"c1": "c1_bn", "c2": "c2_bn"}
+}"#;
+
+/// Every quantization method, spelled so each code path runs (ternary and
+/// uniform DF-MPC lows, split OCS, alpha-folded ternary, small ZeroQ).
+const ALL_METHODS: &[&str] = &[
+    "dfmpc:2/6",
+    "dfmpc:3/6",
+    "original:2/6",
+    "original-alpha:2/6",
+    "uniform:4",
+    "uniform:8",
+    "dfq:6",
+    "omse:4",
+    "ocs:4:0.2",
+    "zeroq:6:4:2",
+];
+
+#[test]
+fn prop_every_method_packs_bit_exact() {
+    let plan = Plan::parse(TINY).unwrap();
+    plan.validate().unwrap();
+    for seed in [11u64, 23] {
+        let ckpt = Checkpoint::random_init(&plan, &mut Rng::new(seed));
+        for spec in ALL_METHODS {
+            let method = Method::parse(spec).unwrap();
+            let q = method.apply_quantized(&plan, &ckpt, None).unwrap();
+            let packed = PackedCheckpoint::pack(&q.ckpt, &q.grids);
+            // every weight tensor must actually be on its grid — a
+            // silent fp32 fallback would falsify the size accounting
+            for name in ["c1.w", "c2.w", "fc.w"] {
+                assert!(
+                    packed.get(name).unwrap().is_packed(),
+                    "{spec} seed {seed}: {name} fell back to fp32"
+                );
+            }
+            let deq = packed.dequantize();
+            assert_eq!(deq.order, q.ckpt.order, "{spec}: tensor order");
+            for (name, want) in &q.ckpt.tensors {
+                assert_bit_identical(
+                    deq.get(name).unwrap(),
+                    want,
+                    &format!("{spec} seed {seed} tensor {name}"),
+                );
+            }
+            let fp32_bytes: usize = ckpt.tensors.values().map(|t| t.data.len() * 4).sum();
+            assert!(
+                packed.stored_bytes() < fp32_bytes,
+                "{spec}: packed store not smaller than fp32"
+            );
+        }
+    }
+}
+
+#[test]
+fn packed_checkpoint_disk_roundtrip_all_methods() {
+    let plan = Plan::parse(TINY).unwrap();
+    let ckpt = Checkpoint::random_init(&plan, &mut Rng::new(42));
+    for spec in ["dfmpc:2/6", "ocs:4:0.2", "uniform:4"] {
+        let method = Method::parse(spec).unwrap();
+        let q = method.apply_quantized(&plan, &ckpt, None).unwrap();
+        let packed = PackedCheckpoint::pack(&q.ckpt, &q.grids);
+        let path = std::env::temp_dir()
+            .join(format!("dfmq_{}.dfmq", spec.replace([':', '/'], "_")));
+        packed.save(&path).unwrap();
+        let back = PackedCheckpoint::load(&path).unwrap();
+        assert_eq!(back.stored_bytes(), packed.stored_bytes(), "{spec}");
+        let deq = back.dequantize();
+        for (name, want) in &q.ckpt.tensors {
+            assert_bit_identical(deq.get(name).unwrap(), want, &format!("{spec} {name}"));
+        }
+        std::fs::remove_file(path).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DFDS eval-shard loader hardening
+// ---------------------------------------------------------------------------
+
+fn write_shard(path: &Path, n: u32, c: u32, h: u32, w: u32, ncls: u32) {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(dfmpc::data::loader::MAGIC);
+    for word in [1u32, n, c, h, w, ncls] {
+        bytes.extend_from_slice(&word.to_le_bytes());
+    }
+    for i in 0..n {
+        bytes.extend_from_slice(&((i % ncls.max(1)) as i32).to_le_bytes());
+    }
+    let numel = (n as usize) * (c as usize) * (h as usize) * (w as usize);
+    for i in 0..numel {
+        bytes.extend_from_slice(&(i as f32 * 0.25).to_le_bytes());
+    }
+    std::fs::write(path, bytes).unwrap();
+}
+
+#[test]
+fn shard_loads_and_batch_clamps_out_of_range() {
+    let path = std::env::temp_dir().join("dfds_ok.dfds");
+    write_shard(&path, 5, 2, 3, 3, 4);
+    let shard = EvalShard::load(&path).unwrap();
+    assert_eq!(shard.n(), 5);
+    assert_eq!(shard.classes, 4);
+    // regression: start > n used to underflow-panic in `len.min(n - start)`
+    let (x, labels) = shard.batch(9, 3);
+    assert_eq!(x.shape, vec![0, 2, 3, 3]);
+    assert!(labels.is_empty());
+    // start == n: empty, not a panic
+    let (x, labels) = shard.batch(5, 1);
+    assert_eq!(x.shape[0], 0);
+    assert!(labels.is_empty());
+    // tail batch clamps len
+    let (x, labels) = shard.batch(3, 100);
+    assert_eq!(x.shape[0], 2);
+    assert_eq!(labels.len(), 2);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn shard_rejects_overflowing_header_extents() {
+    let path = std::env::temp_dir().join("dfds_overflow.dfds");
+    // extents whose product overflows 64-bit: must error, not allocate
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(dfmpc::data::loader::MAGIC);
+    for word in [1u32, u32::MAX, u32::MAX, u32::MAX, u32::MAX, 10] {
+        bytes.extend_from_slice(&word.to_le_bytes());
+    }
+    std::fs::write(&path, bytes).unwrap();
+    let err = EvalShard::load(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("overflows") && msg.contains("dfds_overflow"), "{msg}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn shard_rejects_hostile_allocation_demand() {
+    // a tiny file whose header demands gigabytes: the size check must
+    // fire before any allocation happens
+    let path = std::env::temp_dir().join("dfds_hostile.dfds");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(dfmpc::data::loader::MAGIC);
+    for word in [1u32, 1_000_000, 64, 64, 64, 10] {
+        bytes.extend_from_slice(&word.to_le_bytes());
+    }
+    std::fs::write(&path, bytes).unwrap();
+    let err = EvalShard::load(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("header claims") && msg.contains("dfds_hostile"), "{msg}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn shard_rejects_truncated_file_naming_path() {
+    let path = std::env::temp_dir().join("dfds_truncated.dfds");
+    write_shard(&path, 4, 1, 2, 2, 3);
+    let full = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() - 10]).unwrap();
+    let err = EvalShard::load(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("dfds_truncated"), "error must name the shard: {msg}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn shard_rejects_out_of_range_labels() {
+    let path = std::env::temp_dir().join("dfds_badlabel.dfds");
+    write_shard(&path, 3, 1, 2, 2, 4);
+    let mut bytes = std::fs::read(&path).unwrap();
+    // label[1] := -7 (header block is 8 magic + 24 header, labels follow)
+    bytes[32 + 4..32 + 8].copy_from_slice(&(-7i32).to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    let err = EvalShard::load(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("label[1]") && msg.contains("-7"), "{msg}");
+    std::fs::remove_file(path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// zoo manifest hardening
+// ---------------------------------------------------------------------------
+
+fn manifest_dir(tag: &str, manifest: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dfmpc_manifest_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+#[test]
+fn manifest_rejects_malformed_pallas_batch() {
+    // regression: a malformed pallas_batch silently defaulted to 8
+    let dir = manifest_dir(
+        "pallas",
+        r#"{"models": [{"id": "m1", "arch": "a", "dataset": "d", "plan": "p.json",
+            "ckpt": "c.dfmc", "hlo": {}, "pallas_hlo": "x.hlo", "pallas_batch": -3}],
+            "datasets": []}"#,
+    );
+    let err = Zoo::load(&dir).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pallas_batch") && msg.contains("m1"), "{msg}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn manifest_rejects_negative_classes() {
+    // regression: "classes": -3 used to load as 0 through an `as` cast
+    let dir = manifest_dir(
+        "classes",
+        r#"{"models": [], "datasets": [{"name": "d", "classes": -3, "eval": "e.dfds",
+            "eval_seed": 1, "n": 10}]}"#,
+    );
+    let err = Zoo::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("classes"), "{err:#}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn manifest_rejects_fractional_eval_seed() {
+    // regression: eval_seed went through a lossy `as_f64() as u64`
+    let dir = manifest_dir(
+        "seed",
+        r#"{"models": [], "datasets": [{"name": "d", "classes": 10, "eval": "e.dfds",
+            "eval_seed": 1.5, "n": 10}]}"#,
+    );
+    let err = Zoo::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("eval_seed"), "{err:#}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn plan_rejects_malformed_pair_offset() {
+    // regression: a present-but-malformed pair offset used to silently
+    // load as 0, mis-aiming DF-MPC's Eq.-7 channel slice
+    let neg = TINY.replace(r#""offset": 0"#, r#""offset": -1"#);
+    assert!(Plan::parse(&neg).is_err(), "negative offset must error");
+    let frac = TINY.replace(r#""offset": 0"#, r#""offset": 1.5"#);
+    assert!(Plan::parse(&frac).is_err(), "fractional offset must error");
+    // absent offset still defaults to 0
+    let absent = TINY.replace(r#", "offset": 0"#, "");
+    assert_eq!(Plan::parse(&absent).unwrap().pairs[0].offset, 0);
+}
+
+#[test]
+fn manifest_still_loads_wellformed_entries() {
+    let dir = manifest_dir(
+        "ok",
+        r#"{"models": [{"id": "m1", "arch": "a", "dataset": "d", "plan": "p.json",
+            "ckpt": "c.dfmc", "hlo": {}, "pallas_hlo": "x.hlo", "pallas_batch": 16}],
+            "datasets": [{"name": "d", "classes": 10, "eval": "e.dfds",
+            "eval_seed": 7, "n": 64}]}"#,
+    );
+    let zoo = Zoo::load(&dir).unwrap();
+    assert_eq!(zoo.models[0].pallas_hlo.as_ref().unwrap().0, 16);
+    assert_eq!(zoo.datasets[0].eval_seed, 7);
+    assert_eq!(zoo.datasets[0].classes, 10);
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -91,7 +91,7 @@ fn quantized_params_swap_in_place() {
     let (x, _) = model.shard.batch(0, abatch);
     let fp = worker.infer("swap", x.clone()).unwrap();
     // swap in DF-MPC weights without recompiling
-    let (qckpt, _) = dfmpc(&model.plan, &model.ckpt, DfmpcConfig::default(), None).unwrap();
+    let (qckpt, _, _) = dfmpc(&model.plan, &model.ckpt, DfmpcConfig::default(), None).unwrap();
     worker.set_params("swap", &model.plan, &qckpt).unwrap();
     let q = worker.infer("swap", x.clone()).unwrap();
     assert!(fp.max_abs_diff(&q) > 1e-4, "param swap had no effect");

@@ -82,28 +82,104 @@ fn batch_of(img: &Tensor, n: usize) -> Tensor {
     Tensor::new(vec![n, img.shape[0], img.shape[1], img.shape[2]], data)
 }
 
+/// Every quantization method, spelled so each grid-emission path runs.
+const ALL_METHODS: &[&str] = &[
+    "fp32",
+    "dfmpc:2/6",
+    "dfmpc:3/6",
+    "original:2/6",
+    "original-alpha:2/6",
+    "uniform:4",
+    "dfq:6",
+    "omse:4",
+    "ocs:4:0.2",
+    "zeroq:6:4:2",
+];
+
 #[test]
 fn registry_served_logits_bit_identical_to_offline_apply() {
+    // The registry keeps every quantized variant bit-packed and serves
+    // from GEMM panels dequantized out of the packed store — the logits
+    // must still be bit-identical to offline fake-quant + Engine, for
+    // EVERY method.
     let (plan, ckpt) = fixture();
     let registry = registry_over(&plan, &ckpt, usize::MAX);
     let lane = RegistryLane::new(Arc::clone(&registry), None);
     let img = dfmpc::data::synth::render_image(9001, 5, 10).0;
     let x = batch_of(&img, 3);
 
-    for spec in ["fp32", "dfmpc:2/6", "uniform:4"] {
+    for spec in ALL_METHODS {
         let method = Method::parse(spec).unwrap();
         let key = format!("tiny32@{}", method.id());
         // offline: quantize + serial reference engine (the oracle)
         let qckpt = method.apply(&plan, &ckpt, None).unwrap();
         let want = Engine::new(&plan, &qckpt).forward(&x).unwrap();
-        // served: lazy prepare through the registry lane
+        // served: lazy prepare through the registry lane (packed storage)
         let got = lane.infer_batch(&key, x.clone()).unwrap();
         assert_eq!(want.shape, got.shape, "{spec}");
-        assert_eq!(want.data, got.data, "{spec}: registry-served logits diverged");
+        assert_eq!(want.data, got.data, "{spec}: packed-storage-served logits diverged");
+        // the served variant really is packed (fp32 is the storage form
+        // of the base and stays shared instead)
+        let m = registry.get_or_prepare(&key).unwrap();
+        if *spec == "fp32" {
+            assert!(m.packed.is_none());
+        } else {
+            let packed = m.packed.as_ref().expect("quantized variant must be packed");
+            assert!(packed.packed_count() > 0, "{spec}: nothing bit-packed");
+        }
     }
     let snap = registry.snapshot();
-    assert_eq!(snap.prepared, 3);
-    assert_eq!(snap.variants.len(), 3);
+    assert_eq!(snap.prepared, ALL_METHODS.len() as u64);
+    assert_eq!(snap.variants.len(), ALL_METHODS.len());
+}
+
+#[test]
+fn fixed_budget_holds_strictly_more_packed_variants() {
+    let (plan, ckpt) = fixture();
+    // what the retired accounting charged one low-bit variant: the full
+    // fake-quant fp32 checkpoint + the GEMM panels
+    let probe = registry_over(&plan, &ckpt, usize::MAX);
+    let m = probe.get_or_prepare("tiny32@uniform:4").unwrap();
+    let offline = Method::parse("uniform:4").unwrap().apply(&plan, &ckpt, None).unwrap();
+    let full_ckpt_bytes: usize = offline.tensors.values().map(|t| t.data.len() * 4).sum();
+    let panel_bytes: usize = m.panels.values().map(|p| p.floats() * 4).sum();
+    let legacy = full_ckpt_bytes + panel_bytes;
+    assert!(
+        m.bytes < legacy,
+        "packed residency {} must undercut the fp32-resident {legacy}",
+        m.bytes
+    );
+
+    // a budget that fits exactly two variants under the old accounting
+    // must now hold strictly more low-bit variants resident
+    let budget = 2 * legacy + legacy / 4;
+    let registry = registry_over(&plan, &ckpt, budget);
+    let keys = [
+        "tiny32@uniform:2",
+        "tiny32@uniform:3",
+        "tiny32@uniform:4",
+        "tiny32@uniform:6",
+        "tiny32@original:2/6",
+    ];
+    for key in &keys {
+        registry.get_or_prepare(key).unwrap();
+    }
+    let snap = registry.snapshot();
+    assert!(
+        snap.variants.len() > 2,
+        "only {} variants resident in a 2-legacy-variant budget",
+        snap.variants.len()
+    );
+    assert!(snap.bytes_resident <= budget);
+    // the eviction counter accounts for exactly the overflowed variants
+    assert_eq!(
+        snap.evicted as usize,
+        keys.len() - snap.variants.len(),
+        "evictions {} vs {} prepared / {} resident",
+        snap.evicted,
+        keys.len(),
+        snap.variants.len()
+    );
 }
 
 #[test]
