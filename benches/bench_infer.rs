@@ -24,10 +24,24 @@
 //! (re-uploading all ~100 parameter literals per call) vs the reference
 //! engine. The buffer-vs-literal delta is the original §Perf evidence.
 //!
+//! Every always-on part also feeds a machine-readable run record that is
+//! appended to `BENCH_infer.json` at the repo root (schema
+//! `dfmpc-bench-infer/v1`): engine throughput, GEMM speedup, serving
+//! req/s with latency percentiles, and resident packed bytes per
+//! registry variant — so regressions diff as data, not prose.
+//!
 //!     cargo bench --bench bench_infer
+
+// same intentional-allow list as lib.rs (each bench target is a separate
+// crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
 
 mod common;
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -39,6 +53,7 @@ use dfmpc::model::{Checkpoint, ModelRegistry, Plan};
 use dfmpc::runtime::pjrt::{flat_params, PjrtRuntime};
 use dfmpc::runtime::PJRT_AVAILABLE;
 use dfmpc::tensor::Tensor;
+use dfmpc::util::json::Json;
 use dfmpc::util::rng::Rng;
 use dfmpc::util::threadpool::ThreadPool;
 
@@ -76,7 +91,7 @@ const RESNET_STYLE: &str = r#"{
   "bn_of": {}
 }"#;
 
-fn reference_engine_scaling() {
+fn reference_engine_scaling() -> Json {
     let plan = Plan::parse(RESNET_STYLE).unwrap();
     let ckpt = Checkpoint::random_init(&plan, &mut Rng::new(42));
     let batch = 32;
@@ -107,6 +122,15 @@ fn reference_engine_scaling() {
     let b = par.forward(&x).unwrap();
     assert_eq!(a.data, b.data, "threaded engine diverged from serial oracle");
     println!("    parity: {} logits bit-identical across thread counts", a.data.len());
+
+    Json::obj(vec![
+        ("batch", Json::num(batch as f64)),
+        ("serial_img_s", Json::num(throughput(batch, rs.mean_ms))),
+        ("serial_mean_ms", Json::num(rs.mean_ms)),
+        ("pooled_threads", Json::num(threads as f64)),
+        ("pooled_img_s", Json::num(throughput(batch, rp.mean_ms))),
+        ("pooled_mean_ms", Json::num(rp.mean_ms)),
+    ])
 }
 
 /// Before/after evidence for the GEMM microkernel rewrite (§Perf in the
@@ -118,7 +142,7 @@ fn reference_engine_scaling() {
 /// so the comparison concedes the old kernel its sparsity shortcut —
 /// and the microkernel must still win by >= 1.5x on a multi-core host
 /// (the §Perf acceptance floor; skipped on tiny CI boxes).
-fn gemm_microkernel_ab() {
+fn gemm_microkernel_ab() -> Json {
     use dfmpc::tensor::ops::{gemm_rows_reference, im2col, matmul, relu};
 
     let batch = 32;
@@ -186,6 +210,12 @@ fn gemm_microkernel_ab() {
             "microkernel did not clear the 1.5x floor over the retired kernel: {speedup:.2}x"
         );
     }
+
+    Json::obj(vec![
+        ("retired_mean_ms", Json::num(rs_old.mean_ms)),
+        ("microkernel_mean_ms", Json::num(rs_new.mean_ms)),
+        ("speedup_vs_retired", Json::num(speedup)),
+    ])
 }
 
 /// Closed-loop many-client serving benchmark over the lane pool: the
@@ -193,7 +223,16 @@ fn gemm_microkernel_ab() {
 /// from 1 lane to N on a multi-core host. Each lane runs the *serial*
 /// reference engine so lanes (not intra-op threads) are the unit of
 /// parallelism being measured.
-fn lane_pool_scaling() {
+/// `p` in [0, 1] over an ascending sample list (nearest-rank).
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * p).round() as usize;
+    sorted_ms[idx]
+}
+
+fn lane_pool_scaling() -> Json {
     let plan = Arc::new(Plan::parse(RESNET_STYLE).unwrap());
     let ckpt = Arc::new(Checkpoint::random_init(&plan, &mut Rng::new(42)));
     let cores = ThreadPool::default_threads();
@@ -210,8 +249,9 @@ fn lane_pool_scaling() {
         queue_depth: 256,
         input_shape: Some(vec![3, 32, 32]),
     };
-    // closed-loop load against one pool; returns req/s
-    let drive = |pool: &Arc<LanePool>, lanes_n: usize| -> f64 {
+    // closed-loop load against one pool; returns req/s + sorted
+    // per-request latencies (ms) for the percentile report
+    let drive = |pool: &Arc<LanePool>, lanes_n: usize| -> (f64, Vec<f64>) {
         // warm every lane (packs/prepares outside the timed window)
         for _ in 0..lanes_n {
             let _ = pool.classify(img.clone()).unwrap();
@@ -222,17 +262,35 @@ fn lane_pool_scaling() {
                 let p = Arc::clone(pool);
                 let img = img.clone();
                 std::thread::spawn(move || {
+                    let mut lat = Vec::with_capacity(reqs);
                     for _ in 0..reqs {
+                        let t = Instant::now();
                         let _ = p.classify(img.clone()).unwrap();
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
                     }
+                    lat
                 })
             })
             .collect();
+        let mut lats: Vec<f64> = Vec::with_capacity(clients * reqs);
         for h in handles {
-            h.join().unwrap();
+            lats.extend(h.join().unwrap());
         }
-        (clients * reqs) as f64 / t0.elapsed().as_secs_f64()
+        let rps = (clients * reqs) as f64 / t0.elapsed().as_secs_f64();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (rps, lats)
     };
+    let latency_row = |label: &str, lanes_n: usize, rps: f64, lats: &[f64]| -> Json {
+        Json::obj(vec![
+            ("config", Json::str(label)),
+            ("lanes", Json::num(lanes_n as f64)),
+            ("req_s", Json::num(rps)),
+            ("p50_ms", Json::num(percentile(lats, 0.50))),
+            ("p95_ms", Json::num(percentile(lats, 0.95))),
+            ("p99_ms", Json::num(percentile(lats, 0.99))),
+        ])
+    };
+    let mut rows: Vec<Json> = Vec::new();
 
     let mut one_lane_rps = 0.0f64;
     let mut direct_rps = 0.0f64;
@@ -244,7 +302,8 @@ fn lane_pool_scaling() {
             })
             .collect();
         let pool = Arc::new(LanePool::start(lanes, "bench".into(), cfg.clone()));
-        let rps = drive(&pool, lanes_n);
+        let (rps, lats) = drive(&pool, lanes_n);
+        rows.push(latency_row("direct", lanes_n, rps, &lats));
         let snap = pool.snapshot();
         let busiest = snap.lanes.iter().map(|l| l.requests).max().unwrap_or(0);
         println!(
@@ -285,7 +344,8 @@ fn lane_pool_scaling() {
         "bench@fp32".into(),
         cfg,
     ));
-    let reg_rps = drive(&pool, n_lanes);
+    let (reg_rps, reg_lats) = drive(&pool, n_lanes);
+    rows.push(latency_row("registry-fp32", n_lanes, reg_rps, &reg_lats));
     println!(
         "    lanes={n_lanes} (registry-served fp32): {reg_rps:>7.1} req/s ({:.2}x of direct)",
         reg_rps / direct_rps
@@ -297,6 +357,12 @@ fn lane_pool_scaling() {
             "registry-served throughput regressed: {reg_rps:.1} vs direct {direct_rps:.1} req/s"
         );
     }
+
+    Json::obj(vec![
+        ("clients", Json::num(clients as f64)),
+        ("reqs_per_client", Json::num(reqs as f64)),
+        ("rows", Json::Arr(rows)),
+    ])
 }
 
 fn pjrt_comparison() {
@@ -367,7 +433,7 @@ fn pjrt_comparison() {
 /// low-bit variants. Prints the per-variant residency and the
 /// variants-per-budget ratio, and asserts the packed accounting undercuts
 /// the retired fp32-resident accounting.
-fn packed_capacity() {
+fn packed_capacity() -> Json {
     use dfmpc::quant::Method;
 
     let plan = Arc::new(Plan::parse(RESNET_STYLE).unwrap());
@@ -376,6 +442,9 @@ fn packed_capacity() {
     let registry = ModelRegistry::new(usize::MAX, None);
     registry.register_base("bench", Arc::clone(&plan), Arc::clone(&ckpt)).unwrap();
     let m = registry.get_or_prepare("bench@uniform:4").unwrap();
+    // a second resident variant so the per-variant report shows the fp32
+    // (packed_bytes = 0, shared base) vs packed accounting side by side
+    let _ = registry.get_or_prepare("bench@fp32").unwrap();
     let offline = Method::parse("uniform:4").unwrap().apply(&plan, &ckpt, None).unwrap();
     let full_ckpt_bytes: usize = offline.tensors.values().map(|t| t.data.len() * 4).sum();
     let panel_bytes: usize = m.panels.values().map(|p| p.floats() * 4).sum();
@@ -394,12 +463,60 @@ fn packed_capacity() {
         "packed residency {} must undercut the fp32-resident {legacy} B",
         m.bytes
     );
+
+    let variants: Vec<Json> = registry
+        .snapshot()
+        .variants
+        .iter()
+        .map(|v| {
+            Json::obj(vec![
+                ("key", Json::str(v.key.as_str())),
+                ("resident_bytes", Json::num(v.bytes as f64)),
+                ("packed_bytes", Json::num(v.packed_bytes as f64)),
+            ])
+        })
+        .collect();
+    Json::Arr(variants)
+}
+
+/// Append this run's record to `BENCH_infer.json` at the repo root
+/// (read-modify-write through [`Json`], preserving prior runs).
+fn write_report(engine: Json, gemm: Json, serving: Json, variants: Json) {
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let run = Json::obj(vec![
+        ("unix_time", Json::num(unix_time as f64)),
+        ("host_threads", Json::num(ThreadPool::default_threads() as f64)),
+        ("engine", engine),
+        ("gemm", gemm),
+        ("serving", serving),
+        ("variants", variants),
+    ]);
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap_or(Path::new("."));
+    let path = root.join("BENCH_infer.json");
+    let prior = std::fs::read_to_string(&path).ok();
+    let mut runs: Vec<Json> = prior
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|doc| doc.get("runs").and_then(|r| r.as_arr().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    runs.push(run);
+    let doc = Json::obj(vec![
+        ("schema", Json::str("dfmpc-bench-infer/v1")),
+        ("runs", Json::Arr(runs)),
+    ]);
+    match std::fs::write(&path, doc.dump() + "\n") {
+        Ok(()) => println!("run record appended -> {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }
 
 fn main() {
-    reference_engine_scaling();
-    gemm_microkernel_ab();
-    lane_pool_scaling();
-    packed_capacity();
+    let engine = reference_engine_scaling();
+    let gemm = gemm_microkernel_ab();
+    let serving = lane_pool_scaling();
+    let variants = packed_capacity();
     pjrt_comparison();
+    write_report(engine, gemm, serving, variants);
 }

@@ -13,6 +13,13 @@
 //!     cargo run --release --example e2e_pipeline
 //!     cargo run --release --example e2e_pipeline -- --limit 500
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use std::sync::Arc;
 
 use anyhow::{Context, Result};

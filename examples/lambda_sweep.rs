@@ -5,6 +5,13 @@
 //!     cargo run --release --example lambda_sweep
 //!     cargo run --release --example lambda_sweep -- --model resnet18_cifar10-sim --limit 500
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use std::sync::Arc;
 
 use anyhow::Result;

@@ -6,6 +6,13 @@
 //!     cargo run --release --example loss_surface
 //!     cargo run --release --example loss_surface -- --grid 9 --span 0.5 --images 128
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use anyhow::Result;
 use dfmpc::harness::Harness;
 use dfmpc::quant::{dfmpc, naive, DfmpcConfig};

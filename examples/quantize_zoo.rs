@@ -9,6 +9,13 @@
 //! *shape* must hold: direct MP2/6 collapses toward chance, DF-MPC
 //! recovers near FP32 and beats the 4-bit baselines at smaller size.
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use anyhow::Result;
 use dfmpc::harness::{run_method, Harness, MethodRow};
 use dfmpc::quant::Method;

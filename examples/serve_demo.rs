@@ -6,6 +6,13 @@
 //!     cargo run --release --example serve_demo
 //!     cargo run --release --example serve_demo -- --clients 4 --requests 100 --method fp32
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use std::sync::Arc;
 
 use anyhow::{Context, Result};

@@ -5,6 +5,13 @@
 //!     cargo run --release --example weight_hist
 //!     cargo run --release --example weight_hist -- --model resnet18_imagenet-sim --layers 2
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use anyhow::Result;
 use dfmpc::harness::Harness;
 use dfmpc::quant::{dfmpc, naive, DfmpcConfig};

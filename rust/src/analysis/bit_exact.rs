@@ -1,0 +1,85 @@
+//! `bit-exactness`: kernel modules must not introduce fp reassociation
+//! hazards.
+//!
+//! The DF-MPC "data-free lossless" claim (Eq. 27 closed-form
+//! compensation) is only checkable because served logits are
+//! bit-identical to the reference math — which holds only if the runtime
+//! never reassociates or re-rounds float accumulation. Banned in kernel
+//! modules: `f32::mul_add`/`fma` (fused rounding differs from
+//! mul-then-add), `.sum()`/`.fold()` float reductions (iterator impls
+//! may change order; the sanctioned form is the explicit scalar loop),
+//! and `#[cfg(target_feature)]`-gated fp math (forks behaviour per
+//! host). Integer reductions are exempt — integer addition is
+//! associative — when the binding or turbofish proves integrality.
+
+use super::lexer::{Token, TokenKind};
+use super::{text_at, Finding, Source, RULE_BIT_EXACT};
+
+/// Integer type names that prove a reduction cannot drift.
+const INT_TYPES: &str = "usize u64 u32 u16 u8 isize i64 i32 i16 i8";
+
+const TF_MSG: &str = "`target_feature`-gated code forks kernel behaviour per host — \
+                      bit-exactness requires one code path";
+
+/// Kernel modules on the bit-exactness contract: the tensor kernels, the
+/// inference engine, and every `quant` solve path.
+fn in_scope(module: &str) -> bool {
+    let kernel = module == "tensor/ops" || module == "infer/engine";
+    kernel || module == "quant" || module.starts_with("quant/")
+}
+
+pub fn check(src: &Source, out: &mut Vec<Finding>) {
+    let scoped = src.module.as_deref().is_some_and(in_scope);
+    if !scoped {
+        return;
+    }
+    let tokens = &src.lexed.tokens;
+    for (k, t) in tokens.iter().enumerate() {
+        if t.kind != TokenKind::Ident || src.in_tests(t.line) {
+            continue;
+        }
+        let prev = if k > 0 { text_at(tokens, k - 1) } else { "" };
+        let next = text_at(tokens, k + 1);
+        match t.text.as_str() {
+            "mul_add" | "fma" if (prev == "." || prev == "::") && next == "(" => {
+                let msg = format!(
+                    "`{}` rounds once where the reference kernel rounds twice — fused \
+                     fp math changes served logits",
+                    t.text
+                );
+                out.push(src.finding(RULE_BIT_EXACT, t.line, msg));
+            }
+            "sum" | "fold" if prev == "." && (next == "(" || next == "::") => {
+                if int_annotated_let(tokens, k) || turbofish_int(tokens, k) {
+                    continue;
+                }
+                let msg = format!(
+                    "float `.{}` reduction in a kernel module — keep the reference \
+                     scalar accumulation loop, or waive with why the order is fixed",
+                    t.text
+                );
+                out.push(src.finding(RULE_BIT_EXACT, t.line, msg));
+            }
+            "target_feature" => {
+                out.push(src.finding(RULE_BIT_EXACT, t.line, TF_MSG.to_string()));
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `let total: usize = xs.iter().sum();` — the annotated integer binding
+/// proves the reduction is integral.
+fn int_annotated_let(tokens: &[Token], k: usize) -> bool {
+    let s = super::statement_start(tokens, k);
+    text_at(tokens, s) == "let"
+        && text_at(tokens, s + 2) == ":"
+        && INT_TYPES.split(' ').any(|ty| ty == text_at(tokens, s + 3))
+}
+
+/// `.sum::<usize>()` — an integer turbofish proves the same.
+fn turbofish_int(tokens: &[Token], k: usize) -> bool {
+    text_at(tokens, k + 1) == "::"
+        && text_at(tokens, k + 2) == "<"
+        && INT_TYPES.split(' ').any(|ty| ty == text_at(tokens, k + 3))
+}

@@ -1,0 +1,72 @@
+//! `checked-arith`: raw `+`/`-`/`*` on header-derived sizes in the
+//! DFMC/DFMQ/DFDS parsing functions must go through `checked_*`.
+//!
+//! An attacker controls every integer in an envelope header; unchecked
+//! arithmetic on them wraps in release builds and turns a bounds check
+//! into a heap overread (PR 5 hardened exactly this). The rule scopes to
+//! the parse functions of the loader and checkpoint modules (`load`,
+//! `batch`, `payload_slice`, `read_*`, `parse*`); float math and
+//! literal-only arithmetic are exempt, and sites whose operands are
+//! already clamped by an earlier validation carry waivers saying so.
+
+use super::lexer::{Token, TokenKind};
+use super::{text_at, Finding, Source, RULE_CHECKED};
+
+/// Modules that parse untrusted DFMC/DFMQ/DFDS bytes.
+const SCOPE: &str = "data/loader model/checkpoint";
+/// Exact parse-path function names; `read_*`/`parse*` prefixes also match.
+const FNS: &str = "load batch payload_slice";
+const OPS: &str = "+ - * += -= *=";
+
+fn scoped_fn(name: &str) -> bool {
+    FNS.split(' ').any(|f| f == name) || name.starts_with("read_") || name.starts_with("parse")
+}
+
+pub fn check(src: &Source, out: &mut Vec<Finding>) {
+    if !src.in_module_list(SCOPE) {
+        return;
+    }
+    let tokens = &src.lexed.tokens;
+    for span in &src.fns {
+        if !scoped_fn(&span.name) || src.in_tests(tokens[span.fn_idx].line) {
+            continue;
+        }
+        for k in span.open_idx + 1..span.close_idx {
+            let t = &tokens[k];
+            if t.kind != TokenKind::Punct || !OPS.split(' ').any(|op| op == t.text) {
+                continue;
+            }
+            // binary position only: something value-like on the left
+            // (otherwise `*deref`, `-neg` and `&mut` patterns match)
+            let prev = &tokens[k - 1];
+            let left_value = matches!(prev.kind, TokenKind::Ident | TokenKind::Number)
+                || prev.text == ")"
+                || prev.text == "]";
+            if !left_value {
+                continue;
+            }
+            let next = &tokens[k + 1];
+            if is_float(prev) || is_float(next) {
+                continue;
+            }
+            if prev.kind == TokenKind::Number && next.kind == TokenKind::Number {
+                continue;
+            }
+            let msg = format!(
+                "unchecked `{}` on parse-path arithmetic — use `checked_*`, or waive \
+                 with the bound that makes overflow impossible",
+                t.text
+            );
+            out.push(src.finding(RULE_CHECKED, t.line, msg));
+        }
+    }
+}
+
+fn is_float(t: &Token) -> bool {
+    if t.kind != TokenKind::Number {
+        return false;
+    }
+    let txt = t.text.as_str();
+    let exp = !txt.starts_with("0x") && txt.contains('e');
+    txt.contains('.') || txt.ends_with("f32") || txt.ends_with("f64") || exp
+}

@@ -1,0 +1,349 @@
+//! Minimal Rust lexer for the repo's own static analysis.
+//!
+//! Produces a token stream plus comment trivia, each tagged with the
+//! 1-based source line it starts on. Line and block comments (nested),
+//! plain and raw strings, byte strings, char literals and lifetimes are
+//! consumed correctly, so the rules never pattern-match inside a string
+//! or a comment — the false-positive mode that disqualifies regex grep.
+//!
+//! This is NOT a full Rust lexer (no unicode identifiers, no exotic
+//! numeric forms beyond what the repo uses); it is exactly the subset the
+//! `analysis` rules need, dependency-free by construction.
+
+/// What a token is, as coarsely as the rules need.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokenKind {
+    /// identifier or keyword
+    Ident,
+    /// integer or float literal, suffix included (`1_000`, `0.5f32`)
+    Number,
+    /// string, raw-string or byte-string literal
+    Str,
+    /// char or byte-char literal
+    Char,
+    /// `'a` in `&'a T`
+    Lifetime,
+    /// operator / punctuation; multi-char operators are one token
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One `//` or `/* */` comment with its line extent (inclusive).
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: usize,
+    pub end_line: usize,
+    pub text: String,
+}
+
+/// Lexed source: tokens (trivia stripped) plus the comments.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+/// Multi-char operators; the lexer takes the longest match first so
+/// `..=` never lexes as `..` + `=`.
+const PUNCTS_3: &str = "..= <<= >>=";
+const PUNCTS_2: &str = "-> => :: .. == != <= >= && || += -= *= /= %= ^= &= |= << >>";
+
+fn punct_len(rest: &[u8]) -> usize {
+    if PUNCTS_3.split(' ').any(|p| rest.starts_with(p.as_bytes())) {
+        return 3;
+    }
+    if PUNCTS_2.split(' ').any(|p| rest.starts_with(p.as_bytes())) {
+        return 2;
+    }
+    1
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+struct Scanner<'a> {
+    src: &'a str,
+    b: &'a [u8],
+    i: usize,
+    line: usize,
+    out: Lexed,
+}
+
+impl<'a> Scanner<'a> {
+    fn at(&self, off: usize) -> u8 {
+        self.b.get(self.i + off).copied().unwrap_or(0)
+    }
+
+    fn push(&mut self, kind: TokenKind, start: usize, line: usize) {
+        // clamp: an unterminated literal at EOF must not slice past the end
+        let end = self.i.min(self.src.len());
+        let text = self.src[start..end].to_string();
+        self.out.tokens.push(Token { kind, text, line });
+    }
+
+    /// Consume one char, tracking the line counter.
+    fn bump(&mut self) {
+        if self.at(0) == b'\n' {
+            self.line += 1;
+        }
+        self.i += 1;
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i;
+        while self.i < self.b.len() && self.at(0) != b'\n' {
+            self.i += 1;
+        }
+        let text = self.src[start..self.i].to_string();
+        self.out.comments.push(Comment { line: self.line, end_line: self.line, text });
+    }
+
+    fn block_comment(&mut self) {
+        let start = self.i;
+        let start_line = self.line;
+        let mut depth = 1usize;
+        self.i += 2;
+        while self.i < self.b.len() && depth > 0 {
+            if self.at(0) == b'/' && self.at(1) == b'*' {
+                depth += 1;
+                self.i += 2;
+            } else if self.at(0) == b'*' && self.at(1) == b'/' {
+                depth -= 1;
+                self.i += 2;
+            } else {
+                self.bump();
+            }
+        }
+        let text = self.src[start..self.i].to_string();
+        self.out.comments.push(Comment { line: start_line, end_line: self.line, text });
+    }
+
+    /// Plain `"..."` string with escapes; multi-line strings tracked.
+    fn string(&mut self, start: usize, line: usize) {
+        self.i += 1; // opening quote
+        while self.i < self.b.len() {
+            match self.at(0) {
+                b'\\' => {
+                    self.i += 1; // the backslash
+                    self.bump(); // the escaped char (may be a newline)
+                }
+                b'"' => {
+                    self.i += 1;
+                    break;
+                }
+                _ => self.bump(),
+            }
+        }
+        self.push(TokenKind::Str, start, line);
+    }
+
+    /// `r"..."` / `r#"..."#` raw string, `hashes` pound signs deep.
+    fn raw_string(&mut self, start: usize, line: usize, hashes: usize) {
+        self.i += 1; // opening quote
+        while self.i < self.b.len() {
+            if self.at(0) == b'"' {
+                let mut n = 0usize;
+                while n < hashes && self.at(1 + n) == b'#' {
+                    n += 1;
+                }
+                if n == hashes {
+                    self.i += 1 + hashes;
+                    break;
+                }
+            }
+            self.bump();
+        }
+        self.push(TokenKind::Str, start, line);
+    }
+
+    /// `'x'`, `'\n'`, `'\u{1F600}'` char literals vs `'a` lifetimes.
+    fn char_or_lifetime(&mut self, start: usize, line: usize) {
+        self.i += 1; // opening quote
+        if self.at(0) == b'\\' {
+            // escaped char literal: consume escape then scan to the quote
+            self.i += 2;
+            while self.i < self.b.len() && self.at(0) != b'\'' {
+                self.bump();
+            }
+            self.i += 1;
+            self.push(TokenKind::Char, start, line);
+            return;
+        }
+        if is_ident_start(self.at(0)) && self.at(1) != b'\'' {
+            // `'static`, `'env`: a lifetime, no closing quote
+            while is_ident_char(self.at(0)) {
+                self.i += 1;
+            }
+            self.push(TokenKind::Lifetime, start, line);
+            return;
+        }
+        // plain (possibly multi-byte) char literal: scan to the quote
+        while self.i < self.b.len() && self.at(0) != b'\'' {
+            self.bump();
+        }
+        self.i += 1;
+        self.push(TokenKind::Char, start, line);
+    }
+
+    fn number(&mut self, start: usize, line: usize) {
+        let mut prev = 0u8;
+        while self.i < self.b.len() {
+            let c = self.at(0);
+            let exp_sign = (c == b'+' || c == b'-') && (prev == b'e' || prev == b'E');
+            let frac = c == b'.' && self.at(1).is_ascii_digit();
+            if c.is_ascii_alphanumeric() || c == b'_' || frac || exp_sign {
+                prev = c;
+                self.i += 1;
+                if frac {
+                    // consume the dot's following digit run normally
+                    continue;
+                }
+            } else {
+                break;
+            }
+        }
+        self.push(TokenKind::Number, start, line);
+    }
+
+    fn ident(&mut self, start: usize, line: usize) {
+        while is_ident_char(self.at(0)) {
+            self.i += 1;
+        }
+        // `r"`, `r#"`, `b"`, `br#"`: a (raw/byte) string prefix, not an
+        // identifier — rewind and lex the whole literal as one token
+        let text = &self.src[start..self.i];
+        if text == "r" || text == "br" || text == "b" {
+            let mut hashes = 0usize;
+            while self.at(hashes) == b'#' {
+                hashes += 1;
+            }
+            if self.at(hashes) == b'"' {
+                let raw = text != "b" && (hashes > 0 || self.at(0) == b'"');
+                self.i += hashes;
+                if raw {
+                    self.raw_string(start, line, hashes);
+                } else {
+                    self.string(start, line);
+                }
+                return;
+            }
+        }
+        self.push(TokenKind::Ident, start, line);
+    }
+}
+
+/// Lex `src` into tokens + comments. Never fails: unterminated constructs
+/// simply end at EOF (the real compiler rejects them later anyway).
+pub fn lex(src: &str) -> Lexed {
+    let mut s = Scanner { src, b: src.as_bytes(), i: 0, line: 1, out: Lexed::default() };
+    while s.i < s.b.len() {
+        let c = s.at(0);
+        let (start, line) = (s.i, s.line);
+        if c == b'\n' || c.is_ascii_whitespace() {
+            s.bump();
+        } else if c == b'/' && s.at(1) == b'/' {
+            s.line_comment();
+        } else if c == b'/' && s.at(1) == b'*' {
+            s.block_comment();
+        } else if c == b'"' {
+            s.string(start, line);
+        } else if c == b'\'' {
+            s.char_or_lifetime(start, line);
+        } else if c.is_ascii_digit() {
+            s.number(start, line);
+        } else if is_ident_start(c) {
+            s.ident(start, line);
+        } else if c.is_ascii() {
+            let n = punct_len(&s.b[s.i..]);
+            s.i += n;
+            s.push(TokenKind::Punct, start, line);
+        } else {
+            // non-ascii outside strings/comments: skip (em-dashes never
+            // appear in code position in this repo)
+            s.bump();
+        }
+    }
+    s.out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let src = "let x = \"unsafe // not code\"; // unsafe in comment\nfoo();";
+        let toks = texts(src);
+        assert!(toks.iter().all(|t| t != "unsafe"));
+        assert!(toks.contains(&"foo".to_string()));
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 1);
+        assert!(lx.comments[0].text.contains("unsafe in comment"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars() {
+        let src = "let a = r#\"panic!(\"x\")\"#; let c = '\\n'; let q = 'y';";
+        let lx = lex(src);
+        assert!(lx.tokens.iter().all(|t| t.text != "panic"));
+        let kinds: Vec<TokenKind> = lx.tokens.iter().map(|t| t.kind).collect();
+        assert_eq!(kinds.iter().filter(|k| **k == TokenKind::Char).count(), 2);
+        assert_eq!(kinds.iter().filter(|k| **k == TokenKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn lifetimes_and_byte_strings() {
+        let lx = lex("fn f<'env>(x: &'env [u8]) -> &'static [u8] { b\"z\" }");
+        let kinds: Vec<TokenKind> = lx.tokens.iter().map(|t| t.kind).collect();
+        assert_eq!(kinds.iter().filter(|k| **k == TokenKind::Lifetime).count(), 3);
+        assert_eq!(kinds.iter().filter(|k| **k == TokenKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn nested_block_comments_and_lines() {
+        let src = "a\n/* outer /* inner */ still */\nb";
+        let lx = lex(src);
+        assert_eq!(lx.tokens.len(), 2);
+        assert_eq!(lx.tokens[1].line, 3);
+        assert_eq!(lx.comments[0].line, 2);
+    }
+
+    #[test]
+    fn multi_char_operators_lex_as_one() {
+        let toks = texts("a -> b ..= c :: d += e >> f");
+        for op in ["->", "..=", "::", "+=", ">>"] {
+            assert!(toks.contains(&op.to_string()), "missing {op}");
+        }
+    }
+
+    #[test]
+    fn numbers_with_suffixes_and_exponents() {
+        let toks = texts("x = 1.5e-3 + 0xff_u32 - 2.0f32 * 1_000;");
+        assert!(toks.contains(&"1.5e-3".to_string()));
+        assert!(toks.contains(&"0xff_u32".to_string()));
+        assert!(toks.contains(&"2.0f32".to_string()));
+        assert!(toks.contains(&"1_000".to_string()));
+    }
+
+    #[test]
+    fn range_is_not_a_float() {
+        let toks = texts("for i in 0..n {}");
+        assert!(toks.contains(&"0".to_string()));
+        assert!(toks.contains(&"..".to_string()));
+    }
+}

@@ -1,0 +1,236 @@
+//! `lock-discipline`: a per-function lock model over `.lock()`,
+//! `.read()`, `.write()` call sites in the concurrency modules, with two
+//! findings:
+//!
+//! - **lock-order inversion** — each acquisition made while another lock
+//!   is held adds an order edge (held → new) to a per-file graph; an
+//!   edge that closes a cycle means two code paths disagree about
+//!   ordering, the classic ABBA deadlock.
+//! - **lock held across a blocking call** — a lock still held at
+//!   `recv`/`wait`/`join`/`scoped`... stalls every other thread that
+//!   needs it for as long as the call blocks (or forever, if the wakeup
+//!   needs the lock). Exception: a guard handed TO a condvar
+//!   `wait`/`wait_timeout` is released atomically by the wait itself.
+//!
+//! The model is intentionally syntactic. Let-bound acquisition results
+//! are guards released at end of scope, by `drop(g)`, or handed to a
+//! wait; chained results (`x.lock().unwrap().field`) are temporaries
+//! released at end of statement — or at the `{` that terminates an
+//! `if`/`while` condition. Known approximations are documented in
+//! docs/INVARIANTS.md; waivers handle the sanctioned exceptions (the
+//! threadpool's Mutex<Receiver> work-queue protocol).
+
+use std::collections::BTreeMap;
+
+use super::lexer::{Token, TokenKind};
+use super::{match_paren, statement_start, text_at, Finding, FnSpan, Source, RULE_LOCK};
+
+const SCOPE: &str = "model/registry coordinator/lanes coordinator/metrics util/threadpool";
+
+/// Zero-argument acquisition methods (`Mutex::lock`, `RwLock::read`,
+/// `RwLock::write`); requiring the empty argument list keeps io-style
+/// `read(&mut buf)` calls out.
+const ACQUIRE: &str = "lock read write";
+
+/// Methods that block the calling thread.
+const BLOCKING: &str = "recv recv_timeout wait wait_timeout join scoped scoped_map";
+
+type OrderGraph = BTreeMap<String, Vec<String>>;
+
+struct Held {
+    /// receiver the lock was taken from (`self.inner.lock()` → `inner`)
+    name: String,
+    /// brace depth inside the function body at acquisition
+    depth: usize,
+    /// bound variable for a `let` guard; `None` for a temporary
+    guard: Option<String>,
+}
+
+pub fn check(src: &Source, out: &mut Vec<Finding>) {
+    if !src.in_module_list(SCOPE) {
+        return;
+    }
+    // order edges accumulate across the whole file: an inversion is two
+    // functions disagreeing, not one function deadlocking itself
+    let mut order = OrderGraph::new();
+    for span in &src.fns {
+        if src.in_tests(src.lexed.tokens[span.fn_idx].line) {
+            continue;
+        }
+        check_fn(src, span, &mut order, out);
+    }
+}
+
+fn check_fn(src: &Source, span: &FnSpan, order: &mut OrderGraph, out: &mut Vec<Finding>) {
+    let tokens = &src.lexed.tokens;
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth = 0usize;
+    for k in span.open_idx..=span.close_idx {
+        let t = &tokens[k];
+        match t.text.as_str() {
+            "{" => {
+                // a `{` after an `if`/`while` condition: condition
+                // temporaries die before the block body runs
+                held.retain(|h| h.guard.is_some() || h.depth < depth);
+                depth += 1;
+            }
+            "}" => {
+                depth = depth.saturating_sub(1);
+                held.retain(|h| h.depth <= depth);
+            }
+            ";" => {
+                held.retain(|h| h.guard.is_some() || h.depth < depth);
+            }
+            _ => {}
+        }
+        if t.kind != TokenKind::Ident {
+            continue;
+        }
+        let prev = if k > 0 { text_at(tokens, k - 1) } else { "" };
+        let next = text_at(tokens, k + 1);
+        // `drop(g)`: explicit early release of a guard
+        if t.text == "drop" && next == "(" && text_at(tokens, k + 3) == ")" {
+            let g = text_at(tokens, k + 2).to_string();
+            held.retain(|h| h.guard.as_deref() != Some(g.as_str()));
+            continue;
+        }
+        let acquires = ACQUIRE.split(' ').any(|a| a == t.text)
+            && prev == "."
+            && next == "("
+            && text_at(tokens, k + 2) == ")";
+        if acquires {
+            acquire(src, tokens, k, depth, &mut held, order, out);
+            continue;
+        }
+        let blocks = BLOCKING.split(' ').any(|b| b == t.text) && prev == "." && next == "(";
+        if blocks && !held.is_empty() {
+            blocking_call(src, tokens, k, &held, out);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn acquire(
+    src: &Source,
+    tokens: &[Token],
+    k: usize,
+    depth: usize,
+    held: &mut Vec<Held>,
+    order: &mut OrderGraph,
+    out: &mut Vec<Finding>,
+) {
+    let t = &tokens[k];
+    let name = if k >= 2 && tokens[k - 2].kind == TokenKind::Ident {
+        tokens[k - 2].text.clone()
+    } else {
+        "<expr>".to_string()
+    };
+    // everything currently held must order before `name`; a cycle in the
+    // accumulated graph is an inversion, reported at this site
+    for h in held.iter() {
+        if h.name == name {
+            continue;
+        }
+        if reachable(order, &name, &h.name) {
+            let msg = format!(
+                "lock-order inversion: `{}` acquired while `{}` is held, but the \
+                 reverse order also exists in this file",
+                name, h.name
+            );
+            out.push(src.finding(RULE_LOCK, t.line, msg));
+        }
+        order.entry(h.name.clone()).or_default().push(name.clone());
+    }
+    // binding form: skip `.unwrap()`/`.expect(..)` adapters; a `;` right
+    // after means `let g = x.lock().unwrap();` (a guard), anything else
+    // chained means the guard is a temporary
+    let mut j = k + 3;
+    loop {
+        let adapter = text_at(tokens, j) == "."
+            && (text_at(tokens, j + 1) == "unwrap" || text_at(tokens, j + 1) == "expect");
+        if !adapter {
+            break;
+        }
+        match match_paren(tokens, j + 2) {
+            Some(close) => j = close + 1,
+            None => break,
+        }
+    }
+    let s = statement_start(tokens, k);
+    let head = text_at(tokens, s);
+    let ends_stmt = text_at(tokens, j) == ";";
+    let if_while_let = (head == "if" || head == "while") && text_at(tokens, s + 1) == "let";
+    let reassign = tokens.get(s).map(|t| t.kind) == Some(TokenKind::Ident)
+        && text_at(tokens, s + 1) == "=";
+    let guard = if (ends_stmt && head == "let") || if_while_let {
+        pattern_ident(tokens, s)
+    } else if ends_stmt && reassign {
+        Some(tokens[s].text.clone())
+    } else {
+        None
+    };
+    if let Some(g) = &guard {
+        // rebinding a guard variable releases what it previously held
+        held.retain(|h| h.guard.as_deref() != Some(g.as_str()));
+    }
+    held.push(Held { name, depth, guard });
+}
+
+/// First bindable identifier of a `let` pattern: `let mut st`,
+/// `let Ok(mut inner)`, `if let Some(g)` all yield the variable.
+fn pattern_ident(tokens: &[Token], s: usize) -> Option<String> {
+    const SKIP: &str = "let if while mut Ok Some Err";
+    let mut j = s;
+    while j < tokens.len() && text_at(tokens, j) != "=" {
+        let t = &tokens[j];
+        if t.kind == TokenKind::Ident && !SKIP.split(' ').any(|w| w == t.text) {
+            return Some(t.text.clone());
+        }
+        j += 1;
+    }
+    None
+}
+
+fn blocking_call(src: &Source, tokens: &[Token], k: usize, held: &[Held], out: &mut Vec<Finding>) {
+    let t = &tokens[k];
+    // guards named in a condvar wait's arguments are handed to the wait,
+    // which releases them atomically — the condvar protocol, not a bug
+    let close = match_paren(tokens, k + 1).unwrap_or(k + 1);
+    let mut handed: Vec<&str> = Vec::new();
+    for a in tokens.get(k + 2..close).unwrap_or(&[]) {
+        if a.kind == TokenKind::Ident {
+            handed.push(a.text.as_str());
+        }
+    }
+    for h in held {
+        let g = h.guard.as_deref();
+        if t.text.starts_with("wait") && g.is_some_and(|g| handed.contains(&g)) {
+            continue;
+        }
+        let what = g.unwrap_or(h.name.as_str());
+        let msg = format!(
+            "lock `{}` held across blocking `{}()` — release it first, or waive \
+             with the protocol that makes it safe",
+            what, t.text
+        );
+        out.push(src.finding(RULE_LOCK, t.line, msg));
+    }
+}
+
+fn reachable(order: &OrderGraph, from: &str, to: &str) -> bool {
+    let mut stack = vec![from];
+    let mut seen: Vec<&str> = Vec::new();
+    while let Some(n) = stack.pop() {
+        if n == to {
+            return true;
+        }
+        if seen.contains(&n) {
+            continue;
+        }
+        seen.push(n);
+        if let Some(next) = order.get(n) {
+            stack.extend(next.iter().map(|s| s.as_str()));
+        }
+    }
+    false
+}

@@ -1,0 +1,380 @@
+//! `pallas lint` — the repo-native invariant checker.
+//!
+//! A dependency-free static-analysis pass over this repository's own Rust
+//! sources (vendored-`anyhow` precedent: no new crates). The contracts
+//! PR 1–5 staked their correctness claims on — fixed fp32 accumulation
+//! order in serving kernels, no panics or unchecked arithmetic on
+//! untrusted-input paths, justified `unsafe`, sane lock discipline — live
+//! here as machine-checked rules instead of reviewer folklore:
+//!
+//! - [`unsafe-audit`](unsafe_audit): every `unsafe` needs an immediately
+//!   preceding `// SAFETY:` comment, and only allowlisted files may
+//!   contain `unsafe` at all.
+//! - [`bit-exactness`](bit_exact): kernel modules must not introduce fp
+//!   reassociation hazards (`mul_add`/`fma`, `.sum()`/`.fold()`
+//!   reductions, `cfg(target_feature)`-gated math).
+//! - [`panic-path`](panic_path): no `unwrap`/`expect`/`panic!` in
+//!   serving and untrusted-input modules.
+//! - [`checked-arith`](checked_arith): parse-path arithmetic on
+//!   header-derived sizes must be overflow-checked.
+//! - [`lock-discipline`](lock_discipline): no lock-order inversions, no
+//!   lock held across a blocking call.
+//!
+//! Findings print as `file:line rule message`. A finding is silenced
+//! per-site by a justification comment — `// lint: allow(<rule>) — <why>`
+//! on the finding's line or the line directly above — which keeps every
+//! exception auditable (`dfmpc lint --waivers` lists them). The rules are
+//! token-based on a real lexer ([`lexer`]), so strings and comments can
+//! never false-positive the way regex grep does. docs/INVARIANTS.md
+//! catalogues each contract.
+
+pub mod lexer;
+
+mod bit_exact;
+mod checked_arith;
+mod lock_discipline;
+mod panic_path;
+mod unsafe_audit;
+mod waivers;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use lexer::{Token, TokenKind};
+
+pub const RULE_UNSAFE: &str = "unsafe-audit";
+pub const RULE_BIT_EXACT: &str = "bit-exactness";
+pub const RULE_PANIC: &str = "panic-path";
+pub const RULE_CHECKED: &str = "checked-arith";
+pub const RULE_LOCK: &str = "lock-discipline";
+/// Findings about malformed waiver comments themselves.
+pub const RULE_WAIVER: &str = "waiver-syntax";
+
+/// Every waivable rule, space-separated (waiver comments must name one).
+pub const RULES: &str = "unsafe-audit bit-exactness panic-path checked-arith lock-discipline";
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// repo-relative path with `/` separators
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+    /// justification text when a waiver comment covers this finding
+    pub waived: Option<String>,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{} {} {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// A function item: `fn` keyword, name, and body token extent.
+#[derive(Clone, Debug)]
+struct FnSpan {
+    name: String,
+    fn_idx: usize,
+    open_idx: usize,
+    close_idx: usize,
+}
+
+/// One source file prepared for the rules: lexed tokens, the module key
+/// rules scope on, `#[cfg(test)] mod` line ranges, and function spans.
+struct Source {
+    path: String,
+    /// `rust/src/coordinator/server.rs` -> `coordinator/server`;
+    /// `None` outside `rust/src` (benches, examples, integration tests)
+    module: Option<String>,
+    lexed: lexer::Lexed,
+    test_spans: Vec<(usize, usize)>,
+    fns: Vec<FnSpan>,
+}
+
+impl Source {
+    fn new(path: &str, text: &str) -> Source {
+        let lexed = lexer::lex(text);
+        let test_spans = test_regions(&lexed.tokens);
+        let fns = fn_spans(&lexed.tokens);
+        Source { path: path.to_string(), module: module_key(path), lexed, test_spans, fns }
+    }
+
+    /// True when `line` is inside a `#[cfg(test)] mod` block — test-only
+    /// code is exempt from the serving-path rules.
+    fn in_tests(&self, line: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// True when this file's module key is in the space-separated `list`.
+    fn in_module_list(&self, list: &str) -> bool {
+        match &self.module {
+            Some(m) => list.split(' ').any(|s| s == m),
+            None => false,
+        }
+    }
+
+    fn finding(&self, rule: &'static str, line: usize, message: String) -> Finding {
+        Finding { file: self.path.clone(), line, rule, message, waived: None }
+    }
+}
+
+/// `rust/src/<mods>.rs` -> the module key rules scope on.
+fn module_key(path: &str) -> Option<String> {
+    let rel = path.strip_prefix("rust/src/")?;
+    let rel = rel.strip_suffix(".rs")?;
+    let rel = rel.strip_suffix("/mod").unwrap_or(rel);
+    Some(rel.to_string())
+}
+
+/// Token text at `k`, or `""` out of bounds.
+fn text_at(tokens: &[Token], k: usize) -> &str {
+    tokens.get(k).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+/// Index of the `}` matching the `{` at `open_idx`.
+fn match_brace(tokens: &[Token], open_idx: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in tokens.iter().enumerate().skip(open_idx) {
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Index of the `)` matching the `(` at `open_idx`.
+fn match_paren(tokens: &[Token], open_idx: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in tokens.iter().enumerate().skip(open_idx) {
+        match t.text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Walk back from token `k` to the first token of its statement (the
+/// token after the previous `;`, brace, `,` or match arrow).
+fn statement_start(tokens: &[Token], k: usize) -> usize {
+    let mut j = k;
+    while j > 0 {
+        let prev = tokens[j - 1].text.as_str();
+        if prev == ";" || prev == "{" || prev == "}" || prev == "," || prev == "=>" {
+            break;
+        }
+        j -= 1;
+    }
+    j
+}
+
+/// Line ranges (inclusive) of `#[cfg(test)]`-gated `mod` blocks.
+fn test_regions(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k + 6 < tokens.len() {
+        let gate = text_at(tokens, k) == "#"
+            && text_at(tokens, k + 1) == "["
+            && text_at(tokens, k + 2) == "cfg"
+            && text_at(tokens, k + 3) == "("
+            && text_at(tokens, k + 4) == "test"
+            && text_at(tokens, k + 5) == ")"
+            && text_at(tokens, k + 6) == "]";
+        if gate {
+            let mut j = k + 7;
+            while j < tokens.len() && tokens[j].text != "{" {
+                j += 1;
+            }
+            if let Some(close) = match_brace(tokens, j) {
+                out.push((tokens[k].line, tokens[close].line));
+                k = close;
+            }
+        }
+        k += 1;
+    }
+    out
+}
+
+/// Every `fn` item with a body. Signature scanning tracks paren and
+/// angle-bracket depth so generics and `where` clauses cannot derail the
+/// body-brace search; bodyless declarations (traits, extern blocks) are
+/// skipped.
+fn fn_spans(tokens: &[Token]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    for k in 0..tokens.len() {
+        let is_fn = tokens[k].kind == TokenKind::Ident && tokens[k].text == "fn";
+        if is_fn {
+            if let Some(span) = fn_span_at(tokens, k) {
+                out.push(span);
+            }
+        }
+    }
+    out
+}
+
+fn fn_span_at(tokens: &[Token], fn_idx: usize) -> Option<FnSpan> {
+    let name = tokens.get(fn_idx + 1)?;
+    if name.kind != TokenKind::Ident {
+        return None; // `fn(i32)` pointer type, not an item
+    }
+    let mut paren = 0i64;
+    let mut angle = 0i64;
+    let mut k = fn_idx + 2;
+    while k < tokens.len() {
+        match tokens[k].text.as_str() {
+            "(" => paren += 1,
+            ")" => paren -= 1,
+            "<" => angle += 1,
+            ">" => angle -= 1,
+            ">>" => angle -= 2,
+            ";" if paren == 0 => return None,
+            "{" if paren == 0 && angle <= 0 => {
+                let close_idx = match_brace(tokens, k)?;
+                let name = name.text.clone();
+                return Some(FnSpan { name, fn_idx, open_idx: k, close_idx });
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    None
+}
+
+/// Lint one source text under a (possibly virtual) repo-relative path.
+/// The path decides which rules apply — the fixture tests use this to
+/// lint snippets as if they lived in scoped modules.
+pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
+    let src = Source::new(path, text);
+    let mut findings = Vec::new();
+    unsafe_audit::check(&src, &mut findings);
+    bit_exact::check(&src, &mut findings);
+    panic_path::check(&src, &mut findings);
+    checked_arith::check(&src, &mut findings);
+    lock_discipline::check(&src, &mut findings);
+    let (waivers, mut syntax) = waivers::collect(&src);
+    for f in &mut findings {
+        let cover = waivers.iter().find(|w| w.rule == f.rule && w.lines.contains(&f.line));
+        if let Some(w) = cover {
+            f.waived = Some(w.reason.clone());
+        }
+    }
+    findings.append(&mut syntax);
+    findings.sort_by_key(|f| (f.line, f.rule));
+    findings
+}
+
+/// Lint every first-party Rust source under `root`: `rust/src`,
+/// `rust/tests`, `benches`, `examples`. Excluded: `rust/vendor`
+/// (third-party idiom) and `rust/tests/lint_fixtures` (snippets that
+/// violate the rules on purpose; the fixture test lints them under
+/// virtual paths instead).
+pub fn lint_repo(root: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for dir in "rust/src rust/tests benches examples".split(' ') {
+        collect_rs(&root.join(dir), root, &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for rel in &files {
+        if rel.starts_with("rust/tests/lint_fixtures/") {
+            continue;
+        }
+        let read = std::fs::read_to_string(root.join(rel));
+        let text = read.with_context(|| format!("reading {rel}"))?;
+        findings.extend(lint_source(rel, &text));
+    }
+    if files.is_empty() {
+        bail!("no Rust sources found under {}", root.display());
+    }
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, root: &Path, out: &mut Vec<String>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let entries = std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path.strip_prefix(root).unwrap_or(&path);
+            out.push(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+/// Find the repo root (the directory containing `rust/src`) from the
+/// current working directory, walking up.
+pub fn repo_root() -> Result<PathBuf> {
+    let cwd = std::env::current_dir().context("reading the current directory")?;
+    let mut dir = cwd.as_path();
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Ok(dir.to_path_buf());
+        }
+        match dir.parent() {
+            Some(p) => dir = p,
+            None => bail!("no repo root (rust/src) found above {}", cwd.display()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_keys() {
+        let server = module_key("rust/src/coordinator/server.rs");
+        assert_eq!(server.as_deref(), Some("coordinator/server"));
+        assert_eq!(module_key("rust/src/quant/mod.rs").as_deref(), Some("quant"));
+        assert_eq!(module_key("benches/bench_infer.rs"), None);
+    }
+
+    #[test]
+    fn fn_spans_skip_declarations_and_handle_generics() {
+        let lx = lexer::lex(
+            "trait T { fn decl(&self) -> usize; }\n\
+             fn generic<A: Into<Vec<u8>>>(a: A) -> Vec<u8> { a.into() }\n\
+             pub fn plain() {}\n",
+        );
+        let spans = fn_spans(&lx.tokens);
+        let names: Vec<&str> = spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["generic", "plain"]);
+    }
+
+    #[test]
+    fn test_regions_cover_mod_tests() {
+        let lx = lexer::lex("fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\n");
+        let spans = test_regions(&lx.tokens);
+        assert_eq!(spans.len(), 1);
+        assert!(spans[0].0 <= 3 && spans[0].1 >= 4);
+    }
+
+    #[test]
+    fn statement_start_walks_to_boundary() {
+        let lx = lexer::lex("fn f() { let a = 1; let b = a + 2; }");
+        let plus = lx.tokens.iter().position(|t| t.text == "+").expect("plus");
+        let s = statement_start(&lx.tokens, plus);
+        assert_eq!(lx.tokens[s].text, "let");
+        assert_eq!(text_at(&lx.tokens, s + 1), "b");
+    }
+}

@@ -1,0 +1,42 @@
+//! `panic-path`: no `unwrap()`/`expect()`/`panic!`/`unreachable!` in
+//! serving and untrusted-input modules.
+//!
+//! A panic on these paths either kills a connection that should have got
+//! a structured error (server, loader, checkpoint, json) or poisons a
+//! lock every other serving thread then trips over (lanes). Poison
+//! propagation on an already-failed process IS the sanctioned behaviour —
+//! those sites carry waivers saying so; anything reachable from
+//! untrusted bytes must return `Result` instead.
+
+use super::lexer::TokenKind;
+use super::{text_at, Finding, Source, RULE_PANIC};
+
+/// Module keys on the no-panic contract.
+const SCOPE: &str =
+    "coordinator/server coordinator/lanes data/loader model/checkpoint model/zoo util/json";
+
+pub fn check(src: &Source, out: &mut Vec<Finding>) {
+    if !src.in_module_list(SCOPE) {
+        return;
+    }
+    let tokens = &src.lexed.tokens;
+    for (k, t) in tokens.iter().enumerate() {
+        if t.kind != TokenKind::Ident || src.in_tests(t.line) {
+            continue;
+        }
+        let prev = if k > 0 { text_at(tokens, k - 1) } else { "" };
+        let next = text_at(tokens, k + 1);
+        let hit = match t.text.as_str() {
+            "unwrap" | "expect" => (prev == "." || prev == "::") && next == "(",
+            "panic" | "unreachable" => next == "!",
+            _ => false,
+        };
+        if hit {
+            let msg = format!(
+                "`{}` on a serving/untrusted-input path — return a structured error instead",
+                t.text
+            );
+            out.push(src.finding(RULE_PANIC, t.line, msg));
+        }
+    }
+}

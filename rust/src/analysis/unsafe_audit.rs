@@ -1,0 +1,54 @@
+//! `unsafe-audit`: every `unsafe` keyword must be immediately preceded
+//! by a `// SAFETY:` comment stating why the invariants hold, and only
+//! files on an explicit allowlist may contain `unsafe` at all.
+//!
+//! The allowlist is the contract: adding `unsafe` to a new file is a
+//! reviewed decision (extend [`ALLOWED`]), never an accident. Unlike the
+//! other rules, this one also applies inside `#[cfg(test)]` blocks —
+//! unsoundness in tests is still unsoundness.
+
+use super::lexer::TokenKind;
+use super::{Finding, Source, RULE_UNSAFE};
+
+/// Module keys allowed to contain `unsafe`: the threadpool's scoped-job
+/// lifetime transmute and the libc signal-handler shim.
+const ALLOWED: &str = "util/threadpool util/signal";
+
+pub fn check(src: &Source, out: &mut Vec<Finding>) {
+    let tokens = &src.lexed.tokens;
+    for (k, t) in tokens.iter().enumerate() {
+        if t.kind != TokenKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        let module = src.module.as_deref().unwrap_or(&src.path);
+        if !ALLOWED.split(' ').any(|m| m == module) {
+            let msg = format!(
+                "`unsafe` in a file not on the allowlist ({ALLOWED}) — \
+                 extending the allowlist is a reviewed decision"
+            );
+            out.push(src.finding(RULE_UNSAFE, t.line, msg));
+        }
+        // the SAFETY comment block must end on the line directly above
+        // the statement the `unsafe` belongs to (or the keyword itself)
+        let stmt_line = tokens[super::statement_start(tokens, k)].line;
+        let documented = documented_above(src, stmt_line) || documented_above(src, t.line);
+        if !documented {
+            let msg = "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string();
+            out.push(src.finding(RULE_UNSAFE, t.line, msg));
+        }
+    }
+}
+
+/// True when the contiguous block of comments ending directly above
+/// `line` contains `SAFETY:` anywhere — a multi-line `//` justification
+/// lexes as one comment per line, so walk the block upward.
+fn documented_above(src: &Source, mut line: usize) -> bool {
+    loop {
+        // `end_line + 1 == line` keeps each step strictly upward
+        match src.lexed.comments.iter().find(|c| c.end_line + 1 == line) {
+            Some(c) if c.text.contains("SAFETY:") => return true,
+            Some(c) => line = c.line,
+            None => return false,
+        }
+    }
+}

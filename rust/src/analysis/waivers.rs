@@ -1,0 +1,69 @@
+//! Per-site waivers: a justification comment that silences one rule on
+//! one site, keeping every exception auditable.
+//!
+//! Form: a comment whose body starts with `lint: allow(<rule>)` followed
+//! by a written reason, e.g.
+//!
+//! ```text
+//! x.lock().unwrap(); // lint: allow(panic-path) — poison implies a
+//!                    // sibling thread already panicked
+//! ```
+//!
+//! A waiver covers its own line(s) — the trailing form above — plus the
+//! first code line after it, so an own-line comment directly above a
+//! statement also works. Waivers with an unknown rule name or no written
+//! reason are themselves reported as `waiver-syntax` findings: a waiver
+//! that doesn't say *why* is a finding, not an exemption.
+
+use super::{Finding, Source, RULES, RULE_WAIVER};
+
+pub struct Waiver {
+    pub rule: String,
+    pub reason: String,
+    /// source lines this waiver silences its rule on
+    pub lines: Vec<usize>,
+}
+
+const MARKER: &str = "lint: allow(";
+
+/// Minimum justification length; anything shorter is a rubber stamp.
+const MIN_REASON: usize = 8;
+
+pub fn collect(src: &Source) -> (Vec<Waiver>, Vec<Finding>) {
+    let mut waivers = Vec::new();
+    let mut findings = Vec::new();
+    for c in &src.lexed.comments {
+        // the marker must open the comment body — prose *mentioning* the
+        // syntax (like this module's docs) is not a waiver
+        let body = c.text.trim_start_matches(['/', '!', '*']).trim_start();
+        let Some(after) = body.strip_prefix(MARKER) else {
+            continue;
+        };
+        let Some(close) = after.find(')') else {
+            let msg = "unclosed `lint: allow(` — missing `)`".to_string();
+            findings.push(src.finding(RULE_WAIVER, c.line, msg));
+            continue;
+        };
+        let rule = after[..close].trim();
+        if !RULES.split(' ').any(|r| r == rule) {
+            let msg = format!("waiver names unknown rule `{rule}` (one of: {RULES})");
+            findings.push(src.finding(RULE_WAIVER, c.line, msg));
+            continue;
+        }
+        let reason = after[close + 1..]
+            .trim_start_matches(|ch: char| ch == ' ' || ch == '—' || ch == '-' || ch == ':')
+            .trim();
+        if reason.chars().count() < MIN_REASON {
+            let msg = "waiver has no written justification after the rule name".to_string();
+            findings.push(src.finding(RULE_WAIVER, c.line, msg));
+            continue;
+        }
+        let mut lines: Vec<usize> = (c.line..=c.end_line).collect();
+        let next_code = src.lexed.tokens.iter().map(|t| t.line).filter(|&l| l > c.end_line).min();
+        if let Some(l) = next_code {
+            lines.push(l);
+        }
+        waivers.push(Waiver { rule: rule.to_string(), reason: reason.to_string(), lines });
+    }
+    (waivers, findings)
+}

@@ -237,6 +237,10 @@ impl LanePool {
                 thread::Builder::new()
                     .name(format!("dfmpc-lane-{li}"))
                     .spawn(move || lane_worker(li, lane, cfg, shared))
+                    // lint: allow(panic-path) — startup, before any
+                    // request is admitted: failing to spawn a lane
+                    // worker leaves a pool that can never serve, so
+                    // dying loudly here is the sanctioned behaviour
                     .expect("spawn lane worker")
             })
             .collect();
@@ -324,6 +328,9 @@ impl LanePool {
         }
         let (rtx, rrx) = mpsc::channel();
         {
+            // lint: allow(panic-path) — poison means a lane worker
+            // panicked mid-queue-update; admitting onto a torn queue is
+            // worse than propagating the failure
             let mut st = self.shared.queue.lock().unwrap();
             if st.stopped {
                 return Err(ServeError::Stopped);
@@ -363,6 +370,8 @@ impl LanePool {
 
     /// Requests currently waiting in the admission queue.
     pub fn queue_depth(&self) -> usize {
+        // lint: allow(panic-path) — poison propagation, same rationale
+        // as admission: no meaningful depth exists after a lane panic
         self.shared.queue.lock().unwrap().q.len()
     }
 
@@ -385,10 +394,13 @@ impl LanePool {
     /// worker. Idempotent; also runs on drop.
     pub fn stop(&self) {
         {
+            // lint: allow(panic-path) — shutdown path; poison means a
+            // lane already panicked and stop() is the cleanup
             let mut st = self.shared.queue.lock().unwrap();
             st.stopped = true;
         }
         self.shared.cv.notify_all();
+        // lint: allow(panic-path) — shutdown path, same poison rationale
         let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
         for h in handles {
             let _ = h.join();
@@ -410,6 +422,9 @@ fn lane_worker(li: usize, lane: Arc<dyn InferBackend>, cfg: LanePoolConfig, shar
         // block for the first request of a batch; on stop, keep draining
         // until the queue is empty, then exit
         let first = {
+            // lint: allow(panic-path) — poison means a sibling lane
+            // panicked holding the queue; this worker cannot batch from
+            // a torn queue, so it propagates
             let mut st = shared.queue.lock().unwrap();
             loop {
                 if let Some(r) = st.q.pop_front() {
@@ -418,6 +433,8 @@ fn lane_worker(li: usize, lane: Arc<dyn InferBackend>, cfg: LanePoolConfig, shar
                 if st.stopped {
                     return;
                 }
+                // lint: allow(panic-path) — condvar wait errs only on
+                // poison; same propagation rationale as the lock above
                 st = shared.cv.wait(st).unwrap();
             }
         };
@@ -427,6 +444,8 @@ fn lane_worker(li: usize, lane: Arc<dyn InferBackend>, cfg: LanePoolConfig, shar
         let deadline = Instant::now() + cfg.max_wait;
         while batch.len() < cfg.max_batch {
             let now = Instant::now();
+            // lint: allow(panic-path) — poison propagation, same
+            // rationale as the batch-head lock above
             let mut st = shared.queue.lock().unwrap();
             // take queued requests with the batch's exact (variant, shape);
             // leave the rest for another pull (their own homogeneous batch)
@@ -434,6 +453,8 @@ fn lane_worker(li: usize, lane: Arc<dyn InferBackend>, cfg: LanePoolConfig, shar
             let mut took = false;
             while batch.len() < cfg.max_batch && i < st.q.len() {
                 if st.q[i].image.shape == shape && st.q[i].variant == variant {
+                    // lint: allow(panic-path) — i < st.q.len() by the
+                    // loop condition, under the lock: remove cannot miss
                     batch.push(st.q.remove(i).expect("index in bounds"));
                     took = true;
                 } else {
@@ -444,6 +465,8 @@ fn lane_worker(li: usize, lane: Arc<dyn InferBackend>, cfg: LanePoolConfig, shar
                 break;
             }
             if !took {
+                // lint: allow(panic-path) — condvar wait_timeout errs
+                // only on poison; propagation rationale as above
                 let (guard, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
                 drop(guard);
             }

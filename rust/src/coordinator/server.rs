@@ -105,7 +105,12 @@ impl Server {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             // reap finished handlers so the registry stays
-                            // bounded by the number of LIVE connections
+                            // bounded by the number of LIVE connections.
+                            // lint: allow(panic-path) — poison means a
+                            // handler thread panicked while pushing its
+                            // join handle; the accept loop cannot limp on
+                            // without the registry, so propagating is the
+                            // sanctioned failure mode
                             conns2.lock().unwrap().retain(|h| !h.is_finished());
                             if stats2.active_conns.load(Ordering::Relaxed) >= max_conns {
                                 stats2.rejected_conns.fetch_add(1, Ordering::Relaxed);
@@ -125,6 +130,9 @@ impl Server {
                                 },
                             );
                             match spawned {
+                                // lint: allow(panic-path) — same poison
+                                // rationale as the reap above: no handler
+                                // registry, no safe accept loop
                                 Ok(h) => conns2.lock().unwrap().push(h),
                                 Err(_) => {
                                     stats2.active_conns.fetch_sub(1, Ordering::Relaxed);
@@ -149,6 +157,9 @@ impl Server {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+        // lint: allow(panic-path) — shutdown path, not request path:
+        // poison here means the accept loop already panicked and the
+        // process is failing; joining cannot proceed without the registry
         let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
         for h in handles {
             let _ = h.join();

@@ -44,8 +44,12 @@ impl EvalShard {
         let mut hdr = [0u8; 24];
         f.read_exact(&mut hdr)
             .with_context(|| format!("shard {}: truncated header", path.display()))?;
-        let word = |i: usize| u32::from_le_bytes(hdr[i * 4..i * 4 + 4].try_into().unwrap()) as usize;
-        let (ver, n, c, h, w, ncls) = (word(0), word(1), word(2), word(3), word(4), word(5));
+        let mut words = [0usize; 6];
+        for (wd, src) in words.iter_mut().zip(hdr.chunks_exact(4)) {
+            *wd = u32::from_le_bytes([src[0], src[1], src[2], src[3]]) as usize;
+        }
+        let (ver, n, c, h, w, ncls) =
+            (words[0], words[1], words[2], words[3], words[4], words[5]);
         if ver != 1 {
             bail!("unsupported DFDS version {ver} in {}", path.display());
         }
@@ -59,11 +63,16 @@ impl EvalShard {
             .with_context(|| {
                 format!("shard {}: header extent {n}x{c}x{h}x{w} overflows", path.display())
             })?;
-        let expected = numel
+        let img_bytes = numel
             .checked_mul(4)
-            .and_then(|img| n.checked_mul(4).map(|lab| (img, lab)))
-            .and_then(|(img, lab)| img.checked_add(lab))
-            .and_then(|body| body.checked_add(8 + 24))
+            .with_context(|| format!("shard {}: header byte count overflows", path.display()))?;
+        let lab_bytes = n
+            .checked_mul(4)
+            .with_context(|| format!("shard {}: header byte count overflows", path.display()))?;
+        let expected = img_bytes
+            .checked_add(lab_bytes)
+            // 32 = 8-byte magic + 24-byte header
+            .and_then(|body| body.checked_add(32))
             .with_context(|| format!("shard {}: header byte count overflows", path.display()))?;
         if expected as u64 != file_len {
             bail!(
@@ -72,7 +81,7 @@ impl EvalShard {
                 path.display()
             );
         }
-        let mut lab = vec![0u8; 4 * n];
+        let mut lab = vec![0u8; lab_bytes];
         f.read_exact(&mut lab)
             .with_context(|| format!("shard {}: truncated label block", path.display()))?;
         let mut labels = Vec::with_capacity(n);
@@ -86,7 +95,7 @@ impl EvalShard {
             }
             labels.push(raw as usize);
         }
-        let mut raw = vec![0u8; 4 * numel];
+        let mut raw = vec![0u8; img_bytes];
         f.read_exact(&mut raw)
             .with_context(|| format!("shard {}: truncated image block", path.display()))?;
         let data: Vec<f32> = raw
@@ -102,12 +111,14 @@ impl EvalShard {
     pub fn batch(&self, start: usize, len: usize) -> (Tensor, &[usize]) {
         let n = self.n();
         let start = start.min(n);
-        let len = len.min(n - start);
+        let len = len.min(n - start); // lint: allow(checked-arith) — start clamped to n just above
         let per: usize = self.images.shape[1..].iter().product();
+        let lo = start * per; // lint: allow(checked-arith) — start ≤ n and n·per is the validated allocation size
+        let hi = (start + len) * per; // lint: allow(checked-arith) — start + len ≤ n by the clamps above
         let t = Tensor::new(
             vec![len, self.images.shape[1], self.images.shape[2], self.images.shape[3]],
-            self.images.data[start * per..(start + len) * per].to_vec(),
+            self.images.data[lo..hi].to_vec(),
         );
-        (t, &self.labels[start..start + len])
+        (t, &self.labels[start..start + len]) // lint: allow(checked-arith) — start + len ≤ n by the clamps above
     }
 }

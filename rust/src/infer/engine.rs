@@ -161,6 +161,9 @@ impl<'a> Engine<'a> {
                 let mut acc = 0.0f64;
                 for ni in 0..n {
                     let base = (ni * c + ci) * hw;
+                    // lint: allow(bit-exactness) — f64 calibration stats
+                    // for reports, off the serving path; sequential
+                    // left-to-right order is fixed anyway
                     acc += x.data[base..base + hw].iter().map(|v| *v as f64).sum::<f64>();
                 }
                 means[ci] = acc / (n * hw) as f64;

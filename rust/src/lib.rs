@@ -22,6 +22,24 @@
 //! Python never runs on the request path: after `make models artifacts`
 //! the `dfmpc` binary (and examples/benches) are self-contained.
 
+// Clippy lints the codebase intentionally violates, allowed crate-wide so
+// the CI gate can run `clippy --all-targets -- -D warnings` without
+// per-site noise (each non-lib target repeats these — attributes here
+// cover only the library crate):
+// - needless_range_loop: kernels index several arrays with one induction
+//   variable; the indexed form is the paper's reference notation.
+// - too_many_arguments: solver/kernel entry points mirror the paper's
+//   symbol lists instead of bundling single-use parameter structs.
+// - manual_div_ceil: `(n + k - 1) / k` is spelled out so it visibly
+//   matches the packed-layout math in python/ and docs/FORMATS.md.
+// - type_complexity: boxed job and lane types are spelled once, inline,
+//   rather than hidden behind aliases at every use site.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod harness;

@@ -9,6 +9,9 @@
 //!            [--max-batch N] [--max-wait-ms T] [--lanes N]
 //!            [--queue-depth N] [--max-conns N]
 //!            [--preload K1,K2,...] [--model-budget-mb N]
+//!   lint     [--waivers]            run the repo's static-analysis rules
+//!            (docs/INVARIANTS.md) over its own sources; exits nonzero on
+//!            any unwaived finding. --waivers also lists waived sites.
 //!
 //! `--engine ref` drives the pool-parallel pure-rust engine instead of the
 //! PJRT lane — the only serving path in builds without the `xla` feature.
@@ -22,6 +25,13 @@
 //! Method syntax (see quant::Method::parse):
 //!   fp32 | dfmpc:2/6[:lam1[:lam2]] | original:2/6 | uniform:6 | dfq:6 |
 //!   omse:4 | ocs:4:0.05 | zeroq:6
+
+// same intentional-allow list as lib.rs (the bin target is a separate
+// crate, so the crate-level attributes there do not cover this file)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
 
 use std::sync::Arc;
 
@@ -50,14 +60,40 @@ fn run() -> Result<()> {
         Some("eval") => eval(&args),
         Some("sweep") => sweep(&args),
         Some("serve") => serve(&args),
+        Some("lint") => lint(&args),
         _ => {
             eprintln!(
-                "usage: dfmpc <info|quantize|eval|sweep|serve> [options]\n\
+                "usage: dfmpc <info|quantize|eval|sweep|serve|lint> [options]\n\
                  see rust/src/main.rs header for the full syntax"
             );
             Ok(())
         }
     }
+}
+
+/// Run the repo-native invariant checker (rust/src/analysis) over this
+/// repository's own sources. Prints unwaived findings as
+/// `file:line rule message` and fails if there are any; `--waivers` also
+/// lists every waived site with its justification.
+fn lint(args: &Args) -> Result<()> {
+    let root = dfmpc::analysis::repo_root()?;
+    let findings = dfmpc::analysis::lint_repo(&root)?;
+    let waived = findings.iter().filter(|f| f.waived.is_some()).count();
+    if args.flag("waivers") {
+        for f in findings.iter().filter(|f| f.waived.is_some()) {
+            println!("waived: {f} [{}]", f.waived.as_deref().unwrap_or(""));
+        }
+    }
+    let mut unwaived = 0usize;
+    for f in findings.iter().filter(|f| f.waived.is_none()) {
+        println!("{f}");
+        unwaived += 1;
+    }
+    if unwaived > 0 {
+        anyhow::bail!("lint: {unwaived} unwaived finding(s) ({waived} waived)");
+    }
+    println!("lint: clean ({waived} finding(s) waived)");
+    Ok(())
 }
 
 fn info() -> Result<()> {

@@ -67,10 +67,16 @@ pub fn recalibrate_bn(
     for j in 0..o {
         let wf = w.out_channel(j);
         let wh = w_hat.out_channel(j);
+        // lint: allow(bit-exactness) — quantize-time solve, not serving:
+        // slice iter().sum() folds left-to-right in one fixed order, and
+        // the result is baked into the checkpoint once
         let norm_w: f32 = wf.iter().map(|v| v * v).sum::<f32>().sqrt();
+        // lint: allow(bit-exactness) — same fixed-order solve as above
         let norm_h: f32 = wh.iter().map(|v| v * v).sum::<f32>().sqrt();
         let s = norm_h / norm_w.max(1e-12);
+        // lint: allow(bit-exactness) — same fixed-order solve as above
         let sum_w: f32 = wf.iter().sum();
+        // lint: allow(bit-exactness) — same fixed-order solve as above
         let sum_h: f32 = wh.iter().sum();
         // The mean ratio is ill-conditioned when the FP filter sums near
         // zero (ternary sums are integers); clamp its magnitude to a few

@@ -77,6 +77,8 @@ pub fn dfq(
         let (bo, bi, bk1, bk2) = (w_b.shape[0], w_b.shape[1], w_b.shape[2], w_b.shape[3]);
         let mut s = vec![1.0f32; o_a];
         for j in 0..o_a {
+            // lint: allow(bit-exactness) — max-abs range scan: max is
+            // order-independent over finite weights
             let r1 = w_a.out_channel(j).iter().fold(0.0f32, |m, v| m.max(v.abs()));
             let mut r2 = 0.0f32;
             for t in 0..bo {
@@ -187,6 +189,10 @@ pub fn dfq(
                 let base = ((t * bi + pair.offset + j) * k1) * k2;
                 let derr: f32 = (base..base + k1 * k2)
                     .map(|p| w_q.data[p] - w_fp.data[p])
+                    // lint: allow(bit-exactness) — quantize-time DFQ
+                    // bias absorption over a fixed ascending range; the
+                    // order never varies and the result is baked into
+                    // the checkpoint once
                     .sum();
                 shift[t] += derr * ea[j];
             }

@@ -72,7 +72,12 @@ pub fn synthesize(
         }
         dvar /= target_var.len() as f64;
         let cur_var: f64 = {
+            // lint: allow(bit-exactness) — f64 stats over the synthetic
+            // calibration batch, never on the serving path; the
+            // left-to-right order is fixed
             let m: f64 = imgs.data.iter().map(|v| *v as f64).sum::<f64>() / imgs.data.len() as f64;
+            // lint: allow(bit-exactness) — same calibration-only f64
+            // reduction as above
             imgs.data.iter().map(|v| (*v as f64 - m) * (*v as f64 - m)).sum::<f64>()
                 / imgs.data.len() as f64
         };

@@ -820,6 +820,9 @@ pub fn gap(x: &Tensor) -> Tensor {
     for ni in 0..n {
         for ci in 0..c {
             let base = (ni * c + ci) * h * w;
+            // lint: allow(bit-exactness) — slice iter().sum() is a
+            // sequential left-to-right fold over one plane; this IS the
+            // reference accumulation order, on the serial path only
             out.data[ni * c + ci] = x.data[base..base + h * w].iter().sum::<f32>() / hw;
         }
     }
@@ -905,6 +908,8 @@ fn softmax_rows_kernel(xdata: &[f32], c: usize, r0: usize, r1: usize, out: &mut 
     for r in r0..r1 {
         let src = &xdata[r * c..(r + 1) * c];
         let dst = &mut out[(r - r0) * c..(r - r0 + 1) * c];
+        // lint: allow(bit-exactness) — max is order-independent (NaN
+        // aside, inputs are finite logits); the fold cannot drift
         let m = src.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
         let mut sum = 0.0;
         for (d, &s) in dst.iter_mut().zip(src) {

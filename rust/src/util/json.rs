@@ -250,7 +250,7 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -301,7 +301,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
@@ -356,7 +356,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut a = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
@@ -379,7 +379,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
@@ -390,7 +390,7 @@ impl<'a> Parser<'a> {
             self.ws();
             let k = self.string()?;
             self.ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.ws();
             let v = self.value()?;
             m.insert(k, v);

@@ -24,6 +24,11 @@ mod imp {
     }
 
     pub fn install() {
+        // SAFETY: `signal` is the C library's handler registration with
+        // valid arguments for the whole program lifetime (a constant
+        // signum and a `static` extern-C fn). The handler body is a
+        // single atomic store, which is async-signal-safe; no allocation
+        // or locking can happen in signal context.
         unsafe {
             signal(SIGINT, on_sigint);
         }

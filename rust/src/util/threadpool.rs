@@ -35,6 +35,10 @@ impl ThreadPool {
                 thread::Builder::new()
                     .name(format!("{WORKER_NAME_PREFIX}{i}"))
                     .spawn(move || loop {
+                        // lint: allow(lock-discipline) — Mutex<Receiver>
+                        // IS the work-queue handoff protocol: one idle
+                        // worker at a time holds the lock precisely to
+                        // block in recv(); the only cost is wakeup order.
                         let job = { rx.lock().unwrap().recv() };
                         match job {
                             // Contain job panics so a bad job can neither

@@ -12,6 +12,13 @@
 //! artifacts, no `xla` feature — which is the request path exercised in
 //! offline builds.
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;

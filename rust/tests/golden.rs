@@ -4,6 +4,13 @@
 //! numerically on model logits. Vectors are written by `aot.py
 //! emit_golden`; run `make artifacts` first.
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use std::path::PathBuf;
 
 use dfmpc::data::synth;

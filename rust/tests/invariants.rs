@@ -1,0 +1,156 @@
+//! Runtime invariant stress tests backing docs/INVARIANTS.md:
+//!
+//! - the threadpool `scoped` barrier: no job outlives the call that
+//!   lent it stack borrows, regardless of queue pressure or how quickly
+//!   the borrowed buffer is dropped afterwards (a violation is a
+//!   use-after-free — run under miri to make it a hard error);
+//! - the registry `lru <-> slots` invariant under eviction races: debug
+//!   builds assert it inside every eviction pass, and the counters must
+//!   reconcile with residency afterwards.
+//!
+//! Nothing here depends on timing — the tests create real contention but
+//! assert only barrier post-conditions.
+
+// same intentional-allow list as lib.rs (integration tests are separate
+// crates, so the crate-level attributes do not reach them)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use dfmpc::model::{Checkpoint, ModelRegistry, Plan};
+use dfmpc::util::rng::Rng;
+use dfmpc::util::threadpool::ThreadPool;
+
+#[test]
+fn scoped_barrier_outlives_every_borrow_under_queue_pressure() {
+    // two workers, and every round queues unrelated 'static noise ahead
+    // of the scoped jobs — the barrier must still guarantee that, when
+    // `scoped` returns, every borrow of `data` is dead and every write
+    // has landed, no matter how deep the queue was.
+    let pool = ThreadPool::new(2);
+    let noise = Arc::new(AtomicUsize::new(0));
+    for round in 0..50u32 {
+        for _ in 0..8 {
+            let n = Arc::clone(&noise);
+            pool.execute(move || {
+                n.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let mut data = vec![0u32; 256];
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for chunk in data.chunks_mut(16) {
+                jobs.push(Box::new(move || {
+                    for v in chunk.iter_mut() {
+                        *v = round + 1;
+                    }
+                }));
+            }
+            pool.scoped(jobs);
+        }
+        assert!(data.iter().all(|&v| v == round + 1), "round {round} lost a write");
+    }
+    drop(pool); // join: all noise jobs ran exactly once
+    assert_eq!(noise.load(Ordering::SeqCst), 50 * 8);
+}
+
+#[test]
+fn scoped_buffer_can_be_dropped_immediately_after_the_barrier() {
+    // the borrowed buffer is freed the instant `scoped` returns while the
+    // pool keeps running other work — a straggling scoped job would be a
+    // use-after-free, which miri flags and asan-style corruption would
+    // surface as a wrong counter here.
+    let pool = ThreadPool::new(3);
+    let after = Arc::new(AtomicUsize::new(0));
+    for _ in 0..30 {
+        {
+            let mut local = vec![1u8; 128];
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for chunk in local.chunks_mut(8) {
+                jobs.push(Box::new(move || {
+                    for v in chunk.iter_mut() {
+                        *v += 1;
+                    }
+                }));
+            }
+            pool.scoped(jobs);
+            assert!(local.iter().all(|&v| v == 2));
+        } // `local` freed here, pool still live and busy below
+        let a = Arc::clone(&after);
+        pool.execute(move || {
+            a.fetch_add(1, Ordering::SeqCst);
+        });
+    }
+    drop(pool);
+    assert_eq!(after.load(Ordering::SeqCst), 30);
+}
+
+const TINY: &str = r#"{
+  "name": "tiny", "input": [3, 8, 8], "num_classes": 4,
+  "ops": [
+    {"op": "conv", "name": "c1", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c1_bn", "ch": 4},
+    {"op": "relu"},
+    {"op": "conv", "name": "c2", "cin": 4, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c2_bn", "ch": 8},
+    {"op": "relu"},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc", "cin": 8, "cout": 4}
+  ],
+  "pairs": [{"low": "c1", "high": "c2", "offset": 0}],
+  "bn_of": {"c1": "c1_bn", "c2": "c2_bn"}
+}"#;
+
+#[test]
+fn registry_lru_slots_invariant_holds_under_eviction_races() {
+    let plan = Arc::new(Plan::parse(TINY).expect("tiny plan"));
+    let ckpt = Arc::new(Checkpoint::random_init(&plan, &mut Rng::new(7)));
+
+    // size the budget off one real variant so evictions actually happen
+    let probe = ModelRegistry::new(usize::MAX, None);
+    probe.register_base("tiny", Arc::clone(&plan), Arc::clone(&ckpt)).expect("base");
+    let one = probe.get_or_prepare("tiny@uniform:4").expect("probe variant").bytes;
+    let budget = one + one / 2;
+
+    let reg = ModelRegistry::new(budget, None);
+    reg.register_base("tiny", plan, ckpt).expect("base");
+    const KEYS: [&str; 6] = [
+        "tiny@uniform:2",
+        "tiny@uniform:3",
+        "tiny@uniform:4",
+        "tiny@uniform:5",
+        "tiny@uniform:6",
+        "tiny@fp32",
+    ];
+    // four threads chase rotating key schedules: prepares, hits, and
+    // evictions interleave; debug builds run debug_assert_lru_slots on
+    // every eviction pass, so any lru/slots divergence aborts the test
+    std::thread::scope(|s| {
+        for t in 0..4usize {
+            let reg = &reg;
+            s.spawn(move || {
+                for i in 0..12usize {
+                    let key = KEYS[(t * 5 + i) % KEYS.len()];
+                    let m = reg.get_or_prepare(key).expect("prepare under race");
+                    assert!(m.bytes > 0, "{key} claims zero resident bytes");
+                }
+            });
+        }
+    });
+    // post-race reconciliation: residency == prepared - evicted, the
+    // budget held (every variant fits alone), and the snapshot agrees
+    // with the counters it was taken with
+    let snap = reg.snapshot();
+    assert_eq!(reg.resident_count(), snap.variants.len());
+    assert_eq!(snap.variants.len() as u64, snap.prepared - snap.evicted);
+    assert!(
+        snap.bytes_resident <= budget,
+        "resident {} exceeds budget {budget}",
+        snap.bytes_resident
+    );
+    assert!(snap.prepared >= KEYS.len() as u64, "every key was requested at least once");
+}

@@ -1,0 +1,13 @@
+// Fixture: every bit-exactness hazard in one kernel-module file.
+
+pub fn hazards(xs: &[f32], ys: &[f32]) -> f32 {
+    let dot: f32 = xs.iter().zip(ys).map(|(a, b)| a * b).sum();
+    let m = xs.iter().fold(0.0f32, |acc, v| acc.max(*v));
+    let fused = xs[0].mul_add(ys[0], m);
+    dot + fused
+}
+
+#[cfg(target_feature = "avx2")]
+pub fn gated(xs: &[f32]) -> f32 {
+    xs[0]
+}

@@ -1,0 +1,20 @@
+// Fixture: exempt integer reductions, a waived float reduction, and the
+// test-mod exemption. Expect zero unwaived findings.
+
+pub fn int_reductions(ns: &[usize]) -> usize {
+    let total: usize = ns.iter().sum();
+    total.max(ns.iter().map(|n| n / 2).sum::<usize>())
+}
+
+pub fn waived_sum(xs: &[f32]) -> f32 {
+    // lint: allow(bit-exactness) — fixture: the fixed-order-reduction
+    // justification goes here in real code.
+    xs.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    pub fn in_tests(xs: &[f32]) -> f32 {
+        xs.iter().sum()
+    }
+}

@@ -1,0 +1,11 @@
+// Fixture: raw arithmetic on header-derived sizes in a parse function,
+// next to a non-parse helper the rule must leave alone.
+
+pub fn parse_header(n: usize, c: usize, h: usize, w: usize) -> usize {
+    let numel = n * c * h * w;
+    numel + 32
+}
+
+pub fn helper_not_scoped(a: usize, b: usize) -> usize {
+    a + b
+}

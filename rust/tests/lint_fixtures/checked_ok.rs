@@ -1,0 +1,12 @@
+// Fixture: exempt and waived arithmetic in a parse function. Expect one
+// waived finding and nothing else.
+
+pub fn parse_sizes(n: usize, scale: f32) -> Option<(usize, f32)> {
+    let bytes = n.checked_mul(4)?.checked_add(32)?;
+    let gain = scale * 0.5;
+    let _fixed = 8 * 4;
+    // lint: allow(checked-arith) — fixture: the validated-bound
+    // justification goes here in real code.
+    let padded = bytes + 16;
+    Some((padded.min(bytes), gain))
+}

@@ -1,0 +1,31 @@
+// Fixture: a lock-order inversion (ABBA across two functions) and locks
+// held across a blocking call.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+
+pub struct Pair {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+    rx: Mutex<Receiver<u32>>,
+}
+
+impl Pair {
+    pub fn ab(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        ga.max(*gb)
+    }
+
+    pub fn ba(&self) -> u32 {
+        let gb = self.b.lock().unwrap();
+        let ga = self.a.lock().unwrap();
+        ga.max(*gb)
+    }
+
+    pub fn held_across_recv(&self) -> u32 {
+        let guard = self.a.lock().unwrap();
+        let v = self.rx.lock().unwrap().recv().unwrap_or(0);
+        guard.max(v)
+    }
+}

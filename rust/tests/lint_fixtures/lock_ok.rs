@@ -1,0 +1,40 @@
+// Fixture: sanctioned lock patterns — condvar handoff, drop-before-join,
+// statement-temporary release, and a waived receiver hold. Expect one
+// waived finding and nothing else.
+
+use std::sync::mpsc::Receiver;
+use std::sync::{Condvar, Mutex};
+
+pub struct Lanes {
+    q: Mutex<Vec<u32>>,
+    cv: Condvar,
+    rx: Mutex<Receiver<u32>>,
+}
+
+impl Lanes {
+    pub fn wait_for_work(&self) -> u32 {
+        let mut st = self.q.lock().unwrap();
+        while st.is_empty() {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.pop().unwrap_or(0)
+    }
+
+    pub fn drop_then_join(&self, h: std::thread::JoinHandle<()>) {
+        let st = self.q.lock().unwrap();
+        drop(st);
+        let _ = h.join();
+    }
+
+    pub fn temp_then_join(&self, h: std::thread::JoinHandle<()>) -> usize {
+        let n = self.q.lock().unwrap().len();
+        let _ = h.join();
+        n
+    }
+
+    pub fn waived_recv(&self) -> u32 {
+        // lint: allow(lock-discipline) — fixture: the Mutex<Receiver>
+        // handoff-protocol justification goes here in real code.
+        self.rx.lock().unwrap().recv().unwrap_or(0)
+    }
+}

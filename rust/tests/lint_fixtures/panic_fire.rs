@@ -1,0 +1,13 @@
+// Fixture: every panic-path construct on a serving module.
+
+pub fn handle(v: Option<u32>, r: Result<u32, String>) -> u32 {
+    let a = v.unwrap();
+    let b = r.expect("bad request");
+    if a > b {
+        panic!("a > b");
+    }
+    match a {
+        0 => unreachable!(),
+        _ => a.max(b),
+    }
+}

@@ -1,0 +1,16 @@
+// Fixture: waived unwrap plus the test-mod exemption on a serving
+// module. Expect zero unwaived findings.
+
+pub fn shutdown(handles: &std::sync::Mutex<Vec<u32>>) -> usize {
+    // lint: allow(panic-path) — fixture: the shutdown-path poison
+    // rationale goes here in real code.
+    handles.lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    pub fn asserts() {
+        let v: Option<u32> = Some(1);
+        v.unwrap();
+    }
+}

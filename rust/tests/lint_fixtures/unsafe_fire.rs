@@ -1,0 +1,6 @@
+// Fixture: `unsafe` outside the allowlist and without a SAFETY comment.
+// Linted by tests/lint_fixtures.rs under a virtual rust/src path.
+
+pub fn first_unchecked(v: &[u8]) -> u8 {
+    unsafe { *v.get_unchecked(0) }
+}

@@ -1,0 +1,14 @@
+// Fixture: allowlisted module with a properly documented `unsafe` block,
+// plus a waived undocumented one. Expect zero unwaived findings.
+
+pub fn documented(v: &[u8]) -> u8 {
+    // SAFETY: the caller guarantees `v` is non-empty; index 0 is
+    // therefore in bounds.
+    unsafe { *v.get_unchecked(0) }
+}
+
+pub fn waived(v: &[u8]) -> u8 {
+    // lint: allow(unsafe-audit) — fixture exercising the waiver path;
+    // real code must carry a safety comment instead.
+    unsafe { *v.get_unchecked(0) }
+}

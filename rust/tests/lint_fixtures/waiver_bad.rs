@@ -1,0 +1,10 @@
+// Fixture: malformed waivers are themselves `waiver-syntax` findings.
+
+pub fn noop(x: u32) -> u32 {
+    // lint: allow(no-such-rule) — the rule name is not one of ours.
+    let a = x;
+    // lint: allow(panic-path)
+    let b = a;
+    // lint: allow(panic-path — missing the closing delimiter
+    b
+}

@@ -14,6 +14,13 @@
 //!   malformed zoo manifests error (naming the path) instead of
 //!   panicking, allocating unbounded memory, or silently defaulting.
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use std::path::{Path, PathBuf};
 
 use dfmpc::data::EvalShard;

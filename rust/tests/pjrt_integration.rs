@@ -3,6 +3,13 @@
 //! pure-rust engine and the recorded training-time accuracy.
 //! Requires `make models artifacts`.
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use dfmpc::coordinator::eval::eval_pjrt;
 use dfmpc::harness::Harness;
 use dfmpc::quant::{dfmpc, DfmpcConfig, Method};

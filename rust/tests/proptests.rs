@@ -2,6 +2,13 @@
 //! DESIGN.md §2). Each property runs over many seeded random cases; on
 //! failure the seed is in the assertion message for reproduction.
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use dfmpc::model::{Checkpoint, Plan};
 use dfmpc::quant::compensate::{recalibrate_bn, solve_c};
 use dfmpc::quant::omse::quantize_omse;

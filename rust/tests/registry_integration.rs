@@ -13,6 +13,13 @@
 //! - unknown variant keys are rejected at admission with a structured
 //!   `bad_variant` error.
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use std::sync::Arc;
 use std::time::Duration;
 

@@ -12,6 +12,13 @@
 //!   traffic never corrupts a shared batch;
 //! - shutdown drains the queue without deadlocking.
 
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
