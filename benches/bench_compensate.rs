@@ -1,7 +1,8 @@
 //! Closed-form solve (Eq. 27) micro-bench: channels/s across layer sizes.
 //! This is the paper's entire "training" step, so its cost IS the
 //! method's cost; the §Perf target is memory-bandwidth-bound single-pass
-//! over the weights.
+//! over the weights. Appends a machine-readable record to
+//! `BENCH_compensate.json` (schema `dfmpc-bench-compensate/v1`).
 //!
 //!     cargo bench --bench bench_compensate
 
@@ -14,14 +15,16 @@
 
 mod common;
 
-use common::{bench, throughput};
+use common::{bench, throughput, write_report};
 use dfmpc::quant::compensate::{recalibrate_bn, solve_c};
 use dfmpc::quant::ternary::ternarize;
 use dfmpc::tensor::Tensor;
+use dfmpc::util::json::Json;
 use dfmpc::util::rng::Rng;
 
 fn main() {
     println!("== Eq. 27 closed-form solve across layer shapes ==");
+    let mut rows: Vec<Json> = Vec::new();
     for (o, i, k) in [(16usize, 16usize, 3usize), (64, 64, 3), (128, 128, 3), (256, 256, 3), (512, 512, 1)] {
         let mut r = Rng::new(42);
         let w = Tensor::new(vec![o, i, k, k], r.normal_vec(o * i * k * k));
@@ -40,21 +43,36 @@ fn main() {
             throughput(weights, res.mean_ms) / 1e6,
             throughput(o, res.mean_ms)
         );
+        rows.push(Json::obj(vec![
+            ("shape", Json::str(format!("{o}x{i}x{k}x{k}"))),
+            ("mean_ms", Json::num(res.mean_ms)),
+            ("mweights_s", Json::num(throughput(weights, res.mean_ms) / 1e6)),
+            ("channels_s", Json::num(throughput(o, res.mean_ms))),
+        ]));
     }
 
     println!("\n== pipeline stage costs (o=128, i=128, k=3) ==");
     let mut r = Rng::new(7);
     let w = Tensor::new(vec![128, 128, 3, 3], r.normal_vec(128 * 128 * 9));
-    bench("ternarize (Eq. 3/4)", 3, 30, || {
+    let rt = bench("ternarize (Eq. 3/4)", 3, 30, || {
         let _ = ternarize(&w);
     });
     let (w_hat, _, _) = ternarize(&w);
     let mu: Vec<f32> = (0..128).map(|_| r.normal()).collect();
     let var: Vec<f32> = (0..128).map(|_| 0.5 + r.f32()).collect();
-    bench("recalibrate_bn", 3, 30, || {
+    let rb = bench("recalibrate_bn", 3, 30, || {
         let _ = recalibrate_bn(&w, &w_hat, &mu, &var);
     });
-    bench("quantize_uniform 6b (Eq. 6)", 3, 30, || {
+    let ru = bench("quantize_uniform 6b (Eq. 6)", 3, 30, || {
         let _ = dfmpc::quant::uniform::quantize_uniform(&w, 6);
     });
+    write_report(
+        "compensate",
+        vec![
+            ("solve_c", Json::Arr(rows)),
+            ("ternarize_mean_ms", Json::num(rt.mean_ms)),
+            ("recalibrate_bn_mean_ms", Json::num(rb.mean_ms)),
+            ("quantize_uniform6_mean_ms", Json::num(ru.mean_ms)),
+        ],
+    );
 }

@@ -10,6 +10,13 @@
 //! microkernel, parity-checked, asserting the microkernel clears 1.5x
 //! serial on hosts with >= 4 cores (the §Perf floor of the rewrite).
 //!
+//! Part 2b (always runs): the quantized-kernel A/B — a serving-scale
+//! conv GEMM through fp32 panels vs straight from the packed bits
+//! (ternary bitplanes and 4-bit grid indices), parity-checked
+//! bit-for-bit, asserting the ternary path clears 1.3x serial
+//! throughput AND a strictly smaller resident panel footprint on hosts
+//! with >= 4 cores (the §Perf floor of the packed-bit compute path).
+//!
 //! Part 3 (always runs): closed-loop many-client serving over the
 //! coordinator's [`LanePool`] with 1 vs N serial reference lanes — the
 //! §Perf evidence that the multi-lane dispatcher scales batch throughput
@@ -41,7 +48,6 @@
 
 mod common;
 
-use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -216,6 +222,107 @@ fn gemm_microkernel_ab() -> Json {
         ("microkernel_mean_ms", Json::num(rs_new.mean_ms)),
         ("speedup_vs_retired", Json::num(speedup)),
     ])
+}
+
+/// §Perf evidence for the quantized-arithmetic compute path: the same
+/// serving-scale conv GEMM through fp32 panels (what prepare-time
+/// dequantization used to build) vs straight from the packed bits
+/// ([`PackedQ`]), both serial, parity-checked bit-for-bit first. The
+/// weight is big enough that the fp32 panel set (~9.4 MB) streams from
+/// memory every row-block sweep while the ternary bitplanes (~0.6 MB)
+/// decode panel-by-panel from cache — the regime the integer kernel is
+/// for. Ternary must clear the 1.3x acceptance floor on hosts with
+/// >= 4 cores (skipped on tiny CI boxes, like the other §Perf floors);
+/// the 4-bit grid kernel is reported alongside without a floor.
+fn quantized_gemm_ab() -> Json {
+    use dfmpc::tensor::ops::{conv2d_packed, pack_filter, ExecCtx};
+    use dfmpc::tensor::qgemm::{conv2d_packed_q, PackedQ};
+    use dfmpc::tensor::qtensor::{GridMeta, QTensor};
+
+    let (cin, cout, k, h) = (512usize, 512usize, 3usize, 8usize);
+    let batch = 1;
+    println!("== quantized GEMM A/B: fp32 panels vs packed-bit panels, {cin}->{cout} k{k} ==");
+    let mut r = Rng::new(21);
+    let x = Tensor::new(vec![batch, cin, h, h], r.normal_vec(batch * cin * h * h));
+    let mut ctx = ExecCtx::serial();
+
+    // ternary weight with alpha folded to 1.0 (the `original:*` grid
+    // emission) — exact trit values, so QTensor::pack stays on-grid
+    let wt = Tensor::from_fn(vec![cout, cin, k, k], |_| {
+        let u = r.f32();
+        if u < 1.0 / 3.0 {
+            -1.0
+        } else if u < 2.0 / 3.0 {
+            0.0
+        } else {
+            1.0
+        }
+    });
+    let qt = QTensor::pack(&wt, &GridMeta::Ternary { alpha: 1.0 });
+    assert!(qt.is_packed(), "ternary bench weight must pack");
+    // 4-bit grid weight: indices drawn uniformly, values built by the
+    // same float-op sequence `grid_value` uses so packing is exact
+    let (bits, scale) = (4u32, 0.6f32);
+    let levels = ((1u64 << bits) - 1) as f32;
+    let wg = Tensor::from_fn(vec![cout, cin, k, k], |_| {
+        let m = r.below(1 << bits) as f32;
+        ((2.0 / levels) * m - 1.0) * scale.max(1e-12)
+    });
+    let qg = QTensor::pack(&wg, &GridMeta::Uniform { bits, scale, chan: None });
+    assert!(qg.is_packed(), "grid bench weight must pack");
+
+    let mut rows = Vec::new();
+    let mut ternary_speedup = 0.0f64;
+    for (label, q) in [("ternary", &qt), ("grid4", &qg)] {
+        let dense = q.dequantize();
+        let fp32 = pack_filter(&dense);
+        let pq = PackedQ::from_qtensor(q).unwrap();
+        let fp32_bytes = fp32.floats() * 4;
+        let pq_bytes = pq.bytes();
+
+        // parity gate: the packed-bit path must be bit-identical to the
+        // fp32-panel path before its timing means anything
+        let want = conv2d_packed(&mut ctx, &x, &fp32, k, 1, 1);
+        let got = conv2d_packed_q(&mut ctx, &x, &pq, k, 1, 1);
+        assert_eq!(want.data, got.data, "{label}: packed-bit conv diverged from fp32 panels");
+
+        let rf = bench(&format!("{label}: fp32-panel conv (serial)"), 1, 5, || {
+            std::hint::black_box(conv2d_packed(&mut ctx, &x, &fp32, k, 1, 1));
+        });
+        let rq = bench(&format!("{label}: packed-bit conv (serial)"), 1, 5, || {
+            std::hint::black_box(conv2d_packed_q(&mut ctx, &x, &pq, k, 1, 1));
+        });
+        let speedup = rf.mean_ms / rq.mean_ms;
+        println!(
+            "    {label}: {speedup:.2}x over fp32 panels | resident {pq_bytes} B vs {fp32_bytes} B ({:.1}x smaller)",
+            fp32_bytes as f64 / pq_bytes as f64
+        );
+        assert!(
+            pq_bytes < fp32_bytes,
+            "{label}: packed panel {pq_bytes} B must undercut fp32 panels {fp32_bytes} B"
+        );
+        if label == "ternary" {
+            ternary_speedup = speedup;
+        }
+        rows.push(Json::obj(vec![
+            ("kernel", Json::str(pq.kind())),
+            ("fp32_mean_ms", Json::num(rf.mean_ms)),
+            ("packed_mean_ms", Json::num(rq.mean_ms)),
+            ("speedup_vs_fp32_panels", Json::num(speedup)),
+            ("packed_panel_bytes", Json::num(pq_bytes as f64)),
+            ("fp32_panel_bytes", Json::num(fp32_bytes as f64)),
+        ]));
+    }
+    // §Perf acceptance: serving ternary variants straight from the bits
+    // must beat dequantized fp32 panels on real hosts (throughput AND
+    // resident bytes — the bytes assert above is unconditional)
+    if ThreadPool::default_threads() >= 4 {
+        assert!(
+            ternary_speedup >= 1.3,
+            "ternary packed-bit path did not clear the 1.3x floor: {ternary_speedup:.2}x"
+        );
+    }
+    Json::Arr(rows)
 }
 
 /// Closed-loop many-client serving benchmark over the lane pool: the
@@ -444,10 +551,10 @@ fn packed_capacity() -> Json {
     let m = registry.get_or_prepare("bench@uniform:4").unwrap();
     // a second resident variant so the per-variant report shows the fp32
     // (packed_bytes = 0, shared base) vs packed accounting side by side
-    let _ = registry.get_or_prepare("bench@fp32").unwrap();
+    let base = registry.get_or_prepare("bench@fp32").unwrap();
     let offline = Method::parse("uniform:4").unwrap().apply(&plan, &ckpt, None).unwrap();
     let full_ckpt_bytes: usize = offline.tensors.values().map(|t| t.data.len() * 4).sum();
-    let panel_bytes: usize = m.panels.values().map(|p| p.floats() * 4).sum();
+    let panel_bytes: usize = m.panels.values().map(|p| p.bytes()).sum();
     let legacy = full_ckpt_bytes + panel_bytes;
     let packed_bytes = m.packed.as_ref().map_or(0, |p| p.stored_bytes());
     println!(
@@ -463,16 +570,35 @@ fn packed_capacity() -> Json {
         "packed residency {} must undercut the fp32-resident {legacy} B",
         m.bytes
     );
+    // §Perf acceptance: the low-bit variant's GEMM panels (served from
+    // the packed bits) stay strictly below the fp32 variant's fp32 panels
+    let fp32_panel_bytes: usize = base.panels.values().map(|p| p.bytes()).sum();
+    println!(
+        "    panels: uniform:4 {panel_bytes} B vs fp32 {fp32_panel_bytes} B; per-layer paths:"
+    );
+    for (layer, path) in &m.layer_paths {
+        println!("        {layer}: {path}");
+    }
+    assert!(
+        panel_bytes < fp32_panel_bytes,
+        "low-bit panels {panel_bytes} B must undercut fp32 panels {fp32_panel_bytes} B"
+    );
 
     let variants: Vec<Json> = registry
         .snapshot()
         .variants
         .iter()
         .map(|v| {
+            let paths: Vec<Json> = v
+                .layer_paths
+                .iter()
+                .map(|(layer, path)| Json::str(format!("{layer}:{path}")))
+                .collect();
             Json::obj(vec![
                 ("key", Json::str(v.key.as_str())),
                 ("resident_bytes", Json::num(v.bytes as f64)),
                 ("packed_bytes", Json::num(v.packed_bytes as f64)),
+                ("layer_paths", Json::Arr(paths)),
             ])
         })
         .collect();
@@ -480,43 +606,26 @@ fn packed_capacity() -> Json {
 }
 
 /// Append this run's record to `BENCH_infer.json` at the repo root
-/// (read-modify-write through [`Json`], preserving prior runs).
-fn write_report(engine: Json, gemm: Json, serving: Json, variants: Json) {
-    let unix_time = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
-    let run = Json::obj(vec![
-        ("unix_time", Json::num(unix_time as f64)),
-        ("host_threads", Json::num(ThreadPool::default_threads() as f64)),
-        ("engine", engine),
-        ("gemm", gemm),
-        ("serving", serving),
-        ("variants", variants),
-    ]);
-    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap_or(Path::new("."));
-    let path = root.join("BENCH_infer.json");
-    let prior = std::fs::read_to_string(&path).ok();
-    let mut runs: Vec<Json> = prior
-        .and_then(|t| Json::parse(&t).ok())
-        .and_then(|doc| doc.get("runs").and_then(|r| r.as_arr().map(|a| a.to_vec())))
-        .unwrap_or_default();
-    runs.push(run);
-    let doc = Json::obj(vec![
-        ("schema", Json::str("dfmpc-bench-infer/v1")),
-        ("runs", Json::Arr(runs)),
-    ]);
-    match std::fs::write(&path, doc.dump() + "\n") {
-        Ok(()) => println!("run record appended -> {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+/// (via [`common::write_report`], preserving prior runs).
+fn write_report(engine: Json, gemm: Json, qgemm: Json, serving: Json, variants: Json) {
+    common::write_report(
+        "infer",
+        vec![
+            ("engine", engine),
+            ("gemm", gemm),
+            ("qgemm", qgemm),
+            ("serving", serving),
+            ("variants", variants),
+        ],
+    );
 }
 
 fn main() {
     let engine = reference_engine_scaling();
     let gemm = gemm_microkernel_ab();
+    let qgemm = quantized_gemm_ab();
     let serving = lane_pool_scaling();
     let variants = packed_capacity();
     pjrt_comparison();
-    write_report(engine, gemm, serving, variants);
+    write_report(engine, gemm, qgemm, serving, variants);
 }

@@ -3,6 +3,12 @@
 //! magnitude cheaper than generative data synthesis (ZeroQ: 12 s on
 //! 8xV100 vs DF-MPC: 2 s on one GPU "or even CPU only").
 //!
+//! Runs against the real resnet18 artifacts when present; without them
+//! (no `make models artifacts`) it falls back to a synthetic
+//! ResNet-style plan + random-init checkpoint, so the cost rows — and
+//! the machine-readable record appended to `BENCH_quant.json` (schema
+//! `dfmpc-bench-quant/v1`) — exist on artifact-less hosts too.
+//!
 //!     cargo bench --bench bench_quant
 
 // same intentional-allow list as lib.rs (each non-lib target is a
@@ -14,26 +20,53 @@
 
 mod common;
 
-use common::bench;
+use std::sync::Arc;
+
+use common::{bench, write_report};
 use dfmpc::harness::Harness;
+use dfmpc::model::{Checkpoint, Plan};
 use dfmpc::quant::Method;
+use dfmpc::util::json::Json;
+use dfmpc::util::rng::Rng;
+use dfmpc::util::threadpool::ThreadPool;
+
+/// ResNet-style CIFAR stem + one compensated pair — the artifact-less
+/// stand-in: big enough that per-method cost differences show, small
+/// enough that the expensive generative stand-in stays sub-minute.
+const SYNTH_PLAN: &str = r#"{
+  "name": "synth-quant-bench", "input": [3, 32, 32], "num_classes": 10,
+  "ops": [
+    {"op": "conv", "name": "stem", "cin": 3, "cout": 32, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "stem_bn", "ch": 32},
+    {"op": "relu"},
+    {"op": "conv", "name": "s1a", "cin": 32, "cout": 32, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "s1a_bn", "ch": 32},
+    {"op": "relu"},
+    {"op": "conv", "name": "s1b", "cin": 32, "cout": 64, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "s1b_bn", "ch": 64},
+    {"op": "relu"},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc", "cin": 64, "cout": 10}
+  ],
+  "pairs": [{"low": "s1a", "high": "s1b", "offset": 0}],
+  "bn_of": {"s1a": "s1a_bn", "s1b": "s1b_bn"}
+}"#;
 
 fn main() {
-    let h = match Harness::open() {
-        Ok(h) => h,
-        Err(e) => {
-            eprintln!("SKIP (run `make models artifacts`): {e:#}");
-            return;
+    let harness = Harness::open().ok();
+    let loaded = harness.as_ref().and_then(|h| h.load_model("resnet18_cifar10-sim").ok());
+    let synth;
+    let (plan, ckpt, label): (&Plan, &Checkpoint, &str) = match &loaded {
+        Some(m) => (&m.plan, &m.ckpt, "resnet18_cifar10-sim"),
+        None => {
+            eprintln!("no artifacts (run `make models artifacts`): timing the synthetic model");
+            let p = Plan::parse(SYNTH_PLAN).unwrap();
+            let c = Checkpoint::random_init(&p, &mut Rng::new(42));
+            synth = (p, c);
+            (&synth.0, &synth.1, "synthetic-resnet-style")
         }
     };
-    let model = match h.load_model("resnet18_cifar10-sim") {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("SKIP: {e:#}");
-            return;
-        }
-    };
-    println!("== quantization wall-clock, resnet18 ({} params) ==", model.plan.param_count());
+    println!("== quantization wall-clock, {label} ({} params) ==", plan.param_count());
     let specs = [
         ("dfmpc:2/6", 5, 20),
         ("dfmpc:6/6", 5, 20),
@@ -46,10 +79,11 @@ fn main() {
     ];
     let mut dfmpc_ms = f64::NAN;
     let mut zeroq_ms = f64::NAN;
+    let mut rows: Vec<Json> = Vec::new();
     for (spec, warm, iters) in specs {
         let m = Method::parse(spec).unwrap();
         let r = bench(spec, warm, iters, || {
-            let _ = m.apply(&model.plan, &model.ckpt, None).unwrap();
+            let _ = m.apply(plan, ckpt, None).unwrap();
         });
         if spec == "dfmpc:2/6" {
             dfmpc_ms = r.mean_ms;
@@ -57,12 +91,19 @@ fn main() {
         if spec == "zeroq:6" {
             zeroq_ms = r.mean_ms;
         }
+        rows.push(Json::obj(vec![
+            ("method", Json::str(spec)),
+            ("mean_ms", Json::num(r.mean_ms)),
+        ]));
     }
     // pool-parallel quantization (the registry's lazy-prepare path)
-    let pool = h.pool();
+    let pool = match &harness {
+        Some(h) => h.pool(),
+        None => Arc::new(ThreadPool::new(ThreadPool::default_threads())),
+    };
     let m = Method::parse("dfmpc:2/6").unwrap();
     let rp = bench("dfmpc:2/6 (pooled)", 5, 20, || {
-        let _ = m.apply(&model.plan, &model.ckpt, Some(&pool)).unwrap();
+        let _ = m.apply(plan, ckpt, Some(&pool)).unwrap();
     });
     println!(
         "    -> pooled prepare {:.1} ms ({:.2}x over serial)",
@@ -74,13 +115,24 @@ fn main() {
         zeroq_ms / dfmpc_ms
     );
     // scale study: cost is linear in weights (one pass, closed form)
-    println!("\n== DF-MPC cost across the zoo ==");
-    for id in h.available_models() {
-        if let Ok(m) = h.load_model(&id) {
-            let method = Method::parse("dfmpc:2/6").unwrap();
-            bench(&format!("dfmpc:2/6 {id}"), 2, 8, || {
-                let _ = method.apply(&m.plan, &m.ckpt, None).unwrap();
-            });
+    if let Some(h) = &harness {
+        println!("\n== DF-MPC cost across the zoo ==");
+        for id in h.available_models() {
+            if let Ok(m) = h.load_model(&id) {
+                let method = Method::parse("dfmpc:2/6").unwrap();
+                bench(&format!("dfmpc:2/6 {id}"), 2, 8, || {
+                    let _ = method.apply(&m.plan, &m.ckpt, None).unwrap();
+                });
+            }
         }
     }
+    write_report(
+        "quant",
+        vec![
+            ("model", Json::str(label)),
+            ("methods", Json::Arr(rows)),
+            ("dfmpc_pooled_mean_ms", Json::num(rp.mean_ms)),
+            ("zeroq_over_dfmpc", Json::num(zeroq_ms / dfmpc_ms)),
+        ],
+    );
 }

@@ -45,3 +45,40 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
 pub fn throughput(items_per_call: usize, mean_ms: f64) -> f64 {
     items_per_call as f64 / (mean_ms / 1e3)
 }
+
+/// Append one run record to `BENCH_<name>.json` at the repo root under
+/// schema `dfmpc-bench-<name>/v1` (read-modify-write through [`Json`],
+/// preserving prior runs) — so regressions diff as data, not prose.
+/// Every record carries the timestamp and host thread count; `fields`
+/// adds the bench-specific payload.
+pub fn write_report(name: &str, fields: Vec<(&str, dfmpc::util::json::Json)>) {
+    use dfmpc::util::json::Json;
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut run_fields = vec![
+        ("unix_time", Json::num(unix_time as f64)),
+        ("host_threads", Json::num(dfmpc::util::threadpool::ThreadPool::default_threads() as f64)),
+    ];
+    run_fields.extend(fields);
+    let run = Json::obj(run_fields);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or(std::path::Path::new("."));
+    let path = root.join(format!("BENCH_{name}.json"));
+    let prior = std::fs::read_to_string(&path).ok();
+    let mut runs: Vec<Json> = prior
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|doc| doc.get("runs").and_then(|r| r.as_arr().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    runs.push(run);
+    let doc = Json::obj(vec![
+        ("schema", Json::str(format!("dfmpc-bench-{name}/v1"))),
+        ("runs", Json::Arr(runs)),
+    ]);
+    match std::fs::write(&path, doc.dump() + "\n") {
+        Ok(()) => println!("run record appended -> {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -21,10 +21,12 @@ const INT_TYPES: &str = "usize u64 u32 u16 u8 isize i64 i32 i16 i8";
 const TF_MSG: &str = "`target_feature`-gated code forks kernel behaviour per host — \
                       bit-exactness requires one code path";
 
-/// Kernel modules on the bit-exactness contract: the tensor kernels, the
-/// inference engine, and every `quant` solve path.
+/// Kernel modules on the bit-exactness contract: the tensor kernels
+/// (fp32 and quantized-arithmetic), the inference engine, and every
+/// `quant` solve path.
 fn in_scope(module: &str) -> bool {
-    let kernel = module == "tensor/ops" || module == "infer/engine";
+    let kernel =
+        module == "tensor/ops" || module == "tensor/qgemm" || module == "infer/engine";
     kernel || module == "quant" || module.starts_with("quant/")
 }
 

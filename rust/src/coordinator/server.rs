@@ -437,6 +437,17 @@ fn status_json(pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
                                 ("bytes", Json::num(v.bytes as f64)),
                                 ("packed_bytes", Json::num(v.packed_bytes as f64)),
                                 ("prepare_ms", Json::num(v.prepare_ms)),
+                                (
+                                    // which compute path serves each layer
+                                    // ("c1:ternary-panel", "fc:fc-grid8", ...)
+                                    "layer_paths",
+                                    Json::Arr(
+                                        v.layer_paths
+                                            .iter()
+                                            .map(|(l, p)| Json::str(format!("{l}:{p}")))
+                                            .collect(),
+                                    ),
+                                ),
                             ])
                         })
                         .collect(),

@@ -25,9 +25,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::model::registry::{pack_panels, PackedPanels};
+use crate::model::registry::{pack_panels, PackedPanels, Panel};
 use crate::model::{Checkpoint, ConvSpec, ModelRegistry, Op, Plan, PreparedModel};
 use crate::tensor::ops::{self, ExecCtx};
+use crate::tensor::qgemm;
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
 
@@ -66,14 +67,18 @@ impl Default for EngineState {
     }
 }
 
-/// Dense conv through the shared packed-panel map; grouped convs (and the
-/// fallback when a panel is absent) use `conv2d_with`, which packs
-/// transiently — numerically identical, just without the cached layout.
+/// Dense conv through the shared packed-panel map, dispatching on the
+/// panel kind: fp32 [`Panel::F32`] panels run the classic microkernel,
+/// quantized [`Panel::Quant`] panels run the integer-path kernels that
+/// decode the packed bits directly (bit-exact by contract, see
+/// `tensor::qgemm`). Grouped convs (and the fallback when a panel is
+/// absent) use `conv2d_with`, which packs transiently — numerically
+/// identical, just without the cached layout.
 ///
 /// The panel path reads the kernel geometry from the plan's [`ConvSpec`],
 /// not the checkpoint: a registry-prepared packed variant keeps dense-conv
-/// weights *only* in the panels (their dequantized form), so the fp32
-/// tensor may legitimately be absent from the runtime checkpoint.
+/// weights *only* in the panels (fp32 or bit-packed), so the fp32 tensor
+/// may legitimately be absent from the runtime checkpoint.
 fn conv_exec(
     ctx: &mut ExecCtx,
     panels: &PackedPanels,
@@ -82,14 +87,29 @@ fn conv_exec(
     x: &Tensor,
 ) -> Result<Tensor> {
     if spec.groups == 1 {
-        if let Some(wt) = panels.get(&spec.name) {
-            debug_assert_eq!(
-                wt.n(),
-                spec.cout,
-                "panel '{}' packed for a different filter",
-                spec.name
-            );
-            return Ok(ops::conv2d_packed(ctx, x, wt, spec.k, spec.stride, spec.pad));
+        match panels.get(&spec.name) {
+            Some(Panel::F32(wt)) => {
+                debug_assert_eq!(
+                    wt.n(),
+                    spec.cout,
+                    "panel '{}' packed for a different filter",
+                    spec.name
+                );
+                return Ok(ops::conv2d_packed(ctx, x, wt, spec.k, spec.stride, spec.pad));
+            }
+            Some(Panel::Quant(wq)) => {
+                debug_assert_eq!(
+                    wq.n(),
+                    spec.cout,
+                    "quantized panel '{}' packed for a different filter",
+                    spec.name
+                );
+                return Ok(qgemm::conv2d_packed_q(ctx, x, wq, spec.k, spec.stride, spec.pad));
+            }
+            // an fc panel under a conv name would be a registry bug;
+            // fall through to the dense path, which errors if the
+            // weight is truly absent
+            Some(Panel::FcQuant(_)) | None => {}
         }
     }
     let w = ckpt.get(&format!("{}.w", spec.name))?;
@@ -234,9 +254,17 @@ impl<'a> Engine<'a> {
                     ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
                 Op::Fc { name, .. } => {
-                    let w = self.ckpt.get(&format!("{name}.w"))?;
                     let b = self.ckpt.get(&format!("{name}.b"))?;
-                    let y = ops::fc_with(ctx, &x, w, &b.data);
+                    // on-grid fc weights serve straight from the packed
+                    // bits (no dense fp32 `fc.w` resident); otherwise
+                    // dense from the checkpoint
+                    let y = match panels.get(name.as_str()) {
+                        Some(Panel::FcQuant(wq)) => qgemm::fc_with_q(ctx, &x, wq, &b.data),
+                        _ => {
+                            let w = self.ckpt.get(&format!("{name}.w"))?;
+                            ops::fc_with(ctx, &x, w, &b.data)
+                        }
+                    };
                     ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
             }

@@ -31,11 +31,12 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::quant::Method;
-use crate::tensor::ops::{pack_filter, PackedB};
+use crate::tensor::ops::{pack_filter, PackedB, PackedQ, QFcW};
+use crate::tensor::qtensor::QTensor;
 use crate::util::threadpool::ThreadPool;
 use crate::util::Stopwatch;
 
-use super::{Checkpoint, PackedCheckpoint, Plan};
+use super::{Checkpoint, Op, PackedCheckpoint, Plan};
 
 /// Counters for a [`ModelRegistry`]: how variants were resolved (cache
 /// hit vs prepared on demand), how many were evicted by the byte budget,
@@ -77,6 +78,9 @@ pub struct VariantSnapshot {
     /// bytes of the bit-packed low-bit store (0 for fp32 variants, which
     /// share the base checkpoint instead)
     pub packed_bytes: usize,
+    /// which compute path serves each layer (`(layer, kind)` — e.g.
+    /// `("c1", "ternary-panel")`, see [`layer_paths`])
+    pub layer_paths: Vec<(String, &'static str)>,
     /// how long this variant took to prepare, milliseconds
     pub prepare_ms: f64,
 }
@@ -95,17 +99,51 @@ pub struct RegistrySnapshot {
     pub budget_bytes: usize,
 }
 
-/// Per-conv GEMM-packed filter panels ([`PackedB`] — `GEMM_NR`-wide
-/// column panels of `W^T`, the microkernel's native layout), keyed by
-/// conv name. Built once per variant and shared read-only across every
+/// One layer's GEMM-ready weight panel. Quantized variants serve straight
+/// from the packed bits: on-grid conv weights become [`PackedQ`] panels
+/// (consumed by `tensor::qgemm`'s integer-path kernels), on-grid fc
+/// weights become [`QFcW`] (decoded inside the fc loop, so no dense fp32
+/// `fc.w` residual exists at all). Classic fp32 [`PackedB`] panels remain
+/// for fp32 variants and the rare off-grid fallback tensor.
+#[derive(Clone, Debug)]
+pub enum Panel {
+    F32(PackedB),
+    Quant(PackedQ),
+    FcQuant(QFcW),
+}
+
+impl Panel {
+    /// Resident panel bytes — what the registry's LRU budget charges.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Panel::F32(p) => p.floats() * 4,
+            Panel::Quant(q) => q.bytes(),
+            Panel::FcQuant(q) => q.bytes(),
+        }
+    }
+
+    /// Serving-path label (`status` reporting): which kernel consumes
+    /// this panel.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Panel::F32(_) => "fp32-panel",
+            Panel::Quant(q) => q.kind(),
+            Panel::FcQuant(q) => q.kind(),
+        }
+    }
+}
+
+/// Per-layer GEMM-packed weight panels ([`Panel`]), keyed by conv/fc
+/// layer name. Built once per variant and shared read-only across every
 /// lane (see [`crate::infer::Engine`]).
-pub type PackedPanels = BTreeMap<String, PackedB>;
+pub type PackedPanels = BTreeMap<String, Panel>;
 
 /// Pack every dense (`groups == 1`) conv filter of `plan` into its
-/// GEMM-ready transposed panel, fanning the per-layer packs over `pool`.
-/// Convs whose weight tensor is absent from `ckpt` are skipped — the
-/// engine falls back to transient packing (and `forward` will surface the
-/// missing tensor as an error if it is actually needed).
+/// GEMM-ready transposed fp32 panel, fanning the per-layer packs over
+/// `pool`. Convs whose weight tensor is absent from `ckpt` are skipped —
+/// the engine falls back to transient packing (and `forward` will surface
+/// the missing tensor as an error if it is actually needed). This is the
+/// fp32-variant path; packed variants use [`pack_panels_q`].
 pub fn pack_panels(plan: &Plan, ckpt: &Checkpoint, pool: Option<&Arc<ThreadPool>>) -> PackedPanels {
     let jobs: Vec<(String, &crate::tensor::Tensor)> = plan
         .convs()
@@ -115,22 +153,104 @@ pub fn pack_panels(plan: &Plan, ckpt: &Checkpoint, pool: Option<&Arc<ThreadPool>
             ckpt.tensors.get(&format!("{name}.w")).map(|w| (name.clone(), w))
         })
         .collect();
-    crate::quant::par_map(pool, jobs, |(name, w)| (name, pack_filter(w)))
+    crate::quant::par_map(pool, jobs, |(name, w)| (name, Panel::F32(pack_filter(w))))
         .into_iter()
         .collect()
+}
+
+/// Panel build for a packed variant, straight from the bit-packed store:
+/// dense convs whose weight is on an integer grid get a [`Panel::Quant`]
+/// panel built from the packed bits (no fp32 materialization), on-grid fc
+/// weights get [`Panel::FcQuant`], and only off-grid fallback convs fall
+/// back to fp32 [`Panel::F32`] panels packed from `full`.
+pub fn pack_panels_q(
+    plan: &Plan,
+    full: &Checkpoint,
+    packed: &PackedCheckpoint,
+    pool: Option<&Arc<ThreadPool>>,
+) -> PackedPanels {
+    enum Src<'a> {
+        Conv(&'a QTensor),
+        ConvF32(&'a crate::tensor::Tensor),
+        Fc(&'a QTensor),
+    }
+    let mut jobs: Vec<(String, Src)> = Vec::new();
+    for (name, spec) in plan.convs() {
+        if spec.groups != 1 {
+            continue;
+        }
+        let wname = format!("{name}.w");
+        match packed.tensors.get(&wname) {
+            Some(q) if q.is_packed() => jobs.push((name, Src::Conv(q))),
+            _ => {
+                if let Some(w) = full.tensors.get(&wname) {
+                    jobs.push((name, Src::ConvF32(w)));
+                }
+            }
+        }
+    }
+    for op in &plan.ops {
+        if let Op::Fc { name, .. } = op {
+            if let Some(q) = packed.tensors.get(&format!("{name}.w")) {
+                if q.is_packed() {
+                    jobs.push((name.clone(), Src::Fc(q)));
+                }
+            }
+        }
+    }
+    crate::quant::par_map(pool, jobs, |(name, src)| {
+        let panel = match src {
+            Src::Conv(q) => PackedQ::from_qtensor(q).map(Panel::Quant),
+            Src::ConvF32(w) => Some(Panel::F32(pack_filter(w))),
+            Src::Fc(q) => QFcW::from_qtensor(q).map(Panel::FcQuant),
+        };
+        (name, panel)
+    })
+    .into_iter()
+    .filter_map(|(name, p)| p.map(|p| (name, p)))
+    .collect()
+}
+
+/// Which compute path serves each weight-bearing layer of `plan`:
+/// `(layer name, label)`, convs in name order then fc layers. Paneled
+/// layers report their
+/// panel's [`Panel::kind`]; grouped convs and panel-less layers execute
+/// dense from the runtime checkpoint (`"fp32-direct"` / `"fc-fp32"`).
+pub fn layer_paths(plan: &Plan, panels: &PackedPanels) -> Vec<(String, &'static str)> {
+    let mut out = Vec::new();
+    for (name, _) in plan.convs() {
+        let label = match panels.get(&name) {
+            Some(p) => p.kind(),
+            None => "fp32-direct",
+        };
+        out.push((name, label));
+    }
+    for op in &plan.ops {
+        if let Op::Fc { name, .. } = op {
+            let label = match panels.get(name.as_str()) {
+                Some(p) => p.kind(),
+                None => "fc-fp32",
+            };
+            out.push((name.clone(), label));
+        }
+    }
+    out
 }
 
 /// One immutable, fully prepared model variant: everything a serving lane
 /// needs to execute batches, shareable read-only across lanes.
 ///
 /// Quantized variants keep their weights **bit-packed**
-/// ([`PackedCheckpoint`]): the dense-conv weights exist in f32 only
-/// inside the GEMM panels (their dequantized execution form, built at
-/// prepare), and the runtime checkpoint retains just what the engine
-/// reads per forward — BN statistics, biases, fc and grouped-conv
-/// weights. `bytes` therefore charges what is actually resident, which is
-/// how a fixed `--model-budget-mb` now holds several times more low-bit
-/// variants than when every variant was a fake-quant fp32 checkpoint.
+/// ([`PackedCheckpoint`], on-grid tensors only) and serve them straight
+/// from the bits: on-grid conv/fc weights never exist as dense f32 at all
+/// — their [`Panel::Quant`]/[`Panel::FcQuant`] panels are decoded inside
+/// the quantized GEMM kernels. The runtime checkpoint retains just what
+/// the engine reads dense per forward — BN statistics, biases,
+/// grouped-conv weights and the rare off-grid fallback weight (held once,
+/// here, not duplicated in the packed store). `bytes` therefore charges
+/// what is actually resident, which is how a fixed `--model-budget-mb`
+/// now holds several times more low-bit variants than when every variant
+/// was a fake-quant fp32 checkpoint.
 pub struct PreparedModel {
     /// variant key, `"<model>@<method-id>"`
     pub key: String,
@@ -140,14 +260,19 @@ pub struct PreparedModel {
     pub method: Method,
     pub plan: Arc<Plan>,
     /// runtime checkpoint for the engines: for packed variants the
-    /// dense-conv weights with panels are dropped (the panels ARE their
-    /// dequantized form); fp32 shares the base checkpoint `Arc`
+    /// weights served from quantized panels are dropped (the kernels
+    /// decode the packed bits directly); fp32 shares the base checkpoint
+    /// `Arc`
     pub ckpt: Arc<Checkpoint>,
-    /// the authoritative bit-packed store (`None` for fp32 — the base
-    /// checkpoint is already the storage form)
+    /// the authoritative bit-packed store, on-grid tensors only — fp32
+    /// fallback tensors live (once) in `ckpt`; `order` stays complete so
+    /// [`PreparedModel::full_checkpoint`] can merge the two. `None` for
+    /// fp32 variants (the base checkpoint is already the storage form)
     pub packed: Option<Arc<PackedCheckpoint>>,
-    /// GEMM-packed filter panels, built once for all lanes
+    /// GEMM-packed weight panels ([`Panel`]), built once for all lanes
     pub panels: Arc<PackedPanels>,
+    /// which compute path serves each layer (see [`layer_paths`])
+    pub layer_paths: Vec<(String, &'static str)>,
     /// resident bytes: packed store + runtime residual checkpoint +
     /// panels (the shared FP32 base checkpoint is charged to the base
     /// registration, not the variant)
@@ -159,12 +284,24 @@ pub struct PreparedModel {
 impl PreparedModel {
     /// The complete fp32 checkpoint (every tensor) for consumers that
     /// need the whole model — the PJRT upload path, offline export.
-    /// Packed variants dequantize transiently (bit-identical to the
-    /// fake-quant checkpoint the quantizer produced); fp32 variants
+    /// Packed variants merge transiently over the store's full `order`:
+    /// on-grid tensors dequantize (bit-identical to the fake-quant
+    /// checkpoint the quantizer produced), fp32-fallback tensors come
+    /// from the runtime residual (the single dense copy). fp32 variants
     /// return the shared base `Arc`.
     pub fn full_checkpoint(&self) -> Arc<Checkpoint> {
         match &self.packed {
-            Some(p) => Arc::new(p.dequantize()),
+            Some(p) => {
+                let mut ck = Checkpoint { meta: p.meta.clone(), ..Default::default() };
+                for name in &p.order {
+                    if let Some(q) = p.tensors.get(name) {
+                        ck.put(name, q.dequantize());
+                    } else if let Some(t) = self.ckpt.tensors.get(name) {
+                        ck.put(name, t.clone());
+                    }
+                }
+                Arc::new(ck)
+            }
             None => Arc::clone(&self.ckpt),
         }
     }
@@ -175,19 +312,22 @@ fn ckpt_bytes(c: &Checkpoint) -> usize {
 }
 
 fn panels_bytes(p: &PackedPanels) -> usize {
-    p.values().map(|v| v.floats() * 4).sum()
+    p.values().map(Panel::bytes).sum()
 }
 
 /// The runtime residual of a packed variant: every tensor except the
-/// dense-conv weights whose dequantized form lives in the GEMM panels.
-/// Built by copying only the kept (small) tensors — cloning the whole
-/// checkpoint first would transiently duplicate the dominant conv
+/// weights served straight from a quantized panel ([`Panel::Quant`]
+/// convs, [`Panel::FcQuant`] fc layers) — those stay bit-packed in the
+/// store and decode inside the kernels, so no dense fp32 copy is resident
+/// at all. Off-grid fallback weights (fp32 [`Panel::F32`] panels) stay
+/// here as the single dense copy — the packed store no longer duplicates
+/// them. Built by copying only the kept (small) tensors — cloning the
+/// whole checkpoint first would transiently duplicate the dominant conv
 /// weights during an already allocation-heavy prepare.
-fn strip_paneled_weights(plan: &Plan, full: &Checkpoint, panels: &PackedPanels) -> Checkpoint {
-    let skip: std::collections::BTreeSet<String> = plan
-        .convs()
-        .into_iter()
-        .filter(|(name, spec)| spec.groups == 1 && panels.contains_key(name))
+fn strip_served_weights(full: &Checkpoint, panels: &PackedPanels) -> Checkpoint {
+    let skip: std::collections::BTreeSet<String> = panels
+        .iter()
+        .filter(|(_, p)| !matches!(p, Panel::F32(_)))
         .map(|(name, _)| format!("{name}.w"))
         .collect();
     let mut out = Checkpoint { meta: full.meta.clone(), ..Default::default() };
@@ -464,20 +604,32 @@ impl ModelRegistry {
                 q.ckpt.validate_finite().with_context(|| {
                     format!("variant '{key}': non-finite weights after quantize")
                 })?;
-                let packed = PackedCheckpoint::pack(&q.ckpt, &q.grids);
+                let mut packed = PackedCheckpoint::pack(&q.ckpt, &q.grids);
+                // the packed store keeps only the bit-packed tensors;
+                // fp32-fallback tensors (BN stats, biases, off-grid
+                // weights) live once, in the runtime residual. `order`
+                // stays complete so `full_checkpoint` can merge the two.
+                packed.tensors.retain(|_, t| t.is_packed());
                 (Arc::new(q.ckpt), Some(Arc::new(packed)))
             }
         };
-        let panels = Arc::new(pack_panels(&plan, &full, self.pool.as_ref()));
-        // Packed variants drop the fp32 dense-conv weights from the
-        // runtime checkpoint: the panels are their (bit-identical)
-        // dequantized execution form, and the packed store remains the
-        // authoritative copy. What's left is what the engine reads per
-        // forward: BN statistics, biases, fc and grouped-conv weights.
+        // Packed variants build quantized panels straight from the store's
+        // bits (fp32 panels only for off-grid fallbacks); fp32 variants
+        // pack classic fp32 panels from the shared base.
+        let panels = Arc::new(match &packed {
+            Some(p) => pack_panels_q(&plan, &full, p, self.pool.as_ref()),
+            None => pack_panels(&plan, &full, self.pool.as_ref()),
+        });
+        // Packed variants drop every weight served from a quantized panel
+        // from the runtime checkpoint — the packed store remains the
+        // authoritative copy and the kernels decode it directly. What's
+        // left is what the engine reads dense per forward: BN statistics,
+        // biases, grouped-conv weights, off-grid fallbacks.
         let ckpt = match &packed {
-            Some(_) => Arc::new(strip_paneled_weights(&plan, &full, &panels)),
+            Some(_) => Arc::new(strip_served_weights(&full, &panels)),
             None => full,
         };
+        let layer_paths = layer_paths(&plan, &panels);
         let prepare_ms = sw.millis();
         let shared_base = Arc::ptr_eq(&ckpt, &base_ckpt);
         let bytes = panels_bytes(&panels)
@@ -491,6 +643,7 @@ impl ModelRegistry {
             ckpt,
             packed,
             panels,
+            layer_paths,
             bytes,
             prepare_ms,
         })
@@ -529,6 +682,7 @@ impl ModelRegistry {
                     key: k.clone(),
                     bytes: m.bytes,
                     packed_bytes: m.packed.as_ref().map_or(0, |p| p.stored_bytes()),
+                    layer_paths: m.layer_paths.clone(),
                     prepare_ms: m.prepare_ms,
                 }),
                 _ => None,
@@ -652,13 +806,25 @@ mod tests {
         let m = reg.get_or_prepare("tiny@uniform:4").unwrap();
         let packed = m.packed.as_ref().expect("quantized variant must keep a packed store");
         assert!(packed.packed_count() > 0, "no tensor actually bit-packed");
-        // dense-conv weights live only in the panels now; the runtime
-        // residual keeps what the engine reads per forward
+        // the store holds ONLY bit-packed tensors: fp32 fallbacks (BN
+        // stats, biases) live once, in the runtime residual
+        assert_eq!(packed.packed_count(), packed.tensors.len());
+        // conv AND fc weights serve straight from quantized panels; no
+        // dense fp32 copy is resident anywhere
         assert!(m.ckpt.tensors.get("c1.w").is_none());
         assert!(m.ckpt.tensors.get("c2.w").is_none());
-        assert!(m.ckpt.tensors.get("fc.w").is_some());
+        assert!(m.ckpt.tensors.get("fc.w").is_none());
         assert!(m.ckpt.tensors.get("c1_bn.gamma").is_some());
-        // the packed store reconstructs the fake-quant checkpoint
+        assert!(matches!(m.panels.get("c1"), Some(Panel::Quant(_))));
+        assert!(matches!(m.panels.get("c2"), Some(Panel::Quant(_))));
+        assert!(matches!(m.panels.get("fc"), Some(Panel::FcQuant(_))));
+        // uniform:4 puts every weight on an 8-bit-or-less grid
+        let paths: std::collections::BTreeMap<_, _> =
+            m.layer_paths.iter().cloned().collect();
+        assert_eq!(paths["c1"], "grid8-panel");
+        assert_eq!(paths["c2"], "grid8-panel");
+        assert_eq!(paths["fc"], "fc-grid8");
+        // the store + residual reconstruct the fake-quant checkpoint
         // bit-identically
         let offline = Method::parse("uniform:4").unwrap().apply(&plan, &ckpt, None).unwrap();
         let full = m.full_checkpoint();
@@ -671,6 +837,37 @@ mod tests {
         assert!(m.bytes < legacy, "packed residency {} !< legacy {legacy}", m.bytes);
         let snap = reg.snapshot();
         assert_eq!(snap.variants[0].packed_bytes, packed.stored_bytes());
+        assert_eq!(snap.variants[0].layer_paths, m.layer_paths);
+    }
+
+    #[test]
+    fn low_bit_panels_resident_below_fp32_panels() {
+        let reg = ModelRegistry::new(usize::MAX, None);
+        let (plan, ckpt) = fixture();
+        reg.register_base("tiny", Arc::clone(&plan), Arc::clone(&ckpt)).unwrap();
+        let fp32 = reg.get_or_prepare("tiny@fp32").unwrap();
+        let fp32_panels = panels_bytes(&fp32.panels);
+        // the ternary pair baseline: c1 serves from sign/nonzero
+        // bitplanes, the rest from grid panels
+        let m = reg.get_or_prepare("tiny@original:2/6").unwrap();
+        let paths: std::collections::BTreeMap<_, _> =
+            m.layer_paths.iter().cloned().collect();
+        assert_eq!(paths["c1"], "ternary-panel");
+        assert_eq!(paths["c2"], "grid8-panel");
+        assert_eq!(paths["fc"], "fc-grid8");
+        assert!(
+            panels_bytes(&m.panels) < fp32_panels,
+            "low-bit panels {} !< fp32 panels {fp32_panels}",
+            panels_bytes(&m.panels)
+        );
+        for key in ["tiny@dfmpc:2/6", "tiny@uniform:4", "tiny@zeroq:6:4:2"] {
+            let v = reg.get_or_prepare(key).unwrap();
+            assert!(
+                panels_bytes(&v.panels) < fp32_panels,
+                "{key}: low-bit panels {} !< fp32 panels {fp32_panels}",
+                panels_bytes(&v.panels)
+            );
+        }
     }
 
     #[test]

@@ -105,9 +105,13 @@ pub fn model_size(plan: &Plan, method: &Method) -> SizeReport {
 pub fn packed_model_size(plan: &Plan, method: &Method, packed: &PackedCheckpoint) -> SizeReport {
     let analytic = model_size(plan, method);
     let mut bytes = 0usize;
-    for (name, _numel, _is_low) in &weight_numels(plan) {
-        if let Some(q) = packed.tensors.get(&format!("{name}.w")) {
-            bytes += q.stored_bytes();
+    for (name, numel, _is_low) in &weight_numels(plan) {
+        match packed.tensors.get(&format!("{name}.w")) {
+            Some(q) => bytes += q.stored_bytes(),
+            // registry stores keep only on-grid tensors: a weight absent
+            // from the store fell back to fp32 (held in the runtime
+            // residual) and ships dense
+            None => bytes += numel * 4,
         }
     }
     SizeReport { mb: bytes as f64 / 1e6, ..analytic }

@@ -2,6 +2,7 @@
 //! quantizer and the data pipeline. Row-major (C order), like numpy.
 
 pub mod ops;
+pub mod qgemm;
 pub mod qtensor;
 
 #[derive(Clone, Debug, PartialEq)]

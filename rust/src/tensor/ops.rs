@@ -23,14 +23,20 @@ use std::sync::Arc;
 use super::Tensor;
 use crate::util::threadpool::ThreadPool;
 
+// The quantized-panel types live in `tensor::qgemm`, but callers name
+// them alongside `PackedB` (the registry holds both panel kinds), so
+// they are re-exported here as `ops::PackedQ` / `ops::QFcW`.
+pub use super::qgemm::{PackedQ, QFcW};
+
 pub const BN_EPS: f32 = 1e-5;
 
 /// GEMM k-panel height: one k-slice of the packed weights (`KC * n`
 /// floats) is swept over all row-block rows before moving on, keeping it
 /// resident in L2. Accumulation order per output element is unchanged by
 /// the tiling (k still increases monotonically), so results stay
-/// bit-exact.
-const GEMM_KC: usize = 256;
+/// bit-exact. Shared with the quantized kernels (`tensor::qgemm`) so
+/// both paths tile k identically — a precondition for bit-exact parity.
+pub(crate) const GEMM_KC: usize = 256;
 
 /// Microkernel register-block height: output rows carried in accumulator
 /// registers per microkernel invocation. Row tails shorter than `MR` run
@@ -156,8 +162,10 @@ impl ExecCtx {
     /// (`rows * width` elements). Serial fallback when there is no pool,
     /// the problem is too small, or we are already on a pool worker
     /// (fan-out from a worker would deadlock once every worker blocks on
-    /// sub-jobs that only workers can run).
-    fn run_rows(
+    /// sub-jobs that only workers can run). `pub(crate)` so the quantized
+    /// kernels (`tensor::qgemm`) partition rows through the same fan-out
+    /// logic as the fp32 path.
+    pub(crate) fn run_rows(
         &self,
         rows: usize,
         width: usize,
@@ -403,8 +411,10 @@ pub fn matmul_with(ctx: &mut ExecCtx, a: &Tensor, b: &Tensor) -> Tensor {
 /// Rows `[r0, r1)` of the im2col matrix (flattened `(ni, oy, ox)` order)
 /// into `out`, which the caller must hand over zeroed (padding positions
 /// are never written; `Scratch::take`/`vec![0.0; ..]` provide the zeros).
+/// `pub(crate)`: the quantized conv path (`tensor::qgemm`) lowers through
+/// the exact same im2col so its activations match the fp32 oracle's.
 #[allow(clippy::too_many_arguments)]
-fn im2col_rows(
+pub(crate) fn im2col_rows(
     x: &Tensor,
     k: usize,
     stride: usize,
@@ -614,8 +624,16 @@ pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize, groups: usize) 
     conv2d_with(&mut ExecCtx::serial(), x, w, stride, pad, groups)
 }
 
-/// Rows laid out as (n, oh, ow, o) -> NCHW layout in `out`.
-fn nhwc_rows_into_nchw(y: &[f32], n: usize, oh: usize, ow: usize, o: usize, out: &mut [f32]) {
+/// Rows laid out as (n, oh, ow, o) -> NCHW layout in `out`. `pub(crate)`
+/// so the quantized conv path reuses the identical layout shuffle.
+pub(crate) fn nhwc_rows_into_nchw(
+    y: &[f32],
+    n: usize,
+    oh: usize,
+    ow: usize,
+    o: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(y.len(), n * oh * ow * o);
     debug_assert_eq!(out.len(), y.len());
     for ni in 0..n {

@@ -1,0 +1,952 @@
+//! Quantized-arithmetic GEMM: serve straight from the packed bits.
+//!
+//! PR 5 made "quantized" mean bit-packed *at rest* ([`QTensor`]); this
+//! module makes it mean bit-packed *in flight*. Instead of dequantizing a
+//! low-bit tensor to fp32 [`super::ops::PackedB`] panels before GEMM, the
+//! registry packs it into a [`PackedQ`] panel variant the kernels consume
+//! directly:
+//!
+//! - **Ternary** ([`TernaryPanels`]): trits packed as two bitplanes
+//!   (sign, nonzero) over `u64` words — 2 bits/weight resident, 16x
+//!   smaller than fp32 panels. When `alpha == 1.0` (the raw-pattern
+//!   baselines) the kernel never materializes weights at all: each term
+//!   is produced from the activation's bits with integer XOR/AND masks
+//!   (`±a`, `±0`) and `alpha` is applied once per output in the epilogue.
+//!   For general `alpha`, the kernel synthesizes the exact signed-alpha
+//!   weight bits per panel instead.
+//! - **k-bit grid** ([`GridPanels`]): packed DoReFa indices widened to
+//!   `u8`/`u16` in NR-interleaved panels plus a `2^bits` f32 LUT of the
+//!   grid expression; per-channel [`ChanScale`] multipliers are folded
+//!   into the panel-decode epilogue as row/column factor vectors.
+//! - **fc** ([`QFcW`]): flat-layout variants of both, decoded
+//!   element-by-element inside the fc loop so no dense fp32 `fc.w`
+//!   residual is needed at all.
+//!
+//! ## Exactness contract (docs/INVARIANTS.md)
+//!
+//! The fp32 path is the accuracy oracle, and these kernels are
+//! **bit-exact** against it on every serving path: panel decode emits the
+//! identical f32 each weight dequantizes to (`grid_value` /
+//! `ternary_value` — the very expressions pack-time verification checked
+//! against), and the accumulation per output element is the same monotone
+//! k-ascending chain, tiled at the same [`GEMM_KC`] boundaries with the
+//! same exact f32 spills, as [`super::ops::conv2d_packed`] / `fc_with`.
+//! Multiplying by a synthesized factor of exactly `1.0` (channels outside
+//! a `ChanScale` slice, the `alpha == 1.0` epilogue) cannot change any
+//! finite value's bits, and `±1/±0` ternary weights make every product an
+//! exact sign/zero transform of the activation bits. The one intentional
+//! exception: [`gemm_rows_ternary_epilogue`] at general `alpha != 1.0`
+//! trades per-term rounding for a single epilogue multiply — that mode is
+//! *not* used for serving; tests bound its logit divergence and check
+//! top-1 parity instead (`rust/tests/qgemm_parity.rs`).
+//!
+//! Like the fp32 microkernel, nothing here vectorizes across k, calls
+//! `mul_add`, or reassociates a reduction — the `bit-exactness` lint rule
+//! covers this module (`analysis/bit_exact.rs`).
+
+use super::ops::{ExecCtx, GEMM_KC, GEMM_MR, GEMM_NR};
+use super::qtensor::{chan_factor, grid_value, unpack_bits, ChanScale, QTensor};
+use super::Tensor;
+
+/// A quantized GEMM `B` operand (`B = W^T`, `k x n`) in panel form — the
+/// low-bit sibling of [`super::ops::PackedB`], held by the registry for
+/// on-grid conv weights.
+#[derive(Clone, Debug)]
+pub enum PackedQ {
+    Ternary(TernaryPanels),
+    Grid(GridPanels),
+}
+
+impl PackedQ {
+    /// Build panels from a packed tensor interpreted as an OIHW/(O,I)
+    /// weight (`flat2d` semantics: `k = numel/o` im2col columns, `n = o`
+    /// output channels). `None` for the fp32 fallback variant or a
+    /// degenerate shape — the caller keeps fp32 panels for those.
+    pub fn from_qtensor(q: &QTensor) -> Option<PackedQ> {
+        let shape = q.shape();
+        if shape.is_empty() || shape[0] == 0 {
+            return None;
+        }
+        match q {
+            QTensor::Fp32(_) => None,
+            QTensor::Ternary { shape, alpha, codes } => {
+                let numel: usize = shape.iter().product();
+                let o = shape[0];
+                let vals = unpack_bits(codes, 2, numel)?;
+                Some(PackedQ::Ternary(TernaryPanels::pack(&vals, o, numel / o, *alpha)))
+            }
+            QTensor::Grid { shape, bits, scale, idx, chan } => {
+                let numel: usize = shape.iter().product();
+                let vals = unpack_bits(idx, *bits, numel)?;
+                Some(PackedQ::Grid(GridPanels::pack(&vals, shape, *bits, *scale, chan.as_ref())))
+            }
+        }
+    }
+
+    /// Inner (reduction) dimension — matches `PackedB::k()`.
+    pub fn k(&self) -> usize {
+        match self {
+            PackedQ::Ternary(t) => t.k,
+            PackedQ::Grid(g) => g.k,
+        }
+    }
+
+    /// Logical output columns — matches `PackedB::n()`.
+    pub fn n(&self) -> usize {
+        match self {
+            PackedQ::Ternary(t) => t.n,
+            PackedQ::Grid(g) => g.n,
+        }
+    }
+
+    /// Resident payload bytes (size accounting for the registry LRU).
+    pub fn bytes(&self) -> usize {
+        match self {
+            PackedQ::Ternary(t) => t.sign.len() * 8 + t.nz.len() * 8 + 4,
+            PackedQ::Grid(g) => {
+                let idx = match &g.idx {
+                    GridIdx::U8(v) => v.len(),
+                    GridIdx::U16(v) => v.len() * 2,
+                };
+                idx + g.lut.len() * 4
+                    + g.frow.as_ref().map_or(0, |f| f.len() * 4)
+                    + g.fcol.as_ref().map_or(0, |f| f.len() * 4)
+            }
+        }
+    }
+
+    /// Serving-path label for `status` reporting.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PackedQ::Ternary(_) => "ternary-panel",
+            PackedQ::Grid(g) => match g.idx {
+                GridIdx::U8(_) => "grid8-panel",
+                GridIdx::U16(_) => "grid16-panel",
+            },
+        }
+    }
+}
+
+/// Ternary weights as two bitplanes over `u64` words, in [`GEMM_NR`]-wide
+/// column panels. One word holds 8 consecutive k-steps x 8 panel columns:
+/// k-step `kk` of panel `p` lives in byte lane `(kk % 8) * 8` of word
+/// `p * words_per_panel + kk / 8`, bit `jj` = column within the panel.
+/// `nz` bit set = weight is `±alpha` (trit codes 0/2); `sign` bit set =
+/// negative (code 0). Zero weights (code 1) leave both planes clear.
+#[derive(Clone, Debug)]
+pub struct TernaryPanels {
+    k: usize,
+    n: usize,
+    alpha: f32,
+    sign: Vec<u64>,
+    nz: Vec<u64>,
+}
+
+impl TernaryPanels {
+    /// Pack trit codes (`{0,1,2}` = `{-1,0,+1}`, row-major `(o, cols)`
+    /// weight order) into bitplane panels of `B = W^T` (`k = cols`,
+    /// `n = o`).
+    pub fn pack(codes: &[u32], o: usize, cols: usize, alpha: f32) -> TernaryPanels {
+        debug_assert_eq!(codes.len(), o * cols);
+        let (k, n) = (cols, o);
+        let panels = n.div_ceil(GEMM_NR);
+        let wpp = k.div_ceil(8);
+        let mut sign = vec![0u64; panels * wpp];
+        let mut nz = vec![0u64; panels * wpp];
+        for p in 0..panels {
+            let j0 = p * GEMM_NR;
+            let nr = (n - j0).min(GEMM_NR);
+            for jj in 0..nr {
+                let row = &codes[(j0 + jj) * cols..(j0 + jj + 1) * cols];
+                for (kk, &c) in row.iter().enumerate() {
+                    debug_assert!(c <= 2, "trit code {c} > 2");
+                    let bit = 1u64 << ((kk % 8) * 8 + jj);
+                    let w = p * wpp + kk / 8;
+                    if c != 1 {
+                        nz[w] |= bit;
+                    }
+                    if c == 0 {
+                        sign[w] |= bit;
+                    }
+                }
+            }
+        }
+        TernaryPanels { k, n, alpha, sign, nz }
+    }
+
+    pub fn alpha(&self) -> f32 {
+        self.alpha
+    }
+
+    /// Trit code at (k-step `kk`, logical column `j`) — test accessor for
+    /// the bitplane roundtrip proptests.
+    pub fn code_at(&self, kk: usize, j: usize) -> u32 {
+        let wpp = self.k.div_ceil(8);
+        let w = (j / GEMM_NR) * wpp + kk / 8;
+        let bit = (kk % 8) * 8 + j % GEMM_NR;
+        let nz = (self.nz[w] >> bit) & 1;
+        let sg = (self.sign[w] >> bit) & 1;
+        if nz == 0 {
+            1
+        } else if sg == 1 {
+            0
+        } else {
+            2
+        }
+    }
+
+    /// Decode one column panel's k-slice `[k0, k0+kc)` into exact
+    /// signed-alpha f32 weights: `+alpha` / `-alpha` are `alpha`'s bits
+    /// with the sign plane XORed in, zeros are `±0` carrying `alpha`'s
+    /// sign — bit-for-bit the values `ternary_value(code, alpha)`
+    /// produces (`1.0 * a == a`, `-1.0 * a` flips the sign bit exactly,
+    /// `0.0 * a` is a signed zero).
+    fn decode_panel(&self, p: usize, k0: usize, kc: usize, wpanel: &mut [f32]) {
+        let wpp = self.k.div_ceil(8);
+        let ab = self.alpha.to_bits();
+        let asign = ab & 0x8000_0000;
+        for kk in 0..kc {
+            let w = p * wpp + (k0 + kk) / 8;
+            let lane = ((k0 + kk) % 8) * 8;
+            let zbyte = (self.nz[w] >> lane) as u32 & 0xFF;
+            let sbyte = (self.sign[w] >> lane) as u32 & 0xFF;
+            for jj in 0..GEMM_NR {
+                let zmask = ((zbyte >> jj) & 1).wrapping_neg();
+                let smask = ((sbyte >> jj) & 1) << 31;
+                let bits = ((ab ^ smask) & zmask) | (asign & !zmask);
+                wpanel[kk * GEMM_NR + jj] = f32::from_bits(bits);
+            }
+        }
+    }
+
+    /// Per-column masks for the integer-path kernel: `zs[jj]` is the AND
+    /// mask (`0xFFFF_FFFF` for `±1`, sign-bit-only for `0` so a zero
+    /// weight yields `±0` with the activation's sign), `sm[jj]` the sign
+    /// XOR mask.
+    fn mask_panel(&self, p: usize, k0: usize, kc: usize, zs: &mut [u32], sm: &mut [u32]) {
+        let wpp = self.k.div_ceil(8);
+        for kk in 0..kc {
+            let w = p * wpp + (k0 + kk) / 8;
+            let lane = ((k0 + kk) % 8) * 8;
+            let zbyte = (self.nz[w] >> lane) as u32 & 0xFF;
+            let sbyte = (self.sign[w] >> lane) as u32 & 0xFF;
+            for jj in 0..GEMM_NR {
+                zs[kk * GEMM_NR + jj] = ((zbyte >> jj) & 1).wrapping_neg() | 0x8000_0000;
+                sm[kk * GEMM_NR + jj] = ((sbyte >> jj) & 1) << 31;
+            }
+        }
+    }
+}
+
+/// Widened index storage for [`GridPanels`]: `u8` covers bits `<= 8`
+/// (every method the quantizers emit today), `u16` the rest of the
+/// supported range (`MAX_GRID_BITS = 16`).
+#[derive(Clone, Debug)]
+pub enum GridIdx {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+}
+
+/// k-bit DoReFa weights as widened grid indices in [`GEMM_NR`]-interleaved
+/// column panels (`idx[p*k*NR + kk*NR + jj]`, tail columns padded with
+/// index 0 — their outputs are never stored) plus a per-tensor LUT of the
+/// exact grid expression and optional per-channel factor vectors: `frow`
+/// (len `k`, input-channel / axis-1 scales) or `fcol` (padded `n`,
+/// output-channel / axis-0 scales), filled with exact `1.0` outside the
+/// scaled slice. At most one of the two is present.
+#[derive(Clone, Debug)]
+pub struct GridPanels {
+    k: usize,
+    n: usize,
+    lut: Vec<f32>,
+    idx: GridIdx,
+    frow: Option<Vec<f32>>,
+    fcol: Option<Vec<f32>>,
+}
+
+impl GridPanels {
+    /// Pack unpacked grid indices (row-major `(o, cols)` weight order,
+    /// `shape` the original weight shape for channel-factor mapping).
+    pub fn pack(
+        vals: &[u32],
+        shape: &[usize],
+        bits: u32,
+        scale: f32,
+        chan: Option<&ChanScale>,
+    ) -> GridPanels {
+        let o = shape[0];
+        let numel: usize = shape.iter().product();
+        let cols = numel / o;
+        debug_assert_eq!(vals.len(), numel);
+        let (k, n) = (cols, o);
+        let panels = n.div_ceil(GEMM_NR);
+        let lut: Vec<f32> =
+            (0..(1u32 << bits)).map(|m| grid_value(bits, scale, m, None)).collect();
+        let mut flat = vec![0u32; panels * k * GEMM_NR];
+        for p in 0..panels {
+            let j0 = p * GEMM_NR;
+            let nr = (n - j0).min(GEMM_NR);
+            for jj in 0..nr {
+                let row = &vals[(j0 + jj) * cols..(j0 + jj + 1) * cols];
+                for (kk, &m) in row.iter().enumerate() {
+                    flat[p * k * GEMM_NR + kk * GEMM_NR + jj] = m;
+                }
+            }
+        }
+        let idx = if bits <= 8 {
+            GridIdx::U8(flat.iter().map(|&m| m as u8).collect())
+        } else {
+            GridIdx::U16(flat.iter().map(|&m| m as u16).collect())
+        };
+        let (frow, fcol) = match chan {
+            None => (None, None),
+            Some(c) if c.axis == 1 => {
+                // axis-1 channel depends only on the im2col column kk
+                // (ch = (kk / kh*kw) for convs, kk itself for fc)
+                let f: Vec<f32> =
+                    (0..k).map(|kk| chan_factor(c, shape, kk).unwrap_or(1.0)).collect();
+                (Some(f), None)
+            }
+            Some(c) => {
+                // axis-0 channel is the output column j (flat index
+                // j*cols has stride cols = shape[1..] product)
+                let f: Vec<f32> = (0..panels * GEMM_NR)
+                    .map(|j| {
+                        if j < n {
+                            chan_factor(c, shape, j * cols).unwrap_or(1.0)
+                        } else {
+                            1.0
+                        }
+                    })
+                    .collect();
+                (None, Some(f))
+            }
+        };
+        GridPanels { k, n, lut, idx, frow, fcol }
+    }
+
+    /// Grid index at (k-step `kk`, logical column `j`) — test accessor
+    /// for the widened-index roundtrip proptests.
+    pub fn idx_at(&self, kk: usize, j: usize) -> u32 {
+        let i = (j / GEMM_NR) * self.k * GEMM_NR + kk * GEMM_NR + j % GEMM_NR;
+        match &self.idx {
+            GridIdx::U8(v) => v[i] as u32,
+            GridIdx::U16(v) => v[i] as u32,
+        }
+    }
+
+    /// Decode one column panel's k-slice into exact dequantized f32
+    /// weights: `lut[m]` is the grid expression verbatim; the (at most
+    /// one) channel factor multiply mirrors `grid_value`'s `v * f`, and a
+    /// filler factor of exactly `1.0` leaves every finite value's bits
+    /// unchanged.
+    fn decode_panel(&self, p: usize, k0: usize, kc: usize, wpanel: &mut [f32]) {
+        let base = p * self.k * GEMM_NR + k0 * GEMM_NR;
+        // fcol is indexed by absolute column j = p*NR + jj; hand the
+        // kernel this panel's window so the lookup is panel-local
+        let fcol = self.fcol.as_deref().map(|f| &f[p * GEMM_NR..(p + 1) * GEMM_NR]);
+        match &self.idx {
+            GridIdx::U8(v) => {
+                self.decode_slice(&v[base..base + kc * GEMM_NR], k0, kc, fcol, wpanel)
+            }
+            GridIdx::U16(v) => {
+                self.decode_slice(&v[base..base + kc * GEMM_NR], k0, kc, fcol, wpanel)
+            }
+        }
+    }
+
+    fn decode_slice<T: Copy + Into<usize>>(
+        &self,
+        ids: &[T],
+        k0: usize,
+        kc: usize,
+        fcol: Option<&[f32]>,
+        wpanel: &mut [f32],
+    ) {
+        for kk in 0..kc {
+            for jj in 0..GEMM_NR {
+                let m: usize = ids[kk * GEMM_NR + jj].into();
+                let mut v = self.lut[m];
+                if let Some(f) = &self.frow {
+                    v *= f[k0 + kk];
+                }
+                if let Some(f) = fcol {
+                    v *= f[jj];
+                }
+                wpanel[kk * GEMM_NR + jj] = v;
+            }
+        }
+    }
+}
+
+/// Sweep all row blocks of `[r0, r1)` against one decoded weight panel —
+/// byte-for-byte the microkernel from `ops::gemm_rows` (A micropanel
+/// packing, `MR x NR` register accumulators, exact spills to `out`), so
+/// every output element's k-chain is identical to the fp32 path's. The
+/// outer loop order differs (panel before row block, so one 8 KB decoded
+/// panel serves every row block), but element update order is free to
+/// change — only each element's own chain is contractual.
+fn sweep_panel_rows(
+    a: &[f32],
+    k: usize,
+    k0: usize,
+    kc: usize,
+    wpanel: &[f32],
+    n: usize,
+    j0: usize,
+    nr: usize,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    let mut apanel = [0.0f32; GEMM_MR * GEMM_KC];
+    let mut i0 = r0;
+    while i0 < r1 {
+        let mr = (r1 - i0).min(GEMM_MR);
+        for kk in 0..kc {
+            for ii in 0..mr {
+                apanel[kk * GEMM_MR + ii] = a[(i0 + ii) * k + k0 + kk];
+            }
+            for ii in mr..GEMM_MR {
+                apanel[kk * GEMM_MR + ii] = 0.0;
+            }
+        }
+        let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+        for ii in 0..mr {
+            let row0 = (i0 - r0 + ii) * n + j0;
+            acc[ii][..nr].copy_from_slice(&out[row0..row0 + nr]);
+        }
+        for kk in 0..kc {
+            let arow: &[f32; GEMM_MR] =
+                apanel[kk * GEMM_MR..(kk + 1) * GEMM_MR].try_into().unwrap();
+            let brow: &[f32; GEMM_NR] =
+                wpanel[kk * GEMM_NR..(kk + 1) * GEMM_NR].try_into().unwrap();
+            for ii in 0..GEMM_MR {
+                let av = arow[ii];
+                let dst = &mut acc[ii];
+                for jj in 0..GEMM_NR {
+                    dst[jj] += av * brow[jj];
+                }
+            }
+        }
+        for ii in 0..mr {
+            let row0 = (i0 - r0 + ii) * n + j0;
+            out[row0..row0 + nr].copy_from_slice(&acc[ii][..nr]);
+        }
+        i0 += mr;
+    }
+}
+
+/// C rows `[r0, r1)` of `C = A(m,k) @ B(k,n)` where `B` is a quantized
+/// panel set, accumulated into pre-zeroed `out` — the [`PackedQ`] drop-in
+/// for `ops::gemm_rows`. Bit-exact against dequantize-then-`gemm_rows`
+/// on every dispatch (the `alpha == 1.0` integer path included; general
+/// alpha takes the exact signed-alpha decode instead).
+pub fn gemm_rows_q(a: &[f32], wq: &PackedQ, r0: usize, r1: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), (r1 - r0) * wq.n());
+    debug_assert!(out.iter().all(|&v| v == 0.0), "gemm output must be pre-zeroed");
+    match wq {
+        PackedQ::Ternary(tp) if tp.alpha.to_bits() == 1.0f32.to_bits() => {
+            gemm_rows_ternary_epilogue(a, tp, r0, r1, out)
+        }
+        PackedQ::Ternary(tp) => gemm_rows_ternary_decode(a, tp, r0, r1, out),
+        PackedQ::Grid(gp) => gemm_rows_grid(a, gp, r0, r1, out),
+    }
+}
+
+/// Exact ternary kernel for any alpha: per (k-panel, column panel) the
+/// bitplanes are decoded once into an 8 KB signed-alpha stack panel, then
+/// all row blocks sweep it through the shared microkernel. Every product
+/// `a * (±alpha | ±0)` is the identical f32 multiply the oracle performs.
+fn gemm_rows_ternary_decode(a: &[f32], tp: &TernaryPanels, r0: usize, r1: usize, out: &mut [f32]) {
+    let (k, n) = (tp.k, tp.n);
+    let panels = n.div_ceil(GEMM_NR);
+    let mut wpanel = [0.0f32; GEMM_KC * GEMM_NR];
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = (k - k0).min(GEMM_KC);
+        for p in 0..panels {
+            let j0 = p * GEMM_NR;
+            let nr = (n - j0).min(GEMM_NR);
+            tp.decode_panel(p, k0, kc, &mut wpanel);
+            sweep_panel_rows(a, k, k0, kc, &wpanel, n, j0, nr, r0, r1, out);
+        }
+        k0 += kc;
+    }
+}
+
+/// Integer-path ternary kernel: no weight value is ever materialized —
+/// each term is the activation's bits XORed with the sign plane and ANDed
+/// with the nonzero mask (`+a`, `-a`, or `±0`), and `alpha` multiplies
+/// each finished output once in the epilogue.
+///
+/// Exactness: for `alpha == 1.0` (how [`gemm_rows_q`] uses it) every term
+/// equals the oracle's `a * w` product bit-for-bit and the epilogue
+/// multiply by `1.0` is the identity, so the result is bit-exact. For
+/// general alpha the single epilogue multiply replaces a per-term
+/// multiply — mathematically equal, floating-point close: serving never
+/// takes that mode; `rust/tests/qgemm_parity.rs` bounds its divergence.
+pub fn gemm_rows_ternary_epilogue(
+    a: &[f32],
+    tp: &TernaryPanels,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    let (k, n) = (tp.k, tp.n);
+    let panels = n.div_ceil(GEMM_NR);
+    let mut zs = [0u32; GEMM_KC * GEMM_NR];
+    let mut sm = [0u32; GEMM_KC * GEMM_NR];
+    let mut apanel = [0.0f32; GEMM_MR * GEMM_KC];
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = (k - k0).min(GEMM_KC);
+        for p in 0..panels {
+            let j0 = p * GEMM_NR;
+            let nr = (n - j0).min(GEMM_NR);
+            tp.mask_panel(p, k0, kc, &mut zs, &mut sm);
+            let mut i0 = r0;
+            while i0 < r1 {
+                let mr = (r1 - i0).min(GEMM_MR);
+                for kk in 0..kc {
+                    for ii in 0..mr {
+                        apanel[kk * GEMM_MR + ii] = a[(i0 + ii) * k + k0 + kk];
+                    }
+                    for ii in mr..GEMM_MR {
+                        apanel[kk * GEMM_MR + ii] = 0.0;
+                    }
+                }
+                let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+                for ii in 0..mr {
+                    let row0 = (i0 - r0 + ii) * n + j0;
+                    acc[ii][..nr].copy_from_slice(&out[row0..row0 + nr]);
+                }
+                for kk in 0..kc {
+                    let arow: &[f32; GEMM_MR] =
+                        apanel[kk * GEMM_MR..(kk + 1) * GEMM_MR].try_into().unwrap();
+                    let zrow: &[u32; GEMM_NR] =
+                        zs[kk * GEMM_NR..(kk + 1) * GEMM_NR].try_into().unwrap();
+                    let srow: &[u32; GEMM_NR] =
+                        sm[kk * GEMM_NR..(kk + 1) * GEMM_NR].try_into().unwrap();
+                    for ii in 0..GEMM_MR {
+                        let ab = arow[ii].to_bits();
+                        let dst = &mut acc[ii];
+                        for jj in 0..GEMM_NR {
+                            dst[jj] += f32::from_bits((ab ^ srow[jj]) & zrow[jj]);
+                        }
+                    }
+                }
+                for ii in 0..mr {
+                    let row0 = (i0 - r0 + ii) * n + j0;
+                    out[row0..row0 + nr].copy_from_slice(&acc[ii][..nr]);
+                }
+                i0 += mr;
+            }
+        }
+        k0 += kc;
+    }
+    // one multiply per finished output; exact identity when alpha == 1.0
+    for v in out.iter_mut() {
+        *v *= tp.alpha;
+    }
+}
+
+/// k-bit grid kernel: per (k-panel, column panel) the widened indices are
+/// LUT-decoded (channel factors folded in) into an 8 KB stack panel, then
+/// all row blocks sweep it through the shared microkernel. Bit-exact for
+/// every bits/scale/[`ChanScale`] combination.
+fn gemm_rows_grid(a: &[f32], gp: &GridPanels, r0: usize, r1: usize, out: &mut [f32]) {
+    let (k, n) = (gp.k, gp.n);
+    let panels = n.div_ceil(GEMM_NR);
+    let mut wpanel = [0.0f32; GEMM_KC * GEMM_NR];
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = (k - k0).min(GEMM_KC);
+        for p in 0..panels {
+            let j0 = p * GEMM_NR;
+            let nr = (n - j0).min(GEMM_NR);
+            gp.decode_panel(p, k0, kc, &mut wpanel);
+            sweep_panel_rows(a, k, k0, kc, &wpanel, n, j0, nr, r0, r1, out);
+        }
+        k0 += kc;
+    }
+}
+
+/// im2col + quantized GEMM conv (`groups == 1`) — the [`PackedQ`] drop-in
+/// for `ops::conv2d_packed`: same im2col, same row fan-out thresholds,
+/// same NHWC->NCHW shuffle, bit-exact output.
+pub fn conv2d_packed_q(
+    ctx: &mut ExecCtx,
+    x: &Tensor,
+    wq: &PackedQ,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (wd + 2 * pad - k) / stride + 1;
+    let rows = n * oh * ow;
+    let cols = c * k * k;
+    let o = wq.n();
+    assert_eq!(wq.k(), cols, "quantized panel inner dim {} != im2col cols {cols}", wq.k());
+    let mut col = ctx.scratch.take(rows * cols);
+    ctx.run_rows(rows, cols, &mut col, 128, |r0, r1, chunk| {
+        super::ops::im2col_rows(x, k, stride, pad, oh, ow, r0, r1, chunk);
+    });
+    let mut y = ctx.scratch.take(rows * o);
+    ctx.run_rows(rows, o, &mut y, 32, |r0, r1, chunk| {
+        gemm_rows_q(&col, wq, r0, r1, chunk);
+    });
+    let mut out_data = ctx.scratch.take(n * o * oh * ow);
+    super::ops::nhwc_rows_into_nchw(&y, n, oh, ow, o, &mut out_data);
+    ctx.scratch.put(col);
+    ctx.scratch.put(y);
+    Tensor::new(vec![n, o, oh, ow], out_data)
+}
+
+/// A packed fc weight decoded on the fly inside the fc loop — what
+/// replaces the dense fp32 `fc.w` residual in [`crate::model::registry`].
+/// Flat `(o, cin)` layouts: ternary bitplanes over `u64` words (bit
+/// `i % 64` of word `i / 64` for flat element `i`) or widened grid
+/// indices + LUT + per-axis factor vectors (`fk` over input features,
+/// `fo` over output rows; at most one present, `1.0`-filled outside the
+/// scaled slice).
+#[derive(Clone, Debug)]
+pub enum QFcW {
+    Ternary {
+        o: usize,
+        cin: usize,
+        alpha: f32,
+        sign: Vec<u64>,
+        nz: Vec<u64>,
+    },
+    Grid {
+        o: usize,
+        cin: usize,
+        lut: Vec<f32>,
+        idx: GridIdx,
+        fk: Option<Vec<f32>>,
+        fo: Option<Vec<f32>>,
+    },
+}
+
+impl QFcW {
+    /// Build from a packed fc weight (`shape = [o, cin]`). `None` for the
+    /// fp32 fallback — the caller keeps the dense tensor for those.
+    pub fn from_qtensor(q: &QTensor) -> Option<QFcW> {
+        let shape = q.shape();
+        if shape.len() != 2 || shape[0] == 0 {
+            return None;
+        }
+        let (o, cin) = (shape[0], shape[1]);
+        match q {
+            QTensor::Fp32(_) => None,
+            QTensor::Ternary { alpha, codes, .. } => {
+                let vals = unpack_bits(codes, 2, o * cin)?;
+                let words = (o * cin).div_ceil(64);
+                let mut sign = vec![0u64; words];
+                let mut nz = vec![0u64; words];
+                for (i, &c) in vals.iter().enumerate() {
+                    let bit = 1u64 << (i % 64);
+                    if c != 1 {
+                        nz[i / 64] |= bit;
+                    }
+                    if c == 0 {
+                        sign[i / 64] |= bit;
+                    }
+                }
+                Some(QFcW::Ternary { o, cin, alpha: *alpha, sign, nz })
+            }
+            QTensor::Grid { bits, scale, idx, chan, .. } => {
+                let vals = unpack_bits(idx, *bits, o * cin)?;
+                let lut: Vec<f32> =
+                    (0..(1u32 << bits)).map(|m| grid_value(*bits, *scale, m, None)).collect();
+                let idx = if *bits <= 8 {
+                    GridIdx::U8(vals.iter().map(|&m| m as u8).collect())
+                } else {
+                    GridIdx::U16(vals.iter().map(|&m| m as u16).collect())
+                };
+                let (fk, fo) = match chan {
+                    None => (None, None),
+                    Some(c) if c.axis == 1 => {
+                        let f: Vec<f32> = (0..cin)
+                            .map(|kk| chan_factor(c, shape, kk).unwrap_or(1.0))
+                            .collect();
+                        (Some(f), None)
+                    }
+                    Some(c) => {
+                        let f: Vec<f32> = (0..o)
+                            .map(|oi| chan_factor(c, shape, oi * cin).unwrap_or(1.0))
+                            .collect();
+                        (None, Some(f))
+                    }
+                };
+                Some(QFcW::Grid { o, cin, lut, idx, fk, fo })
+            }
+        }
+    }
+
+    pub fn o(&self) -> usize {
+        match self {
+            QFcW::Ternary { o, .. } | QFcW::Grid { o, .. } => *o,
+        }
+    }
+
+    pub fn cin(&self) -> usize {
+        match self {
+            QFcW::Ternary { cin, .. } | QFcW::Grid { cin, .. } => *cin,
+        }
+    }
+
+    /// Resident payload bytes (registry LRU accounting).
+    pub fn bytes(&self) -> usize {
+        match self {
+            QFcW::Ternary { sign, nz, .. } => sign.len() * 8 + nz.len() * 8 + 4,
+            QFcW::Grid { lut, idx, fk, fo, .. } => {
+                let idx = match idx {
+                    GridIdx::U8(v) => v.len(),
+                    GridIdx::U16(v) => v.len() * 2,
+                };
+                idx + lut.len() * 4
+                    + fk.as_ref().map_or(0, |f| f.len() * 4)
+                    + fo.as_ref().map_or(0, |f| f.len() * 4)
+            }
+        }
+    }
+
+    /// Serving-path label for `status` reporting.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            QFcW::Ternary { .. } => "fc-ternary",
+            QFcW::Grid { idx: GridIdx::U8(_), .. } => "fc-grid8",
+            QFcW::Grid { idx: GridIdx::U16(_), .. } => "fc-grid16",
+        }
+    }
+}
+
+/// Fully connected from a packed weight: `(N, I) @ W(O, I)^T + b` with
+/// the weight decoded element-by-element inside the oracle's exact loop
+/// (bias-seeded accumulator, k-ascending) — bit-exact against
+/// `ops::fc_with` on the dequantized tensor, across thread counts.
+pub fn fc_with_q(ctx: &mut ExecCtx, x: &Tensor, wq: &QFcW, b: &[f32]) -> Tensor {
+    let (n, i) = (x.shape[0], x.shape[1]);
+    let o = wq.o();
+    assert_eq!(i, wq.cin(), "fc input width {i} != packed weight cin {}", wq.cin());
+    assert_eq!(b.len(), o);
+    let mut out = Tensor::zeros(vec![n, o]);
+    ctx.run_rows(n, o, &mut out.data, 1, |r0, r1, chunk| {
+        for ni in r0..r1 {
+            let xr = x.row(ni);
+            let orow = &mut chunk[(ni - r0) * o..(ni - r0 + 1) * o];
+            match wq {
+                QFcW::Ternary { cin, alpha, sign, nz, .. } => {
+                    let ab = alpha.to_bits();
+                    let asign = ab & 0x8000_0000;
+                    for (oi, ov) in orow.iter_mut().enumerate() {
+                        let base = oi * cin;
+                        let mut acc = b[oi];
+                        for (kk, &xv) in xr.iter().enumerate() {
+                            let e = base + kk;
+                            let zmask = (((nz[e / 64] >> (e % 64)) & 1) as u32).wrapping_neg();
+                            let smask = (((sign[e / 64] >> (e % 64)) & 1) as u32) << 31;
+                            let bits = ((ab ^ smask) & zmask) | (asign & !zmask);
+                            acc += xv * f32::from_bits(bits);
+                        }
+                        *ov = acc;
+                    }
+                }
+                QFcW::Grid { cin, lut, idx, fk, fo, .. } => {
+                    for (oi, ov) in orow.iter_mut().enumerate() {
+                        let base = oi * cin;
+                        let mut acc = b[oi];
+                        for (kk, &xv) in xr.iter().enumerate() {
+                            let m = match idx {
+                                GridIdx::U8(v) => v[base + kk] as usize,
+                                GridIdx::U16(v) => v[base + kk] as usize,
+                            };
+                            let mut wv = lut[m];
+                            if let Some(f) = fk {
+                                wv *= f[kk];
+                            }
+                            if let Some(f) = fo {
+                                wv *= f[oi];
+                            }
+                            acc += xv * wv;
+                        }
+                        *ov = acc;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ops::{conv2d_packed, fc_with, matmul, pack_filter};
+    use super::super::qtensor::{GridMeta, QTensor};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ternary_tensor(r: &mut Rng, shape: Vec<usize>, alpha: f32) -> Tensor {
+        Tensor::from_fn(shape, |_| {
+            let u = r.f32();
+            if u < 0.3 {
+                -alpha
+            } else if u < 0.6 {
+                0.0 * alpha
+            } else {
+                1.0 * alpha
+            }
+        })
+    }
+
+    fn grid_tensor(r: &mut Rng, shape: Vec<usize>, bits: u32, scale: f32) -> Tensor {
+        let levels = (1u64 << bits) - 1;
+        Tensor::from_fn(shape, |_| {
+            let m = (r.f32() * levels as f32).round() as u32;
+            crate::tensor::qtensor::grid_value(bits, scale, m.min(levels as u32), None)
+        })
+    }
+
+    /// `B = W^T` as a dense tensor, so public [`matmul`] (which runs the
+    /// fp32 microkernel over fp32 panels) serves as the parity oracle.
+    fn transposed(w: &Tensor) -> Tensor {
+        let (o, cols) = w.flat2d();
+        Tensor::from_fn(vec![cols, o], |i| w.data[(i % o) * cols + i / o])
+    }
+
+    #[test]
+    fn ternary_bitplanes_roundtrip_codes() {
+        let mut r = Rng::new(11);
+        let t = ternary_tensor(&mut r, vec![11, 3, 3, 3], 0.7319);
+        let q = QTensor::pack(&t, &GridMeta::Ternary { alpha: 0.7319 });
+        assert!(q.is_packed());
+        let pq = PackedQ::from_qtensor(&q).unwrap();
+        let PackedQ::Ternary(tp) = &pq else { panic!("expected ternary panels") };
+        let w = q.dequantize();
+        let (o, cols) = w.flat2d();
+        for j in 0..o {
+            for kk in 0..cols {
+                let code = tp.code_at(kk, j);
+                let want = w.data[j * cols + kk];
+                assert_eq!(
+                    crate::tensor::qtensor::ternary_value(code, tp.alpha()).to_bits(),
+                    want.to_bits(),
+                    "kk={kk} j={j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_gemm_matches_fp32_panels_any_alpha() {
+        let mut r = Rng::new(12);
+        for &alpha in &[1.0f32, 0.7319, -0.25] {
+            let w = ternary_tensor(&mut r, vec![13, 5, 3, 3], alpha);
+            let q = QTensor::pack(&w, &GridMeta::Ternary { alpha });
+            assert!(q.is_packed(), "alpha={alpha}");
+            let pq = PackedQ::from_qtensor(&q).unwrap();
+            let (o, cols) = w.flat2d();
+            let m = 9;
+            let a = Tensor::new(vec![m, cols], r.normal_vec(m * cols));
+            // oracle: dequantize -> fp32 panels -> fp32 microkernel
+            let want = matmul(&a, &transposed(&q.dequantize()));
+            let mut got = vec![0.0f32; m * o];
+            gemm_rows_q(&a.data, &pq, 0, m, &mut got);
+            assert_eq!(want.data, got, "alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn grid_gemm_matches_fp32_panels_with_chan_scale() {
+        let mut r = Rng::new(13);
+        for &(bits, axis) in &[(6u32, usize::MAX), (4, 1), (2, 1), (4, 0)] {
+            let shape = vec![10, 6, 3, 3];
+            let scale = 0.83;
+            let chan = (axis <= 1).then(|| ChanScale {
+                axis,
+                offset: 1,
+                factors: vec![1.5, 0.25, 2.0],
+            });
+            let base = grid_tensor(&mut r, shape.clone(), bits, scale);
+            let w = Tensor::from_fn(shape.clone(), |i| {
+                match chan.as_ref().and_then(|c| chan_factor(c, &shape, i)) {
+                    Some(f) => base.data[i] * f,
+                    None => base.data[i],
+                }
+            });
+            let q = QTensor::pack(&w, &GridMeta::Uniform { bits, scale, chan: chan.clone() });
+            assert!(q.is_packed(), "bits={bits} axis={axis}");
+            let pq = PackedQ::from_qtensor(&q).unwrap();
+            let (o, cols) = w.flat2d();
+            let m = 7;
+            let a = Tensor::new(vec![m, cols], r.normal_vec(m * cols));
+            let want = matmul(&a, &transposed(&q.dequantize()));
+            let mut got = vec![0.0f32; m * o];
+            gemm_rows_q(&a.data, &pq, 0, m, &mut got);
+            assert_eq!(want.data, got, "bits={bits} axis={axis}");
+        }
+    }
+
+    #[test]
+    fn conv2d_packed_q_matches_fp32_path() {
+        let mut r = Rng::new(14);
+        let w = ternary_tensor(&mut r, vec![9, 4, 3, 3], 0.5);
+        let q = QTensor::pack(&w, &GridMeta::Ternary { alpha: 0.5 });
+        let pq = PackedQ::from_qtensor(&q).unwrap();
+        let x = Tensor::new(vec![2, 4, 8, 8], r.normal_vec(2 * 4 * 8 * 8));
+        let mut ctx = ExecCtx::serial();
+        let want = conv2d_packed(&mut ctx, &x, &pack_filter(&q.dequantize()), 3, 1, 1);
+        let got = conv2d_packed_q(&mut ctx, &x, &pq, 3, 1, 1);
+        assert_eq!(want.data, got.data);
+    }
+
+    #[test]
+    fn fc_with_q_matches_fc_with() {
+        let mut r = Rng::new(15);
+        for &bits in &[2u32, 6, 9] {
+            let w = grid_tensor(&mut r, vec![10, 24], bits, 0.6);
+            let q = QTensor::pack(&w, &GridMeta::Uniform { bits, scale: 0.6, chan: None });
+            assert!(q.is_packed(), "bits={bits}");
+            let wq = QFcW::from_qtensor(&q).unwrap();
+            let x = Tensor::new(vec![5, 24], r.normal_vec(5 * 24));
+            let b: Vec<f32> = r.normal_vec(10);
+            let mut ctx = ExecCtx::serial();
+            let want = fc_with(&mut ctx, &x, &q.dequantize(), &b);
+            let got = fc_with_q(&mut ctx, &x, &wq, &b);
+            assert_eq!(want.data, got.data, "bits={bits}");
+        }
+        // ternary fc, negative alpha
+        let w = ternary_tensor(&mut r, vec![7, 16], -0.4);
+        let q = QTensor::pack(&w, &GridMeta::Ternary { alpha: -0.4 });
+        assert!(q.is_packed());
+        let wq = QFcW::from_qtensor(&q).unwrap();
+        let x = Tensor::new(vec![3, 16], r.normal_vec(3 * 16));
+        let b: Vec<f32> = r.normal_vec(7);
+        let mut ctx = ExecCtx::serial();
+        let want = fc_with(&mut ctx, &x, &q.dequantize(), &b);
+        let got = fc_with_q(&mut ctx, &x, &wq, &b);
+        assert_eq!(want.data, got.data);
+    }
+
+    #[test]
+    fn fp32_fallback_yields_no_panels() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        let q = QTensor::Fp32(t);
+        assert!(PackedQ::from_qtensor(&q).is_none());
+        assert!(QFcW::from_qtensor(&q).is_none());
+    }
+
+    #[test]
+    fn quantized_panels_are_smaller_than_fp32() {
+        let mut r = Rng::new(16);
+        let w = ternary_tensor(&mut r, vec![32, 16, 3, 3], 1.0);
+        let q = QTensor::pack(&w, &GridMeta::Ternary { alpha: 1.0 });
+        let pq = PackedQ::from_qtensor(&q).unwrap();
+        let fp32 = pack_filter(&w).floats() * 4;
+        assert!(pq.bytes() * 4 < fp32, "{} vs {fp32}", pq.bytes());
+    }
+}

@@ -101,8 +101,11 @@ pub fn unpack_bits(bytes: &[u8], bits: u32, n: usize) -> Option<Vec<u32>> {
 /// the same float op sequence as `quant::uniform::quantize_uniform_scaled`
 /// (`q = (2/levels)·round(levels·t) − 1`, output `q·s`) followed by the
 /// in-place channel multiply of `quant::compensate::scale_input_channels`.
+/// `pub(crate)`: the quantized GEMM kernels (`tensor::qgemm`) build their
+/// decode LUTs from this exact expression so panel decode cannot drift
+/// from pack-time verification.
 #[inline]
-fn grid_value(bits: u32, scale: f32, m: u32, factor: Option<f32>) -> f32 {
+pub(crate) fn grid_value(bits: u32, scale: f32, m: u32, factor: Option<f32>) -> f32 {
     let levels = ((1u64 << bits) - 1) as f32;
     let s = scale.max(1e-12);
     let q = (2.0 / levels) * m as f32 - 1.0;
@@ -115,15 +118,19 @@ fn grid_value(bits: u32, scale: f32, m: u32, factor: Option<f32>) -> f32 {
 
 /// The exact ternary dequantization: `trit · alpha` with the trit stored
 /// as code `{0, 1, 2} → {-1.0, 0.0, +1.0}`.
+/// `pub(crate)`: shared with `tensor::qgemm`'s ternary kernels (parity
+/// oracle for the bitplane decode).
 #[inline]
-fn ternary_value(code: u32, alpha: f32) -> f32 {
+pub(crate) fn ternary_value(code: u32, alpha: f32) -> f32 {
     (code as i32 - 1) as f32 * alpha
 }
 
 /// Per-element channel factor under a [`ChanScale`]: `None` for elements
 /// outside the scaled slice (those were never multiplied).
+/// `pub(crate)`: `tensor::qgemm` precomputes per-row/column factor
+/// arrays through this same mapping.
 #[inline]
-fn chan_factor(chan: &ChanScale, shape: &[usize], i: usize) -> Option<f32> {
+pub(crate) fn chan_factor(chan: &ChanScale, shape: &[usize], i: usize) -> Option<f32> {
     let ch = match chan.axis {
         0 => {
             let stride: usize = shape[1..].iter().product();

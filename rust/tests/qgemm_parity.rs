@@ -1,0 +1,247 @@
+//! Parity and roundtrip properties for the quantized-arithmetic GEMM
+//! path (`tensor::qgemm`): pack/unpack roundtrips for the ternary
+//! bitplanes and the widened k-bit indices, bit-exactness of the
+//! integer kernels against the fp32 oracle across edge shapes (single
+//! rows, NR column tails, k crossing KC boundaries, all-zero trit
+//! planes), and the bounded-divergence + top-1 contract for the one
+//! intentionally non-exact mode (`gemm_rows_ternary_epilogue` at
+//! general alpha — never used for serving).
+//!
+//! Hand-rolled properties (proptest is unavailable offline — DESIGN.md
+//! §2): each runs over many seeded random cases; on failure the seed is
+//! in the assertion message for reproduction.
+
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
+use dfmpc::tensor::ops::{fc_with, matmul, ExecCtx};
+use dfmpc::tensor::qgemm::{
+    fc_with_q, gemm_rows_q, gemm_rows_ternary_epilogue, GridPanels, PackedQ, QFcW, TernaryPanels,
+};
+use dfmpc::tensor::qtensor::{ChanScale, GridMeta, QTensor};
+use dfmpc::tensor::Tensor;
+use dfmpc::util::rng::Rng;
+
+const CASES: u64 = 20;
+
+/// The exact ternary dequantization expression (`ternary_value`): code
+/// `{0,1,2} -> {-1,0,+1}` times alpha, with f32 signed-zero semantics.
+fn trit_value(code: u32, alpha: f32) -> f32 {
+    (code as i32 - 1) as f32 * alpha
+}
+
+/// The exact grid dequantization expression (`grid_value`), replicated
+/// float-op for float-op so constructed weights are exactly on-grid.
+fn grid_val(bits: u32, scale: f32, m: u32, factor: Option<f32>) -> f32 {
+    let levels = ((1u64 << bits) - 1) as f32;
+    let v = ((2.0 / levels) * m as f32 - 1.0) * scale.max(1e-12);
+    match factor {
+        Some(f) => v * f,
+        None => v,
+    }
+}
+
+/// `B = W^T` as a dense `(cols, o)` tensor so public [`matmul`] (fp32
+/// panels + fp32 microkernel) serves as the parity oracle.
+fn transposed(w: &Tensor) -> Tensor {
+    let (o, cols) = w.flat2d();
+    Tensor::from_fn(vec![cols, o], |i| w.data[(i % o) * cols + i / o])
+}
+
+#[test]
+fn prop_ternary_bitplane_roundtrip() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(seed);
+        let o = 1 + r.below(24) as usize;
+        let cols = 1 + r.below(600) as usize;
+        let codes: Vec<u32> = (0..o * cols).map(|_| r.below(3) as u32).collect();
+        let tp = TernaryPanels::pack(&codes, o, cols, 0.5);
+        for j in 0..o {
+            for kk in 0..cols {
+                assert_eq!(tp.code_at(kk, j), codes[j * cols + kk], "seed {seed} kk={kk} j={j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_grid_index_roundtrip() {
+    for seed in 0..CASES {
+        let mut r = Rng::new(100 + seed);
+        let o = 1 + r.below(24) as usize;
+        let cols = 1 + r.below(600) as usize;
+        // bits spans the u8-widened range and the u16 rest
+        let bits = 1 + r.below(16) as u32;
+        let vals: Vec<u32> = (0..o * cols).map(|_| r.below(1u64 << bits) as u32).collect();
+        let gp = GridPanels::pack(&vals, &[o, cols], bits, 0.7, None);
+        for j in 0..o {
+            for kk in 0..cols {
+                assert_eq!(gp.idx_at(kk, j), vals[j * cols + kk], "seed {seed} kk={kk} j={j}");
+            }
+        }
+    }
+}
+
+/// Edge shapes for the GEMM kernels: single A row, single output
+/// column, NR tails, k below / at / across the KC=256 tiling boundary.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 9, 261),  // one A row, NR tail, k just past KC
+    (4, 1, 300),  // one output column
+    (3, 8, 256),  // exact NR and KC boundaries
+    (2, 13, 513), // NR tail, k across two KC boundaries
+    (5, 16, 64),  // small in-cache shape
+];
+
+#[test]
+fn prop_ternary_kernel_bit_identical_to_fp32_oracle() {
+    for (case, &(m, o, cols)) in SHAPES.iter().enumerate() {
+        let mut r = Rng::new(200 + case as u64);
+        for &alpha in &[1.0f32, 0.6, -0.3] {
+            let w = Tensor::from_fn(vec![o, cols], |_| trit_value(r.below(3) as u32, alpha));
+            let q = QTensor::pack(&w, &GridMeta::Ternary { alpha });
+            assert!(q.is_packed(), "case {case} alpha={alpha}");
+            let pq = PackedQ::from_qtensor(&q).unwrap();
+            let a = Tensor::new(vec![m, cols], r.normal_vec(m * cols));
+            let want = matmul(&a, &transposed(&q.dequantize()));
+            let mut got = vec![0.0f32; m * o];
+            gemm_rows_q(&a.data, &pq, 0, m, &mut got);
+            assert_eq!(want.data, got, "case {case} alpha={alpha}");
+        }
+    }
+}
+
+#[test]
+fn prop_all_zero_trit_planes_yield_exact_zero() {
+    // codes all 1 (weight 0 everywhere): the integer path must produce
+    // exact zeros, not accumulated noise — for both kernel dispatches
+    for &alpha in &[1.0f32, 0.7319] {
+        let (m, o, cols) = (3, 9, 300);
+        let mut r = Rng::new(300);
+        let w = Tensor::from_fn(vec![o, cols], |_| trit_value(1, alpha));
+        let q = QTensor::pack(&w, &GridMeta::Ternary { alpha });
+        assert!(q.is_packed());
+        let pq = PackedQ::from_qtensor(&q).unwrap();
+        let a = Tensor::new(vec![m, cols], r.normal_vec(m * cols));
+        let mut got = vec![0.0f32; m * o];
+        gemm_rows_q(&a.data, &pq, 0, m, &mut got);
+        assert!(got.iter().all(|&v| v == 0.0), "alpha={alpha}");
+    }
+}
+
+#[test]
+fn prop_grid_kernel_bit_identical_to_fp32_oracle() {
+    // bits 2/4 stay u8-widened, 9 exercises the u16 path; axis-0 and
+    // axis-1 ChanScale cover both factor epilogues (incl. multi-panel
+    // column windows for axis 0)
+    for (case, &(m, o, cols)) in SHAPES.iter().enumerate() {
+        let mut r = Rng::new(400 + case as u64);
+        for &bits in &[2u32, 4, 9] {
+            for axis in [usize::MAX, 0, 1] {
+                let scale = 0.3 + r.f32();
+                let chan = (axis <= 1).then(|| ChanScale {
+                    axis,
+                    offset: if axis == 0 { o.min(1) } else { cols.min(2) },
+                    factors: vec![1.5, 0.25, -2.0],
+                });
+                let shape = vec![o, cols];
+                let w = Tensor::from_fn(shape.clone(), |i| {
+                    let ch = if axis == 0 { i / cols } else { i % cols };
+                    let f = chan
+                        .as_ref()
+                        .and_then(|c| c.factors.get(ch.checked_sub(c.offset)?).copied());
+                    grid_val(bits, scale, r.below(1u64 << bits) as u32, f)
+                });
+                let q = QTensor::pack(&w, &GridMeta::Uniform { bits, scale, chan });
+                assert!(q.is_packed(), "case {case} bits={bits} axis={axis}");
+                let pq = PackedQ::from_qtensor(&q).unwrap();
+                let a = Tensor::new(vec![m, cols], r.normal_vec(m * cols));
+                let want = matmul(&a, &transposed(&q.dequantize()));
+                let mut got = vec![0.0f32; m * o];
+                gemm_rows_q(&a.data, &pq, 0, m, &mut got);
+                assert_eq!(want.data, got, "case {case} bits={bits} axis={axis}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fc_kernel_bit_identical_to_fp32_oracle() {
+    // cin across u64 word boundaries (65, 128), single-row and
+    // single-output edges; ternary and both grid index widths
+    for (case, &(n, o, cin)) in
+        [(1usize, 7usize, 65usize), (4, 1, 128), (3, 10, 64), (2, 13, 200)].iter().enumerate()
+    {
+        let mut r = Rng::new(500 + case as u64);
+        let x = Tensor::new(vec![n, cin], r.normal_vec(n * cin));
+        let b: Vec<f32> = r.normal_vec(o);
+        let mut ctx = ExecCtx::serial();
+
+        let wt = Tensor::from_fn(vec![o, cin], |_| trit_value(r.below(3) as u32, -0.4));
+        let qt = QTensor::pack(&wt, &GridMeta::Ternary { alpha: -0.4 });
+        assert!(qt.is_packed(), "case {case}");
+        let want = fc_with(&mut ctx, &x, &qt.dequantize(), &b);
+        let got = fc_with_q(&mut ctx, &x, &QFcW::from_qtensor(&qt).unwrap(), &b);
+        assert_eq!(want.data, got.data, "ternary case {case}");
+
+        for &bits in &[2u32, 9] {
+            let scale = 0.4 + r.f32();
+            let wg = Tensor::from_fn(vec![o, cin], |_| {
+                grid_val(bits, scale, r.below(1u64 << bits) as u32, None)
+            });
+            let qg = QTensor::pack(&wg, &GridMeta::Uniform { bits, scale, chan: None });
+            assert!(qg.is_packed(), "case {case} bits={bits}");
+            let want = fc_with(&mut ctx, &x, &qg.dequantize(), &b);
+            let got = fc_with_q(&mut ctx, &x, &QFcW::from_qtensor(&qg).unwrap(), &b);
+            assert_eq!(want.data, got.data, "grid case {case} bits={bits}");
+        }
+    }
+}
+
+#[test]
+fn prop_epilogue_alpha_divergence_bounded_with_top1_parity() {
+    // The test-only mode: the integer XOR/AND kernel with alpha applied
+    // once per output instead of per term. Mathematically equal to the
+    // oracle, floating-point close — the contract is a measured max-abs
+    // divergence bound (~2k ULP-scale) plus per-row top-1 agreement.
+    for seed in 0..CASES {
+        let mut r = Rng::new(600 + seed);
+        let (m, o, cols) = (4usize, 10usize, 300usize);
+        let alpha = 0.3 + r.f32(); // general alpha: the non-exact mode
+        let codes: Vec<u32> = (0..o * cols).map(|_| r.below(3) as u32).collect();
+        let tp = TernaryPanels::pack(&codes, o, cols, alpha);
+        let w = Tensor::from_fn(vec![o, cols], |i| trit_value(codes[i], alpha));
+        let a = Tensor::new(vec![m, cols], r.normal_vec(m * cols));
+        let want = matmul(&a, &transposed(&w));
+        let mut got = vec![0.0f32; m * o];
+        gemm_rows_ternary_epilogue(&a.data, &tp, 0, m, &mut got);
+        for i in 0..m {
+            let anorm: f32 = (0..cols).map(|kk| a.data[i * cols + kk].abs()).sum();
+            let tol = 4.0 * cols as f32 * f32::EPSILON * anorm * alpha.abs();
+            let row_want = &want.data[i * o..(i + 1) * o];
+            let row_got = &got[i * o..(i + 1) * o];
+            for j in 0..o {
+                let d = (row_want[j] - row_got[j]).abs();
+                assert!(d <= tol, "seed {seed} row {i} col {j}: |{d}| > {tol}");
+            }
+            // top-1 agreement is guaranteed exactly when the oracle's
+            // top-2 margin exceeds what the divergence bound can move
+            let argmax = |row: &[f32]| {
+                row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(j, _)| j)
+            };
+            let top = argmax(row_want).unwrap();
+            let mut runner_up = f32::NEG_INFINITY;
+            for (j, &v) in row_want.iter().enumerate() {
+                if j != top && v > runner_up {
+                    runner_up = v;
+                }
+            }
+            if row_want[top] - runner_up > 2.0 * tol {
+                assert_eq!(Some(top), argmax(row_got), "seed {seed} row {i} top-1");
+            }
+        }
+    }
+}

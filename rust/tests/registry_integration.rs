@@ -106,9 +106,9 @@ const ALL_METHODS: &[&str] = &[
 #[test]
 fn registry_served_logits_bit_identical_to_offline_apply() {
     // The registry keeps every quantized variant bit-packed and serves
-    // from GEMM panels dequantized out of the packed store — the logits
-    // must still be bit-identical to offline fake-quant + Engine, for
-    // EVERY method.
+    // it straight from the packed bits through the quantized GEMM
+    // kernels — the logits must still be bit-identical to offline
+    // fake-quant + Engine, for EVERY method.
     let (plan, ckpt) = fixture();
     let registry = registry_over(&plan, &ckpt, usize::MAX);
     let lane = RegistryLane::new(Arc::clone(&registry), None);
@@ -130,9 +130,31 @@ fn registry_served_logits_bit_identical_to_offline_apply() {
         let m = registry.get_or_prepare(&key).unwrap();
         if *spec == "fp32" {
             assert!(m.packed.is_none());
+            for (layer, path) in &m.layer_paths {
+                assert!(
+                    *path == "fp32-panel" || *path == "fc-fp32",
+                    "fp32 layer '{layer}' reports '{path}'"
+                );
+            }
         } else {
             let packed = m.packed.as_ref().expect("quantized variant must be packed");
             assert!(packed.packed_count() > 0, "{spec}: nothing bit-packed");
+            // the store holds only on-grid tensors (fp32 fallbacks live
+            // once, in the runtime residual)
+            assert_eq!(packed.packed_count(), packed.tensors.len(), "{spec}");
+            // every weight-bearing layer of this plan serves from a
+            // quantized panel — the bit-identical logits above were
+            // computed by the integer-path kernels, not an fp32 copy
+            for (layer, path) in &m.layer_paths {
+                assert!(
+                    !matches!(*path, "fp32-panel" | "fp32-direct" | "fc-fp32"),
+                    "{spec}: layer '{layer}' fell back to '{path}'"
+                );
+            }
+            // no dense fp32 weight is resident for served layers
+            assert!(m.ckpt.tensors.get("c1.w").is_none(), "{spec}");
+            assert!(m.ckpt.tensors.get("c2.w").is_none(), "{spec}");
+            assert!(m.ckpt.tensors.get("fc.w").is_none(), "{spec}");
         }
     }
     let snap = registry.snapshot();
@@ -149,7 +171,7 @@ fn fixed_budget_holds_strictly_more_packed_variants() {
     let m = probe.get_or_prepare("tiny32@uniform:4").unwrap();
     let offline = Method::parse("uniform:4").unwrap().apply(&plan, &ckpt, None).unwrap();
     let full_ckpt_bytes: usize = offline.tensors.values().map(|t| t.data.len() * 4).sum();
-    let panel_bytes: usize = m.panels.values().map(|p| p.floats() * 4).sum();
+    let panel_bytes: usize = m.panels.values().map(|p| p.bytes()).sum();
     let legacy = full_ckpt_bytes + panel_bytes;
     assert!(
         m.bytes < legacy,
@@ -280,6 +302,26 @@ fn one_process_serves_two_variants_concurrently() {
         .collect();
     assert!(keys.contains(&fp32_key), "fp32 variant missing from status: {keys:?}");
     assert!(keys.contains(&dfmpc_key), "dfmpc variant missing from status: {keys:?}");
+
+    // status also reports which compute path serves each layer: the
+    // dfmpc variant entirely from quantized panels, fp32 from fp32 ones
+    for v in st.get("variants").and_then(Json::as_arr).unwrap() {
+        let key = v.req("key").unwrap().as_str().unwrap();
+        let paths: Vec<&str> = v
+            .req("layer_paths")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|p| p.as_str().unwrap())
+            .collect();
+        assert!(!paths.is_empty(), "{key}: empty layer_paths in status");
+        let quantized = key == dfmpc_key;
+        for p in &paths {
+            let fp32_path = p.ends_with(":fp32-panel") || p.ends_with(":fc-fp32");
+            assert_eq!(fp32_path, !quantized, "{key}: unexpected serving path '{p}'");
+        }
+    }
 
     // unknown variant: structured rejection at admission
     let rej = client
