@@ -11,9 +11,11 @@
 use super::lexer::TokenKind;
 use super::{text_at, Finding, Source, RULE_PANIC};
 
-/// Module keys on the no-panic contract.
-const SCOPE: &str =
-    "coordinator/server coordinator/lanes data/loader model/checkpoint model/zoo util/json";
+/// Module keys on the no-panic contract. `coordinator/event` and
+/// `coordinator/conn` are the event-driven connection layer: a panic on
+/// a loop thread would take down EVERY connection it owns, not just one.
+const SCOPE: &str = "coordinator/server coordinator/lanes coordinator/event coordinator/conn \
+                     data/loader model/checkpoint model/zoo util/json";
 
 pub fn check(src: &Source, out: &mut Vec<Finding>) {
     if !src.in_module_list(SCOPE) {

@@ -11,8 +11,10 @@ use super::lexer::TokenKind;
 use super::{Finding, Source, RULE_UNSAFE};
 
 /// Module keys allowed to contain `unsafe`: the threadpool's scoped-job
-/// lifetime transmute and the libc signal-handler shim.
-const ALLOWED: &str = "util/threadpool util/signal";
+/// lifetime transmute, the libc signal-handler shim, and the epoll/
+/// eventfd readiness shim behind the event-driven server. Everything
+/// else — including the event loops themselves — stays safe Rust.
+const ALLOWED: &str = "util/threadpool util/signal util/epoll";
 
 pub fn check(src: &Source, out: &mut Vec<Finding>) {
     let tokens = &src.lexed.tokens;

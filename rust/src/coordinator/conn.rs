@@ -1,0 +1,431 @@
+//! Per-connection state machine for the event-driven server — pure
+//! buffer logic, no sockets, so every transition is deterministically
+//! unit-testable (the tests below feed bytes 1 at a time, complete
+//! requests out of order, and drain replies 1 byte per round).
+//!
+//! One [`ConnState`] per registered fd. The contract (also in
+//! `docs/INVARIANTS.md`):
+//!
+//! - **Incremental line parsing, bounded.** [`ConnState::feed`] appends
+//!   whatever the socket produced and returns every *complete* line.
+//!   Partial lines persist across feeds (a request split into 1-byte
+//!   reads parses identically to one big read). The buffered partial
+//!   line never exceeds `max_request` bytes: past it the connection
+//!   enters oversized teardown and the buffer is released.
+//! - **Pipelining with ordered replies.** Each parsed request takes a
+//!   sequence-numbered reply slot. Completions may arrive in any order
+//!   (lanes batch by variant/shape, not arrival); [`ConnState::flush`]
+//!   releases replies strictly in slot order, so the wire order always
+//!   matches the request order.
+//! - **Incremental writes.** The write buffer drains through
+//!   [`ConnState::writable`] / [`ConnState::consume_written`] as the
+//!   socket accepts bytes; a client that reads slowly just keeps its
+//!   own buffer parked here (bounded by the pipeline cap × reply size —
+//!   [`ConnState::can_read`] stops parsing new requests past
+//!   `max_pipeline` in-flight).
+
+use std::collections::VecDeque;
+
+/// A reply slot: one per parsed request, in arrival order.
+enum Slot {
+    /// dispatched to the lanes; reply not yet available
+    Waiting,
+    /// reply line ready, waiting for older slots to flush first
+    Done(String),
+}
+
+/// Pure read/parse/reply-ordering/write state for one connection.
+pub struct ConnState {
+    max_request: usize,
+    max_pipeline: usize,
+    /// unparsed request bytes (at most one partial line after `feed`)
+    read_buf: Vec<u8>,
+    /// prefix of `read_buf` already scanned for a newline
+    scanned: usize,
+    /// sequence number of the slot at the front of `pending`
+    base_seq: u64,
+    /// sequence number the next parsed request will get
+    next_seq: u64,
+    /// reply slots for in-flight requests, in request order
+    pending: VecDeque<Slot>,
+    /// rendered replies not yet accepted by the socket
+    write_buf: Vec<u8>,
+    /// prefix of `write_buf` already written to the socket
+    write_pos: usize,
+    /// the peer closed its write half (EOF on read)
+    pub peer_eof: bool,
+    /// a request line exceeded `max_request`: parsing is permanently off
+    oversized: bool,
+}
+
+impl ConnState {
+    pub fn new(max_request: usize, max_pipeline: usize) -> ConnState {
+        ConnState {
+            max_request: max_request.max(1),
+            max_pipeline: max_pipeline.max(1),
+            read_buf: Vec::new(),
+            scanned: 0,
+            base_seq: 0,
+            next_seq: 0,
+            pending: VecDeque::new(),
+            write_buf: Vec::new(),
+            write_pos: 0,
+            peer_eof: false,
+            oversized: false,
+        }
+    }
+
+    /// Append freshly read bytes and return the complete request lines
+    /// they finish (newline stripped, raw bytes lossy-decoded), plus
+    /// whether the line cap tripped. After an oversize trip the partial
+    /// line is unrecoverable (the client must resync on `\n` anyway), so
+    /// the buffer is dropped and later feeds parse nothing.
+    pub fn feed(&mut self, data: &[u8]) -> (Vec<String>, bool) {
+        let mut lines = Vec::new();
+        if self.oversized {
+            return (lines, true);
+        }
+        self.read_buf.extend_from_slice(data);
+        // parse every complete line in one pass, then compact the buffer
+        // once — a k-line burst costs one memmove, not k
+        let mut consumed = 0usize;
+        while !self.oversized {
+            match self.read_buf[self.scanned..].iter().position(|&b| b == b'\n') {
+                Some(off) => {
+                    let nl = self.scanned + off;
+                    // line is consumed..nl, newline at nl: cap counts the
+                    // newline, matching the retired blocking reader
+                    if nl + 1 - consumed > self.max_request {
+                        self.oversized = true;
+                    } else {
+                        lines.push(
+                            String::from_utf8_lossy(&self.read_buf[consumed..nl]).into_owned(),
+                        );
+                        consumed = nl + 1;
+                        self.scanned = consumed;
+                    }
+                }
+                None => {
+                    self.scanned = self.read_buf.len();
+                    if self.read_buf.len() - consumed > self.max_request {
+                        self.oversized = true;
+                    }
+                    break;
+                }
+            }
+        }
+        self.read_buf.drain(..consumed);
+        self.scanned -= consumed;
+        if self.oversized {
+            self.read_buf = Vec::new();
+            self.scanned = 0;
+        }
+        (lines, self.oversized)
+    }
+
+    /// Claim the next reply slot for a parsed request; the returned
+    /// sequence number is the ticket [`ConnState::complete`] needs.
+    pub fn begin_request(&mut self) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push_back(Slot::Waiting);
+        seq
+    }
+
+    /// Fill slot `seq` with its rendered reply line (no trailing
+    /// newline). Returns false for a slot that no longer exists (already
+    /// flushed, or the ticket is bogus) — the caller drops late replies
+    /// for torn-down connections this way.
+    pub fn complete(&mut self, seq: u64, line: String) -> bool {
+        if seq < self.base_seq {
+            return false;
+        }
+        let idx = (seq - self.base_seq) as usize;
+        match self.pending.get_mut(idx) {
+            Some(slot) => {
+                *slot = Slot::Done(line);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Shorthand for a request answered synchronously (status, parse
+    /// errors): claim a slot and complete it in one step, preserving
+    /// order relative to still-pending older requests.
+    pub fn push_reply(&mut self, line: String) {
+        let seq = self.begin_request();
+        self.complete(seq, line);
+    }
+
+    /// Move the front run of completed slots into the write buffer (reply
+    /// order == request order; a Waiting slot blocks everything younger).
+    /// Returns how many replies became writable.
+    pub fn flush(&mut self) -> usize {
+        let mut moved = 0usize;
+        while let Some(Slot::Done(_)) = self.pending.front() {
+            if let Some(Slot::Done(line)) = self.pending.pop_front() {
+                self.base_seq += 1;
+                self.write_buf.extend_from_slice(line.as_bytes());
+                self.write_buf.push(b'\n');
+                moved += 1;
+            }
+        }
+        moved
+    }
+
+    /// Bytes ready for the socket.
+    pub fn writable(&self) -> &[u8] {
+        &self.write_buf[self.write_pos..]
+    }
+
+    /// Record that the socket accepted `n` bytes of [`ConnState::writable`].
+    pub fn consume_written(&mut self, n: usize) {
+        self.write_pos = (self.write_pos + n).min(self.write_buf.len());
+        if self.write_pos == self.write_buf.len() {
+            self.write_buf.clear();
+            self.write_pos = 0;
+        } else if self.write_pos > 64 * 1024 {
+            // slow reader: reclaim the written prefix so the buffer
+            // tracks the UNSENT bytes, not the connection's history
+            self.write_buf.drain(..self.write_pos);
+            self.write_pos = 0;
+        }
+    }
+
+    /// Unsent reply bytes remain.
+    pub fn has_unsent(&self) -> bool {
+        self.write_pos < self.write_buf.len()
+    }
+
+    /// In-flight requests (slots not yet flushed to the write buffer).
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// The connection should be read from: peer still open, no oversize
+    /// teardown, and the pipeline cap not yet reached (past the cap the
+    /// loop simply stops reading — TCP backpressure does the rest).
+    pub fn can_read(&self) -> bool {
+        !self.oversized && !self.peer_eof && self.pending.len() < self.max_pipeline
+    }
+
+    /// A request line exceeded the cap at some point.
+    pub fn is_oversized(&self) -> bool {
+        self.oversized
+    }
+
+    /// Nothing in flight and nothing unsent: safe to close (once the
+    /// peer is done or the server is draining).
+    pub fn idle(&self) -> bool {
+        self.pending.is_empty() && !self.has_unsent()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed_str(c: &mut ConnState, s: &str) -> (Vec<String>, bool) {
+        c.feed(s.as_bytes())
+    }
+
+    #[test]
+    fn whole_line_parses() {
+        let mut c = ConnState::new(1024, 8);
+        let (lines, over) = feed_str(&mut c, "{\"op\":\"status\"}\n");
+        assert_eq!(lines, vec!["{\"op\":\"status\"}"]);
+        assert!(!over);
+        assert!(c.idle());
+    }
+
+    #[test]
+    fn line_split_across_one_byte_reads() {
+        let mut c = ConnState::new(1024, 8);
+        let req = "{\"op\":\"status\"}\n";
+        let mut all = Vec::new();
+        for b in req.bytes() {
+            let (lines, over) = c.feed(&[b]);
+            assert!(!over);
+            all.extend(lines);
+        }
+        assert_eq!(all, vec!["{\"op\":\"status\"}"]);
+    }
+
+    #[test]
+    fn pipelined_burst_parses_in_order() {
+        let mut c = ConnState::new(1024, 8);
+        let (lines, over) = feed_str(&mut c, "a\nb\nc\npartial");
+        assert_eq!(lines, vec!["a", "b", "c"]);
+        assert!(!over);
+        let (lines, over) = feed_str(&mut c, " tail\n");
+        assert_eq!(lines, vec!["partial tail"]);
+        assert!(!over);
+    }
+
+    #[test]
+    fn replies_flush_in_request_order_despite_completion_order() {
+        let mut c = ConnState::new(1024, 8);
+        let s0 = c.begin_request();
+        let s1 = c.begin_request();
+        let s2 = c.begin_request();
+        // youngest completes first: nothing can flush yet
+        assert!(c.complete(s2, "r2".into()));
+        assert_eq!(c.flush(), 0);
+        assert!(!c.has_unsent());
+        // middle completes: still blocked on the oldest
+        assert!(c.complete(s1, "r1".into()));
+        assert_eq!(c.flush(), 0);
+        // oldest completes: the whole run flushes, in request order
+        assert!(c.complete(s0, "r0".into()));
+        assert_eq!(c.flush(), 3);
+        assert_eq!(c.writable(), b"r0\nr1\nr2\n");
+        assert!(c.has_unsent());
+    }
+
+    #[test]
+    fn sync_replies_interleave_with_pending_in_order() {
+        let mut c = ConnState::new(1024, 8);
+        let s0 = c.begin_request(); // async (classify)
+        c.push_reply("sync1".into()); // sync (bad op), younger than s0
+        assert_eq!(c.flush(), 0, "sync reply must wait for the older classify");
+        assert!(c.complete(s0, "async0".into()));
+        assert_eq!(c.flush(), 2);
+        assert_eq!(c.writable(), b"async0\nsync1\n");
+    }
+
+    #[test]
+    fn reply_drains_one_byte_per_round() {
+        let mut c = ConnState::new(1024, 8);
+        c.push_reply("hello".into());
+        c.flush();
+        let total = c.writable().len();
+        assert_eq!(total, 6);
+        let mut seen = Vec::new();
+        for _ in 0..total {
+            seen.push(c.writable()[0]);
+            c.consume_written(1);
+        }
+        assert_eq!(seen, b"hello\n");
+        assert!(!c.has_unsent());
+        assert!(c.idle());
+    }
+
+    #[test]
+    fn oversized_terminated_line_trips_cap() {
+        let mut c = ConnState::new(8, 8);
+        // 8 bytes + newline = 9 > 8
+        let (lines, over) = feed_str(&mut c, "12345678\n");
+        assert!(lines.is_empty());
+        assert!(over);
+        assert!(c.is_oversized());
+        assert!(!c.can_read());
+    }
+
+    #[test]
+    fn line_exactly_at_cap_is_accepted() {
+        let mut c = ConnState::new(8, 8);
+        // 7 bytes + newline = 8 == cap
+        let (lines, over) = feed_str(&mut c, "1234567\n");
+        assert_eq!(lines, vec!["1234567"]);
+        assert!(!over);
+    }
+
+    #[test]
+    fn oversized_unterminated_line_trips_cap_mid_stream() {
+        let mut c = ConnState::new(8, 8);
+        // good line first, then a newline-less flood
+        let (lines, over) = feed_str(&mut c, "ok\n123456");
+        assert_eq!(lines, vec!["ok"]);
+        assert!(!over, "6 buffered bytes are under the cap");
+        let (lines, over) = feed_str(&mut c, "789");
+        assert!(lines.is_empty());
+        assert!(over, "9 buffered bytes exceed the cap");
+        // and the buffer is released, not retained
+        assert_eq!(c.read_buf.capacity(), 0);
+        let (lines, over) = feed_str(&mut c, "anything\n");
+        assert!(lines.is_empty());
+        assert!(over, "parsing stays off after the trip");
+    }
+
+    #[test]
+    fn pipeline_cap_gates_reading() {
+        let mut c = ConnState::new(1024, 2);
+        assert!(c.can_read());
+        let s0 = c.begin_request();
+        assert!(c.can_read());
+        let _s1 = c.begin_request();
+        assert!(!c.can_read(), "at the cap: stop reading, let TCP backpressure");
+        c.complete(s0, "r0".into());
+        c.flush();
+        assert!(c.can_read(), "flushing the oldest frees a slot");
+    }
+
+    #[test]
+    fn eof_stops_reading_but_pending_replies_still_flush() {
+        let mut c = ConnState::new(1024, 8);
+        let s0 = c.begin_request();
+        c.peer_eof = true;
+        assert!(!c.can_read());
+        assert!(!c.idle(), "in-flight request still owed a reply");
+        c.complete(s0, "late".into());
+        c.flush();
+        assert_eq!(c.writable(), b"late\n");
+        c.consume_written(5);
+        assert!(c.idle(), "reply delivered: safe to close");
+    }
+
+    #[test]
+    fn late_completion_for_flushed_or_bogus_slot_is_dropped() {
+        let mut c = ConnState::new(1024, 8);
+        let s0 = c.begin_request();
+        assert!(c.complete(s0, "r0".into()));
+        c.flush();
+        assert!(!c.complete(s0, "again".into()), "slot already flushed");
+        assert!(!c.complete(999, "bogus".into()), "ticket never issued");
+        assert_eq!(c.writable(), b"r0\n");
+    }
+
+    #[test]
+    fn teardown_is_safe_at_every_state() {
+        // drop mid-parse
+        let mut c = ConnState::new(1024, 8);
+        c.feed(b"{\"op\":");
+        drop(c);
+        // drop with a request in flight
+        let mut c = ConnState::new(1024, 8);
+        c.begin_request();
+        drop(c);
+        // drop with an unflushed completed reply
+        let mut c = ConnState::new(1024, 8);
+        let s = c.begin_request();
+        c.complete(s, "r".into());
+        drop(c);
+        // drop with unsent write bytes
+        let mut c = ConnState::new(1024, 8);
+        c.push_reply("r".into());
+        c.flush();
+        c.consume_written(1);
+        drop(c);
+        // drop after oversize trip
+        let mut c = ConnState::new(4, 8);
+        c.feed(b"123456789");
+        drop(c);
+    }
+
+    #[test]
+    fn slow_reader_buffer_compacts() {
+        let mut c = ConnState::new(1 << 20, 1 << 20);
+        let big = "x".repeat(100 * 1024);
+        c.push_reply(big.clone());
+        c.push_reply(big);
+        c.flush();
+        let total = c.writable().len();
+        // drain past the compaction threshold in two large chunks
+        c.consume_written(70 * 1024);
+        assert_eq!(c.writable().len(), total - 70 * 1024, "compaction preserves the tail");
+        let rest = c.writable().len();
+        c.consume_written(rest);
+        assert!(!c.has_unsent());
+    }
+}

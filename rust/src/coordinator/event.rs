@@ -1,0 +1,599 @@
+//! Event-loop threads for the serving front-end: a small fixed number of
+//! threads own ALL connections via nonblocking sockets + epoll
+//! ([`crate::util::epoll`]), replacing the retired thread-per-connection
+//! handler model. Each loop runs the readiness cycle:
+//!
+//! 1. `epoll_wait` (blocking indefinitely when fully idle — no timer
+//!    polling; the retired handler path woke every 100ms per connection),
+//! 2. accept burst (loop 0 owns the listener; admitted connections are
+//!    handed round-robin to all loops through their inboxes),
+//! 3. per-connection reads → [`ConnState::feed`] → request dispatch
+//!    (sync ops answered in place; classify admitted to the lanes with a
+//!    completion callback),
+//! 4. eventfd drain + inbox drain (handed-off connections, completed
+//!    replies posted by lane workers),
+//! 5. per-connection flush + incremental write + interest update.
+//!
+//! A loop thread never blocks on anything but `epoll_wait`: reads and
+//! writes stop at `WouldBlock`, lane completions arrive through
+//! [`LoopShared::post`] (push under a short mutex, then an eventfd
+//! wake), and a slow reader just keeps its bytes parked in its own
+//! [`ConnState`] write buffer while every other connection proceeds.
+//!
+//! Wake ordering makes completions lossless: `post` pushes the message
+//! *then* wakes; the loop drains the eventfd *before* the inbox. A post
+//! landing after an inbox drain leaves the eventfd counter nonzero, so
+//! the next `epoll_wait` returns immediately instead of sleeping past
+//! the message.
+//!
+//! Shutdown (`Server::stop`): the stop flag is set and every loop is
+//! woken. Each loop closes its listener (loop 0), stops reading, keeps
+//! delivering in-flight completions and flushing write buffers, and
+//! exits as soon as every owned connection is idle — or at a bounded
+//! grace deadline for connections whose clients never drain their
+//! replies. No 100ms-poll worst case: an idle server stops in
+//! microseconds.
+
+use std::collections::HashMap;
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::epoll::{Event, Poller, WakeFd, EV_READ, EV_WRITE};
+
+use super::conn::ConnState;
+use super::server::{conn_limit_line, LineAction, RequestCtx, ServerStats};
+
+/// Well-known poller tokens; connection tokens count up from
+/// [`FIRST_CONN_TOKEN`] and are never reused, so a late completion for a
+/// torn-down connection can never alias a live one.
+const TOKEN_WAKER: u64 = 0;
+const TOKEN_LISTENER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// How long an oversized-teardown connection gets to drain its already
+/// sent bytes and read its error line before being force-closed, and how
+/// often loops wake to sweep such deadlines.
+const DISCARD_GRACE: Duration = Duration::from_millis(500);
+const SWEEP_MS: i32 = 25;
+
+/// Per-loop configuration, copied from `ServerConfig` at start.
+#[derive(Clone, Copy)]
+pub(crate) struct LoopCfg {
+    /// FD budget: accepts beyond this are rejected with `conn_limit`
+    pub max_conns: usize,
+    /// request-line byte cap (newline included)
+    pub max_request: usize,
+    /// in-flight pipelined requests per connection before reads pause
+    pub max_pipeline: usize,
+    /// stop-drain grace: loops force-close connections still unflushed
+    /// this long after `Server::stop`
+    pub drain_grace: Duration,
+}
+
+/// A message into a loop thread's inbox.
+pub(crate) enum LoopMsg {
+    /// a freshly accepted connection handed to this loop
+    Conn(TcpStream),
+    /// the rendered reply line for connection `token`, slot `seq`
+    Complete { token: u64, seq: u64, line: String },
+}
+
+/// The cross-thread face of one event loop: lane completion callbacks
+/// and the accept loop post messages here; `Server::stop` wakes it.
+pub(crate) struct LoopShared {
+    inbox: Mutex<Vec<LoopMsg>>,
+    waker: WakeFd,
+}
+
+impl LoopShared {
+    pub(crate) fn new() -> io::Result<LoopShared> {
+        Ok(LoopShared { inbox: Mutex::new(Vec::new()), waker: WakeFd::new()? })
+    }
+
+    /// Push a message and wake the owning loop. Push-then-wake plus the
+    /// loop's drain-eventfd-then-inbox order is what makes this lossless
+    /// (see the module docs). Never blocks beyond the short inbox mutex
+    /// and never panics — lane callbacks run through here.
+    pub(crate) fn post(&self, msg: LoopMsg) {
+        // a poisoned inbox means the owning loop thread already
+        // panicked; the message is moot then
+        if let Ok(mut q) = self.inbox.lock() {
+            q.push(msg);
+        }
+        self.waker.wake();
+    }
+
+    /// Wake without a message (stop-flag notification).
+    pub(crate) fn wake(&self) {
+        self.waker.wake();
+    }
+}
+
+/// Everything a loop thread needs, bundled for [`EventLoop::new`].
+pub(crate) struct LoopSeed {
+    pub idx: usize,
+    pub cfg: LoopCfg,
+    pub shared: Arc<LoopShared>,
+    /// every loop's shared face, indexed by loop — the accept loop hands
+    /// connections round-robin through these
+    pub peers: Vec<Arc<LoopShared>>,
+    pub stop: Arc<AtomicBool>,
+    /// loop 0 owns the (nonblocking) listener; the rest run None
+    pub listener: Option<TcpListener>,
+    pub ctx: Arc<RequestCtx>,
+    pub stats: Arc<ServerStats>,
+}
+
+/// One registered connection. Exactly one loop owns it for its entire
+/// life (registration → teardown); no handoffs after adoption, so all
+/// its state is plain single-threaded data.
+struct Conn {
+    token: u64,
+    fd: i32,
+    stream: TcpStream,
+    state: ConnState,
+    /// interest mask currently registered with the poller
+    interest: u32,
+    /// oversized teardown: bytes of already-sent client data still to
+    /// discard before closing (bounds a well-behaved client's orderly
+    /// error delivery without reading an attacker's stream forever)
+    discard_budget: usize,
+    /// oversized teardown force-close deadline
+    discard_deadline: Option<Instant>,
+    /// accounted in the `pending_write_conns` gauge
+    counted_write: bool,
+}
+
+enum ConnFate {
+    Keep,
+    Close,
+}
+
+/// One event-loop thread's owned state. Constructed on the spawning
+/// thread (so fd-registration errors surface in `Server::start`), then
+/// moved into the loop thread and run to completion.
+pub(crate) struct EventLoop {
+    idx: usize,
+    cfg: LoopCfg,
+    poller: Poller,
+    shared: Arc<LoopShared>,
+    peers: Vec<Arc<LoopShared>>,
+    stop: Arc<AtomicBool>,
+    listener: Option<TcpListener>,
+    listener_fd: i32,
+    ctx: Arc<RequestCtx>,
+    stats: Arc<ServerStats>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    /// round-robin cursor for connection handoff (accept loop only)
+    rr: usize,
+    /// connections in oversized teardown (their deadlines need sweeping)
+    discarding: usize,
+    /// set when the stop flag is first observed: the drain deadline
+    drain_until: Option<Instant>,
+}
+
+impl EventLoop {
+    pub(crate) fn new(seed: LoopSeed) -> io::Result<EventLoop> {
+        let poller = Poller::new()?;
+        poller.add(seed.shared.waker.fd(), TOKEN_WAKER, EV_READ)?;
+        let mut listener_fd = -1;
+        if let Some(l) = &seed.listener {
+            listener_fd = raw_fd(l);
+            poller.add(listener_fd, TOKEN_LISTENER, EV_READ)?;
+        }
+        Ok(EventLoop {
+            idx: seed.idx,
+            cfg: seed.cfg,
+            poller,
+            shared: seed.shared,
+            peers: seed.peers,
+            stop: seed.stop,
+            listener: seed.listener,
+            listener_fd,
+            ctx: seed.ctx,
+            stats: seed.stats,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            rr: seed.idx,
+            discarding: 0,
+            drain_until: None,
+        })
+    }
+
+    /// The loop body; runs until shutdown drains this loop's connections.
+    pub(crate) fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            // fully event-driven when healthy (no timer polling); a
+            // short timed wait only while deadlines need sweeping
+            let timeout = if self.drain_until.is_some() || self.discarding > 0 {
+                SWEEP_MS
+            } else {
+                -1
+            };
+            if self.poller.wait(&mut events, timeout).is_err() {
+                // a broken poller cannot multiplex; exit and release
+                break;
+            }
+            self.stats.loops.wakeups.fetch_add(1, Ordering::Relaxed);
+            for ev in &events {
+                match ev.token {
+                    TOKEN_WAKER => {} // drained below, before the inbox
+                    TOKEN_LISTENER => self.accept_burst(),
+                    token => self.conn_event(token, *ev),
+                }
+            }
+            // always drain eventfd first, inbox second (see module docs)
+            self.shared.waker.drain();
+            self.drain_inbox();
+            if self.drain_until.is_none() && self.stop.load(Ordering::Relaxed) {
+                self.enter_drain();
+            }
+            if self.sweep() {
+                break;
+            }
+        }
+        self.teardown_all();
+    }
+
+    /// Accept until `WouldBlock`, rejecting over the FD budget and
+    /// handing admitted connections round-robin across all loops.
+    fn accept_burst(&mut self) {
+        loop {
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => {
+                    if self.stats.active_conns.load(Ordering::Relaxed) >= self.cfg.max_conns {
+                        self.stats.rejected_conns.fetch_add(1, Ordering::Relaxed);
+                        reject_conn(stream, self.cfg.max_conns);
+                        continue;
+                    }
+                    // the gauge moves at accept time (not adoption) so a
+                    // handoff burst can never overshoot the budget
+                    self.stats.active_conns.fetch_add(1, Ordering::Relaxed);
+                    self.stats.loops.accepted_conns.fetch_add(1, Ordering::Relaxed);
+                    let target = self.rr % self.peers.len();
+                    self.rr = self.rr.wrapping_add(1);
+                    if target == self.idx {
+                        self.adopt_conn(stream);
+                    } else {
+                        self.peers[target].post(LoopMsg::Conn(stream));
+                    }
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Take ownership of an admitted connection: nonblocking, registered
+    /// read-interest, a fresh [`ConnState`], a never-reused token.
+    fn adopt_conn(&mut self, stream: TcpStream) {
+        // accepted sockets do NOT inherit the listener's nonblocking
+        // flag on Linux: set it explicitly (and by design keep it — the
+        // retired set_nonblocking(false) workaround is gone)
+        let _ = stream.set_nonblocking(true);
+        let _ = stream.set_nodelay(true);
+        let fd = raw_fd(&stream);
+        let token = self.next_token;
+        self.next_token += 1;
+        if self.poller.add(fd, token, EV_READ).is_err() {
+            self.stats.active_conns.fetch_sub(1, Ordering::Relaxed);
+            return; // stream drops -> close
+        }
+        self.stats.loops.loop_conns(self.idx).fetch_add(1, Ordering::Relaxed);
+        self.conns.insert(
+            token,
+            Conn {
+                token,
+                fd,
+                stream,
+                state: ConnState::new(self.cfg.max_request, self.cfg.max_pipeline),
+                interest: EV_READ,
+                discard_budget: 0,
+                discard_deadline: None,
+                counted_write: false,
+            },
+        );
+    }
+
+    /// Readiness on a connection: read/dispatch, then flush/write/retune.
+    fn conn_event(&mut self, token: u64, ev: Event) {
+        // take the connection out of the map for the duration — the
+        // borrow-clean way to mutate it while calling &self helpers
+        let Some(mut conn) = self.conns.remove(&token) else { return };
+        if ev.readable && self.pump_read(&mut conn).is_err() {
+            self.teardown(conn);
+            return;
+        }
+        if ev.closed && !ev.readable {
+            // pure error (EPOLLERR with nothing to consume): drop
+            self.teardown(conn);
+            return;
+        }
+        match self.service(&mut conn) {
+            ConnFate::Keep => {
+                self.conns.insert(token, conn);
+            }
+            ConnFate::Close => self.teardown(conn),
+        }
+    }
+
+    /// Read until `WouldBlock`/EOF/pipeline-cap, feeding the parser and
+    /// dispatching every completed line. Err = unrecoverable socket
+    /// error (caller tears down).
+    fn pump_read(&mut self, conn: &mut Conn) -> Result<(), ()> {
+        let mut scratch = [0u8; 16 * 1024];
+        loop {
+            if conn.state.is_oversized() {
+                return self.pump_discard(conn, &mut scratch);
+            }
+            if !conn.state.can_read() || self.drain_until.is_some() {
+                return Ok(());
+            }
+            match conn.stream.read(&mut scratch) {
+                Ok(0) => {
+                    conn.state.peer_eof = true;
+                    return Ok(());
+                }
+                Ok(n) => {
+                    let (lines, oversized) = conn.state.feed(&scratch[..n]);
+                    for line in lines {
+                        self.dispatch_line(conn, line);
+                    }
+                    if oversized {
+                        self.start_oversize_teardown(conn);
+                        return self.pump_discard(conn, &mut scratch);
+                    }
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+    }
+
+    /// Oversized teardown reading: discard already-sent bytes within the
+    /// budget so the error line gets through to a well-behaved client.
+    fn pump_discard(&self, conn: &mut Conn, scratch: &mut [u8]) -> Result<(), ()> {
+        while conn.discard_budget > 0 && !conn.state.peer_eof {
+            match conn.stream.read(scratch) {
+                Ok(0) => conn.state.peer_eof = true,
+                Ok(n) => conn.discard_budget = conn.discard_budget.saturating_sub(n),
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+        Ok(())
+    }
+
+    /// One parsed request line: claim a reply slot, process. Sync ops
+    /// complete the slot immediately; classify leaves it Waiting for the
+    /// lane completion callback to post back.
+    fn dispatch_line(&self, conn: &mut Conn, line: String) {
+        let seq = conn.state.begin_request();
+        self.stats.loops.pipelined_peak.fetch_max(conn.state.in_flight(), Ordering::Relaxed);
+        match self.ctx.process(line.trim(), &self.shared, conn.token, seq) {
+            LineAction::Respond(reply) => {
+                conn.state.complete(seq, reply);
+            }
+            LineAction::Pending => {}
+        }
+    }
+
+    /// A request line blew the cap: queue the structured error (ordered
+    /// after any in-flight replies), then drain-and-close with a byte
+    /// budget and a deadline — the event-shaped equivalent of the
+    /// retired blocking path's bounded reject-oversized drain.
+    fn start_oversize_teardown(&mut self, conn: &mut Conn) {
+        self.stats.oversized_reqs.fetch_add(1, Ordering::Relaxed);
+        conn.state.push_reply(self.ctx.oversized_line(self.cfg.max_request));
+        conn.discard_budget = self.cfg.max_request.saturating_mul(4);
+        conn.discard_deadline = Some(Instant::now() + DISCARD_GRACE);
+        self.discarding += 1;
+    }
+
+    /// Flush ready replies, write what the socket will take, update the
+    /// pending-write gauge, decide close-vs-keep, retune interest.
+    fn service(&self, conn: &mut Conn) -> ConnFate {
+        conn.state.flush();
+        if self.pump_write(conn).is_err() {
+            return ConnFate::Close;
+        }
+        let has_unsent = conn.state.has_unsent();
+        if has_unsent && !conn.counted_write {
+            conn.counted_write = true;
+            self.stats.loops.pending_write_conns.fetch_add(1, Ordering::Relaxed);
+        } else if !has_unsent && conn.counted_write {
+            conn.counted_write = false;
+            self.stats.loops.pending_write_conns.fetch_sub(1, Ordering::Relaxed);
+        }
+        let draining = self.drain_until.is_some();
+        if conn.state.is_oversized() {
+            let deadline_hit = conn.discard_deadline.is_some_and(|d| Instant::now() >= d);
+            let discard_done = conn.discard_budget == 0 || conn.state.peer_eof;
+            if deadline_hit || (conn.state.idle() && discard_done) {
+                return ConnFate::Close;
+            }
+        } else if (conn.state.peer_eof || draining) && conn.state.idle() {
+            return ConnFate::Close;
+        }
+        let mut want = 0u32;
+        let reading = if conn.state.is_oversized() {
+            conn.discard_budget > 0 && !conn.state.peer_eof
+        } else {
+            !draining && conn.state.can_read()
+        };
+        if reading {
+            want |= EV_READ;
+        }
+        if has_unsent {
+            want |= EV_WRITE;
+        }
+        if want != conn.interest {
+            if self.poller.modify(conn.fd, conn.token, want).is_err() {
+                return ConnFate::Close;
+            }
+            conn.interest = want;
+        }
+        ConnFate::Keep
+    }
+
+    /// Write until drained or `WouldBlock`. Err = dead socket.
+    fn pump_write(&self, conn: &mut Conn) -> Result<(), ()> {
+        while conn.state.has_unsent() {
+            match conn.stream.write(conn.state.writable()) {
+                Ok(0) => return Err(()),
+                Ok(n) => conn.state.consume_written(n),
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return Err(()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Process handed-off connections and lane completions.
+    fn drain_inbox(&mut self) {
+        let msgs: Vec<LoopMsg> = match self.shared.inbox.lock() {
+            Ok(mut q) => q.drain(..).collect(),
+            Err(_) => Vec::new(),
+        };
+        for msg in msgs {
+            match msg {
+                LoopMsg::Conn(stream) => self.adopt_conn(stream),
+                LoopMsg::Complete { token, seq, line } => {
+                    // a token no longer in the map is a late reply for a
+                    // torn-down connection: dropped (tokens are never
+                    // reused, so it cannot alias a live one)
+                    if let Some(mut conn) = self.conns.remove(&token) {
+                        conn.state.complete(seq, line);
+                        match self.service(&mut conn) {
+                            ConnFate::Keep => {
+                                self.conns.insert(token, conn);
+                            }
+                            ConnFate::Close => self.teardown(conn),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Stop observed: close the listener, stop reads, start the drain
+    /// clock. In-flight completions and unflushed writes still proceed.
+    fn enter_drain(&mut self) {
+        self.drain_until = Some(Instant::now() + self.cfg.drain_grace);
+        if let Some(l) = self.listener.take() {
+            let _ = self.poller.del(self.listener_fd);
+            drop(l);
+        }
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            self.service_token(t);
+        }
+    }
+
+    /// Deadline sweeps; returns true when the loop should exit (drain
+    /// complete or drain deadline reached).
+    fn sweep(&mut self) -> bool {
+        if self.discarding > 0 {
+            let now = Instant::now();
+            let expired: Vec<u64> = self
+                .conns
+                .iter()
+                .filter(|(_, c)| c.discard_deadline.is_some_and(|d| now >= d))
+                .map(|(t, _)| *t)
+                .collect();
+            for t in expired {
+                self.service_token(t); // service observes the deadline
+            }
+        }
+        match self.drain_until {
+            Some(deadline) => {
+                self.conns.values().all(|c| c.state.idle()) || Instant::now() >= deadline
+            }
+            None => false,
+        }
+    }
+
+    /// Run `service` on a connection by token (close it if it says so).
+    fn service_token(&mut self, token: u64) {
+        if let Some(mut conn) = self.conns.remove(&token) {
+            match self.service(&mut conn) {
+                ConnFate::Keep => {
+                    self.conns.insert(token, conn);
+                }
+                ConnFate::Close => self.teardown(conn),
+            }
+        }
+    }
+
+    /// Deregister, de-account, close (by drop).
+    fn teardown(&mut self, conn: Conn) {
+        let _ = self.poller.del(conn.fd);
+        if conn.counted_write {
+            self.stats.loops.pending_write_conns.fetch_sub(1, Ordering::Relaxed);
+        }
+        if conn.discard_deadline.is_some() {
+            self.discarding = self.discarding.saturating_sub(1);
+        }
+        self.stats.loops.loop_conns(self.idx).fetch_sub(1, Ordering::Relaxed);
+        self.stats.active_conns.fetch_sub(1, Ordering::Relaxed);
+        // conn.stream drops here -> close(fd)
+    }
+
+    /// Loop exit: close every remaining connection and de-account any
+    /// handoffs that raced the exit.
+    fn teardown_all(&mut self) {
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            if let Some(conn) = self.conns.remove(&t) {
+                self.teardown(conn);
+            }
+        }
+        let msgs: Vec<LoopMsg> = match self.shared.inbox.lock() {
+            Ok(mut q) => q.drain(..).collect(),
+            Err(_) => Vec::new(),
+        };
+        for msg in msgs {
+            if let LoopMsg::Conn(_stream) = msg {
+                // accepted but never adopted: undo the accept-time gauge
+                self.stats.active_conns.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// One-line best-effort structured rejection for connections over the FD
+/// budget: single nonblocking write, then close by drop. Never blocks
+/// the accept loop, mirrors the retired path's `conn_limit` wire shape.
+fn reject_conn(mut stream: TcpStream, max_conns: usize) {
+    let _ = stream.set_nonblocking(true);
+    let line = conn_limit_line(max_conns);
+    // one line into a fresh socket's empty send buffer: all-or-nothing
+    // in practice, and a full buffer (WouldBlock) just degrades to the
+    // close the client was getting anyway
+    let _ = stream.write_all(line.as_bytes());
+}
+
+#[cfg(unix)]
+fn raw_fd<T: std::os::unix::io::AsRawFd>(t: &T) -> i32 {
+    t.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn raw_fd<T>(_t: &T) -> i32 {
+    // unreachable in practice: Poller::new() fails on non-unix targets
+    // before any fd is consulted
+    -1
+}

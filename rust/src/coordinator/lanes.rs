@@ -145,12 +145,37 @@ pub struct Prediction {
     pub variant: String,
 }
 
+/// Completion callback for [`LanePool::classify_notify_variant`]: runs
+/// exactly once, on the lane worker thread, when the request's batch
+/// completes or fails. It must not block and must not panic — the
+/// event-driven server's callbacks only render a JSON line, push it onto
+/// a loop inbox, and poke an eventfd.
+pub type ReplyCallback = Box<dyn FnOnce(Result<Prediction, ServeError>) + Send + 'static>;
+
+/// Where a completed request's result goes: a blocking caller's channel,
+/// or a notification callback (the event-driven server's reply path — a
+/// loop thread never parks on a channel recv).
+enum ReplyTo {
+    Channel(mpsc::Sender<Result<Prediction, ServeError>>),
+    Notify(ReplyCallback),
+}
+
+impl ReplyTo {
+    fn deliver(self, result: Result<Prediction, ServeError>) {
+        match self {
+            // a hung-up receiver is not the lane's problem
+            ReplyTo::Channel(tx) => drop(tx.send(result)),
+            ReplyTo::Notify(cb) => cb(result),
+        }
+    }
+}
+
 struct Request {
     image: Tensor, // CHW
     /// model-variant key; batches group by (variant, shape)
     variant: String,
     enqueued: Instant,
-    reply: mpsc::Sender<Result<Prediction, ServeError>>,
+    reply: ReplyTo,
 }
 
 struct QueueState {
@@ -288,6 +313,36 @@ impl LanePool {
         variant: Option<&str>,
         image: Tensor,
     ) -> Result<mpsc::Receiver<Result<Prediction, ServeError>>, ServeError> {
+        let (rtx, rrx) = mpsc::channel();
+        self.admit(variant, image, ReplyTo::Channel(rtx))?;
+        Ok(rrx)
+    }
+
+    /// Admission identical to [`classify_async_variant`], but completion
+    /// is delivered by invoking `done` on the lane worker thread instead
+    /// of through a channel — the event-driven server's reply path (a
+    /// loop thread must never block waiting on a recv). `done` runs
+    /// exactly once iff this returns `Ok(())`; on a synchronous rejection
+    /// it is dropped unused and the returned error is the caller's to
+    /// render.
+    ///
+    /// [`classify_async_variant`]: LanePool::classify_async_variant
+    pub fn classify_notify_variant(
+        &self,
+        variant: Option<&str>,
+        image: Tensor,
+        done: ReplyCallback,
+    ) -> Result<(), ServeError> {
+        self.admit(variant, image, ReplyTo::Notify(done))
+    }
+
+    /// The shared admission path behind both delivery styles.
+    fn admit(
+        &self,
+        variant: Option<&str>,
+        image: Tensor,
+        reply: ReplyTo,
+    ) -> Result<(), ServeError> {
         let variant = variant.unwrap_or(&self.default_variant).to_string();
         // canonicalize through the registry so alias spellings of one
         // method ("dfmpc:2/6" vs "dfmpc:2/6:0.5:0") share a batch, a
@@ -326,7 +381,6 @@ impl LanePool {
             }
             _ => {}
         }
-        let (rtx, rrx) = mpsc::channel();
         {
             // lint: allow(panic-path) — poison means a lane worker
             // panicked mid-queue-update; admitting onto a torn queue is
@@ -342,7 +396,7 @@ impl LanePool {
                     limit: self.cfg.queue_depth,
                 });
             }
-            st.q.push_back(Request { image, variant, enqueued: Instant::now(), reply: rtx });
+            st.q.push_back(Request { image, variant, enqueued: Instant::now(), reply });
             self.shared.counters.note_depth(st.q.len());
             // inside the critical section: a lane must never complete a
             // request before it counts as admitted, or snapshots would
@@ -350,7 +404,7 @@ impl LanePool {
             self.shared.counters.admitted.fetch_add(1, Ordering::Relaxed);
         }
         self.shared.cv.notify_one();
-        Ok(rrx)
+        Ok(())
     }
 
     /// Number of inference lanes.
@@ -498,7 +552,9 @@ fn execute(backend: &dyn InferBackend, li: usize, batch: Vec<Request>, counters:
     // The whole inference pipeline — backend call, logits validation,
     // softmax/argmax (which panics on NaN logits) — runs inside the
     // catch, so nothing a backend returns can kill the lane. The scatter
-    // below only does guaranteed-in-bounds indexing and channel sends.
+    // below only does guaranteed-in-bounds indexing and reply delivery
+    // (channel sends, or notify callbacks contractually bound not to
+    // panic — see [`ReplyCallback`]).
     let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         let logits = backend.infer_batch(&variant, x).map_err(|e| format!("{e:#}"))?;
         if logits.shape.len() != 2 || logits.shape[0] != n || logits.shape[1] == 0 {
@@ -520,7 +576,7 @@ fn execute(backend: &dyn InferBackend, li: usize, batch: Vec<Request>, counters:
                     lane: li,
                     variant: variant.clone(),
                 };
-                let _ = req.reply.send(Ok(p));
+                req.reply.deliver(Ok(p));
             }
         }
         Ok(Err(msg)) => fail_batch(counters, batch, msg),
@@ -536,6 +592,6 @@ fn execute(backend: &dyn InferBackend, li: usize, batch: Vec<Request>, counters:
 fn fail_batch(counters: &PoolCounters, batch: Vec<Request>, msg: String) {
     counters.failed.fetch_add(batch.len() as u64, Ordering::Relaxed);
     for req in batch {
-        let _ = req.reply.send(Err(ServeError::Backend(msg.clone())));
+        req.reply.deliver(Err(ServeError::Backend(msg.clone())));
     }
 }

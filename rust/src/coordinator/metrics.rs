@@ -110,6 +110,53 @@ pub struct PoolSnapshot {
     pub lanes: Vec<LaneSnapshot>,
 }
 
+/// Event-loop front-end counters — the connection layer of the server,
+/// one instance per [`crate::coordinator::Server`], sized by
+/// `--event-threads`. All atomics: loop threads, the accept path, and
+/// lane-side completion callbacks update them lock-free, and the
+/// `status` op reads them without stalling any loop.
+#[derive(Debug)]
+pub struct LoopCounters {
+    /// `epoll_wait` returns across all loop threads
+    pub wakeups: AtomicU64,
+    /// connections accepted and admitted past the FD budget
+    pub accepted_conns: AtomicU64,
+    /// gauge: connections with unsent reply bytes right now (slow
+    /// readers being drained incrementally)
+    pub pending_write_conns: AtomicUsize,
+    /// high-water mark of per-connection pipelined in-flight requests
+    pub pipelined_peak: AtomicUsize,
+    /// gauge: connections currently owned by each loop thread
+    conns_per_loop: Vec<AtomicUsize>,
+}
+
+impl LoopCounters {
+    pub fn new(loops: usize) -> LoopCounters {
+        LoopCounters {
+            wakeups: AtomicU64::new(0),
+            accepted_conns: AtomicU64::new(0),
+            pending_write_conns: AtomicUsize::new(0),
+            pipelined_peak: AtomicUsize::new(0),
+            conns_per_loop: (0..loops.max(1)).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    /// Number of event-loop threads this server runs.
+    pub fn event_threads(&self) -> usize {
+        self.conns_per_loop.len()
+    }
+
+    /// The connection gauge of loop `i`.
+    pub fn loop_conns(&self, i: usize) -> &AtomicUsize {
+        &self.conns_per_loop[i]
+    }
+
+    /// Per-loop connection gauges (indexed by loop thread).
+    pub fn per_loop(&self) -> &[AtomicUsize] {
+        &self.conns_per_loop
+    }
+}
+
 /// The model-registry residency/prepare counters ride along with the
 /// pool counters in the `status` op; they are defined beside
 /// [`crate::model::registry::ModelRegistry`] (the model layer must not

@@ -2,17 +2,20 @@
 //! multi-lane multi-variant model serving (registry + lane pool + bounded
 //! admission + TCP server), and metrics.
 
+pub mod conn;
 pub mod eval;
+pub(crate) mod event;
 pub mod lanes;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
+pub use conn::ConnState;
 pub use eval::{eval_pjrt, eval_prepared, eval_reference, EvalResult};
-pub use lanes::{LanePool, LanePoolConfig, Prediction, ServeError};
+pub use lanes::{LanePool, LanePoolConfig, Prediction, ReplyCallback, ServeError};
 pub use metrics::{
-    AccuracyCounter, LaneSnapshot, LatencyRecorder, LatencySummary, PoolCounters, PoolSnapshot,
-    RegistryCounters, RegistrySnapshot, VariantSnapshot,
+    AccuracyCounter, LaneSnapshot, LatencyRecorder, LatencySummary, LoopCounters, PoolCounters,
+    PoolSnapshot, RegistryCounters, RegistrySnapshot, VariantSnapshot,
 };
 pub use scheduler::{lambda_grid, run_sweep, QuantJob, QuantOutcome};
-pub use server::{Client, Server, ServerConfig};
+pub use server::{respond_line, Client, Server, ServerConfig, ServerStats};

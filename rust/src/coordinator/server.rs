@@ -1,6 +1,6 @@
 //! TCP model server: newline-delimited JSON protocol over plain sockets
-//! (tokio is unavailable offline; a thread-per-connection accept loop over
-//! the lane pool serves the same role).
+//! (tokio is unavailable offline; an epoll event loop over the lane pool
+//! serves the same role).
 //!
 //! Request (one line):
 //!   {"op": "classify", "dataset": "cifar10-sim", "index": 7}
@@ -20,69 +20,115 @@
 //! its first request (DF-MPC is a closed-form weight sweep — cheap enough
 //! to run at load time) and `status` reports per-variant residency.
 //!
-//! Connections beyond `max_conns` are rejected with a one-line
-//! `conn_limit` error before close. Request lines are capped at
-//! `max_request_bytes` (default 8 MB): a client that streams bytes
-//! without ever sending `\n` gets a one-line `bad_request` rejection and
-//! its connection dropped instead of growing the line buffer without
-//! bound. Handler threads are tracked (not detached): they poll the
-//! server's stop flag through a read timeout, so [`Server::stop`] drains
-//! and joins every handler in bounded time even when clients keep their
-//! sockets open.
+//! **Connection layer** (rebuilt in PR 8, see
+//! [`crate::coordinator::event`]): a fixed number of event-loop threads
+//! (`--event-threads`, default 2) own all connections via nonblocking
+//! sockets + epoll, so `--max-conns` is purely an FD budget — 10k+
+//! concurrent clients do not mean 10k threads, and an idle connection
+//! costs one epoll registration, not a 100ms-polling handler thread.
+//! Requests may be **pipelined**: a client can send many lines without
+//! waiting; replies always come back in request order (completions are
+//! resequenced per connection). Connections beyond `max_conns` are
+//! rejected with a one-line `conn_limit` error before close. Request
+//! lines are capped at `max_request_bytes` (default 8 MB): a client that
+//! streams bytes without ever sending `\n` gets a one-line `bad_request`
+//! rejection and its connection dropped instead of growing the line
+//! buffer without bound.
+//!
+//! [`Server::stop`] (also the SIGINT path) stops accepting, lets
+//! in-flight requests complete and their replies flush, and joins the
+//! loop threads — idle connections add microseconds, not 100ms-poll
+//! rounds, to shutdown.
 
-use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::lanes::LanePool;
+use crate::coordinator::event::{EventLoop, LoopCfg, LoopMsg, LoopSeed, LoopShared};
+use crate::coordinator::lanes::{LanePool, Prediction, ReplyCallback};
+use crate::coordinator::metrics::LoopCounters;
 use crate::data::synth;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
-/// How often blocked handler threads wake to poll the stop flag.
-const CONN_POLL: Duration = Duration::from_millis(100);
+/// How long `stop` waits for connections that still owe bytes (slow
+/// readers) before force-closing them. Idle and promptly-drained
+/// connections never wait on this.
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
 
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
-    /// concurrent connections beyond this are rejected with `conn_limit`
+    /// FD budget: concurrent connections beyond this are rejected with
+    /// `conn_limit` (no longer a thread count — connections are
+    /// multiplexed onto `event_threads` loops)
     pub max_conns: usize,
     /// longest accepted request line in bytes (newline included); a line
     /// that grows past this gets a `bad_request` rejection and the
     /// connection dropped, bounding per-connection memory
     pub max_request_bytes: usize,
+    /// event-loop threads owning all connections (clamped to ≥1)
+    pub event_threads: usize,
+    /// pipelined in-flight requests per connection before the loop stops
+    /// reading from it (TCP backpressure takes over); bounds per-client
+    /// admission-queue pressure and reply-buffer memory
+    pub max_pipeline: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_conns: 256, max_request_bytes: 8 << 20 }
+        ServerConfig {
+            max_conns: 256,
+            max_request_bytes: 8 << 20,
+            event_threads: 2,
+            max_pipeline: 64,
+        }
     }
 }
 
-#[derive(Default)]
 pub struct ServerStats {
     pub requests: AtomicU64,
     pub errors: AtomicU64,
+    /// accepted connections currently open (the FD-budget gauge)
     pub active_conns: AtomicUsize,
     pub rejected_conns: AtomicU64,
     /// request lines dropped for exceeding `max_request_bytes`
     pub oversized_reqs: AtomicU64,
+    /// event-loop front-end counters (wakeups, per-loop connection
+    /// gauges, pending writes, pipelining high-water mark)
+    pub loops: LoopCounters,
+}
+
+impl ServerStats {
+    /// Fresh counters for a server with `event_threads` loop threads.
+    pub fn new(event_threads: usize) -> ServerStats {
+        ServerStats {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            active_conns: AtomicUsize::new(0),
+            rejected_conns: AtomicU64::new(0),
+            oversized_reqs: AtomicU64::new(0),
+            loops: LoopCounters::new(event_threads),
+        }
+    }
 }
 
 pub struct Server {
     pub addr: std::net::SocketAddr,
     pub stats: Arc<ServerStats>,
     stop: Arc<AtomicBool>,
-    handle: Option<thread::JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    loops: Vec<Arc<LoopShared>>,
+    handles: Vec<thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0") and serve the lane pool's model.
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve the lane pool's model
+    /// on `cfg.event_threads` event-loop threads. Loop 0 owns the
+    /// listener; admitted connections are distributed round-robin.
     pub fn start(
         addr: &str,
         pool: Arc<LanePool>,
@@ -92,76 +138,67 @@ impl Server {
         let listener = TcpListener::bind(addr).context("binding server")?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stats = Arc::new(ServerStats::default());
+        let event_threads = cfg.event_threads.clamp(1, 64);
+        let stats = Arc::new(ServerStats::new(event_threads));
         let stop = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-        let max_conns = cfg.max_conns.max(1);
-        let max_request = cfg.max_request_bytes.max(1);
-        let (stats2, stop2, conns2) = (Arc::clone(&stats), Arc::clone(&stop), Arc::clone(&conns));
-        let handle = thread::Builder::new()
-            .name("dfmpc-server".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            // reap finished handlers so the registry stays
-                            // bounded by the number of LIVE connections.
-                            // lint: allow(panic-path) — poison means a
-                            // handler thread panicked while pushing its
-                            // join handle; the accept loop cannot limp on
-                            // without the registry, so propagating is the
-                            // sanctioned failure mode
-                            conns2.lock().unwrap().retain(|h| !h.is_finished());
-                            if stats2.active_conns.load(Ordering::Relaxed) >= max_conns {
-                                stats2.rejected_conns.fetch_add(1, Ordering::Relaxed);
-                                reject_conn(stream, max_conns);
-                                continue;
-                            }
-                            let pool = Arc::clone(&pool);
-                            let st = Arc::clone(&stats2);
-                            let stop = Arc::clone(&stop2);
-                            let name = model_name.clone();
-                            st.active_conns.fetch_add(1, Ordering::Relaxed);
-                            let spawned = thread::Builder::new().name("dfmpc-conn".into()).spawn(
-                                move || {
-                                    let _ =
-                                        handle_conn(stream, &pool, &st, &name, &stop, max_request);
-                                    st.active_conns.fetch_sub(1, Ordering::Relaxed);
-                                },
-                            );
-                            match spawned {
-                                // lint: allow(panic-path) — same poison
-                                // rationale as the reap above: no handler
-                                // registry, no safe accept loop
-                                Ok(h) => conns2.lock().unwrap().push(h),
-                                Err(_) => {
-                                    stats2.active_conns.fetch_sub(1, Ordering::Relaxed);
-                                }
-                            }
-                        }
-                        Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
-                            thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
+        let ctx = Arc::new(RequestCtx {
+            pool,
+            stats: Arc::clone(&stats),
+            model_name,
+        });
+        let loop_cfg = LoopCfg {
+            max_conns: cfg.max_conns.max(1),
+            max_request: cfg.max_request_bytes.max(1),
+            max_pipeline: cfg.max_pipeline.max(1),
+            drain_grace: DRAIN_GRACE,
+        };
+        let mut loops: Vec<Arc<LoopShared>> = Vec::with_capacity(event_threads);
+        for _ in 0..event_threads {
+            loops.push(Arc::new(LoopShared::new().context("creating loop wakeup eventfd")?));
+        }
+        let mut listener = Some(listener);
+        let mut handles = Vec::with_capacity(event_threads);
+        for idx in 0..event_threads {
+            let seed = LoopSeed {
+                idx,
+                cfg: loop_cfg,
+                shared: Arc::clone(&loops[idx]),
+                peers: loops.clone(),
+                stop: Arc::clone(&stop),
+                listener: listener.take(),
+                ctx: Arc::clone(&ctx),
+                stats: Arc::clone(&stats),
+            };
+            let el = match EventLoop::new(seed) {
+                Ok(el) => el,
+                Err(e) => {
+                    abort_start(&stop, &loops, handles);
+                    return Err(e).context("initializing event loop");
                 }
-            })
-            .context("spawning server thread")?;
-        Ok(Server { addr: local, stats, stop, handle: Some(handle), conns })
+            };
+            let spawned = thread::Builder::new()
+                .name(format!("dfmpc-evloop-{idx}"))
+                .spawn(move || el.run());
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    abort_start(&stop, &loops, handles);
+                    return Err(e).context("spawning event-loop thread");
+                }
+            }
+        }
+        Ok(Server { addr: local, stats, stop, loops, handles })
     }
 
-    /// Stop accepting, then drain: handler threads observe the stop flag
-    /// within [`CONN_POLL`] and are joined — no detached threads survive.
+    /// Stop accepting, drain, and join every loop thread: in-flight
+    /// requests complete and their replies flush; only a connection
+    /// whose client never reads can hold a loop up to [`DRAIN_GRACE`].
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        for l in &self.loops {
+            l.wake();
         }
-        // lint: allow(panic-path) — shutdown path, not request path:
-        // poison here means the accept loop already panicked and the
-        // process is failing; joining cannot proceed without the registry
-        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
-        for h in handles {
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -173,14 +210,20 @@ impl Drop for Server {
     }
 }
 
-/// One-line structured rejection for connections over the limit.
-fn reject_conn(stream: TcpStream, max_conns: usize) {
-    let mut stream = stream;
-    // accepted sockets may inherit the listener's non-blocking flag on
-    // some platforms; the rejection must not be silently dropped, and a
-    // non-reading client must not block the accept loop either
-    stream.set_nonblocking(false).ok();
-    stream.set_write_timeout(Some(CONN_POLL)).ok();
+/// Partially-started server cleanup: stop and join what already runs so
+/// a failed `start` leaks neither threads nor the bound listener.
+fn abort_start(stop: &AtomicBool, loops: &[Arc<LoopShared>], handles: Vec<thread::JoinHandle<()>>) {
+    stop.store(true, Ordering::Relaxed);
+    for l in loops {
+        l.wake();
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// The one-line `conn_limit` rejection (trailing newline included).
+pub(crate) fn conn_limit_line(max_conns: usize) -> String {
     let msg = Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::str(format!("connection limit ({max_conns}) reached; retry later"))),
@@ -188,120 +231,98 @@ fn reject_conn(stream: TcpStream, max_conns: usize) {
     ]);
     let mut out = msg.dump();
     out.push('\n');
-    let _ = stream.write_all(out.as_bytes());
-    // stream drops -> close
+    out
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    pool: &LanePool,
-    stats: &ServerStats,
-    model_name: &str,
-    stop: &AtomicBool,
-    max_request: usize,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    stream.set_nonblocking(false).ok();
-    // the read timeout is what lets this thread notice `stop` while a
-    // client holds the connection open without sending anything; the
-    // write timeout bounds handlers against clients that never read, so
-    // `Server::stop` can always join this thread
-    stream.set_read_timeout(Some(CONN_POLL)).ok();
-    stream.set_write_timeout(Some(CONN_POLL)).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
-    // byte buffer, NOT String + read_line: on a timeout mid-request,
-    // read_until keeps the partial bytes for the next poll, whereas
-    // read_line would discard bytes that end mid-UTF-8-sequence
-    let mut buf: Vec<u8> = Vec::new();
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            return Ok(());
-        }
-        // The cap must bound every read, not just completed lines: bare
-        // `read_until` returns only on newline/EOF/timeout, so a fast
-        // newline-less flood would grow `buf` at line rate without ever
-        // surfacing here (and starve the stop-flag poll). `take` caps
-        // each call one byte past the limit, which the length check
-        // below detects as oversized.
-        let limit = (max_request - buf.len()).saturating_add(1) as u64;
-        match reader.by_ref().take(limit).read_until(b'\n', &mut buf) {
-            Ok(0) if buf.is_empty() => return Ok(()), // client closed
-            // newline found, inner EOF (partial final line — answer it,
-            // the next iteration sees the close), or limit exhausted
-            // (caught as oversized below)
-            Ok(_) => {
-                if buf.len() > max_request {
-                    return reject_oversized(&mut reader, &mut stream, stats, stop, max_request);
-                }
-                let line = String::from_utf8_lossy(&buf);
-                let resp = handle_request(line.trim(), pool, stats, model_name);
-                let mut out = resp.dump();
-                out.push('\n');
-                match stream.write_all(out.as_bytes()) {
-                    Ok(()) => {}
-                    // a client that stopped reading gets dropped, not
-                    // waited on (its response stream is corrupt anyway
-                    // after a partial write)
-                    Err(e)
-                        if e.kind() == ErrorKind::WouldBlock
-                            || e.kind() == ErrorKind::TimedOut =>
-                    {
-                        return Ok(())
+/// What one parsed request line turns into on the event path.
+pub(crate) enum LineAction {
+    /// reply rendered synchronously (status, every rejection)
+    Respond(String),
+    /// admitted to the lanes: the completion callback will post a
+    /// [`LoopMsg::Complete`] for this connection/slot
+    Pending,
+}
+
+/// Request semantics shared by every loop thread: how one line becomes a
+/// reply. Owns the pool handle, the counters, and the served model name.
+pub(crate) struct RequestCtx {
+    pub pool: Arc<LanePool>,
+    pub stats: Arc<ServerStats>,
+    pub model_name: String,
+}
+
+impl RequestCtx {
+    /// Process one request line for connection `token`, reply slot
+    /// `seq`. Synchronous ops answer in place; classify is admitted with
+    /// a completion callback that renders the reply on the lane worker
+    /// and posts it back to `origin` (the owning loop's inbox).
+    pub(crate) fn process(
+        &self,
+        line: &str,
+        origin: &Arc<LoopShared>,
+        token: u64,
+        seq: u64,
+    ) -> LineAction {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let req = match Json::parse(line) {
+            Ok(r) => r,
+            Err(e) => return self.respond_err("bad_request", &format!("bad json: {e}")),
+        };
+        match req.get("op").and_then(Json::as_str) {
+            Some("status") => LineAction::Respond(
+                status_json(&self.pool, &self.stats, &self.model_name).dump(),
+            ),
+            Some("classify") => {
+                let image = match request_image(&req) {
+                    Ok(t) => t,
+                    Err(e) => return self.respond_err("bad_request", &format!("{e:#}")),
+                };
+                let variant: Option<String> = match req.get("model") {
+                    None => None,
+                    Some(Json::Str(s)) => Some(s.clone()),
+                    // a non-string key must not silently fall back to the
+                    // default variant — the client asked for SOMETHING else
+                    Some(_) => {
+                        return self.respond_err(
+                            "bad_request",
+                            "'model' must be a string variant key (\"<model>@<method>\")",
+                        )
                     }
-                    Err(e) => return Err(e.into()),
+                };
+                let stats = Arc::clone(&self.stats);
+                let origin = Arc::clone(origin);
+                let done: ReplyCallback = Box::new(move |result| {
+                    // runs on a lane worker thread; must not block or
+                    // panic: render the line, post it, nothing else
+                    let json = match result {
+                        Ok(p) => prediction_json(&p),
+                        Err(e) => error_json(&stats, e.kind(), &e.to_string()),
+                    };
+                    origin.post(LoopMsg::Complete { token, seq, line: json.dump() });
+                });
+                match self.pool.classify_notify_variant(variant.as_deref(), image, done) {
+                    Ok(()) => LineAction::Pending,
+                    Err(e) => self.respond_err(e.kind(), &e.to_string()),
                 }
-                buf.clear();
             }
-            // timeout poll: partial bytes stay in `buf` for the next
-            // iteration (the take cap above bounds how many)
-            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-                if buf.len() > max_request {
-                    return reject_oversized(&mut reader, &mut stream, stats, stop, max_request);
-                }
-            }
-            Err(e) => return Err(e.into()),
+            Some(other) => self.respond_err("bad_request", &format!("unknown op '{other}'")),
+            None => self.respond_err("bad_request", "missing op"),
         }
     }
-}
 
-/// A request line grew past the cap: count it, send one structured
-/// `bad_request` line, and drop the connection (returning unwinds the
-/// handler, closing the socket). The partial line is unrecoverable — the
-/// client would need to resync on `\n` anyway — so dropping is the only
-/// safe continuation. Before responding, drain what the client already
-/// sent — bounded by a byte budget, a wall-clock deadline, and the stop
-/// flag, never at an attacker's line rate forever — so a
-/// well-behaved-but-oversized client gets an orderly close that delivers
-/// the error instead of an RST discarding it along with the unread
-/// bytes, while `Server::stop` still joins this handler in bounded time.
-fn reject_oversized(
-    reader: &mut BufReader<TcpStream>,
-    stream: &mut TcpStream,
-    stats: &ServerStats,
-    stop: &AtomicBool,
-    max_request: usize,
-) -> Result<()> {
-    stats.oversized_reqs.fetch_add(1, Ordering::Relaxed);
-    let mut discard = [0u8; 8192];
-    let mut budget = max_request.saturating_mul(4);
-    let deadline = Instant::now() + CONN_POLL * 10;
-    while budget > 0 && !stop.load(Ordering::Relaxed) && Instant::now() < deadline {
-        match reader.read(&mut discard) {
-            Ok(0) => break, // client closed its side
-            Ok(n) => budget = budget.saturating_sub(n),
-            Err(_) => break, // timeout (client idle) or broken socket
-        }
+    fn respond_err(&self, kind: &str, msg: &str) -> LineAction {
+        LineAction::Respond(error_json(&self.stats, kind, msg).dump())
     }
-    let resp = error_json(
-        stats,
-        "bad_request",
-        &format!("request line exceeds {max_request} bytes; connection dropped"),
-    );
-    let mut out = resp.dump();
-    out.push('\n');
-    let _ = stream.write_all(out.as_bytes());
-    Ok(())
+
+    /// The structured rejection for a request line that blew the cap.
+    pub(crate) fn oversized_line(&self, max_request: usize) -> String {
+        error_json(
+            &self.stats,
+            "bad_request",
+            &format!("request line exceeds {max_request} bytes; connection dropped"),
+        )
+        .dump()
+    }
 }
 
 fn error_json(stats: &ServerStats, kind: &str, msg: &str) -> Json {
@@ -311,6 +332,29 @@ fn error_json(stats: &ServerStats, kind: &str, msg: &str) -> Json {
         ("error", Json::str(msg)),
         ("error_kind", Json::str(kind)),
     ])
+}
+
+fn prediction_json(p: &Prediction) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("class", Json::num(p.class as f64)),
+        ("confidence", Json::num(p.confidence as f64)),
+        ("latency_ms", Json::num(p.latency_ms)),
+        ("batch_size", Json::num(p.batch_size as f64)),
+        ("lane", Json::num(p.lane as f64)),
+        ("model", Json::str(p.variant.clone())),
+    ])
+}
+
+/// The wire protocol's synchronous reference semantics: parse one
+/// request line, serve it through the pool (blocking), render the reply
+/// line (no trailing newline). The event-driven front-end must produce
+/// byte-identical replies for the same request stream — the
+/// `serving_overload` suite holds it to that with an in-test
+/// thread-per-connection reference server built on this function (the
+/// shape of the retired blocking handler).
+pub fn respond_line(line: &str, pool: &LanePool, stats: &ServerStats, model_name: &str) -> String {
+    handle_request(line.trim(), pool, stats, model_name).dump()
 }
 
 fn handle_request(line: &str, pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
@@ -329,8 +373,6 @@ fn handle_request(line: &str, pool: &LanePool, stats: &ServerStats, model_name: 
             let variant = match req.get("model") {
                 None => None,
                 Some(Json::Str(s)) => Some(s.as_str()),
-                // a non-string key must not silently fall back to the
-                // default variant — the client asked for SOMETHING else
                 Some(_) => {
                     return error_json(
                         stats,
@@ -340,15 +382,7 @@ fn handle_request(line: &str, pool: &LanePool, stats: &ServerStats, model_name: 
                 }
             };
             match pool.classify_variant(variant, image) {
-                Ok(p) => Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("class", Json::num(p.class as f64)),
-                    ("confidence", Json::num(p.confidence as f64)),
-                    ("latency_ms", Json::num(p.latency_ms)),
-                    ("batch_size", Json::num(p.batch_size as f64)),
-                    ("lane", Json::num(p.lane as f64)),
-                    ("model", Json::str(p.variant)),
-                ]),
+                Ok(p) => prediction_json(&p),
                 Err(e) => error_json(stats, e.kind(), &e.to_string()),
             }
         }
@@ -375,9 +409,10 @@ fn request_image(req: &Json) -> Result<Tensor> {
     Ok(synth::render_image(spec.eval_seed, index, spec.classes).0)
 }
 
-/// `status` op: server counters plus the lane pool's admission/queue
-/// state and (on registry-backed pools) per-variant model residency — the
-/// serving stack's observability surface.
+/// `status` op: server counters (including the event-loop front-end)
+/// plus the lane pool's admission/queue state and (on registry-backed
+/// pools) per-variant model residency — the serving stack's
+/// observability surface.
 fn status_json(pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
     let snap = pool.snapshot();
     let mut fields = vec![
@@ -389,6 +424,25 @@ fn status_json(pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
         ("active_conns", Json::num(stats.active_conns.load(Ordering::Relaxed) as f64)),
         ("rejected_conns", Json::num(stats.rejected_conns.load(Ordering::Relaxed) as f64)),
         ("oversized_reqs", Json::num(stats.oversized_reqs.load(Ordering::Relaxed) as f64)),
+        ("event_threads", Json::num(stats.loops.event_threads() as f64)),
+        ("loop_wakeups", Json::num(stats.loops.wakeups.load(Ordering::Relaxed) as f64)),
+        ("accepted_conns", Json::num(stats.loops.accepted_conns.load(Ordering::Relaxed) as f64)),
+        (
+            "pending_write_conns",
+            Json::num(stats.loops.pending_write_conns.load(Ordering::Relaxed) as f64),
+        ),
+        ("pipelined_peak", Json::num(stats.loops.pipelined_peak.load(Ordering::Relaxed) as f64)),
+        (
+            "loop_conns",
+            Json::Arr(
+                stats
+                    .loops
+                    .per_loop()
+                    .iter()
+                    .map(|c| Json::num(c.load(Ordering::Relaxed) as f64))
+                    .collect(),
+            ),
+        ),
         ("lanes", Json::num(pool.lane_count() as f64)),
         ("queue_depth", Json::num(snap.queue_depth as f64)),
         ("queue_limit", Json::num(pool.queue_limit() as f64)),

@@ -7,7 +7,7 @@
 //!   sweep    --model ID --methods M1,M2,... [--engine ...]
 //!   serve    --model ID --method M [--engine pjrt|ref] [--addr HOST:PORT]
 //!            [--max-batch N] [--max-wait-ms T] [--lanes N]
-//!            [--queue-depth N] [--max-conns N]
+//!            [--queue-depth N] [--max-conns N] [--event-threads N]
 //!            [--preload K1,K2,...] [--model-budget-mb N]
 //!   lint     [--waivers]            run the repo's static-analysis rules
 //!            (docs/INVARIANTS.md) over its own sources; exits nonzero on
@@ -224,7 +224,10 @@ fn serve(args: &Args) -> Result<()> {
     let max_wait_ms = args.usize("max-wait-ms", 2);
     let n_lanes = args.usize("lanes", 1);
     let queue_depth = args.usize("queue-depth", 128);
+    // --max-conns is an FD budget, not a thread count: connections are
+    // multiplexed onto --event-threads epoll loops
     let max_conns = args.usize("max-conns", 256);
+    let event_threads = args.usize("event-threads", ServerConfig::default().event_threads);
     let budget_mb = args.usize("model-budget-mb", 1024);
 
     // the registry over the FP32 base: every served variant — the default
@@ -298,7 +301,7 @@ fn serve(args: &Args) -> Result<()> {
         &addr,
         Arc::clone(&pool),
         format!("{}+{}", model.entry.id, method.name()),
-        ServerConfig { max_conns, ..ServerConfig::default() },
+        ServerConfig { max_conns, event_threads, ..ServerConfig::default() },
     )?;
     // ref lanes canonicalize any alias spelling at admission; PJRT lanes
     // serve exactly the preloaded executables, so the example must be a
@@ -310,6 +313,7 @@ fn serve(args: &Args) -> Result<()> {
     };
     println!(
         "serving {default_key} (default) on {} — {} lane(s), queue depth {}, max {} conns\n\
+         {event_threads} event-loop thread(s) multiplex all connections (epoll; pipelining OK)\n\
          {} variant(s) resident, budget {} MB; request a variant with\n  \
          {{\"op\": \"classify\", \"model\": \"{example_key}\", \"dataset\": \"{}\", \"index\": 0}}\n\
          Ctrl-C drains in-flight requests and exits",
@@ -332,7 +336,7 @@ fn serve(args: &Args) -> Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(100));
     }
     eprintln!("SIGINT: draining lanes and shutting down");
-    server.stop(); // joins every connection handler
+    server.stop(); // drains connections and joins the event loops
     pool.stop(); // drains the admission queue through the lanes
     let snap = pool.snapshot();
     let reg = registry.snapshot();

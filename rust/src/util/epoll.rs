@@ -1,0 +1,422 @@
+//! Socket-readiness substrate for the event-driven serving front-end: a
+//! thin raw-`libc` epoll + eventfd shim (no new crates — the
+//! vendored-`anyhow` precedent; libc is always linked on unix targets,
+//! so the handful of symbols are declared directly, like
+//! [`crate::util::signal`] does for `signal(2)`).
+//!
+//! Exposes a deliberately tiny safe API:
+//!
+//! - [`Poller`]: an epoll instance. Register an fd with a `u64` token and
+//!   an interest mask ([`EV_READ`] / [`EV_WRITE`]), then [`Poller::wait`]
+//!   for [`Event`]s. Level-triggered — an event repeats every wait until
+//!   the condition is consumed — because level-triggering cannot lose
+//!   wakeups to a partial drain, which keeps the connection state machine
+//!   obviously correct.
+//! - [`WakeFd`]: an eventfd the lane workers write to hand completed
+//!   replies back into a loop thread blocked in `epoll_wait` (the
+//!   "self-pipe trick", minus the pipe).
+//! - [`fd_soft_limit`]: `getrlimit(RLIMIT_NOFILE)`, so the 10k-connection
+//!   flood test can size itself to the environment instead of dying on
+//!   EMFILE.
+//!
+//! Linux-only by design (epoll IS the Linux readiness queue; CI and the
+//! serving deployments are Linux). Elsewhere [`Poller::new`] returns a
+//! structured `Unsupported` error, which fails `Server::start` cleanly —
+//! the compute stack (quantize/eval/sweep) never touches this module.
+//!
+//! This file is on the `unsafe-audit` allowlist: every `unsafe` block
+//! below is a direct libc call with a `// SAFETY:` justification, and the
+//! rest of the serving stack stays safe Rust.
+
+/// Interest bit: readiness for reading (also set on peer hangup, so a
+/// closed connection always surfaces).
+pub const EV_READ: u32 = 1;
+/// Interest bit: readiness for writing.
+pub const EV_WRITE: u32 = 2;
+
+/// One readiness notification from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// the token the fd was registered with
+    pub token: u64,
+    /// the fd is readable (data, EOF, or peer hangup to consume)
+    pub readable: bool,
+    /// the fd is writable
+    pub writable: bool,
+    /// error/hangup condition (reported even with an empty interest mask)
+    pub closed: bool,
+}
+
+pub use imp::{fd_soft_limit, Poller, WakeFd};
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::Event;
+    use std::io;
+
+    // The kernel ABI structs and the six symbols the shim needs. libc is
+    // always linked on Linux; declaring the symbols directly keeps the
+    // build offline (no `libc` crate).
+    //
+    // `epoll_event` is packed on x86_64 only — the kernel declares it
+    // `__attribute__((packed))` there so the 32-bit `events` field is not
+    // padded before the 64-bit data word. Fields are only ever read by
+    // value (never by reference), so the unaligned layout is safe to use.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn eventfd(initval: u32, flags: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        fn close(fd: i32) -> i32;
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+    }
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EFD_NONBLOCK: i32 = 0o4000;
+    const EFD_CLOEXEC: i32 = 0o2000000;
+    const RLIMIT_NOFILE: i32 = 7;
+    /// events decoded per `epoll_wait` call; more stay queued in the
+    /// kernel and surface on the next wait (level-triggered)
+    const WAIT_BATCH: usize = 1024;
+
+    fn interest_bits(interest: u32) -> u32 {
+        let mut bits = EPOLLRDHUP; // always learn about half-closed peers
+        if interest & super::EV_READ != 0 {
+            bits |= EPOLLIN;
+        }
+        if interest & super::EV_WRITE != 0 {
+            bits |= EPOLLOUT;
+        }
+        bits
+    }
+
+    /// A level-triggered epoll instance. All methods take `&self`: the
+    /// kernel serializes epoll_ctl/epoll_wait internally, so the owning
+    /// loop thread and `Drop` need no user-space locking.
+    pub struct Poller {
+        epfd: i32,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            // SAFETY: epoll_create1 takes no pointers; the returned fd is
+            // owned exclusively by this Poller and closed once, in Drop.
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: i32, token: u64, interest: u32) -> io::Result<()> {
+            let mut ev = EpollEvent { events: interest_bits(interest), data: token };
+            // SAFETY: `ev` is a live stack value for the duration of the
+            // call; the kernel copies it before returning. `self.epfd` is
+            // a valid epoll fd for the lifetime of this Poller, and `fd`
+            // validity is checked by the kernel (EBADF on a stale fd).
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Register `fd` under `token` with the given interest mask.
+        pub fn add(&self, fd: i32, token: u64, interest: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        /// Replace the interest mask of a registered fd. `interest` may
+        /// be 0: the fd stays registered and still reports error/hangup.
+        pub fn modify(&self, fd: i32, token: u64, interest: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        /// Deregister `fd` (do this before closing it, so the kernel
+        /// entry never outlives the connection it described).
+        pub fn del(&self, fd: i32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Block until readiness (or `timeout_ms`; negative blocks
+        /// indefinitely), decoding into `out` (cleared first). EINTR is
+        /// retried — signal delivery is not readiness.
+        pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            let mut buf = [EpollEvent { events: 0, data: 0 }; WAIT_BATCH];
+            loop {
+                // SAFETY: `buf` is a live stack array of WAIT_BATCH
+                // entries and the kernel writes at most WAIT_BATCH of
+                // them; `self.epfd` is a valid epoll fd for the lifetime
+                // of this Poller.
+                let n = unsafe {
+                    epoll_wait(self.epfd, buf.as_mut_ptr(), WAIT_BATCH as i32, timeout_ms)
+                };
+                if n < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    return Err(e);
+                }
+                for entry in buf.iter().take(n as usize) {
+                    // copy out of the (possibly packed) struct by value;
+                    // references into it would be unaligned on x86_64
+                    let ev = *entry;
+                    let bits = ev.events;
+                    out.push(Event {
+                        token: ev.data,
+                        readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0,
+                        writable: bits & EPOLLOUT != 0,
+                        closed: bits & (EPOLLERR | EPOLLHUP) != 0,
+                    });
+                }
+                return Ok(());
+            }
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            // SAFETY: `self.epfd` is a live epoll fd owned exclusively by
+            // this Poller; this is its single close.
+            let _ = unsafe { close(self.epfd) };
+        }
+    }
+
+    /// A nonblocking eventfd: any thread may [`WakeFd::wake`] it to pull
+    /// a loop thread out of `epoll_wait`; the loop [`WakeFd::drain`]s it
+    /// before reading its inbox, so a wake posted after the drain leaves
+    /// the counter nonzero and the next wait returns immediately — no
+    /// lost wakeups.
+    pub struct WakeFd {
+        fd: i32,
+    }
+
+    impl WakeFd {
+        pub fn new() -> io::Result<WakeFd> {
+            // SAFETY: eventfd takes no pointers; the returned fd is owned
+            // exclusively by this WakeFd and closed once, in Drop.
+            let fd = unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(WakeFd { fd })
+        }
+
+        /// The fd to register with a [`Poller`] under [`super::EV_READ`].
+        pub fn fd(&self) -> i32 {
+            self.fd
+        }
+
+        /// Add 1 to the counter (readable until drained). Nonblocking; a
+        /// saturated counter (u64::MAX-1 pending wakes) would EAGAIN,
+        /// which is safely ignorable — the receiver is already awake.
+        pub fn wake(&self) {
+            let one: u64 = 1;
+            // SAFETY: `one` is a live 8-byte stack value; eventfd writes
+            // read exactly 8 bytes. `self.fd` is a valid eventfd for the
+            // lifetime of this WakeFd.
+            let _ = unsafe { write(self.fd, &one as *const u64 as *const u8, 8) };
+        }
+
+        /// Reset the counter to 0 (one 8-byte read consumes it all).
+        pub fn drain(&self) {
+            let mut buf = [0u8; 8];
+            // SAFETY: `buf` is a live 8-byte stack buffer; eventfd reads
+            // write exactly 8 bytes. `self.fd` is a valid eventfd for the
+            // lifetime of this WakeFd.
+            while unsafe { read(self.fd, buf.as_mut_ptr(), 8) } == 8 {}
+        }
+    }
+
+    impl Drop for WakeFd {
+        fn drop(&mut self) {
+            // SAFETY: `self.fd` is a live eventfd owned exclusively by
+            // this WakeFd; this is its single close.
+            let _ = unsafe { close(self.fd) };
+        }
+    }
+
+    /// The process's soft open-file limit (`RLIMIT_NOFILE`), so the flood
+    /// test can size its connection count to the environment.
+    pub fn fd_soft_limit() -> Option<u64> {
+        let mut r = RLimit { cur: 0, max: 0 };
+        // SAFETY: `r` is a live stack value the kernel fills; the
+        // resource constant is valid on Linux.
+        let rc = unsafe { getrlimit(RLIMIT_NOFILE, &mut r) };
+        if rc == 0 {
+            Some(r.cur)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod imp {
+    //! Non-Linux stub: construction fails with `Unsupported`, which
+    //! `Server::start` surfaces as a structured error. No `unsafe` here.
+    use super::Event;
+    use std::io;
+
+    fn unsupported() -> io::Error {
+        io::Error::new(
+            io::ErrorKind::Unsupported,
+            "the event-driven server requires Linux epoll; build/serve on a Linux host",
+        )
+    }
+
+    pub struct Poller {}
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Err(unsupported())
+        }
+
+        pub fn add(&self, _fd: i32, _token: u64, _interest: u32) -> io::Result<()> {
+            Err(unsupported())
+        }
+
+        pub fn modify(&self, _fd: i32, _token: u64, _interest: u32) -> io::Result<()> {
+            Err(unsupported())
+        }
+
+        pub fn del(&self, _fd: i32) -> io::Result<()> {
+            Err(unsupported())
+        }
+
+        pub fn wait(&self, _out: &mut Vec<Event>, _timeout_ms: i32) -> io::Result<()> {
+            Err(unsupported())
+        }
+    }
+
+    pub struct WakeFd {}
+
+    impl WakeFd {
+        pub fn new() -> io::Result<WakeFd> {
+            Err(unsupported())
+        }
+
+        pub fn fd(&self) -> i32 {
+            -1
+        }
+
+        pub fn wake(&self) {}
+
+        pub fn drain(&self) {}
+    }
+
+    pub fn fd_soft_limit() -> Option<u64> {
+        None
+    }
+}
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn wakefd_roundtrip_and_level_trigger() {
+        let poller = Poller::new().expect("epoll_create1");
+        let wake = WakeFd::new().expect("eventfd");
+        poller.add(wake.fd(), 7, EV_READ).expect("add wakefd");
+
+        // nothing pending: a zero-timeout wait returns no events
+        let mut events = Vec::new();
+        poller.wait(&mut events, 0).expect("wait");
+        assert!(events.is_empty(), "{events:?}");
+
+        // one wake -> readable, and level-triggered until drained
+        wake.wake();
+        poller.wait(&mut events, 1000).expect("wait");
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+        poller.wait(&mut events, 0).expect("wait");
+        assert_eq!(events.len(), 1, "level-triggered: still readable before drain");
+        wake.drain();
+        poller.wait(&mut events, 0).expect("wait");
+        assert!(events.is_empty(), "drained: no longer readable");
+    }
+
+    #[test]
+    fn socket_readiness_and_interest_masks() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let mut client = TcpStream::connect(addr).expect("connect");
+        let (server, _) = listener.accept().expect("accept");
+        server.set_nonblocking(true).expect("nonblocking");
+
+        let poller = Poller::new().expect("epoll");
+        let fd = server.as_raw_fd();
+        poller.add(fd, 42, EV_READ).expect("add");
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, 0).expect("wait");
+        assert!(events.is_empty(), "no data yet: {events:?}");
+
+        client.write_all(b"hi").expect("client write");
+        poller.wait(&mut events, 1000).expect("wait");
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 42);
+        assert!(events[0].readable && !events[0].closed);
+
+        // empty interest: data no longer reported...
+        poller.modify(fd, 42, 0).expect("modify");
+        poller.wait(&mut events, 0).expect("wait");
+        assert!(events.is_empty(), "interest cleared: {events:?}");
+
+        // ...but write-readiness is, once asked for
+        poller.modify(fd, 42, EV_WRITE).expect("modify");
+        poller.wait(&mut events, 1000).expect("wait");
+        assert_eq!(events.len(), 1);
+        assert!(events[0].writable);
+
+        // peer hangup surfaces as readable (EOF to consume)
+        poller.modify(fd, 42, EV_READ).expect("modify");
+        drop(client);
+        poller.wait(&mut events, 1000).expect("wait");
+        assert_eq!(events.len(), 1);
+        assert!(events[0].readable);
+        let mut buf = [0u8; 16];
+        let mut s = &server;
+        let n = s.read(&mut buf).expect("read");
+        assert_eq!(&buf[..n], b"hi");
+
+        poller.del(fd).expect("del");
+    }
+
+    #[test]
+    fn fd_limit_is_queryable() {
+        let lim = fd_soft_limit().expect("getrlimit");
+        assert!(lim >= 64, "implausible RLIMIT_NOFILE: {lim}");
+    }
+}

@@ -1,8 +1,10 @@
 //! Hand-rolled substrates: JSON, CLI args, RNG, thread pool, signals,
-//! timing. (serde/clap/rand/tokio/criterion are unavailable in the
-//! offline sandbox — DESIGN.md §2 documents each substitution.)
+//! epoll readiness, timing. (serde/clap/rand/tokio/criterion/mio are
+//! unavailable in the offline sandbox — DESIGN.md §2 documents each
+//! substitution.)
 
 pub mod args;
+pub mod epoll;
 pub mod json;
 pub mod rng;
 pub mod signal;

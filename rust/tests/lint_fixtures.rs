@@ -61,6 +61,31 @@ fn unsafe_audit_accepts_documented_and_waived() {
 }
 
 #[test]
+fn unsafe_audit_allowlists_the_epoll_shim_only() {
+    // the FFI-shim idiom lints clean under the allowlisted epoll path...
+    let f = lint_fixture("rust/src/util/epoll.rs", "unsafe_ffi_ok.rs");
+    assert_eq!(unwaived(&f), Vec::<String>::new());
+    // ...and the very same bytes trip the allowlist inside the event
+    // loops — the loops themselves must stay safe Rust
+    let f = lint_fixture("rust/src/coordinator/event.rs", "unsafe_ffi_ok.rs");
+    let hits = fired(&f, "unsafe-audit");
+    assert_eq!(hits.len(), 1, "{hits:?}");
+    assert_eq!(hits[0].0, 12, "{hits:?}");
+    assert!(hits[0].1.contains("allowlist"), "{hits:?}");
+}
+
+#[test]
+fn panic_path_covers_the_event_loop_modules() {
+    // a panic on a loop thread takes down every connection it owns, so
+    // the event layer joined the no-panic contract alongside server.rs
+    for path in ["rust/src/coordinator/event.rs", "rust/src/coordinator/conn.rs"] {
+        let f = lint_fixture(path, "panic_fire.rs");
+        let lines: Vec<usize> = fired(&f, "panic-path").iter().map(|(l, _)| *l).collect();
+        assert_eq!(lines, vec![4, 5, 7, 10], "panic-path must cover {path}");
+    }
+}
+
+#[test]
 fn bit_exactness_fires_on_each_hazard() {
     let f = lint_fixture("rust/src/tensor/ops.rs", "bit_exact_fire.rs");
     let hits = fired(&f, "bit-exactness");

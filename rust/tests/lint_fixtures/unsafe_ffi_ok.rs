@@ -1,0 +1,13 @@
+// Fixture: the epoll-shim idiom — raw `extern "C"` declarations plus a
+// documented call site. Clean under the allowlisted `util/epoll` path;
+// the same bytes trip the allowlist rule anywhere else in the tree.
+
+extern "C" {
+    fn close(fd: i32) -> i32;
+}
+
+pub fn close_fd(fd: i32) {
+    // SAFETY: `fd` is owned by the caller and never used after this
+    // call; taking it by value excludes double-close.
+    let _ = unsafe { close(fd) };
+}
