@@ -52,6 +52,56 @@ const SYNTH_PLAN: &str = r#"{
   "bn_of": {"s1a": "s1a_bn", "s1b": "s1b_bn"}
 }"#;
 
+/// `@auto:` search cost + budget sweep: how expensive the data-free
+/// mixed-precision search itself is (it runs at prepare time inside the
+/// server) and how the winning plan degrades as the packed-size budget
+/// tightens toward the minimum achievable assignment.
+/// `DFMPC_BENCH_ONLY=budget_sweep` runs just this part (the CI gate);
+/// partial runs skip the JSON report.
+fn budget_sweep(plan: &Plan, ckpt: &Checkpoint) -> Json {
+    use dfmpc::quant::search::search;
+    println!("\n== @auto: mixed-precision search, budget sweep ==");
+    // an unbounded budget returns the all-fp32 starting point — its
+    // fp32_bytes anchors the sweep fractions
+    let base = search(plan, ckpt, usize::MAX).unwrap();
+    let fp32 = base.fp32_bytes;
+    let r = bench("mp-search", 2, 10, || {
+        let _ = search(plan, ckpt, fp32 / 4).unwrap();
+    });
+    let mut rows: Vec<Json> = Vec::new();
+    for frac in [0.9, 0.5, 0.25, 0.15, 0.1] {
+        let budget = (fp32 as f64 * frac) as usize;
+        match search(plan, ckpt, budget) {
+            Ok(s) => {
+                println!(
+                    "  {:>3.0}% of fp32 ({budget} B): predicted {} B, {} demotions, \
+                     loss {:.3e}\n       plan {}",
+                    frac * 100.0,
+                    s.predicted_bytes,
+                    s.demotions,
+                    s.surrogate_loss,
+                    s.mp.id()
+                );
+                rows.push(Json::obj(vec![
+                    ("budget_bytes", Json::num(budget as f64)),
+                    ("predicted_bytes", Json::num(s.predicted_bytes as f64)),
+                    ("demotions", Json::num(s.demotions as f64)),
+                    ("surrogate_loss", Json::num(s.surrogate_loss)),
+                    ("plan", Json::str(s.mp.id())),
+                ]));
+            }
+            Err(e) => {
+                println!("  {:>3.0}% of fp32 ({budget} B): infeasible ({e})", frac * 100.0);
+            }
+        }
+    }
+    Json::obj(vec![
+        ("fp32_bytes", Json::num(fp32 as f64)),
+        ("search_mean_ms", Json::num(r.mean_ms)),
+        ("sweep", Json::Arr(rows)),
+    ])
+}
+
 fn main() {
     let harness = Harness::open().ok();
     let loaded = harness.as_ref().and_then(|h| h.load_model("resnet18_cifar10-sim").ok());
@@ -66,6 +116,12 @@ fn main() {
             (&synth.0, &synth.1, "synthetic-resnet-style")
         }
     };
+    // the CI gate runs only the search sweep; a partial run never writes
+    // a (partial) record to BENCH_quant.json
+    if std::env::var("DFMPC_BENCH_ONLY").as_deref() == Ok("budget_sweep") {
+        let _ = budget_sweep(plan, ckpt);
+        return;
+    }
     println!("== quantization wall-clock, {label} ({} params) ==", plan.param_count());
     let specs = [
         ("dfmpc:2/6", 5, 20),
@@ -126,6 +182,7 @@ fn main() {
             }
         }
     }
+    let sweep = budget_sweep(plan, ckpt);
     write_report(
         "quant",
         vec![
@@ -133,6 +190,7 @@ fn main() {
             ("methods", Json::Arr(rows)),
             ("dfmpc_pooled_mean_ms", Json::num(rp.mean_ms)),
             ("zeroq_over_dfmpc", Json::num(zeroq_ms / dfmpc_ms)),
+            ("budget_sweep", sweep),
         ],
     );
 }

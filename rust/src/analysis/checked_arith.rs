@@ -12,8 +12,10 @@
 use super::lexer::{Token, TokenKind};
 use super::{text_at, Finding, Source, RULE_CHECKED};
 
-/// Modules that parse untrusted DFMC/DFMQ/DFDS bytes.
-const SCOPE: &str = "data/loader model/checkpoint";
+/// Modules that parse untrusted DFMC/DFMQ/DFDS bytes — plus the
+/// `@auto:<budget>` variant-key parse surface (`quant/search`), whose
+/// budgets arrive from the network via serving admission.
+const SCOPE: &str = "data/loader model/checkpoint quant/search";
 /// Exact parse-path function names; `read_*`/`parse*` prefixes also match.
 const FNS: &str = "load batch payload_slice";
 const OPS: &str = "+ - * += -= *=";

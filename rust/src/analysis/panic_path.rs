@@ -14,8 +14,11 @@ use super::{text_at, Finding, Source, RULE_PANIC};
 /// Module keys on the no-panic contract. `coordinator/event` and
 /// `coordinator/conn` are the event-driven connection layer: a panic on
 /// a loop thread would take down EVERY connection it owns, not just one.
+/// `quant/plan` and `quant/search` are the `@auto:` serving surface: plan
+/// ids and budgets arrive from untrusted variant keys, and a panic while
+/// resolving one would poison the registry's prepare path.
 const SCOPE: &str = "coordinator/server coordinator/lanes coordinator/event coordinator/conn \
-                     data/loader model/checkpoint model/zoo util/json";
+                     data/loader model/checkpoint model/zoo util/json quant/plan quant/search";
 
 pub fn check(src: &Source, out: &mut Vec<Finding>) {
     if !src.in_module_list(SCOPE) {

@@ -490,6 +490,19 @@ fn status_json(pool: &LanePool, stats: &ServerStats, model_name: &str) -> Json {
                                 ("key", Json::str(v.key.clone())),
                                 ("bytes", Json::num(v.bytes as f64)),
                                 ("packed_bytes", Json::num(v.packed_bytes as f64)),
+                                // the executed per-layer plan (canonical
+                                // MpPlan id) and, for @auto: variants,
+                                // the search's predicted packed size —
+                                // compare against packed_bytes to audit
+                                // the cost model
+                                ("plan", Json::str(v.plan_id.clone())),
+                                (
+                                    "predicted_packed_bytes",
+                                    match v.predicted_bytes {
+                                        Some(b) => Json::num(b as f64),
+                                        None => Json::Null,
+                                    },
+                                ),
                                 ("prepare_ms", Json::num(v.prepare_ms)),
                                 (
                                     // which compute path serves each layer

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   info                               list models/datasets in the manifest
 //!   quantize --model ID --method M --out PATH [--format f32|packed]
+//!   quantize --model ID --budget-mb MB [--out PATH] [--format f32|packed]
+//!            data-free mixed-precision search: prints the winning
+//!            per-layer plan as JSON; with --out also applies and saves it
 //!   eval     --model ID --method M [--engine pjrt|ref] [--batch N] [--limit N]
 //!   sweep    --model ID --methods M1,M2,... [--engine ...]
 //!   serve    --model ID --method M [--engine pjrt|ref] [--addr HOST:PORT]
@@ -16,9 +19,11 @@
 //! `--engine ref` drives the pool-parallel pure-rust engine instead of the
 //! PJRT lane — the only serving path in builds without the `xla` feature.
 //! The reference path serves a *model registry*: any request may name a
-//! variant key `"<model>@<method>"` (e.g. `resnet20@dfmpc:2/6`) and the
-//! server quantizes that variant lazily on its first request — DF-MPC is
-//! closed-form over the weights, cheap enough to run at load time.
+//! variant key `"<model>@<spec>"` (e.g. `resnet20@dfmpc:2/6`, or
+//! `resnet20@auto:0.03` for a data-free mixed-precision search under a
+//! packed-size budget) and the server resolves that variant lazily on
+//! its first request — DF-MPC is closed-form over the weights, cheap
+//! enough to run at load time, and so is the search.
 //! `--preload` prepares extra variants eagerly; `--model-budget-mb`
 //! bounds resident variant bytes with LRU eviction.
 //!
@@ -38,7 +43,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use dfmpc::coordinator::{LanePool, LanePoolConfig, Server, ServerConfig};
-use dfmpc::harness::{run_method, variant_key, Harness};
+use dfmpc::harness::{run_method, variant_key, Harness, LoadedModel};
 use dfmpc::infer::{InferBackend, RegistryLane};
 use dfmpc::quant::Method;
 use dfmpc::report::tables::{mb, pct, Table};
@@ -120,6 +125,9 @@ fn info() -> Result<()> {
 fn quantize(args: &Args) -> Result<()> {
     let h = Harness::open()?;
     let model = h.load_model(args.get("model").context("--model required")?)?;
+    if let Some(mb) = args.get("budget-mb") {
+        return quantize_auto(&h, &model, mb, args);
+    }
     let method = Method::parse(args.get_or("method", "dfmpc:2/6"))?;
     let out = args.get("out").context("--out required")?;
     let q = method.apply_quantized(&model.plan, &model.ckpt, Some(&h.pool()))?;
@@ -147,6 +155,59 @@ fn quantize(args: &Args) -> Result<()> {
         size.mb,
         size.avg_bits
     );
+    Ok(())
+}
+
+/// `quantize --budget-mb`: run the data-free mixed-precision search and
+/// print the winning plan as one JSON object (machine-readable — the
+/// same plan `serve` would resolve for `<model>@auto:<mb>`). With
+/// `--out` the plan is also applied and saved (`--format f32|packed`).
+fn quantize_auto(h: &Harness, model: &LoadedModel, mb: &str, args: &Args) -> Result<()> {
+    use dfmpc::util::json::Json;
+    let mb = dfmpc::quant::search::parse_budget_mb(mb)?;
+    let budget = dfmpc::quant::search::budget_bytes(mb);
+    let found = dfmpc::quant::search::search(&model.plan, &model.ckpt, budget)?;
+    let mut measured_packed: Option<usize> = None;
+    if let Some(out) = args.get("out") {
+        let q = dfmpc::quant::apply_mp_plan(&model.plan, &model.ckpt, &found.mp, Some(&h.pool()))?;
+        let packed = dfmpc::model::PackedCheckpoint::pack(&q.ckpt, &q.grids);
+        measured_packed = Some(packed.stored_bytes());
+        match args.get_or("format", "f32") {
+            "packed" => packed.save(std::path::Path::new(out))?,
+            "f32" => q.ckpt.save(std::path::Path::new(out))?,
+            other => anyhow::bail!("unknown --format '{other}' (expected 'packed' or 'f32')"),
+        }
+    }
+    let report = Json::obj(vec![
+        ("model", Json::str(model.entry.id.clone())),
+        ("budget_mb", Json::num(mb)),
+        ("budget_bytes", Json::num(found.budget_bytes as f64)),
+        ("fp32_bytes", Json::num(found.fp32_bytes as f64)),
+        ("predicted_bytes", Json::num(found.predicted_bytes as f64)),
+        (
+            "measured_packed_bytes",
+            match measured_packed {
+                Some(b) => Json::num(b as f64),
+                None => Json::Null,
+            },
+        ),
+        ("surrogate_loss", Json::num(found.surrogate_loss)),
+        ("demotions", Json::num(found.demotions as f64)),
+        ("plan", Json::str(found.mp.id())),
+        (
+            "layers",
+            Json::Obj(
+                found.mp.layers.iter().map(|a| (a.layer.clone(), Json::str(a.q.id()))).collect(),
+            ),
+        ),
+        (
+            "compensated",
+            Json::Arr(
+                found.mp.comp.iter().map(|c| Json::str(format!("{}>{}", c.low, c.high))).collect(),
+            ),
+        ),
+    ]);
+    println!("{}", report.dump());
     Ok(())
 }
 

@@ -8,4 +8,6 @@ pub mod zoo;
 
 pub use checkpoint::{Checkpoint, PackedCheckpoint};
 pub use plan::{ConvSpec, Op, Pair, Plan};
-pub use registry::{pack_panels, pack_panels_q, ModelRegistry, PackedPanels, Panel, PreparedModel};
+pub use registry::{
+    pack_panels, pack_panels_q, ModelRegistry, PackedPanels, Panel, PreparedModel, VariantSpec,
+};

@@ -7,16 +7,21 @@
 //! enough to run *at load time inside the server*. The registry is that
 //! load path:
 //!
-//! - A **variant key** `"<model>@<method-id>"` (e.g.
-//!   `resnet20@dfmpc:2/6:0.5:0`, see [`crate::quant::Method::id`]) names
-//!   one immutable [`PreparedModel`]: the plan, the (possibly quantized)
-//!   checkpoint, and the GEMM-packed filter panels built **once** and
-//!   shared read-only by every serving lane — no lane re-packs weights.
-//! - Variants are prepared **lazily on first request** by running
-//!   [`Method::apply`] against the registered FP32 base, fanned over the
-//!   shared [`ThreadPool`]. Concurrent first requests are deduplicated:
-//!   one caller prepares, the rest block on a condvar and share the
-//!   result.
+//! - A **variant key** `"<model>@<spec>"` names one immutable
+//!   [`PreparedModel`]: the plan, the (possibly quantized) checkpoint,
+//!   and the GEMM-packed filter panels built **once** and shared
+//!   read-only by every serving lane — no lane re-packs weights. The
+//!   spec is either an explicit quantization method
+//!   (`resnet20@dfmpc:2/6:0.5:0`, see [`crate::quant::Method::id`]) or
+//!   `auto:<budget-mb>` — a data-free mixed-precision search
+//!   ([`crate::quant::search`]) resolved at prepare time, its winning
+//!   per-layer plan admitted as a first-class variant.
+//! - Variants are prepared **lazily on first request**: the spec is
+//!   resolved to an [`MpPlan`] (explicit methods lower, `auto:` budgets
+//!   search) and [`crate::quant::apply_mp_plan`] runs it against the
+//!   registered FP32 base, fanned over the shared [`ThreadPool`].
+//!   Concurrent first requests are deduplicated: one caller prepares,
+//!   the rest block on a condvar and share the result.
 //! - Residency is bounded by a **byte-budget LRU**: when the estimated
 //!   resident bytes (checkpoints + panels) exceed the budget, the coldest
 //!   variants are evicted; a later request simply re-prepares them.
@@ -30,7 +35,8 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::quant::Method;
+use crate::quant::plan::MpPlan;
+use crate::quant::{apply_mp_plan, Method};
 use crate::tensor::ops::{pack_filter, PackedB, PackedQ, QFcW};
 use crate::tensor::qtensor::QTensor;
 use crate::util::threadpool::ThreadPool;
@@ -68,10 +74,46 @@ impl RegistryCounters {
     }
 }
 
+/// What the spec half of a variant key (`"<model>@<spec>"`) names: an
+/// explicit quantization [`Method`], or `auto:<budget-mb>` — a data-free
+/// mixed-precision search under a packed-size budget, resolved at
+/// prepare time ([`crate::quant::search`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum VariantSpec {
+    Method(Method),
+    Auto { budget_mb: f64 },
+}
+
+impl VariantSpec {
+    /// Canonical spec id — the part after `@` in a canonical variant
+    /// key. `auto:` budgets print in Rust's shortest-roundtrip float
+    /// form, so alias spellings (`auto:0.50`, `auto:5e-1`) collapse to
+    /// one resident variant exactly like aliased method ids do.
+    pub fn id(&self) -> String {
+        match self {
+            VariantSpec::Method(m) => m.id(),
+            VariantSpec::Auto { budget_mb } => format!("auto:{budget_mb}"),
+        }
+    }
+
+    /// Parse a spec (the part after `@`). `auto:<mb>` budgets are
+    /// validated here — malformed, zero, negative, non-finite, and
+    /// overflow budgets are structured errors, so bogus keys reject at
+    /// admission instead of panicking at prepare.
+    pub fn parse(spec: &str) -> Result<VariantSpec> {
+        if let Some(raw) = spec.strip_prefix("auto:") {
+            let budget_mb = crate::quant::search::parse_budget_mb(raw)
+                .with_context(|| format!("variant spec '{spec}'"))?;
+            return Ok(VariantSpec::Auto { budget_mb });
+        }
+        Ok(VariantSpec::Method(Method::parse(spec)?))
+    }
+}
+
 /// Point-in-time copy of one resident variant's registry entry.
 #[derive(Clone, Debug)]
 pub struct VariantSnapshot {
-    /// variant key, `"<model>@<method-id>"`
+    /// variant key, `"<model>@<spec-id>"`
     pub key: String,
     /// resident bytes (packed store + runtime residual + GEMM panels)
     pub bytes: usize,
@@ -81,6 +123,11 @@ pub struct VariantSnapshot {
     /// which compute path serves each layer (`(layer, kind)` — e.g.
     /// `("c1", "ternary-panel")`, see [`layer_paths`])
     pub layer_paths: Vec<(String, &'static str)>,
+    /// canonical id of the executed per-layer plan ([`MpPlan::id`])
+    pub plan_id: String,
+    /// search-predicted packed bytes (`auto:` variants only) — compare
+    /// against `packed_bytes` to see how tight the cost model is
+    pub predicted_bytes: Option<usize>,
     /// how long this variant took to prepare, milliseconds
     pub prepare_ms: f64,
 }
@@ -252,12 +299,19 @@ pub fn layer_paths(plan: &Plan, panels: &PackedPanels) -> Vec<(String, &'static 
 /// now holds several times more low-bit variants than when every variant
 /// was a fake-quant fp32 checkpoint.
 pub struct PreparedModel {
-    /// variant key, `"<model>@<method-id>"`
+    /// variant key, `"<model>@<spec-id>"`
     pub key: String,
     /// the registered base model id
     pub model_id: String,
-    /// the quantization method this variant was prepared with
-    pub method: Method,
+    /// the spec this variant was requested as (explicit method or
+    /// `auto:` budget)
+    pub spec: VariantSpec,
+    /// the per-layer plan that was actually executed: explicit methods
+    /// record their lowering ([`Method::lower`]), `auto:` variants the
+    /// search winner. fp32 records the all-fp32 plan.
+    pub mp: Arc<MpPlan>,
+    /// search-predicted packed bytes (`auto:` variants only)
+    pub predicted_bytes: Option<usize>,
     pub plan: Arc<Plan>,
     /// runtime checkpoint for the engines: for packed variants the
     /// weights served from quantized panels are dropped (the kernels
@@ -451,28 +505,30 @@ impl ModelRegistry {
         self.bases.lock().unwrap().keys().cloned().collect()
     }
 
-    /// Split a variant key into `(model_id, method)`, checking that the
-    /// method parses and the base model is registered. Cheap — used at
-    /// request admission so bogus keys reject immediately.
-    pub fn validate_key(&self, key: &str) -> Result<(String, Method)> {
-        let (model_id, method_spec) = key
+    /// Split a variant key into `(model_id, spec)`, checking that the
+    /// spec parses (method or `auto:` budget) and the base model is
+    /// registered. Cheap — used at request admission so bogus keys
+    /// reject immediately.
+    pub fn validate_key(&self, key: &str) -> Result<(String, VariantSpec)> {
+        let (model_id, spec_str) = key
             .split_once('@')
-            .with_context(|| format!("variant key '{key}' is not '<model>@<method>'"))?;
-        let method = Method::parse(method_spec)
-            .with_context(|| format!("variant key '{key}': bad method spec"))?;
+            .with_context(|| format!("variant key '{key}' is not '<model>@<spec>'"))?;
+        let spec = VariantSpec::parse(spec_str)
+            .with_context(|| format!("variant key '{key}': bad variant spec"))?;
         if !self.bases.lock().unwrap().contains_key(model_id) {
             bail!("variant key '{key}': model '{model_id}' is not registered");
         }
-        Ok((model_id.to_string(), method))
+        Ok((model_id.to_string(), spec))
     }
 
-    /// Canonical form of a variant key: `"<model>@<Method::id()>"`.
-    /// Aliased spellings of one method (`dfmpc:2/6` vs the canonical
-    /// `dfmpc:2/6:0.5:0`) collapse to one key, so the registry holds a
-    /// single resident copy per semantic variant.
+    /// Canonical form of a variant key: `"<model>@<VariantSpec::id()>"`.
+    /// Aliased spellings of one spec (`dfmpc:2/6` vs the canonical
+    /// `dfmpc:2/6:0.5:0`, `auto:0.50` vs `auto:0.5`) collapse to one
+    /// key, so the registry holds a single resident copy per semantic
+    /// variant.
     pub fn canonical_key(&self, key: &str) -> Result<String> {
-        let (model_id, method) = self.validate_key(key)?;
-        Ok(format!("{model_id}@{}", method.id()))
+        let (model_id, spec) = self.validate_key(key)?;
+        Ok(format!("{model_id}@{}", spec.id()))
     }
 
     /// Fast-path lookup of an already-resident canonical key (no parse,
@@ -501,8 +557,8 @@ impl ModelRegistry {
         if let Some(m) = self.get_resident(key) {
             return Ok(m);
         }
-        let (model_id, method) = self.validate_key(key)?;
-        let canonical = format!("{model_id}@{}", method.id());
+        let (model_id, spec) = self.validate_key(key)?;
+        let canonical = format!("{model_id}@{}", spec.id());
         let key = canonical.as_str();
         // claim or wait
         {
@@ -535,7 +591,7 @@ impl ModelRegistry {
         // defuse it — error return or unwinding panic — so a failed
         // prepare can never wedge later requests in cv.wait.
         let mut claim = PrepareClaim { registry: self, key, armed: true };
-        let prepared = self.prepare(key, &model_id, method);
+        let prepared = self.prepare(key, &model_id, spec);
         match prepared {
             Ok(m) => {
                 let m = Arc::new(m);
@@ -580,7 +636,7 @@ impl ModelRegistry {
         }
     }
 
-    fn prepare(&self, key: &str, model_id: &str, method: Method) -> Result<PreparedModel> {
+    fn prepare(&self, key: &str, model_id: &str, spec: VariantSpec) -> Result<PreparedModel> {
         let (plan, base_ckpt) = self
             .bases
             .lock()
@@ -589,12 +645,25 @@ impl ModelRegistry {
             .map(|(p, c)| (Arc::clone(p), Arc::clone(c)))
             .with_context(|| format!("model '{model_id}' is not registered"))?;
         let sw = Stopwatch::start();
-        let (full, packed) = match method {
+        // Resolve the spec to the per-layer plan this variant executes:
+        // explicit methods lower, `auto:` budgets run the data-free
+        // search against the registered base. The search is a pure
+        // function of (checkpoint, budget), so one canonical key always
+        // resolves to one plan.
+        let (mp, predicted_bytes) = match &spec {
+            VariantSpec::Method(m) => (m.lower(&plan), None),
+            VariantSpec::Auto { budget_mb } => {
+                let budget = crate::quant::search::budget_bytes(*budget_mb);
+                let found = crate::quant::search::search(&plan, &base_ckpt, budget)
+                    .with_context(|| format!("resolving variant '{key}'"))?;
+                (found.mp, Some(found.predicted_bytes))
+            }
+        };
+        let (full, packed) = match spec {
             // fp32 shares the base checkpoint — no copy, no extra bytes
-            Method::Fp32 => (Arc::clone(&base_ckpt), None),
+            VariantSpec::Method(Method::Fp32) => (Arc::clone(&base_ckpt), None),
             _ => {
-                let q = method
-                    .apply_quantized(&plan, &base_ckpt, self.pool.as_ref())
+                let q = apply_mp_plan(&plan, &base_ckpt, &mp, self.pool.as_ref())
                     .with_context(|| format!("preparing variant '{key}'"))?;
                 // quantization of a finite base must stay finite (a scale
                 // over- or underflow would poison every batch served from
@@ -638,7 +707,9 @@ impl ModelRegistry {
         Ok(PreparedModel {
             key: key.to_string(),
             model_id: model_id.to_string(),
-            method,
+            spec,
+            mp: Arc::new(mp),
+            predicted_bytes,
             plan,
             ckpt,
             packed,
@@ -683,6 +754,8 @@ impl ModelRegistry {
                     bytes: m.bytes,
                     packed_bytes: m.packed.as_ref().map_or(0, |p| p.stored_bytes()),
                     layer_paths: m.layer_paths.clone(),
+                    plan_id: m.mp.id(),
+                    predicted_bytes: m.predicted_bytes,
                     prepare_ms: m.prepare_ms,
                 }),
                 _ => None,
@@ -796,6 +869,35 @@ mod tests {
             reg.canonical_key("tiny@dfmpc:2/6").unwrap(),
             "tiny@dfmpc:2/6:0.5:0"
         );
+    }
+
+    #[test]
+    fn auto_budget_keys_validate_and_dedup() {
+        let reg = ModelRegistry::new(usize::MAX, None);
+        let (plan, ckpt) = fixture();
+        reg.register_base("tiny", plan, ckpt).unwrap();
+        for bad in [
+            "tiny@auto:",
+            "tiny@auto:0",
+            "tiny@auto:-1",
+            "tiny@auto:nan",
+            "tiny@auto:abc",
+            "tiny@auto:1e300",
+        ] {
+            assert!(reg.validate_key(bad).is_err(), "{bad} must reject at admission");
+        }
+        assert_eq!(reg.canonical_key("tiny@auto:0.0010").unwrap(), "tiny@auto:0.001");
+        // aliased budget spellings resolve to one resident variant
+        let a = reg.get_or_prepare("tiny@auto:0.001").unwrap();
+        let b = reg.get_or_prepare("tiny@auto:1e-3").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "aliased budgets re-prepared the variant");
+        assert_eq!(a.key, "tiny@auto:0.001");
+        let predicted = a.predicted_bytes.expect("auto variant must predict its size");
+        assert!(predicted <= 1000, "predicted {predicted} B over the 1000 B budget");
+        let snap = reg.snapshot();
+        assert_eq!(snap.prepared, 1);
+        assert_eq!(snap.variants[0].plan_id, a.mp.id());
+        assert_eq!(snap.variants[0].predicted_bytes, Some(predicted));
     }
 
     #[test]

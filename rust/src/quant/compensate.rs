@@ -177,24 +177,26 @@ pub fn scale_input_channels(w: &mut Tensor, offset: usize, c: &[f32], depthwise:
 
 /// Everything one pair contributes to the quantized checkpoint — computed
 /// read-only from the FP32 checkpoint, applied serially in pair order.
-struct PairOut {
-    bn: String,
-    w_hat: Tensor,
-    mu_hat: Vec<f32>,
-    var_hat: Vec<f32>,
-    w_hq: Tensor,
+/// Crate-visible so the [`super::plan`] executor applies the exact same
+/// solve for its [`super::plan::CompSpec`]s.
+pub(crate) struct PairOut {
+    pub(crate) bn: String,
+    pub(crate) w_hat: Tensor,
+    pub(crate) mu_hat: Vec<f32>,
+    pub(crate) var_hat: Vec<f32>,
+    pub(crate) w_hq: Tensor,
     /// storage grid of the low conv (ternary trits / k-bit indices)
-    low_meta: GridMeta,
+    pub(crate) low_meta: GridMeta,
     /// storage grid of the high conv: k-bit indices + the Eq.-7 channel
     /// factors `c` on the paired input slice
-    high_meta: GridMeta,
-    report: PairReport,
+    pub(crate) high_meta: GridMeta,
+    pub(crate) report: PairReport,
 }
 
 /// One pair's full solve (Eq. 3/4 ternarization, BN recalibration, Eq. 6
 /// high quantization, Eq. 27 closed form + Eq. 7 scaling). Reads only the
 /// original checkpoint, so pairs can run concurrently.
-fn solve_pair(
+pub(crate) fn solve_pair(
     plan: &Plan,
     ckpt: &Checkpoint,
     cfg: DfmpcConfig,

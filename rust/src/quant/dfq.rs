@@ -11,11 +11,12 @@
 //! E[(Wq - W) a] into the following BN beta, with E[a] from the preceding
 //! BN statistics under the Gaussian + ReLU model (fully data-free).
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::model::{Checkpoint, Plan};
+use crate::model::{Checkpoint, ConvSpec, Plan};
 use crate::tensor::ops::BN_EPS;
 use crate::tensor::qtensor::{GridMap, GridMeta};
 use crate::tensor::Tensor;
@@ -48,20 +49,16 @@ pub fn erf(x: f32) -> f32 {
     sign * y
 }
 
-/// Weight equalization across every mixed-precision pair, then uniform
-/// quantization at `bits` (per-layer, fanned over `pool`), then BN bias
-/// correction. Returns the quantized checkpoint and its storage grids
-/// (the equalized layers' post-equalization max scales).
-pub fn dfq(
+/// Cross-layer weight equalization over the plan's pairs (DFQ phase 1).
+/// Returns the equalized fp32 checkpoint the quantization stage reads.
+/// Also the [`super::plan::PrePass::DfqEqualize`] stage of the plan
+/// executor — `dfq` and a lowered DFQ plan run the same bytes.
+pub(crate) fn equalize(
     plan: &Plan,
     ckpt: &Checkpoint,
-    bits: u32,
-    pool: Option<&Arc<ThreadPool>>,
-) -> Result<(Checkpoint, GridMap)> {
+    convs: &BTreeMap<String, ConvSpec>,
+) -> Result<Checkpoint> {
     let mut work = ckpt.clone();
-    let convs = plan.convs();
-
-    // --- 1. cross-layer equalization over the plan's pairs ---------------
     for pair in &plan.pairs {
         let hi_spec = convs.get(&pair.high).context("high conv")?;
         if hi_spec.groups > 1 {
@@ -131,6 +128,23 @@ pub fn dfq(
         work.put(&format!("{}.w", pair.low), w_a);
         work.put(&format!("{}.w", pair.high), w_b);
     }
+    Ok(work)
+}
+
+/// Weight equalization across every mixed-precision pair, then uniform
+/// quantization at `bits` (per-layer, fanned over `pool`), then BN bias
+/// correction. Returns the quantized checkpoint and its storage grids
+/// (the equalized layers' post-equalization max scales).
+pub fn dfq(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    bits: u32,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<(Checkpoint, GridMap)> {
+    let convs = plan.convs();
+
+    // --- 1. cross-layer equalization over the plan's pairs ---------------
+    let mut work = equalize(plan, ckpt, &convs)?;
 
     // --- 2. quantize everything uniformly at `bits` ----------------------
     let mut out = work.clone();
@@ -157,6 +171,20 @@ pub fn dfq(
     }
 
     // --- 3. bias correction on the paired high layers ---------------------
+    bias_correct(plan, &convs, &mut work, &mut out)?;
+    Ok((out, grids))
+}
+
+/// DFQ phase 3: absorb the expected quantization-error shift into the
+/// paired high BNs' betas (mutating `out`, and `work` so chained pairs
+/// see corrected betas). Also the [`super::plan::PostPass::DfqBias`]
+/// stage of the plan executor.
+pub(crate) fn bias_correct(
+    plan: &Plan,
+    convs: &BTreeMap<String, ConvSpec>,
+    work: &mut Checkpoint,
+    out: &mut Checkpoint,
+) -> Result<()> {
     for pair in &plan.pairs {
         let hi_spec = convs.get(&pair.high).context("high conv")?;
         if hi_spec.groups > 1 {
@@ -208,7 +236,7 @@ pub fn dfq(
         work.put(&format!("{hi_bn}.beta"), beta_hi.clone());
         out.put(&format!("{hi_bn}.beta"), beta_hi);
     }
-    Ok((out, grids))
+    Ok(())
 }
 
 #[cfg(test)]

@@ -14,13 +14,17 @@ pub mod dfq;
 pub mod naive;
 pub mod ocs;
 pub mod omse;
+pub mod plan;
+pub mod search;
 pub mod size;
 pub mod ternary;
 pub mod uniform;
 pub mod zeroq_sim;
 
 pub use compensate::{dfmpc, DfmpcConfig, PairReport};
-pub use size::{model_size, packed_model_size, SizeReport};
+pub use plan::{apply_mp_plan, MpPlan};
+pub use search::{search, SearchOutcome};
+pub use size::{model_size, packed_model_size, predicted_packed_bytes, SizeReport};
 
 use std::sync::Arc;
 
@@ -171,6 +175,102 @@ impl Method {
         })
     }
 
+    /// Lower this method to the explicit per-layer [`MpPlan`] it is
+    /// equivalent to. Every method is expressible as: optional pre-pass,
+    /// one grid per weight layer, Eq. 27 compensations on the plan's
+    /// pairs, optional post-pass. [`apply_mp_plan`] on the lowered plan
+    /// is bit-identical to the legacy per-method entry points (the
+    /// executor calls the same stage functions; proptested per method in
+    /// `rust/tests/mp_search.rs`).
+    pub fn lower(&self, model: &Plan) -> MpPlan {
+        use plan::{CompSpec, LayerAssign, LayerQuant, PostPass, PrePass, ScaleRule};
+        let names = plan::weight_layers(model);
+        let uniform = |bits: u32| LayerQuant::Uniform { bits, rule: ScaleRule::AbsMax };
+        let assign = |f: &dyn Fn(&str) -> LayerQuant| -> Vec<LayerAssign> {
+            names.iter().map(|n| LayerAssign { layer: n.clone(), q: f(n) }).collect()
+        };
+        let lows: std::collections::BTreeSet<&str> =
+            model.pairs.iter().map(|p| p.low.as_str()).collect();
+        let mixed = |bits_low: u32, bits_high: u32, fold_alpha: bool| -> Vec<LayerAssign> {
+            // fc heads always quantize at the high bitwidth (naive_impl)
+            let fc_start = model.convs().len();
+            names
+                .iter()
+                .enumerate()
+                .map(|(i, n)| {
+                    let q = if i < fc_start && lows.contains(n.as_str()) {
+                        if bits_low == 2 {
+                            LayerQuant::Ternary { fold_alpha }
+                        } else {
+                            uniform(bits_low)
+                        }
+                    } else {
+                        uniform(bits_high)
+                    };
+                    LayerAssign { layer: n.clone(), q }
+                })
+                .collect()
+        };
+        let flat = |layers: Vec<LayerAssign>| MpPlan {
+            pre: None,
+            layers,
+            comp: Vec::new(),
+            post: None,
+        };
+        match *self {
+            Method::Fp32 => flat(assign(&|_| LayerQuant::Fp32)),
+            Method::Uniform { bits } => flat(assign(&|_| uniform(bits))),
+            Method::Omse { bits } => {
+                flat(assign(&|_| LayerQuant::Uniform { bits, rule: ScaleRule::Omse }))
+            }
+            Method::Ocs { bits, expand } => {
+                flat(assign(&|_| LayerQuant::Uniform { bits, rule: ScaleRule::Ocs { expand } }))
+            }
+            Method::NaiveMixed { bits_low, bits_high } => {
+                flat(mixed(bits_low, bits_high, false))
+            }
+            Method::NaiveMixedAlpha { bits_low, bits_high } => {
+                flat(mixed(bits_low, bits_high, true))
+            }
+            Method::Dfq { bits } => MpPlan {
+                pre: Some(PrePass::DfqEqualize),
+                layers: assign(&|_| uniform(bits)),
+                comp: Vec::new(),
+                post: Some(PostPass::DfqBias),
+            },
+            Method::ZeroqSim { bits, samples, iters } => MpPlan {
+                pre: None,
+                layers: assign(&|_| uniform(bits)),
+                comp: Vec::new(),
+                post: Some(PostPass::ZeroqBias { samples, iters }),
+            },
+            Method::Dfmpc(cfg) => {
+                let low_q = if cfg.bits_low == 2 {
+                    LayerQuant::Ternary { fold_alpha: false }
+                } else {
+                    uniform(cfg.bits_low)
+                };
+                // pair highs and the unpaired tail both sit at bits_high;
+                // a layer that is low of one pair and high of another gets
+                // the low grid (the executor then rejects the malformed
+                // comp explicitly instead of last-write-wins)
+                let layers =
+                    assign(&|n| if lows.contains(n) { low_q } else { uniform(cfg.bits_high) });
+                let comp = model
+                    .pairs
+                    .iter()
+                    .map(|p| CompSpec {
+                        low: p.low.clone(),
+                        high: p.high.clone(),
+                        lam1: cfg.lam1,
+                        lam2: cfg.lam2,
+                    })
+                    .collect();
+                MpPlan { pre: None, layers, comp, post: None }
+            }
+        }
+    }
+
     /// Run the method over a model. FP32 returns the checkpoint unchanged.
     /// With `pool`, the per-layer work (DF-MPC pair solves, uniform
     /// quantization sweeps, ZeroQ-sim calibration forwards) fans out over
@@ -188,36 +288,20 @@ impl Method {
     /// the integer grid every quantized weight lives on, so the result can
     /// be bit-packed ([`crate::model::PackedCheckpoint`]) instead of kept
     /// as fake-quant fp32. FP32 emits an empty map.
+    ///
+    /// Since the plan refactor this is `lower` + the single plan executor
+    /// ([`apply_mp_plan`]): the method names *what* grid each layer gets,
+    /// the executor is the only code that applies grids. Bit-identical to
+    /// the retired per-method dispatch (the legacy entry points remain as
+    /// the executor's stage functions and as test oracles).
     pub fn apply_quantized(
         &self,
         plan: &Plan,
         ckpt: &Checkpoint,
         pool: Option<&Arc<ThreadPool>>,
     ) -> Result<Quantized> {
-        let (ckpt, grids) = match self {
-            Method::Fp32 => (ckpt.clone(), GridMap::new()),
-            Method::Dfmpc(cfg) => {
-                let (c, _reports, g) = dfmpc(plan, ckpt, *cfg, pool)?;
-                (c, g)
-            }
-            Method::NaiveMixed { bits_low, bits_high } => {
-                naive::naive_mixed(plan, ckpt, *bits_low, *bits_high, pool)?
-            }
-            Method::NaiveMixedAlpha { bits_low, bits_high } => {
-                naive::naive_mixed_alpha(plan, ckpt, *bits_low, *bits_high, pool)?
-            }
-            Method::Uniform { bits } => naive::uniform_all(plan, ckpt, *bits, pool)?,
-            Method::Dfq { bits } => dfq::dfq(plan, ckpt, *bits, pool)?,
-            Method::Omse { bits } => omse::omse(plan, ckpt, *bits, pool)?,
-            Method::Ocs { bits, expand } => {
-                let (c, _expand, g) = ocs::ocs(plan, ckpt, *bits, *expand, pool)?;
-                (c, g)
-            }
-            Method::ZeroqSim { bits, samples, iters } => {
-                zeroq_sim::zeroq_sim(plan, ckpt, *bits, *samples, *iters, pool)?
-            }
-        };
-        Ok(Quantized { ckpt, grids })
+        let mp = self.lower(plan);
+        apply_mp_plan(plan, ckpt, &mp, pool)
     }
 }
 

@@ -1,0 +1,511 @@
+//! Per-layer mixed-precision plans — the representation the paper is
+//! actually about.
+//!
+//! An [`MpPlan`] names, for every weight layer of a model, which grid it
+//! lives on (fp32 / ternary / k-bit uniform under an explicit scale rule)
+//! and which low→high pairs get the Eq. 27 closed-form compensation,
+//! plus the optional whole-model pre/post passes the DFQ and ZeroQ-sim
+//! baselines need. Every [`super::Method`] *lowers* to an `MpPlan`
+//! ([`super::Method::lower`]) and a single executor ([`apply_mp_plan`])
+//! applies it — bit-identical to the per-method paths it replaced
+//! (proptested per method in `rust/tests/mp_search.rs`), because the
+//! executor calls the exact same per-layer and per-pair stage functions.
+//!
+//! Plans have a canonical, parse-roundtrippable string id
+//! ([`MpPlan::id`] / [`MpPlan::parse`]) — `c1=t,c2=u6,fc=u8;comp=c1>c2:0.5:0`
+//! — which is what `status` reports for `@auto:` variants and what the
+//! `quantize --budget-mb` CLI prints.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{Checkpoint, Op, Plan};
+use crate::tensor::qtensor::{GridMap, GridMeta};
+use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
+
+use super::compensate::{solve_pair, DfmpcConfig};
+use super::ternary::ternarize;
+use super::uniform::quantize_uniform_scaled;
+use super::{dfq, ocs, omse, zeroq_sim, Quantized};
+
+/// How a k-bit uniform layer picks its clipping scale.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScaleRule {
+    /// layer abs-max (DoReFa grid, the default everywhere)
+    AbsMax,
+    /// MSE-optimal clip via golden-section search (OMSE)
+    Omse,
+    /// outlier channel splitting with the given expand ratio (OCS)
+    Ocs { expand: f32 },
+}
+
+/// The grid one layer's weights live on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LayerQuant {
+    /// weights untouched (served from the dense fp32 fallback)
+    Fp32,
+    /// TWN ternary {-1, 0, +1}; `fold_alpha` multiplies the TWN scale
+    /// back into the stored weights (the `original-alpha` baseline) —
+    /// a compensated low layer must keep `fold_alpha = false` (alpha is
+    /// absorbed by BN recalibration instead)
+    Ternary { fold_alpha: bool },
+    /// k-bit uniform on the DoReFa grid under `rule`'s clipping scale
+    Uniform { bits: u32, rule: ScaleRule },
+}
+
+/// One layer's assignment inside a plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerAssign {
+    pub layer: String,
+    pub q: LayerQuant,
+}
+
+/// One Eq. 27 compensation: the high conv's paired input slice is scaled
+/// by the closed-form c that repairs the low conv's quantization error.
+/// `(low, high)` must name a pair of the model plan (that is where the
+/// channel offset lives).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompSpec {
+    pub low: String,
+    pub high: String,
+    pub lam1: f32,
+    pub lam2: f32,
+}
+
+/// Whole-model pass before per-layer quantization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PrePass {
+    /// DFQ cross-layer weight equalization (Nagel et al.)
+    DfqEqualize,
+}
+
+/// Whole-model pass after per-layer quantization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PostPass {
+    /// DFQ Gaussian-ReLU bias correction into the paired BN betas
+    DfqBias,
+    /// ZeroQ-sim empirical bias correction from synthesized calibration
+    ZeroqBias { samples: usize, iters: usize },
+}
+
+/// An explicit per-layer mixed-precision plan. `layers` is ordered
+/// canonically: convs in name order (the model plan's BTreeMap order),
+/// then fc heads in op order — [`weight_layers`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MpPlan {
+    pub pre: Option<PrePass>,
+    pub layers: Vec<LayerAssign>,
+    pub comp: Vec<CompSpec>,
+    pub post: Option<PostPass>,
+}
+
+/// Every weight-carrying layer of a model plan, in canonical order:
+/// convs in name order (including residual down-convs), then fc heads in
+/// op order. This is the order plan lowering and the search emit.
+pub fn weight_layers(plan: &Plan) -> Vec<String> {
+    let mut out: Vec<String> = plan.convs().keys().cloned().collect();
+    for op in &plan.ops {
+        if let Op::Fc { name, .. } = op {
+            out.push(name.clone());
+        }
+    }
+    out
+}
+
+fn valid_layer_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.'))
+}
+
+fn parse_f32(s: &str) -> Result<f32> {
+    let v: f32 = s.parse().with_context(|| format!("bad float '{s}'"))?;
+    if !v.is_finite() {
+        bail!("non-finite float '{s}'");
+    }
+    Ok(v)
+}
+
+impl LayerQuant {
+    /// Canonical per-layer spec string (`f32`, `t`, `ta`, `u6`, `o4`,
+    /// `ocs4:0.05`) — the `<q>` half of a plan id's `<name>=<q>` item.
+    pub fn id(&self) -> String {
+        match self {
+            LayerQuant::Fp32 => "f32".into(),
+            LayerQuant::Ternary { fold_alpha: false } => "t".into(),
+            LayerQuant::Ternary { fold_alpha: true } => "ta".into(),
+            LayerQuant::Uniform { bits, rule: ScaleRule::AbsMax } => format!("u{bits}"),
+            LayerQuant::Uniform { bits, rule: ScaleRule::Omse } => format!("o{bits}"),
+            LayerQuant::Uniform { bits, rule: ScaleRule::Ocs { expand } } => {
+                format!("ocs{bits}:{expand}")
+            }
+        }
+    }
+
+    fn parse(s: &str) -> Result<LayerQuant> {
+        let bits_of = |t: &str| -> Result<u32> {
+            let b: u32 = t.parse().with_context(|| format!("bad bits in quant spec '{s}'"))?;
+            if b == 0 || b > crate::tensor::qtensor::MAX_GRID_BITS {
+                bail!("bits {b} out of range in quant spec '{s}'");
+            }
+            Ok(b)
+        };
+        Ok(match s {
+            "f32" => LayerQuant::Fp32,
+            "t" => LayerQuant::Ternary { fold_alpha: false },
+            "ta" => LayerQuant::Ternary { fold_alpha: true },
+            _ => {
+                if let Some(rest) = s.strip_prefix("ocs") {
+                    let (b, e) = rest
+                        .split_once(':')
+                        .with_context(|| format!("ocs spec '{s}' needs <bits>:<expand>"))?;
+                    LayerQuant::Uniform {
+                        bits: bits_of(b)?,
+                        rule: ScaleRule::Ocs { expand: parse_f32(e)? },
+                    }
+                } else if let Some(rest) = s.strip_prefix('u') {
+                    LayerQuant::Uniform { bits: bits_of(rest)?, rule: ScaleRule::AbsMax }
+                } else if let Some(rest) = s.strip_prefix('o') {
+                    LayerQuant::Uniform { bits: bits_of(rest)?, rule: ScaleRule::Omse }
+                } else {
+                    bail!("unknown layer quant spec '{s}'");
+                }
+            }
+        })
+    }
+}
+
+impl MpPlan {
+    /// Canonical roundtrippable id: `[pre=dfq-eq;]<name>=<q>,...`
+    /// `[;comp=<low>><high>:<lam1>:<lam2>,...][;post=...]`. Floats print
+    /// with rust's shortest-roundtrip formatting, so
+    /// `MpPlan::parse(p.id()) == p` exactly (property-tested).
+    pub fn id(&self) -> String {
+        let mut sections: Vec<String> = Vec::new();
+        if let Some(PrePass::DfqEqualize) = self.pre {
+            sections.push("pre=dfq-eq".into());
+        }
+        let layers: Vec<String> =
+            self.layers.iter().map(|a| format!("{}={}", a.layer, a.q.id())).collect();
+        sections.push(layers.join(","));
+        if !self.comp.is_empty() {
+            let comps: Vec<String> = self
+                .comp
+                .iter()
+                .map(|c| format!("{}>{}:{}:{}", c.low, c.high, c.lam1, c.lam2))
+                .collect();
+            sections.push(format!("comp={}", comps.join(",")));
+        }
+        match self.post {
+            Some(PostPass::DfqBias) => sections.push("post=dfq-bias".into()),
+            Some(PostPass::ZeroqBias { samples, iters }) => {
+                sections.push(format!("post=zeroq:{samples}:{iters}"));
+            }
+            None => {}
+        }
+        sections.join(";")
+    }
+
+    /// Parse a canonical plan id back into a plan. Structured errors, no
+    /// panics — this is a serving-facing parse surface.
+    pub fn parse(s: &str) -> Result<MpPlan> {
+        let mut pre = None;
+        let mut layers: Option<Vec<LayerAssign>> = None;
+        let mut comp = Vec::new();
+        let mut post = None;
+        for section in s.split(';') {
+            if let Some(rest) = section.strip_prefix("pre=") {
+                if pre.is_some() {
+                    bail!("duplicate pre section");
+                }
+                match rest {
+                    "dfq-eq" => pre = Some(PrePass::DfqEqualize),
+                    other => bail!("unknown pre pass '{other}'"),
+                }
+            } else if let Some(rest) = section.strip_prefix("comp=") {
+                if !comp.is_empty() {
+                    bail!("duplicate comp section");
+                }
+                for item in rest.split(',') {
+                    let (pair, lams) = item
+                        .split_once(':')
+                        .with_context(|| format!("comp item '{item}' needs lambdas"))?;
+                    let (low, high) = pair
+                        .split_once('>')
+                        .with_context(|| format!("comp item '{item}' needs <low>><high>"))?;
+                    let (l1, l2) = lams
+                        .split_once(':')
+                        .with_context(|| format!("comp item '{item}' needs two lambdas"))?;
+                    if !valid_layer_name(low) || !valid_layer_name(high) {
+                        bail!("bad layer name in comp item '{item}'");
+                    }
+                    comp.push(CompSpec {
+                        low: low.to_string(),
+                        high: high.to_string(),
+                        lam1: parse_f32(l1)?,
+                        lam2: parse_f32(l2)?,
+                    });
+                }
+            } else if let Some(rest) = section.strip_prefix("post=") {
+                if post.is_some() {
+                    bail!("duplicate post section");
+                }
+                post = Some(if rest == "dfq-bias" {
+                    PostPass::DfqBias
+                } else if let Some(z) = rest.strip_prefix("zeroq:") {
+                    let (a, b) = z
+                        .split_once(':')
+                        .with_context(|| format!("post spec '{rest}' needs samples:iters"))?;
+                    PostPass::ZeroqBias {
+                        samples: a.parse().with_context(|| format!("bad samples '{a}'"))?,
+                        iters: b.parse().with_context(|| format!("bad iters '{b}'"))?,
+                    }
+                } else {
+                    bail!("unknown post pass '{rest}'");
+                });
+            } else {
+                if layers.is_some() {
+                    bail!("duplicate layers section");
+                }
+                let mut out = Vec::new();
+                for item in section.split(',') {
+                    let (name, q) = item
+                        .split_once('=')
+                        .with_context(|| format!("layer item '{item}' needs <name>=<quant>"))?;
+                    if !valid_layer_name(name) {
+                        bail!("bad layer name '{name}'");
+                    }
+                    out.push(LayerAssign { layer: name.to_string(), q: LayerQuant::parse(q)? });
+                }
+                layers = Some(out);
+            }
+        }
+        let layers = layers.context("plan id has no layers section")?;
+        let plan = MpPlan { pre, layers, comp, post };
+        plan.validate_shape()?;
+        Ok(plan)
+    }
+
+    /// Structural validity independent of any model: unique layer names,
+    /// comp specs referencing assigned layers with legal grids.
+    pub fn validate_shape(&self) -> Result<()> {
+        let mut seen: BTreeMap<&str, &LayerQuant> = BTreeMap::new();
+        for a in &self.layers {
+            if !valid_layer_name(&a.layer) {
+                bail!("bad layer name '{}'", a.layer);
+            }
+            if seen.insert(a.layer.as_str(), &a.q).is_some() {
+                bail!("layer '{}' assigned twice", a.layer);
+            }
+        }
+        let mut comp_low: BTreeMap<&str, ()> = BTreeMap::new();
+        for c in &self.comp {
+            if comp_low.insert(c.low.as_str(), ()).is_some() {
+                bail!("layer '{}' compensated twice", c.low);
+            }
+            if !c.lam1.is_finite() || !c.lam2.is_finite() {
+                bail!("non-finite lambda in comp {}>{}", c.low, c.high);
+            }
+            match seen.get(c.low.as_str()) {
+                Some(LayerQuant::Ternary { fold_alpha: false }) => {}
+                Some(LayerQuant::Uniform { bits, rule: ScaleRule::AbsMax }) if *bits != 2 => {}
+                Some(q) => bail!(
+                    "comp low '{}' must be raw ternary or k-bit abs-max uniform, got {:?}",
+                    c.low,
+                    q
+                ),
+                None => bail!("comp low '{}' is not an assigned layer", c.low),
+            }
+            match seen.get(c.high.as_str()) {
+                Some(LayerQuant::Uniform { rule: ScaleRule::AbsMax, .. }) => {}
+                Some(q) => {
+                    bail!("comp high '{}' must be abs-max uniform, got {:?}", c.high, q)
+                }
+                None => bail!("comp high '{}' is not an assigned layer", c.high),
+            }
+        }
+        Ok(())
+    }
+
+    /// The assignment of `layer`, if any.
+    pub fn assignment(&self, layer: &str) -> Option<&LayerQuant> {
+        self.layers.iter().find(|a| a.layer == layer).map(|a| &a.q)
+    }
+}
+
+/// Apply an [`MpPlan`] to a model: the single plan executor every
+/// [`super::Method`] now lowers through, and what `@auto:` search plans
+/// run on. Stage order is pre-pass → Eq. 27 compensations → per-layer
+/// quantization of the remaining layers → post-pass, each stage calling
+/// the exact per-layer/per-pair functions the legacy method entry points
+/// use — so a lowered method's output is bit-identical to its legacy
+/// path. With `pool`, pair solves and per-layer quantization fan out
+/// (bit-identical with serial).
+pub fn apply_mp_plan(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    mp: &MpPlan,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<Quantized> {
+    mp.validate_shape()?;
+    let convs = plan.convs();
+    // every assigned layer must exist in the model
+    let known = weight_layers(plan);
+    for a in &mp.layers {
+        if !known.contains(&a.layer) {
+            bail!("plan assigns unknown layer '{}'", a.layer);
+        }
+    }
+
+    // --- pre-pass ---------------------------------------------------------
+    let mut work = match mp.pre {
+        Some(PrePass::DfqEqualize) => dfq::equalize(plan, ckpt, &convs)?,
+        None => ckpt.clone(),
+    };
+    let mut out = work.clone();
+    let mut grids = GridMap::new();
+
+    // --- Eq. 27 compensations (consume their low+high layers) ------------
+    let mut consumed: BTreeMap<&str, ()> = BTreeMap::new();
+    let mut jobs = Vec::with_capacity(mp.comp.len());
+    for c in &mp.comp {
+        let pair = plan
+            .pairs
+            .iter()
+            .find(|p| p.low == c.low && p.high == c.high)
+            .with_context(|| format!("comp {}>{} is not a pair of the model plan", c.low, c.high))?;
+        let bits_low = match mp.assignment(&c.low) {
+            Some(LayerQuant::Uniform { bits, .. }) => *bits,
+            _ => 2, // raw ternary (validate_shape enforced the shape)
+        };
+        let bits_high = match mp.assignment(&c.high) {
+            Some(LayerQuant::Uniform { bits, .. }) => *bits,
+            _ => bail!("comp high '{}' has no uniform assignment", c.high),
+        };
+        let cfg = DfmpcConfig { bits_low, bits_high, lam1: c.lam1, lam2: c.lam2 };
+        consumed.insert(c.low.as_str(), ());
+        consumed.insert(c.high.as_str(), ());
+        jobs.push((pair, cfg));
+    }
+    let work_ref = &work;
+    let solved = super::par_map(pool, jobs, |(pair, cfg)| {
+        solve_pair(plan, work_ref, cfg, &convs, pair).map(|po| (pair, po))
+    });
+    for res in solved {
+        let (pair, po) = res?;
+        out.put(&format!("{}.w", pair.low), po.w_hat);
+        out.put(&format!("{}.mu", po.bn), Tensor::new(vec![po.mu_hat.len()], po.mu_hat));
+        out.put(&format!("{}.var", po.bn), Tensor::new(vec![po.var_hat.len()], po.var_hat));
+        out.put(&format!("{}.w", pair.high), po.w_hq);
+        grids.insert(format!("{}.w", pair.low), po.low_meta);
+        grids.insert(format!("{}.w", pair.high), po.high_meta);
+    }
+
+    // --- per-layer quantization of everything the comps did not take -----
+    let layer_jobs: Vec<&LayerAssign> = mp
+        .layers
+        .iter()
+        .filter(|a| !consumed.contains_key(a.layer.as_str()) && a.q != LayerQuant::Fp32)
+        .collect();
+    let quantized = super::par_map(pool, layer_jobs, |a| -> Result<(String, Tensor, GridMeta)> {
+        let w = work_ref.get(&format!("{}.w", a.layer))?;
+        let (q, meta) = match a.q {
+            // filtered out of the jobs above; kept as a structured error
+            // (this module is under the panic-path contract)
+            LayerQuant::Fp32 => bail!("fp32 layer '{}' in quantization jobs", a.layer),
+            LayerQuant::Ternary { fold_alpha } => {
+                let (t, _delta, alpha) = ternarize(w);
+                if fold_alpha {
+                    (t.map(|v| v * alpha), GridMeta::Ternary { alpha })
+                } else {
+                    (t, GridMeta::Ternary { alpha: 1.0 })
+                }
+            }
+            LayerQuant::Uniform { bits, rule: ScaleRule::AbsMax } => {
+                let s = w.abs_max();
+                (
+                    quantize_uniform_scaled(w, bits, s),
+                    GridMeta::Uniform { bits, scale: s, chan: None },
+                )
+            }
+            LayerQuant::Uniform { bits, rule: ScaleRule::Omse } => {
+                let (q, s) = omse::quantize_omse_scaled(w, bits);
+                (q, GridMeta::Uniform { bits, scale: s, chan: None })
+            }
+            LayerQuant::Uniform { bits, rule: ScaleRule::Ocs { expand } } => {
+                ocs::quantize_ocs_grid(w, bits, expand)
+            }
+        };
+        Ok((a.layer.clone(), q, meta))
+    });
+    for res in quantized {
+        let (name, q, meta) = res?;
+        grids.insert(format!("{name}.w"), meta);
+        out.put(&format!("{name}.w"), q);
+    }
+
+    // --- post-pass --------------------------------------------------------
+    match mp.post {
+        Some(PostPass::DfqBias) => dfq::bias_correct(plan, &convs, &mut work, &mut out)?,
+        Some(PostPass::ZeroqBias { samples, iters }) => {
+            zeroq_sim::bias_correct(plan, &work, &mut out, samples, iters, pool)?;
+        }
+        None => {}
+    }
+    Ok(Quantized { ckpt: out, grids })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_of(id: &str) -> MpPlan {
+        MpPlan::parse(id).expect(id)
+    }
+
+    #[test]
+    fn id_roundtrips_exactly() {
+        for id in [
+            "c1=t,c2=u6,fc=u8",
+            "c1=ta,c2=u6,fc=f32",
+            "c1=t,c2=u6,fc=u8;comp=c1>c2:0.5:0",
+            "pre=dfq-eq;c1=u6,c2=u6,fc=u6;post=dfq-bias",
+            "c1=u6,c2=u6,fc=u6;post=zeroq:32:64",
+            "c1=o4,c2=ocs4:0.05,fc=u8",
+        ] {
+            let p = plan_of(id);
+            assert_eq!(p.id(), id, "canonical id drifted");
+            assert_eq!(MpPlan::parse(&p.id()).expect("reparse"), p);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "",
+            "c1",
+            "c1=q9",
+            "c1=u0",
+            "c1=u99",
+            "c1=t,c1=u6",
+            "c1=t;comp=c1>c2:0.5:0", // comp high unassigned
+            "c1=t,c2=u6;comp=c1:0.5:0",
+            "c1=ta,c2=u6;comp=c1>c2:0.5:0", // folded alpha can't be compensated
+            "c1=u2,c2=u6;comp=c1>c2:0.5:0", // u2 low would silently ternarize
+            "c1=t,c2=u6;post=nope",
+            "pre=nope;c1=t",
+            "c;1=t",
+        ] {
+            assert!(MpPlan::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn comp_low_shapes_are_enforced() {
+        // raw ternary low and non-2-bit uniform low are both legal
+        plan_of("c1=t,c2=u6;comp=c1>c2:0.5:0");
+        plan_of("c1=u3,c2=u6;comp=c1>c2:0.5:0");
+    }
+}

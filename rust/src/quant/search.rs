@@ -1,0 +1,356 @@
+//! Data-free mixed-precision search under a packed-size budget.
+//!
+//! The paper's Eq. 22 surrogate (the data-free reconstruction residual
+//! DF-MPC minimizes in closed form) is computable from weights + BN
+//! statistics alone, so ranking layers and searching bit assignments
+//! needs no data — in the spirit of ZeroQ's Pareto assignment, but with
+//! DF-MPC's residual as the sensitivity signal. The search is a greedy
+//! demotion walk: every layer starts at fp32 and the step with the best
+//! surrogate-loss-per-byte-saved ratio is applied until the predicted
+//! packed size fits the budget. Chains and step costs are fixed up
+//! front, so the demotion sequence is budget-independent — a larger
+//! budget's plan is a strict prefix of a smaller one's (that is what the
+//! monotonicity proptest pins) — and fully deterministic: no data, no
+//! RNG, total-order tie-breaks (ratio, then layer name, then level).
+//!
+//! This module is also the `@auto:<budget-mb>` parse surface of the
+//! serving stack ([`parse_budget_mb`]) and is under the `panic-path` /
+//! `checked-arith` lint contracts: structured errors only.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{Checkpoint, ConvSpec, Pair, Plan};
+use crate::tensor::ops::BN_EPS;
+use crate::tensor::qtensor::{grid_stored_bytes, ternary_stored_bytes};
+use crate::tensor::Tensor;
+
+use super::compensate::{recalibrate_bn, solve_c};
+use super::plan::{weight_layers, CompSpec, LayerAssign, LayerQuant, MpPlan, ScaleRule};
+use super::ternary::ternarize;
+use super::uniform::quantize_uniform_scaled;
+
+/// Largest accepted budget (MB). Anything above is an overflow rejection:
+/// 1e9 MB = 1 PB already exceeds any packed model by orders of magnitude,
+/// and the cap keeps the byte conversion inside exact-integer f64 range.
+pub const MAX_BUDGET_MB: f64 = 1e9;
+
+/// Parse the `<mb>` of an `"auto:<mb>"` variant spec. Fractional MB are
+/// legal (test models are KB-sized). Malformed, non-finite, zero,
+/// negative, and overflow budgets are structured errors — this is the
+/// serving admission path, so it must never panic.
+pub fn parse_budget_mb(spec: &str) -> Result<f64> {
+    let mb: f64 = spec.parse().map_err(|_| anyhow::anyhow!("bad budget '{spec}'"))?;
+    if !mb.is_finite() {
+        bail!("budget '{spec}' is not finite");
+    }
+    if mb <= 0.0 {
+        bail!("budget must be > 0 MB, got '{spec}'");
+    }
+    if mb > MAX_BUDGET_MB {
+        bail!("budget '{spec}' MB overflows the {MAX_BUDGET_MB:e} MB cap");
+    }
+    Ok(mb)
+}
+
+/// A validated budget in bytes. The parse cap keeps `mb * 1e6` well
+/// inside f64's exact-integer range, so the conversion is lossless.
+pub fn budget_bytes(mb: f64) -> usize {
+    (mb * 1e6).round() as usize
+}
+
+/// What the search found for one budget.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    /// the winning per-layer plan (no pre/post passes — pure mixed
+    /// precision with Eq. 27 compensation on demoted pair lows)
+    pub mp: MpPlan,
+    pub budget_bytes: usize,
+    /// predicted packed size of `mp` ([`super::size::predicted_packed_bytes`])
+    pub predicted_bytes: usize,
+    /// packed size with every layer at fp32 (the search's starting point)
+    pub fp32_bytes: usize,
+    /// Eq. 22 surrogate loss summed over the chosen per-layer levels
+    pub surrogate_loss: f64,
+    /// greedy demotion steps applied
+    pub demotions: usize,
+}
+
+/// How a layer participates in the plan's pair structure (fixed up
+/// front, so chains — and with them the demotion order — never depend
+/// on the budget).
+#[derive(Clone, Copy, PartialEq)]
+enum Role {
+    /// high conv of some pair: must stay on a k-bit abs-max grid so an
+    /// Eq. 27 compensation can scale its input channels
+    High,
+    /// low conv of a pair (with BN): its bottom level is raw ternary +
+    /// closed-form compensation into the paired high conv
+    Low,
+    /// everything else bottoms out at 2-bit uniform
+    Free,
+}
+
+/// One rung of a layer's demotion chain.
+struct Level {
+    q: LayerQuant,
+    /// packed bytes at this level, including the 4·cout Eq.-7 factor
+    /// overhead the compensated high conv gains when a low goes ternary
+    eff_bytes: usize,
+    /// Eq. 22 surrogate loss at this level (cumulative-max'd so chains
+    /// are monotone and step deltas are never negative)
+    loss: f64,
+    /// the compensation this level switches on (pair lows' bottom rung)
+    comp: Option<CompSpec>,
+}
+
+const UNIFORM_LADDER: [u32; 5] = [8, 6, 5, 4, 3];
+
+fn uniform_level(bits: u32) -> LayerQuant {
+    LayerQuant::Uniform { bits, rule: ScaleRule::AbsMax }
+}
+
+/// Per-out-channel BN gain (gamma_j / sigma_j)^2, or uniform 1.0 for
+/// BN-less layers — the weighting that turns weight MSE into the Eq. 22
+/// activation-space surrogate.
+fn bn_gains(plan: &Plan, ckpt: &Checkpoint, name: &str, out_ch: usize) -> Result<Vec<f64>> {
+    let Some(bn) = plan.bn_of.get(name) else {
+        return Ok(vec![1.0; out_ch]);
+    };
+    let gamma = &ckpt.get(&format!("{bn}.gamma"))?.data;
+    let var = &ckpt.get(&format!("{bn}.var"))?.data;
+    let mut g = Vec::with_capacity(out_ch);
+    for j in 0..out_ch {
+        let (gj, vj) = (gamma.get(j).copied().unwrap_or(1.0), var.get(j).copied().unwrap_or(1.0));
+        let a = (gj / (vj + BN_EPS).sqrt()) as f64;
+        g.push(a * a);
+    }
+    Ok(g)
+}
+
+/// BN-weighted squared reconstruction error of quantizing `w` at `bits`
+/// on the abs-max DoReFa grid (fixed-order f64 accumulation).
+fn uniform_loss(w: &Tensor, gains: &[f64], bits: u32) -> f64 {
+    let q = quantize_uniform_scaled(w, bits, w.abs_max());
+    let out_ch = if w.shape.is_empty() { 1 } else { w.shape[0] };
+    let per = w.data.len() / out_ch.max(1);
+    let mut total = 0.0f64;
+    for j in 0..out_ch {
+        let mut err = 0.0f64;
+        for p in j * per..(j + 1) * per {
+            let d = (q.data[p] - w.data[p]) as f64;
+            err += d * d;
+        }
+        total += gains.get(j).copied().unwrap_or(1.0) * err;
+    }
+    total
+}
+
+/// Surrogate loss of the pair-low bottom rung: raw ternary + BN
+/// recalibration + the Eq. 27 closed-form compensation, scored by
+/// `solve_c`'s post-solve Eq. 22 residual (lam1/lam2 at the paper's
+/// Fig. 3 optimum — exactly what the executor will run).
+fn ternary_comp_loss(plan: &Plan, ckpt: &Checkpoint, pair: &Pair) -> Result<f64> {
+    let bn = plan.bn_of.get(&pair.low).context("pair low has no BN")?;
+    let w_l = ckpt.get(&format!("{}.w", pair.low))?;
+    let gamma = &ckpt.get(&format!("{bn}.gamma"))?.data;
+    let beta = &ckpt.get(&format!("{bn}.beta"))?.data;
+    let mu = &ckpt.get(&format!("{bn}.mu"))?.data;
+    let var = &ckpt.get(&format!("{bn}.var"))?.data;
+    let (w_hat, _delta, _alpha) = ternarize(w_l);
+    let (mu_hat, var_hat) = recalibrate_bn(w_l, &w_hat, mu, var);
+    let (_c, _before, after) =
+        solve_c(w_l, &w_hat, gamma, beta, mu, var, &mu_hat, &var_hat, 0.5, 0.0);
+    Ok(after as f64)
+}
+
+/// Build one layer's demotion chain (fp32 → u8 → … → u3 → bottom).
+fn build_chain(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    convs: &BTreeMap<String, ConvSpec>,
+    name: &str,
+    role: Role,
+    pair: Option<&Pair>,
+) -> Result<Vec<Level>> {
+    let w = ckpt.get(&format!("{name}.w"))?;
+    let n = w.data.len();
+    let out_ch = if w.shape.is_empty() { 1 } else { w.shape[0] };
+    let gains = bn_gains(plan, ckpt, name, out_ch)?;
+    let mut chain = vec![Level {
+        q: LayerQuant::Fp32,
+        eff_bytes: n.saturating_mul(4),
+        loss: 0.0,
+        comp: None,
+    }];
+    for bits in UNIFORM_LADDER {
+        chain.push(Level {
+            q: uniform_level(bits),
+            eff_bytes: grid_stored_bytes(n, bits, 0),
+            loss: uniform_loss(w, &gains, bits),
+            comp: None,
+        });
+    }
+    match (role, pair) {
+        (Role::Low, Some(p)) => {
+            // the Eq.-7 channel factors the paired high conv gains are
+            // charged to this step, so byte deltas stay layer-local
+            let factor_bytes = convs.get(&p.low).map_or(out_ch, |c| c.cout).saturating_mul(4);
+            chain.push(Level {
+                q: LayerQuant::Ternary { fold_alpha: false },
+                eff_bytes: ternary_stored_bytes(n).saturating_add(factor_bytes),
+                loss: ternary_comp_loss(plan, ckpt, p)?,
+                comp: Some(CompSpec {
+                    low: p.low.clone(),
+                    high: p.high.clone(),
+                    lam1: 0.5,
+                    lam2: 0.0,
+                }),
+            });
+        }
+        (Role::Free, _) => {
+            chain.push(Level {
+                q: uniform_level(2),
+                eff_bytes: grid_stored_bytes(n, 2, 0),
+                loss: uniform_loss(w, &gains, 2),
+                comp: None,
+            });
+        }
+        _ => {} // highs stop at u3; a BN-less "low" was already reclassified
+    }
+    // monotone losses: a lower level is never scored better than a
+    // higher one, so greedy deltas are non-negative
+    let mut running = 0.0f64;
+    for level in &mut chain {
+        running = running.max(level.loss);
+        level.loss = running;
+    }
+    Ok(chain)
+}
+
+fn classify(plan: &Plan, name: &str) -> (Role, Option<usize>) {
+    // a layer that is high of one pair and low of another serves the
+    // earlier pair's compensation; it must stay on a k-bit uniform grid
+    if plan.pairs.iter().any(|p| p.high == name) {
+        return (Role::High, None);
+    }
+    if let Some(i) = plan.pairs.iter().position(|p| p.low == name) {
+        if plan.bn_of.contains_key(name) {
+            return (Role::Low, Some(i));
+        }
+    }
+    (Role::Free, None)
+}
+
+/// Greedy data-free mixed-precision search: pick the per-layer bit
+/// assignment (and which pair lows get Eq. 27 compensation) whose
+/// predicted packed size fits `budget_bytes`, demoting the cheapest
+/// surrogate-loss-per-byte steps first. Pure function of (checkpoint,
+/// budget): deterministic, no data, no RNG. Errors if even the lowest
+/// assignment cannot fit the budget.
+pub fn search(plan: &Plan, ckpt: &Checkpoint, budget_bytes: usize) -> Result<SearchOutcome> {
+    let convs = plan.convs();
+    let names = weight_layers(plan);
+    let mut chains = Vec::with_capacity(names.len());
+    for name in &names {
+        let (role, pair_idx) = classify(plan, name);
+        let pair = pair_idx.and_then(|i| plan.pairs.get(i));
+        chains.push(build_chain(plan, ckpt, &convs, name, role, pair)?);
+    }
+
+    let mut cur = vec![0usize; names.len()];
+    let mut total = 0usize;
+    for chain in &chains {
+        total = total.saturating_add(chain[0].eff_bytes);
+    }
+    let fp32_bytes = total;
+
+    let mut demotions = 0usize;
+    while total > budget_bytes {
+        // best next step: min (loss-per-byte ratio, layer name, level)
+        let mut best: Option<(f64, &str, usize)> = None;
+        for (i, chain) in chains.iter().enumerate() {
+            let Some(next) = chain.get(cur[i] + 1) else { continue };
+            let here = &chain[cur[i]];
+            if next.eff_bytes >= here.eff_bytes {
+                continue; // this step frees nothing — never useful
+            }
+            let saved = (here.eff_bytes - next.eff_bytes) as f64;
+            let ratio = (next.loss - here.loss) / saved;
+            let key = (ratio, names[i].as_str(), cur[i] + 1);
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    matches!(
+                        key.0.total_cmp(&b.0).then_with(|| key.1.cmp(b.1)).then(key.2.cmp(&b.2)),
+                        std::cmp::Ordering::Less
+                    )
+                }
+            };
+            if better {
+                best = Some(key);
+            }
+        }
+        let Some((_, name, _)) = best else {
+            bail!(
+                "budget {budget_bytes} B is below the minimum achievable packed size \
+                 ({total} B at the lowest assignment)"
+            );
+        };
+        let i = names.iter().position(|n| n == name).context("chain index")?;
+        total = total - (chains[i][cur[i]].eff_bytes - chains[i][cur[i] + 1].eff_bytes);
+        cur[i] += 1;
+        demotions += 1;
+    }
+
+    let mut layers = Vec::with_capacity(names.len());
+    let mut comp: Vec<(usize, CompSpec)> = Vec::new();
+    let mut surrogate_loss = 0.0f64;
+    for (i, name) in names.iter().enumerate() {
+        let level = &chains[i][cur[i]];
+        layers.push(LayerAssign { layer: name.clone(), q: level.q });
+        surrogate_loss += level.loss;
+        if let Some(c) = &level.comp {
+            let order = plan
+                .pairs
+                .iter()
+                .position(|p| p.low == c.low)
+                .context("comp pair vanished")?;
+            comp.push((order, c.clone()));
+        }
+    }
+    // canonical comp order: the model plan's pair order (stable, so the
+    // plan id — and the registry variant it names — is deterministic)
+    comp.sort_by_key(|(order, _)| *order);
+    let mp = MpPlan {
+        pre: None,
+        layers,
+        comp: comp.into_iter().map(|(_, c)| c).collect(),
+        post: None,
+    };
+    mp.validate_shape()?;
+    Ok(SearchOutcome {
+        mp,
+        budget_bytes,
+        predicted_bytes: total,
+        fp32_bytes,
+        surrogate_loss,
+        demotions,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_parse_rejects_junk() {
+        for bad in ["", "x", "nan", "inf", "-1", "0", "0.0", "-0.5", "1e300", "1000000001"] {
+            assert!(parse_budget_mb(bad).is_err(), "'{bad}' must be rejected");
+        }
+        assert_eq!(parse_budget_mb("0.5").expect("0.5"), 0.5);
+        assert_eq!(parse_budget_mb("1e3").expect("1e3"), 1000.0);
+        assert_eq!(budget_bytes(0.5), 500_000);
+    }
+}

@@ -12,8 +12,12 @@
 //! the `analytic_matches_measured_*` tests); they differ only by byte
 //! rounding, OCS's scattered-split bookkeeping, and fp32 fallbacks.
 
-use crate::model::{Op, PackedCheckpoint, Plan};
+use anyhow::{Context, Result};
 
+use crate::model::{Checkpoint, Op, PackedCheckpoint, Plan};
+use crate::tensor::qtensor::{grid_stored_bytes, ternary_stored_bytes};
+
+use super::plan::{LayerQuant, MpPlan};
 use super::Method;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -115,6 +119,57 @@ pub fn packed_model_size(plan: &Plan, method: &Method, packed: &PackedCheckpoint
         }
     }
     SizeReport { mb: bytes as f64 / 1e6, ..analytic }
+}
+
+/// Predicted packed bytes of an [`MpPlan`] applied to this model —
+/// the `@auto:` search's cost model. Mirrors what
+/// [`crate::tensor::qtensor::QTensor::stored_bytes`] will measure after
+/// the plan executes and the result is packed: ternary trit streams,
+/// k-bit index streams, one f32 scale per packed tensor, one f32 per
+/// Eq.-7 channel factor on compensated high convs, and dense fp32 for
+/// unquantized layers. Numels are read from the checkpoint, so grouped
+/// convs are charged exactly.
+pub fn predicted_packed_bytes(plan: &Plan, ckpt: &Checkpoint, mp: &MpPlan) -> Result<usize> {
+    let mut total = 0usize;
+    for a in &mp.layers {
+        let numel = ckpt.get(&format!("{}.w", a.layer))?.data.len();
+        let bytes = match a.q {
+            LayerQuant::Fp32 => numel.saturating_mul(4),
+            LayerQuant::Ternary { .. } => ternary_stored_bytes(numel),
+            LayerQuant::Uniform { bits, .. } => {
+                // a compensated high conv carries one f32 factor per
+                // channel of its paired low conv
+                let factors = mp
+                    .comp
+                    .iter()
+                    .filter(|c| c.high == a.layer)
+                    .map(|c| {
+                        ckpt.get(&format!("{}.w", c.low)).map(|w| {
+                            if w.shape.is_empty() {
+                                0
+                            } else {
+                                w.shape[0]
+                            }
+                        })
+                    })
+                    .sum::<Result<usize>>()?;
+                grid_stored_bytes(numel, bits, factors)
+            }
+        };
+        total = total.saturating_add(bytes);
+    }
+    // layers the plan does not mention stay fp32-dense
+    for name in super::plan::weight_layers(plan) {
+        if mp.assignment(&name).is_none() {
+            let numel = ckpt
+                .get(&format!("{name}.w"))
+                .with_context(|| format!("unassigned layer '{name}'"))?
+                .data
+                .len();
+            total = total.saturating_add(numel.saturating_mul(4));
+        }
+    }
+    Ok(total)
 }
 
 #[cfg(test)]

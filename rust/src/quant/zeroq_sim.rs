@@ -102,13 +102,30 @@ pub fn zeroq_sim(
     iters: usize,
     pool: Option<&Arc<ThreadPool>>,
 ) -> Result<(Checkpoint, GridMap)> {
-    let calib = synthesize(plan, ckpt, samples, iters, 0xD15C0, pool)?;
     let (mut quant, grids) = uniform_all(plan, ckpt, bits, pool)?;
+    bias_correct(plan, ckpt, &mut quant, samples, iters, pool)?;
+    Ok((quant, grids))
+}
+
+/// The synthesize + empirical-correction tail of [`zeroq_sim`]: shift
+/// every BN beta by the fp-vs-quant pre-normalization mean mismatch on
+/// the synthesized calibration set. Reads the FP32 checkpoint, mutates
+/// the quantized one. Also the [`super::plan::PostPass::ZeroqBias`]
+/// stage of the plan executor.
+pub(crate) fn bias_correct(
+    plan: &Plan,
+    ckpt: &Checkpoint,
+    quant: &mut Checkpoint,
+    samples: usize,
+    iters: usize,
+    pool: Option<&Arc<ThreadPool>>,
+) -> Result<()> {
+    let calib = synthesize(plan, ckpt, samples, iters, 0xD15C0, pool)?;
     // empirical correction: match per-BN pre-normalization means
     let mut fp_stats = ActStats::new();
     Engine::with_exec(plan, ckpt, pool.cloned()).forward_collect(&calib, &mut fp_stats)?;
     let mut q_stats = ActStats::new();
-    Engine::with_exec(plan, &quant, pool.cloned()).forward_collect(&calib, &mut q_stats)?;
+    Engine::with_exec(plan, quant, pool.cloned()).forward_collect(&calib, &mut q_stats)?;
     let bn_names: Vec<String> = plan
         .ops
         .iter()
@@ -128,5 +145,5 @@ pub fn zeroq_sim(
         }
         quant.put(&format!("{name}.beta"), beta);
     }
-    Ok((quant, grids))
+    Ok(())
 }

@@ -53,6 +53,23 @@ pub type GridMap = BTreeMap<String, GridMeta>;
 /// Maximum grid bitwidth the packed layout supports.
 pub const MAX_GRID_BITS: u32 = 16;
 
+/// Predicted stored size of a ternary tensor with `numel` weights: the
+/// 2-bit trit stream plus the 4-byte alpha. Mirrors
+/// [`QTensor::stored_bytes`] exactly (unit-tested against a real pack),
+/// so plan-driven size prediction (`quant::size::predicted_packed_bytes`,
+/// the `@auto:` search cost model) and measured packed bytes agree.
+pub fn ternary_stored_bytes(numel: usize) -> usize {
+    (2 * numel + 7) / 8 + 4
+}
+
+/// Predicted stored size of a `bits`-wide grid tensor with `numel`
+/// weights and `chan_factors` per-channel multipliers: the index stream,
+/// the 4-byte scale, and 4 bytes per factor. Mirrors
+/// [`QTensor::stored_bytes`] exactly (unit-tested against a real pack).
+pub fn grid_stored_bytes(numel: usize, bits: u32, chan_factors: usize) -> usize {
+    (numel * bits as usize + 7) / 8 + 4 + 4 * chan_factors
+}
+
 /// Pack `vals` (each `< 2^bits`) into an LSB-first bitstream.
 pub fn pack_bits(vals: &[u32], bits: u32) -> Vec<u8> {
     assert!((1..=MAX_GRID_BITS).contains(&bits), "unsupported bitwidth {bits}");
@@ -425,6 +442,27 @@ mod tests {
         // 16 trits at 2 bits = 4 bytes, + 4 for alpha
         assert_eq!(q.stored_bytes(), 8);
         assert_eq!(QTensor::Fp32(t).stored_bytes(), 64);
+    }
+
+    #[test]
+    fn predicted_bytes_match_measured_pack() {
+        // the analytic helpers must mirror stored_bytes() exactly — the
+        // @auto: search's cost model is built on them
+        for n in [1usize, 5, 16, 33, 100] {
+            let trits = Tensor::new(vec![n], (0..n).map(|i| ((i % 3) as f32) - 1.0).collect());
+            let tern = QTensor::pack(&trits, &GridMeta::Ternary { alpha: 1.0 });
+            assert!(tern.is_packed());
+            assert_eq!(tern.stored_bytes(), ternary_stored_bytes(n), "ternary n={n}");
+            let t = Tensor::new(vec![n], (0..n).map(|i| (i as f32 - 2.0) * 0.1).collect());
+            for bits in [2u32, 3, 4, 6, 8] {
+                let s = t.abs_max().max(1e-6);
+                let q = crate::quant::uniform::quantize_uniform_scaled(&t, bits, s);
+                let g = QTensor::pack(&q, &GridMeta::Uniform { bits, scale: s, chan: None });
+                if g.is_packed() {
+                    assert_eq!(g.stored_bytes(), grid_stored_bytes(n, bits, 0), "grid n={n} k={bits}");
+                }
+            }
+        }
     }
 
     #[test]

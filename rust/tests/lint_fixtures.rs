@@ -86,6 +86,41 @@ fn panic_path_covers_the_event_loop_modules() {
 }
 
 #[test]
+fn panic_path_covers_the_auto_plan_modules() {
+    // plan ids and `@auto:` budgets arrive from untrusted variant keys;
+    // the plan/search modules joined the no-panic contract with the
+    // serving admission surface they extend
+    for path in ["rust/src/quant/plan.rs", "rust/src/quant/search.rs"] {
+        let f = lint_fixture(path, "panic_fire.rs");
+        let lines: Vec<usize> = fired(&f, "panic-path").iter().map(|(l, _)| *l).collect();
+        assert_eq!(lines, vec![4, 5, 7, 10], "panic-path must cover {path}");
+    }
+}
+
+#[test]
+fn checked_arith_covers_the_budget_parse_surface() {
+    // quant/search's parse fns handle network-supplied budgets, so the
+    // overflow contract applies there too...
+    let f = lint_fixture("rust/src/quant/search.rs", "checked_fire.rs");
+    let lines: Vec<usize> = fired(&f, "checked-arith").iter().map(|(l, _)| *l).collect();
+    assert_eq!(lines, vec![5, 5, 5, 6], "checked-arith must cover quant/search");
+    // ...while quant/plan (no byte-level parsing) stays out of scope
+    let f = lint_fixture("rust/src/quant/plan.rs", "checked_fire.rs");
+    assert_eq!(unwaived(&f), Vec::<String>::new());
+}
+
+#[test]
+fn bit_exactness_covers_the_plan_executor_and_search() {
+    // the `quant/` prefix scope reaches the new plan executor and the
+    // surrogate-loss accumulation of the search
+    for path in ["rust/src/quant/plan.rs", "rust/src/quant/search.rs"] {
+        let f = lint_fixture(path, "bit_exact_fire.rs");
+        let lines: Vec<usize> = fired(&f, "bit-exactness").iter().map(|(l, _)| *l).collect();
+        assert_eq!(lines, vec![4, 5, 6, 10], "bit-exactness must cover {path}");
+    }
+}
+
+#[test]
 fn bit_exactness_fires_on_each_hazard() {
     let f = lint_fixture("rust/src/tensor/ops.rs", "bit_exact_fire.rs");
     let hits = fired(&f, "bit-exactness");

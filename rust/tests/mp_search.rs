@@ -1,0 +1,444 @@
+//! Mixed-precision plans + data-free search, tier-1 (artifact-free,
+//! wall-clock-bounded):
+//!
+//! - `MpPlan::id` is parse-roundtrippable over randomly generated plans
+//!   (hand-rolled proptest, seed printed on failure);
+//! - every existing `Method` lowers to an `MpPlan` whose executor output
+//!   is **bit-identical** to the legacy per-method entry point — the
+//!   refactor's core contract, checked per method over several random
+//!   checkpoints;
+//! - the `@auto:` search is deterministic (same plan id, bytes, loss on
+//!   repeated runs) and budget-monotone: a larger budget never predicts
+//!   a smaller size, never scores a worse surrogate loss, and never
+//!   demotes more;
+//! - `"<model>@auto:<mb>"` serves end-to-end through the registry with
+//!   logits bit-identical to offline search + plan-apply + Engine, the
+//!   plan visible in the status snapshot, measured packed bytes equal to
+//!   the search's prediction and within budget, and two different
+//!   budgets resident in one process;
+//! - malformed `@auto:` budgets are structured `bad_variant` rejections
+//!   at admission; an infeasible (too small) budget fails at prepare
+//!   with a structured error naming the minimum achievable size.
+
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
+use std::sync::Arc;
+
+use dfmpc::coordinator::{LanePool, LanePoolConfig, ServeError};
+use dfmpc::infer::{Engine, InferBackend, RegistryLane};
+use dfmpc::model::{Checkpoint, ModelRegistry, Plan, VariantSpec};
+use dfmpc::quant::plan::{
+    apply_mp_plan, CompSpec, LayerAssign, LayerQuant, MpPlan, PostPass, PrePass, ScaleRule,
+};
+use dfmpc::quant::search::{budget_bytes, search};
+use dfmpc::quant::{GridMap, Method};
+use dfmpc::tensor::Tensor;
+use dfmpc::util::rng::Rng;
+
+/// Same tiny32 shape the registry integration tests serve: one
+/// compensated pair + an fc head, so every plan feature (ternary low,
+/// uniform high, Eq. 27 comp, free tail) exercises.
+const SERVE_PLAN: &str = r#"{
+  "name": "tiny32", "input": [3, 32, 32], "num_classes": 10,
+  "ops": [
+    {"op": "conv", "name": "c1", "cin": 3, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c1_bn", "ch": 8},
+    {"op": "relu"},
+    {"op": "conv", "name": "c2", "cin": 8, "cout": 16, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c2_bn", "ch": 16},
+    {"op": "relu"},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc", "cin": 16, "cout": 10}
+  ],
+  "pairs": [{"low": "c1", "high": "c2", "offset": 0}],
+  "bn_of": {"c1": "c1_bn", "c2": "c2_bn"}
+}"#;
+
+fn fixture_seeded(seed: u64) -> (Arc<Plan>, Arc<Checkpoint>) {
+    let plan = Plan::parse(SERVE_PLAN).unwrap();
+    plan.validate().unwrap();
+    let ckpt = Checkpoint::random_init(&plan, &mut Rng::new(seed));
+    (Arc::new(plan), Arc::new(ckpt))
+}
+
+fn fixture() -> (Arc<Plan>, Arc<Checkpoint>) {
+    fixture_seeded(321)
+}
+
+fn registry_over(plan: &Arc<Plan>, ckpt: &Arc<Checkpoint>) -> Arc<ModelRegistry> {
+    let reg = Arc::new(ModelRegistry::new(usize::MAX, None));
+    reg.register_base("tiny32", Arc::clone(plan), Arc::clone(ckpt)).unwrap();
+    reg
+}
+
+fn batch_of(img: &Tensor, n: usize) -> Tensor {
+    let per = img.data.len();
+    let mut data = Vec::with_capacity(n * per);
+    for _ in 0..n {
+        data.extend_from_slice(&img.data);
+    }
+    Tensor::new(vec![n, img.shape[0], img.shape[1], img.shape[2]], data)
+}
+
+/// Bit-exact checkpoint comparison: same tensor set, same shapes, same
+/// f32 bit patterns (no epsilon — the refactor's claim is identity).
+fn assert_ckpt_bits_eq(a: &Checkpoint, b: &Checkpoint, ctx: &str) {
+    assert_eq!(a.order, b.order, "{ctx}: tensor order diverged");
+    assert_eq!(a.tensors.len(), b.tensors.len(), "{ctx}: tensor count diverged");
+    for (name, ta) in &a.tensors {
+        let tb = b.tensors.get(name).unwrap_or_else(|| panic!("{ctx}: '{name}' missing"));
+        assert_eq!(ta.shape, tb.shape, "{ctx}: '{name}' shape diverged");
+        for (i, (va, vb)) in ta.data.iter().zip(&tb.data).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{ctx}: '{name}'[{i}] diverged ({va} vs {vb})"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// plan id roundtrip (proptest)
+// ---------------------------------------------------------------------------
+
+fn random_uniform(r: &mut Rng, abs_max_only: bool, forbid_2bit: bool) -> LayerQuant {
+    let bits = loop {
+        let b = 1 + r.below(16) as u32;
+        if !(forbid_2bit && b == 2) {
+            break b;
+        }
+    };
+    let rule = if abs_max_only {
+        ScaleRule::AbsMax
+    } else {
+        match r.below(3) {
+            0 => ScaleRule::AbsMax,
+            1 => ScaleRule::Omse,
+            _ => ScaleRule::Ocs { expand: 0.01 + 0.5 * r.f32() },
+        }
+    };
+    LayerQuant::Uniform { bits, rule }
+}
+
+fn random_quant(r: &mut Rng) -> LayerQuant {
+    match r.below(4) {
+        0 => LayerQuant::Fp32,
+        1 => LayerQuant::Ternary { fold_alpha: r.below(2) == 0 },
+        _ => random_uniform(r, false, false),
+    }
+}
+
+/// A random shape-valid plan: unique layer names, a comp pair with the
+/// legal low/high grids when the coin lands, optional pre/post passes.
+fn random_plan(r: &mut Rng) -> MpPlan {
+    let n = 1 + r.below(5) as usize;
+    let mut layers: Vec<LayerAssign> = (0..n)
+        .map(|i| {
+            let name = match r.below(3) {
+                0 => format!("l{i}"),
+                1 => format!("blk{i}.conv-{i}"),
+                _ => format!("down_{i}"),
+            };
+            LayerAssign { layer: name, q: random_quant(r) }
+        })
+        .collect();
+    let mut comp = Vec::new();
+    if n >= 2 && r.below(5) < 2 {
+        // force legal comp shapes onto the first two layers
+        layers[0].q = if r.below(2) == 0 {
+            LayerQuant::Ternary { fold_alpha: false }
+        } else {
+            random_uniform(r, true, true)
+        };
+        layers[1].q = random_uniform(r, true, false);
+        comp.push(CompSpec {
+            low: layers[0].layer.clone(),
+            high: layers[1].layer.clone(),
+            lam1: r.f32() * 2.0,
+            lam2: r.f32() * 0.1,
+        });
+    }
+    let pre = if r.below(5) == 0 { Some(PrePass::DfqEqualize) } else { None };
+    let post = match r.below(6) {
+        0 => Some(PostPass::DfqBias),
+        1 => Some(PostPass::ZeroqBias {
+            samples: 1 + r.below(128) as usize,
+            iters: 1 + r.below(128) as usize,
+        }),
+        _ => None,
+    };
+    MpPlan { pre, layers, comp, post }
+}
+
+#[test]
+fn plan_id_roundtrips_random_plans() {
+    const CASES: u64 = 60;
+    for case in 0..CASES {
+        let seed = 0x9E37 + case;
+        let mut r = Rng::new(seed);
+        let p = random_plan(&mut r);
+        let id = p.id();
+        let back = MpPlan::parse(&id)
+            .unwrap_or_else(|e| panic!("seed {seed}: id '{id}' failed to reparse: {e:#}"));
+        assert_eq!(back, p, "seed {seed}: id '{id}' did not roundtrip");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// method -> plan lowering bit-identity (the refactor's core contract)
+// ---------------------------------------------------------------------------
+
+/// Every quantization method, spelled so each grid-emission path runs.
+const ALL_METHODS: &[&str] = &[
+    "fp32",
+    "dfmpc:2/6",
+    "dfmpc:3/6",
+    "original:2/6",
+    "original-alpha:2/6",
+    "uniform:4",
+    "dfq:6",
+    "omse:4",
+    "ocs:4:0.2",
+    "zeroq:6:4:2",
+];
+
+/// The retired per-method dispatch, kept as the executor's oracle.
+fn legacy_apply(plan: &Plan, ckpt: &Checkpoint, m: &Method) -> (Checkpoint, GridMap) {
+    use dfmpc::quant as q;
+    match *m {
+        Method::Fp32 => (ckpt.clone(), GridMap::new()),
+        Method::Dfmpc(cfg) => {
+            let (c, _reports, g) = q::dfmpc(plan, ckpt, cfg, None).unwrap();
+            (c, g)
+        }
+        Method::NaiveMixed { bits_low, bits_high } => {
+            q::naive::naive_mixed(plan, ckpt, bits_low, bits_high, None).unwrap()
+        }
+        Method::NaiveMixedAlpha { bits_low, bits_high } => {
+            q::naive::naive_mixed_alpha(plan, ckpt, bits_low, bits_high, None).unwrap()
+        }
+        Method::Uniform { bits } => q::naive::uniform_all(plan, ckpt, bits, None).unwrap(),
+        Method::Dfq { bits } => q::dfq::dfq(plan, ckpt, bits, None).unwrap(),
+        Method::Omse { bits } => q::omse::omse(plan, ckpt, bits, None).unwrap(),
+        Method::Ocs { bits, expand } => {
+            let (c, _ratio, g) = q::ocs::ocs(plan, ckpt, bits, expand, None).unwrap();
+            (c, g)
+        }
+        Method::ZeroqSim { bits, samples, iters } => {
+            q::zeroq_sim::zeroq_sim(plan, ckpt, bits, samples, iters, None).unwrap()
+        }
+    }
+}
+
+#[test]
+fn every_method_lowers_to_bit_identical_plan() {
+    for seed in [321u64, 77, 20260808] {
+        let (plan, ckpt) = fixture_seeded(seed);
+        for spec in ALL_METHODS {
+            let m = Method::parse(spec).unwrap();
+            // the lowered plan is itself canonical + roundtrippable
+            let mp = m.lower(&plan);
+            let id = mp.id();
+            assert_eq!(
+                MpPlan::parse(&id).unwrap_or_else(|e| panic!("{spec}: '{id}': {e:#}")),
+                mp,
+                "{spec}: lowered plan id did not roundtrip"
+            );
+            // executor output == legacy per-method path, bit for bit
+            let (want_ckpt, want_grids) = legacy_apply(&plan, &ckpt, &m);
+            let got = apply_mp_plan(&plan, &ckpt, &mp, None)
+                .unwrap_or_else(|e| panic!("{spec} (seed {seed}): executor failed: {e:#}"));
+            assert_ckpt_bits_eq(&want_ckpt, &got.ckpt, &format!("{spec} (seed {seed})"));
+            assert_eq!(want_grids, got.grids, "{spec} (seed {seed}): grids diverged");
+            // and Method::apply_quantized is exactly lower + executor
+            let via_method = m.apply_quantized(&plan, &ckpt, None).unwrap();
+            assert_ckpt_bits_eq(
+                &got.ckpt,
+                &via_method.ckpt,
+                &format!("{spec} (seed {seed}) via Method"),
+            );
+            assert_eq!(got.grids, via_method.grids, "{spec} (seed {seed}) via Method");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// search: determinism + budget monotonicity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn search_is_deterministic_and_consistent_with_the_cost_model() {
+    let (plan, ckpt) = fixture();
+    let budget = budget_bytes(0.002);
+    let a = search(&plan, &ckpt, budget).unwrap();
+    let b = search(&plan, &ckpt, budget).unwrap();
+    assert_eq!(a.mp.id(), b.mp.id(), "same inputs must pick the same plan");
+    assert_eq!(a.predicted_bytes, b.predicted_bytes);
+    assert_eq!(a.demotions, b.demotions);
+    assert_eq!(
+        a.surrogate_loss.to_bits(),
+        b.surrogate_loss.to_bits(),
+        "surrogate loss must be bit-stable"
+    );
+    // the search's running total and the standalone cost model agree
+    let predicted = dfmpc::quant::predicted_packed_bytes(&plan, &ckpt, &a.mp).unwrap();
+    assert_eq!(a.predicted_bytes, predicted, "search total diverged from size cost model");
+    assert!(a.predicted_bytes <= budget);
+    assert!(a.demotions > 0, "a sub-fp32 budget must demote something");
+}
+
+#[test]
+fn larger_budget_is_never_worse() {
+    let (plan, ckpt) = fixture();
+    // ascending budgets, all feasible for tiny32 (min achievable ~570 B,
+    // fp32 6112 B)
+    let budgets_mb = [0.0008, 0.0012, 0.002, 0.003, 0.004, 0.006];
+    let outcomes: Vec<_> = budgets_mb
+        .iter()
+        .map(|mb| search(&plan, &ckpt, budget_bytes(*mb)).unwrap())
+        .collect();
+    for (o, mb) in outcomes.iter().zip(&budgets_mb) {
+        assert!(
+            o.predicted_bytes <= budget_bytes(*mb),
+            "predicted {} over budget {mb} MB",
+            o.predicted_bytes
+        );
+    }
+    for w in outcomes.windows(2) {
+        let (small, large) = (&w[0], &w[1]);
+        assert!(
+            large.predicted_bytes >= small.predicted_bytes,
+            "larger budget predicted fewer bytes ({} < {})",
+            large.predicted_bytes,
+            small.predicted_bytes
+        );
+        assert!(
+            large.surrogate_loss <= small.surrogate_loss,
+            "larger budget scored worse ({} > {})",
+            large.surrogate_loss,
+            small.surrogate_loss
+        );
+        assert!(
+            large.demotions <= small.demotions,
+            "larger budget demoted more ({} > {})",
+            large.demotions,
+            small.demotions
+        );
+    }
+    // an impossible budget is a structured error naming the floor
+    let err = search(&plan, &ckpt, 100).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("minimum achievable"),
+        "unexpected infeasible-budget error: {err:#}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// registry end-to-end: @auto: served bit-identically, plan in status
+// ---------------------------------------------------------------------------
+
+#[test]
+fn auto_variants_serve_bit_identical_to_offline_search() {
+    let (plan, ckpt) = fixture();
+    let registry = registry_over(&plan, &ckpt);
+    let lane = RegistryLane::new(Arc::clone(&registry), None);
+    let img = dfmpc::data::synth::render_image(9001, 5, 10).0;
+    let x = batch_of(&img, 3);
+
+    // two different budgets coexist as first-class variants
+    for mb in ["0.002", "0.0008"] {
+        let budget = budget_bytes(mb.parse().unwrap());
+        let key = format!("tiny32@auto:{mb}");
+        // offline oracle: search + plan executor + serial engine
+        let found = search(&plan, &ckpt, budget).unwrap();
+        let q = apply_mp_plan(&plan, &ckpt, &found.mp, None).unwrap();
+        let want = Engine::new(&plan, &q.ckpt).forward(&x).unwrap();
+        // served through the registry (packed storage, quantized kernels)
+        let got = lane.infer_batch(&key, x.clone()).unwrap();
+        assert_eq!(want.shape, got.shape, "{key}");
+        assert_eq!(want.data, got.data, "{key}: served logits diverged from offline plan");
+
+        let m = registry.get_or_prepare(&key).unwrap();
+        assert_eq!(m.mp.id(), found.mp.id(), "{key}: resident plan diverged");
+        assert_eq!(m.spec, VariantSpec::Auto { budget_mb: mb.parse().unwrap() });
+        assert_eq!(m.predicted_bytes, Some(found.predicted_bytes));
+        // measured packed weight bytes (bit-packed store + any dense
+        // fp32 weights the plan left alone) match the prediction exactly
+        // and fit the budget
+        let packed = m.packed.as_ref().expect("auto variant must be packed");
+        let mut measured = packed.stored_bytes();
+        for a in found.mp.layers.iter().filter(|a| a.q == LayerQuant::Fp32) {
+            measured += ckpt.get(&format!("{}.w", a.layer)).unwrap().data.len() * 4;
+        }
+        assert_eq!(measured, found.predicted_bytes, "{key}: cost model drifted");
+        assert!(measured <= budget, "{key}: measured {measured} over budget {budget}");
+    }
+
+    // both budgets resident, each reporting its own plan in the snapshot
+    let snap = registry.snapshot();
+    assert_eq!(snap.variants.len(), 2);
+    let mut plans = std::collections::BTreeMap::new();
+    for v in &snap.variants {
+        assert!(v.predicted_bytes.is_some(), "{}: no predicted bytes in snapshot", v.key);
+        plans.insert(v.key.clone(), v.plan_id.clone());
+    }
+    assert!(plans.contains_key("tiny32@auto:0.002"), "{plans:?}");
+    assert!(plans.contains_key("tiny32@auto:0.0008"), "{plans:?}");
+    assert_ne!(
+        plans["tiny32@auto:0.002"], plans["tiny32@auto:0.0008"],
+        "different budgets should pick different plans on tiny32"
+    );
+
+    // alias spellings of one budget share the resident variant
+    let a = registry.get_or_prepare("tiny32@auto:0.002").unwrap();
+    let b = registry.get_or_prepare("tiny32@auto:2e-3").unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "aliased budget spellings re-prepared");
+    assert_eq!(registry.snapshot().prepared, 2);
+}
+
+#[test]
+fn malformed_auto_budgets_reject_at_admission() {
+    let (plan, ckpt) = fixture();
+    let registry = registry_over(&plan, &ckpt);
+    let lanes = RegistryLane::lanes(&registry, 1, None);
+    let pool = LanePool::start_with_registry(
+        lanes,
+        Arc::clone(&registry),
+        "tiny32@fp32".into(),
+        LanePoolConfig { input_shape: Some(vec![3, 32, 32]), ..LanePoolConfig::default() },
+    );
+    let img = dfmpc::data::synth::render_image(9001, 1, 10).0;
+    let bad = [
+        "tiny32@auto:",
+        "tiny32@auto:0",
+        "tiny32@auto:-1",
+        "tiny32@auto:nan",
+        "tiny32@auto:abc",
+        "tiny32@auto:1e300", // overflows the budget cap
+    ];
+    for key in bad {
+        match pool.classify_variant(Some(key), img.clone()) {
+            Err(ServeError::BadVariant { key: k, .. }) => assert_eq!(k, key),
+            other => panic!("{key}: expected bad_variant, got {other:?}"),
+        }
+    }
+    assert_eq!(pool.snapshot().rejected_variant, bad.len() as u64);
+    // a well-formed but infeasible budget passes admission (the spec
+    // parses) and fails at prepare with a structured error
+    let err = registry.get_or_prepare("tiny32@auto:0.0001").unwrap_err();
+    assert!(
+        format!("{err:#}").contains("minimum achievable"),
+        "unexpected infeasible-budget error: {err:#}"
+    );
+    assert!(pool.classify_variant(Some("tiny32@auto:0.0001"), img.clone()).is_err());
+    // the default variant still serves after the rejects
+    let pred = pool.classify(img).unwrap();
+    assert!(pred.class < 10);
+    pool.stop();
+}
