@@ -1,0 +1,208 @@
+#!/usr/bin/env python3
+"""Generate `rust/tests/fixtures/residual_dw.onnx`.
+
+Hand-rolled protobuf encoding (no onnx/protobuf dependency) of a small
+ONNX model exercising every construct the Rust importer supports in one
+topology: a padded 3x3 conv stem, an identity residual block
+(Add(main, shortcut) with the main branch first, matching the tape's
+`add(current, saved)` orientation), a depthwise conv (group == channels),
+GlobalAveragePool, Flatten and a biased Gemm head.
+
+Weights come from a fixed LCG so the committed binary is reproducible:
+re-running this script writes byte-identical output.
+
+    python3 python/tools/make_onnx_fixture.py
+"""
+
+import os
+import struct
+
+# -- protobuf wire helpers (mirrors the encoder in rust/src/model/import.rs) --
+
+
+def vint(v: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v == 0:
+            out.append(b)
+            return bytes(out)
+        out.append(b | 0x80)
+
+
+def f_bytes(field: int, payload: bytes) -> bytes:
+    return vint(field << 3 | 2) + vint(len(payload)) + payload
+
+
+def f_str(field: int, s: str) -> bytes:
+    return f_bytes(field, s.encode())
+
+
+def f_varint(field: int, v: int) -> bytes:
+    return vint(field << 3) + vint(v)
+
+
+def packed_i64s(vals) -> bytes:
+    return b"".join(vint(v) for v in vals)
+
+
+def attr_int(name: str, v: int) -> bytes:
+    return f_str(1, name) + f_varint(3, v) + f_varint(20, 2)  # INT
+
+
+def attr_ints(name: str, vals) -> bytes:
+    return f_str(1, name) + f_bytes(8, packed_i64s(vals)) + f_varint(20, 7)  # INTS
+
+
+def attr_float(name: str, v: float) -> bytes:
+    return f_str(1, name) + vint(2 << 3 | 5) + struct.pack("<f", v) + f_varint(20, 1)
+
+
+def node(op: str, name: str, ins, outs, attrs=()) -> bytes:
+    out = b"".join(f_str(1, i) for i in ins)
+    out += b"".join(f_str(2, o) for o in outs)
+    out += f_str(3, name) + f_str(4, op)
+    out += b"".join(f_bytes(5, a) for a in attrs)
+    return out
+
+
+def init(name: str, dims, data) -> bytes:
+    raw = b"".join(struct.pack("<f", v) for v in data)
+    return (
+        f_bytes(1, packed_i64s(dims))
+        + f_varint(2, 1)  # data_type FLOAT
+        + f_bytes(9, raw)  # raw_data
+        + f_str(8, name)
+    )
+
+
+def value_info(name: str, dims) -> bytes:
+    shape = b"".join(f_bytes(1, f_varint(1, d)) for d in dims)
+    return f_str(1, name) + f_bytes(2, f_bytes(1, f_bytes(2, shape)))
+
+
+def model(graph_name: str, nodes, inits, inputs, outputs) -> bytes:
+    g = b"".join(f_bytes(1, n) for n in nodes)
+    g += f_str(2, graph_name)
+    g += b"".join(f_bytes(5, t) for t in inits)
+    g += b"".join(f_bytes(11, i) for i in inputs)
+    g += b"".join(f_bytes(12, o) for o in outputs)
+    return f_varint(1, 8) + f_bytes(7, g)  # ir_version + graph
+
+
+# -- deterministic weights ----------------------------------------------------
+
+
+class Lcg:
+    """Numerical Recipes LCG; uniform in [-0.25, 0.25)."""
+
+    def __init__(self, seed: int):
+        self.state = seed & 0xFFFFFFFF
+
+    def next(self) -> float:
+        self.state = (self.state * 1664525 + 1013904223) & 0xFFFFFFFF
+        return (self.state / 2**32 - 0.5) * 0.5
+
+
+def uniform(rng: Lcg, n: int):
+    return [rng.next() for _ in range(n)]
+
+
+def bn_inits(name: str, ch: int, rng: Lcg):
+    """gamma near 1, beta small, mu small, var in [0.75, 1.25)."""
+    return [
+        init(f"{name}_g", [ch], [1.0 + 0.2 * rng.next() for _ in range(ch)]),
+        init(f"{name}_b", [ch], [0.1 * rng.next() for _ in range(ch)]),
+        init(f"{name}_m", [ch], [0.1 * rng.next() for _ in range(ch)]),
+        init(f"{name}_v", [ch], [1.0 + rng.next() for _ in range(ch)]),
+    ]
+
+
+K3 = [
+    attr_ints("kernel_shape", [3, 3]),
+    attr_ints("strides", [1, 1]),
+    attr_ints("pads", [1, 1, 1, 1]),
+]
+
+
+def conv(name: str, src: str, dst: str, groups: int = 1) -> bytes:
+    attrs = list(K3) + ([attr_int("group", groups)] if groups != 1 else [])
+    return node("Conv", name, [src, f"{name}_w"], [dst], attrs)
+
+
+def bn(name: str, src: str, dst: str, with_eps: bool) -> bytes:
+    attrs = [attr_float("epsilon", 1e-5)] if with_eps else []
+    return node(
+        "BatchNormalization",
+        name,
+        [src, f"{name}_g", f"{name}_b", f"{name}_m", f"{name}_v"],
+        [dst],
+        attrs,
+    )
+
+
+def main() -> None:
+    rng = Lcg(0xD00DFEED)
+    ch, classes = 8, 4
+    nodes = [
+        conv("conv0", "x", "t1"),
+        bn("bn0", "t1", "t2", with_eps=True),  # explicit epsilon path
+        node("Relu", "relu0", ["t2"], ["t3"]),  # t3 is the shortcut
+        conv("conv1", "t3", "t4"),
+        bn("bn1", "t4", "t5", with_eps=False),  # default-epsilon path
+        node("Relu", "relu1", ["t5"], ["t6"]),
+        conv("conv2", "t6", "t7"),
+        bn("bn2", "t7", "t8", with_eps=False),
+        # main branch first, shortcut second: the tape's add orientation
+        node("Add", "add0", ["t8", "t3"], ["t9"]),
+        node("Relu", "relu2", ["t9"], ["t10"]),
+        conv("dw", "t10", "t11", groups=ch),
+        bn("bn_dw", "t11", "t12", with_eps=False),
+        node("Relu", "relu3", ["t12"], ["t13"]),
+        node("GlobalAveragePool", "gap", ["t13"], ["t14"]),
+        node("Flatten", "flat", ["t14"], ["t15"], [attr_int("axis", 1)]),
+        node(
+            "Gemm",
+            "head",
+            ["t15", "head_w", "head_b"],
+            ["logits"],
+            [attr_int("transB", 1)],
+        ),
+    ]
+    inits = [
+        init("conv0_w", [ch, 3, 3, 3], uniform(rng, ch * 3 * 9)),
+        *bn_inits("bn0", ch, rng),
+        init("conv1_w", [ch, ch, 3, 3], uniform(rng, ch * ch * 9)),
+        *bn_inits("bn1", ch, rng),
+        init("conv2_w", [ch, ch, 3, 3], uniform(rng, ch * ch * 9)),
+        *bn_inits("bn2", ch, rng),
+        init("dw_w", [ch, 1, 3, 3], uniform(rng, ch * 9)),
+        *bn_inits("bn_dw", ch, rng),
+        init("head_w", [classes, ch], uniform(rng, classes * ch)),
+        init("head_b", [classes], uniform(rng, classes)),
+    ]
+    m = model(
+        "residual_dw",
+        nodes,
+        inits,
+        [value_info("x", [1, 3, 8, 8])],
+        [value_info("logits", [1, classes])],
+    )
+    out = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "..",
+        "..",
+        "rust",
+        "tests",
+        "fixtures",
+        "residual_dw.onnx",
+    )
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "wb") as f:
+        f.write(m)
+    print(f"wrote {os.path.normpath(out)}: {len(m)} bytes")
+
+
+if __name__ == "__main__":
+    main()

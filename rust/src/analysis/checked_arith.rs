@@ -14,8 +14,10 @@ use super::{text_at, Finding, Source, RULE_CHECKED};
 
 /// Modules that parse untrusted DFMC/DFMQ/DFDS bytes — plus the
 /// `@auto:<budget>` variant-key parse surface (`quant/search`), whose
-/// budgets arrive from the network via serving admission.
-const SCOPE: &str = "data/loader model/checkpoint quant/search";
+/// budgets arrive from the network via serving admission, and the
+/// graph-IR layer (`model/graph`, `model/import`): the ONNX reader's
+/// dims/offsets/counts are all attacker-chosen bytes.
+const SCOPE: &str = "data/loader model/checkpoint model/graph model/import quant/search";
 /// Exact parse-path function names; `read_*`/`parse*` prefixes also match.
 const FNS: &str = "load batch payload_slice";
 const OPS: &str = "+ - * += -= *=";

@@ -16,9 +16,12 @@ use super::{text_at, Finding, Source, RULE_PANIC};
 /// a loop thread would take down EVERY connection it owns, not just one.
 /// `quant/plan` and `quant/search` are the `@auto:` serving surface: plan
 /// ids and budgets arrive from untrusted variant keys, and a panic while
-/// resolving one would poison the registry's prepare path.
+/// resolving one would poison the registry's prepare path. `model/graph`
+/// and `model/import` validate/schedule structures decoded from untrusted
+/// ONNX bytes — a malformed graph must be a structured error.
 const SCOPE: &str = "coordinator/server coordinator/lanes coordinator/event coordinator/conn \
-                     data/loader model/checkpoint model/zoo util/json quant/plan quant/search";
+                     data/loader model/checkpoint model/zoo model/graph model/import \
+                     util/json quant/plan quant/search";
 
 pub fn check(src: &Source, out: &mut Vec<Finding>) {
     if !src.in_module_list(SCOPE) {

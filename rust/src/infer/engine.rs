@@ -1,9 +1,19 @@
-//! Plan-IR interpreter on the pure-rust tensor ops.
+//! Graph-schedule interpreter on the pure-rust tensor ops.
 //!
 //! This is the reference/fallback execution path: it cross-checks the PJRT
 //! artifacts numerically, serves property tests, and powers data-dependent
 //! baselines (ZeroQ-sim calibration) without touching python. The
 //! production eval path is `runtime::PjrtEngine`.
+//!
+//! `forward` interprets the plan's compiled [`Schedule`]
+//! ([`crate::model::graph`]): a deterministic topological order over the
+//! dataflow graph, with liveness-derived value slots in place of the old
+//! tape's save-stack. A tape-lowered graph schedules in exactly tape
+//! emission order and every op keeps the tape's operand orientation
+//! (`add(current, shortcut)`, `concat(saved, current)`), so scheduled
+//! logits are **bit-identical** to the retired tape interpreter — which
+//! survives here as [`Engine::forward_tape_oracle`], a test-only oracle
+//! proven against the scheduled path in `rust/tests/graph_parity.rs`.
 //!
 //! Two execution modes, bit-identical by construction (the parallel path
 //! runs the same kernels on disjoint row blocks — see `tensor::ops`):
@@ -12,19 +22,21 @@
 //!   [`ThreadPool`], the path whole-dataset eval, the reference serving
 //!   lanes, and the benches use to exploit all cores.
 //!
-//! The GEMM-packed filter panels ([`PackedPanels`]) are built **once** per
-//! (plan, checkpoint) — at engine construction, or ahead of time by the
-//! model registry ([`crate::model::PreparedModel`]) — and shared read-only
-//! by every engine/lane over that checkpoint; no per-lane packed cache
-//! exists. Per-forward temporaries recycle through the context's scratch
-//! arena, so steady-state forwards stop allocating per op.
+//! The GEMM-packed filter panels ([`PackedPanels`]) and the compiled
+//! schedule ([`Compiled`]) are built **once** per (plan, checkpoint) — at
+//! engine construction, or ahead of time by the model registry
+//! ([`crate::model::PreparedModel`]) — and shared read-only by every
+//! engine/lane over that checkpoint; no per-lane packed cache exists.
+//! Per-forward temporaries recycle through the context's scratch arena,
+//! so steady-state forwards stop allocating per op.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::model::graph::{Compiled, NodeOp, Step};
 use crate::model::registry::{pack_panels, PackedPanels, Panel};
 use crate::model::{Checkpoint, ConvSpec, ModelRegistry, Op, Plan, PreparedModel};
 use crate::tensor::ops::{self, ExecCtx};
@@ -43,6 +55,9 @@ pub struct Engine<'a> {
     exec: RefCell<ExecCtx>,
     /// shared, immutable GEMM-packed filter panels for this checkpoint.
     panels: Arc<PackedPanels>,
+    /// the compiled graph schedule this engine interprets (shared across
+    /// lanes when built by the registry).
+    sched: Compiled,
 }
 
 /// The engine's reusable warm state — the execution context (pool +
@@ -106,10 +121,16 @@ fn conv_exec(
                 );
                 return Ok(qgemm::conv2d_packed_q(ctx, x, wq, spec.k, spec.stride, spec.pad));
             }
-            // an fc panel under a conv name would be a registry bug;
-            // fall through to the dense path, which errors if the
-            // weight is truly absent
-            Some(Panel::FcQuant(_)) | None => {}
+            // an fc panel under a conv name is a registry invariant
+            // violation: falling through to the dense path would either
+            // silently serve fp32 where quantized weights were promised
+            // or fail later with a misleading "missing tensor" error
+            Some(Panel::FcQuant(_)) => bail!(
+                "panel for conv '{}' is an fc-quant panel — registry invariant violation \
+                 (panels are keyed by layer name and kind must match the op)",
+                spec.name
+            ),
+            None => {}
         }
     }
     let w = ckpt.get(&format!("{}.w", spec.name))?;
@@ -139,16 +160,32 @@ impl<'a> Engine<'a> {
         Self::from_shared(plan, ckpt, panels, EngineState::new(pool))
     }
 
-    /// Engine over pre-built shared panels + warmed state. The panels must
-    /// come from the same checkpoint (they are keyed by conv name); the
-    /// registry's [`PreparedModel`] guarantees that pairing.
+    /// Engine over pre-built shared panels + warmed state, compiling the
+    /// plan's schedule on the spot. The panels must come from the same
+    /// checkpoint (they are keyed by conv name); the registry's
+    /// [`PreparedModel`] guarantees that pairing. Long-lived owners
+    /// ([`RefLane`], [`RegistryLane`]) use [`Engine::from_compiled`]
+    /// instead so the schedule is built once, not per batch.
     pub fn from_shared(
         plan: &'a Plan,
         ckpt: &'a Checkpoint,
         panels: Arc<PackedPanels>,
         state: EngineState,
     ) -> Engine<'a> {
-        Engine { plan, ckpt, exec: RefCell::new(state.exec), panels }
+        let sched = Compiled::of(plan);
+        Self::from_compiled(plan, ckpt, panels, state, sched)
+    }
+
+    /// Engine over pre-built shared panels, warmed state AND a pre-built
+    /// compiled schedule (which must come from this same plan).
+    pub fn from_compiled(
+        plan: &'a Plan,
+        ckpt: &'a Checkpoint,
+        panels: Arc<PackedPanels>,
+        state: EngineState,
+        sched: Compiled,
+    ) -> Engine<'a> {
+        Engine { plan, ckpt, exec: RefCell::new(state.exec), panels, sched }
     }
 
     /// Detach the warm state for reuse by a later engine.
@@ -156,14 +193,30 @@ impl<'a> Engine<'a> {
         EngineState { exec: self.exec.into_inner() }
     }
 
-    /// Forward pass, NCHW input -> (N, classes) logits.
+    /// Forward pass, NCHW input -> (N, classes) logits — interprets the
+    /// compiled graph schedule.
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
-        self.forward_impl(x, None)
+        self.forward_sched_impl(x, None)
     }
 
     /// Forward pass that also collects pre-BN channel means.
     pub fn forward_collect(&self, x: &Tensor, stats: &mut ActStats) -> Result<Tensor> {
-        self.forward_impl(x, Some(stats))
+        self.forward_sched_impl(x, Some(stats))
+    }
+
+    /// The retired linear-tape interpreter, kept as the parity oracle:
+    /// `rust/tests/graph_parity.rs` proves `forward` (the scheduled
+    /// path) serves bit-identical logits to this for every zoo plan ×
+    /// method × `@auto:` budget. Not a serving path — do not call it
+    /// outside tests.
+    pub fn forward_tape_oracle(&self, x: &Tensor) -> Result<Tensor> {
+        self.forward_tape_impl(x, None)
+    }
+
+    /// Tape-oracle variant of [`Engine::forward_collect`] (test parity
+    /// for calibration stats).
+    pub fn forward_collect_tape_oracle(&self, x: &Tensor, stats: &mut ActStats) -> Result<Tensor> {
+        self.forward_tape_impl(x, Some(stats))
     }
 
     fn bn_apply(
@@ -201,7 +254,123 @@ impl<'a> Engine<'a> {
         Ok(())
     }
 
-    fn forward_impl(&self, x: &Tensor, mut stats: Option<&mut ActStats>) -> Result<Tensor> {
+    /// Interpret the compiled [`crate::model::graph::Schedule`]: values
+    /// live in liveness-derived slots; an op whose input dies with it
+    /// (and is its sole reader) takes the tensor and mutates in place —
+    /// exactly the tape interpreter's running-value updates — while
+    /// shared or still-live values are read through the slot. Freed
+    /// buffers recycle through the scratch arena before the output
+    /// lands, so a reused slot never aliases a live read.
+    fn forward_sched_impl(&self, x: &Tensor, mut stats: Option<&mut ActStats>) -> Result<Tensor> {
+        let sched = Arc::clone(self.sched.get()?);
+        let mut exec = self.exec.borrow_mut();
+        let ctx = &mut *exec;
+        let panels = &*self.panels;
+        let mut slots: Vec<Option<Tensor>> = Vec::new();
+        slots.resize_with(sched.num_slots, || None);
+        match slots.get_mut(sched.input_slot) {
+            Some(cell) => *cell = Some(x.clone()),
+            None => bail!("schedule input slot out of range"),
+        }
+        for step in &sched.steps {
+            let node = sched
+                .graph
+                .nodes
+                .get(step.node)
+                .ok_or_else(|| anyhow!("schedule step references node {} out of range", step.node))?;
+            let label = node.op.label();
+            let y = match &node.op {
+                NodeOp::Conv(c) => {
+                    let xin = resident(&slots, step.inputs.first().copied(), &label)?;
+                    conv_exec(ctx, panels, self.ckpt, c, xin)?
+                }
+                NodeOp::Bn(b) => {
+                    let mut t = claim(&mut slots, step, 0, &label)?;
+                    self.bn_apply(ctx, &mut t, &b.name, &mut stats)?;
+                    t
+                }
+                NodeOp::Relu => {
+                    let mut t = claim(&mut slots, step, 0, &label)?;
+                    ops::relu_with(ctx, &mut t);
+                    t
+                }
+                NodeOp::Relu6 => {
+                    let mut t = claim(&mut slots, step, 0, &label)?;
+                    ops::relu6_with(ctx, &mut t);
+                    t
+                }
+                NodeOp::MaxPool { k, stride } => {
+                    let xin = resident(&slots, step.inputs.first().copied(), &label)?;
+                    ops::maxpool_with(ctx, xin, *k, *stride)
+                }
+                NodeOp::AvgPool { k, stride } => {
+                    let xin = resident(&slots, step.inputs.first().copied(), &label)?;
+                    ops::avgpool_with(ctx, xin, *k, *stride)
+                }
+                NodeOp::Gap => {
+                    let xin = resident(&slots, step.inputs.first().copied(), &label)?;
+                    ops::gap(xin)
+                }
+                NodeOp::Flatten => {
+                    let t = claim(&mut slots, step, 0, &label)?;
+                    flatten_rows(t)
+                }
+                NodeOp::Add => {
+                    // tape orientation: current += shortcut
+                    let mut a = claim(&mut slots, step, 0, &label)?;
+                    let b = resident(&slots, step.inputs.get(1).copied(), &label)?;
+                    ops::add_inplace(&mut a, b);
+                    a
+                }
+                NodeOp::Concat => {
+                    // tape orientation: saved channels first
+                    let a = resident(&slots, step.inputs.first().copied(), &label)?;
+                    let b = resident(&slots, step.inputs.get(1).copied(), &label)?;
+                    ops::concat_channels(a, b)
+                }
+                NodeOp::Fc { name, .. } => {
+                    let xin = resident(&slots, step.inputs.first().copied(), &label)?;
+                    let b = self.ckpt.get(&format!("{name}.b"))?;
+                    // on-grid fc weights serve straight from the packed
+                    // bits (no dense fp32 `fc.w` resident); otherwise
+                    // dense from the checkpoint
+                    match panels.get(name.as_str()) {
+                        Some(Panel::FcQuant(wq)) => qgemm::fc_with_q(ctx, xin, wq, &b.data),
+                        _ => {
+                            let w = self.ckpt.get(&format!("{name}.w"))?;
+                            ops::fc_with(ctx, xin, w, &b.data)
+                        }
+                    }
+                }
+            };
+            // release dead inputs before the output lands: slots already
+            // vacated by `claim` are no-ops here, ref-read stolen slots
+            // recycle their buffers, and shared dying slots (free_after)
+            // follow — so an output reusing a freed slot never aliases
+            for (j, &slot) in step.inputs.iter().enumerate() {
+                if step.steal.get(j).copied().unwrap_or(false) {
+                    if let Some(t) = slots.get_mut(slot).and_then(Option::take) {
+                        ctx.recycle(t.data);
+                    }
+                }
+            }
+            for &slot in &step.free_after {
+                if let Some(t) = slots.get_mut(slot).and_then(Option::take) {
+                    ctx.recycle(t.data);
+                }
+            }
+            match slots.get_mut(step.out_slot) {
+                Some(cell) => *cell = Some(y),
+                None => bail!("{label}: output slot {} out of range", step.out_slot),
+            }
+        }
+        slots
+            .get_mut(sched.output_slot)
+            .and_then(Option::take)
+            .ok_or_else(|| anyhow!("scheduled forward produced no output tensor"))
+    }
+
+    fn forward_tape_impl(&self, x: &Tensor, mut stats: Option<&mut ActStats>) -> Result<Tensor> {
         let mut exec = self.exec.borrow_mut();
         let ctx = &mut *exec;
         let panels = &*self.panels;
@@ -253,6 +422,9 @@ impl<'a> Engine<'a> {
                     let y = ops::gap(&x);
                     ctx.recycle(std::mem::replace(&mut x, y).data);
                 }
+                Op::Flatten => {
+                    x = flatten_rows(x);
+                }
                 Op::Fc { name, .. } => {
                     let b = self.ckpt.get(&format!("{name}.b"))?;
                     // on-grid fc weights serve straight from the packed
@@ -295,6 +467,45 @@ impl<'a> Engine<'a> {
     }
 }
 
+/// Borrow the tensor resident in `slot` (structured error when the
+/// schedule and the slot state disagree — never reachable for a
+/// validated graph, but imported plans go through here too).
+fn resident<'t>(slots: &'t [Option<Tensor>], slot: Option<usize>, label: &str) -> Result<&'t Tensor> {
+    slot.and_then(|s| slots.get(s).and_then(Option::as_ref))
+        .ok_or_else(|| anyhow!("{label}: input value is not resident"))
+}
+
+/// Claim operand `j` for in-place mutation: take the tensor when the
+/// schedule proved this op is the value's last (sole) reader, clone
+/// otherwise.
+fn claim(slots: &mut [Option<Tensor>], step: &Step, j: usize, label: &str) -> Result<Tensor> {
+    let slot = step
+        .inputs
+        .get(j)
+        .copied()
+        .ok_or_else(|| anyhow!("{label}: missing operand {j}"))?;
+    let cell = slots
+        .get_mut(slot)
+        .ok_or_else(|| anyhow!("{label}: slot {slot} out of range"))?;
+    let taken = if step.steal.get(j).copied().unwrap_or(false) {
+        cell.take()
+    } else {
+        cell.as_ref().cloned()
+    };
+    taken.ok_or_else(|| anyhow!("{label}: input value is not resident"))
+}
+
+/// (N, C, H, W) -> (N, C*H*W); identity on already-flat tensors.
+fn flatten_rows(t: Tensor) -> Tensor {
+    if t.shape.len() == 4 {
+        let n = t.shape[0];
+        let m = t.shape[1] * t.shape[2] * t.shape[3];
+        t.reshape(vec![n, m])
+    } else {
+        t
+    }
+}
+
 /// Split a machine's threads across `n` lanes: with one lane the shared
 /// pool is used directly (the lane fans each batch over all cores); with
 /// several, each lane gets a private pool slice (or runs serial when the
@@ -326,22 +537,27 @@ pub struct RefLane {
     plan: Arc<Plan>,
     ckpt: Arc<Checkpoint>,
     panels: Arc<PackedPanels>,
+    /// compiled once at lane construction (or shared from the registry)
+    /// so per-batch engines never re-schedule the graph.
+    sched: Compiled,
     state: Mutex<EngineState>,
 }
 
 impl RefLane {
     pub fn new(plan: Arc<Plan>, ckpt: Arc<Checkpoint>, pool: Option<Arc<ThreadPool>>) -> RefLane {
         let panels = Arc::new(pack_panels(&plan, &ckpt, pool.as_ref()));
-        RefLane { plan, ckpt, panels, state: Mutex::new(EngineState::new(pool)) }
+        let sched = Compiled::of(&plan);
+        RefLane { plan, ckpt, panels, sched, state: Mutex::new(EngineState::new(pool)) }
     }
 
     /// Lane over a registry-prepared variant, sharing its packed panels
-    /// (no per-lane re-pack).
+    /// and compiled schedule (no per-lane re-pack, no re-schedule).
     pub fn from_prepared(m: &Arc<PreparedModel>, pool: Option<Arc<ThreadPool>>) -> RefLane {
         RefLane {
             plan: Arc::clone(&m.plan),
             ckpt: Arc::clone(&m.ckpt),
             panels: Arc::clone(&m.panels),
+            sched: Compiled::Ready(Arc::clone(&m.sched)),
             state: Mutex::new(EngineState::new(pool)),
         }
     }
@@ -349,7 +565,7 @@ impl RefLane {
     /// Build `n` independent reference lanes over one model for the
     /// coordinator's lane pool, splitting the machine's threads across
     /// them (see [`lane_pools`]). The filter panels are packed once and
-    /// shared read-only by every lane.
+    /// the schedule compiled once, shared read-only by every lane.
     pub fn lanes(
         plan: &Arc<Plan>,
         ckpt: &Arc<Checkpoint>,
@@ -357,6 +573,7 @@ impl RefLane {
         pool: Option<Arc<ThreadPool>>,
     ) -> Vec<Arc<dyn super::InferBackend>> {
         let panels = Arc::new(pack_panels(plan, ckpt, pool.as_ref()));
+        let sched = Compiled::of(plan);
         lane_pools(n, pool)
             .into_iter()
             .map(|lane_pool| {
@@ -364,6 +581,7 @@ impl RefLane {
                     plan: Arc::clone(plan),
                     ckpt: Arc::clone(ckpt),
                     panels: Arc::clone(&panels),
+                    sched: sched.clone(),
                     state: Mutex::new(EngineState::new(lane_pool)),
                 }) as Arc<dyn super::InferBackend>
             })
@@ -374,11 +592,12 @@ impl RefLane {
 impl super::InferBackend for RefLane {
     fn infer_batch(&self, _id: &str, x: Tensor) -> Result<Tensor> {
         let mut guard = self.state.lock().unwrap();
-        let engine = Engine::from_shared(
+        let engine = Engine::from_compiled(
             &self.plan,
             &self.ckpt,
             Arc::clone(&self.panels),
             std::mem::take(&mut *guard),
+            self.sched.clone(),
         );
         let out = engine.forward(&x);
         *guard = engine.into_state();
@@ -424,14 +643,115 @@ impl super::InferBackend for RegistryLane {
         // prepare fans out over the registry's pool, not this lane's.
         let m = self.registry.get_or_prepare(id)?;
         let mut guard = self.state.lock().unwrap();
-        let engine = Engine::from_shared(
+        let engine = Engine::from_compiled(
             &m.plan,
             &m.ckpt,
             Arc::clone(&m.panels),
             std::mem::take(&mut *guard),
+            Compiled::Ready(Arc::clone(&m.sched)),
         );
         let out = engine.forward(&x);
         *guard = engine.into_state();
         out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::QFcW;
+    use crate::tensor::qtensor::{GridMeta, QTensor};
+    use crate::util::rng::Rng;
+
+    const PLAN: &str = r#"{
+      "name": "tiny", "input": [3, 8, 8], "num_classes": 4,
+      "ops": [
+        {"op": "conv", "name": "c1", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c1_bn", "ch": 4},
+        {"op": "relu"},
+        {"op": "conv", "name": "c2", "cin": 4, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c2_bn", "ch": 8},
+        {"op": "relu"},
+        {"op": "gap"},
+        {"op": "fc", "name": "fc", "cin": 8, "cout": 4}
+      ],
+      "pairs": [],
+      "bn_of": {"c1": "c1_bn", "c2": "c2_bn"}
+    }"#;
+
+    fn fixture(seed: u64) -> (Plan, Checkpoint, Tensor) {
+        let plan = Plan::parse(PLAN).unwrap();
+        let mut r = Rng::new(seed);
+        let ckpt = Checkpoint::random_init(&plan, &mut r);
+        let [c, h, w] = plan.input;
+        let x = Tensor::new(vec![2, c, h, w], r.normal_vec(2 * c * h * w));
+        (plan, ckpt, x)
+    }
+
+    /// Satellite bugfix: an fc-quant panel found under a conv name must
+    /// be a structured error naming the layer, not a silent fall-through
+    /// to the dense fp32 path.
+    #[test]
+    fn fc_panel_under_conv_name_is_a_structured_error() {
+        let (plan, ckpt, x) = fixture(11);
+        let mut panels = pack_panels(&plan, &ckpt, None);
+        // forge the invariant violation: a 2-D ternary weight packed as
+        // an fc panel, keyed by conv c1's name
+        let w = Tensor::new(vec![4, 6], vec![1.0, -1.0, 0.0, 1.0, 0.0, -1.0].repeat(4));
+        let q = QTensor::pack(&w, &GridMeta::Ternary { alpha: 1.0 });
+        let qfc = QFcW::from_qtensor(&q).expect("ternary 2-D weight must pack");
+        panels.insert("c1".to_string(), Panel::FcQuant(qfc));
+        let engine = Engine::from_compiled(
+            &plan,
+            &ckpt,
+            Arc::new(panels),
+            EngineState::default(),
+            Compiled::of(&plan),
+        );
+        let err = engine.forward(&x).unwrap_err().to_string();
+        assert!(err.contains("conv 'c1'"), "error must name the layer: {err}");
+        assert!(err.contains("invariant"), "{err}");
+        // the tape oracle goes through the same conv dispatch
+        let err = engine.forward_tape_oracle(&x).unwrap_err().to_string();
+        assert!(err.contains("conv 'c1'"), "{err}");
+    }
+
+    /// The scheduled interpreter and the tape oracle must agree bitwise
+    /// (the full zoo-wide proof lives in rust/tests/graph_parity.rs).
+    #[test]
+    fn scheduled_forward_matches_tape_oracle() {
+        let (plan, ckpt, x) = fixture(12);
+        let engine = Engine::new(&plan, &ckpt);
+        let sched = engine.forward(&x).unwrap();
+        let tape = engine.forward_tape_oracle(&x).unwrap();
+        assert_eq!(sched.shape, tape.shape);
+        assert_eq!(sched.data, tape.data, "scheduled logits diverged from tape oracle");
+
+        let mut s1 = ActStats::new();
+        let mut s2 = ActStats::new();
+        let a = engine.forward_collect(&x, &mut s1).unwrap();
+        let b = engine.forward_collect_tape_oracle(&x, &mut s2).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_eq!(s1, s2, "calibration stats diverged");
+    }
+
+    /// Flatten after gap is an identity on already-flat rows, and a
+    /// 4-D flatten feeds fc the full C*H*W feature vector.
+    #[test]
+    fn flatten_op_serves_through_both_paths() {
+        let src = PLAN
+            .replace(r#"{"op": "gap"}"#, r#"{"op": "flatten"}"#)
+            .replace(r#""name": "fc", "cin": 8"#, r#""name": "fc", "cin": 32"#);
+        let plan = Plan::parse(&src).unwrap();
+        plan.validate().unwrap();
+        let mut r = Rng::new(13);
+        let ckpt = Checkpoint::random_init(&plan, &mut r);
+        let [c, h, w] = plan.input;
+        let x = Tensor::new(vec![2, c, h, w], r.normal_vec(2 * c * h * w));
+        let engine = Engine::new(&plan, &ckpt);
+        let sched = engine.forward(&x).unwrap();
+        let tape = engine.forward_tape_oracle(&x).unwrap();
+        assert_eq!(sched.shape, vec![2, 4]);
+        assert_eq!(sched.data, tape.data);
     }
 }

@@ -15,6 +15,11 @@
 //!   lint     [--waivers]            run the repo's static-analysis rules
 //!            (docs/INVARIANTS.md) over its own sources; exits nonzero on
 //!            any unwaived finding. --waivers also lists waived sites.
+//!   import   --onnx PATH [--name ID] [--out-plan PATH] [--out-ckpt PATH]
+//!            read an ONNX-subset model through the graph-IR importer,
+//!            lower it to a tape plan + DFMC checkpoint, and report the
+//!            graph-derived pairs. The written pair of files serves like
+//!            any zoo model (including `@auto:<budget>` variants).
 //!
 //! `--engine ref` drives the pool-parallel pure-rust engine instead of the
 //! PJRT lane — the only serving path in builds without the `xla` feature.
@@ -66,14 +71,55 @@ fn run() -> Result<()> {
         Some("sweep") => sweep(&args),
         Some("serve") => serve(&args),
         Some("lint") => lint(&args),
+        Some("import") => import_cmd(&args),
         _ => {
             eprintln!(
-                "usage: dfmpc <info|quantize|eval|sweep|serve|lint> [options]\n\
+                "usage: dfmpc <info|quantize|eval|sweep|serve|lint|import> [options]\n\
                  see rust/src/main.rs header for the full syntax"
             );
             Ok(())
         }
     }
+}
+
+/// `import --onnx PATH`: decode an ONNX-subset file through the graph-IR
+/// importer, raise the graph to a tape plan, and optionally write the
+/// plan JSON (`--out-plan`) and DFMC checkpoint (`--out-ckpt`) — the same
+/// two files a zoo model consists of, so the import is immediately
+/// servable and searchable (`@auto:<budget>`).
+fn import_cmd(args: &Args) -> Result<()> {
+    let path = args.get("onnx").context("--onnx required")?;
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    let (graph, ckpt) = dfmpc::model::import::import_onnx(&bytes, args.get_or("name", ""))?;
+    let plan = graph.to_plan().context("raising imported graph to a tape plan")?;
+    plan.validate()?;
+    println!(
+        "imported '{}': {} nodes -> {} tape ops, {} convs, {} derived pair(s), \
+         input {}x{}x{}, {} classes",
+        plan.name,
+        graph.nodes.len(),
+        plan.ops.len(),
+        plan.convs().len(),
+        plan.pairs.len(),
+        plan.input[0],
+        plan.input[1],
+        plan.input[2],
+        plan.num_classes,
+    );
+    for p in &plan.pairs {
+        println!("  pair: {} -> {} @ channel {}", p.low, p.high, p.offset);
+    }
+    if let Some(out) = args.get("out-plan") {
+        std::fs::write(out, plan.to_json().dump())
+            .with_context(|| format!("writing {out}"))?;
+        println!("wrote plan {out}");
+    }
+    if let Some(out) = args.get("out-ckpt") {
+        ckpt.save(std::path::Path::new(out))?;
+        println!("wrote checkpoint {out}");
+    }
+    Ok(())
 }
 
 /// Run the repo-native invariant checker (rust/src/analysis) over this

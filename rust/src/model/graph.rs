@@ -1,0 +1,1273 @@
+//! Graph-IR: the named-value dataflow form of a model.
+//!
+//! [`super::plan::Plan`]'s linear op-tape is one *front-end* into this IR
+//! ([`Graph::from_plan`]); the ONNX-subset importer ([`super::import`]) is
+//! another. A [`Graph`] is a list of [`Node`]s with explicit input/output
+//! value names — single assignment, validated for cycles, fan-in arity and
+//! full shape consistency — and [`Graph::schedule`] lowers it to a
+//! deterministic, topologically-ordered [`Schedule`] whose save/restore
+//! slots are derived from value liveness. The engine interprets the
+//! schedule ([`crate::infer::Engine`]); the retired tape interpreter
+//! survives as a test-only oracle, and `rust/tests/graph_parity.rs` proves
+//! the two serve **bit-identical** logits.
+//!
+//! Determinism contract: scheduling is a pure function of the graph.
+//! Ready nodes are dispatched lowest-index-first, so a tape-lowered graph
+//! (whose nodes are emitted in tape order) schedules in exactly tape
+//! order — which is what makes the bit-exactness proof against the tape
+//! oracle meaningful rather than vacuous.
+//!
+//! This module is on the `panic-path` lint contract: graphs arrive from
+//! untrusted imported files, so every malformed structure is a structured
+//! error, never a panic.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::plan::{BnSpec, ConvSpec, DownSpec, Op, Pair, Plan};
+
+/// One dataflow operation. Conv/Bn/Fc carry the same specs as the tape
+/// ops (and the same checkpoint key naming: `<name>.w`, `<name>.gamma`,
+/// …); `Add`/`Concat` are the explicit two-input joins the tape spelled
+/// as `Save`/`Residual`/`Concat` markers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NodeOp {
+    Conv(ConvSpec),
+    Bn(BnSpec),
+    Relu,
+    Relu6,
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    Gap,
+    /// reshape (N, C, H, W) -> (N, C*H*W); identity on already-flat input
+    Flatten,
+    /// elementwise `inputs[0] + inputs[1]` (the residual join)
+    Add,
+    /// channel concat, `inputs[0]` channels first, `inputs[1]` second
+    Concat,
+    Fc { name: String, cin: usize, cout: usize },
+}
+
+impl NodeOp {
+    /// Required fan-in.
+    pub fn arity(&self) -> usize {
+        match self {
+            NodeOp::Add | NodeOp::Concat => 2,
+            _ => 1,
+        }
+    }
+
+    /// Human label for structured errors.
+    pub fn label(&self) -> String {
+        match self {
+            NodeOp::Conv(c) => format!("conv '{}'", c.name),
+            NodeOp::Bn(b) => format!("bn '{}'", b.name),
+            NodeOp::Relu => "relu".to_string(),
+            NodeOp::Relu6 => "relu6".to_string(),
+            NodeOp::MaxPool { .. } => "maxpool".to_string(),
+            NodeOp::AvgPool { .. } => "avgpool".to_string(),
+            NodeOp::Gap => "gap".to_string(),
+            NodeOp::Flatten => "flatten".to_string(),
+            NodeOp::Add => "add".to_string(),
+            NodeOp::Concat => "concat".to_string(),
+            NodeOp::Fc { name, .. } => format!("fc '{name}'"),
+        }
+    }
+}
+
+/// A node: op + named input values + the single value it produces.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Node {
+    pub op: NodeOp,
+    pub inputs: Vec<String>,
+    pub output: String,
+}
+
+/// The dataflow graph of one model.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    /// model input, CHW (batch is implicit)
+    pub input: [usize; 3],
+    pub num_classes: usize,
+    /// the value name the model input binds to
+    pub input_value: String,
+    /// the value holding the logits
+    pub output_value: String,
+    pub nodes: Vec<Node>,
+}
+
+/// Inferred per-value shape (batch dimension implicit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValShape {
+    Chw(usize, usize, usize),
+    Flat(usize),
+}
+
+impl ValShape {
+    pub fn channels(&self) -> usize {
+        match self {
+            ValShape::Chw(c, _, _) => *c,
+            ValShape::Flat(n) => *n,
+        }
+    }
+}
+
+/// Spatial output size of a conv/pool window, overflow-checked (the
+/// attributes may come from an untrusted imported file).
+fn window_hw(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> Result<(usize, usize)> {
+    if k == 0 || stride == 0 {
+        bail!("zero kernel or stride");
+    }
+    let pad2 = pad.checked_mul(2).context("pad overflows")?;
+    let he = h.checked_add(pad2).context("padded height overflows")?;
+    let we = w.checked_add(pad2).context("padded width overflows")?;
+    if he < k || we < k {
+        bail!("window {k}x{k} larger than padded input {he}x{we}");
+    }
+    Ok(((he - k) / stride + 1, (we - k) / stride + 1))
+}
+
+/// Shape rule of one node.
+fn node_out_shape(op: &NodeOp, ins: &[ValShape]) -> Result<ValShape> {
+    let one = || -> Result<ValShape> {
+        ins.first().copied().ok_or_else(|| anyhow!("missing input shape"))
+    };
+    match op {
+        NodeOp::Conv(c) => {
+            let ValShape::Chw(ci, h, w) = one()? else {
+                bail!("needs a CHW input");
+            };
+            if ci != c.cin {
+                bail!("input has {ci} channels, spec says cin {}", c.cin);
+            }
+            if c.groups == 0 || c.cin % c.groups != 0 || c.cout % c.groups != 0 {
+                bail!("cin {} / cout {} not divisible by groups {}", c.cin, c.cout, c.groups);
+            }
+            let (oh, ow) = window_hw(h, w, c.k, c.stride, c.pad)?;
+            Ok(ValShape::Chw(c.cout, oh, ow))
+        }
+        NodeOp::Bn(b) => {
+            let s = one()?;
+            let ValShape::Chw(ci, _, _) = s else {
+                bail!("needs a CHW input");
+            };
+            if ci != b.ch {
+                bail!("input has {ci} channels, spec says ch {}", b.ch);
+            }
+            Ok(s)
+        }
+        NodeOp::Relu | NodeOp::Relu6 => one(),
+        NodeOp::MaxPool { k, stride } | NodeOp::AvgPool { k, stride } => {
+            let ValShape::Chw(ci, h, w) = one()? else {
+                bail!("needs a CHW input");
+            };
+            // the engine's pools are unpadded
+            let (oh, ow) = window_hw(h, w, *k, *stride, 0)?;
+            Ok(ValShape::Chw(ci, oh, ow))
+        }
+        NodeOp::Gap => {
+            let ValShape::Chw(ci, _, _) = one()? else {
+                bail!("needs a CHW input");
+            };
+            Ok(ValShape::Flat(ci))
+        }
+        NodeOp::Flatten => match one()? {
+            ValShape::Chw(c, h, w) => {
+                let n = c.checked_mul(h).and_then(|v| v.checked_mul(w));
+                Ok(ValShape::Flat(n.context("flattened size overflows")?))
+            }
+            ValShape::Flat(n) => Ok(ValShape::Flat(n)),
+        },
+        NodeOp::Add => {
+            let (a, b) = match ins {
+                [a, b] => (*a, *b),
+                _ => bail!("needs two inputs"),
+            };
+            if a != b {
+                bail!("operand shapes differ: {a:?} vs {b:?}");
+            }
+            Ok(a)
+        }
+        NodeOp::Concat => {
+            let (a, b) = match ins {
+                [a, b] => (*a, *b),
+                _ => bail!("needs two inputs"),
+            };
+            let (ValShape::Chw(c0, h0, w0), ValShape::Chw(c1, h1, w1)) = (a, b) else {
+                bail!("needs two CHW inputs");
+            };
+            if (h0, w0) != (h1, w1) {
+                bail!("spatial shapes differ: {h0}x{w0} vs {h1}x{w1}");
+            }
+            let c = c0.checked_add(c1).context("concat channels overflow")?;
+            Ok(ValShape::Chw(c, h0, w0))
+        }
+        NodeOp::Fc { cin, cout, .. } => {
+            let ValShape::Flat(n) = one()? else {
+                bail!("needs a flat input (insert gap/flatten first)");
+            };
+            if n != *cin {
+                bail!("input has {n} features, spec says cin {cin}");
+            }
+            Ok(ValShape::Flat(*cout))
+        }
+    }
+}
+
+/// Everything validation derives in one pass: the deterministic topo
+/// order, per-value shapes, and the producer/consumer indices the
+/// adjacency queries walk.
+struct Analysis {
+    /// node indices in deterministic (lowest-ready-index-first) topo order
+    order: Vec<usize>,
+    shapes: BTreeMap<String, ValShape>,
+    /// value -> producing node index
+    producer: BTreeMap<String, usize>,
+    /// value -> consuming node indices, one entry per input occurrence,
+    /// ascending
+    consumers: BTreeMap<String, Vec<usize>>,
+}
+
+impl Graph {
+    fn analyze(&self) -> Result<Analysis> {
+        if self.input_value.is_empty() {
+            bail!("graph '{}' has no input value name", self.name);
+        }
+        if self.input.iter().any(|&d| d == 0) {
+            bail!("graph '{}' input {:?} has a zero dimension", self.name, self.input);
+        }
+        if self.num_classes == 0 {
+            bail!("graph '{}' has zero classes", self.name);
+        }
+        let mut producer: BTreeMap<String, usize> = BTreeMap::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.output.is_empty() {
+                bail!("{} produces an unnamed value", n.op.label());
+            }
+            if n.output == self.input_value {
+                bail!("{} reassigns the graph input value '{}'", n.op.label(), n.output);
+            }
+            if let Some(prev) = producer.insert(n.output.clone(), i) {
+                bail!(
+                    "value '{}' assigned twice ({} and {})",
+                    n.output,
+                    self.nodes[prev].op.label(),
+                    n.op.label()
+                );
+            }
+            if n.inputs.len() != n.op.arity() {
+                bail!(
+                    "{} takes {} input(s), got {}",
+                    n.op.label(),
+                    n.op.arity(),
+                    n.inputs.len()
+                );
+            }
+        }
+        let mut consumers: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut indegree: Vec<usize> = vec![0; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for v in &n.inputs {
+                if v != &self.input_value && !producer.contains_key(v) {
+                    bail!("{} reads undefined value '{v}'", n.op.label());
+                }
+                consumers.entry(v.clone()).or_default().push(i);
+                if producer.contains_key(v) {
+                    indegree[i] += 1;
+                }
+            }
+        }
+        // deterministic Kahn: lowest ready index first, so tape-emitted
+        // node order is preserved exactly
+        let mut ready: BTreeSet<usize> = BTreeSet::new();
+        for (i, &d) in indegree.iter().enumerate() {
+            if d == 0 {
+                ready.insert(i);
+            }
+        }
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(&i) = ready.iter().next() {
+            ready.remove(&i);
+            order.push(i);
+            if let Some(cs) = consumers.get(&self.nodes[i].output) {
+                for &c in cs {
+                    indegree[c] -= 1;
+                    if indegree[c] == 0 {
+                        ready.insert(c);
+                    }
+                }
+            }
+        }
+        if order.len() != self.nodes.len() {
+            let stuck: Vec<String> = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| indegree[*i] > 0)
+                .map(|(_, n)| n.op.label())
+                .collect();
+            bail!("graph '{}' has a cycle through: {}", self.name, stuck.join(", "));
+        }
+        // shape inference over the topo order
+        let mut shapes: BTreeMap<String, ValShape> = BTreeMap::new();
+        shapes.insert(
+            self.input_value.clone(),
+            ValShape::Chw(self.input[0], self.input[1], self.input[2]),
+        );
+        for &i in &order {
+            let n = &self.nodes[i];
+            let mut ins = Vec::with_capacity(n.inputs.len());
+            for v in &n.inputs {
+                let s = shapes
+                    .get(v)
+                    .copied()
+                    .ok_or_else(|| anyhow!("{}: input '{v}' has no shape", n.op.label()))?;
+                ins.push(s);
+            }
+            let out = node_out_shape(&n.op, &ins).with_context(|| n.op.label())?;
+            shapes.insert(n.output.clone(), out);
+        }
+        // the output must be produced and hold the logits
+        if !producer.contains_key(&self.output_value) {
+            bail!("graph output value '{}' is not produced by any node", self.output_value);
+        }
+        match shapes.get(&self.output_value) {
+            Some(ValShape::Flat(n)) if *n == self.num_classes => {}
+            other => bail!(
+                "graph output '{}' has shape {other:?}, expected flat {} classes",
+                self.output_value,
+                self.num_classes
+            ),
+        }
+        // every intermediate value must be consumed: a dead node in an
+        // imported graph is a structural error, not silently-scheduled
+        // garbage
+        for n in &self.nodes {
+            if n.output != self.output_value && !consumers.contains_key(&n.output) {
+                bail!("value '{}' ({}) is never consumed", n.output, n.op.label());
+            }
+        }
+        Ok(Analysis { order, shapes, producer, consumers })
+    }
+
+    /// Structural + shape validation (cycles, fan-in arity, single
+    /// assignment, full channel/spatial consistency).
+    pub fn validate(&self) -> Result<()> {
+        self.analyze().map(|_| ())
+    }
+
+    /// Per-value inferred shapes (validates as a side effect).
+    pub fn value_shapes(&self) -> Result<BTreeMap<String, ValShape>> {
+        self.analyze().map(|a| a.shapes)
+    }
+
+    /// Lower a linear op-tape into the graph. `Save` binds an alias to
+    /// the current value (no copy — the schedule's liveness keeps it
+    /// resident exactly as long as needed); `Residual`/`Concat` become
+    /// explicit two-input joins with the same operand orientation the
+    /// tape interpreter used (`add(current, shortcut)`,
+    /// `concat(saved, current)`), which is what keeps scheduled
+    /// execution bit-identical.
+    pub fn from_plan(plan: &Plan) -> Result<Graph> {
+        let mut nodes: Vec<Node> = Vec::new();
+        let mut next_v = 0usize;
+        let mut fresh = move || {
+            let s = format!("v{next_v}");
+            next_v += 1;
+            s
+        };
+        let mut cur = "in".to_string();
+        let mut saved: BTreeMap<String, String> = BTreeMap::new();
+        let mut push = |nodes: &mut Vec<Node>, op: NodeOp, inputs: Vec<String>, out: String| {
+            nodes.push(Node { op, inputs, output: out });
+        };
+        for op in &plan.ops {
+            match op {
+                Op::Conv(c) => {
+                    let out = fresh();
+                    push(&mut nodes, NodeOp::Conv(c.clone()), vec![cur.clone()], out.clone());
+                    cur = out;
+                }
+                Op::Bn(b) => {
+                    let out = fresh();
+                    push(&mut nodes, NodeOp::Bn(b.clone()), vec![cur.clone()], out.clone());
+                    cur = out;
+                }
+                Op::Relu => {
+                    let out = fresh();
+                    push(&mut nodes, NodeOp::Relu, vec![cur.clone()], out.clone());
+                    cur = out;
+                }
+                Op::Relu6 => {
+                    let out = fresh();
+                    push(&mut nodes, NodeOp::Relu6, vec![cur.clone()], out.clone());
+                    cur = out;
+                }
+                Op::Save { id } => {
+                    saved.insert(id.clone(), cur.clone());
+                }
+                Op::Residual { id, down } => {
+                    let sc = saved
+                        .get(id)
+                        .ok_or_else(|| anyhow!("residual save '{id}' missing"))?
+                        .clone();
+                    let shortcut = match down {
+                        None => sc,
+                        Some(d) => {
+                            let o1 = fresh();
+                            push(&mut nodes, NodeOp::Conv(d.conv.clone()), vec![sc], o1.clone());
+                            let o2 = fresh();
+                            push(&mut nodes, NodeOp::Bn(d.bn.clone()), vec![o1], o2.clone());
+                            o2
+                        }
+                    };
+                    let out = fresh();
+                    push(&mut nodes, NodeOp::Add, vec![cur.clone(), shortcut], out.clone());
+                    cur = out;
+                }
+                Op::Concat { id } => {
+                    let sc = saved
+                        .get(id)
+                        .ok_or_else(|| anyhow!("concat save '{id}' missing"))?
+                        .clone();
+                    let out = fresh();
+                    push(&mut nodes, NodeOp::Concat, vec![sc, cur.clone()], out.clone());
+                    cur = out;
+                }
+                Op::MaxPool { k, stride } => {
+                    let out = fresh();
+                    push(
+                        &mut nodes,
+                        NodeOp::MaxPool { k: *k, stride: *stride },
+                        vec![cur.clone()],
+                        out.clone(),
+                    );
+                    cur = out;
+                }
+                Op::AvgPool { k, stride } => {
+                    let out = fresh();
+                    push(
+                        &mut nodes,
+                        NodeOp::AvgPool { k: *k, stride: *stride },
+                        vec![cur.clone()],
+                        out.clone(),
+                    );
+                    cur = out;
+                }
+                Op::Gap => {
+                    let out = fresh();
+                    push(&mut nodes, NodeOp::Gap, vec![cur.clone()], out.clone());
+                    cur = out;
+                }
+                Op::Flatten => {
+                    let out = fresh();
+                    push(&mut nodes, NodeOp::Flatten, vec![cur.clone()], out.clone());
+                    cur = out;
+                }
+                Op::Fc { name, cin, cout } => {
+                    let out = fresh();
+                    push(
+                        &mut nodes,
+                        NodeOp::Fc { name: name.clone(), cin: *cin, cout: *cout },
+                        vec![cur.clone()],
+                        out.clone(),
+                    );
+                    cur = out;
+                }
+            }
+        }
+        Ok(Graph {
+            name: plan.name.clone(),
+            input: plan.input,
+            num_classes: plan.num_classes,
+            input_value: "in".to_string(),
+            output_value: cur,
+            nodes,
+        })
+    }
+
+    /// conv name -> the BN node directly consuming its output (the
+    /// graph-derived form of the tape's declared `bn_of` map).
+    pub fn bn_map(&self) -> Result<BTreeMap<String, String>> {
+        let a = self.analyze()?;
+        Ok(self.bn_map_with(&a))
+    }
+
+    fn bn_map_with(&self, a: &Analysis) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        for n in &self.nodes {
+            let NodeOp::Conv(c) = &n.op else { continue };
+            let Some(cs) = a.consumers.get(&n.output) else { continue };
+            for &ci in cs {
+                if let NodeOp::Bn(b) = &self.nodes[ci].op {
+                    m.insert(c.name.clone(), b.name.clone());
+                    break;
+                }
+            }
+        }
+        m
+    }
+
+    /// For every conv, the downstream convs that read its output
+    /// channels, with the channel offset at which they appear — followed
+    /// through BN/activation/pool/add (offset-preserving) and concat
+    /// (second operand shifted by the first operand's channel count).
+    /// Traversal stops at convs, fc, gap and flatten (those remix or
+    /// reindex channels). This is the graph-edge adjacency that replaces
+    /// the tape's positional pair scans: `Plan::validate`, the `@auto:`
+    /// search and the Eq. 27 executor all resolve low→high pairs here.
+    pub fn conv_consumers(&self) -> Result<BTreeMap<String, Vec<(String, usize)>>> {
+        let a = self.analyze()?;
+        Ok(self.conv_consumers_with(&a))
+    }
+
+    fn conv_consumers_with(&self, a: &Analysis) -> BTreeMap<String, Vec<(String, usize)>> {
+        let mut pos_of: BTreeMap<usize, usize> = BTreeMap::new();
+        for (p, &i) in a.order.iter().enumerate() {
+            pos_of.insert(i, p);
+        }
+        let mut out = BTreeMap::new();
+        for n in &self.nodes {
+            let NodeOp::Conv(c) = &n.op else { continue };
+            // BFS from the conv's output value, tracking channel offset
+            let mut hits: BTreeSet<(usize, String, usize)> = BTreeSet::new();
+            let mut seen: BTreeSet<(String, usize)> = BTreeSet::new();
+            let mut queue: VecDeque<(String, usize)> = VecDeque::new();
+            queue.push_back((n.output.clone(), 0));
+            seen.insert((n.output.clone(), 0));
+            while let Some((v, off)) = queue.pop_front() {
+                let Some(cs) = a.consumers.get(&v) else { continue };
+                for &ci in cs {
+                    let cn = &self.nodes[ci];
+                    let mut next: Vec<(String, usize)> = Vec::new();
+                    match &cn.op {
+                        NodeOp::Bn(_)
+                        | NodeOp::Relu
+                        | NodeOp::Relu6
+                        | NodeOp::MaxPool { .. }
+                        | NodeOp::AvgPool { .. }
+                        | NodeOp::Add => next.push((cn.output.clone(), off)),
+                        NodeOp::Concat => {
+                            if cn.inputs.first().is_some_and(|x| x == &v) {
+                                next.push((cn.output.clone(), off));
+                            }
+                            if cn.inputs.get(1).is_some_and(|x| x == &v) {
+                                let shift = cn
+                                    .inputs
+                                    .first()
+                                    .and_then(|x| a.shapes.get(x))
+                                    .map_or(0, ValShape::channels);
+                                if let Some(o) = off.checked_add(shift) {
+                                    next.push((cn.output.clone(), o));
+                                }
+                            }
+                        }
+                        NodeOp::Conv(h) => {
+                            let p = pos_of.get(&ci).copied().unwrap_or(usize::MAX);
+                            hits.insert((p, h.name.clone(), off));
+                        }
+                        // fc remixes every feature; gap/flatten reindex
+                        // channels into flat features — pairs stop here
+                        NodeOp::Gap | NodeOp::Flatten | NodeOp::Fc { .. } => {}
+                    }
+                    for (nv, no) in next {
+                        if seen.insert((nv.clone(), no)) {
+                            queue.push_back((nv, no));
+                        }
+                    }
+                }
+            }
+            out.insert(
+                c.name.clone(),
+                hits.into_iter().map(|(_, name, off)| (name, off)).collect(),
+            );
+        }
+        out
+    }
+
+    /// Derive DF-MPC low→high pairs from graph adjacency: every conv
+    /// with a BN pairs with its first (schedule-order) feasible conv
+    /// consumer — dense, or depthwise with channel multiplier 1 —
+    /// at the graph-derived channel offset. Each conv serves as the high
+    /// side of at most one pair. Used by the importer front-end; tape
+    /// plans keep their declared pairs (now checked against these same
+    /// edges by `Plan::validate`).
+    pub fn derive_pairs(&self) -> Result<Vec<Pair>> {
+        let a = self.analyze()?;
+        Ok(self.derive_pairs_with(&a))
+    }
+
+    fn derive_pairs_with(&self, a: &Analysis) -> Vec<Pair> {
+        let bn = self.bn_map_with(&a);
+        let consumers = self.conv_consumers_with(&a);
+        let mut convs: BTreeMap<String, ConvSpec> = BTreeMap::new();
+        for n in &self.nodes {
+            if let NodeOp::Conv(c) = &n.op {
+                convs.insert(c.name.clone(), c.clone());
+            }
+        }
+        let mut used_high: BTreeSet<String> = BTreeSet::new();
+        let mut pairs = Vec::new();
+        for &i in &a.order {
+            let NodeOp::Conv(low) = &self.nodes[i].op else { continue };
+            if !bn.contains_key(&low.name) {
+                continue; // ternarization needs BN recalibration
+            }
+            let Some(cands) = consumers.get(&low.name) else { continue };
+            for (high_name, off) in cands {
+                if high_name == &low.name || used_high.contains(high_name) {
+                    continue;
+                }
+                let Some(high) = convs.get(high_name) else { continue };
+                let fits = if high.groups == 1 {
+                    off.checked_add(low.cout).is_some_and(|end| end <= high.cin)
+                } else {
+                    // only depthwise multiplier 1 compensates channel-wise
+                    high.groups == high.cin
+                        && high.cout == high.cin
+                        && off.checked_add(low.cout).is_some_and(|end| end <= high.cout)
+                };
+                if fits {
+                    pairs.push(Pair {
+                        low: low.name.clone(),
+                        high: high_name.clone(),
+                        offset: *off,
+                    });
+                    used_high.insert(high_name.clone());
+                    break;
+                }
+            }
+        }
+        pairs
+    }
+
+    /// Raise the graph back to the linear tape front-end: follow the
+    /// single chain of values, re-introducing `Save` markers for join
+    /// shortcuts and recognizing the conv+BN downsample idiom as
+    /// `Residual { down }`. Pairs and `bn_of` are derived from graph
+    /// edges ([`Graph::derive_pairs`], [`Graph::bn_map`]). Graphs whose
+    /// joins are not expressible on the tape (e.g. a concat whose
+    /// *first* operand is the running chain) are structured errors.
+    pub fn to_plan(&self) -> Result<Plan> {
+        let a = self.analyze()?;
+        let mut consumed = vec![false; self.nodes.len()];
+        // values produced so far (available as save/shortcut sources)
+        let mut produced: BTreeSet<String> = BTreeSet::new();
+        produced.insert(self.input_value.clone());
+        // emitted tape ops + for each chain value, the op index after
+        // which it was current (the anchor a Save marker inserts behind)
+        let mut ops: Vec<Op> = Vec::new();
+        let mut anchor: BTreeMap<String, usize> = BTreeMap::new();
+        let mut save_ids: BTreeMap<String, String> = BTreeMap::new();
+        let mut cur = self.input_value.clone();
+        let single = |op: &NodeOp| -> Result<Op> {
+            Ok(match op {
+                NodeOp::Conv(c) => Op::Conv(c.clone()),
+                NodeOp::Bn(b) => Op::Bn(b.clone()),
+                NodeOp::Relu => Op::Relu,
+                NodeOp::Relu6 => Op::Relu6,
+                NodeOp::MaxPool { k, stride } => Op::MaxPool { k: *k, stride: *stride },
+                NodeOp::AvgPool { k, stride } => Op::AvgPool { k: *k, stride: *stride },
+                NodeOp::Gap => Op::Gap,
+                NodeOp::Flatten => Op::Flatten,
+                NodeOp::Fc { name, cin, cout } => {
+                    Op::Fc { name: name.clone(), cin: *cin, cout: *cout }
+                }
+                NodeOp::Add | NodeOp::Concat => bail!("join op in single-input position"),
+            })
+        };
+        loop {
+            // the chain continuation: the unconsumed consumer of `cur`
+            // that extends the tape — single-input ops, an add one of
+            // whose operands is ready, or a concat whose second operand
+            // is `cur` and whose first is already produced
+            let mut conts: Vec<usize> = Vec::new();
+            if let Some(cs) = a.consumers.get(&cur) {
+                let mut seen_nodes: BTreeSet<usize> = BTreeSet::new();
+                for &ci in cs {
+                    if consumed[ci] || !seen_nodes.insert(ci) {
+                        continue;
+                    }
+                    let n = &self.nodes[ci];
+                    let ready = match &n.op {
+                        NodeOp::Add => {
+                            let other = if n.inputs.first().is_some_and(|x| x == &cur) {
+                                n.inputs.get(1)
+                            } else {
+                                n.inputs.first()
+                            };
+                            // the other operand must be produced, or be a
+                            // downsample chain hanging off a produced value
+                            // (a chain off an unproduced value means the
+                            // add is reached too early — keep walking)
+                            match other {
+                                Some(o) => {
+                                    produced.contains(o)
+                                        || self
+                                            .down_chain(&a, ci, o)
+                                            .is_some_and(|(_, _, src)| produced.contains(&src))
+                                }
+                                None => false,
+                            }
+                        }
+                        NodeOp::Concat => {
+                            n.inputs.get(1).is_some_and(|x| x == &cur)
+                                && n.inputs.first().is_some_and(|x| produced.contains(x))
+                        }
+                        _ => n.inputs.first().is_some_and(|x| x == &cur),
+                    };
+                    if ready {
+                        conts.push(ci);
+                    }
+                }
+            }
+            // a saved value can legally continue into both the next block
+            // conv AND the conv head of a downsample branch — the branch
+            // head is emitted inside `Residual { down }` when its add is
+            // reached, so it is not a chain continuation
+            if conts.len() > 1 {
+                conts.retain(|&ci| !self.is_down_head(&a, &consumed, ci));
+            }
+            match conts.len() {
+                0 => {
+                    if cur == self.output_value {
+                        break;
+                    }
+                    bail!(
+                        "graph '{}' is not tape-linearizable: chain dead-ends at value '{cur}'",
+                        self.name
+                    );
+                }
+                1 => {}
+                _ => bail!(
+                    "graph '{}' is not tape-linearizable: value '{cur}' continues into {} ops",
+                    self.name,
+                    conts.len()
+                ),
+            }
+            let ci = conts[0];
+            let n = &self.nodes[ci];
+            match &n.op {
+                NodeOp::Add => {
+                    let other = if n.inputs.first().is_some_and(|x| x == &cur) {
+                        n.inputs.get(1)
+                    } else {
+                        n.inputs.first()
+                    };
+                    let sv = other.ok_or_else(|| anyhow!("add with no operands"))?.clone();
+                    if produced.contains(&sv) {
+                        let id = save_id(&mut save_ids, &sv);
+                        ops.push(Op::Residual { id, down: None });
+                    } else if let Some((conv_i, bn_i, src)) = self.down_chain(&a, ci, &sv) {
+                        let (NodeOp::Conv(c), NodeOp::Bn(b)) =
+                            (&self.nodes[conv_i].op, &self.nodes[bn_i].op)
+                        else {
+                            bail!("downsample chain nodes changed shape");
+                        };
+                        consumed[conv_i] = true;
+                        consumed[bn_i] = true;
+                        produced.insert(self.nodes[conv_i].output.clone());
+                        produced.insert(self.nodes[bn_i].output.clone());
+                        let id = save_id(&mut save_ids, &src);
+                        ops.push(Op::Residual {
+                            id,
+                            down: Some(DownSpec { conv: c.clone(), bn: b.clone() }),
+                        });
+                    } else {
+                        bail!(
+                            "residual shortcut '{sv}' is neither a chain value nor a \
+                             conv+bn downsample of one"
+                        );
+                    }
+                }
+                NodeOp::Concat => {
+                    let sv = n
+                        .inputs
+                        .first()
+                        .ok_or_else(|| anyhow!("concat with no operands"))?
+                        .clone();
+                    let id = save_id(&mut save_ids, &sv);
+                    ops.push(Op::Concat { id });
+                }
+                other => ops.push(single(other)?),
+            }
+            consumed[ci] = true;
+            cur = n.output.clone();
+            produced.insert(cur.clone());
+            anchor.insert(cur.clone(), ops.len() - 1);
+        }
+        if let Some(i) = consumed.iter().position(|c| !c) {
+            bail!(
+                "graph '{}' is not tape-linearizable: {} is unreachable from the chain",
+                self.name,
+                self.nodes[i].op.label()
+            );
+        }
+        // retro-insert the Save markers right after their anchor op
+        // (graph-input saves go before everything), back to front so
+        // earlier indices stay valid
+        let mut inserts: Vec<(usize, String)> = Vec::new();
+        for (value, id) in &save_ids {
+            let at = if value == &self.input_value {
+                0
+            } else {
+                match anchor.get(value) {
+                    Some(&i) => i + 1,
+                    None => bail!("save source '{value}' was never current on the chain"),
+                }
+            };
+            inserts.push((at, id.clone()));
+        }
+        inserts.sort_by(|x, y| y.0.cmp(&x.0).then_with(|| y.1.cmp(&x.1)));
+        for (at, id) in inserts {
+            ops.insert(at, Op::Save { id });
+        }
+        Ok(Plan {
+            name: self.name.clone(),
+            input: self.input,
+            num_classes: self.num_classes,
+            ops,
+            pairs: self.derive_pairs_with(&a),
+            bn_of: self.bn_map_with(&a),
+        })
+    }
+
+    /// Is node `ci` the conv head of a pending downsample branch — a
+    /// conv whose sole-consumer BN feeds the *shortcut* (second) operand
+    /// of a not-yet-consumed add? Such a conv is emitted inside
+    /// `Residual { down }` when the add is reached, never as a chain op.
+    fn is_down_head(&self, a: &Analysis, consumed: &[bool], ci: usize) -> bool {
+        if !matches!(self.nodes[ci].op, NodeOp::Conv(_)) {
+            return false;
+        }
+        let Some(bns) = a.consumers.get(&self.nodes[ci].output) else { return false };
+        let &[bi] = bns.as_slice() else { return false };
+        if !matches!(self.nodes[bi].op, NodeOp::Bn(_)) {
+            return false;
+        }
+        let Some(adds) = a.consumers.get(&self.nodes[bi].output) else { return false };
+        let &[ai] = adds.as_slice() else { return false };
+        !consumed[ai]
+            && matches!(self.nodes[ai].op, NodeOp::Add)
+            && self.nodes[ai].inputs.get(1) == Some(&self.nodes[bi].output)
+    }
+
+    /// Recognize `sv` as the output of a Conv→Bn downsample chain
+    /// hanging off an already-produced value, consumed only by the add
+    /// at `add_i`. Returns (conv node, bn node, chain source value).
+    fn down_chain(&self, a: &Analysis, add_i: usize, sv: &str) -> Option<(usize, usize, String)> {
+        let &bn_i = a.producer.get(sv)?;
+        let NodeOp::Bn(_) = self.nodes[bn_i].op else { return None };
+        if a.consumers.get(sv).is_some_and(|c| c != &vec![add_i]) {
+            return None;
+        }
+        let bv = self.nodes[bn_i].inputs.first()?;
+        let &conv_i = a.producer.get(bv)?;
+        let NodeOp::Conv(_) = self.nodes[conv_i].op else { return None };
+        if a.consumers.get(bv).is_some_and(|c| c != &vec![bn_i]) {
+            return None;
+        }
+        let src = self.nodes[conv_i].inputs.first()?;
+        Some((conv_i, bn_i, src.clone()))
+    }
+
+    /// Compile to the scheduler's linear form: deterministic topo order
+    /// plus liveness-derived save/restore slots. Consumes the graph —
+    /// the [`Schedule`] owns it (the engine reads node specs through it).
+    pub fn schedule(self) -> Result<Schedule> {
+        let a = self.analyze()?;
+        // step position of each node
+        let mut pos_of: BTreeMap<usize, usize> = BTreeMap::new();
+        for (p, &i) in a.order.iter().enumerate() {
+            pos_of.insert(i, p);
+        }
+        // last step each value is read at; the output lives to the end
+        let mut last_use: BTreeMap<String, usize> = BTreeMap::new();
+        for (value, cs) in &a.consumers {
+            let mut last = 0usize;
+            for ci in cs {
+                last = last.max(pos_of.get(ci).copied().unwrap_or(0));
+            }
+            last_use.insert(value.clone(), last);
+        }
+        last_use.insert(self.output_value.clone(), usize::MAX);
+
+        let mut slot_of: BTreeMap<String, usize> = BTreeMap::new();
+        let mut free: BTreeSet<usize> = BTreeSet::new();
+        let mut num_slots = 0usize;
+        let mut alloc = |free: &mut BTreeSet<usize>| -> usize {
+            if let Some(&s) = free.iter().next() {
+                free.remove(&s);
+                s
+            } else {
+                let s = num_slots;
+                num_slots += 1;
+                s
+            }
+        };
+        let input_slot = alloc(&mut free);
+        slot_of.insert(self.input_value.clone(), input_slot);
+
+        let mut steps = Vec::with_capacity(a.order.len());
+        for (s, &ni) in a.order.iter().enumerate() {
+            let n = &self.nodes[ni];
+            let mut inputs = Vec::with_capacity(n.inputs.len());
+            let mut steal = Vec::with_capacity(n.inputs.len());
+            let mut free_after: Vec<usize> = Vec::new();
+            let mut dying: BTreeSet<String> = BTreeSet::new();
+            for (j, v) in n.inputs.iter().enumerate() {
+                let slot = slot_of
+                    .get(v)
+                    .copied()
+                    .ok_or_else(|| anyhow!("{}: value '{v}' not resident", n.op.label()))?;
+                inputs.push(slot);
+                let occurrences = n.inputs.iter().filter(|x| *x == v).count();
+                let dies = last_use.get(v).copied() == Some(s);
+                // a dying single-occurrence input may be consumed by the
+                // op (in-place mutation stays bit-identical to the tape's
+                // running-value updates); shared or still-live values are
+                // read-only
+                steal.push(dies && occurrences == 1);
+                if dies {
+                    if occurrences > 1 && j == 0 {
+                        free_after.push(slot);
+                    }
+                    dying.insert(v.clone());
+                }
+            }
+            for v in &dying {
+                if let Some(slot) = slot_of.remove(v) {
+                    free.insert(slot);
+                }
+            }
+            let out_slot = alloc(&mut free);
+            slot_of.insert(n.output.clone(), out_slot);
+            steps.push(Step { node: ni, inputs, steal, out_slot, free_after });
+        }
+        let output_slot = slot_of
+            .get(&self.output_value)
+            .copied()
+            .ok_or_else(|| anyhow!("graph output '{}' never scheduled", self.output_value))?;
+        Ok(Schedule { graph: self, steps, num_slots, input_slot, output_slot })
+    }
+}
+
+fn save_id(save_ids: &mut BTreeMap<String, String>, value: &str) -> String {
+    if let Some(id) = save_ids.get(value) {
+        return id.clone();
+    }
+    let id = format!("s{}", save_ids.len());
+    save_ids.insert(value.to_string(), id.clone());
+    id
+}
+
+/// One scheduled op: which node runs, which slots feed it, whether each
+/// input tensor may be consumed (its value dies here and nothing else
+/// reads it), which slot receives the output, and which dying-but-shared
+/// slots to release afterwards.
+#[derive(Clone, Debug)]
+pub struct Step {
+    /// index into [`Schedule::graph`]'s nodes
+    pub node: usize,
+    /// input slot per operand, in node-input order
+    pub inputs: Vec<usize>,
+    /// per operand: the interpreter may take the tensor out of the slot
+    pub steal: Vec<bool>,
+    pub out_slot: usize,
+    /// slots whose value dies at this step but was read through a shared
+    /// reference (released after the op runs)
+    pub free_after: Vec<usize>,
+}
+
+/// A graph lowered to a deterministic linear schedule with
+/// liveness-derived value slots. `num_slots` bounds resident
+/// intermediates — the scheduler reuses a slot the moment its value
+/// dies, so a plain chain runs in 2 slots no matter how deep.
+#[derive(Debug)]
+pub struct Schedule {
+    pub graph: Graph,
+    pub steps: Vec<Step>,
+    pub num_slots: usize,
+    pub input_slot: usize,
+    pub output_slot: usize,
+}
+
+/// A plan compiled to its scheduled graph form — or the structured
+/// reason it could not be. Engine constructors are infallible, so they
+/// carry this slot instead of a `Result`; `forward` surfaces the error
+/// on first use. Lanes and the registry build it once and share it.
+#[derive(Clone, Debug)]
+pub enum Compiled {
+    Ready(Arc<Schedule>),
+    Invalid(String),
+}
+
+impl Compiled {
+    pub fn of(plan: &Plan) -> Compiled {
+        match Graph::from_plan(plan).and_then(Graph::schedule) {
+            Ok(s) => Compiled::Ready(Arc::new(s)),
+            Err(e) => Compiled::Invalid(format!("{e:#}")),
+        }
+    }
+
+    pub fn get(&self) -> Result<&Arc<Schedule>> {
+        match self {
+            Compiled::Ready(s) => Ok(s),
+            Compiled::Invalid(why) => bail!("plan does not lower to a schedulable graph: {why}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"{
+      "name": "tiny", "input": [3, 8, 8], "num_classes": 4,
+      "ops": [
+        {"op": "conv", "name": "c1", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c1_bn", "ch": 4},
+        {"op": "relu"},
+        {"op": "conv", "name": "c2", "cin": 4, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c2_bn", "ch": 8},
+        {"op": "relu"},
+        {"op": "gap"},
+        {"op": "fc", "name": "fc", "cin": 8, "cout": 4}
+      ],
+      "pairs": [{"low": "c1", "high": "c2", "offset": 0}],
+      "bn_of": {"c1": "c1_bn", "c2": "c2_bn"}
+    }"#;
+
+    /// save/concat + depthwise: c1's output is the concat's SECOND
+    /// operand, so its channel offset into dw is 4 (the saved branch's
+    /// channel count), not 0.
+    const CONCAT_DW: &str = r#"{
+      "name": "cdw", "input": [3, 8, 8], "num_classes": 4,
+      "ops": [
+        {"op": "conv", "name": "c0", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c0_bn", "ch": 4},
+        {"op": "relu"},
+        {"op": "save", "id": "s"},
+        {"op": "conv", "name": "c1", "cin": 4, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c1_bn", "ch": 4},
+        {"op": "relu"},
+        {"op": "concat", "id": "s"},
+        {"op": "conv", "name": "dw", "cin": 8, "cout": 8, "k": 3, "stride": 1, "pad": 1, "groups": 8},
+        {"op": "bn", "name": "dw_bn", "ch": 8},
+        {"op": "relu"},
+        {"op": "gap"},
+        {"op": "fc", "name": "fc", "cin": 8, "cout": 4}
+      ],
+      "pairs": [{"low": "c1", "high": "dw", "offset": 4}],
+      "bn_of": {"c0": "c0_bn", "c1": "c1_bn", "dw": "dw_bn"}
+    }"#;
+
+    fn plan(src: &str) -> Plan {
+        Plan::parse(src).unwrap()
+    }
+
+    #[test]
+    fn tape_lowering_schedules_in_tape_order() {
+        let g = Graph::from_plan(&plan(TINY)).unwrap();
+        assert_eq!(g.nodes.len(), 8);
+        let s = g.schedule().unwrap();
+        let order: Vec<usize> = s.steps.iter().map(|st| st.node).collect();
+        assert_eq!(order, (0..8).collect::<Vec<_>>(), "tape order must be preserved");
+        // a straight chain needs exactly two live slots
+        assert_eq!(s.num_slots, 2, "liveness must bound resident values");
+        assert_eq!(s.input_slot, 0);
+    }
+
+    #[test]
+    fn shapes_flow_through_joins_and_pools() {
+        let g = Graph::from_plan(&plan(CONCAT_DW)).unwrap();
+        let shapes = g.value_shapes().unwrap();
+        assert_eq!(shapes[&g.output_value], ValShape::Flat(4));
+        // the concat output carries 4 + 4 channels
+        let concat_out = g
+            .nodes
+            .iter()
+            .find(|n| n.op == NodeOp::Concat)
+            .map(|n| n.output.clone())
+            .unwrap();
+        assert_eq!(shapes[&concat_out], ValShape::Chw(8, 8, 8));
+    }
+
+    #[test]
+    fn saved_value_keeps_its_slot_until_the_join() {
+        let g = Graph::from_plan(&plan(CONCAT_DW)).unwrap();
+        let s = g.schedule().unwrap();
+        // three live values peak (saved + chain + an op output)
+        assert!(s.num_slots >= 3, "saved branch needs a third slot");
+        assert!(s.num_slots <= 4, "liveness must still bound slots, got {}", s.num_slots);
+        // the concat step reads two distinct slots
+        let concat = s
+            .steps
+            .iter()
+            .find(|st| s.graph.nodes[st.node].op == NodeOp::Concat)
+            .unwrap();
+        assert_eq!(concat.inputs.len(), 2);
+        assert_ne!(concat.inputs[0], concat.inputs[1]);
+    }
+
+    #[test]
+    fn conv_consumers_track_concat_offsets() {
+        let g = Graph::from_plan(&plan(CONCAT_DW)).unwrap();
+        let cons = g.conv_consumers().unwrap();
+        // c0 reaches c1 directly (offset 0) and dw through the concat's
+        // first operand (offset 0)
+        assert_eq!(cons["c0"], vec![("c1".to_string(), 0), ("dw".to_string(), 0)]);
+        // c1 reaches dw as the concat's SECOND operand: offset 4
+        assert_eq!(cons["c1"], vec![("dw".to_string(), 4)]);
+        assert_eq!(cons["dw"], Vec::<(String, usize)>::new());
+    }
+
+    #[test]
+    fn bn_map_matches_declared_bn_of() {
+        let p = plan(CONCAT_DW);
+        let g = Graph::from_plan(&p).unwrap();
+        let bn: Vec<(String, String)> = g.bn_map().unwrap().into_iter().collect();
+        let declared: Vec<(String, String)> = p.bn_of.into_iter().collect();
+        assert_eq!(bn, declared);
+    }
+
+    #[test]
+    fn cycles_are_rejected() {
+        let mut g = Graph::from_plan(&plan(TINY)).unwrap();
+        // route the first conv's input from the last value: a cycle
+        g.nodes[0].inputs = vec![g.output_value.clone()];
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn double_assignment_and_bad_arity_are_rejected() {
+        let mut g = Graph::from_plan(&plan(TINY)).unwrap();
+        let dup = g.nodes[0].output.clone();
+        g.nodes[1].output = dup;
+        assert!(g.validate().unwrap_err().to_string().contains("assigned twice"));
+
+        let mut g = Graph::from_plan(&plan(TINY)).unwrap();
+        let v = g.nodes[0].output.clone();
+        g.nodes.push(Node { op: NodeOp::Add, inputs: vec![v], output: "x".into() });
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("takes 2 input(s)"), "{err}");
+    }
+
+    #[test]
+    fn shape_mismatches_are_rejected() {
+        // bn channel mismatch
+        let src = TINY.replace(r#""name": "c1_bn", "ch": 4"#, r#""name": "c1_bn", "ch": 5"#);
+        let g = Graph::from_plan(&plan(&src)).unwrap();
+        let err = format!("{:#}", g.validate().unwrap_err());
+        assert!(err.contains("c1_bn"), "{err}");
+        // fc fan-in mismatch
+        let src = TINY.replace(r#""cin": 8, "cout": 4"#, r#""cin": 9, "cout": 4"#);
+        let g = Graph::from_plan(&plan(&src)).unwrap();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_the_tape_front_end() {
+        for src in [TINY, CONCAT_DW] {
+            let p = plan(src);
+            let g = Graph::from_plan(&p).unwrap();
+            let raised = g.to_plan().unwrap();
+            // the raised tape lowers to a structurally identical graph
+            // (value naming is deterministic, so node-for-node equality)
+            let g1 = Graph::from_plan(&p).unwrap();
+            let g2 = Graph::from_plan(&raised).unwrap();
+            assert_eq!(g1.nodes, g2.nodes, "{src}: roundtrip changed the graph");
+            assert_eq!(raised.bn_of, p.bn_of);
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_residual_downsample() {
+        let p = Plan {
+            name: "res".into(),
+            input: [3, 8, 8],
+            num_classes: 4,
+            ops: vec![
+                Op::Conv(ConvSpec {
+                    name: "stem".into(),
+                    cin: 3,
+                    cout: 4,
+                    k: 3,
+                    stride: 1,
+                    pad: 1,
+                    groups: 1,
+                }),
+                Op::Bn(BnSpec { name: "stem_bn".into(), ch: 4 }),
+                Op::Relu,
+                Op::Save { id: "r".into() },
+                Op::Conv(ConvSpec {
+                    name: "b1".into(),
+                    cin: 4,
+                    cout: 8,
+                    k: 3,
+                    stride: 2,
+                    pad: 1,
+                    groups: 1,
+                }),
+                Op::Bn(BnSpec { name: "b1_bn".into(), ch: 8 }),
+                Op::Residual {
+                    id: "r".into(),
+                    down: Some(DownSpec {
+                        conv: ConvSpec {
+                            name: "down".into(),
+                            cin: 4,
+                            cout: 8,
+                            k: 1,
+                            stride: 2,
+                            pad: 0,
+                            groups: 1,
+                        },
+                        bn: BnSpec { name: "down_bn".into(), ch: 8 },
+                    }),
+                },
+                Op::Relu,
+                Op::Gap,
+                Op::Fc { name: "fc".into(), cin: 8, cout: 4 },
+            ],
+            pairs: Vec::new(),
+            bn_of: BTreeMap::new(),
+        };
+        let g = Graph::from_plan(&p).unwrap();
+        g.validate().unwrap();
+        let raised = g.to_plan().unwrap();
+        let has_down = raised
+            .ops
+            .iter()
+            .any(|o| matches!(o, Op::Residual { down: Some(d), .. } if d.conv.name == "down"));
+        assert!(has_down, "downsample must be re-recognized: {:?}", raised.ops);
+        let g2 = Graph::from_plan(&raised).unwrap();
+        assert_eq!(Graph::from_plan(&p).unwrap().nodes, g2.nodes);
+    }
+
+    #[test]
+    fn derive_pairs_follows_graph_edges() {
+        let g = Graph::from_plan(&plan(CONCAT_DW)).unwrap();
+        let pairs = g.derive_pairs().unwrap();
+        // c0 pairs with its first schedule-order consumer (c1, offset 0);
+        // c1 pairs with dw at the concat-shifted offset 4
+        assert_eq!(
+            pairs,
+            vec![
+                Pair { low: "c0".into(), high: "c1".into(), offset: 0 },
+                Pair { low: "c1".into(), high: "dw".into(), offset: 4 },
+            ]
+        );
+    }
+
+    #[test]
+    fn compiled_reports_structured_errors() {
+        let src = TINY.replace(r#""cin": 4, "cout": 8"#, r#""cin": 5, "cout": 8"#);
+        let c = Compiled::of(&plan(&src));
+        let err = format!("{:#}", c.get().unwrap_err());
+        assert!(err.contains("schedulable"), "{err}");
+    }
+}

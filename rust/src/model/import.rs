@@ -1,0 +1,1135 @@
+//! Dependency-free ONNX-subset importer: a second front-end into the
+//! graph-IR ([`super::graph::Graph`]), proving the IR is not just a
+//! re-encoding of the tape.
+//!
+//! The reader decodes the protobuf wire format directly — varint and
+//! length-delimited fields only, with fixed32/fixed64 skipped — so no
+//! protobuf dependency is needed. The supported op set is exactly what
+//! the engine executes: `Conv` (bias-free, square kernels, symmetric
+//! pads), `BatchNormalization` (inference mode, epsilon == the engine's
+//! [`BN_EPS`]), `Relu`, `MaxPool`/`AveragePool` (unpadded),
+//! `GlobalAveragePool`, `Add`, `Concat` (axis 1, two inputs), `Flatten`
+//! (axis 1) and `Gemm` (alpha=beta=1, transB=1). Anything else — unknown
+//! ops, exotic attributes, non-float tensors — is a structured error
+//! naming the node, never a silent approximation.
+//!
+//! Initializers land in a [`Checkpoint`] under the engine's key scheme
+//! (`<conv>.w`, `<bn>.gamma/.beta/.mu/.var`, `<fc>.w`/`<fc>.b`), and the
+//! assembled graph is validated ([`Graph::validate`]) before it is
+//! returned, so an import that succeeds is servable as-is.
+//!
+//! Every byte here is untrusted: the module is under the `panic-path`
+//! and `checked-arith` lint contracts — truncation, bad wire types and
+//! overflowing dims must come back as `Err`, never a panic.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::ops::BN_EPS;
+use crate::tensor::Tensor;
+
+use super::checkpoint::Checkpoint;
+use super::graph::{Graph, Node, NodeOp};
+use super::plan::{BnSpec, ConvSpec};
+
+// ---------------------------------------------------------------------------
+// protobuf wire layer
+// ---------------------------------------------------------------------------
+
+/// One decoded field value. Fixed-width fields carry their raw bytes;
+/// the ONNX subset only ever interprets varints and length-delimited
+/// payloads, but fixed fields must still be consumed to stay in sync.
+enum Field<'a> {
+    Varint(u64),
+    Fixed64(&'a [u8]),
+    Bytes(&'a [u8]),
+    Fixed32(&'a [u8]),
+}
+
+/// Bounds-checked cursor over untrusted protobuf bytes. Every advance
+/// goes through `checked_add`; running past the buffer is a structured
+/// error, not a wrap-around.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn over(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    /// Base-128 varint, at most 10 bytes, overflow-rejected.
+    fn read_varint(&mut self) -> Result<u64> {
+        let mut out: u64 = 0;
+        let mut shift: u32 = 0;
+        loop {
+            let b = *self.buf.get(self.pos).context("truncated varint")?;
+            self.pos = self.pos.checked_add(1).context("cursor overflow")?;
+            let chunk = u64::from(b & 0x7f);
+            if shift >= 64 || (shift == 63 && chunk > 1) {
+                bail!("varint overflows u64");
+            }
+            out |= chunk << shift;
+            if b & 0x80 == 0 {
+                return Ok(out);
+            }
+            shift = shift.checked_add(7).context("varint shift overflow")?;
+        }
+    }
+
+    /// Take exactly `len` bytes.
+    fn read_bytes(&mut self, len: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(len).context("field length overflows")?;
+        let s = self.buf.get(self.pos..end).with_context(|| {
+            let avail = self.buf.len().saturating_sub(self.pos);
+            format!("field of {len} bytes truncated ({avail} available)")
+        })?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    /// A length-delimited payload (wire type 2).
+    fn read_len_delimited(&mut self) -> Result<&'a [u8]> {
+        let len = self.read_varint()?;
+        let len = usize::try_from(len).ok().context("field length out of usize range")?;
+        self.read_bytes(len)
+    }
+
+    /// The next `(field_number, value)`. Wire types 3/4 (groups) are a
+    /// hard error — ONNX never emits them and they cannot be skipped
+    /// without tracking nesting.
+    fn read_field(&mut self) -> Result<(u64, Field<'a>)> {
+        let key = self.read_varint()?;
+        let field = key >> 3;
+        if field == 0 {
+            bail!("field number 0 is illegal");
+        }
+        let value = match key & 7 {
+            0 => Field::Varint(self.read_varint()?),
+            1 => Field::Fixed64(self.read_bytes(8)?),
+            2 => Field::Bytes(self.read_len_delimited()?),
+            5 => Field::Fixed32(self.read_bytes(4)?),
+            w => bail!("unsupported wire type {w} for field {field}"),
+        };
+        Ok((field, value))
+    }
+}
+
+fn parse_utf8(b: &[u8]) -> Result<String> {
+    String::from_utf8(b.to_vec()).context("string field is not UTF-8")
+}
+
+/// A packed repeated int64 payload (proto3 default encoding), decoded as
+/// consecutive varints.
+fn read_packed_i64s(b: &[u8], out: &mut Vec<i64>) -> Result<()> {
+    let mut r = Reader::over(b);
+    while !r.done() {
+        out.push(r.read_varint()? as i64);
+    }
+    Ok(())
+}
+
+/// A packed repeated float payload: consecutive 4-byte LE IEEE floats.
+fn read_packed_f32s(b: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    if b.len() % 4 != 0 {
+        bail!("packed float payload of {} bytes is not a multiple of 4", b.len());
+    }
+    for chunk in b.chunks_exact(4) {
+        let arr: [u8; 4] = chunk.try_into().context("float chunk")?;
+        out.push(f32::from_le_bytes(arr));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// raw ONNX messages (only the fields the subset needs)
+// ---------------------------------------------------------------------------
+
+/// AttributeProto: name (1), f (2), i (3), ints (8). Other payload
+/// kinds (strings, tensors, graphs) are rejected where they appear.
+struct RawAttr {
+    name: String,
+    f: Option<f32>,
+    i: Option<i64>,
+    ints: Vec<i64>,
+}
+
+/// NodeProto: input (1), output (2), name (3), op_type (4), attribute (5).
+struct RawNode {
+    op_type: String,
+    name: String,
+    inputs: Vec<String>,
+    outputs: Vec<String>,
+    attrs: Vec<RawAttr>,
+}
+
+/// TensorProto: dims (1), data_type (2), float_data (4), name (8),
+/// raw_data (9).
+struct RawTensor {
+    name: String,
+    dims: Vec<i64>,
+    data_type: i64,
+    data: Vec<f32>,
+}
+
+/// GraphProto: node (1), name (2), initializer (5), input (11),
+/// output (12).
+struct RawGraph {
+    name: String,
+    nodes: Vec<RawNode>,
+    initializers: Vec<RawTensor>,
+    /// declared graph inputs: (name, dims with dynamic dims as 0)
+    inputs: Vec<(String, Vec<i64>)>,
+    outputs: Vec<String>,
+}
+
+fn read_attr(b: &[u8]) -> Result<RawAttr> {
+    let mut r = Reader::over(b);
+    let mut a = RawAttr { name: String::new(), f: None, i: None, ints: Vec::new() };
+    while !r.done() {
+        match r.read_field()? {
+            (1, Field::Bytes(s)) => a.name = parse_utf8(s)?,
+            (2, Field::Fixed32(s)) => {
+                let arr: [u8; 4] = s.try_into().context("attribute float")?;
+                a.f = Some(f32::from_le_bytes(arr));
+            }
+            (3, Field::Varint(v)) => a.i = Some(v as i64),
+            (8, Field::Bytes(s)) => read_packed_i64s(s, &mut a.ints)?,
+            (8, Field::Varint(v)) => a.ints.push(v as i64),
+            // type (20) and the doc-string field are ignorable metadata
+            (20, Field::Varint(_)) | (13, Field::Bytes(_)) => {}
+            (4 | 5 | 6 | 7 | 9 | 10, _) => {
+                bail!("attribute '{}' has an unsupported payload kind", a.name)
+            }
+            _ => {}
+        }
+    }
+    Ok(a)
+}
+
+fn read_node(b: &[u8]) -> Result<RawNode> {
+    let mut r = Reader::over(b);
+    let mut n = RawNode {
+        op_type: String::new(),
+        name: String::new(),
+        inputs: Vec::new(),
+        outputs: Vec::new(),
+        attrs: Vec::new(),
+    };
+    while !r.done() {
+        match r.read_field()? {
+            (1, Field::Bytes(s)) => n.inputs.push(parse_utf8(s)?),
+            (2, Field::Bytes(s)) => n.outputs.push(parse_utf8(s)?),
+            (3, Field::Bytes(s)) => n.name = parse_utf8(s)?,
+            (4, Field::Bytes(s)) => n.op_type = parse_utf8(s)?,
+            (5, Field::Bytes(s)) => n.attrs.push(read_attr(s)?),
+            (7, Field::Bytes(s)) => {
+                let domain = parse_utf8(s)?;
+                if !domain.is_empty() && domain != "ai.onnx" {
+                    bail!("node '{}' uses unsupported domain '{domain}'", n.name);
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(n)
+}
+
+fn read_tensor(b: &[u8]) -> Result<RawTensor> {
+    let mut r = Reader::over(b);
+    let mut t =
+        RawTensor { name: String::new(), dims: Vec::new(), data_type: 0, data: Vec::new() };
+    let mut raw: Option<&[u8]> = None;
+    while !r.done() {
+        match r.read_field()? {
+            (1, Field::Bytes(s)) => read_packed_i64s(s, &mut t.dims)?,
+            (1, Field::Varint(v)) => t.dims.push(v as i64),
+            (2, Field::Varint(v)) => t.data_type = v as i64,
+            (4, Field::Bytes(s)) => read_packed_f32s(s, &mut t.data)?,
+            (4, Field::Fixed32(s)) => {
+                let arr: [u8; 4] = s.try_into().context("float element")?;
+                t.data.push(f32::from_le_bytes(arr));
+            }
+            (8, Field::Bytes(s)) => t.name = parse_utf8(s)?,
+            (9, Field::Bytes(s)) => raw = Some(s),
+            _ => {}
+        }
+    }
+    if let Some(bytes) = raw {
+        if !t.data.is_empty() {
+            bail!("initializer '{}' has both float_data and raw_data", t.name);
+        }
+        read_packed_f32s(bytes, &mut t.data)
+            .with_context(|| format!("initializer '{}' raw_data", t.name))?;
+    }
+    Ok(t)
+}
+
+/// ValueInfoProto → (name, dims). Walks type (2) → tensor_type (1) →
+/// shape (2) → dim (1) → dim_value (1); `dim_param` (symbolic) decodes
+/// as 0, which the input handling treats as "dynamic batch".
+fn read_value_info(b: &[u8]) -> Result<(String, Vec<i64>)> {
+    let mut r = Reader::over(b);
+    let mut name = String::new();
+    let mut dims = Vec::new();
+    while !r.done() {
+        match r.read_field()? {
+            (1, Field::Bytes(s)) => name = parse_utf8(s)?,
+            (2, Field::Bytes(type_proto)) => {
+                let mut tr = Reader::over(type_proto);
+                while !tr.done() {
+                    if let (1, Field::Bytes(tensor_type)) = tr.read_field()? {
+                        let mut sr = Reader::over(tensor_type);
+                        while !sr.done() {
+                            if let (2, Field::Bytes(shape)) = sr.read_field()? {
+                                read_shape_dims(shape, &mut dims)?;
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok((name, dims))
+}
+
+/// TensorShapeProto: repeated dim (1), each with dim_value (1) or
+/// dim_param (2, symbolic → 0).
+fn read_shape_dims(b: &[u8], dims: &mut Vec<i64>) -> Result<()> {
+    let mut r = Reader::over(b);
+    while !r.done() {
+        if let (1, Field::Bytes(dim)) = r.read_field()? {
+            let mut dr = Reader::over(dim);
+            let mut v: i64 = 0;
+            while !dr.done() {
+                if let (1, Field::Varint(x)) = dr.read_field()? {
+                    v = x as i64;
+                }
+            }
+            dims.push(v);
+        }
+    }
+    Ok(())
+}
+
+fn read_graph(b: &[u8]) -> Result<RawGraph> {
+    let mut r = Reader::over(b);
+    let mut g = RawGraph {
+        name: String::new(),
+        nodes: Vec::new(),
+        initializers: Vec::new(),
+        inputs: Vec::new(),
+        outputs: Vec::new(),
+    };
+    while !r.done() {
+        match r.read_field()? {
+            (1, Field::Bytes(s)) => g.nodes.push(read_node(s)?),
+            (2, Field::Bytes(s)) => g.name = parse_utf8(s)?,
+            (5, Field::Bytes(s)) => g.initializers.push(read_tensor(s)?),
+            (11, Field::Bytes(s)) => g.inputs.push(read_value_info(s)?),
+            (12, Field::Bytes(s)) => g.outputs.push(read_value_info(s)?.0),
+            _ => {}
+        }
+    }
+    Ok(g)
+}
+
+/// ModelProto: the graph lives in field 7; version/producer/opset
+/// metadata is skipped.
+fn read_model(bytes: &[u8]) -> Result<RawGraph> {
+    let mut r = Reader::over(bytes);
+    let mut graph = None;
+    while !r.done() {
+        if let (7, Field::Bytes(s)) = r.read_field()? {
+            if graph.is_some() {
+                bail!("model has more than one graph");
+            }
+            graph = Some(read_graph(s).context("decoding GraphProto")?);
+        }
+    }
+    graph.context("model has no graph")
+}
+
+// ---------------------------------------------------------------------------
+// ONNX → graph-IR mapping
+// ---------------------------------------------------------------------------
+
+/// Attribute lookup with strictness: ops declare exactly which
+/// attributes they understand, and anything else is an error (a silent
+/// skip would change semantics — e.g. an ignored `dilations`).
+struct Attrs<'a> {
+    node: &'a RawNode,
+    map: BTreeMap<&'a str, &'a RawAttr>,
+}
+
+impl<'a> Attrs<'a> {
+    fn of(node: &'a RawNode, allowed: &[&str]) -> Result<Attrs<'a>> {
+        let mut map = BTreeMap::new();
+        for a in &node.attrs {
+            if !allowed.contains(&a.name.as_str()) {
+                bail!(
+                    "{} '{}' has unsupported attribute '{}'",
+                    node.op_type,
+                    node.name,
+                    a.name
+                );
+            }
+            map.insert(a.name.as_str(), a);
+        }
+        Ok(Attrs { node, map })
+    }
+
+    fn int(&self, name: &str, default: i64) -> Result<i64> {
+        match self.map.get(name) {
+            None => Ok(default),
+            Some(a) => a.i.with_context(|| {
+                format!("attribute '{name}' of '{}' is not an int", self.node.name)
+            }),
+        }
+    }
+
+    fn float(&self, name: &str, default: f32) -> Result<f32> {
+        match self.map.get(name) {
+            None => Ok(default),
+            Some(a) => a.f.with_context(|| {
+                format!("attribute '{name}' of '{}' is not a float", self.node.name)
+            }),
+        }
+    }
+
+    fn ints(&self, name: &str) -> Option<&[i64]> {
+        self.map.get(name).map(|a| a.ints.as_slice())
+    }
+
+    /// A square spatial attribute (`kernel_shape`, `strides`): both
+    /// entries equal and positive.
+    fn square(&self, name: &str, default: Option<usize>) -> Result<usize> {
+        match self.ints(name) {
+            None => default.with_context(|| {
+                format!("{} '{}' needs attribute '{name}'", self.node.op_type, self.node.name)
+            }),
+            Some([a, b]) if a == b => usize::try_from(*a)
+                .ok()
+                .filter(|v| *v > 0)
+                .with_context(|| format!("'{name}' of '{}' out of range", self.node.name)),
+            Some(v) => bail!(
+                "'{name}' of '{}' must be square 2-D, got {v:?} — only square windows import",
+                self.node.name
+            ),
+        }
+    }
+
+    /// Symmetric 4-entry `pads`, all equal.
+    fn sym_pads(&self) -> Result<usize> {
+        match self.ints("pads") {
+            None => Ok(0),
+            Some([t, l, b, r]) if t == l && l == b && b == r => usize::try_from(*t)
+                .ok()
+                .with_context(|| format!("'pads' of '{}' out of range", self.node.name)),
+            Some(v) => bail!(
+                "'pads' of '{}' must be symmetric, got {v:?} — asymmetric padding does not import",
+                self.node.name
+            ),
+        }
+    }
+
+    fn unit_dilations(&self) -> Result<()> {
+        if let Some(d) = self.ints("dilations") {
+            if d.iter().any(|&v| v != 1) {
+                bail!("'{}' uses dilations {d:?} — only dilation 1 imports", self.node.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Layer names become checkpoint keys and plan layer names, so they are
+/// restricted to `[A-Za-z0-9_-]` ('.' is the checkpoint key separator).
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' { c } else { '_' })
+        .collect()
+}
+
+/// A unique, sanitized layer name for node `idx`.
+fn layer_name(node: &RawNode, idx: usize, used: &mut BTreeSet<String>) -> Result<String> {
+    let base = if node.name.is_empty() {
+        format!("{}_{idx}", node.op_type.to_ascii_lowercase())
+    } else {
+        sanitize(&node.name)
+    };
+    if !used.insert(base.clone()) {
+        bail!("layer name '{base}' (node {idx}) collides after sanitization");
+    }
+    Ok(base)
+}
+
+/// Convert a decoded initializer into a [`Tensor`], checking dims are
+/// positive, the element count matches, and the product cannot overflow.
+fn tensor_of(t: &RawTensor) -> Result<Tensor> {
+    if t.data_type != 1 {
+        bail!("initializer '{}' has data_type {} — only float32 imports", t.name, t.data_type);
+    }
+    let mut shape = Vec::with_capacity(t.dims.len());
+    let mut count: usize = 1;
+    for &d in &t.dims {
+        let d = usize::try_from(d)
+            .ok()
+            .filter(|v| *v > 0)
+            .with_context(|| format!("initializer '{}' has illegal dim {d}", t.name))?;
+        count = count
+            .checked_mul(d)
+            .with_context(|| format!("initializer '{}' element count overflows", t.name))?;
+        shape.push(d);
+    }
+    if count != t.data.len() {
+        bail!(
+            "initializer '{}' declares {count} elements ({:?}) but carries {}",
+            t.name,
+            t.dims,
+            t.data.len()
+        );
+    }
+    Ok(Tensor::new(shape, t.data.clone()))
+}
+
+/// The spatial dims an initializer declares, as `[usize]`.
+fn dims_usize(t: &RawTensor) -> Result<Vec<usize>> {
+    t.dims
+        .iter()
+        .map(|&d| {
+            usize::try_from(d)
+                .ok()
+                .filter(|v| *v > 0)
+                .with_context(|| format!("initializer '{}' has illegal dim {d}", t.name))
+        })
+        .collect()
+}
+
+/// Resolve a node input that must be an initializer (a weight).
+fn init_of<'a>(
+    inits: &'a BTreeMap<String, RawTensor>,
+    node: &RawNode,
+    idx: usize,
+    what: &str,
+) -> Result<&'a RawTensor> {
+    let key = node
+        .inputs
+        .get(idx)
+        .filter(|s| !s.is_empty())
+        .with_context(|| format!("{} '{}' is missing its {what} input", node.op_type, node.name))?;
+    inits.get(key).with_context(|| {
+        format!("{} '{}': {what} '{key}' is not an initializer", node.op_type, node.name)
+    })
+}
+
+/// The single activation input of a node (fails on initializer inputs —
+/// the engine has no constant-operand ops).
+fn activation_input(
+    inits: &BTreeMap<String, RawTensor>,
+    node: &RawNode,
+    idx: usize,
+) -> Result<String> {
+    let v = node
+        .inputs
+        .get(idx)
+        .filter(|s| !s.is_empty())
+        .with_context(|| format!("{} '{}' is missing input {idx}", node.op_type, node.name))?;
+    if inits.contains_key(v) {
+        bail!(
+            "{} '{}': input '{v}' is an initializer — constant operands do not import",
+            node.op_type,
+            node.name
+        );
+    }
+    Ok(v.clone())
+}
+
+/// The node's single data output. ONNX ops with optional extra outputs
+/// (MaxPool indices, BN training stats) import only if those are absent.
+fn sole_output(node: &RawNode) -> Result<String> {
+    let mut it = node.outputs.iter().filter(|s| !s.is_empty());
+    let out = it
+        .next()
+        .with_context(|| format!("{} '{}' has no output", node.op_type, node.name))?;
+    if it.next().is_some() {
+        bail!(
+            "{} '{}' declares extra outputs — training-mode outputs do not import",
+            node.op_type,
+            node.name
+        );
+    }
+    Ok(out.clone())
+}
+
+/// Import an ONNX-subset model. `name` overrides the embedded graph name
+/// (pass "" to keep it). Returns the validated graph plus a checkpoint
+/// holding every weight under the engine's key scheme — ready to lower
+/// to a plan ([`Graph::to_plan`]) and register for serving.
+pub fn import_onnx(bytes: &[u8], name: &str) -> Result<(Graph, Checkpoint)> {
+    let raw = read_model(bytes).context("decoding ONNX model")?;
+
+    let mut inits: BTreeMap<String, RawTensor> = BTreeMap::new();
+    for t in raw.initializers {
+        if t.name.is_empty() {
+            bail!("unnamed initializer");
+        }
+        if let Some(prev) = inits.insert(t.name.clone(), t) {
+            bail!("initializer '{}' defined twice", prev.name);
+        }
+    }
+
+    // graph input: the declared input that is not an initializer,
+    // shaped [N, C, H, W] with a possibly-dynamic batch dim
+    let mut data_inputs = raw.inputs.iter().filter(|(n, _)| !inits.contains_key(n));
+    let (input_value, in_dims) =
+        data_inputs.next().context("graph declares no data input")?;
+    if data_inputs.next().is_some() {
+        bail!("graph declares more than one data input");
+    }
+    let input: [usize; 3] = match in_dims.as_slice() {
+        [_, c, h, w] => {
+            let chw: Vec<usize> = [*c, *h, *w]
+                .iter()
+                .map(|&d| {
+                    usize::try_from(d)
+                        .ok()
+                        .filter(|v| *v > 0)
+                        .with_context(|| format!("input '{input_value}' has illegal dim {d}"))
+                })
+                .collect::<Result<_>>()?;
+            [chw[0], chw[1], chw[2]]
+        }
+        other => bail!("input '{input_value}' must be NCHW, got {} dims", other.len()),
+    };
+
+    let output_value = match raw.outputs.as_slice() {
+        [o] => o.clone(),
+        outs => bail!("graph must declare exactly one output, got {}", outs.len()),
+    };
+
+    let mut ckpt = Checkpoint::default();
+    let mut used = BTreeSet::new();
+    let mut nodes = Vec::with_capacity(raw.nodes.len());
+    let mut fc_couts: BTreeMap<String, usize> = BTreeMap::new();
+    for (idx, n) in raw.nodes.iter().enumerate() {
+        let node = map_node(n, idx, &inits, &mut ckpt, &mut used)
+            .with_context(|| format!("importing {} '{}' (node {idx})", n.op_type, n.name))?;
+        if let NodeOp::Fc { cout, .. } = &node.op {
+            fc_couts.insert(node.output.clone(), *cout);
+        }
+        nodes.push(node);
+    }
+
+    // the engine serves logits from an fc head; num_classes comes from
+    // the head that produces the declared graph output
+    let num_classes = *fc_couts.get(&output_value).with_context(|| {
+        format!("graph output '{output_value}' is not produced by a Gemm (fc) head")
+    })?;
+
+    let graph_name = if !name.is_empty() {
+        sanitize(name)
+    } else if !raw.name.is_empty() {
+        sanitize(&raw.name)
+    } else {
+        "imported".to_string()
+    };
+    let graph = Graph {
+        name: graph_name,
+        input,
+        num_classes,
+        input_value: input_value.clone(),
+        output_value,
+        nodes,
+    };
+    graph.validate().context("imported graph fails validation")?;
+    ckpt.validate_finite().context("imported weights")?;
+    Ok((graph, ckpt))
+}
+
+/// Map one ONNX node onto a graph-IR node, depositing its weights.
+fn map_node(
+    n: &RawNode,
+    idx: usize,
+    inits: &BTreeMap<String, RawTensor>,
+    ckpt: &mut Checkpoint,
+    used: &mut BTreeSet<String>,
+) -> Result<Node> {
+    let output = sole_output(n)?;
+    let node = |op: NodeOp, inputs: Vec<String>| Node { op, inputs, output: output.clone() };
+    Ok(match n.op_type.as_str() {
+        "Conv" => {
+            let a = Attrs::of(n, &["kernel_shape", "strides", "pads", "dilations", "group"])?;
+            a.unit_dilations()?;
+            if n.inputs.len() > 2 && !n.inputs[2].is_empty() {
+                bail!("conv bias does not import — fold it into a following BN");
+            }
+            let w = init_of(inits, n, 1, "weight")?;
+            let dims = dims_usize(w)?;
+            let (cout, cin_g, kh, kw) = match dims.as_slice() {
+                [a, b, c, d] => (*a, *b, *c, *d),
+                other => bail!("conv weight must be 4-D, got {other:?}"),
+            };
+            if kh != kw {
+                bail!("conv kernel {kh}x{kw} is not square — only square kernels import");
+            }
+            let groups = usize::try_from(a.int("group", 1)?)
+                .ok()
+                .filter(|g| *g > 0)
+                .context("illegal group attribute")?;
+            let cin = cin_g.checked_mul(groups).context("cin overflows")?;
+            if cout % groups != 0 {
+                bail!("cout {cout} not divisible by groups {groups}");
+            }
+            let k = a.square("kernel_shape", Some(kh))?;
+            if k != kh {
+                bail!("kernel_shape {k} disagrees with weight dims {kh}");
+            }
+            let name = layer_name(n, idx, used)?;
+            ckpt.put(&format!("{name}.w"), tensor_of(w)?);
+            node(
+                NodeOp::Conv(ConvSpec {
+                    name,
+                    cin,
+                    cout,
+                    k,
+                    stride: a.square("strides", Some(1))?,
+                    pad: a.sym_pads()?,
+                    groups,
+                }),
+                vec![activation_input(inits, n, 0)?],
+            )
+        }
+        "BatchNormalization" => {
+            let a = Attrs::of(n, &["epsilon", "momentum", "spatial", "training_mode"])?;
+            let eps = a.float("epsilon", BN_EPS)?;
+            if (eps - BN_EPS).abs() > 1e-9 {
+                bail!("epsilon {eps} differs from the engine's {BN_EPS} — cannot import exactly");
+            }
+            if a.int("training_mode", 0)? != 0 {
+                bail!("training-mode BatchNormalization does not import");
+            }
+            let gamma = init_of(inits, n, 1, "scale")?;
+            let ch = match dims_usize(gamma)?.as_slice() {
+                [c] => *c,
+                other => bail!("BN scale must be 1-D, got {other:?}"),
+            };
+            let name = layer_name(n, idx, used)?;
+            for (field, which, input_idx) in
+                [("gamma", "scale", 1usize), ("beta", "bias", 2), ("mu", "mean", 3), ("var", "variance", 4)]
+            {
+                let t = init_of(inits, n, input_idx, which)?;
+                let tens = tensor_of(t)?;
+                if tens.data.len() != ch {
+                    bail!("BN {which} has {} entries, scale has {ch}", tens.data.len());
+                }
+                ckpt.put(&format!("{name}.{field}"), tens);
+            }
+            node(NodeOp::Bn(BnSpec { name, ch }), vec![activation_input(inits, n, 0)?])
+        }
+        "Relu" => {
+            Attrs::of(n, &[])?;
+            node(NodeOp::Relu, vec![activation_input(inits, n, 0)?])
+        }
+        "MaxPool" | "AveragePool" => {
+            let a = Attrs::of(
+                n,
+                &["kernel_shape", "strides", "pads", "dilations", "ceil_mode", "count_include_pad"],
+            )?;
+            a.unit_dilations()?;
+            if a.sym_pads()? != 0 {
+                bail!("padded pooling does not import — the engine's pools are unpadded");
+            }
+            if a.int("ceil_mode", 0)? != 0 {
+                bail!("ceil_mode pooling does not import");
+            }
+            let k = a.square("kernel_shape", None)?;
+            let stride = a.square("strides", Some(1))?;
+            let op = if n.op_type == "MaxPool" {
+                NodeOp::MaxPool { k, stride }
+            } else {
+                NodeOp::AvgPool { k, stride }
+            };
+            node(op, vec![activation_input(inits, n, 0)?])
+        }
+        "GlobalAveragePool" => {
+            Attrs::of(n, &[])?;
+            node(NodeOp::Gap, vec![activation_input(inits, n, 0)?])
+        }
+        "Flatten" => {
+            let a = Attrs::of(n, &["axis"])?;
+            if a.int("axis", 1)? != 1 {
+                bail!("Flatten axis must be 1 (batch outermost)");
+            }
+            node(NodeOp::Flatten, vec![activation_input(inits, n, 0)?])
+        }
+        "Add" => {
+            Attrs::of(n, &[])?;
+            if n.inputs.len() != 2 {
+                bail!("Add must have exactly two inputs, got {}", n.inputs.len());
+            }
+            node(
+                NodeOp::Add,
+                vec![activation_input(inits, n, 0)?, activation_input(inits, n, 1)?],
+            )
+        }
+        "Concat" => {
+            let a = Attrs::of(n, &["axis"])?;
+            if a.int("axis", i64::MIN)? != 1 {
+                bail!("Concat imports only along the channel axis (axis=1)");
+            }
+            if n.inputs.len() != 2 {
+                bail!("Concat must have exactly two inputs, got {}", n.inputs.len());
+            }
+            node(
+                NodeOp::Concat,
+                vec![activation_input(inits, n, 0)?, activation_input(inits, n, 1)?],
+            )
+        }
+        "Gemm" => {
+            let a = Attrs::of(n, &["alpha", "beta", "transA", "transB"])?;
+            if (a.float("alpha", 1.0)? - 1.0).abs() > 1e-9 || (a.float("beta", 1.0)? - 1.0).abs() > 1e-9
+            {
+                bail!("Gemm imports only with alpha=1, beta=1");
+            }
+            if a.int("transA", 0)? != 0 || a.int("transB", 0)? != 1 {
+                bail!("Gemm imports only as y = x·Wᵀ + b (transA=0, transB=1)");
+            }
+            let w = init_of(inits, n, 1, "weight")?;
+            let (cout, cin) = match dims_usize(w)?.as_slice() {
+                [r, c] => (*r, *c),
+                other => bail!("Gemm weight must be 2-D, got {other:?}"),
+            };
+            let name = layer_name(n, idx, used)?;
+            ckpt.put(&format!("{name}.w"), tensor_of(w)?);
+            let bias = match n.inputs.get(2).filter(|s| !s.is_empty()) {
+                Some(_) => {
+                    let b = init_of(inits, n, 2, "bias")?;
+                    let t = tensor_of(b)?;
+                    if t.data.len() != cout {
+                        bail!("Gemm bias has {} entries, weight rows {cout}", t.data.len());
+                    }
+                    t
+                }
+                None => Tensor::new(vec![cout], vec![0.0; cout]),
+            };
+            ckpt.put(&format!("{name}.b"), bias);
+            node(NodeOp::Fc { name, cin, cout }, vec![activation_input(inits, n, 0)?])
+        }
+        other => bail!("op type '{other}' is outside the import subset"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- a miniature protobuf encoder, just enough to build fixtures ---------
+
+    fn vint(out: &mut Vec<u8>, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                out.push(b);
+                break;
+            }
+            out.push(b | 0x80);
+        }
+    }
+
+    fn f_bytes(out: &mut Vec<u8>, field: u64, payload: &[u8]) {
+        vint(out, field << 3 | 2);
+        vint(out, payload.len() as u64);
+        out.extend_from_slice(payload);
+    }
+
+    fn f_str(out: &mut Vec<u8>, field: u64, s: &str) {
+        f_bytes(out, field, s.as_bytes());
+    }
+
+    fn f_varint(out: &mut Vec<u8>, field: u64, v: u64) {
+        vint(out, field << 3);
+        vint(out, v);
+    }
+
+    fn packed_i64s(vals: &[i64]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &v in vals {
+            vint(&mut out, v as u64);
+        }
+        out
+    }
+
+    fn attr_int(name: &str, v: i64) -> Vec<u8> {
+        let mut a = Vec::new();
+        f_str(&mut a, 1, name);
+        f_varint(&mut a, 3, v as u64);
+        f_varint(&mut a, 20, 2); // AttributeProto.INT
+        a
+    }
+
+    fn attr_ints(name: &str, vals: &[i64]) -> Vec<u8> {
+        let mut a = Vec::new();
+        f_str(&mut a, 1, name);
+        f_bytes(&mut a, 8, &packed_i64s(vals));
+        f_varint(&mut a, 20, 7); // AttributeProto.INTS
+        a
+    }
+
+    fn attr_float(name: &str, v: f32) -> Vec<u8> {
+        let mut a = Vec::new();
+        f_str(&mut a, 1, name);
+        vint(&mut a, 2 << 3 | 5);
+        a.extend_from_slice(&v.to_le_bytes());
+        f_varint(&mut a, 20, 1); // AttributeProto.FLOAT
+        a
+    }
+
+    fn onnx_node(op: &str, name: &str, ins: &[&str], outs: &[&str], attrs: &[Vec<u8>]) -> Vec<u8> {
+        let mut n = Vec::new();
+        for i in ins {
+            f_str(&mut n, 1, i);
+        }
+        for o in outs {
+            f_str(&mut n, 2, o);
+        }
+        f_str(&mut n, 3, name);
+        f_str(&mut n, 4, op);
+        for a in attrs {
+            f_bytes(&mut n, 5, a);
+        }
+        n
+    }
+
+    fn onnx_init(name: &str, dims: &[i64], data: &[f32]) -> Vec<u8> {
+        let mut t = Vec::new();
+        f_bytes(&mut t, 1, &packed_i64s(dims));
+        f_varint(&mut t, 2, 1); // FLOAT
+        let mut raw = Vec::new();
+        for &v in data {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        f_bytes(&mut t, 9, &raw);
+        f_str(&mut t, 8, name);
+        t
+    }
+
+    fn onnx_value_info(name: &str, dims: &[i64]) -> Vec<u8> {
+        let mut shape = Vec::new();
+        for &d in dims {
+            let mut dim = Vec::new();
+            f_varint(&mut dim, 1, d as u64);
+            f_bytes(&mut shape, 1, &dim);
+        }
+        let mut tensor_type = Vec::new();
+        f_bytes(&mut tensor_type, 2, &shape);
+        let mut type_proto = Vec::new();
+        f_bytes(&mut type_proto, 1, &tensor_type);
+        let mut vi = Vec::new();
+        f_str(&mut vi, 1, name);
+        f_bytes(&mut vi, 2, &type_proto);
+        vi
+    }
+
+    fn onnx_model(
+        nodes: &[Vec<u8>],
+        inits: &[Vec<u8>],
+        inputs: &[Vec<u8>],
+        outputs: &[Vec<u8>],
+    ) -> Vec<u8> {
+        let mut g = Vec::new();
+        for n in nodes {
+            f_bytes(&mut g, 1, n);
+        }
+        f_str(&mut g, 2, "unit");
+        for t in inits {
+            f_bytes(&mut g, 5, t);
+        }
+        for i in inputs {
+            f_bytes(&mut g, 11, i);
+        }
+        for o in outputs {
+            f_bytes(&mut g, 12, o);
+        }
+        let mut m = Vec::new();
+        f_varint(&mut m, 1, 8); // ir_version — skipped by the reader
+        f_bytes(&mut m, 7, &g);
+        m
+    }
+
+    /// conv(3→2,k1) + bn + relu + gap + gemm(2→2): the smallest model
+    /// exercising every weight-carrying mapping.
+    fn tiny_model() -> Vec<u8> {
+        let conv_w: Vec<f32> = (0..6).map(|i| 0.1 * (i as f32 + 1.0)).collect();
+        let fc_w: Vec<f32> = (0..4).map(|i| 0.05 * (i as f32 + 1.0)).collect();
+        onnx_model(
+            &[
+                onnx_node(
+                    "Conv",
+                    "c1",
+                    &["x", "c1_w"],
+                    &["v1"],
+                    &[
+                        attr_ints("kernel_shape", &[1, 1]),
+                        attr_ints("strides", &[1, 1]),
+                        attr_ints("pads", &[0, 0, 0, 0]),
+                        attr_int("group", 1),
+                    ],
+                ),
+                onnx_node(
+                    "BatchNormalization",
+                    "bn1",
+                    &["v1", "g", "b", "m", "v"],
+                    &["v2"],
+                    &[attr_float("epsilon", 1e-5)],
+                ),
+                onnx_node("Relu", "r1", &["v2"], &["v3"], &[]),
+                onnx_node("GlobalAveragePool", "gap", &["v3"], &["v4"], &[]),
+                onnx_node(
+                    "Gemm",
+                    "head",
+                    &["v4", "fc_w"],
+                    &["logits"],
+                    &[attr_int("transB", 1)],
+                ),
+            ],
+            &[
+                onnx_init("c1_w", &[2, 3, 1, 1], &conv_w),
+                onnx_init("g", &[2], &[1.0, 1.0]),
+                onnx_init("b", &[2], &[0.0, 0.0]),
+                onnx_init("m", &[2], &[0.0, 0.0]),
+                onnx_init("v", &[2], &[1.0, 1.0]),
+                onnx_init("fc_w", &[2, 2], &fc_w),
+            ],
+            &[onnx_value_info("x", &[1, 3, 4, 4])],
+            &[onnx_value_info("logits", &[1, 2])],
+        )
+    }
+
+    #[test]
+    fn tiny_model_imports_and_validates() {
+        let bytes = tiny_model();
+        let (g, ckpt) = import_onnx(&bytes, "").expect("import");
+        assert_eq!(g.name, "unit");
+        assert_eq!(g.input, [3, 4, 4]);
+        assert_eq!(g.num_classes, 2);
+        assert_eq!(g.nodes.len(), 5);
+        assert_eq!(ckpt.get("c1.w").expect("conv w").shape, vec![2, 3, 1, 1]);
+        assert_eq!(ckpt.get("bn1.gamma").expect("gamma").data, vec![1.0, 1.0]);
+        assert_eq!(ckpt.get("head.w").expect("fc w").shape, vec![2, 2]);
+        // missing Gemm bias synthesizes zeros
+        assert_eq!(ckpt.get("head.b").expect("fc b").data, vec![0.0, 0.0]);
+        // the imported graph lowers to a servable plan
+        let plan = g.to_plan().expect("to_plan");
+        plan.validate().expect("plan validates");
+    }
+
+    #[test]
+    fn name_override_and_sanitization() {
+        let (g, _) = import_onnx(&tiny_model(), "res.net/v2").expect("import");
+        assert_eq!(g.name, "res_net_v2");
+    }
+
+    #[test]
+    fn truncation_is_an_error_at_every_prefix() {
+        let bytes = tiny_model();
+        // every strict prefix must fail structurally, never panic
+        for cut in 0..bytes.len() {
+            assert!(import_onnx(&bytes[..cut], "").is_err(), "prefix {cut} imported");
+        }
+    }
+
+    #[test]
+    fn bad_wire_type_is_rejected() {
+        let mut m = Vec::new();
+        vint(&mut m, 7 << 3 | 3); // wire type 3 (group start) — unsupported
+        assert!(import_onnx(&m, "").unwrap_err().to_string().contains("wire type"));
+    }
+
+    #[test]
+    fn overflowing_dims_are_rejected() {
+        let mut t = Vec::new();
+        f_bytes(&mut t, 1, &packed_i64s(&[i64::MAX, i64::MAX]));
+        f_varint(&mut t, 2, 1);
+        f_str(&mut t, 8, "w");
+        let mut g = Vec::new();
+        f_bytes(&mut g, 5, &t);
+        let mut m = Vec::new();
+        f_bytes(&mut m, 7, &g);
+        let err = import_onnx(&m, "").unwrap_err().to_string();
+        assert!(err.contains("overflow") || err.contains("illegal dim"), "got: {err}");
+    }
+
+    #[test]
+    fn unknown_op_and_dilated_conv_are_rejected() {
+        let m = onnx_model(
+            &[onnx_node("Softmax", "s", &["x"], &["y"], &[])],
+            &[],
+            &[onnx_value_info("x", &[1, 3, 4, 4])],
+            &[onnx_value_info("y", &[1, 3])],
+        );
+        assert!(import_onnx(&m, "").unwrap_err().to_string().contains("outside the import subset"));
+
+        let m = onnx_model(
+            &[onnx_node(
+                "Conv",
+                "c",
+                &["x", "w"],
+                &["y"],
+                &[attr_ints("kernel_shape", &[3, 3]), attr_ints("dilations", &[2, 2])],
+            )],
+            &[onnx_init("w", &[2, 3, 3, 3], &[0.0; 54])],
+            &[onnx_value_info("x", &[1, 3, 8, 8])],
+            &[onnx_value_info("y", &[1, 2])],
+        );
+        assert!(import_onnx(&m, "").unwrap_err().to_string().contains("dilation"));
+    }
+
+    #[test]
+    fn wrong_epsilon_bn_is_rejected() {
+        let m = onnx_model(
+            &[onnx_node(
+                "BatchNormalization",
+                "bn",
+                &["x", "g", "b", "m", "v"],
+                &["y"],
+                &[attr_float("epsilon", 1e-3)],
+            )],
+            &[
+                onnx_init("g", &[3], &[1.0; 3]),
+                onnx_init("b", &[3], &[0.0; 3]),
+                onnx_init("m", &[3], &[0.0; 3]),
+                onnx_init("v", &[3], &[1.0; 3]),
+            ],
+            &[onnx_value_info("x", &[1, 3, 4, 4])],
+            &[onnx_value_info("y", &[1, 3])],
+        );
+        assert!(import_onnx(&m, "").unwrap_err().to_string().contains("epsilon"));
+    }
+
+    #[test]
+    fn element_count_mismatch_is_rejected() {
+        let m = onnx_model(
+            &[onnx_node(
+                "Conv",
+                "c",
+                &["x", "w"],
+                &["y"],
+                &[attr_ints("kernel_shape", &[1, 1])],
+            )],
+            &[onnx_init("w", &[2, 3, 1, 1], &[0.0; 5])], // needs 6
+            &[onnx_value_info("x", &[1, 3, 4, 4])],
+            &[onnx_value_info("y", &[1, 2])],
+        );
+        let err = import_onnx(&m, "").unwrap_err().to_string();
+        assert!(err.contains("declares 6 elements"), "got: {err}");
+    }
+}

@@ -1,12 +1,21 @@
-//! Model descriptions (plan-IR), checkpoint IO, zoo lookup, and the
-//! multi-variant model registry that the serving stack loads from.
+//! Model descriptions (plan-IR + graph-IR), checkpoint IO, the
+//! ONNX-subset importer, zoo lookup, and the multi-variant model registry
+//! that the serving stack loads from.
+//!
+//! The linear tape ([`plan::Plan`]) and the importer ([`import`]) are both
+//! front-ends that lower into the named-value dataflow graph
+//! ([`graph::Graph`]), whose compiled [`graph::Schedule`] is what the
+//! engine actually interprets.
 
 pub mod checkpoint;
+pub mod graph;
+pub mod import;
 pub mod plan;
 pub mod registry;
 pub mod zoo;
 
 pub use checkpoint::{Checkpoint, PackedCheckpoint};
+pub use graph::{Compiled, Graph, Node, NodeOp, Schedule, ValShape};
 pub use plan::{ConvSpec, Op, Pair, Plan};
 pub use registry::{
     pack_panels, pack_panels_q, ModelRegistry, PackedPanels, Panel, PreparedModel, VariantSpec,

@@ -43,6 +43,9 @@ pub enum Op {
     MaxPool { k: usize, stride: usize },
     AvgPool { k: usize, stride: usize },
     Gap,
+    /// reshape (N, C, H, W) -> (N, C*H*W); identity on flat input.
+    /// Imported graphs use this before `fc` where zoo plans use `gap`.
+    Flatten,
     Fc { name: String, cin: usize, cout: usize },
 }
 
@@ -132,6 +135,7 @@ impl Plan {
                     stride: op.req("stride")?.as_usize().context("stride")?,
                 },
                 "gap" => Op::Gap,
+                "flatten" => Op::Flatten,
                 "fc" => Op::Fc {
                     name: op.req("name")?.as_str().context("name")?.to_string(),
                     cin: op.req("cin")?.as_usize().context("cin")?,
@@ -226,10 +230,126 @@ impl Plan {
         self.param_order().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
     }
 
-    /// Structural validation: channel flow must be consistent.
+    /// Serialize back to the tape JSON the python build path emits —
+    /// `Plan::parse(p.to_json().dump())` round-trips. The importer CLI
+    /// uses this to write plans for graphs raised via `Graph::to_plan`.
+    pub fn to_json(&self) -> Json {
+        let conv_json = |c: &ConvSpec| -> Vec<(&str, Json)> {
+            vec![
+                ("name", Json::str(c.name.clone())),
+                ("cin", Json::num(c.cin as f64)),
+                ("cout", Json::num(c.cout as f64)),
+                ("k", Json::num(c.k as f64)),
+                ("stride", Json::num(c.stride as f64)),
+                ("pad", Json::num(c.pad as f64)),
+                ("groups", Json::num(c.groups as f64)),
+            ]
+        };
+        let bn_json = |b: &BnSpec| -> Vec<(&str, Json)> {
+            vec![("name", Json::str(b.name.clone())), ("ch", Json::num(b.ch as f64))]
+        };
+        let mut ops = Vec::new();
+        for op in &self.ops {
+            ops.push(match op {
+                Op::Conv(c) => {
+                    let mut f = vec![("op", Json::str("conv"))];
+                    f.extend(conv_json(c));
+                    Json::obj(f)
+                }
+                Op::Bn(b) => {
+                    let mut f = vec![("op", Json::str("bn"))];
+                    f.extend(bn_json(b));
+                    Json::obj(f)
+                }
+                Op::Relu => Json::obj(vec![("op", Json::str("relu"))]),
+                Op::Relu6 => Json::obj(vec![("op", Json::str("relu6"))]),
+                Op::Save { id } => {
+                    Json::obj(vec![("op", Json::str("save")), ("id", Json::str(id.clone()))])
+                }
+                Op::Residual { id, down } => {
+                    let mut f =
+                        vec![("op", Json::str("residual")), ("id", Json::str(id.clone()))];
+                    if let Some(d) = down {
+                        f.push((
+                            "down",
+                            Json::obj(vec![
+                                ("conv", Json::obj(conv_json(&d.conv))),
+                                ("bn", Json::obj(bn_json(&d.bn))),
+                            ]),
+                        ));
+                    }
+                    Json::obj(f)
+                }
+                Op::Concat { id } => {
+                    Json::obj(vec![("op", Json::str("concat")), ("id", Json::str(id.clone()))])
+                }
+                Op::MaxPool { k, stride } => Json::obj(vec![
+                    ("op", Json::str("maxpool")),
+                    ("k", Json::num(*k as f64)),
+                    ("stride", Json::num(*stride as f64)),
+                ]),
+                Op::AvgPool { k, stride } => Json::obj(vec![
+                    ("op", Json::str("avgpool")),
+                    ("k", Json::num(*k as f64)),
+                    ("stride", Json::num(*stride as f64)),
+                ]),
+                Op::Gap => Json::obj(vec![("op", Json::str("gap"))]),
+                Op::Flatten => Json::obj(vec![("op", Json::str("flatten"))]),
+                Op::Fc { name, cin, cout } => Json::obj(vec![
+                    ("op", Json::str("fc")),
+                    ("name", Json::str(name.clone())),
+                    ("cin", Json::num(*cin as f64)),
+                    ("cout", Json::num(*cout as f64)),
+                ]),
+            });
+        }
+        let pairs = self
+            .pairs
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("low", Json::str(p.low.clone())),
+                    ("high", Json::str(p.high.clone())),
+                    ("offset", Json::num(p.offset as f64)),
+                ])
+            })
+            .collect();
+        let bn_of = Json::Obj(
+            self.bn_of.iter().map(|(k, v)| (k.clone(), Json::str(v.clone()))).collect(),
+        );
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("input", Json::arr_usize(&self.input)),
+            ("num_classes", Json::num(self.num_classes as f64)),
+            ("ops", Json::Arr(ops)),
+            ("pairs", Json::Arr(pairs)),
+            ("bn_of", bn_of),
+        ])
+    }
+
+    /// Structural validation, now through the Graph-IR: the tape must
+    /// lower to a valid dataflow graph (full channel/spatial shape
+    /// inference, cycle/arity checks), every declared `bn_of` entry must
+    /// be a real conv→BN graph edge, and every compensation pair must be
+    /// a real low→high graph edge at the declared channel offset — not
+    /// just two convs whose channel counts happen to line up.
     pub fn validate(&self) -> Result<()> {
+        let graph = super::graph::Graph::from_plan(self)
+            .and_then(|g| g.validate().map(|()| g))
+            .with_context(|| format!("plan '{}' does not lower to a valid graph", self.name))?;
+        let bn_edges = graph.bn_map()?;
+        let consumers = graph.conv_consumers()?;
+        for (conv, bn) in &self.bn_of {
+            match bn_edges.get(conv) {
+                Some(actual) if actual == bn => {}
+                Some(actual) => bail!(
+                    "bn_of[{conv}] declares '{bn}' but the graph edge is {conv} -> '{actual}'"
+                ),
+                None => bail!("bn_of[{conv}] declares '{bn}' but no BN consumes {conv}'s output"),
+            }
+        }
+        let convs = self.convs();
         for pair in &self.pairs {
-            let convs = self.convs();
             let lo = convs.get(&pair.low).ok_or_else(|| anyhow!("pair low {} missing", pair.low))?;
             let hi = convs.get(&pair.high).ok_or_else(|| anyhow!("pair high {} missing", pair.high))?;
             if hi.groups == 1 {
@@ -261,6 +381,24 @@ impl Plan {
                 if pair.offset + lo.cout > hi.cout {
                     bail!("depthwise pair {}->{} slice out of range", pair.low, pair.high);
                 }
+            }
+            // Eq. 27 compensates the high conv for the low conv's
+            // quantization error — meaningful only if the high conv
+            // actually reads the low conv's output channels at exactly
+            // the declared offset in the dataflow graph.
+            let adjacent = consumers
+                .get(&pair.low)
+                .is_some_and(|v| v.iter().any(|(h, o)| h == &pair.high && *o == pair.offset));
+            if !adjacent {
+                bail!(
+                    "pair {}->{} at offset {} is not a graph edge: '{}' does not consume \
+                     '{}' output channels at that offset",
+                    pair.low,
+                    pair.high,
+                    pair.offset,
+                    pair.high,
+                    pair.low
+                );
             }
             if !self.bn_of.contains_key(&pair.low) {
                 bail!("low conv {} has no BN", pair.low);
@@ -317,34 +455,66 @@ mod tests {
         assert_eq!(p.param_count(), 108 + 16 + 288 + 32 + 32 + 4);
     }
 
+    /// Save/Concat + depthwise tail, fully shape-consistent: c0 (4ch) is
+    /// saved, c1 (4ch) runs on it, concat puts the saved branch FIRST, so
+    /// c1's output lands in dw's input channels [4, 8) — pair offset 4 is
+    /// the real graph offset.
     const GROUPED: &str = r#"{
       "name": "grouped", "input": [3, 8, 8], "num_classes": 4,
       "ops": [
-        {"op": "conv", "name": "c1", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "conv", "name": "c0", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
+        {"op": "bn", "name": "c0_bn", "ch": 4},
+        {"op": "relu"},
+        {"op": "save", "id": "s"},
+        {"op": "conv", "name": "c1", "cin": 4, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1},
         {"op": "bn", "name": "c1_bn", "ch": 4},
         {"op": "relu"},
+        {"op": "concat", "id": "s"},
         {"op": "conv", "name": "dw", "cin": 8, "cout": 8, "k": 3, "stride": 1, "pad": 1, "groups": 8},
         {"op": "bn", "name": "dw_bn", "ch": 8},
         {"op": "relu"},
         {"op": "gap"},
         {"op": "fc", "name": "fc", "cin": 8, "cout": 4}
       ],
-      "pairs": [{"low": "c1", "high": "dw", "offset": 2}],
-      "bn_of": {"c1": "c1_bn", "dw": "dw_bn"}
+      "pairs": [{"low": "c1", "high": "dw", "offset": 4}],
+      "bn_of": {"c0": "c0_bn", "c1": "c1_bn", "dw": "dw_bn"}
     }"#;
 
     #[test]
-    fn depthwise_pair_offset_in_range_accepted() {
-        // offset 2 + cout(low) 4 <= 8 depthwise channels: valid
+    fn depthwise_pair_at_graph_offset_accepted() {
+        // offset 4 + cout(low) 4 <= 8 depthwise channels AND the concat
+        // places c1's channels at exactly offset 4: valid
         let p = Plan::parse(GROUPED).unwrap();
         p.validate().unwrap();
     }
 
     #[test]
     fn depthwise_pair_offset_out_of_range_rejected() {
-        let src = GROUPED.replace(r#""offset": 2"#, r#""offset": 6"#);
+        let src = GROUPED.replace(r#""offset": 4"#, r#""offset": 6"#);
         let p = Plan::parse(&src).unwrap();
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn pair_not_on_a_graph_edge_rejected() {
+        // c0 feeds dw at offset 0 (concat first operand), so a declared
+        // offset of 2 fits every channel-count check but is NOT the
+        // graph-derived offset — Eq. 27 would compensate the wrong slice.
+        let src = GROUPED.replace(
+            r#"{"low": "c1", "high": "dw", "offset": 4}"#,
+            r#"{"low": "c0", "high": "dw", "offset": 2}"#,
+        );
+        let p = Plan::parse(&src).unwrap();
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("not a graph edge"), "{err}");
+    }
+
+    #[test]
+    fn bn_of_must_match_graph_edges() {
+        let src = GROUPED.replace(r#""c1": "c1_bn""#, r#""c1": "dw_bn""#);
+        let p = Plan::parse(&src).unwrap();
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("graph edge"), "{err}");
     }
 
     #[test]
@@ -361,10 +531,18 @@ mod tests {
         // groups == cin but cout = 2*cin (channel multiplier 2): filter
         // out-channel oc reads input oc/2, so channel-j compensation is
         // wrong and validate must bail even though the slice fits cout.
-        let src = GROUPED.replace(r#""cin": 8, "cout": 8, "k": 3, "stride": 1, "pad": 1, "groups": 8"#,
-                                  r#""cin": 8, "cout": 16, "k": 3, "stride": 1, "pad": 1, "groups": 8"#);
+        // (The rest of the net is widened so shape inference stays clean
+        // and the multiplier rule is what fires.)
+        let src = GROUPED
+            .replace(
+                r#""cin": 8, "cout": 8, "k": 3, "stride": 1, "pad": 1, "groups": 8"#,
+                r#""cin": 8, "cout": 16, "k": 3, "stride": 1, "pad": 1, "groups": 8"#,
+            )
+            .replace(r#""name": "dw_bn", "ch": 8"#, r#""name": "dw_bn", "ch": 16"#)
+            .replace(r#""name": "fc", "cin": 8"#, r#""name": "fc", "cin": 16"#);
         let p = Plan::parse(&src).unwrap();
-        assert!(p.validate().is_err());
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("multiplier"), "{err}");
     }
 
     #[test]
@@ -375,5 +553,37 @@ mod tests {
         src = TINY.replace(r#""low": "c1""#, r#""low": "nope""#);
         let p = Plan::parse(&src).unwrap();
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn shape_inconsistent_tape_rejected() {
+        // c2 declares cin 5 but receives c1's 4 channels: the graph
+        // lowering's shape inference must reject the whole plan
+        let src = TINY.replace(r#""name": "c2", "cin": 4"#, r#""name": "c2", "cin": 5"#);
+        let p = Plan::parse(&src).unwrap();
+        let err = format!("{:#}", p.validate().unwrap_err());
+        assert!(err.contains("valid graph"), "{err}");
+    }
+
+    #[test]
+    fn to_json_round_trips() {
+        for src in [TINY, GROUPED] {
+            let p = Plan::parse(src).unwrap();
+            let p2 = Plan::parse(&p.to_json().dump()).unwrap();
+            assert_eq!(p.ops, p2.ops);
+            assert_eq!(p.pairs, p2.pairs);
+            assert_eq!(p.bn_of, p2.bn_of);
+            assert_eq!((p.name, p.input, p.num_classes), (p2.name, p2.input, p2.num_classes));
+        }
+    }
+
+    #[test]
+    fn flatten_parses_and_serializes() {
+        let src = TINY.replace(r#"{"op": "gap"}"#, r#"{"op": "gap"}, {"op": "flatten"}"#);
+        let p = Plan::parse(&src).unwrap();
+        assert!(p.ops.contains(&Op::Flatten));
+        p.validate().unwrap();
+        let p2 = Plan::parse(&p.to_json().dump()).unwrap();
+        assert_eq!(p.ops, p2.ops);
     }
 }

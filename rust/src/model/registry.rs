@@ -325,6 +325,9 @@ pub struct PreparedModel {
     pub packed: Option<Arc<PackedCheckpoint>>,
     /// GEMM-packed weight panels ([`Panel`]), built once for all lanes
     pub panels: Arc<PackedPanels>,
+    /// the compiled graph schedule ([`crate::model::graph::Schedule`]),
+    /// built once at prepare and shared by every lane's engine
+    pub sched: Arc<crate::model::graph::Schedule>,
     /// which compute path serves each layer (see [`layer_paths`])
     pub layer_paths: Vec<(String, &'static str)>,
     /// resident bytes: packed store + runtime residual checkpoint +
@@ -699,6 +702,14 @@ impl ModelRegistry {
             None => full,
         };
         let layer_paths = layer_paths(&plan, &panels);
+        // Compile the graph schedule once per variant: every lane's
+        // engine interprets this shared form instead of re-lowering the
+        // tape per batch. A plan that does not lower is a prepare error,
+        // surfaced on the variant key like any other prepare failure.
+        let sched = crate::model::graph::Graph::from_plan(&plan)
+            .and_then(crate::model::graph::Graph::schedule)
+            .map(Arc::new)
+            .with_context(|| format!("scheduling variant '{key}'"))?;
         let prepare_ms = sw.millis();
         let shared_base = Arc::ptr_eq(&ckpt, &base_ckpt);
         let bytes = panels_bytes(&panels)
@@ -714,6 +725,7 @@ impl ModelRegistry {
             ckpt,
             packed,
             panels,
+            sched,
             layer_paths,
             bytes,
             prepare_ms,

@@ -333,6 +333,46 @@ impl MpPlan {
     pub fn assignment(&self, layer: &str) -> Option<&LayerQuant> {
         self.layers.iter().find(|a| a.layer == layer).map(|a| &a.q)
     }
+
+    /// Model-aware validity — the structural half [`Self::validate_shape`]
+    /// cannot see. Every comp spec must name a declared pair of the model
+    /// plan whose low→high adjacency (at the declared channel offset) is
+    /// an actual edge of the lowered dataflow graph, and whose low conv
+    /// has a graph conv→BN edge (Eq. 27 recalibrates that BN). Declared
+    /// tape structure is not trusted: the graph is the arbiter.
+    pub fn validate_against(&self, plan: &Plan) -> Result<()> {
+        if self.comp.is_empty() {
+            return Ok(());
+        }
+        let graph = crate::model::Graph::from_plan(plan)
+            .context("lowering the model plan to validate an mp-plan against")?;
+        let bn_map = graph.bn_map()?;
+        let consumers = graph.conv_consumers()?;
+        for c in &self.comp {
+            let pair = plan
+                .pairs
+                .iter()
+                .find(|p| p.low == c.low && p.high == c.high)
+                .with_context(|| {
+                    format!("comp {}>{} is not a pair of the model plan", c.low, c.high)
+                })?;
+            let adjacent = consumers.get(&pair.low).is_some_and(|cs| {
+                cs.iter().any(|(h, off)| *h == pair.high && *off == pair.offset)
+            });
+            if !adjacent {
+                bail!(
+                    "comp {}>{} (offset {}) is not an edge of the model's dataflow graph",
+                    c.low,
+                    c.high,
+                    pair.offset
+                );
+            }
+            if !bn_map.contains_key(c.low.as_str()) {
+                bail!("comp low '{}' has no conv→BN edge in the dataflow graph", c.low);
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Apply an [`MpPlan`] to a model: the single plan executor every
@@ -350,6 +390,7 @@ pub fn apply_mp_plan(
     pool: Option<&Arc<ThreadPool>>,
 ) -> Result<Quantized> {
     mp.validate_shape()?;
+    mp.validate_against(plan)?;
     let convs = plan.convs();
     // every assigned layer must exist in the model
     let known = weight_layers(plan);
@@ -507,5 +548,53 @@ mod tests {
         // raw ternary low and non-2-bit uniform low are both legal
         plan_of("c1=t,c2=u6;comp=c1>c2:0.5:0");
         plan_of("c1=u3,c2=u6;comp=c1>c2:0.5:0");
+    }
+
+    fn model_with_pair(offset: usize) -> Plan {
+        let src = format!(
+            r#"{{
+              "name": "m", "input": [3, 8, 8], "num_classes": 4,
+              "ops": [
+                {{"op": "conv", "name": "c1", "cin": 3, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1}},
+                {{"op": "bn", "name": "bn1", "ch": 4}},
+                {{"op": "relu"}},
+                {{"op": "conv", "name": "c2", "cin": 4, "cout": 4, "k": 3, "stride": 1, "pad": 1, "groups": 1}},
+                {{"op": "bn", "name": "bn2", "ch": 4}},
+                {{"op": "relu"}},
+                {{"op": "gap"}},
+                {{"op": "fc", "name": "fc", "cin": 4, "cout": 4}}
+              ],
+              "pairs": [{{"low": "c1", "high": "c2", "offset": {offset}}}],
+              "bn_of": {{"c1": "bn1", "c2": "bn2"}}
+            }}"#
+        );
+        Plan::parse(&src).expect("model fixture")
+    }
+
+    #[test]
+    fn validate_against_accepts_graph_edge_comp() {
+        let model = model_with_pair(0);
+        plan_of("c1=t,c2=u6,fc=u8;comp=c1>c2:0.5:0")
+            .validate_against(&model)
+            .expect("graph-edge comp is valid");
+        // comp-free plans need no graph at all
+        plan_of("c1=t,c2=u6,fc=u8").validate_against(&model).expect("no comps");
+    }
+
+    #[test]
+    fn validate_against_rejects_undeclared_and_non_edge_comps() {
+        let model = model_with_pair(0);
+        // reversed direction is not a declared pair
+        let err = plan_of("c1=u6,c2=t,fc=u8;comp=c2>c1:0.5:0")
+            .validate_against(&model)
+            .expect_err("reversed comp");
+        assert!(err.to_string().contains("not a pair"), "got: {err:#}");
+        // a declared pair whose offset is not where the graph connects
+        // the convs is rejected: the tape's claim is not trusted
+        let skewed = model_with_pair(2);
+        let err = plan_of("c1=t,c2=u6,fc=u8;comp=c1>c2:0.5:0")
+            .validate_against(&skewed)
+            .expect_err("offset off the graph edge");
+        assert!(err.to_string().contains("dataflow graph"), "got: {err:#}");
     }
 }

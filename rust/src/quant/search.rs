@@ -113,9 +113,16 @@ fn uniform_level(bits: u32) -> LayerQuant {
 
 /// Per-out-channel BN gain (gamma_j / sigma_j)^2, or uniform 1.0 for
 /// BN-less layers — the weighting that turns weight MSE into the Eq. 22
-/// activation-space surrogate.
-fn bn_gains(plan: &Plan, ckpt: &Checkpoint, name: &str, out_ch: usize) -> Result<Vec<f64>> {
-    let Some(bn) = plan.bn_of.get(name) else {
+/// activation-space surrogate. `bn_map` is the graph-derived conv→BN
+/// edge map ([`crate::model::Graph::bn_map`]), not the tape's declared
+/// `bn_of`.
+fn bn_gains(
+    bn_map: &BTreeMap<String, String>,
+    ckpt: &Checkpoint,
+    name: &str,
+    out_ch: usize,
+) -> Result<Vec<f64>> {
+    let Some(bn) = bn_map.get(name) else {
         return Ok(vec![1.0; out_ch]);
     };
     let gamma = &ckpt.get(&format!("{bn}.gamma"))?.data;
@@ -151,8 +158,12 @@ fn uniform_loss(w: &Tensor, gains: &[f64], bits: u32) -> f64 {
 /// recalibration + the Eq. 27 closed-form compensation, scored by
 /// `solve_c`'s post-solve Eq. 22 residual (lam1/lam2 at the paper's
 /// Fig. 3 optimum — exactly what the executor will run).
-fn ternary_comp_loss(plan: &Plan, ckpt: &Checkpoint, pair: &Pair) -> Result<f64> {
-    let bn = plan.bn_of.get(&pair.low).context("pair low has no BN")?;
+fn ternary_comp_loss(
+    bn_map: &BTreeMap<String, String>,
+    ckpt: &Checkpoint,
+    pair: &Pair,
+) -> Result<f64> {
+    let bn = bn_map.get(&pair.low).context("pair low has no BN")?;
     let w_l = ckpt.get(&format!("{}.w", pair.low))?;
     let gamma = &ckpt.get(&format!("{bn}.gamma"))?.data;
     let beta = &ckpt.get(&format!("{bn}.beta"))?.data;
@@ -167,7 +178,7 @@ fn ternary_comp_loss(plan: &Plan, ckpt: &Checkpoint, pair: &Pair) -> Result<f64>
 
 /// Build one layer's demotion chain (fp32 → u8 → … → u3 → bottom).
 fn build_chain(
-    plan: &Plan,
+    bn_map: &BTreeMap<String, String>,
     ckpt: &Checkpoint,
     convs: &BTreeMap<String, ConvSpec>,
     name: &str,
@@ -177,7 +188,7 @@ fn build_chain(
     let w = ckpt.get(&format!("{name}.w"))?;
     let n = w.data.len();
     let out_ch = if w.shape.is_empty() { 1 } else { w.shape[0] };
-    let gains = bn_gains(plan, ckpt, name, out_ch)?;
+    let gains = bn_gains(bn_map, ckpt, name, out_ch)?;
     let mut chain = vec![Level {
         q: LayerQuant::Fp32,
         eff_bytes: n.saturating_mul(4),
@@ -200,7 +211,7 @@ fn build_chain(
             chain.push(Level {
                 q: LayerQuant::Ternary { fold_alpha: false },
                 eff_bytes: ternary_stored_bytes(n).saturating_add(factor_bytes),
-                loss: ternary_comp_loss(plan, ckpt, p)?,
+                loss: ternary_comp_loss(bn_map, ckpt, p)?,
                 comp: Some(CompSpec {
                     low: p.low.clone(),
                     high: p.high.clone(),
@@ -229,14 +240,29 @@ fn build_chain(
     Ok(chain)
 }
 
-fn classify(plan: &Plan, name: &str) -> (Role, Option<usize>) {
+/// Role assignment from graph-verified pairs only: a declared pair whose
+/// low→high edge is absent from the dataflow graph (wrong consumer, or
+/// wrong channel offset) is ignored — `pair_ok` is indexed parallel to
+/// `plan.pairs`. Low additionally needs a graph conv→BN edge, since its
+/// bottom rung recalibrates that BN.
+fn classify(
+    plan: &Plan,
+    pair_ok: &[bool],
+    bn_map: &BTreeMap<String, String>,
+    name: &str,
+) -> (Role, Option<usize>) {
     // a layer that is high of one pair and low of another serves the
     // earlier pair's compensation; it must stay on a k-bit uniform grid
-    if plan.pairs.iter().any(|p| p.high == name) {
+    if plan.pairs.iter().zip(pair_ok).any(|(p, ok)| *ok && p.high == name) {
         return (Role::High, None);
     }
-    if let Some(i) = plan.pairs.iter().position(|p| p.low == name) {
-        if plan.bn_of.contains_key(name) {
+    let low_idx = plan
+        .pairs
+        .iter()
+        .zip(pair_ok)
+        .position(|(p, ok)| *ok && p.low == name);
+    if let Some(i) = low_idx {
+        if bn_map.contains_key(name) {
             return (Role::Low, Some(i));
         }
     }
@@ -250,13 +276,31 @@ fn classify(plan: &Plan, name: &str) -> (Role, Option<usize>) {
 /// budget): deterministic, no data, no RNG. Errors if even the lowest
 /// assignment cannot fit the budget.
 pub fn search(plan: &Plan, ckpt: &Checkpoint, budget_bytes: usize) -> Result<SearchOutcome> {
+    // Pairing structure comes from the dataflow graph, not tape position:
+    // conv→BN edges and low→high adjacency (at the declared channel
+    // offset) are derived once from the lowered graph, and declared pairs
+    // that are not graph edges are ignored rather than trusted.
+    let graph = crate::model::Graph::from_plan(plan)
+        .context("lowering plan to a graph for mixed-precision search")?;
+    let bn_map = graph.bn_map().context("deriving conv→BN edges")?;
+    let consumers = graph.conv_consumers().context("deriving conv→conv adjacency")?;
+    let pair_ok: Vec<bool> = plan
+        .pairs
+        .iter()
+        .map(|p| {
+            consumers
+                .get(&p.low)
+                .is_some_and(|cs| cs.iter().any(|(h, off)| *h == p.high && *off == p.offset))
+        })
+        .collect();
+
     let convs = plan.convs();
     let names = weight_layers(plan);
     let mut chains = Vec::with_capacity(names.len());
     for name in &names {
-        let (role, pair_idx) = classify(plan, name);
+        let (role, pair_idx) = classify(plan, &pair_ok, &bn_map, name);
         let pair = pair_idx.and_then(|i| plan.pairs.get(i));
-        chains.push(build_chain(plan, ckpt, &convs, name, role, pair)?);
+        chains.push(build_chain(&bn_map, ckpt, &convs, name, role, pair)?);
     }
 
     let mut cur = vec![0usize; names.len()];

@@ -1,0 +1,379 @@
+//! Graph-IR parity + ONNX-importer integration, artifact-free and
+//! wall-clock-bounded (runs in tier-1 CI):
+//!
+//! - the scheduled graph interpreter (`Engine::forward`) is
+//!   **bit-identical** to the retired tape interpreter
+//!   (`forward_tape_oracle`) for every quantization method over a plan
+//!   family covering residual blocks (identity + conv downsample),
+//!   concat joins and depthwise convs;
+//! - `@auto:<budget>` variants served through the registry match offline
+//!   search + plan-apply run on the tape oracle, bit for bit;
+//! - the committed ONNX fixture (residual block + depthwise conv)
+//!   imports end-to-end: graph → plan → registry → served logits, with
+//!   graph-derived pairs including the conv→depthwise edge, and the
+//!   per-layer plan of each `@auto:` variant visible in status;
+//! - corrupted ONNX bytes — truncations at every prefix, bad wire
+//!   types, overflowing dims, random single-byte mutations — are
+//!   structured `Err`s, never panics (the `corrupt` filter in CI).
+
+// same intentional-allow list as lib.rs (each non-lib target is a
+// separate crate, so the crate-level attributes do not reach it)
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::type_complexity)]
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use dfmpc::infer::{Engine, InferBackend, RegistryLane};
+use dfmpc::model::import::import_onnx;
+use dfmpc::model::plan::{BnSpec, ConvSpec, DownSpec};
+use dfmpc::model::{Checkpoint, ModelRegistry, Op, Plan};
+use dfmpc::quant::plan::apply_mp_plan;
+use dfmpc::quant::search::{budget_bytes, search};
+use dfmpc::quant::Method;
+use dfmpc::tensor::Tensor;
+use dfmpc::util::rng::Rng;
+
+/// Every quantization method, spelled so each grid-emission path runs.
+const ALL_METHODS: &[&str] = &[
+    "fp32",
+    "dfmpc:2/6",
+    "dfmpc:3/6",
+    "original:2/6",
+    "original-alpha:2/6",
+    "uniform:4",
+    "dfq:6",
+    "omse:4",
+    "ocs:4:0.2",
+    "zeroq:6:4:2",
+];
+
+/// The tiny32 shape the serving tests use: one compensated pair + head.
+const SERVE_PLAN: &str = r#"{
+  "name": "tiny32", "input": [3, 32, 32], "num_classes": 10,
+  "ops": [
+    {"op": "conv", "name": "c1", "cin": 3, "cout": 8, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c1_bn", "ch": 8},
+    {"op": "relu"},
+    {"op": "conv", "name": "c2", "cin": 8, "cout": 16, "k": 3, "stride": 2, "pad": 1, "groups": 1},
+    {"op": "bn", "name": "c2_bn", "ch": 16},
+    {"op": "relu"},
+    {"op": "gap"},
+    {"op": "fc", "name": "fc", "cin": 16, "cout": 10}
+  ],
+  "pairs": [{"low": "c1", "high": "c2", "offset": 0}],
+  "bn_of": {"c1": "c1_bn", "c2": "c2_bn"}
+}"#;
+
+fn conv(name: &str, cin: usize, cout: usize, k: usize, stride: usize, pad: usize, groups: usize) -> ConvSpec {
+    ConvSpec { name: name.into(), cin, cout, k, stride, pad, groups }
+}
+
+fn bn(name: &str, ch: usize) -> BnSpec {
+    BnSpec { name: name.into(), ch }
+}
+
+fn tiny32() -> Plan {
+    let plan = Plan::parse(SERVE_PLAN).unwrap();
+    plan.validate().unwrap();
+    plan
+}
+
+/// Concat join feeding a depthwise conv: the declared pair sits at a
+/// nonzero channel offset (c1's channels land at 4..8 of the concat),
+/// with the depthwise conv as the compensated high side.
+fn concat_dw() -> Plan {
+    let plan = Plan {
+        name: "concat_dw".into(),
+        input: [3, 8, 8],
+        num_classes: 5,
+        ops: vec![
+            Op::Conv(conv("c0", 3, 4, 3, 1, 1, 1)),
+            Op::Bn(bn("c0_bn", 4)),
+            Op::Relu,
+            Op::Save { id: "s0".into() },
+            Op::Conv(conv("c1", 4, 4, 3, 1, 1, 1)),
+            Op::Bn(bn("c1_bn", 4)),
+            Op::Relu,
+            Op::Concat { id: "s0".into() },
+            Op::Conv(conv("dw", 8, 8, 3, 1, 1, 8)),
+            Op::Bn(bn("dw_bn", 8)),
+            Op::Relu6,
+            Op::Gap,
+            Op::Fc { name: "fc".into(), cin: 8, cout: 5 },
+        ],
+        pairs: vec![dfmpc::model::Pair { low: "c1".into(), high: "dw".into(), offset: 4 }],
+        bn_of: BTreeMap::from([
+            ("c0".to_string(), "c0_bn".to_string()),
+            ("c1".to_string(), "c1_bn".to_string()),
+            ("dw".to_string(), "dw_bn".to_string()),
+        ]),
+    };
+    plan.validate().unwrap();
+    plan
+}
+
+/// Identity residual + strided downsample residual + pool: the joins
+/// the scheduler must sequence exactly like the tape.
+fn down_residual() -> Plan {
+    let plan = Plan {
+        name: "down_res".into(),
+        input: [3, 8, 8],
+        num_classes: 6,
+        ops: vec![
+            Op::Conv(conv("stem", 3, 4, 3, 1, 1, 1)),
+            Op::Bn(bn("stem_bn", 4)),
+            Op::Relu,
+            Op::Save { id: "r0".into() },
+            Op::Conv(conv("b1a", 4, 4, 3, 1, 1, 1)),
+            Op::Bn(bn("b1a_bn", 4)),
+            Op::Relu,
+            Op::Conv(conv("b1b", 4, 4, 3, 1, 1, 1)),
+            Op::Bn(bn("b1b_bn", 4)),
+            Op::Residual { id: "r0".into(), down: None },
+            Op::Relu,
+            Op::Save { id: "r1".into() },
+            Op::Conv(conv("b2a", 4, 8, 3, 2, 1, 1)),
+            Op::Bn(bn("b2a_bn", 8)),
+            Op::Relu,
+            Op::Conv(conv("b2b", 8, 8, 3, 1, 1, 1)),
+            Op::Bn(bn("b2b_bn", 8)),
+            Op::Residual {
+                id: "r1".into(),
+                down: Some(DownSpec {
+                    conv: conv("b2d", 4, 8, 1, 2, 0, 1),
+                    bn: bn("b2d_bn", 8),
+                }),
+            },
+            Op::Relu,
+            Op::MaxPool { k: 2, stride: 2 },
+            Op::Gap,
+            Op::Fc { name: "fc".into(), cin: 8, cout: 6 },
+        ],
+        pairs: vec![dfmpc::model::Pair { low: "b1a".into(), high: "b1b".into(), offset: 0 }],
+        bn_of: BTreeMap::from([
+            ("stem".to_string(), "stem_bn".to_string()),
+            ("b1a".to_string(), "b1a_bn".to_string()),
+            ("b1b".to_string(), "b1b_bn".to_string()),
+            ("b2a".to_string(), "b2a_bn".to_string()),
+            ("b2b".to_string(), "b2b_bn".to_string()),
+            ("b2d".to_string(), "b2d_bn".to_string()),
+        ]),
+    };
+    plan.validate().unwrap();
+    plan
+}
+
+fn plan_family() -> Vec<Plan> {
+    vec![tiny32(), concat_dw(), down_residual()]
+}
+
+fn batch_of(img: &Tensor, n: usize) -> Tensor {
+    let per = img.data.len();
+    let mut data = Vec::with_capacity(n * per);
+    for _ in 0..n {
+        data.extend_from_slice(&img.data);
+    }
+    Tensor::new(vec![n, img.shape[0], img.shape[1], img.shape[2]], data)
+}
+
+fn fixture_bytes() -> Vec<u8> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/residual_dw.onnx");
+    std::fs::read(&path).unwrap_or_else(|e| panic!("missing committed fixture {path:?}: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// scheduled interpreter vs tape oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scheduled_forward_is_bit_identical_to_the_tape_oracle_for_every_method() {
+    for plan in plan_family() {
+        let mut r = Rng::new(777);
+        let ckpt = Checkpoint::random_init(&plan, &mut r);
+        let [c, h, w] = plan.input;
+        let x = Tensor::new(vec![2, c, h, w], r.normal_vec(2 * c * h * w));
+        for spec in ALL_METHODS {
+            let tag = format!("{}/{spec}", plan.name);
+            let method = Method::parse(spec).unwrap();
+            let qckpt = method.apply(&plan, &ckpt, None).unwrap();
+            let eng = Engine::new(&plan, &qckpt);
+            let sched = eng.forward(&x).unwrap();
+            let tape = eng.forward_tape_oracle(&x).unwrap();
+            assert_eq!(sched.shape, tape.shape, "{tag}");
+            assert_eq!(sched.data, tape.data, "{tag}: scheduled forward diverged from the tape oracle");
+            assert!(sched.data.iter().all(|v| v.is_finite()), "{tag}");
+        }
+    }
+}
+
+#[test]
+fn auto_search_variants_serve_bit_identical_to_the_tape_oracle() {
+    let plan = Arc::new(tiny32());
+    let ckpt = Arc::new(Checkpoint::random_init(&plan, &mut Rng::new(321)));
+    let registry = Arc::new(ModelRegistry::new(usize::MAX, None));
+    registry.register_base("tiny32", Arc::clone(&plan), Arc::clone(&ckpt)).unwrap();
+    let lane = RegistryLane::new(Arc::clone(&registry), None);
+    let img = dfmpc::data::synth::render_image(4242, 3, 10).0;
+    let x = batch_of(&img, 2);
+
+    for mb in ["0.002", "0.0008"] {
+        let key = format!("tiny32@auto:{mb}");
+        // offline: search + plan executor + the TAPE oracle
+        let found = search(&plan, &ckpt, budget_bytes(mb.parse().unwrap())).unwrap();
+        let q = apply_mp_plan(&plan, &ckpt, &found.mp, None).unwrap();
+        let want = Engine::new(&plan, &q.ckpt).forward_tape_oracle(&x).unwrap();
+        // served: scheduled interpreter over packed storage
+        let got = lane.infer_batch(&key, x.clone()).unwrap();
+        assert_eq!(want.shape, got.shape, "{key}");
+        assert_eq!(want.data, got.data, "{key}: scheduled serving diverged from the tape oracle");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ONNX importer end-to-end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn imported_onnx_fixture_serves_and_quantizes_end_to_end() {
+    let bytes = fixture_bytes();
+    let (graph, ckpt) = import_onnx(&bytes, "").unwrap();
+    assert_eq!(graph.name, "residual_dw");
+    assert_eq!(graph.input, [3, 8, 8]);
+    assert_eq!(graph.num_classes, 4);
+    assert_eq!(graph.nodes.len(), 16);
+
+    // the graph lowers to the tape front-end, recovering the joins
+    let plan = graph.to_plan().unwrap();
+    plan.validate().unwrap();
+    assert!(plan.ops.iter().any(|o| matches!(o, Op::Residual { down: None, .. })));
+    assert!(plan.ops.iter().any(|o| matches!(o, Op::Conv(c) if c.groups == 8)));
+    assert!(plan.ops.contains(&Op::Flatten));
+    // pairs derived from graph edges, including the conv→depthwise edge
+    // that crosses the residual add
+    let got_pairs: Vec<(String, String, usize)> =
+        plan.pairs.iter().map(|p| (p.low.clone(), p.high.clone(), p.offset)).collect();
+    assert_eq!(
+        got_pairs,
+        vec![
+            ("conv0".to_string(), "conv1".to_string(), 0),
+            ("conv1".to_string(), "conv2".to_string(), 0),
+            ("conv2".to_string(), "dw".to_string(), 0),
+        ]
+    );
+    assert_eq!(plan.bn_of.get("dw"), Some(&"bn_dw".to_string()));
+
+    let plan = Arc::new(plan);
+    let ckpt = Arc::new(ckpt);
+    let registry = Arc::new(ModelRegistry::new(usize::MAX, None));
+    registry.register_base("residual_dw", Arc::clone(&plan), Arc::clone(&ckpt)).unwrap();
+    let lane = RegistryLane::new(Arc::clone(&registry), None);
+    let mut r = Rng::new(99);
+    let x = Tensor::new(vec![2, 3, 8, 8], r.normal_vec(2 * 3 * 8 * 8));
+
+    // fp32 serving parity against the tape oracle
+    let want = Engine::new(&plan, &ckpt).forward_tape_oracle(&x).unwrap();
+    let got = lane.infer_batch("residual_dw@fp32", x.clone()).unwrap();
+    assert_eq!(want.data, got.data, "imported fp32 serving diverged from the tape oracle");
+
+    // data-free mixed-precision under two byte budgets: served logits
+    // match offline search + apply on the tape oracle, and the chosen
+    // per-layer plan is resident + visible in status
+    for mb in ["0.004", "0.002"] {
+        let key = format!("residual_dw@auto:{mb}");
+        let budget = budget_bytes(mb.parse().unwrap());
+        let found = search(&plan, &ckpt, budget).unwrap();
+        let q = apply_mp_plan(&plan, &ckpt, &found.mp, None).unwrap();
+        let want = Engine::new(&plan, &q.ckpt).forward_tape_oracle(&x).unwrap();
+        let got = lane.infer_batch(&key, x.clone()).unwrap();
+        assert_eq!(want.data, got.data, "{key}: served logits diverged from the tape oracle");
+
+        let m = registry.get_or_prepare(&key).unwrap();
+        assert_eq!(m.mp.id(), found.mp.id(), "{key}: resident plan diverged");
+        assert!(found.predicted_bytes <= budget, "{key}: over budget");
+        for layer in ["conv0", "conv1", "conv2", "dw", "head"] {
+            assert!(
+                m.mp.layers.iter().any(|a| a.layer == layer),
+                "{key}: '{layer}' missing from the per-layer plan"
+            );
+        }
+    }
+    let snap = registry.snapshot();
+    let autos: Vec<_> = snap.variants.iter().filter(|v| v.key.contains("@auto:")).collect();
+    assert_eq!(autos.len(), 2);
+    for v in autos {
+        assert!(!v.plan_id.is_empty(), "{}: no per-layer plan in status", v.key);
+        assert!(v.predicted_bytes.is_some(), "{}: no size prediction in status", v.key);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// corrupted ONNX bytes: structured errors, never panics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupt_truncations_at_every_prefix_are_structured_errors() {
+    let bytes = fixture_bytes();
+    for cut in 0..bytes.len() {
+        assert!(import_onnx(&bytes[..cut], "").is_err(), "prefix {cut} imported");
+    }
+}
+
+#[test]
+fn corrupt_wire_types_and_overflowing_dims_are_structured_errors() {
+    // a protobuf group (wire type 3) at top level
+    let err = import_onnx(&[7 << 3 | 3], "").unwrap_err().to_string();
+    assert!(err.contains("wire type"), "{err}");
+
+    // an initializer whose dims product overflows usize:
+    // model{ graph{ initializer{ dims=[i64::MAX, i64::MAX] dtype=1 name="w" } } }
+    let vint = |out: &mut Vec<u8>, mut v: u64| loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    };
+    let f_bytes = |out: &mut Vec<u8>, field: u64, payload: &[u8]| {
+        out.push((field << 3 | 2) as u8);
+        vint(out, payload.len() as u64);
+        out.extend_from_slice(payload);
+    };
+    let mut dims = Vec::new();
+    vint(&mut dims, i64::MAX as u64);
+    vint(&mut dims, i64::MAX as u64);
+    let mut t = Vec::new();
+    f_bytes(&mut t, 1, &dims);
+    t.extend_from_slice(&[2 << 3, 1]); // data_type = FLOAT
+    f_bytes(&mut t, 8, b"w");
+    let mut g = Vec::new();
+    f_bytes(&mut g, 5, &t);
+    let mut m = Vec::new();
+    f_bytes(&mut m, 7, &g);
+    let err = import_onnx(&m, "").unwrap_err().to_string();
+    assert!(err.contains("overflow") || err.contains("illegal dim"), "{err}");
+
+    // a varint longer than u64 can hold
+    let mut m = vec![1 << 3];
+    m.extend_from_slice(&[0xff; 10]);
+    assert!(import_onnx(&m, "").is_err());
+}
+
+#[test]
+fn corrupt_single_byte_mutations_never_panic() {
+    let bytes = fixture_bytes();
+    let mut r = Rng::new(31337);
+    for _ in 0..512 {
+        let i = r.below(bytes.len() as u64) as usize;
+        let flip = 1 + r.below(255) as u8;
+        let mut m = bytes.clone();
+        m[i] ^= flip;
+        // must return Ok or a structured Err — a panic fails the test
+        let _ = import_onnx(&m, "");
+    }
+}

@@ -98,6 +98,29 @@ fn panic_path_covers_the_auto_plan_modules() {
 }
 
 #[test]
+fn panic_path_covers_the_graph_ir_modules() {
+    // graphs and checkpoints arrive from untrusted imported ONNX bytes;
+    // the IR validator and the wire reader joined the no-panic contract
+    for path in ["rust/src/model/graph.rs", "rust/src/model/import.rs"] {
+        let f = lint_fixture(path, "panic_fire.rs");
+        let lines: Vec<usize> = fired(&f, "panic-path").iter().map(|(l, _)| *l).collect();
+        assert_eq!(lines, vec![4, 5, 7, 10], "panic-path must cover {path}");
+    }
+}
+
+#[test]
+fn checked_arith_covers_the_graph_ir_modules() {
+    // the importer's read_*/parse* fns do arithmetic on attacker-chosen
+    // dims and lengths — the same overflow contract as the DFMC loaders,
+    // and the graph module shares it (its shape math is import-reachable)
+    for path in ["rust/src/model/import.rs", "rust/src/model/graph.rs"] {
+        let f = lint_fixture(path, "checked_fire.rs");
+        let lines: Vec<usize> = fired(&f, "checked-arith").iter().map(|(l, _)| *l).collect();
+        assert_eq!(lines, vec![5, 5, 5, 6], "checked-arith must cover {path}");
+    }
+}
+
+#[test]
 fn checked_arith_covers_the_budget_parse_surface() {
     // quant/search's parse fns handle network-supplied budgets, so the
     // overflow contract applies there too...
